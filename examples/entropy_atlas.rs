@@ -1,0 +1,89 @@
+//! Figure-1 style "entropy atlas": per-layer exponent entropy curves for
+//! selected zoo models, plus the α-stable theory overlay (Theorem 2.1).
+//!
+//! ```bash
+//! cargo run --release --example entropy_atlas -- --model Qwen3-8B-FP8
+//! ```
+
+use ecf8::alphastable::{entropy_lower_bound, entropy_upper_bound, exponent_entropy_exact};
+use ecf8::codec::encode::exponent_entropy;
+use ecf8::codec::Fp8Format;
+use ecf8::model::config::{by_name, zoo, BlockType};
+use ecf8::model::weights::sample_tensor_fp8;
+use ecf8::util::cli::Command;
+use std::collections::BTreeMap;
+
+fn atlas_for(model_name: &str) -> anyhow::Result<()> {
+    let m =
+        by_name(model_name).ok_or_else(|| anyhow::anyhow!("unknown model {model_name}"))?;
+    println!("\n# {} (family {:?}, α = {})", m.name, m.family, m.alpha);
+    println!(
+        "theory at α = {}: H(E) = {:.3} bits, paper bounds [{:.3}, {:.3}]",
+        m.alpha,
+        exponent_entropy_exact(m.alpha),
+        entropy_lower_bound(m.alpha),
+        entropy_upper_bound(m.alpha),
+    );
+
+    let mut per_layer: BTreeMap<usize, Vec<f64>> = BTreeMap::new();
+    let mut seen: std::collections::HashSet<(u8, usize, usize, usize)> = Default::default();
+    for spec in m.tensors() {
+        if matches!(spec.block_type, BlockType::Embedding | BlockType::Head) {
+            continue;
+        }
+        // one representative per (type, layer, shape) — same-spec tensors
+        // (MoE experts) are i.i.d. draws of the same law
+        if !seen.insert((spec.block_type as u8, spec.layer, spec.rows, spec.cols)) {
+            continue;
+        }
+        let data = sample_tensor_fp8(&spec, 5, 100_000.min(spec.n_elem()));
+        per_layer
+            .entry(spec.layer)
+            .or_default()
+            .push(exponent_entropy(&data, Fp8Format::E4M3));
+    }
+
+    // ASCII sparkline over layers (the figure's x-axis)
+    let means: Vec<(usize, f64)> = per_layer
+        .iter()
+        .map(|(l, hs)| (*l, hs.iter().sum::<f64>() / hs.len() as f64))
+        .collect();
+    let max_h = 4.0;
+    println!("layer entropy curve (0..4 bits, one char per layer):");
+    let bars: String = means
+        .iter()
+        .map(|(_, h)| {
+            let idx = ((h / max_h) * 7.0).round().clamp(0.0, 7.0) as usize;
+            [' ', '▁', '▂', '▃', '▄', '▅', '▆', '▇'][idx]
+        })
+        .collect();
+    println!("  |{bars}|");
+    let lo = means.iter().map(|(_, h)| *h).fold(f64::INFINITY, f64::min);
+    let hi = means.iter().map(|(_, h)| *h).fold(0.0, f64::max);
+    println!(
+        "  {} layers, H(E) ∈ [{lo:.2}, {hi:.2}] bits of a 4-bit field",
+        means.len()
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let cmd = Command::new("entropy_atlas", "Figure-1 entropy curves")
+        .opt("model", "single model (default: all nine)");
+    let a = match cmd.parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n{}", cmd.help_text());
+            std::process::exit(2);
+        }
+    };
+    match a.get("model") {
+        Some(name) => atlas_for(name)?,
+        None => {
+            for m in zoo() {
+                atlas_for(m.name)?;
+            }
+        }
+    }
+    Ok(())
+}

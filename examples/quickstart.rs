@@ -1,0 +1,59 @@
+//! Quickstart: compress an FP8 weight tensor with ECF8, decompress it,
+//! verify bit-exactness, and run the decoded weights through the
+//! AOT-compiled fused decode+matmul artifact on PJRT.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use ecf8::codec::{compress_fp8, decompress_fp8};
+use ecf8::runtime::pjrt::{Input, PjrtRuntime};
+use ecf8::util::humanize;
+use ecf8::util::prng::Xoshiro256;
+use ecf8::util::sampling::normal;
+
+fn main() -> anyhow::Result<()> {
+    // 1. a "trained" weight tensor: Gaussian-ish FP8 E4M3 bytes
+    let n = 4 << 20;
+    let mut rng = Xoshiro256::seed_from_u64(2025);
+    let weights: Vec<u8> = (0..n)
+        .map(|_| ecf8::F8E4M3::from_f32((normal(&mut rng) * 0.05) as f32).to_bits())
+        .collect();
+
+    // 2. compress
+    let blob = compress_fp8(&weights);
+    println!(
+        "compressed {} -> {} ({:.1}% saving, H(exponent) ≈ {:.2} bits)",
+        humanize::bytes(n as u64),
+        humanize::bytes(blob.compressed_bytes() as u64),
+        blob.memory_saving() * 100.0,
+        ecf8::codec::encode::exponent_entropy(&weights, ecf8::codec::Fp8Format::E4M3),
+    );
+
+    // 3. decompress and verify losslessness
+    let restored = decompress_fp8(&blob);
+    assert_eq!(restored, weights, "ECF8 must be bit-exact");
+    println!("decompressed: bit-exact ✓");
+
+    // 4. feed decoded FP8 bytes into the fused decode+matmul artifact
+    let dir = PjrtRuntime::default_dir();
+    if dir.join("MANIFEST.txt").exists() {
+        let mut rt = PjrtRuntime::new(dir)?;
+        let art = rt.load("fp8_matmul_demo")?;
+        let (m, k, nn) = (128usize, 256usize, 128usize);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.next_f32() - 0.5).collect();
+        let w = &restored[..k * nn];
+        let out = art.run_f32(&[
+            Input::F32(x, vec![m as i64, k as i64]),
+            Input::U8(w.to_vec(), vec![k as i64, nn as i64]),
+        ])?;
+        println!(
+            "PJRT fused decode+matmul (Pallas-lowered): out[0..4] = {:?}",
+            &out[..4]
+        );
+    } else {
+        println!("(artifacts missing — run `make artifacts` to see the PJRT step)");
+    }
+    println!("quickstart OK");
+    Ok(())
+}

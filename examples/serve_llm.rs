@@ -1,0 +1,153 @@
+//! **End-to-end driver** (DESIGN.md "End-to-end driver"): synthesize a
+//! ~125M-parameter FP8 LLM, compress it with ECF8, and serve a batched
+//! request stream through the full stack — coordinator → dynamic batcher
+//! → JIT weight decompression (§3.3) → PJRT execution of the AOT
+//! JAX/Pallas artifacts — reporting memory savings, throughput, latency
+//! percentiles, and an end-to-end bit-exactness check (Figure 3).
+//!
+//! ```bash
+//! cargo run --release --example serve_llm -- --requests 32 --batch 8
+//! cargo run --release --example serve_llm -- --model tiny-llm-7m --verify-lossless
+//! ```
+
+use ecf8::coordinator::server::{compiled_batch_for, ServeConfig, Server};
+use ecf8::coordinator::Request;
+use ecf8::model::config::by_name;
+use ecf8::model::store::CompressedModel;
+use ecf8::runtime::executor::{LlmExecutor, SEQ_LEN};
+use ecf8::runtime::pjrt::PjrtRuntime;
+use ecf8::util::cli::Command;
+use ecf8::util::humanize;
+use ecf8::util::prng::Xoshiro256;
+use ecf8::util::threadpool::ThreadPool;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let cmd = Command::new("serve_llm", "end-to-end ECF8 serving driver")
+        .opt_default("model", "runnable model", "pico-llm-125m")
+        .opt_default("requests", "total requests", "32")
+        .opt_default("batch", "max batch size", "8")
+        .opt_default("decode-threads", "block-parallel decode threads", "4")
+        .opt_default("seed", "rng seed", "2025")
+        .flag("verify-lossless", "also check ECF8 vs raw logits bit-exactness");
+    let a = match cmd.parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n{}", cmd.help_text());
+            std::process::exit(2);
+        }
+    };
+    let name = a.get_or("model", "pico-llm-125m");
+    let n_requests: usize = a.get_parse_or("requests", 32);
+    let batch: usize = a.get_parse_or("batch", 8);
+    let threads: usize = a.get_parse_or("decode-threads", 4);
+    let seed: u64 = a.get_parse_or("seed", 2025);
+
+    let cfg = by_name(name).ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?;
+    let dir = PjrtRuntime::default_dir();
+    anyhow::ensure!(
+        dir.join("MANIFEST.txt").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+
+    // ---- 1. synthesize + compress the model ----
+    println!("[1/4] synthesizing {} ({:.1}M params)...", cfg.name, cfg.n_params() as f64 / 1e6);
+    let gen_pool = ThreadPool::with_default_size();
+    let (model, gen_s) =
+        ecf8::bench_support::time_once(|| CompressedModel::synthesize(&cfg, seed, Some(&gen_pool)));
+    println!(
+        "      weights {} -> {} ECF8 ({:.1}% saving) in {}",
+        humanize::bytes(model.raw_bytes()),
+        humanize::bytes(model.compressed_bytes()),
+        model.memory_saving() * 100.0,
+        humanize::duration(gen_s)
+    );
+
+    // ---- 2. bring up the runtime ----
+    println!("[2/4] compiling PJRT executables (batch {})...", compiled_batch_for(batch));
+    let pool = (threads > 0).then(|| Arc::new(ThreadPool::new(threads)));
+    let mut ex = LlmExecutor::new(cfg.clone(), model, dir, pool)?;
+    let (_, warm_s) = ecf8::bench_support::time_once(|| {
+        ex.warmup(compiled_batch_for(batch)).expect("warmup")
+    });
+    println!("      compiled in {}", humanize::duration(warm_s));
+
+    // ---- 3. optional losslessness check (Figure 3) ----
+    if a.flag("verify-lossless") {
+        println!("[3/4] verifying bit-exactness (compressed vs raw weights)...");
+        let raw: std::collections::HashMap<String, Vec<u8>> = cfg
+            .tensors()
+            .iter()
+            .map(|s| (s.name.clone(), ecf8::model::weights::generate_tensor_fp8(s, seed)))
+            .collect();
+        let b = compiled_batch_for(batch);
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 1);
+        let tokens: Vec<i32> = (0..b * SEQ_LEN)
+            .map(|_| rng.next_below(cfg.vocab as u64) as i32)
+            .collect();
+        let via_ecf8 = ex.forward(&tokens, b)?;
+        let via_raw = ex.forward_raw(&tokens, b, &raw)?;
+        let identical = via_ecf8
+            .iter()
+            .zip(&via_raw)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        anyhow::ensure!(identical, "logits differ!");
+        println!("      all {} logits bitwise identical ✓", via_ecf8.len());
+    } else {
+        println!("[3/4] (pass --verify-lossless for the Figure-3 bit-exactness check)");
+    }
+
+    // ---- 4. serve a request stream ----
+    println!("[4/4] serving {n_requests} requests (max batch {batch})...");
+    let vocab = cfg.vocab as u64;
+    let mut server = Server::new(
+        ex,
+        ServeConfig {
+            max_batch: batch,
+            linger: std::time::Duration::from_millis(2),
+        },
+    );
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut served = 0usize;
+    for id in 0..n_requests as u64 {
+        let tokens: Vec<i32> = (0..SEQ_LEN).map(|_| rng.next_below(vocab) as i32).collect();
+        server.submit(Request::new(id, tokens));
+        served += server.tick()?.len();
+    }
+    served += server.drain()?.len();
+    assert_eq!(served, n_requests);
+
+    let met = &server.metrics;
+    println!("\n=== end-to-end results ({}) ===", cfg.name);
+    println!(
+        "requests: {}   tokens: {}   wall: {}",
+        met.requests_served,
+        met.tokens_served,
+        humanize::duration(met.wall_seconds())
+    );
+    println!(
+        "throughput: {:.2} tokens/s   {:.2} requests/s   mean batch {:.1}",
+        met.tokens_per_second(),
+        met.requests_per_second(),
+        met.mean_batch_size()
+    );
+    if let Some(s) = met.latency_summary() {
+        println!(
+            "latency: mean {}  p50 {}  p90 {}  p99 {}",
+            humanize::duration(s.mean),
+            humanize::duration(s.p50),
+            humanize::duration(s.p90),
+            humanize::duration(s.p99)
+        );
+    }
+    let js = server.executor.jit_stats();
+    println!(
+        "JIT decompression: {} tensor decodes, {} produced, {} of wall time ({})",
+        js.tensors_decoded,
+        humanize::bytes(js.bytes_decoded),
+        humanize::duration(js.decode_seconds),
+        humanize::throughput(js.bytes_decoded, js.decode_seconds)
+    );
+    println!("serve_llm OK");
+    Ok(())
+}

@@ -1,0 +1,199 @@
+"""AOT lowering: JAX/Pallas → HLO *text* artifacts for the rust runtime.
+
+Interchange is HLO text, NOT serialized HloModuleProto: jax ≥ 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version
+the published ``xla`` crate binds) rejects; the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts (written to ``--out`` directory, with a MANIFEST.txt):
+
+  pico_llm_embed_b{B}   (tokens i32[B,T], embed u8[V,D])           -> f32[B,T,D]
+  pico_llm_layer_b{B}   (x, norm1, q,k,v,o, norm2, gate,up,down)   -> f32[B,T,D]
+  pico_llm_head_b{B}    (x, norm_f, head u8[V,D])                  -> f32[B,V]
+  tiny_llm_*_b2         same, tiny config (fast tests)
+  pico_dit_block_b1     (x, ctx, cond, 13 weight tensors)          -> f32[B,L,D]
+  fp8_matmul_demo       (x f32[128,256], w u8[256,128])            -> f32[128,128]
+  exponent_hist_demo    (bits u8[65536])                           -> i32[16]
+
+Python runs ONCE at ``make artifacts``; the request path is rust-only.
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import exponent_hist, fp8_matmul
+
+SEQ_LEN = 32
+DIT_LATENT = 64
+DIT_CTX = 16
+LLM_BATCHES = (1, 2, 4, 8, 16)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def llm_artifacts(prefix, cfg, batches):
+    """(name, fn, arg_specs) triples for one LLM config."""
+    d, v, t = cfg["hidden"], cfg["vocab"], SEQ_LEN
+    ffn = cfg["ffn"]
+    q_dim = cfg["n_heads"] * cfg["head_dim"]
+    kv_dim = cfg["n_kv_heads"] * cfg["head_dim"]
+    u8, f32, i32 = jnp.uint8, jnp.float32, jnp.int32
+    out = []
+    for b in batches:
+        out.append(
+            (
+                f"{prefix}_embed_b{b}",
+                lambda tokens, embed: (model.llm_embed(tokens, embed),),
+                [_spec((b, t), i32), _spec((v, d), u8)],
+            )
+        )
+        layer_fn = functools.partial(_layer_fn, cfg=cfg)
+        out.append(
+            (
+                f"{prefix}_layer_b{b}",
+                layer_fn,
+                [
+                    _spec((b, t, d), f32),
+                    _spec((d,), f32),
+                    _spec((q_dim, d), u8),
+                    _spec((kv_dim, d), u8),
+                    _spec((kv_dim, d), u8),
+                    _spec((d, q_dim), u8),
+                    _spec((d,), f32),
+                    _spec((ffn, d), u8),
+                    _spec((ffn, d), u8),
+                    _spec((d, ffn), u8),
+                ],
+            )
+        )
+        out.append(
+            (
+                f"{prefix}_head_b{b}",
+                lambda x, norm_f, head: (model.llm_head(x, norm_f, head),),
+                [_spec((b, t, d), f32), _spec((d,), f32), _spec((v, d), u8)],
+            )
+        )
+    return out
+
+
+def _layer_fn(x, norm1, wq, wk, wv, wo, norm2, w_gate, w_up, w_down, *, cfg):
+    return (
+        model.llm_layer(
+            x, norm1, wq, wk, wv, wo, norm2, w_gate, w_up, w_down, cfg=cfg
+        ),
+    )
+
+
+def dit_artifacts(prefix, cfg, batches=(1,)):
+    d = cfg["hidden"]
+    ffn = cfg["ffn"]
+    q_dim = cfg["n_heads"] * cfg["head_dim"]
+    kv_dim = cfg["n_kv_heads"] * cfg["head_dim"]
+    u8, f32 = jnp.uint8, jnp.float32
+    fn = functools.partial(_dit_fn, cfg=cfg)
+    out = []
+    for b in batches:
+        out.append(
+            (
+                f"{prefix}_block_b{b}",
+                fn,
+                [
+                    _spec((b, DIT_LATENT, d), f32),
+                    _spec((b, DIT_CTX, d), f32),
+                    _spec((b, d), f32),
+                    _spec((q_dim, d), u8),
+                    _spec((kv_dim, d), u8),
+                    _spec((kv_dim, d), u8),
+                    _spec((d, q_dim), u8),
+                    _spec((q_dim, d), u8),
+                    _spec((kv_dim, d), u8),
+                    _spec((kv_dim, d), u8),
+                    _spec((d, q_dim), u8),
+                    _spec((6 * d, d), u8),
+                    _spec((ffn, d), u8),
+                    _spec((d, ffn), u8),
+                ],
+            )
+        )
+    return out
+
+
+def _dit_fn(x, ctx, cond, wq, wk, wv, wo, cq, ck, cv, co, w_mod, w_up, w_down, *, cfg):
+    return (
+        model.dit_block(
+            x, ctx, cond, wq, wk, wv, wo, cq, ck, cv, co, w_mod, w_up, w_down, cfg=cfg
+        ),
+    )
+
+
+def demo_artifacts():
+    u8, f32 = jnp.uint8, jnp.float32
+    return [
+        (
+            "fp8_matmul_demo",
+            lambda x, w: (fp8_matmul(x, w, bm=128, bk=256, bn=128),),
+            [_spec((128, 256), f32), _spec((256, 128), u8)],
+        ),
+        (
+            "exponent_hist_demo",
+            lambda bits: (exponent_hist(bits, block=65536),),
+            [_spec((65536,), u8)],
+        ),
+    ]
+
+
+def all_artifacts():
+    arts = []
+    arts += demo_artifacts()
+    arts += llm_artifacts("tiny_llm", model.TINY_LLM, batches=LLM_BATCHES)
+    arts += llm_artifacts("pico_llm", model.PICO_LLM, batches=LLM_BATCHES)
+    arts += dit_artifacts("pico_dit", model.PICO_DIT)
+    return arts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest_lines = []
+    for name, fn, specs in all_artifacts():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        shapes = ";".join(
+            f"{s.dtype}{list(s.shape)}".replace(" ", "") for s in specs
+        )
+        manifest_lines.append(f"{name}\t{name}.hlo.txt\t{shapes}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "MANIFEST.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"MANIFEST: {len(manifest_lines)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

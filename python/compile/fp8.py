@@ -1,0 +1,59 @@
+"""FP8 E4M3 bit-level helpers shared by the Pallas kernels, the JAX model,
+and the tests.
+
+The runtime hands the model raw E4M3 *bytes* (uint8) — the output of the
+rust-side ECF8 decoder — and the graph decodes them to f32 on the fly
+(fused into the matmul by the L1 kernel). This module defines that decode
+in pure jnp so it can run inside a Pallas kernel body, plus numpy-side
+encode helpers used by tests and the AOT example inputs.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    import ml_dtypes
+
+    _E4M3 = np.dtype(ml_dtypes.float8_e4m3fn)
+except ImportError:  # pragma: no cover
+    _E4M3 = None
+
+
+def decode_e4m3(bits):
+    """Decode uint8 E4M3 bytes to f32 with pure jnp ops.
+
+    Layout s eeee mmm, bias 7; exponent field 0 => subnormal
+    (±m/8 · 2^-6); field 15 & mantissa 7 => NaN (no infinities).
+    Works under jit and inside Pallas kernel bodies (interpret mode).
+    """
+    bits = bits.astype(jnp.uint8)
+    sign = (bits >> 7) & 0x1
+    exp = (bits >> 3) & 0xF
+    man = bits & 0x7
+
+    manf = man.astype(jnp.float32)
+    expi = exp.astype(jnp.int32)
+    normal = (1.0 + manf / 8.0) * jnp.exp2((expi - 7).astype(jnp.float32))
+    subnormal = (manf / 8.0) * jnp.float32(2.0 ** -6)
+    mag = jnp.where(exp == 0, subnormal, normal)
+    val = jnp.where(sign == 1, -mag, mag)
+    nan_mask = (exp == 15) & (man == 7)
+    return jnp.where(nan_mask, jnp.float32(jnp.nan), val)
+
+
+def exponent_field(bits):
+    """The 4-bit exponent field — the symbol ECF8 entropy-codes."""
+    return (bits.astype(jnp.uint8) >> 3) & 0xF
+
+
+def encode_e4m3_np(x):
+    """numpy: f32 -> E4M3 bytes (round-nearest-even, saturating), via
+    ml_dtypes — the reference encoder for tests and example inputs."""
+    assert _E4M3 is not None, "ml_dtypes required"
+    return np.asarray(x, dtype=np.float32).astype(_E4M3).view(np.uint8)
+
+
+def decode_e4m3_np(bits):
+    """numpy: E4M3 bytes -> f32 via ml_dtypes (test oracle)."""
+    assert _E4M3 is not None, "ml_dtypes required"
+    return np.asarray(bits, dtype=np.uint8).view(_E4M3).astype(np.float32)

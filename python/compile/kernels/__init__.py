@@ -1,0 +1,11 @@
+"""L1 Pallas kernels (build-time only; lowered into the AOT artifacts)."""
+
+from .exponent_hist import exponent_hist, exponent_hist_padded
+from .fp8_matmul import fp8_matmul, fp8_matmul_padded
+
+__all__ = [
+    "exponent_hist",
+    "exponent_hist_padded",
+    "fp8_matmul",
+    "fp8_matmul_padded",
+]

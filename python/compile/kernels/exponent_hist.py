@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: E4M3 exponent extraction + 16-bin histogram — the
+encode-side hot-spot (§3.1 "computes their empirical frequency
+distribution").
+
+TPU schedule: the byte tensor is viewed as chunks of ``block`` bytes; each
+grid step loads one chunk into VMEM, extracts the 4-bit exponent field
+(VPU shifts/masks) and accumulates a one-hot sum into a 16-wide
+accumulator kept in the output block (revisited every step — Pallas keeps
+it resident in VMEM).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    e = (x_ref[...].astype(jnp.uint8) >> 3) & 0xF
+    onehot = (e[:, None] == jnp.arange(16, dtype=jnp.uint8)[None, :]).astype(jnp.int32)
+    o_ref[...] += jnp.sum(onehot, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def exponent_hist(bits, block=65536):
+    """16-bin exponent histogram of a flat uint8 tensor whose length is a
+    multiple of ``block`` (use :func:`exponent_hist_padded` otherwise)."""
+    (n,) = bits.shape
+    block = min(block, n)
+    assert n % block == 0, f"{n} not a multiple of {block}"
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((16,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((16,), jnp.int32),
+        interpret=True,
+    )(bits)
+
+
+def exponent_hist_padded(bits, block=65536):
+    """Arbitrary-length wrapper: pads with 0x00 bytes (exponent field 0)
+    and subtracts the padding count from bin 0."""
+    (n,) = bits.shape
+    if n == 0:
+        return jnp.zeros((16,), jnp.int32)
+    block = min(block, n)
+    pad = (-n) % block
+    if pad:
+        bits = jnp.pad(bits, (0, pad))
+    hist = exponent_hist(bits, block=block)
+    return hist.at[0].add(-pad)

@@ -1,0 +1,90 @@
+"""L1 Pallas kernel: fused FP8-decode + matmul — the compute hot-spot.
+
+The paper's claim that lossless FP8 avoids "dequantization overhead" maps
+to TPU as: the E4M3→f32 decode is element-wise VPU work performed on the
+weight tile *after* it lands in VMEM and *before* it enters the MXU — it
+fuses into the GEMM pipeline instead of being a separate pass over HBM.
+
+TPU schedule (DESIGN.md §Hardware-Adaptation): activations tile
+``bm×bk`` (f32), packed weights tile ``bk×bn`` (u8, 1 byte/elem — the
+point: HBM traffic for weights is 1/4 of f32), accumulator ``bm×bn``
+(f32), grid (M/bm, N/bn, K/bk) with K innermost for accumulation.
+VMEM at the default 128/512/128 tiles ≈ 0.38 MB/set, ×2 double-buffered
+≪ 16 MB. MXU does bm·bk·bn MACs per tile vs bk·bn decode flops — decode
+is ~1/(2·bm) of the MXU work, negligible.
+
+CPU note: ``interpret=True`` (mandatory here — Mosaic custom-calls cannot
+run on CPU PJRT) executes the grid as a host loop, so the AOT artifacts
+use coarse tiles (one grid cell when shapes allow). Correctness of the
+*tiled* schedule is pytest-swept against ``ref.fp8_matmul_ref``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..fp8 import decode_e4m3
+
+
+def _kernel(x_ref, w_ref, o_ref):
+    """One grid cell: o += x_tile @ decode(w_tile); K is the innermost
+    grid axis, so zero-init on the first K step."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = decode_e4m3(w_ref[...])
+    o_ref[...] += jnp.dot(
+        x_ref[...], w, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def fp8_matmul(x, w_bits, bm=128, bk=512, bn=128):
+    """``x [M,K] f32 × decode(w_bits [K,N] uint8) -> [M,N] f32``.
+
+    Shapes must divide the tile sizes; use :func:`fp8_matmul_padded` for
+    arbitrary shapes.
+    """
+    m, k = x.shape
+    k2, n = w_bits.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = min(bm, m)
+    bk = min(bk, k)
+    bn = min(bn, n)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (
+        f"shape ({m},{k},{n}) not divisible by tiles ({bm},{bk},{bn})"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w_bits)
+
+
+def fp8_matmul_padded(x, w_bits, bm=128, bk=512, bn=128):
+    """Arbitrary-shape wrapper: zero-pads to tile multiples (zero weight
+    bytes decode to +0.0, so padding contributes nothing)."""
+    m, k = x.shape
+    _, n = w_bits.shape
+    bm_ = min(bm, m)
+    bk_ = min(bk, k)
+    bn_ = min(bn, n)
+    pm = (-m) % bm_
+    pk = (-k) % bk_
+    pn = (-n) % bn_
+    if pm or pk or pn:
+        x = jnp.pad(x, ((0, pm), (0, pk)))
+        w_bits = jnp.pad(w_bits, ((0, pk), (0, pn)))
+    out = fp8_matmul(x, w_bits, bm=bm_, bk=bk_, bn=bn_)
+    return out[:m, :n]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in this package is pytest-checked against these references
+(bit-exact for decode/histogram, allclose for the matmul accumulation
+order).
+"""
+
+import jax.numpy as jnp
+
+from ..fp8 import decode_e4m3, exponent_field
+
+
+def fp8_matmul_ref(x, w_bits):
+    """x [M,K] f32 × decode(w_bits [K,N]) -> [M,N] f32."""
+    return x @ decode_e4m3(w_bits)
+
+
+def exponent_hist_ref(bits):
+    """16-bin histogram of the E4M3 exponent field, int32."""
+    e = exponent_field(bits).reshape(-1).astype(jnp.int32)
+    return jnp.zeros((16,), jnp.int32).at[e].add(1)
+
+
+def decode_ref(bits):
+    """Alias of the shared decode (the kernel-internal decode must match
+    it bit-for-bit)."""
+    return decode_e4m3(bits)

@@ -1,0 +1,228 @@
+"""L2: the JAX model — transformer layers consuming FP8 weight *bytes*.
+
+Every large projection takes raw E4M3 bytes (uint8, shape [out, in] —
+exactly what the rust-side ECF8 decoder produces) and runs through the L1
+fused decode+matmul kernel. Python never executes at serving time: these
+functions are AOT-lowered to HLO text by :mod:`compile.aot` and executed
+from rust via PJRT.
+
+Components:
+  * ``llm_embed``       — token embedding lookup from FP8 bytes
+  * ``llm_layer``       — RMSNorm → causal GQA attention → SwiGLU MLP
+  * ``llm_head``        — last-position logits
+  * ``dit_block``       — adaLN-modulated self+cross attention DiT block
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .fp8 import decode_e4m3
+from .kernels import fp8_matmul_padded
+
+
+def rms_norm(x, w, eps=1e-6):
+    """RMSNorm with f32 gain (norm weights are tiny; kept uncompressed)."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def _proj(x2d, w_bits_out_in):
+    """y = x @ W^T with W given as E4M3 bytes in [out, in] layout."""
+    return fp8_matmul_padded(x2d, jnp.transpose(w_bits_out_in))
+
+
+def rotary(q, k, positions, head_dim):
+    """Rotary position embeddings (interleaved-pairs formulation)."""
+    half = head_dim // 2
+    freqs = jnp.exp2(
+        -jnp.arange(0, half, dtype=jnp.float32) * (14.0 / half)
+    )  # ~ 10000^(-2i/d) with base 2^14
+    angles = positions[:, None].astype(jnp.float32) * freqs[None, :]  # [T, half]
+    cos = jnp.cos(angles)[None, :, None, :]  # [1,T,1,half]
+    sin = jnp.sin(angles)[None, :, None, :]
+
+    def rot(v):
+        v1, v2 = v[..., :half], v[..., half:]
+        return jnp.concatenate([v1 * cos - v2 * sin, v1 * sin + v2 * cos], axis=-1)
+
+    return rot(q), rot(k)
+
+
+def attention(x, wq, wk, wv, wo, *, n_heads, n_kv_heads, head_dim, causal):
+    """Multi-head attention with grouped KV heads, weights as FP8 bytes.
+
+    x: [B, T, D] f32; w*: uint8 [out, in]. Returns [B, T, D].
+    """
+    b, t, d = x.shape
+    x2 = x.reshape(b * t, d)
+    q = _proj(x2, wq).reshape(b, t, n_heads, head_dim)
+    k = _proj(x2, wk).reshape(b, t, n_kv_heads, head_dim)
+    v = _proj(x2, wv).reshape(b, t, n_kv_heads, head_dim)
+
+    positions = jnp.arange(t)
+    q, k = rotary(q, k, positions, head_dim)
+
+    # expand grouped KV heads
+    if n_kv_heads != n_heads:
+        rep = n_heads // n_kv_heads
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(
+        jnp.float32(head_dim)
+    )
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), bool))
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b * t, n_heads * head_dim)
+    return _proj(ctx, wo).reshape(b, t, d)
+
+
+def cross_attention(x, ctx, wq, wk, wv, wo, *, n_heads, head_dim):
+    """Cross-attention: queries from x [B,T,D], keys/values from
+    ctx [B,S,D]."""
+    b, t, d = x.shape
+    s = ctx.shape[1]
+    q = _proj(x.reshape(b * t, d), wq).reshape(b, t, n_heads, head_dim)
+    k = _proj(ctx.reshape(b * s, d), wk).reshape(b, s, n_heads, head_dim)
+    v = _proj(ctx.reshape(b * s, d), wv).reshape(b, s, n_heads, head_dim)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(jnp.float32(head_dim))
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b * t, n_heads * head_dim)
+    return _proj(o, wo).reshape(b, t, d)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """SwiGLU MLP, weights as FP8 bytes [out, in]."""
+    b, t, d = x.shape
+    x2 = x.reshape(b * t, d)
+    h = jax.nn.silu(_proj(x2, w_gate)) * _proj(x2, w_up)
+    return _proj(h, w_down).reshape(b, t, d)
+
+
+def mlp(x, w_up, w_down):
+    """Plain GELU MLP (DiT blocks)."""
+    b, t, d = x.shape
+    x2 = x.reshape(b * t, d)
+    h = jax.nn.gelu(_proj(x2, w_up))
+    return _proj(h, w_down).reshape(b, t, d)
+
+
+def llm_layer(x, norm1, wq, wk, wv, wo, norm2, w_gate, w_up, w_down, *, cfg):
+    """One pre-norm decoder layer: x + attn(norm(x)) + mlp(norm(x))."""
+    x = x + attention(
+        rms_norm(x, norm1),
+        wq,
+        wk,
+        wv,
+        wo,
+        n_heads=cfg["n_heads"],
+        n_kv_heads=cfg["n_kv_heads"],
+        head_dim=cfg["head_dim"],
+        causal=True,
+    )
+    x = x + swiglu(rms_norm(x, norm2), w_gate, w_up, w_down)
+    return x
+
+
+def llm_embed(tokens, embed_bits):
+    """Token embedding lookup from FP8 bytes: gather rows then decode
+    (gathering bytes first keeps the decode to B·T·D elements)."""
+    rows = jnp.take(embed_bits, tokens, axis=0)  # [B,T,D] uint8
+    return decode_e4m3(rows)
+
+
+def llm_head(x, norm_f, head_bits):
+    """Final-norm + last-position logits: [B,T,D] -> [B,V]."""
+    last = rms_norm(x[:, -1, :], norm_f)
+    return fp8_matmul_padded(last, jnp.transpose(head_bits))
+
+
+def dit_block(
+    x,
+    ctx,
+    cond,
+    wq,
+    wk,
+    wv,
+    wo,
+    cq,
+    ck,
+    cv,
+    co,
+    w_mod,
+    w_up,
+    w_down,
+    *,
+    cfg,
+):
+    """DiT block with adaLN modulation:
+
+    mod = cond @ W_mod^T -> 6 gates/shifts/scales; then modulated
+    self-attention, cross-attention to ``ctx``, and a GELU MLP.
+    x: [B,L,D] latent tokens, ctx: [B,S,D] text conditioning,
+    cond: [B,D] timestep embedding.
+    """
+    b, l, d = x.shape
+    mod = _proj(cond, w_mod)  # [B, 6D]
+    sc1, sh1, g1, sc2, sh2, g2 = jnp.split(mod, 6, axis=-1)
+
+    def modulate(v, scale, shift):
+        return v * (1.0 + scale[:, None, :]) + shift[:, None, :]
+
+    h = modulate(rms_norm(x, jnp.ones((d,), jnp.float32)), sc1, sh1)
+    x = x + g1[:, None, :] * attention(
+        h,
+        wq,
+        wk,
+        wv,
+        wo,
+        n_heads=cfg["n_heads"],
+        n_kv_heads=cfg["n_kv_heads"],
+        head_dim=cfg["head_dim"],
+        causal=False,
+    )
+    x = x + cross_attention(
+        x, ctx, cq, ck, cv, co, n_heads=cfg["n_heads"], head_dim=cfg["head_dim"]
+    )
+    h = modulate(rms_norm(x, jnp.ones((d,), jnp.float32)), sc2, sh2)
+    x = x + g2[:, None, :] * mlp(h, w_up, w_down)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# whole-model forward (tests + AOT convenience)
+# ---------------------------------------------------------------------------
+
+
+def llm_forward(tokens, weights, *, cfg):
+    """Full forward: tokens [B,T] int32 -> logits [B,V].
+
+    ``weights`` is a dict:
+      embed [V,D]u8, head [V,D]u8, norm_f [D]f32, and per layer i:
+      (norm1_i, q_i, k_i, v_i, o_i, norm2_i, gate_i, up_i, down_i).
+    """
+    x = llm_embed(tokens, weights["embed"])
+    for i in range(cfg["n_layers"]):
+        x = llm_layer(
+            x,
+            weights[f"norm1_{i}"],
+            weights[f"q_{i}"],
+            weights[f"k_{i}"],
+            weights[f"v_{i}"],
+            weights[f"o_{i}"],
+            weights[f"norm2_{i}"],
+            weights[f"gate_{i}"],
+            weights[f"up_{i}"],
+            weights[f"down_{i}"],
+            cfg=cfg,
+        )
+    return llm_head(x, weights["norm_f"], weights["head"])
+
+
+PICO_LLM = dict(n_layers=8, hidden=768, n_heads=12, n_kv_heads=12, head_dim=64, ffn=3072, vocab=32000)
+TINY_LLM = dict(n_layers=2, hidden=256, n_heads=4, n_kv_heads=4, head_dim=64, ffn=1024, vocab=8192)
+PICO_DIT = dict(hidden=512, n_heads=8, n_kv_heads=8, head_dim=64, ffn=2048)

@@ -1,0 +1,65 @@
+"""E4M3 decode correctness: the jnp decode must agree bit-for-bit with
+ml_dtypes on all 256 byte patterns, and with the rust implementation's
+semantics (NaN at 0x7F/0xFF, no infinities, subnormals at exponent 0)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.fp8 import decode_e4m3, decode_e4m3_np, encode_e4m3_np, exponent_field
+
+
+def test_decode_all_256_matches_ml_dtypes():
+    bits = np.arange(256, dtype=np.uint8)
+    ours = np.asarray(decode_e4m3(bits))
+    ref = decode_e4m3_np(bits)
+    nan_ours = np.isnan(ours)
+    nan_ref = np.isnan(ref)
+    np.testing.assert_array_equal(nan_ours, nan_ref)
+    np.testing.assert_array_equal(ours[~nan_ours], ref[~nan_ref])
+
+
+def test_known_values():
+    assert float(decode_e4m3(np.uint8(0x38))) == 1.0
+    assert float(decode_e4m3(np.uint8(0xB8))) == -1.0
+    assert float(decode_e4m3(np.uint8(0x7E))) == 448.0
+    assert float(decode_e4m3(np.uint8(0x00))) == 0.0
+    assert float(decode_e4m3(np.uint8(0x01))) == 2.0 ** -9
+    assert np.isnan(float(decode_e4m3(np.uint8(0x7F))))
+    assert np.isnan(float(decode_e4m3(np.uint8(0xFF))))
+
+
+def test_exponent_field_extraction():
+    bits = np.arange(256, dtype=np.uint8)
+    e = np.asarray(exponent_field(bits))
+    np.testing.assert_array_equal(e, (bits >> 3) & 0xF)
+
+
+def test_encode_decode_roundtrip_exact_values():
+    # every non-NaN E4M3 value round-trips exactly
+    bits = np.array([b for b in range(256) if (b & 0x7F) != 0x7F], np.uint8)
+    vals = decode_e4m3_np(bits)
+    back = encode_e4m3_np(vals)
+    np.testing.assert_array_equal(back, bits)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(-500, 500, allow_nan=False), min_size=1, max_size=256))
+def test_encode_then_decode_is_idempotent(xs):
+    b1 = encode_e4m3_np(np.array(xs, np.float32))
+    v1 = decode_e4m3_np(b1)
+    b2 = encode_e4m3_np(v1)
+    np.testing.assert_array_equal(b1, b2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(1, 4096))
+def test_decode_matches_oracle_on_random_bytes(seed, n):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 256, n, dtype=np.uint8)
+    ours = np.asarray(decode_e4m3(bits))
+    ref = decode_e4m3_np(bits)
+    mask = ~np.isnan(ref)
+    np.testing.assert_array_equal(ours[mask], ref[mask])
+    assert np.isnan(ours[~mask]).all()

@@ -1,0 +1,120 @@
+"""L1 Pallas kernels vs pure-jnp oracles (hypothesis shape sweeps).
+
+The kernels run under interpret=True (the only mode executable on CPU
+PJRT); correctness here is the build-time gate for the AOT artifacts.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.fp8 import encode_e4m3_np
+from compile.kernels import (
+    exponent_hist,
+    exponent_hist_padded,
+    fp8_matmul,
+    fp8_matmul_padded,
+)
+from compile.kernels.ref import exponent_hist_ref, fp8_matmul_ref
+
+
+def _weights(rng, k, n):
+    return encode_e4m3_np(rng.standard_normal((k, n)).astype(np.float32) * 0.05).reshape(k, n)
+
+
+# ---------------------------------------------------------------- matmul ---
+
+
+def test_matmul_single_tile():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((16, 32)).astype(np.float32)
+    w = _weights(rng, 32, 16)
+    out = np.asarray(fp8_matmul(x, w, bm=16, bk=32, bn=16))
+    ref = np.asarray(fp8_matmul_ref(x, w))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_multi_tile_accumulation():
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((32, 128)).astype(np.float32)
+    w = _weights(rng, 128, 48)
+    out = np.asarray(fp8_matmul(x, w, bm=16, bk=32, bn=16))
+    ref = np.asarray(fp8_matmul_ref(x, w))
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(0, 2**31),
+    st.sampled_from([(8, 16, 8), (16, 64, 32), (24, 48, 40)]),
+    st.sampled_from([(8, 16, 8), (8, 8, 8), (4, 16, 4)]),
+)
+def test_matmul_property_shapes(seed, shape, tiles):
+    m, k, n = shape
+    bm, bk, bn = tiles
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    w = _weights(rng, k, n)
+    out = np.asarray(fp8_matmul_padded(x, w, bm=bm, bk=bk, bn=bn))
+    ref = np.asarray(fp8_matmul_ref(x, w))
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31), st.integers(1, 37), st.integers(1, 50), st.integers(1, 33))
+def test_matmul_ragged_shapes(seed, m, k, n):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    w = _weights(rng, k, n)
+    out = np.asarray(fp8_matmul_padded(x, w, bm=16, bk=16, bn=16))
+    ref = np.asarray(fp8_matmul_ref(x, w))
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_subnormal_weights():
+    # subnormal decode path inside the kernel
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((8, 16)).astype(np.float32)
+    w = encode_e4m3_np(rng.standard_normal((16, 8)).astype(np.float32) * 1e-3).reshape(16, 8)
+    out = np.asarray(fp8_matmul(x, w, bm=8, bk=16, bn=8))
+    ref = np.asarray(fp8_matmul_ref(x, w))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-7)
+
+
+# ------------------------------------------------------------- histogram ---
+
+
+def test_hist_exact_small():
+    rng = np.random.default_rng(3)
+    bits = rng.integers(0, 256, 4096, dtype=np.uint8)
+    out = np.asarray(exponent_hist(bits, block=1024))
+    ref = np.asarray(exponent_hist_ref(bits))
+    np.testing.assert_array_equal(out, ref)
+    assert out.sum() == 4096
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31), st.integers(1, 10000))
+def test_hist_property_padded(seed, n):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 256, n, dtype=np.uint8)
+    out = np.asarray(exponent_hist_padded(bits, block=512))
+    ref = np.asarray(exponent_hist_ref(bits))
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_hist_empty():
+    out = np.asarray(exponent_hist_padded(np.zeros(0, np.uint8)))
+    np.testing.assert_array_equal(out, np.zeros(16, np.int32))
+
+
+def test_hist_concentrated_weights_low_entropy():
+    # weight-like bytes: entropy of the 16-bin histogram ~ 2-3 bits
+    rng = np.random.default_rng(4)
+    bits = encode_e4m3_np(rng.standard_normal(100_000).astype(np.float32) * 0.05)
+    h = np.asarray(exponent_hist_padded(bits, block=4096)).astype(float)
+    p = h / h.sum()
+    p = p[p > 0]
+    ent = -(p * np.log2(p)).sum()
+    assert 1.5 < ent < 3.5, ent

@@ -1,0 +1,113 @@
+//! Theorem 2.1 / Corollary 2.2 reproduction: the two-sided geometric
+//! exponent law, its entropy and the paper's bounds across α, Monte-Carlo
+//! validation, and the FP4.67 compression floor.
+//!
+//! Also records the reproduction *finding*: the paper's closed form and
+//! upper bound fail for α ≲ 1.45 (see EXPERIMENTS.md §Deviations).
+
+use ecf8::alphastable::*;
+use ecf8::bench_support::{banner, Table};
+use ecf8::huffman::tree;
+use ecf8::util::prng::Xoshiro256;
+use ecf8::util::sampling::alpha_stable_std;
+
+fn main() {
+    banner(
+        "bench_theory",
+        "Theorem 2.1 + Corollary 2.2 (exponent law, entropy bounds, FP4.67)",
+    );
+
+    // ---- entropy vs alpha, exact vs bounds vs Monte-Carlo ----
+    let mut t = Table::new([
+        "alpha",
+        "lower bound",
+        "H(E) exact",
+        "paper closed form",
+        "upper bound",
+        "H(E) Monte-Carlo",
+        "bounds hold?",
+    ]);
+    let mut rng = Xoshiro256::seed_from_u64(42);
+    for i in 0..=15 {
+        let alpha = 0.5 + i as f64 * 0.1;
+        let exact = exponent_entropy_exact(alpha);
+        let lb = entropy_lower_bound(alpha);
+        let ub = entropy_upper_bound(alpha);
+        let paper = exponent_entropy_paper_closed_form(alpha);
+        // Monte-Carlo: entropy of floor(log2|X|) over stable samples
+        let samples: Vec<f64> = (0..400_000)
+            .map(|_| alpha_stable_std(&mut rng, alpha))
+            .collect();
+        let mc = empirical_exponent_entropy(&samples);
+        let holds = lb <= exact + 1e-9 && exact <= ub + 1e-9;
+        t.row([
+            format!("{alpha:.2}"),
+            format!("{lb:.3}"),
+            format!("{exact:.3}"),
+            format!("{paper:.3}"),
+            format!("{ub:.3}"),
+            format!("{mc:.3}"),
+            if holds { "yes".into() } else { "NO (paper bound violated)".to_string() },
+        ]);
+    }
+    t.print();
+
+    // ---- the geometric law itself: P(E=k) fit at alpha = 1.5 ----
+    println!("\n## P(E = k) — empirical vs two-sided geometric (α = 1.5)");
+    let alpha = 1.5;
+    let samples: Vec<f64> = (0..2_000_000)
+        .map(|_| alpha_stable_std(&mut rng, alpha))
+        .collect();
+    let (lo, probs) = empirical_exponent_pmf(&samples);
+    let mut t = Table::new(["k", "empirical P", "geometric tail rate q^|Δk|"]);
+    // on the tail (k >= 4) the ratio must be ~ 2^-alpha
+    for k in 4..10i64 {
+        let idx = (k - lo) as usize;
+        if idx + 1 >= probs.len() {
+            break;
+        }
+        let ratio = probs[idx + 1] / probs[idx];
+        t.row([
+            k.to_string(),
+            format!("{:.3e}", probs[idx]),
+            format!("ratio {:.3} (law: {:.3})", ratio, 2f64.powf(-alpha)),
+        ]);
+    }
+    t.print();
+
+    // ---- Corollary 2.2: compression limits ----
+    println!("\n## Corollary 2.2 — compression floor (bits per weight)");
+    let mut t = Table::new(["alpha", "H(E)+sign+1-bit mantissa", "paper floor (ub): 4.67"]);
+    for alpha in [1.5, 1.8, 2.0] {
+        t.row([
+            format!("{alpha}"),
+            format!("{:.3}", compression_limit_bits(alpha, 1.0)),
+            format!("{:.3}", paper_fp467_floor()),
+        ]);
+    }
+    t.print();
+
+    // ---- achievability: Huffman on E4M3-cast stable weights ----
+    println!("\n## Achievability: Huffman code length vs H(E) on E4M3-cast weights");
+    let mut t = Table::new(["alpha", "H(E4M3 exp field)", "Huffman E[len]", "gap (bits)"]);
+    for alpha in [1.5, 1.8, 2.0] {
+        let bytes: Vec<u8> = (0..1_000_000)
+            .map(|_| {
+                let x = alpha_stable_std(&mut rng, alpha) * 0.02;
+                ecf8::fp8::F8E4M3::from_f32(x as f32).to_bits()
+            })
+            .collect();
+        let hist = ecf8::codec::encode::exponent_histogram(&bytes, ecf8::codec::Fp8Format::E4M3);
+        let h = ecf8::util::stats::shannon_entropy(&hist);
+        let lens = tree::code_lengths(&hist);
+        let el = tree::expected_length(&hist, &lens);
+        t.row([
+            format!("{alpha}"),
+            format!("{h:.3}"),
+            format!("{el:.3}"),
+            format!("{:.3}", el - h),
+        ]);
+    }
+    t.print();
+    println!("\nbench_theory done");
+}

@@ -1,0 +1,332 @@
+//! The theory of §2: exponent concentration of α-stable weights.
+//!
+//! * [`two_sided_geometric_pmf`] — Theorem 2.1's law
+//!   P(E = k) = (1−q)/(1+q) · q^|k| with q = 2^−α.
+//! * [`exponent_entropy_exact`] — the closed-form entropy
+//!   H(E) = h₂((1−q)/(1+q)) + 2q/(1+q) · |log₂ q|/(1−q).
+//! * [`entropy_lower_bound`] / [`entropy_upper_bound`] — the paper's
+//!   bounds α/(1+2^−α) ≤ H(E) ≤ α/(1−2^−α).
+//! * [`compression_limit_bits`] — Corollary 2.2's L_min plus sign and
+//!   minimal mantissa: the "FP4.67" floor at α = 2.
+//! * [`empirical_exponent_pmf`] — measure E = ⌊log₂|X|⌋ from samples for
+//!   the theory benches.
+//! * [`fit_alpha_from_exponents`] — recover α from an exponent histogram
+//!   via the geometric decay rate (used to fit real weight tensors).
+
+use crate::util::stats::entropy_of_probs;
+
+/// q = 2^{-α}.
+#[inline]
+pub fn q_of_alpha(alpha: f64) -> f64 {
+    2f64.powf(-alpha)
+}
+
+/// Theorem 2.1: P(E = k) for the two-sided geometric law with parameter
+/// q = 2^{-α}.
+pub fn two_sided_geometric_pmf(alpha: f64, k: i64) -> f64 {
+    assert!(alpha > 0.0, "alpha must be positive");
+    let q = q_of_alpha(alpha);
+    (1.0 - q) / (1.0 + q) * q.powi(k.unsigned_abs() as i32)
+}
+
+/// Binary entropy h₂(p) in bits.
+pub fn binary_entropy(p: f64) -> f64 {
+    if p <= 0.0 || p >= 1.0 {
+        return 0.0;
+    }
+    -p * p.log2() - (1.0 - p) * (1.0 - p).log2()
+}
+
+/// Exact Shannon entropy of the two-sided geometric exponent law:
+///
+///   H(E) = −log₂ c + |log₂ q| · 2q / ((1+q)(1−q)),  c = (1−q)/(1+q).
+///
+/// NOTE (reproduction finding, recorded in EXPERIMENTS.md): this is the
+/// *correct* closed form, derived by direct summation. The paper's proof
+/// of Theorem 2.1 states H(E) = h₂(c) + 2q/(1+q)·|log₂ q|/(1−q), whose
+/// first term should be −log₂ c, not h₂(c); see
+/// [`exponent_entropy_paper_closed_form`]. The two agree to ~0.2 bits
+/// near α = 2 but diverge for small α.
+pub fn exponent_entropy_exact(alpha: f64) -> f64 {
+    let q = q_of_alpha(alpha);
+    let c = (1.0 - q) / (1.0 + q);
+    -c.log2() + q.log2().abs() * 2.0 * q / ((1.0 + q) * (1.0 - q))
+}
+
+/// The closed form exactly as printed in the paper's proof of Theorem 2.1
+/// (kept for comparison; see [`exponent_entropy_exact`]).
+pub fn exponent_entropy_paper_closed_form(alpha: f64) -> f64 {
+    let q = q_of_alpha(alpha);
+    let p0 = (1.0 - q) / (1.0 + q);
+    binary_entropy(p0) + (2.0 * q / (1.0 + q)) * (q.log2().abs() / (1.0 - q))
+}
+
+/// Lower bound of Theorem 2.1: α / (1 + 2^{-α}).
+pub fn entropy_lower_bound(alpha: f64) -> f64 {
+    alpha / (1.0 + q_of_alpha(alpha))
+}
+
+/// Upper bound of Theorem 2.1: α / (1 − 2^{-α}).
+pub fn entropy_upper_bound(alpha: f64) -> f64 {
+    alpha / (1.0 - q_of_alpha(alpha))
+}
+
+/// Corollary 2.2: minimal bits for a lossless FP format holding α-stable
+/// weights — H(E) for the exponent plus one sign bit plus `mantissa_bits`.
+/// With α = 2 and a 1-bit mantissa this is the paper's ≈ 4.67-bit floor.
+pub fn compression_limit_bits(alpha: f64, mantissa_bits: f64) -> f64 {
+    exponent_entropy_exact(alpha) + 1.0 + mantissa_bits
+}
+
+/// The paper's headline "FP4.67" number: the §2.3 worst case built from
+/// the *upper bound* at α = 2 (2.67 bits) + 1 sign + 1 mantissa bit.
+pub fn paper_fp467_floor() -> f64 {
+    entropy_upper_bound(2.0) + 2.0
+}
+
+/// Empirical PMF of E = ⌊log₂|X|⌋ over `samples`, returned as
+/// (offset, probs) where probs[i] is P(E = offset + i). Zeros and
+/// non-finite values are skipped.
+pub fn empirical_exponent_pmf(samples: &[f64]) -> (i64, Vec<f64>) {
+    let mut counts: std::collections::BTreeMap<i64, u64> = std::collections::BTreeMap::new();
+    let mut total = 0u64;
+    for &x in samples {
+        let a = x.abs();
+        if !a.is_finite() || a == 0.0 {
+            continue;
+        }
+        let e = a.log2().floor() as i64;
+        *counts.entry(e).or_insert(0) += 1;
+        total += 1;
+    }
+    if total == 0 {
+        return (0, Vec::new());
+    }
+    let lo = *counts.keys().next().unwrap();
+    let hi = *counts.keys().last().unwrap();
+    let mut probs = vec![0f64; (hi - lo + 1) as usize];
+    for (k, c) in counts {
+        probs[(k - lo) as usize] = c as f64 / total as f64;
+    }
+    (lo, probs)
+}
+
+/// Shannon entropy (bits) of an empirical exponent PMF.
+pub fn empirical_exponent_entropy(samples: &[f64]) -> f64 {
+    let (_, probs) = empirical_exponent_pmf(samples);
+    entropy_of_probs(&probs)
+}
+
+/// Fit α from an exponent histogram by the tail decay of the geometric
+/// law: on the decaying flank, P(E = k+1)/P(E = k) = q = 2^{-α}, so a
+/// least-squares line through log₂ P against distance-from-mode has
+/// slope −α. `counts[i]` is the count of exponent value `offset + i`.
+pub fn fit_alpha_from_exponents(offset: i64, counts: &[u64]) -> Option<f64> {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return None;
+    }
+    let _ = offset; // the fit is shift-invariant
+    let mode_idx = counts
+        .iter()
+        .enumerate()
+        .max_by_key(|&(_, &c)| c)
+        .map(|(i, _)| i)?;
+    // collect (distance-from-mode, log₂ p) on the right flank, which the
+    // FP8 alphabet truncates least
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for (i, &c) in counts.iter().enumerate().skip(mode_idx) {
+        if c == 0 {
+            break;
+        }
+        let d = (i - mode_idx) as f64;
+        let p = c as f64 / total as f64;
+        xs.push(d);
+        ys.push(p.log2());
+    }
+    if xs.len() < 2 {
+        return None;
+    }
+    let n = xs.len() as f64;
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(&ys).map(|(x, y)| x * y).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return None;
+    }
+    let slope = (n * sxy - sx * sy) / denom;
+    Some((-slope).clamp(0.05, 2.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+    use crate::util::sampling::alpha_stable_std;
+
+    #[test]
+    fn pmf_sums_to_one() {
+        for alpha in [0.5, 1.0, 1.5, 2.0] {
+            let sum: f64 = (-200..=200)
+                .map(|k| two_sided_geometric_pmf(alpha, k))
+                .sum();
+            assert!((sum - 1.0).abs() < 1e-9, "alpha={alpha} sum={sum}");
+        }
+    }
+
+    #[test]
+    fn pmf_symmetric_and_decaying() {
+        let alpha = 1.3;
+        for k in 1..10i64 {
+            assert_eq!(
+                two_sided_geometric_pmf(alpha, k),
+                two_sided_geometric_pmf(alpha, -k)
+            );
+            assert!(two_sided_geometric_pmf(alpha, k) < two_sided_geometric_pmf(alpha, k - 1));
+        }
+    }
+
+    #[test]
+    fn entropy_matches_direct_sum() {
+        for alpha in [0.7, 1.0, 1.5, 2.0] {
+            let direct: f64 = (-500..=500)
+                .map(|k| {
+                    let p = two_sided_geometric_pmf(alpha, k);
+                    if p > 0.0 {
+                        -p * p.log2()
+                    } else {
+                        0.0
+                    }
+                })
+                .sum();
+            let exact = exponent_entropy_exact(alpha);
+            assert!(
+                (direct - exact).abs() < 1e-6,
+                "alpha={alpha} direct={direct} exact={exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn theorem_bounds_hold_in_gaussian_regime() {
+        // The paper's bounds α/(1+q) ≤ H(E) ≤ α/(1−q) hold in the regime
+        // its models live in (α ≳ 1.4, "LLMs ≈ 2"), which is where the
+        // paper applies them.
+        for i in 0..=10 {
+            let alpha = 1.5 + i as f64 * 0.05;
+            let h = exponent_entropy_exact(alpha);
+            assert!(
+                entropy_lower_bound(alpha) <= h + 1e-9,
+                "alpha={alpha} lb={} h={h}",
+                entropy_lower_bound(alpha)
+            );
+            assert!(
+                h <= entropy_upper_bound(alpha) + 1e-9,
+                "alpha={alpha} ub={} h={h}",
+                entropy_upper_bound(alpha)
+            );
+        }
+    }
+
+    #[test]
+    fn theorem_upper_bound_fails_for_small_alpha() {
+        // Reproduction finding (EXPERIMENTS.md §Deviations): Theorem 2.1's
+        // upper bound is violated for α ≲ 1.4 — the true entropy of the
+        // two-sided geometric law exceeds α/(1−2^−α) there. "H(E) is
+        // finite for all α > 0" still holds.
+        for alpha in [0.2, 0.5, 0.8, 1.0, 1.2] {
+            let h = exponent_entropy_exact(alpha);
+            assert!(
+                h > entropy_upper_bound(alpha),
+                "expected violation at alpha={alpha}: h={h} ub={}",
+                entropy_upper_bound(alpha)
+            );
+            assert!(h.is_finite());
+        }
+    }
+
+    #[test]
+    fn paper_closed_form_deviates_from_direct_sum() {
+        // The printed closed form (h₂ first term) understates/overstates
+        // the direct sum away from α = 2; near α = 2 they are close.
+        let d2 = (exponent_entropy_paper_closed_form(2.0) - exponent_entropy_exact(2.0)).abs();
+        assert!(d2 < 0.25, "near-Gaussian deviation {d2}");
+        let d07 = (exponent_entropy_paper_closed_form(0.7) - exponent_entropy_exact(0.7)).abs();
+        assert!(d07 > 1.0, "small-alpha deviation {d07}");
+    }
+
+    #[test]
+    fn paper_numerical_instance_alpha2() {
+        // §2.3: 1.6 <= H(E) <= 2.67 at α = 2, floor ≈ 4.67 bits
+        assert!((entropy_lower_bound(2.0) - 1.6).abs() < 1e-9);
+        assert!((entropy_upper_bound(2.0) - 8.0 / 3.0).abs() < 1e-9);
+        let h = exponent_entropy_exact(2.0);
+        assert!(h > 1.6 && h < 2.67, "H(E)={h}");
+        let floor = compression_limit_bits(2.0, 1.0);
+        assert!(floor > 3.6 && floor < 4.67 + 1e-9, "floor={floor}");
+    }
+
+    #[test]
+    fn sampled_exponents_follow_geometric_law() {
+        // Empirical P(E=k)/P(E=k+1) on the tail ≈ 2^α for α-stable samples.
+        let mut rng = Xoshiro256::seed_from_u64(21);
+        let alpha = 1.5;
+        let samples: Vec<f64> = (0..2_000_000)
+            .map(|_| alpha_stable_std(&mut rng, alpha))
+            .collect();
+        let (lo, probs) = empirical_exponent_pmf(&samples);
+        // k = 5 (|X| ∈ [32,64)) is far enough into the power-law tail for
+        // α = 1.5 while keeping counts large enough for a stable ratio
+        let idx = (5 - lo) as usize;
+        let ratio = probs[idx] / probs[idx + 1];
+        let expect = 2f64.powf(alpha);
+        assert!(
+            (ratio / expect - 1.0).abs() < 0.15,
+            "ratio={ratio} expect={expect}"
+        );
+    }
+
+    #[test]
+    fn empirical_entropy_finite_and_low() {
+        let mut rng = Xoshiro256::seed_from_u64(22);
+        for alpha in [1.2, 1.6, 2.0] {
+            let samples: Vec<f64> = (0..500_000)
+                .map(|_| alpha_stable_std(&mut rng, alpha))
+                .collect();
+            let h = empirical_exponent_entropy(&samples);
+            assert!(h > 1.0 && h < 6.0, "alpha={alpha} h={h}");
+        }
+    }
+
+    #[test]
+    fn fit_alpha_recovers_generator() {
+        let mut rng = Xoshiro256::seed_from_u64(23);
+        let alpha = 1.5;
+        let mut counts_map: std::collections::BTreeMap<i64, u64> = Default::default();
+        for _ in 0..1_000_000 {
+            let x = alpha_stable_std(&mut rng, alpha).abs();
+            if x > 0.0 && x.is_finite() {
+                *counts_map.entry(x.log2().floor() as i64).or_insert(0) += 1;
+            }
+        }
+        let lo = *counts_map.keys().next().unwrap();
+        let hi = *counts_map.keys().last().unwrap();
+        let mut counts = vec![0u64; (hi - lo + 1) as usize];
+        for (k, c) in counts_map {
+            counts[(k - lo) as usize] = c;
+        }
+        let fitted = fit_alpha_from_exponents(lo, &counts).unwrap();
+        assert!((fitted - alpha).abs() < 0.3, "fitted={fitted}");
+    }
+
+    #[test]
+    fn empty_samples_handled() {
+        assert_eq!(empirical_exponent_pmf(&[]).1.len(), 0);
+        assert_eq!(empirical_exponent_entropy(&[0.0, 0.0]), 0.0);
+        assert!(fit_alpha_from_exponents(0, &[]).is_none());
+        assert!(fit_alpha_from_exponents(0, &[0, 0]).is_none());
+    }
+}

@@ -1,0 +1,314 @@
+//! Comparator codecs for the decode/compression benches:
+//!
+//! * raw FP8 (identity),
+//! * zstd and deflate (general-purpose entropy coders — what you'd use
+//!   without the paper's structure insight),
+//! * a DFloat11-style BF16 codec (Zhang et al. 2025 [32]): exponent-field
+//!   Huffman coding of BF16 weights — the prior work ECF8 generalises to
+//!   FP8, implemented here on the same block-parallel machinery,
+//! * naive fixed-width exponent packing (entropy-unaware bit packing).
+
+use crate::codec::{decode as ecf8_decode, encode as ecf8_encode, Ecf8Params};
+use crate::fp8::BF16;
+use crate::huffman::bitstream::{BitReader, BitWriter};
+use crate::huffman::canonical::CanonicalCode;
+use std::io::{Read, Write};
+
+/// A named lossless codec over byte tensors, with measured sizes.
+pub trait Codec {
+    fn name(&self) -> &'static str;
+    fn compress(&self, data: &[u8]) -> Vec<u8>;
+    fn decompress(&self, compressed: &[u8], out_len: usize) -> Vec<u8>;
+}
+
+/// Identity baseline.
+pub struct RawFp8;
+
+impl Codec for RawFp8 {
+    fn name(&self) -> &'static str {
+        "raw-fp8"
+    }
+    fn compress(&self, data: &[u8]) -> Vec<u8> {
+        data.to_vec()
+    }
+    fn decompress(&self, compressed: &[u8], out_len: usize) -> Vec<u8> {
+        assert_eq!(compressed.len(), out_len);
+        compressed.to_vec()
+    }
+}
+
+/// zstd at a given level.
+pub struct Zstd(pub i32);
+
+impl Codec for Zstd {
+    fn name(&self) -> &'static str {
+        "zstd"
+    }
+    fn compress(&self, data: &[u8]) -> Vec<u8> {
+        zstd::bulk::compress(data, self.0).expect("zstd compress")
+    }
+    fn decompress(&self, compressed: &[u8], out_len: usize) -> Vec<u8> {
+        zstd::bulk::decompress(compressed, out_len).expect("zstd decompress")
+    }
+}
+
+/// DEFLATE (flate2, miniz).
+pub struct Deflate(pub u32);
+
+impl Codec for Deflate {
+    fn name(&self) -> &'static str {
+        "deflate"
+    }
+    fn compress(&self, data: &[u8]) -> Vec<u8> {
+        let mut enc =
+            flate2::write::DeflateEncoder::new(Vec::new(), flate2::Compression::new(self.0));
+        enc.write_all(data).unwrap();
+        enc.finish().unwrap()
+    }
+    fn decompress(&self, compressed: &[u8], out_len: usize) -> Vec<u8> {
+        let mut dec = flate2::read::DeflateDecoder::new(compressed);
+        let mut out = Vec::with_capacity(out_len);
+        dec.read_to_end(&mut out).unwrap();
+        out
+    }
+}
+
+/// ECF8 itself, through the [`Codec`] interface (serial decode; the
+/// benches exercise the parallel path separately).
+pub struct Ecf8Codec;
+
+impl Codec for Ecf8Codec {
+    fn name(&self) -> &'static str {
+        "ecf8"
+    }
+    fn compress(&self, data: &[u8]) -> Vec<u8> {
+        let blob = ecf8_encode::encode(data, crate::codec::Fp8Format::E4M3, Ecf8Params::default());
+        crate::codec::container::serialize(&blob)
+    }
+    fn decompress(&self, compressed: &[u8], out_len: usize) -> Vec<u8> {
+        let blob = crate::codec::container::deserialize(compressed).expect("valid container");
+        assert_eq!(blob.n_elem, out_len);
+        let mut out = vec![0u8; out_len];
+        ecf8_decode::decode_into(&blob, &mut out, None);
+        out
+    }
+}
+
+/// Naive entropy-unaware packing: exponents at a fixed reduced width
+/// (the widest exponent actually present), sign/mantissa nibbles raw.
+/// Shows how much of ECF8's win needs *entropy* coding vs plain packing.
+pub struct FixedWidthPack;
+
+impl Codec for FixedWidthPack {
+    fn name(&self) -> &'static str {
+        "fixed-width"
+    }
+    fn compress(&self, data: &[u8]) -> Vec<u8> {
+        let mut max_exp = 0u8;
+        for &b in data {
+            max_exp = max_exp.max((b >> 3) & 0xF);
+        }
+        let width = if max_exp == 0 {
+            1
+        } else {
+            8 - max_exp.leading_zeros()
+        };
+        let mut w = BitWriter::with_capacity(data.len());
+        for &b in data {
+            w.write(((b >> 3) & 0xF) as u32, width);
+        }
+        let stream = w.finish();
+        let mut out = Vec::with_capacity(1 + data.len().div_ceil(2) + stream.len());
+        out.push(width as u8);
+        for pair in data.chunks(2) {
+            let hi = ((pair[0] >> 4) & 0x08) | (pair[0] & 0x07);
+            let lo = pair
+                .get(1)
+                .map(|&b| ((b >> 4) & 0x08) | (b & 0x07))
+                .unwrap_or(0);
+            out.push((hi << 4) | lo);
+        }
+        out.extend_from_slice(&stream);
+        out
+    }
+    fn decompress(&self, compressed: &[u8], out_len: usize) -> Vec<u8> {
+        let width = compressed[0] as u32;
+        let nibbles = &compressed[1..1 + out_len.div_ceil(2)];
+        let stream = &compressed[1 + out_len.div_ceil(2)..];
+        let mut r = BitReader::new(stream);
+        let mut out = vec![0u8; out_len];
+        for (i, slot) in out.iter_mut().enumerate() {
+            let e = r.read(width) as u8;
+            let nib = (nibbles[i / 2] >> (4 - (i % 2) * 4)) & 0x0F;
+            *slot = ((nib & 0x08) << 4) | (e << 3) | (nib & 0x07);
+        }
+        out
+    }
+}
+
+/// DFloat11-style BF16 compression: Huffman-code the 8-bit exponent
+/// field of BF16 weights, store sign+mantissa raw. Operates on
+/// little-endian u16 tensors (2 bytes per weight).
+pub struct DFloat11;
+
+impl DFloat11 {
+    fn split(data: &[u8]) -> (Vec<u8>, Vec<u8>) {
+        assert_eq!(data.len() % 2, 0, "BF16 tensor must be even bytes");
+        let n = data.len() / 2;
+        let mut exps = Vec::with_capacity(n);
+        let mut rest = Vec::with_capacity(n);
+        for i in 0..n {
+            let v = BF16(u16::from_le_bytes([data[2 * i], data[2 * i + 1]]));
+            exps.push(v.exponent_field());
+            rest.push((v.sign() << 7) | v.mantissa_field());
+        }
+        (exps, rest)
+    }
+}
+
+impl Codec for DFloat11 {
+    fn name(&self) -> &'static str {
+        "dfloat11-bf16"
+    }
+    fn compress(&self, data: &[u8]) -> Vec<u8> {
+        let (exps, rest) = Self::split(data);
+        let mut freqs = vec![0u64; 256];
+        for &e in &exps {
+            freqs[e as usize] += 1;
+        }
+        let code = CanonicalCode::from_frequencies(&freqs);
+        let mut w = BitWriter::with_capacity(exps.len());
+        for &e in &exps {
+            let (c, l) = code.encode(e as usize);
+            w.write(c, l);
+        }
+        let stream = w.finish();
+        let mut out = Vec::new();
+        out.extend_from_slice(&(exps.len() as u64).to_le_bytes());
+        out.extend_from_slice(&(stream.len() as u64).to_le_bytes());
+        out.extend(code.lengths.iter().map(|&l| l as u8));
+        out.extend_from_slice(&stream);
+        out.extend_from_slice(&rest);
+        out
+    }
+    fn decompress(&self, compressed: &[u8], out_len: usize) -> Vec<u8> {
+        let n = u64::from_le_bytes(compressed[0..8].try_into().unwrap()) as usize;
+        assert_eq!(n * 2, out_len);
+        let stream_len = u64::from_le_bytes(compressed[8..16].try_into().unwrap()) as usize;
+        let lengths: Vec<u32> = compressed[16..16 + 256].iter().map(|&l| l as u32).collect();
+        let code = CanonicalCode::from_lengths(&lengths).expect("valid lengths");
+        let lut = crate::huffman::lut::DecodeLut::build(&code);
+        let stream = &compressed[16 + 256..16 + 256 + stream_len];
+        let rest = &compressed[16 + 256 + stream_len..];
+        let mut r = BitReader::new(stream);
+        let mut out = vec![0u8; out_len];
+        for i in 0..n {
+            let (sym, len) = lut.decode(r.peek16());
+            r.skip(len);
+            let e = sym as u16;
+            let sm = rest[i] as u16;
+            let bits = ((sm & 0x80) << 8) | (e << 7) | (sm & 0x7F);
+            out[2 * i..2 * i + 2].copy_from_slice(&bits.to_le_bytes());
+        }
+        out
+    }
+}
+
+/// All FP8-tensor codecs for the decode benches.
+pub fn fp8_codecs() -> Vec<Box<dyn Codec>> {
+    vec![
+        Box::new(RawFp8),
+        Box::new(Ecf8Codec),
+        Box::new(Zstd(3)),
+        Box::new(Zstd(1)),
+        Box::new(Deflate(6)),
+        Box::new(FixedWidthPack),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+    use crate::util::quickprop::{property, Gen};
+
+    fn weight_bytes(n: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        (0..n)
+            .map(|_| {
+                let x = (crate::util::sampling::normal(&mut rng) * 0.05) as f32;
+                crate::fp8::F8E4M3::from_f32(x).to_bits()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn all_fp8_codecs_roundtrip() {
+        let data = weight_bytes(50_000, 1);
+        for codec in fp8_codecs() {
+            let c = codec.compress(&data);
+            let d = codec.decompress(&c, data.len());
+            assert_eq!(d, data, "{}", codec.name());
+        }
+    }
+
+    #[test]
+    fn ecf8_ratio_competitive_with_general_purpose() {
+        // Measured finding (EXPERIMENTS.md): zstd's FSE also captures the
+        // (slightly non-uniform) mantissa-nibble structure, so its ratio
+        // can edge out ECF8 by a few percent. ECF8's win is block-parallel
+        // random-access decode (bench_decode), not pure ratio — the test
+        // asserts ECF8 stays within 10 % of zstd-3 and beats deflate-6's
+        // whole-stream-serial design on its own terms (ratio parity).
+        let data = weight_bytes(500_000, 2);
+        let ecf8 = Ecf8Codec.compress(&data).len();
+        let z = Zstd(3).compress(&data).len();
+        let f = Deflate(6).compress(&data).len();
+        assert!(
+            (ecf8 as f64) < z as f64 * 1.10,
+            "ecf8 {ecf8} vs zstd {z}"
+        );
+        assert!(
+            (ecf8 as f64) < f as f64 * 1.10,
+            "ecf8 {ecf8} vs deflate {f}"
+        );
+    }
+
+    #[test]
+    fn fixed_width_worse_than_entropy_coding() {
+        let data = weight_bytes(100_000, 3);
+        let fixed = FixedWidthPack.compress(&data).len();
+        let ecf8 = Ecf8Codec.compress(&data).len();
+        assert!(ecf8 < fixed, "ecf8 {ecf8} vs fixed {fixed}");
+    }
+
+    #[test]
+    fn dfloat11_roundtrips_bf16() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let mut data = Vec::new();
+        for _ in 0..30_000 {
+            let x = (crate::util::sampling::normal(&mut rng) * 0.03) as f32;
+            data.extend_from_slice(&BF16::from_f32(x).to_bits().to_le_bytes());
+        }
+        let c = DFloat11.compress(&data);
+        let d = DFloat11.decompress(&c, data.len());
+        assert_eq!(d, data);
+        // ~30% saving on BF16 per the DFloat11 paper
+        let saving = 1.0 - c.len() as f64 / data.len() as f64;
+        assert!(saving > 0.20 && saving < 0.40, "saving={saving}");
+    }
+
+    #[test]
+    fn property_codecs_roundtrip_arbitrary_bytes() {
+        property("baseline codecs roundtrip", 25, |g: &mut Gen| {
+            let n = g.usize_in(2..=4096) & !1; // even for bf16
+            let data: Vec<u8> = (0..n).map(|_| g.u8()).collect();
+            for codec in fp8_codecs() {
+                let c = codec.compress(&data);
+                assert_eq!(codec.decompress(&c, n), data, "{}", codec.name());
+            }
+            let c = DFloat11.compress(&data);
+            assert_eq!(DFloat11.decompress(&c, n), data);
+        });
+    }
+}

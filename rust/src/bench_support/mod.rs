@@ -1,0 +1,174 @@
+//! Benchmark harness (substrate: no `criterion` in the offline registry).
+//!
+//! Provides warmed-up, repeated timing with summary statistics, plus the
+//! fixed-width table printer the table/figure benches use to emit rows in
+//! the paper's layout. All benches are `harness = false` binaries that
+//! call into this module, so `cargo bench` runs them.
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Result of one timed benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// per-iteration wall time, seconds
+    pub times: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.times)
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.summary().mean
+    }
+
+    /// Throughput given bytes processed per iteration.
+    pub fn throughput_bps(&self, bytes_per_iter: u64) -> f64 {
+        bytes_per_iter as f64 / self.mean()
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `iters` measured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        times,
+    }
+}
+
+/// Time a single long-running invocation.
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Prevent the optimizer from discarding a value (stable-Rust black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Fixed-width table printer used by the paper-table benches.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>, I: IntoIterator<Item = S>>(headers: I) -> Self {
+        Self {
+            headers: headers.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>, I: IntoIterator<Item = S>>(&mut self, cells: I) {
+        let row: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(row.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(row);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].chars().count());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (c, cell) in cells.iter().enumerate() {
+                let pad = widths[c] - cell.chars().count();
+                s.push(' ');
+                s.push_str(cell);
+                s.push_str(&" ".repeat(pad + 1));
+                s.push('|');
+            }
+            s
+        };
+        let mut out = line(&self.headers);
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&"-".repeat(w + 2));
+            out.push('|');
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Standard header printed by every bench binary so `cargo bench` output
+/// is self-describing.
+pub fn banner(bench_id: &str, paper_ref: &str) {
+    println!("\n=== {bench_id} — reproduces {paper_ref} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_iters() {
+        let mut x = 0u64;
+        let r = bench("inc", 2, 10, || {
+            x = black_box(x + 1);
+        });
+        assert_eq!(r.iters, 10);
+        assert_eq!(r.times.len(), 10);
+        assert_eq!(x, 12);
+        assert!(r.mean() >= 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(["model", "mem"]);
+        t.row(["qwen3-8b", "6.47"]);
+        t.row(["deepseek-r1", "623.19"]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        let w = lines[0].len();
+        assert!(lines.iter().all(|l| l.len() == w), "{s}");
+        assert!(s.contains("deepseek-r1"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(["a", "b"]);
+        t.row(["only-one"]);
+    }
+
+    #[test]
+    fn throughput_positive() {
+        let r = bench("sleep", 0, 3, || {
+            std::thread::sleep(std::time::Duration::from_micros(100));
+        });
+        assert!(r.throughput_bps(1_000_000) > 0.0);
+    }
+}

@@ -1,0 +1,317 @@
+//! On-disk / wire container for ECF8 blobs.
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! 0    magic "ECF8"            4 bytes
+//! 4    version                 u16
+//! 6    format                  u8   (0 = E4M3, 1 = E5M2)
+//! 7    alphabet                u8
+//! 8    n_elem                  u64
+//! 16   bytes_per_thread (B)    u32
+//! 20   threads_per_block (T)   u32
+//! 24   n_blocks                u64
+//! 32   encoded_bits            u64
+//! 40   encoded_len             u64  (padded length actually stored)
+//! 48   packed_len              u64
+//! 56   gaps_len                u64
+//! 64   payload_crc32           u32
+//! 68   reserved                4 bytes
+//! 72   code_lengths            `alphabet` bytes
+//! ..   outpos                  (n_blocks+1) × u64
+//! ..   gaps                    gaps_len bytes
+//! ..   packed                  packed_len bytes
+//! ..   encoded                 encoded_len bytes
+//! ```
+
+use super::{Ecf8Blob, Ecf8Params, Fp8Format};
+
+pub const MAGIC: &[u8; 4] = b"ECF8";
+pub const VERSION: u16 = 1;
+/// Fixed header size (pre-code_lengths), for size accounting.
+pub const HEADER_BYTES: usize = 72;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ContainerError {
+    #[error("bad magic (not an ECF8 container)")]
+    BadMagic,
+    #[error("unsupported version {0}")]
+    BadVersion(u16),
+    #[error("unknown format byte {0}")]
+    BadFormat(u8),
+    #[error("container truncated: need {need} bytes, have {have}")]
+    Truncated { need: usize, have: usize },
+    #[error("payload CRC mismatch (stored {stored:#010x}, computed {computed:#010x})")]
+    CrcMismatch { stored: u32, computed: u32 },
+    #[error("inconsistent metadata: {0}")]
+    Inconsistent(&'static str),
+}
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+struct Cursor<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ContainerError> {
+        if self.pos + n > self.data.len() {
+            return Err(ContainerError::Truncated {
+                need: self.pos + n,
+                have: self.data.len(),
+            });
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u16(&mut self) -> Result<u16, ContainerError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32, ContainerError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, ContainerError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn u8(&mut self) -> Result<u8, ContainerError> {
+        Ok(self.take(1)?[0])
+    }
+}
+
+/// Serialize a blob to container bytes.
+pub fn serialize(blob: &Ecf8Blob) -> Vec<u8> {
+    let alphabet = blob.format.alphabet_size();
+    assert_eq!(blob.code_lengths.len(), alphabet);
+    let mut crc = crc32fast::Hasher::new();
+    crc.update(&blob.packed);
+    crc.update(&blob.encoded);
+    crc.update(&blob.gaps);
+    let crc = crc.finalize();
+
+    let mut out = Vec::with_capacity(
+        HEADER_BYTES
+            + alphabet
+            + blob.outpos.len() * 8
+            + blob.gaps.len()
+            + blob.packed.len()
+            + blob.encoded.len(),
+    );
+    out.extend_from_slice(MAGIC);
+    put_u16(&mut out, VERSION);
+    out.push(blob.format as u8);
+    out.push(alphabet as u8);
+    put_u64(&mut out, blob.n_elem as u64);
+    put_u32(&mut out, blob.params.bytes_per_thread as u32);
+    put_u32(&mut out, blob.params.threads_per_block as u32);
+    put_u64(&mut out, blob.n_blocks() as u64);
+    put_u64(&mut out, blob.encoded_bits);
+    put_u64(&mut out, blob.encoded.len() as u64);
+    put_u64(&mut out, blob.packed.len() as u64);
+    put_u64(&mut out, blob.gaps.len() as u64);
+    put_u32(&mut out, crc);
+    out.extend_from_slice(&[0u8; 4]); // reserved
+    debug_assert_eq!(out.len(), HEADER_BYTES);
+    out.extend_from_slice(&blob.code_lengths);
+    for &p in &blob.outpos {
+        put_u64(&mut out, p);
+    }
+    out.extend_from_slice(&blob.gaps);
+    out.extend_from_slice(&blob.packed);
+    out.extend_from_slice(&blob.encoded);
+    out
+}
+
+/// Deserialize container bytes back into a blob (validates CRC and
+/// internal consistency).
+pub fn deserialize(data: &[u8]) -> Result<Ecf8Blob, ContainerError> {
+    let mut c = Cursor { data, pos: 0 };
+    if c.take(4)? != MAGIC {
+        return Err(ContainerError::BadMagic);
+    }
+    let version = c.u16()?;
+    if version != VERSION {
+        return Err(ContainerError::BadVersion(version));
+    }
+    let format = Fp8Format::from_u8(c.u8()?).ok_or(ContainerError::BadFormat(255))?;
+    let alphabet = c.u8()? as usize;
+    if alphabet != format.alphabet_size() {
+        return Err(ContainerError::Inconsistent("alphabet size vs format"));
+    }
+    let n_elem = c.u64()? as usize;
+    let bytes_per_thread = c.u32()? as usize;
+    let threads_per_block = c.u32()? as usize;
+    let n_blocks = c.u64()? as usize;
+    let encoded_bits = c.u64()?;
+    let encoded_len = c.u64()? as usize;
+    let packed_len = c.u64()? as usize;
+    let gaps_len = c.u64()? as usize;
+    let stored_crc = c.u32()?;
+    let _reserved = c.take(4)?;
+    let code_lengths = c.take(alphabet)?.to_vec();
+    let mut outpos = Vec::with_capacity(n_blocks + 1);
+    for _ in 0..=n_blocks {
+        outpos.push(c.u64()?);
+    }
+    let gaps = c.take(gaps_len)?.to_vec();
+    let packed = c.take(packed_len)?.to_vec();
+    let encoded = c.take(encoded_len)?.to_vec();
+
+    let mut crc = crc32fast::Hasher::new();
+    crc.update(&packed);
+    crc.update(&encoded);
+    crc.update(&gaps);
+    let computed = crc.finalize();
+    if computed != stored_crc {
+        return Err(ContainerError::CrcMismatch {
+            stored: stored_crc,
+            computed,
+        });
+    }
+
+    let params = Ecf8Params {
+        bytes_per_thread,
+        threads_per_block,
+    };
+    if encoded_len != n_blocks * params.block_bytes() + 8 {
+        return Err(ContainerError::Inconsistent("encoded length vs geometry"));
+    }
+    if packed_len != n_elem.div_ceil(2) {
+        return Err(ContainerError::Inconsistent("packed length vs n_elem"));
+    }
+    if outpos.last().copied() != Some(n_elem as u64) {
+        return Err(ContainerError::Inconsistent("outpos tail vs n_elem"));
+    }
+
+    Ok(Ecf8Blob {
+        format,
+        params,
+        n_elem,
+        code_lengths,
+        encoded,
+        encoded_bits,
+        packed,
+        gaps,
+        outpos,
+    })
+}
+
+/// Write a blob to a file.
+pub fn write_file(blob: &Ecf8Blob, path: &std::path::Path) -> std::io::Result<()> {
+    std::fs::write(path, serialize(blob))
+}
+
+/// Read a blob from a file.
+pub fn read_file(path: &std::path::Path) -> anyhow::Result<Ecf8Blob> {
+    let data = std::fs::read(path)?;
+    Ok(deserialize(&data)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::encode::encode;
+    use crate::util::prng::Xoshiro256;
+
+    fn sample_blob(n: usize) -> Ecf8Blob {
+        let mut rng = Xoshiro256::seed_from_u64(77);
+        let data: Vec<u8> = (0..n)
+            .map(|_| {
+                let x = (crate::util::sampling::normal(&mut rng) * 0.05) as f32;
+                crate::fp8::F8E4M3::from_f32(x).to_bits()
+            })
+            .collect();
+        encode(&data, Fp8Format::E4M3, Ecf8Params::default())
+    }
+
+    #[test]
+    fn serialize_roundtrip() {
+        let blob = sample_blob(12_345);
+        let bytes = serialize(&blob);
+        let back = deserialize(&bytes).unwrap();
+        assert_eq!(back.n_elem, blob.n_elem);
+        assert_eq!(back.encoded, blob.encoded);
+        assert_eq!(back.packed, blob.packed);
+        assert_eq!(back.gaps, blob.gaps);
+        assert_eq!(back.outpos, blob.outpos);
+        assert_eq!(back.code_lengths, blob.code_lengths);
+        assert_eq!(back.format, blob.format);
+        // and it still decodes losslessly
+        let a = crate::codec::decompress_fp8(&blob);
+        let b = crate::codec::decompress_fp8(&back);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let blob = sample_blob(5000);
+        let mut bytes = serialize(&blob);
+        let n = bytes.len();
+        bytes[n - 100] ^= 0xFF; // flip payload bits
+        assert!(matches!(
+            deserialize(&bytes),
+            Err(ContainerError::CrcMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn detects_truncation() {
+        let blob = sample_blob(5000);
+        let bytes = serialize(&blob);
+        assert!(matches!(
+            deserialize(&bytes[..bytes.len() - 9]),
+            Err(ContainerError::Truncated { .. })
+        ));
+        assert!(matches!(
+            deserialize(&bytes[..30]),
+            Err(ContainerError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn detects_bad_magic_and_version() {
+        let blob = sample_blob(100);
+        let mut bytes = serialize(&blob);
+        bytes[0] = b'X';
+        assert!(matches!(deserialize(&bytes), Err(ContainerError::BadMagic)));
+        let mut bytes = serialize(&blob);
+        bytes[4] = 99;
+        assert!(matches!(
+            deserialize(&bytes),
+            Err(ContainerError::BadVersion(_))
+        ));
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let blob = sample_blob(2000);
+        let dir = std::env::temp_dir().join("ecf8_container_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ecf8");
+        write_file(&blob, &path).unwrap();
+        let back = read_file(&path).unwrap();
+        assert_eq!(
+            crate::codec::decompress_fp8(&back),
+            crate::codec::decompress_fp8(&blob)
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn header_overhead_is_small() {
+        let blob = sample_blob(1_000_000);
+        let bytes = serialize(&blob);
+        let payload = blob.encoded.len() + blob.packed.len() + blob.gaps.len();
+        // metadata overhead < 2% for MB-scale tensors
+        assert!((bytes.len() - payload) as f64 / (bytes.len() as f64) < 0.02);
+    }
+}

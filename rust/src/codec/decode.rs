@@ -1,0 +1,580 @@
+//! ECF8 block-parallel decoder — Algorithm 1 (§3.2).
+//!
+//! Three paths, all bit-exact:
+//!
+//! * [`decode_block_alg1`] — the faithful reproduction of Algorithm 1: per
+//!   simulated thread, a 64-bit sliding window `L`, 16-bit tail `S`,
+//!   headroom counter `f`; phase 1 counts symbols, an in-block exclusive
+//!   prefix sum assigns output slots, phase 2 decodes and assembles FP8
+//!   bytes. Each thread consumes exactly its `B`-byte window (plus ≤ 2
+//!   lookahead bytes), coordinated purely by the gap/outpos metadata — no
+//!   cross-thread communication, exactly as on the GPU.
+//! * [`decode_block_fast`] — the CPU-tuned path: one sequential sweep per
+//!   block using unaligned u64 loads (a CPU "thread" is the paper's
+//!   thread *block*; the per-thread machinery exists for intra-block SIMT
+//!   parallelism we don't have). Used by default.
+//! * [`decode_scalar_reference`] — whole-stream scalar decode via the
+//!   slow prefix-matching `CanonicalCode::decode_window`, ground truth in
+//!   tests.
+//!
+//! The public entry point [`decode_into`] fans blocks out over a thread
+//! pool; blocks write disjoint output slices (`outpos[b] .. outpos[b+1]`).
+
+use super::{Ecf8Blob, Fp8Format};
+use crate::huffman::bitstream::BitReader;
+use crate::huffman::lut::DecodeLut;
+use crate::util::threadpool::ThreadPool;
+
+/// Which decode implementation to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DecodePath {
+    /// CPU-tuned single sweep per block with pair-LUT dispatch (default).
+    #[default]
+    Fast,
+    /// Fast sweep without the pair LUT (ablation).
+    FastSingle,
+    /// Faithful Algorithm-1 per-thread two-phase simulation.
+    Alg1,
+}
+
+/// Decode the whole blob into `out` (must be exactly `n_elem` bytes).
+/// `pool`: optional thread pool for block parallelism; `None` = serial.
+pub fn decode_into(blob: &Ecf8Blob, out: &mut [u8], pool: Option<&ThreadPool>) {
+    decode_into_path(blob, out, pool, DecodePath::Fast)
+}
+
+/// Decode with an explicit implementation choice (benches/tests).
+pub fn decode_into_path(
+    blob: &Ecf8Blob,
+    out: &mut [u8],
+    pool: Option<&ThreadPool>,
+    path: DecodePath,
+) {
+    assert_eq!(out.len(), blob.n_elem, "output buffer size mismatch");
+    let lut = blob.lut();
+    let pair = match path {
+        DecodePath::Fast => Some(crate::huffman::lut::PairLut::build(&lut)),
+        _ => None,
+    };
+    let n_blocks = blob.n_blocks();
+
+    // Blocks own disjoint output ranges outpos[b]..outpos[b+1]; hand each
+    // worker the output base address and rely on that disjointness (same
+    // contract as the CUDA kernel's non-overlapping shared-memory slices).
+    let out_addr = out.as_mut_ptr() as usize;
+    let out_len = out.len();
+
+    let run_block = |b: usize| {
+        let lo = blob.outpos[b] as usize;
+        let hi = blob.outpos[b + 1] as usize;
+        debug_assert!(lo <= hi && hi <= out_len);
+        // SAFETY: [lo, hi) ranges are disjoint across blocks and in-bounds.
+        let slice =
+            unsafe { std::slice::from_raw_parts_mut((out_addr as *mut u8).add(lo), hi - lo) };
+        match path {
+            DecodePath::Fast => {
+                decode_block_fast_pair(blob, &lut, pair.as_ref().unwrap(), b, slice)
+            }
+            DecodePath::FastSingle => decode_block_fast(blob, &lut, b, slice),
+            DecodePath::Alg1 => decode_block_alg1(blob, &lut, b, slice),
+        }
+    };
+
+    match pool {
+        Some(pool) => pool.scope_chunks(n_blocks, pool.size() * 4, |_, s, e| {
+            for b in s..e {
+                run_block(b);
+            }
+        }),
+        None => {
+            for b in 0..n_blocks {
+                run_block(b);
+            }
+        }
+    }
+}
+
+/// Extract thread `t_g`'s 4-bit gap (Algorithm 1 line 5).
+#[inline(always)]
+fn gap_of(gaps: &[u8], t_g: usize) -> u32 {
+    ((gaps[t_g / 2] >> (4 - (t_g % 2) * 4)) & 0x0F) as u32
+}
+
+/// Extract the rest nibble of output element `o` (Algorithm 1 line 23).
+#[inline(always)]
+fn rest_of(packed: &[u8], o: usize) -> u8 {
+    (packed[o / 2] >> (4 - (o % 2) * 4)) & 0x0F
+}
+
+// ---------------------------------------------------------------------------
+// Faithful Algorithm-1 path
+// ---------------------------------------------------------------------------
+
+/// Decode block `b` exactly as Algorithm 1: two phases over T simulated
+/// threads with an exclusive prefix sum between them. `out_block` is the
+/// block's disjoint output slice (`outpos[b]..outpos[b+1]`).
+pub fn decode_block_alg1(blob: &Ecf8Blob, lut: &DecodeLut, b: usize, out_block: &mut [u8]) {
+    let t_per_block = blob.params.threads_per_block;
+    let b_bytes = blob.params.bytes_per_thread;
+    let window_bits = (b_bytes * 8) as u32;
+    let o_base = blob.outpos[b] as usize;
+    let o_block_end = blob.outpos[b + 1] as usize;
+    let n_elem = blob.n_elem;
+    if o_base == o_block_end {
+        // nothing to produce (empty tensor); the padding windows would
+        // only count garbage
+        return;
+    }
+
+    // ---- Phase 1: per-thread symbol counting (lines 6–15) ----
+    let mut counts = vec![0u32; t_per_block];
+    for t in 0..t_per_block {
+        let t_g = b * t_per_block + t;
+        let byte_off = t_g * b_bytes;
+        let gap = gap_of(&blob.gaps, t_g);
+        // bits available to *start* a codeword in this window
+        let mut consumed = gap;
+        let mut lr = WindowReader::new(&blob.encoded, byte_off, b_bytes, gap);
+        let mut c = 0u32;
+        while consumed < window_bits {
+            let (_, len) = lut.decode(lr.peek16());
+            if len == 0 {
+                // unreachable with a complete code; reachable only in
+                // zero-padding under a degenerate (single-symbol) book
+                break;
+            }
+            lr.skip(len);
+            consumed += len;
+            c += 1;
+        }
+        counts[t] = c;
+    }
+
+    // ---- Block-level exclusive prefix sum (lines 16–19) ----
+    // accum[t] = outpos[b] + sum counts[0..t]; accum[T] forced to
+    // outpos[b+1] (the metadata bound wins over padding overcount).
+    let mut accum = vec![0usize; t_per_block + 1];
+    accum[0] = o_base;
+    for t in 0..t_per_block {
+        accum[t + 1] = accum[t] + counts[t] as usize;
+    }
+    accum[t_per_block] = o_block_end;
+
+    // ---- Phase 2: decode and assemble FP8 (lines 20–31) ----
+    let format = blob.format;
+    for t in 0..t_per_block {
+        let t_g = b * t_per_block + t;
+        let byte_off = t_g * b_bytes;
+        let gap = gap_of(&blob.gaps, t_g);
+        let o_start = accum[t];
+        let o_end = (accum[t] + counts[t] as usize)
+            .min(n_elem)
+            .min(o_block_end);
+        let mut lr = WindowReader::new(&blob.encoded, byte_off, b_bytes, gap);
+        let mut o = o_start;
+        while o < o_end {
+            let (x, len) = lut.decode(lr.peek16());
+            lr.skip(len);
+            let rest = rest_of(&blob.packed, o);
+            out_block[o - o_base] = format.assemble(x as u8, rest);
+            o += 1;
+        }
+    }
+}
+
+/// The 80-bit (head+tail) register window of Algorithm 1, expressed as a
+/// safe reader: `peek16`/`skip` over the thread's B+2 loaded bytes. The
+/// arithmetic mirrors lines 4–12: a u64 head `L`, u16 tail `S`, stitch at
+/// 16 remaining bits.
+struct WindowReader {
+    l: u64,
+    s: u16,
+    /// bits consumed so far (including the initial gap)
+    f: u32,
+    stitched: bool,
+}
+
+impl WindowReader {
+    #[inline(always)]
+    fn new(encoded: &[u8], byte_off: usize, b_bytes: usize, gap: u32) -> Self {
+        // Supported geometries: B = 8 (the faithful 64-bit head + 16-bit
+        // tail) or B <= 6 (the 8-byte head already covers B+2 bytes, so
+        // the worst-case read 8B-1+16 <= 63 bits never leaves the head).
+        debug_assert!(
+            b_bytes == 8 || b_bytes <= 6,
+            "bytes_per_thread must be 8 or <= 6 (got {b_bytes})"
+        );
+        let mut head = [0u8; 8];
+        head[..8].copy_from_slice(&encoded[byte_off..byte_off + 8]);
+        let l = u64::from_be_bytes(head);
+        let s = u16::from_be_bytes([encoded[byte_off + b_bytes], encoded[byte_off + b_bytes + 1]]);
+        let mut r = Self {
+            l,
+            s,
+            f: 0,
+            // For B < 8 the tail bytes are already inside the head load.
+            stitched: b_bytes < 8,
+        };
+        r.skip_raw(gap);
+        r
+    }
+
+    #[inline(always)]
+    fn peek16(&self) -> u16 {
+        (self.l >> 48) as u16
+    }
+
+    #[inline(always)]
+    fn skip_raw(&mut self, bits: u32) {
+        self.l <<= bits;
+        self.f += bits;
+        if !self.stitched && self.f > 48 {
+            // fewer than 16 valid head bits remain: stitch the tail in at
+            // its correct position (Alg. 1 lines 12 / 28:
+            // L |= S << (f - 16) — in our orientation the tail lands
+            // `64 - (80 - f)` bits from the top).
+            self.l |= (self.s as u64) << self.f.saturating_sub(16).min(48);
+            self.stitched = true;
+        }
+    }
+
+    #[inline(always)]
+    fn skip(&mut self, bits: u32) {
+        self.skip_raw(bits);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CPU fast path
+// ---------------------------------------------------------------------------
+
+/// Decode block `b` in one sequential sweep with unaligned u64 refills
+/// and pair-LUT dispatch (two symbols per lookup where the pair table
+/// covers — see [`crate::huffman::lut::PairLut`]).
+pub fn decode_block_fast_pair(
+    blob: &Ecf8Blob,
+    lut: &DecodeLut,
+    pair: &crate::huffman::lut::PairLut,
+    b: usize,
+    out_block: &mut [u8],
+) {
+    let block_bytes = blob.params.block_bytes();
+    let start_byte = b * block_bytes;
+    let t0 = b * blob.params.threads_per_block;
+    let gap = gap_of(&blob.gaps, t0) as u64;
+    let o_base = blob.outpos[b] as usize;
+    let o_end = blob.outpos[b + 1] as usize;
+    let n = o_end - o_base;
+    if n == 0 {
+        return;
+    }
+    let enc = &blob.encoded;
+    let packed = &blob.packed;
+    let format = blob.format;
+    let mut bitpos = (start_byte as u64) * 8 + gap;
+    let mut o = 0usize;
+
+    macro_rules! sweep {
+        ($assemble:expr) => {{
+            while o < n {
+                let byte = (bitpos >> 3) as usize;
+                let sh = (bitpos & 7) as u32;
+                let w0 = u64::from_be_bytes(enc[byte..byte + 8].try_into().unwrap());
+                let mut w = w0 << sh;
+                let mut avail = 64 - sh;
+                loop {
+                    // pair fast path: needs 2 output slots and >= 12 bits
+                    if o + 2 <= n && avail >= 12 {
+                        if let Some((x1, x2, len)) = pair.decode_pair(w) {
+                            w <<= len;
+                            avail -= len;
+                            bitpos += len as u64;
+                            let oo = o_base + o;
+                            // both rest nibbles in one load when aligned
+                            let (r1, r2) = if oo & 1 == 0 {
+                                let pb = packed[oo >> 1];
+                                (pb >> 4, pb & 0x0F)
+                            } else {
+                                (packed[oo >> 1] & 0x0F, packed[(oo >> 1) + 1] >> 4)
+                            };
+                            out_block[o] = $assemble(x1, r1);
+                            out_block[o + 1] = $assemble(x2, r2);
+                            o += 2;
+                            if o == n || avail < 16 {
+                                break;
+                            }
+                            continue;
+                        }
+                    }
+                    if avail < 16 {
+                        break;
+                    }
+                    let (x, len) = lut.decode((w >> 48) as u16);
+                    w <<= len;
+                    avail -= len;
+                    bitpos += len as u64;
+                    let oo = o_base + o;
+                    let rest = (packed[oo / 2] >> (4 - (oo % 2) * 4)) & 0x0F;
+                    out_block[o] = $assemble(x as u8, rest);
+                    o += 1;
+                    if o == n || avail < 16 {
+                        break;
+                    }
+                }
+            }
+        }};
+    }
+
+    match format {
+        Fp8Format::E4M3 => {
+            sweep!(|x: u8, rest: u8| ((rest & 0x08) << 4) | (x << 3) | (rest & 0x07))
+        }
+        Fp8Format::E5M2 => {
+            sweep!(|x: u8, rest: u8| ((rest & 0x04) << 5) | (x << 2) | (rest & 0x03))
+        }
+    }
+}
+
+/// Decode block `b` in one sequential sweep with unaligned u64 refills.
+pub fn decode_block_fast(blob: &Ecf8Blob, lut: &DecodeLut, b: usize, out_block: &mut [u8]) {
+    let block_bytes = blob.params.block_bytes();
+    let start_byte = b * block_bytes;
+    let t0 = b * blob.params.threads_per_block;
+    let gap = gap_of(&blob.gaps, t0) as u64;
+    let o_base = blob.outpos[b] as usize;
+    let o_end = blob.outpos[b + 1] as usize;
+    let n = o_end - o_base;
+    if n == 0 {
+        return;
+    }
+
+    let enc = &blob.encoded;
+    let packed = &blob.packed;
+    let format = blob.format;
+    let mut bitpos = (start_byte as u64) * 8 + gap;
+    let mut o = 0usize;
+
+    // Assemble format constants outside the loop; E4M3 dominates, keep the
+    // match out of the hot loop by monomorphising per format.
+    macro_rules! sweep {
+        ($assemble:expr) => {{
+            while o < n {
+                // refill: 64-bit window starting at bitpos (encoded has
+                // >= 8 bytes of zero slack past every block)
+                let byte = (bitpos >> 3) as usize;
+                let sh = (bitpos & 7) as u32;
+                let w0 = u64::from_be_bytes(enc[byte..byte + 8].try_into().unwrap());
+                let mut w = w0 << sh;
+                let mut avail = 64 - sh;
+                loop {
+                    let (x, len) = lut.decode((w >> 48) as u16);
+                    w <<= len;
+                    avail -= len;
+                    bitpos += len as u64;
+                    let oo = o_base + o;
+                    let rest = (packed[oo / 2] >> (4 - (oo % 2) * 4)) & 0x0F;
+                    out_block[o] = $assemble(x as u8, rest);
+                    o += 1;
+                    if o == n {
+                        break;
+                    }
+                    if avail < 16 {
+                        break;
+                    }
+                }
+            }
+        }};
+    }
+
+    match format {
+        Fp8Format::E4M3 => {
+            sweep!(|x: u8, rest: u8| ((rest & 0x08) << 4) | (x << 3) | (rest & 0x07))
+        }
+        Fp8Format::E5M2 => {
+            sweep!(|x: u8, rest: u8| ((rest & 0x04) << 5) | (x << 2) | (rest & 0x03))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference
+// ---------------------------------------------------------------------------
+
+/// Ground-truth decoder: sequential prefix-match over the whole stream.
+pub fn decode_scalar_reference(blob: &Ecf8Blob) -> Vec<u8> {
+    let code = blob.code();
+    let mut out = vec![0u8; blob.n_elem];
+    let mut reader = BitReader::new(&blob.encoded);
+    for (o, slot) in out.iter_mut().enumerate() {
+        let window = reader.peek16();
+        let (sym, len) = code
+            .decode_window(window)
+            .expect("valid stream decodes a symbol");
+        reader.skip(len);
+        let rest = rest_of(&blob.packed, o);
+        *slot = blob.format.assemble(sym as u8, rest);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::encode::encode;
+    use crate::codec::{Ecf8Params, Fp8Format};
+    use crate::util::prng::Xoshiro256;
+    use crate::util::quickprop::{property, Gen};
+
+    fn weight_bytes(n: usize, seed: u64, scale: f64) -> Vec<u8> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        (0..n)
+            .map(|_| {
+                let x = (crate::util::sampling::normal(&mut rng) * scale) as f32;
+                crate::fp8::F8E4M3::from_f32(x).to_bits()
+            })
+            .collect()
+    }
+
+    fn roundtrip(data: &[u8], fmt: Fp8Format, params: Ecf8Params, path: DecodePath) {
+        let blob = encode(data, fmt, params);
+        let mut out = vec![0u8; data.len()];
+        decode_into_path(&blob, &mut out, None, path);
+        assert_eq!(out, data, "path {path:?} params {params:?}");
+    }
+
+    #[test]
+    fn fast_path_bit_exact_small() {
+        for n in [0usize, 1, 2, 3, 7, 255, 256, 1000] {
+            let data = weight_bytes(n, n as u64 + 1, 0.05);
+            roundtrip(&data, Fp8Format::E4M3, Ecf8Params::default(), DecodePath::Fast);
+        }
+    }
+
+    #[test]
+    fn alg1_path_bit_exact_small() {
+        for n in [0usize, 1, 5, 100, 2048, 10_000] {
+            let data = weight_bytes(n, n as u64 + 10, 0.05);
+            roundtrip(&data, Fp8Format::E4M3, Ecf8Params::default(), DecodePath::Alg1);
+        }
+    }
+
+    #[test]
+    fn both_paths_bit_exact_multi_block() {
+        // > 1 block with default geometry requires > 2048 encoded bytes
+        let data = weight_bytes(200_000, 42, 0.02);
+        let blob = encode(&data, Fp8Format::E4M3, Ecf8Params::default());
+        assert!(blob.n_blocks() > 1, "want multi-block, got {}", blob.n_blocks());
+        for path in [DecodePath::Fast, DecodePath::Alg1] {
+            let mut out = vec![0u8; data.len()];
+            decode_into_path(&blob, &mut out, None, path);
+            assert_eq!(out, data, "{path:?}");
+        }
+    }
+
+    #[test]
+    fn parallel_decode_matches_serial() {
+        let pool = ThreadPool::new(4);
+        let data = weight_bytes(500_000, 7, 0.05);
+        let blob = encode(&data, Fp8Format::E4M3, Ecf8Params::default());
+        let mut a = vec![0u8; data.len()];
+        let mut b = vec![0u8; data.len()];
+        decode_into(&blob, &mut a, Some(&pool));
+        decode_into(&blob, &mut b, None);
+        assert_eq!(a, b);
+        assert_eq!(a, data);
+    }
+
+    #[test]
+    fn scalar_reference_agrees() {
+        let data = weight_bytes(30_000, 8, 0.1);
+        let blob = encode(&data, Fp8Format::E4M3, Ecf8Params::default());
+        assert_eq!(decode_scalar_reference(&blob), data);
+    }
+
+    #[test]
+    fn e5m2_roundtrip() {
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let data: Vec<u8> = (0..50_000)
+            .map(|_| {
+                let x = (crate::util::sampling::normal(&mut rng) * 0.05) as f32;
+                crate::fp8::F8E5M2::from_f32(x).to_bits()
+            })
+            .collect();
+        for path in [DecodePath::Fast, DecodePath::Alg1] {
+            roundtrip(&data, Fp8Format::E5M2, Ecf8Params::default(), path);
+        }
+    }
+
+    #[test]
+    fn nonstandard_geometry_roundtrips() {
+        // smaller threads-per-block and bytes-per-thread stress the gap /
+        // outpos bookkeeping
+        for (bt, tpb) in [(8usize, 32usize), (8, 1), (8, 1024), (4, 64), (6, 16)] {
+            let params = Ecf8Params {
+                bytes_per_thread: bt,
+                threads_per_block: tpb,
+            };
+            let data = weight_bytes(60_000, (bt * tpb) as u64, 0.05);
+            roundtrip(&data, Fp8Format::E4M3, params, DecodePath::Fast);
+            roundtrip(&data, Fp8Format::E4M3, params, DecodePath::Alg1);
+        }
+    }
+
+    #[test]
+    fn adversarial_uniform_bytes_roundtrip() {
+        let mut rng = Xoshiro256::seed_from_u64(10);
+        let data: Vec<u8> = (0..123_457).map(|_| (rng.next_u64() >> 56) as u8).collect();
+        for path in [DecodePath::Fast, DecodePath::Alg1] {
+            roundtrip(&data, Fp8Format::E4M3, Ecf8Params::default(), path);
+        }
+    }
+
+    #[test]
+    fn all_same_exponent_roundtrip() {
+        // degenerate single-symbol alphabet: code length forced to 1
+        let data = vec![0x38u8; 10_000]; // 1.0 repeated
+        for path in [DecodePath::Fast, DecodePath::Alg1] {
+            roundtrip(&data, Fp8Format::E4M3, Ecf8Params::default(), path);
+        }
+    }
+
+    #[test]
+    fn property_roundtrip_random_tensors() {
+        property("ecf8 roundtrip on arbitrary byte tensors", 60, |g: &mut Gen| {
+            let n = g.usize_in(0..=8192);
+            let data: Vec<u8> = (0..n).map(|_| g.u8()).collect();
+            let params = *g.choose(&[
+                Ecf8Params::default(),
+                Ecf8Params {
+                    bytes_per_thread: 8,
+                    threads_per_block: 32,
+                },
+                Ecf8Params {
+                    bytes_per_thread: 4,
+                    threads_per_block: 128,
+                },
+            ]);
+            let fmt = *g.choose(&[Fp8Format::E4M3, Fp8Format::E5M2]);
+            let blob = encode(&data, fmt, params);
+            let mut out = vec![0u8; n];
+            let path = if g.bool() { DecodePath::Fast } else { DecodePath::Alg1 };
+            decode_into_path(&blob, &mut out, None, path);
+            assert_eq!(out, data);
+        });
+    }
+
+    #[test]
+    fn property_weightlike_heavy_tail_roundtrip() {
+        property("ecf8 roundtrip on weight-like tensors", 40, |g: &mut Gen| {
+            let ws = g.vec_weights(1..=4096);
+            let data: Vec<u8> = ws
+                .iter()
+                .map(|&w| crate::fp8::F8E4M3::from_f32(w).to_bits())
+                .collect();
+            let blob = encode(&data, Fp8Format::E4M3, Ecf8Params::default());
+            let mut out = vec![0u8; data.len()];
+            decode_into(&blob, &mut out, None);
+            assert_eq!(out, data);
+        });
+    }
+}

@@ -1,0 +1,228 @@
+//! ECF8 encoder (§3.1): Huffman-code the exponent fields, pack the
+//! sign/mantissa nibbles, and emit the synchronization metadata (per-thread
+//! gaps, per-block output positions) that lets thread blocks decode
+//! autonomously.
+
+use super::{Ecf8Blob, Ecf8Params, Fp8Format};
+use crate::huffman::bitstream::BitWriter;
+use crate::huffman::canonical::CanonicalCode;
+use crate::util::stats::shannon_entropy;
+
+/// Histogram of exponent symbols of an FP8 byte tensor.
+pub fn exponent_histogram(data: &[u8], format: Fp8Format) -> Vec<u64> {
+    let mut hist = vec![0u64; format.alphabet_size()];
+    match format {
+        Fp8Format::E4M3 => {
+            // byte-level histogram then fold: touches each byte once and
+            // keeps counters in L1 (perf pass)
+            let bhist = crate::util::stats::byte_histogram(data);
+            for (b, &c) in bhist.iter().enumerate() {
+                hist[(b >> 3) & 0x0F] += c;
+            }
+        }
+        Fp8Format::E5M2 => {
+            let bhist = crate::util::stats::byte_histogram(data);
+            for (b, &c) in bhist.iter().enumerate() {
+                hist[(b >> 2) & 0x1F] += c;
+            }
+        }
+    }
+    hist
+}
+
+/// Shannon entropy (bits/element) of the exponent field of `data` — the
+/// quantity Figure 1 plots per transformer block.
+pub fn exponent_entropy(data: &[u8], format: Fp8Format) -> f64 {
+    shannon_entropy(&exponent_histogram(data, format))
+}
+
+/// Encode an FP8 byte tensor into an [`Ecf8Blob`].
+pub fn encode(data: &[u8], format: Fp8Format, params: Ecf8Params) -> Ecf8Blob {
+    let hist = exponent_histogram(data, format);
+    let code = CanonicalCode::from_frequencies(&hist);
+    encode_with_code(data, format, params, &code)
+}
+
+/// Encode with an externally supplied code book (used by the ablation
+/// benches to measure suboptimal codes, and by the model store to share
+/// one code book across tensors of a layer).
+pub fn encode_with_code(
+    data: &[u8],
+    format: Fp8Format,
+    params: Ecf8Params,
+    code: &CanonicalCode,
+) -> Ecf8Blob {
+    let n_elem = data.len();
+    let bt = params.bytes_per_thread;
+    let window_bits = (bt * 8) as u64;
+
+    // --- streams ---------------------------------------------------------
+    let mut writer = BitWriter::with_capacity(n_elem / 2 + 16);
+    let mut packed = vec![0u8; n_elem.div_ceil(2)];
+    // first element of each pair goes in the high nibble
+    // gap of thread t = bit offset, within t's window, of the first
+    // codeword starting there; first_sym records the matching element
+    // index so block output positions fall out of it.
+    let mut gaps4: Vec<u8> = Vec::new(); // one nibble value per thread (unpacked)
+    let mut first_sym: Vec<u64> = Vec::new();
+
+    for (i, &byte) in data.iter().enumerate() {
+        let (sym, rest) = format.split(byte);
+        packed[i / 2] |= rest << (4 - (i % 2) * 4);
+
+        let p = writer.bit_len();
+        let thread = (p / window_bits) as usize;
+        // a codeword starts in this window; if it's the first, record it
+        while gaps4.len() <= thread {
+            let t = gaps4.len() as u64;
+            // Codeword starts are at most MAX_CODE_LEN(=16) bits apart and
+            // windows are >= 64 bits, so the only window that can be
+            // "entered" here is `thread` itself.
+            debug_assert!(
+                t == thread as u64,
+                "window {t} skipped (no codeword start); window_bits={window_bits}"
+            );
+            let gap = p - t * window_bits;
+            debug_assert!(gap < 16, "gap {gap} does not fit in 4 bits");
+            gaps4.push(gap as u8);
+            first_sym.push(i as u64);
+        }
+        let (c, l) = code.encode(sym as usize);
+        writer.write(c, l);
+    }
+
+    let encoded_bits = writer.bit_len();
+    let mut encoded = writer.finish();
+
+    // --- block geometry + padding ----------------------------------------
+    let n_threads_used = gaps4.len();
+    let tpb = params.threads_per_block;
+    let n_blocks = n_threads_used.div_ceil(tpb).max(1);
+    let n_threads = n_blocks * tpb;
+    // trailing windows own no codeword start
+    gaps4.resize(n_threads, 0);
+    first_sym.resize(n_threads, n_elem as u64);
+    // pad the stream so every thread can load B+2 bytes (we give the
+    // decoder a full 8-byte slack for its u64 window loads)
+    encoded.resize(n_blocks * params.block_bytes() + 8, 0);
+
+    // pack gaps two per byte, even thread in the high nibble (Alg. 1 l.5)
+    let mut gaps = vec![0u8; n_threads.div_ceil(2)];
+    for (t, &g) in gaps4.iter().enumerate() {
+        gaps[t / 2] |= g << (4 - (t % 2) * 4);
+    }
+
+    // outpos[b] = index of the first element whose codeword starts in
+    // block b; outpos[n_blocks] = n_elem (Alg. 1 uses it as the write
+    // bound of the last block).
+    let mut outpos = Vec::with_capacity(n_blocks + 1);
+    for b in 0..n_blocks {
+        outpos.push(first_sym[b * tpb]);
+    }
+    outpos.push(n_elem as u64);
+
+    Ecf8Blob {
+        format,
+        params,
+        n_elem,
+        code_lengths: code.lengths.iter().map(|&l| l as u8).collect(),
+        encoded,
+        encoded_bits,
+        packed,
+        gaps,
+        outpos,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    fn weight_like_bytes(n: usize, seed: u64) -> Vec<u8> {
+        // E4M3 bytes with concentrated exponents (like trained weights)
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        (0..n)
+            .map(|_| {
+                let x = (crate::util::sampling::normal(&mut rng) * 0.05) as f32;
+                crate::fp8::F8E4M3::from_f32(x).to_bits()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn histogram_counts_every_element() {
+        let data = weight_like_bytes(10_000, 1);
+        let hist = exponent_histogram(&data, Fp8Format::E4M3);
+        assert_eq!(hist.iter().sum::<u64>(), 10_000);
+        assert_eq!(hist.len(), 16);
+    }
+
+    #[test]
+    fn entropy_of_concentrated_weights_is_low() {
+        let data = weight_like_bytes(100_000, 2);
+        let h = exponent_entropy(&data, Fp8Format::E4M3);
+        // the paper's Figure 1 band
+        assert!(h > 1.0 && h < 4.0, "H(E)={h}");
+    }
+
+    #[test]
+    fn encode_produces_consistent_metadata() {
+        let data = weight_like_bytes(50_000, 3);
+        let blob = encode(&data, Fp8Format::E4M3, Ecf8Params::default());
+        assert_eq!(blob.n_elem, 50_000);
+        assert_eq!(blob.packed.len(), 25_000);
+        // stream padded to block multiple + slack
+        assert_eq!(
+            blob.encoded.len(),
+            blob.n_blocks() * blob.params.block_bytes() + 8
+        );
+        // outpos monotone, ending at n_elem
+        assert!(blob.outpos.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(*blob.outpos.last().unwrap(), 50_000);
+        assert_eq!(blob.outpos[0], 0);
+        // gaps all < 16 by construction (they're nibbles)
+        assert_eq!(blob.gaps.len(), blob.n_threads().div_ceil(2));
+    }
+
+    #[test]
+    fn compressed_smaller_than_raw_for_weights() {
+        let data = weight_like_bytes(200_000, 4);
+        let blob = encode(&data, Fp8Format::E4M3, Ecf8Params::default());
+        let saving = blob.memory_saving();
+        // exponent entropy ~2-3 bits => ~ (8 - (4 + H)) / 8 = 10..25 %
+        assert!(saving > 0.05, "saving={saving}");
+        assert!(saving < 0.5, "saving={saving}");
+    }
+
+    #[test]
+    fn encode_empty_tensor() {
+        let blob = encode(&[], Fp8Format::E4M3, Ecf8Params::default());
+        assert_eq!(blob.n_elem, 0);
+        assert_eq!(blob.n_blocks(), 1);
+        assert_eq!(blob.outpos, vec![0, 0]);
+    }
+
+    #[test]
+    fn encoded_bits_matches_code_lengths() {
+        let data = weight_like_bytes(10_000, 5);
+        let blob = encode(&data, Fp8Format::E4M3, Ecf8Params::default());
+        let code = blob.code();
+        let expect: u64 = data
+            .iter()
+            .map(|&b| code.encode(Fp8Format::E4M3.split(b).0 as usize).1 as u64)
+            .sum();
+        assert_eq!(blob.encoded_bits, expect);
+    }
+
+    #[test]
+    fn uniform_random_bytes_do_not_compress() {
+        // adversarial input: uniform exponents => H(E) ~ 4 bits; ECF8
+        // should report ~zero / negative saving but remain lossless
+        // (losslessness is asserted in decode tests).
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let data: Vec<u8> = (0..100_000).map(|_| (rng.next_u64() >> 56) as u8).collect();
+        let blob = encode(&data, Fp8Format::E4M3, Ecf8Params::default());
+        assert!(blob.memory_saving() < 0.03, "saving={}", blob.memory_saving());
+    }
+}

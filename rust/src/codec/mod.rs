@@ -1,0 +1,200 @@
+//! The ECF8 lossless compression format (§3).
+//!
+//! An FP8 tensor is split into two streams:
+//!
+//! * the 4-bit **exponent fields**, Huffman-coded (§3.1) into a bitstream
+//!   with per-thread *gap* metadata and per-block *output positions* so
+//!   thread blocks decode autonomously (§3.1 "synchronization metadata");
+//! * the 4-bit **sign/mantissa nibbles**, packed two per byte, stored raw
+//!   (they are near-incompressible: mantissas of trained weights are
+//!   close to uniform).
+//!
+//! [`encode`] builds the streams; [`decode`] reconstructs the original
+//! bytes, bit-exactly, via the block-parallel scheme of Algorithm 1.
+
+pub mod container;
+pub mod decode;
+pub mod encode;
+
+use crate::huffman::canonical::CanonicalCode;
+use crate::huffman::lut::DecodeLut;
+
+/// Which FP8 flavour a blob holds. Determines the exponent alphabet and
+/// the sign/mantissa packing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fp8Format {
+    /// 4-bit exponent, 1+3-bit sign/mantissa nibble (the paper's format).
+    E4M3 = 0,
+    /// 5-bit exponent, 1+2-bit sign/mantissa rest (stored in a nibble).
+    E5M2 = 1,
+}
+
+impl Fp8Format {
+    pub fn alphabet_size(self) -> usize {
+        match self {
+            Fp8Format::E4M3 => 16,
+            Fp8Format::E5M2 => 32,
+        }
+    }
+
+    /// Split an FP8 byte into (exponent symbol, rest nibble).
+    #[inline(always)]
+    pub fn split(self, byte: u8) -> (u8, u8) {
+        match self {
+            Fp8Format::E4M3 => ((byte >> 3) & 0x0F, ((byte >> 4) & 0x08) | (byte & 0x07)),
+            Fp8Format::E5M2 => ((byte >> 2) & 0x1F, ((byte >> 5) & 0x04) | (byte & 0x03)),
+        }
+    }
+
+    /// Reassemble an FP8 byte from (exponent symbol, rest nibble) —
+    /// Algorithm 1 line 24 generalised.
+    #[inline(always)]
+    pub fn assemble(self, sym: u8, rest: u8) -> u8 {
+        match self {
+            Fp8Format::E4M3 => ((rest & 0x08) << 4) | (sym << 3) | (rest & 0x07),
+            Fp8Format::E5M2 => ((rest & 0x04) << 5) | (sym << 2) | (rest & 0x03),
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<Self> {
+        match v {
+            0 => Some(Fp8Format::E4M3),
+            1 => Some(Fp8Format::E5M2),
+            _ => None,
+        }
+    }
+}
+
+/// Block-geometry parameters of the parallel decoder (paper defaults:
+/// B = 8 bytes per thread, T = 256 threads per block).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Ecf8Params {
+    /// B — bytes of the encoded stream owned by one (simulated) thread.
+    pub bytes_per_thread: usize,
+    /// T — threads per block.
+    pub threads_per_block: usize,
+}
+
+impl Default for Ecf8Params {
+    fn default() -> Self {
+        Self {
+            bytes_per_thread: 8,
+            threads_per_block: 256,
+        }
+    }
+}
+
+impl Ecf8Params {
+    pub fn block_bytes(&self) -> usize {
+        self.bytes_per_thread * self.threads_per_block
+    }
+}
+
+/// A compressed tensor: the ECF8 streams plus their metadata.
+#[derive(Debug, Clone)]
+pub struct Ecf8Blob {
+    pub format: Fp8Format,
+    pub params: Ecf8Params,
+    /// number of original FP8 elements
+    pub n_elem: usize,
+    /// canonical Huffman code lengths per exponent symbol (the code book
+    /// is fully determined by these)
+    pub code_lengths: Vec<u8>,
+    /// Huffman bitstream, zero-padded to `n_blocks·T·B + 8` bytes
+    pub encoded: Vec<u8>,
+    /// true bit length of the stream (pre-padding)
+    pub encoded_bits: u64,
+    /// packed rest nibbles, two per byte, first element in the high nibble
+    pub packed: Vec<u8>,
+    /// packed 4-bit per-thread gaps, even thread in the high nibble
+    pub gaps: Vec<u8>,
+    /// per-block cumulative output element counts, length `n_blocks + 1`
+    pub outpos: Vec<u64>,
+}
+
+impl Ecf8Blob {
+    pub fn n_blocks(&self) -> usize {
+        self.outpos.len() - 1
+    }
+
+    pub fn n_threads(&self) -> usize {
+        self.n_blocks() * self.params.threads_per_block
+    }
+
+    /// Compressed payload size in bytes (streams + metadata), the number
+    /// the paper's Table 1 "Memory (GB)" columns report.
+    pub fn compressed_bytes(&self) -> usize {
+        // count the unpadded stream plus all metadata the decoder needs
+        let stream = (self.encoded_bits as usize).div_ceil(8);
+        stream
+            + self.packed.len()
+            + self.gaps.len()
+            + self.outpos.len() * 8
+            + self.code_lengths.len()
+            + container::HEADER_BYTES
+    }
+
+    pub fn compression_ratio(&self) -> f64 {
+        self.n_elem as f64 / self.compressed_bytes() as f64
+    }
+
+    /// Fraction of memory saved vs. raw FP8 (Table 1 "Memory ↓ (%)").
+    pub fn memory_saving(&self) -> f64 {
+        1.0 - self.compressed_bytes() as f64 / self.n_elem as f64
+    }
+
+    /// Rebuild the canonical code book from the stored lengths.
+    pub fn code(&self) -> CanonicalCode {
+        let lengths: Vec<u32> = self.code_lengths.iter().map(|&l| l as u32).collect();
+        CanonicalCode::from_lengths(&lengths).expect("stored lengths are valid")
+    }
+
+    /// Rebuild the decode LUT.
+    pub fn lut(&self) -> DecodeLut {
+        DecodeLut::build(&self.code())
+    }
+}
+
+/// Compress FP8 bytes (default params, E4M3). See [`encode::encode`].
+pub fn compress_fp8(data: &[u8]) -> Ecf8Blob {
+    encode::encode(data, Fp8Format::E4M3, Ecf8Params::default())
+}
+
+/// Decompress into a fresh buffer. See [`decode::decode_into`].
+pub fn decompress_fp8(blob: &Ecf8Blob) -> Vec<u8> {
+    let mut out = vec![0u8; blob.n_elem];
+    decode::decode_into(blob, &mut out, None);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_split_assemble_roundtrip() {
+        for fmt in [Fp8Format::E4M3, Fp8Format::E5M2] {
+            for b in 0..=255u8 {
+                let (sym, rest) = fmt.split(b);
+                assert!(sym < fmt.alphabet_size() as u8);
+                assert!(rest < 16);
+                assert_eq!(fmt.assemble(sym, rest), b, "fmt={fmt:?} byte={b:#04x}");
+            }
+        }
+    }
+
+    #[test]
+    fn format_codes() {
+        assert_eq!(Fp8Format::from_u8(0), Some(Fp8Format::E4M3));
+        assert_eq!(Fp8Format::from_u8(1), Some(Fp8Format::E5M2));
+        assert_eq!(Fp8Format::from_u8(9), None);
+    }
+
+    #[test]
+    fn default_params_match_paper() {
+        let p = Ecf8Params::default();
+        assert_eq!(p.bytes_per_thread, 8);
+        assert_eq!(p.threads_per_block, 256);
+        assert_eq!(p.block_bytes(), 2048);
+    }
+}

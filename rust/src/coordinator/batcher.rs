@@ -1,0 +1,121 @@
+//! Dynamic batcher: accumulate requests until the batch is full (the
+//! scheduler's max batch) or the oldest waiter hits the linger deadline.
+
+use super::request::Request;
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Batching policy + pending queue.
+pub struct DynamicBatcher {
+    pub max_batch: usize,
+    pub linger: Duration,
+    queue: VecDeque<Request>,
+}
+
+impl DynamicBatcher {
+    pub fn new(max_batch: usize, linger: Duration) -> Self {
+        assert!(max_batch > 0);
+        Self {
+            max_batch,
+            linger,
+            queue: VecDeque::new(),
+        }
+    }
+
+    pub fn push(&mut self, r: Request) {
+        self.queue.push_back(r);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Pop a batch if policy says it's time: full batch available, or the
+    /// oldest request has waited past the linger deadline.
+    pub fn pop_batch(&mut self, now: Instant) -> Option<Vec<Request>> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let oldest_wait = now.duration_since(self.queue.front().unwrap().arrived);
+        if self.queue.len() >= self.max_batch || oldest_wait >= self.linger {
+            let n = self.queue.len().min(self.max_batch);
+            return Some(self.queue.drain(..n).collect());
+        }
+        None
+    }
+
+    /// Drain everything in max_batch-sized chunks (shutdown path).
+    pub fn drain_all(&mut self) -> Vec<Vec<Request>> {
+        let mut out = Vec::new();
+        while !self.queue.is_empty() {
+            let n = self.queue.len().min(self.max_batch);
+            out.push(self.queue.drain(..n).collect());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> Request {
+        Request::new(id, vec![0; 4])
+    }
+
+    #[test]
+    fn full_batch_pops_immediately() {
+        let mut b = DynamicBatcher::new(4, Duration::from_secs(10));
+        for i in 0..4 {
+            b.push(req(i));
+        }
+        let batch = b.pop_batch(Instant::now()).unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn partial_batch_waits_for_linger() {
+        let mut b = DynamicBatcher::new(4, Duration::from_millis(50));
+        b.push(req(0));
+        b.push(req(1));
+        assert!(b.pop_batch(Instant::now()).is_none());
+        // simulate deadline passing
+        let later = Instant::now() + Duration::from_millis(60);
+        let batch = b.pop_batch(later).unwrap();
+        assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn overfull_queue_pops_max_batch() {
+        let mut b = DynamicBatcher::new(3, Duration::from_secs(1));
+        for i in 0..8 {
+            b.push(req(i));
+        }
+        let batch = b.pop_batch(Instant::now()).unwrap();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(b.pending(), 5);
+        // ids preserved in FIFO order
+        assert_eq!(batch[0].id, 0);
+        assert_eq!(batch[2].id, 2);
+    }
+
+    #[test]
+    fn drain_all_chunks() {
+        let mut b = DynamicBatcher::new(3, Duration::from_secs(1));
+        for i in 0..7 {
+            b.push(req(i));
+        }
+        let chunks = b.drain_all();
+        assert_eq!(chunks.len(), 3);
+        assert_eq!(chunks[0].len(), 3);
+        assert_eq!(chunks[2].len(), 1);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn empty_queue_pops_nothing() {
+        let mut b = DynamicBatcher::new(4, Duration::from_millis(1));
+        assert!(b.pop_batch(Instant::now()).is_none());
+    }
+}

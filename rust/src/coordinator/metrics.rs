@@ -1,0 +1,103 @@
+//! Serving metrics: latency samples, token/request throughput.
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Accumulated serving statistics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests_served: u64,
+    pub tokens_served: u64,
+    pub batches_executed: u64,
+    pub latencies_s: Vec<f64>,
+    pub batch_sizes: Vec<usize>,
+    started: Option<Instant>,
+    finished: Option<Instant>,
+}
+
+impl Metrics {
+    pub fn start(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    pub fn finish(&mut self) {
+        self.finished = Some(Instant::now());
+    }
+
+    pub fn record_batch(&mut self, batch_size: usize, tokens: u64, per_request_latency: &[f64]) {
+        self.batches_executed += 1;
+        self.requests_served += batch_size as u64;
+        self.tokens_served += tokens;
+        self.batch_sizes.push(batch_size);
+        self.latencies_s.extend_from_slice(per_request_latency);
+    }
+
+    pub fn wall_seconds(&self) -> f64 {
+        match (self.started, self.finished) {
+            (Some(s), Some(f)) => f.duration_since(s).as_secs_f64(),
+            (Some(s), None) => s.elapsed().as_secs_f64(),
+            _ => 0.0,
+        }
+    }
+
+    pub fn tokens_per_second(&self) -> f64 {
+        let w = self.wall_seconds();
+        if w <= 0.0 {
+            return 0.0;
+        }
+        self.tokens_served as f64 / w
+    }
+
+    pub fn requests_per_second(&self) -> f64 {
+        let w = self.wall_seconds();
+        if w <= 0.0 {
+            return 0.0;
+        }
+        self.requests_served as f64 / w
+    }
+
+    pub fn latency_summary(&self) -> Option<Summary> {
+        if self.latencies_s.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&self.latencies_s))
+        }
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            return 0.0;
+        }
+        self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarises() {
+        let mut m = Metrics::default();
+        m.start();
+        m.record_batch(4, 128, &[0.1, 0.2, 0.3, 0.4]);
+        m.record_batch(2, 64, &[0.5, 0.6]);
+        m.finish();
+        assert_eq!(m.requests_served, 6);
+        assert_eq!(m.tokens_served, 192);
+        assert_eq!(m.batches_executed, 2);
+        assert!((m.mean_batch_size() - 3.0).abs() < 1e-9);
+        let s = m.latency_summary().unwrap();
+        assert_eq!(s.n, 6);
+        assert!(m.tokens_per_second() > 0.0);
+        assert!(m.requests_per_second() > 0.0);
+    }
+
+    #[test]
+    fn empty_metrics_are_safe() {
+        let m = Metrics::default();
+        assert_eq!(m.tokens_per_second(), 0.0);
+        assert!(m.latency_summary().is_none());
+        assert_eq!(m.mean_batch_size(), 0.0);
+    }
+}

@@ -1,0 +1,26 @@
+//! The serving coordinator — L3's request path.
+//!
+//! The paper's throughput results (Tables 1–2) come from one mechanism:
+//! smaller weights leave more memory for KV-cache/activations, so the
+//! scheduler admits bigger batches. This module implements that pipeline:
+//!
+//! * [`request`] — request/response types;
+//! * [`scheduler`] — the memory model: weights + per-request KV/activation
+//!   cost → max admissible batch under a byte budget (Table 2's
+//!   "Max Batch Size" column);
+//! * [`batcher`] — dynamic batching: close a batch when full or when the
+//!   oldest request exceeds the linger deadline;
+//! * [`server`] — the std-thread event loop tying router → batcher →
+//!   JIT-decompress → PJRT execute, with metrics;
+//! * [`metrics`] — latency/throughput counters.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+pub mod server;
+
+pub use batcher::DynamicBatcher;
+pub use request::{Request, Response};
+pub use scheduler::{MemoryModel, ServingPlan};
+pub use server::{ServeConfig, Server};

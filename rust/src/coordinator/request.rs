@@ -1,0 +1,46 @@
+//! Request/response types for the serving loop.
+
+use std::time::Instant;
+
+/// A scoring/prefill request: a fixed-length token window (DESIGN.md
+/// "Substitutions": stands in for the paper's 1024-token generation
+/// batches; the batch-size-vs-memory mechanism is identical).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub arrived: Instant,
+}
+
+impl Request {
+    pub fn new(id: u64, tokens: Vec<i32>) -> Self {
+        Self {
+            id,
+            tokens,
+            arrived: Instant::now(),
+        }
+    }
+}
+
+/// The served result: per-request logits for the final position.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    /// queueing + execution latency
+    pub latency_s: f64,
+    /// batch this request was served in
+    pub batch_size: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_records_arrival() {
+        let r = Request::new(7, vec![1, 2, 3]);
+        assert_eq!(r.id, 7);
+        assert!(r.arrived.elapsed().as_secs_f64() < 1.0);
+    }
+}

@@ -1,0 +1,185 @@
+//! The serving event loop: router → dynamic batcher → JIT-decompressed
+//! PJRT execution → responses.
+//!
+//! Single-threaded reactor design (PJRT executables are driven from one
+//! thread; decode parallelism lives inside the block-parallel decoder's
+//! pool). Producers call [`Server::submit`]; [`Server::tick`] advances
+//! the loop; [`Server::drain`] flushes at shutdown. The serve example and
+//! Table-2 bench drive open/closed-loop arrival patterns through this
+//! API.
+
+use super::batcher::DynamicBatcher;
+use super::metrics::Metrics;
+use super::request::{Request, Response};
+use crate::runtime::executor::{LlmExecutor, SEQ_LEN};
+use anyhow::Result;
+use std::time::{Duration, Instant};
+
+/// Serving configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// scheduler-admitted max batch (from `ServingPlan`)
+    pub max_batch: usize,
+    /// batch linger deadline
+    pub linger: Duration,
+}
+
+/// Batch sizes the AOT artifacts were lowered for (aot.py LLM_BATCHES).
+pub const COMPILED_BATCHES: [usize; 5] = [1, 2, 4, 8, 16];
+
+/// Largest compiled batch ≤ `want` (artifacts are fixed-shape).
+pub fn compiled_batch_for(want: usize) -> usize {
+    COMPILED_BATCHES
+        .iter()
+        .copied()
+        .filter(|&b| b <= want.max(1))
+        .max()
+        .unwrap_or(1)
+}
+
+/// The server: owns the executor, the batcher, and the metrics.
+pub struct Server {
+    pub executor: LlmExecutor,
+    batcher: DynamicBatcher,
+    pub metrics: Metrics,
+    exec_batch: usize,
+}
+
+impl Server {
+    pub fn new(executor: LlmExecutor, cfg: ServeConfig) -> Self {
+        let exec_batch = compiled_batch_for(cfg.max_batch);
+        let mut metrics = Metrics::default();
+        metrics.start();
+        Self {
+            executor,
+            batcher: DynamicBatcher::new(exec_batch, cfg.linger),
+            metrics,
+            exec_batch,
+        }
+    }
+
+    /// The batch size actually executed (largest compiled ≤ admitted).
+    pub fn exec_batch(&self) -> usize {
+        self.exec_batch
+    }
+
+    pub fn submit(&mut self, r: Request) {
+        self.batcher.push(r);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.batcher.pending()
+    }
+
+    /// Advance the loop: if a batch is due, execute it and return the
+    /// responses. Returns an empty vec when nothing was due.
+    pub fn tick(&mut self) -> Result<Vec<Response>> {
+        match self.batcher.pop_batch(Instant::now()) {
+            Some(batch) => self.execute_batch(batch),
+            None => Ok(Vec::new()),
+        }
+    }
+
+    /// Flush every pending request (shutdown path).
+    pub fn drain(&mut self) -> Result<Vec<Response>> {
+        let mut out = Vec::new();
+        for batch in self.batcher.drain_all() {
+            out.extend(self.execute_batch(batch)?);
+        }
+        self.metrics.finish();
+        Ok(out)
+    }
+
+    fn execute_batch(&mut self, batch: Vec<Request>) -> Result<Vec<Response>> {
+        let real = batch.len();
+        let b = self.exec_batch;
+        debug_assert!(real <= b);
+        // pad to the compiled shape with zero tokens
+        let mut tokens = vec![0i32; b * SEQ_LEN];
+        for (i, r) in batch.iter().enumerate() {
+            assert_eq!(r.tokens.len(), SEQ_LEN, "request token window");
+            tokens[i * SEQ_LEN..(i + 1) * SEQ_LEN].copy_from_slice(&r.tokens);
+        }
+        let logits = self.executor.forward(&tokens, b)?;
+        let vocab = self.executor.cfg.vocab;
+        let now = Instant::now();
+        let mut latencies = Vec::with_capacity(real);
+        let responses: Vec<Response> = batch
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let lat = now.duration_since(r.arrived).as_secs_f64();
+                latencies.push(lat);
+                Response {
+                    id: r.id,
+                    logits: logits[i * vocab..(i + 1) * vocab].to_vec(),
+                    latency_s: lat,
+                    batch_size: real,
+                }
+            })
+            .collect();
+        self.metrics
+            .record_batch(real, (real * SEQ_LEN) as u64, &latencies);
+        Ok(responses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::tiny_llm;
+    use crate::model::store::CompressedModel;
+    use crate::runtime::pjrt::PjrtRuntime;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn compiled_batch_selection() {
+        assert_eq!(compiled_batch_for(0), 1);
+        assert_eq!(compiled_batch_for(1), 1);
+        assert_eq!(compiled_batch_for(3), 2);
+        assert_eq!(compiled_batch_for(8), 8);
+        assert_eq!(compiled_batch_for(13), 8);
+        assert_eq!(compiled_batch_for(64), 16);
+    }
+
+    #[test]
+    fn serve_roundtrip_tiny_model() {
+        let dir = PjrtRuntime::default_dir();
+        if !dir.join("MANIFEST.txt").exists() {
+            eprintln!("skipping: artifacts missing");
+            return;
+        }
+        let cfg = tiny_llm();
+        let model = CompressedModel::synthesize(&cfg, 3, None);
+        let ex = LlmExecutor::new(cfg.clone(), model, dir, None).unwrap();
+        let mut server = Server::new(
+            ex,
+            ServeConfig {
+                max_batch: 2,
+                linger: Duration::from_millis(1),
+            },
+        );
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let mut mk = |id: u64| {
+            Request::new(
+                id,
+                (0..SEQ_LEN)
+                    .map(|_| rng.next_below(cfg.vocab as u64) as i32)
+                    .collect(),
+            )
+        };
+        server.submit(mk(0));
+        server.submit(mk(1));
+        server.submit(mk(2));
+        let r1 = server.tick().unwrap(); // full batch of 2
+        assert_eq!(r1.len(), 2);
+        assert_eq!(r1[0].id, 0);
+        assert_eq!(r1[0].logits.len(), cfg.vocab);
+        let r2 = server.drain().unwrap(); // padded partial batch
+        assert_eq!(r2.len(), 1);
+        assert_eq!(r2[0].id, 2);
+        assert!(r2[0].logits.iter().all(|x| x.is_finite()));
+        assert_eq!(server.metrics.requests_served, 3);
+        assert!(server.metrics.tokens_per_second() > 0.0);
+    }
+}

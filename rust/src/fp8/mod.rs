@@ -1,0 +1,491 @@
+//! Low-precision floating-point formats at the bit level (§2 preliminary).
+//!
+//! ECF8 compresses the *fields* of FP8 numbers: the 4-bit exponent field is
+//! entropy-coded, the sign+mantissa bits are packed raw. This module
+//! provides the two standard FP8 formats (E4M3 per Micikevicius et al.,
+//! E5M2 = "half of a half") and BF16 (for the DFloat11 baseline), each with
+//! exact f32 conversion and field accessors.
+//!
+//! E4M3 layout: `s eeee mmm`, bias 7. Specials follow the OCP/NVIDIA
+//! variant: exponent field 15 with mantissa 111 is NaN; there is **no**
+//! infinity — |max| = S.1111.110 = 448. Subnormals: exponent field 0,
+//! value = ±m/8 · 2^-6.
+
+/// An FP8 E4M3 value, stored as its raw byte.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+#[repr(transparent)]
+pub struct F8E4M3(pub u8);
+
+/// An FP8 E5M2 value, stored as its raw byte.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+#[repr(transparent)]
+pub struct F8E5M2(pub u8);
+
+/// A BF16 value, stored as its raw u16 (upper half of an f32).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+#[repr(transparent)]
+pub struct BF16(pub u16);
+
+impl F8E4M3 {
+    pub const EXP_BITS: u32 = 4;
+    pub const MAN_BITS: u32 = 3;
+    pub const BIAS: i32 = 7;
+    /// Largest finite magnitude (0x7E = 0.1111.110).
+    pub const MAX: f32 = 448.0;
+    pub const NAN: F8E4M3 = F8E4M3(0x7F);
+
+    #[inline]
+    pub fn from_bits(b: u8) -> Self {
+        F8E4M3(b)
+    }
+
+    #[inline]
+    pub fn to_bits(self) -> u8 {
+        self.0
+    }
+
+    /// Sign bit (0 or 1).
+    #[inline]
+    pub fn sign(self) -> u8 {
+        self.0 >> 7
+    }
+
+    /// Raw 4-bit exponent field (0..=15). This is the symbol ECF8
+    /// entropy-codes.
+    #[inline]
+    pub fn exponent_field(self) -> u8 {
+        (self.0 >> 3) & 0x0F
+    }
+
+    /// Raw 3-bit mantissa field.
+    #[inline]
+    pub fn mantissa_field(self) -> u8 {
+        self.0 & 0x07
+    }
+
+    /// The packed sign/mantissa nibble `s mmm` the ECF8 container stores
+    /// verbatim (Algorithm 1's `packed` stream).
+    #[inline]
+    pub fn sign_mantissa_nibble(self) -> u8 {
+        ((self.0 >> 4) & 0x08) | (self.0 & 0x07)
+    }
+
+    /// Reassemble from an exponent field and a sign/mantissa nibble.
+    #[inline]
+    pub fn from_fields(exp_field: u8, sign_man_nibble: u8) -> Self {
+        debug_assert!(exp_field < 16 && sign_man_nibble < 16);
+        F8E4M3(((sign_man_nibble & 0x08) << 4) | (exp_field << 3) | (sign_man_nibble & 0x07))
+    }
+
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7F) == 0x7F
+    }
+
+    /// Exact conversion to f32 (every E4M3 value is representable).
+    pub fn to_f32(self) -> f32 {
+        let s = if self.sign() == 1 { -1.0f32 } else { 1.0 };
+        let e = self.exponent_field() as i32;
+        let m = self.mantissa_field() as f32;
+        if self.is_nan() {
+            return f32::NAN;
+        }
+        if e == 0 {
+            // subnormal: ±(m/8) · 2^{1-bias}
+            s * (m / 8.0) * (2.0f32).powi(1 - Self::BIAS)
+        } else {
+            s * (1.0 + m / 8.0) * (2.0f32).powi(e - Self::BIAS)
+        }
+    }
+
+    /// Round-to-nearest-even conversion from f32, saturating to ±MAX
+    /// (matches PyTorch's `to(torch.float8_e4m3fn)` semantics).
+    pub fn from_f32(x: f32) -> Self {
+        if x.is_nan() {
+            return Self::NAN;
+        }
+        let sign = if x.is_sign_negative() { 0x80u8 } else { 0 };
+        let a = x.abs();
+        if a == 0.0 {
+            return F8E4M3(sign);
+        }
+        if a >= 464.0 {
+            // midpoint between 448 (max) and the would-be 480: values
+            // >= 464 would round up past MAX; saturate.
+            return F8E4M3(sign | 0x7E);
+        }
+        // scale into E4M3's grid: find e such that a = (1+f) 2^(e-7)
+        let bits = a.to_bits();
+        let exp32 = ((bits >> 23) & 0xFF) as i32 - 127;
+        let e = exp32 + Self::BIAS; // target biased exponent
+        if e >= 16 {
+            return F8E4M3(sign | 0x7E); // saturate (covers a < 464, e.g. 460 -> 448)
+        }
+        if e <= 0 {
+            // subnormal target: quantise a / 2^{1-bias} * 8 = a * 2^{bias-1} * 8
+            let q = a * (2.0f32).powi(Self::BIAS - 1) * 8.0;
+            let r = round_nearest_even(q);
+            if r >= 8.0 {
+                return F8E4M3(sign | (1 << 3)); // rounds up into normal range
+            }
+            if r <= 0.0 {
+                return F8E4M3(sign);
+            }
+            return F8E4M3(sign | (r as u8));
+        }
+        // normal target: mantissa fraction in [0,1) scaled by 8
+        let frac = f32::from_bits((bits & 0x007F_FFFF) | 0x3F80_0000) - 1.0; // [0,1)
+        let q = frac * 8.0;
+        let mut m = round_nearest_even(q) as u32;
+        let mut e = e as u32;
+        if m >= 8 {
+            m = 0;
+            e += 1;
+            if e >= 16 || (e == 15 && m == 7) {
+                return F8E4M3(sign | 0x7E);
+            }
+        }
+        if e == 15 && m == 7 {
+            // would collide with NaN encoding; round down to max finite
+            return F8E4M3(sign | 0x7E);
+        }
+        F8E4M3(sign | ((e as u8) << 3) | (m as u8))
+    }
+}
+
+#[inline]
+fn round_nearest_even(x: f32) -> f32 {
+    let r = x.round();
+    if (x - x.trunc()).abs() == 0.5 {
+        // halfway: round to even
+        let f = x.floor();
+        if (f as i64) % 2 == 0 {
+            f
+        } else {
+            f + 1.0
+        }
+    } else {
+        r
+    }
+}
+
+impl F8E5M2 {
+    pub const EXP_BITS: u32 = 5;
+    pub const MAN_BITS: u32 = 2;
+    pub const BIAS: i32 = 15;
+    pub const MAX: f32 = 57344.0;
+
+    #[inline]
+    pub fn from_bits(b: u8) -> Self {
+        F8E5M2(b)
+    }
+
+    #[inline]
+    pub fn to_bits(self) -> u8 {
+        self.0
+    }
+
+    #[inline]
+    pub fn sign(self) -> u8 {
+        self.0 >> 7
+    }
+
+    /// Raw 5-bit exponent field (0..=31).
+    #[inline]
+    pub fn exponent_field(self) -> u8 {
+        (self.0 >> 2) & 0x1F
+    }
+
+    #[inline]
+    pub fn mantissa_field(self) -> u8 {
+        self.0 & 0x03
+    }
+
+    pub fn is_nan(self) -> bool {
+        self.exponent_field() == 31 && self.mantissa_field() != 0
+    }
+
+    pub fn is_infinite(self) -> bool {
+        self.exponent_field() == 31 && self.mantissa_field() == 0
+    }
+
+    /// Exact conversion to f32. E5M2 is a true IEEE mini-float (with Inf).
+    pub fn to_f32(self) -> f32 {
+        let s = if self.sign() == 1 { -1.0f32 } else { 1.0 };
+        let e = self.exponent_field() as i32;
+        let m = self.mantissa_field() as f32;
+        if e == 31 {
+            return if m == 0.0 { s * f32::INFINITY } else { f32::NAN };
+        }
+        if e == 0 {
+            s * (m / 4.0) * (2.0f32).powi(1 - Self::BIAS)
+        } else {
+            s * (1.0 + m / 4.0) * (2.0f32).powi(e - Self::BIAS)
+        }
+    }
+
+    /// E5M2 from f32 — exact truncation path via f16-style rounding:
+    /// round-to-nearest-even in the 2-bit mantissa, overflow to Inf.
+    pub fn from_f32(x: f32) -> Self {
+        if x.is_nan() {
+            return F8E5M2(0x7F);
+        }
+        let sign = if x.is_sign_negative() { 0x80u8 } else { 0 };
+        let a = x.abs();
+        if a == 0.0 {
+            return F8E5M2(sign);
+        }
+        if a.is_infinite() || a >= 61440.0 {
+            return F8E5M2(sign | 0x7C); // Inf
+        }
+        let bits = a.to_bits();
+        let exp32 = ((bits >> 23) & 0xFF) as i32 - 127;
+        let e = exp32 + Self::BIAS;
+        if e <= 0 {
+            let q = a * (2.0f32).powi(Self::BIAS - 1) * 4.0;
+            let r = round_nearest_even(q);
+            if r >= 4.0 {
+                return F8E5M2(sign | (1 << 2));
+            }
+            if r <= 0.0 {
+                return F8E5M2(sign);
+            }
+            return F8E5M2(sign | (r as u8));
+        }
+        let frac = f32::from_bits((bits & 0x007F_FFFF) | 0x3F80_0000) - 1.0;
+        let mut m = round_nearest_even(frac * 4.0) as u32;
+        let mut e = e as u32;
+        if m >= 4 {
+            m = 0;
+            e += 1;
+        }
+        if e >= 31 {
+            return F8E5M2(sign | 0x7C);
+        }
+        F8E5M2(sign | ((e as u8) << 2) | (m as u8))
+    }
+}
+
+impl BF16 {
+    pub const EXP_BITS: u32 = 8;
+    pub const MAN_BITS: u32 = 7;
+
+    #[inline]
+    pub fn from_bits(b: u16) -> Self {
+        BF16(b)
+    }
+
+    #[inline]
+    pub fn to_bits(self) -> u16 {
+        self.0
+    }
+
+    /// Raw 8-bit exponent field — the symbol DFloat11 entropy-codes.
+    #[inline]
+    pub fn exponent_field(self) -> u8 {
+        ((self.0 >> 7) & 0xFF) as u8
+    }
+
+    #[inline]
+    pub fn sign(self) -> u8 {
+        (self.0 >> 15) as u8
+    }
+
+    #[inline]
+    pub fn mantissa_field(self) -> u8 {
+        (self.0 & 0x7F) as u8
+    }
+
+    /// Truncating conversion (the standard BF16 cast used in training).
+    pub fn from_f32_truncate(x: f32) -> Self {
+        BF16((x.to_bits() >> 16) as u16)
+    }
+
+    /// Round-to-nearest-even conversion.
+    pub fn from_f32(x: f32) -> Self {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            return BF16(((bits >> 16) as u16) | 0x0040); // quiet
+        }
+        let round_bit = (bits >> 15) & 1;
+        let sticky = bits & 0x7FFF;
+        let mut hi = (bits >> 16) as u16;
+        if round_bit == 1 && (sticky != 0 || (hi & 1) == 1) {
+            hi = hi.wrapping_add(1);
+        }
+        BF16(hi)
+    }
+
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+}
+
+/// Bulk conversions over raw byte tensors (used by weight generation and
+/// the runtime's decode-to-f32 path).
+pub fn e4m3_bytes_to_f32(src: &[u8], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len());
+    // table-driven: one 256-entry LUT beats per-element branching
+    let lut = e4m3_f32_table();
+    for (d, &s) in dst.iter_mut().zip(src.iter()) {
+        *d = lut[s as usize];
+    }
+}
+
+/// All 256 E4M3 values as f32 (NaNs included).
+pub fn e4m3_f32_table() -> &'static [f32; 256] {
+    use once_cell::sync::Lazy;
+    static TABLE: Lazy<[f32; 256]> = Lazy::new(|| {
+        let mut t = [0.0f32; 256];
+        for b in 0..=255u8 {
+            t[b as usize] = F8E4M3(b).to_f32();
+        }
+        t
+    });
+    &TABLE
+}
+
+/// Cast an f32 slice to E4M3 bytes (round-nearest-even, saturating).
+pub fn f32_to_e4m3_bytes(src: &[f32], dst: &mut [u8]) {
+    assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src.iter()) {
+        *d = F8E4M3::from_f32(s).to_bits();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e4m3_known_values() {
+        assert_eq!(F8E4M3::from_f32(1.0).to_bits(), 0x38); // e=7,m=0
+        assert_eq!(F8E4M3::from_f32(-1.0).to_bits(), 0xB8);
+        assert_eq!(F8E4M3::from_f32(448.0).to_bits(), 0x7E);
+        assert_eq!(F8E4M3::from_f32(0.0).to_bits(), 0x00);
+        assert_eq!(F8E4M3::from_f32(-0.0).to_bits(), 0x80);
+        assert_eq!(F8E4M3(0x38).to_f32(), 1.0);
+        assert_eq!(F8E4M3(0x7E).to_f32(), 448.0);
+        // smallest subnormal = 2^-9
+        assert_eq!(F8E4M3(0x01).to_f32(), 2.0f32.powi(-9));
+    }
+
+    #[test]
+    fn e4m3_nan_and_saturation() {
+        assert!(F8E4M3::from_f32(f32::NAN).is_nan());
+        assert!(F8E4M3::from_f32(f32::NAN).to_f32().is_nan());
+        assert_eq!(F8E4M3::from_f32(1e9).to_f32(), 448.0);
+        assert_eq!(F8E4M3::from_f32(f32::INFINITY).to_f32(), 448.0);
+        assert_eq!(F8E4M3::from_f32(-1e9).to_f32(), -448.0);
+    }
+
+    #[test]
+    fn e4m3_roundtrip_all_256() {
+        // Every E4M3 bit pattern must round-trip exactly through f32.
+        for b in 0..=255u8 {
+            let v = F8E4M3(b);
+            if v.is_nan() {
+                assert!(F8E4M3::from_f32(v.to_f32()).is_nan());
+                continue;
+            }
+            let back = F8E4M3::from_f32(v.to_f32());
+            // -0.0/+0.0 keep their sign bit
+            assert_eq!(back.to_bits(), b, "bits {b:#04x} -> {} -> {:#04x}", v.to_f32(), back.to_bits());
+        }
+    }
+
+    #[test]
+    fn e4m3_field_extraction_and_reassembly() {
+        for b in 0..=255u8 {
+            let v = F8E4M3(b);
+            let re = F8E4M3::from_fields(v.exponent_field(), v.sign_mantissa_nibble());
+            assert_eq!(re.to_bits(), b);
+        }
+    }
+
+    #[test]
+    fn e4m3_rounding_nearest_even() {
+        // halfway between 1.0 (m=0) and 1.125 (m=1) is 1.0625 -> even (m=0)
+        assert_eq!(F8E4M3::from_f32(1.0625).to_bits(), 0x38);
+        // halfway between 1.125 and 1.25 -> even (m=2)
+        assert_eq!(F8E4M3::from_f32(1.1875).to_bits(), 0x3A);
+    }
+
+    #[test]
+    fn e4m3_subnormals() {
+        let tiny = 2.0f32.powi(-9); // smallest subnormal
+        assert_eq!(F8E4M3::from_f32(tiny).to_bits(), 0x01);
+        assert_eq!(F8E4M3::from_f32(tiny * 7.0).to_bits(), 0x07);
+        // just below half the smallest subnormal flushes to zero
+        assert_eq!(F8E4M3::from_f32(tiny * 0.49).to_bits(), 0x00);
+        // largest subnormal + half step rounds into normals
+        let x = 2.0f32.powi(-6) * (7.5 / 8.0);
+        assert_eq!(F8E4M3::from_f32(x).to_bits(), 0x08);
+    }
+
+    #[test]
+    fn e5m2_known_values() {
+        assert_eq!(F8E5M2::from_f32(1.0).to_bits(), 0x3C); // e=15,m=0
+        assert_eq!(F8E5M2(0x3C).to_f32(), 1.0);
+        assert!(F8E5M2::from_f32(f32::INFINITY).is_infinite());
+        assert!(F8E5M2::from_f32(1e9).is_infinite());
+        assert!(F8E5M2::from_f32(f32::NAN).is_nan());
+        assert_eq!(F8E5M2::from_f32(57344.0).to_f32(), 57344.0);
+    }
+
+    #[test]
+    fn e5m2_roundtrip_all_finite() {
+        for b in 0..=255u8 {
+            let v = F8E5M2(b);
+            if v.is_nan() {
+                continue;
+            }
+            let back = F8E5M2::from_f32(v.to_f32());
+            assert_eq!(back.to_bits(), b, "bits {b:#04x}");
+        }
+    }
+
+    #[test]
+    fn bf16_roundtrip_and_fields() {
+        let x = 3.140625f32; // exactly representable in bf16? check round trip stability
+        let b = BF16::from_f32(x);
+        let x2 = b.to_f32();
+        let b2 = BF16::from_f32(x2);
+        assert_eq!(b.to_bits(), b2.to_bits());
+        assert_eq!(BF16::from_f32(1.0).exponent_field(), 127);
+        assert_eq!(BF16::from_f32(-2.0).sign(), 1);
+        assert_eq!(BF16::from_f32(2.0).exponent_field(), 128);
+    }
+
+    #[test]
+    fn bf16_round_nearest_even() {
+        // 1 + 2^-8 is exactly halfway between bf16(1.0) and the next value;
+        // even mantissa (0) wins.
+        let x = 1.0 + 2f32.powi(-8);
+        assert_eq!(BF16::from_f32(x).to_bits(), BF16::from_f32(1.0).to_bits());
+        // slightly above halfway rounds up
+        let y = 1.0 + 2f32.powi(-8) + 2f32.powi(-12);
+        assert_eq!(BF16::from_f32(y).to_bits(), BF16::from_f32(1.0).to_bits() + 1);
+    }
+
+    #[test]
+    fn bulk_conversion_matches_scalar() {
+        let bytes: Vec<u8> = (0..=255u8).filter(|b| !F8E4M3(*b).is_nan()).collect();
+        let mut out = vec![0f32; bytes.len()];
+        e4m3_bytes_to_f32(&bytes, &mut out);
+        for (i, &b) in bytes.iter().enumerate() {
+            assert_eq!(out[i], F8E4M3(b).to_f32());
+        }
+        let mut back = vec![0u8; bytes.len()];
+        f32_to_e4m3_bytes(&out, &mut back);
+        assert_eq!(back, bytes);
+    }
+
+    #[test]
+    fn exponent_field_is_high_nibble_sans_sign() {
+        let v = F8E4M3(0b1_1010_011);
+        assert_eq!(v.sign(), 1);
+        assert_eq!(v.exponent_field(), 0b1010);
+        assert_eq!(v.mantissa_field(), 0b011);
+        assert_eq!(v.sign_mantissa_nibble(), 0b1011);
+    }
+}

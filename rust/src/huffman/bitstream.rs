@@ -1,0 +1,180 @@
+//! MSB-first bit stream writer/reader.
+//!
+//! The ECF8 bitstream is written most-significant-bit first so that the
+//! decoder's 64-bit sliding window (`L` in Algorithm 1) can index the
+//! lookup table with a plain `L >> 56`.
+
+/// Append-only MSB-first bit writer.
+#[derive(Debug, Default, Clone)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// bits already written into the (not yet pushed) accumulator
+    acc: u64,
+    acc_bits: u32,
+    total_bits: u64,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(bytes: usize) -> Self {
+        Self {
+            buf: Vec::with_capacity(bytes),
+            ..Self::default()
+        }
+    }
+
+    /// Write the low `len` bits of `code`, MSB of the code first.
+    #[inline]
+    pub fn write(&mut self, code: u32, len: u32) {
+        debug_assert!(len <= 32 && (len == 32 || code < (1 << len)));
+        self.total_bits += len as u64;
+        self.acc = (self.acc << len) | code as u64;
+        self.acc_bits += len;
+        while self.acc_bits >= 8 {
+            self.acc_bits -= 8;
+            self.buf.push((self.acc >> self.acc_bits) as u8);
+        }
+    }
+
+    /// Total bits written so far (pre-padding).
+    pub fn bit_len(&self) -> u64 {
+        self.total_bits
+    }
+
+    /// Flush, zero-padding the final partial byte, and return the bytes.
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.acc_bits > 0 {
+            let pad = 8 - self.acc_bits;
+            self.acc <<= pad;
+            self.buf.push(self.acc as u8);
+            self.acc_bits = 0;
+        }
+        self.buf
+    }
+}
+
+/// MSB-first bit reader over a byte slice. Reads past the end return zero
+/// bits (mirrors the zero-padded encoded buffer the decoder loads).
+#[derive(Debug, Clone)]
+pub struct BitReader<'a> {
+    data: &'a [u8],
+    /// absolute bit cursor
+    pos: u64,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(data: &'a [u8]) -> Self {
+        Self { data, pos: 0 }
+    }
+
+    pub fn at(data: &'a [u8], bit_pos: u64) -> Self {
+        Self { data, pos: bit_pos }
+    }
+
+    pub fn bit_pos(&self) -> u64 {
+        self.pos
+    }
+
+    /// Peek the next 16 bits (zero-extended past the end) without
+    /// consuming.
+    #[inline]
+    pub fn peek16(&self) -> u16 {
+        let byte = (self.pos / 8) as usize;
+        let shift = (self.pos % 8) as u32;
+        let mut window: u32 = 0;
+        for i in 0..3usize {
+            let b = self.data.get(byte + i).copied().unwrap_or(0);
+            window = (window << 8) | b as u32;
+        }
+        ((window >> (8 - shift)) & 0xFFFF) as u16
+    }
+
+    /// Consume `n` bits.
+    #[inline]
+    pub fn skip(&mut self, n: u32) {
+        self.pos += n as u64;
+    }
+
+    /// Read `n <= 16` bits MSB-first.
+    #[inline]
+    pub fn read(&mut self, n: u32) -> u16 {
+        debug_assert!(n <= 16);
+        let v = self.peek16() >> (16 - n.max(1));
+        let v = if n == 0 { 0 } else { v };
+        self.skip(n);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_then_read_roundtrip() {
+        let mut w = BitWriter::new();
+        let items: [(u32, u32); 6] = [(0b1, 1), (0b0, 1), (0b101, 3), (0xFFFF, 16), (0, 7), (0b11, 2)];
+        for (c, l) in items {
+            w.write(c, l);
+        }
+        let total: u64 = items.iter().map(|&(_, l)| l as u64).sum();
+        assert_eq!(w.bit_len(), total);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for (c, l) in items {
+            assert_eq!(r.read(l) as u32, c, "len {l}");
+        }
+    }
+
+    #[test]
+    fn msb_first_layout() {
+        let mut w = BitWriter::new();
+        w.write(0b1, 1);
+        w.write(0b0, 1);
+        w.write(0b11, 2);
+        let bytes = w.finish();
+        assert_eq!(bytes, vec![0b1011_0000]);
+    }
+
+    #[test]
+    fn reads_past_end_are_zero() {
+        let bytes = vec![0xFFu8];
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read(8), 0xFF);
+        assert_eq!(r.read(16), 0);
+        assert_eq!(r.read(5), 0);
+    }
+
+    #[test]
+    fn peek_does_not_consume() {
+        let bytes = vec![0b1010_1010u8, 0b1100_1100];
+        let r = BitReader::new(&bytes);
+        assert_eq!(r.peek16(), 0b1010_1010_1100_1100);
+        assert_eq!(r.peek16(), 0b1010_1010_1100_1100);
+    }
+
+    #[test]
+    fn unaligned_peek() {
+        let bytes = vec![0b1010_1010u8, 0b1100_1100, 0b1111_0000];
+        let mut r = BitReader::new(&bytes);
+        r.skip(3);
+        assert_eq!(r.peek16(), 0b0101_0110_0110_0111);
+    }
+
+    #[test]
+    fn writer_crosses_accumulator_boundaries() {
+        // many 13-bit writes exercise the acc flush loop
+        let mut w = BitWriter::new();
+        for i in 0..100u32 {
+            w.write(i % (1 << 13), 13);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for i in 0..100u32 {
+            assert_eq!(r.read(13) as u32, i % (1 << 13));
+        }
+    }
+}

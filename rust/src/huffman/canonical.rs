@@ -1,0 +1,197 @@
+//! Canonical code assignment and the 16-bit length limit (§3.1).
+//!
+//! The paper constrains codes to ≤ 16 bits for GPU decoding, "requiring
+//! frequency adjustment for rare symbols while preserving near-optimality"
+//! — implemented here as the same iterative halving of frequencies until
+//! the Huffman depth fits. For ECF8's 16-symbol exponent alphabet the
+//! limit can never bind (depth ≤ 15); it matters for the 256-symbol BF16
+//! baseline.
+
+use super::tree;
+
+/// Maximum code length the decoder's 64-bit window supports (paper: 16).
+pub const MAX_CODE_LEN: u32 = 16;
+
+/// A canonical Huffman code book: for each symbol, a length (0 = absent)
+/// and the canonical codeword (MSB-aligned in the low `len` bits).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CanonicalCode {
+    pub lengths: Vec<u32>,
+    pub codes: Vec<u32>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CodeError {
+    #[error("code lengths violate Kraft inequality (sum {0} > 1)")]
+    KraftViolation(f64),
+    #[error("code length {0} exceeds MAX_CODE_LEN {MAX_CODE_LEN}")]
+    TooLong(u32),
+}
+
+impl CanonicalCode {
+    /// Build a length-limited canonical code from symbol frequencies.
+    pub fn from_frequencies(freqs: &[u64]) -> Self {
+        let mut adjusted: Vec<u64> = freqs.to_vec();
+        loop {
+            let lengths = tree::code_lengths(&adjusted);
+            let max = lengths.iter().copied().max().unwrap_or(0);
+            if max <= MAX_CODE_LEN {
+                return Self::from_lengths(&lengths).expect("huffman lengths satisfy Kraft");
+            }
+            // Paper's "frequency adjustment": compress the dynamic range so
+            // rare symbols look less rare; halve-and-floor-at-1.
+            for f in adjusted.iter_mut() {
+                if *f > 0 {
+                    *f = (*f / 2).max(1);
+                }
+            }
+        }
+    }
+
+    /// Assign canonical codewords from a validated length vector: symbols
+    /// sorted by (length, symbol index); codes count upward, shifting at
+    /// each length increase. This is the standard canonical construction,
+    /// so the code book is fully determined by `lengths` (which is all the
+    /// container stores).
+    pub fn from_lengths(lengths: &[u32]) -> Result<Self, CodeError> {
+        if let Some(&l) = lengths.iter().find(|&&l| l > MAX_CODE_LEN) {
+            return Err(CodeError::TooLong(l));
+        }
+        let kraft = tree::kraft_sum(lengths);
+        if kraft > 1.0 + 1e-9 {
+            return Err(CodeError::KraftViolation(kraft));
+        }
+        let mut order: Vec<usize> = (0..lengths.len()).filter(|&i| lengths[i] > 0).collect();
+        order.sort_by_key(|&i| (lengths[i], i));
+        let mut codes = vec![0u32; lengths.len()];
+        let mut code = 0u32;
+        let mut prev_len = 0u32;
+        for &sym in &order {
+            let len = lengths[sym];
+            code <<= len - prev_len;
+            codes[sym] = code;
+            code += 1;
+            prev_len = len;
+        }
+        Ok(Self {
+            lengths: lengths.to_vec(),
+            codes,
+        })
+    }
+
+    pub fn num_symbols(&self) -> usize {
+        self.lengths.len()
+    }
+
+    pub fn max_len(&self) -> u32 {
+        self.lengths.iter().copied().max().unwrap_or(0)
+    }
+
+    /// (code, len) for a symbol; panics if absent (encoder must only see
+    /// symbols it counted).
+    #[inline]
+    pub fn encode(&self, sym: usize) -> (u32, u32) {
+        let len = self.lengths[sym];
+        debug_assert!(len > 0, "encoding absent symbol {sym}");
+        (self.codes[sym], len)
+    }
+
+    /// Slow reference decode of one symbol from an MSB-first 16-bit
+    /// window. Returns (symbol, length). Used by tests and the scalar
+    /// reference decoder; the production path goes through `DecodeLut`.
+    pub fn decode_window(&self, window: u16) -> Option<(usize, u32)> {
+        for len in 1..=self.max_len() {
+            let prefix = (window >> (16 - len)) as u32;
+            for (sym, (&l, &c)) in self.lengths.iter().zip(&self.codes).enumerate() {
+                if l == len && c == prefix {
+                    return Some((sym, len));
+                }
+            }
+        }
+        None
+    }
+
+    /// Expected code length under `freqs`.
+    pub fn expected_length(&self, freqs: &[u64]) -> f64 {
+        tree::expected_length(freqs, &self.lengths)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_codes_are_prefix_free() {
+        let freqs = [3u64, 2, 1, 2, 5];
+        let code = CanonicalCode::from_frequencies(&freqs);
+        for i in 0..5 {
+            for j in 0..5 {
+                if i == j {
+                    continue;
+                }
+                let (ci, li) = code.encode(i);
+                let (cj, lj) = code.encode(j);
+                if li <= lj {
+                    assert_ne!(cj >> (lj - li), ci, "{i} prefixes {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn canonical_ordering() {
+        // equal lengths -> codes increase with symbol index
+        let code = CanonicalCode::from_frequencies(&[1, 1, 1, 1]);
+        assert_eq!(code.lengths, vec![2, 2, 2, 2]);
+        assert_eq!(code.codes, vec![0b00, 0b01, 0b10, 0b11]);
+    }
+
+    #[test]
+    fn decode_window_inverts_encode() {
+        let freqs = [100u64, 40, 12, 3, 1, 1, 77, 0, 5];
+        let code = CanonicalCode::from_frequencies(&freqs);
+        for sym in 0..freqs.len() {
+            if freqs[sym] == 0 {
+                continue;
+            }
+            let (c, l) = code.encode(sym);
+            let window = (c << (16 - l)) as u16;
+            assert_eq!(code.decode_window(window), Some((sym, l)));
+        }
+    }
+
+    #[test]
+    fn length_limit_enforced_on_256_symbol_alphabet() {
+        // exponential frequencies over 256 symbols force > 16-bit codes
+        // in unconstrained Huffman; the adjustment loop must cap them.
+        let freqs: Vec<u64> = (0..256u32)
+            .map(|i| 1u64 << (63 - (i / 4).min(62)))
+            .collect();
+        let code = CanonicalCode::from_frequencies(&freqs);
+        assert!(code.max_len() <= MAX_CODE_LEN);
+        assert!(tree::kraft_sum(&code.lengths) <= 1.0 + 1e-12);
+        // all symbols still encodable
+        assert!(code.lengths.iter().all(|&l| l > 0));
+    }
+
+    #[test]
+    fn from_lengths_rejects_bad_input() {
+        assert!(matches!(
+            CanonicalCode::from_lengths(&[1, 1, 1]),
+            Err(CodeError::KraftViolation(_))
+        ));
+        assert!(matches!(
+            CanonicalCode::from_lengths(&[17]),
+            Err(CodeError::TooLong(17))
+        ));
+    }
+
+    #[test]
+    fn lengths_roundtrip_through_canonical() {
+        let freqs = [977u64, 312, 105, 44, 13, 7, 2, 1, 1, 538, 91, 3, 0, 0, 9, 1];
+        let a = CanonicalCode::from_frequencies(&freqs);
+        let b = CanonicalCode::from_lengths(&a.lengths).unwrap();
+        assert_eq!(a, b);
+    }
+}

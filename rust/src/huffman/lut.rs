@@ -1,0 +1,317 @@
+//! Hierarchical (cascaded 8-bit) decode lookup tables — §3.1 and Fig. 2.
+//!
+//! Variable-length codes (≤ 16 bits) are resolved in at most two 8-bit
+//! table lookups. Two representations are provided:
+//!
+//! * the **packed** representation used by the production decoder: u16
+//!   entries carrying `(symbol, total code length)` in one load, so a
+//!   symbol costs one lookup (two for >8-bit codes) and *no* separate
+//!   length-table access — a CPU-side improvement over the paper's layout
+//!   recorded in EXPERIMENTS.md §Perf;
+//! * the **paper-exact flat u8 layout** (`paper_flat_u8`) consumed by the
+//!   faithful Algorithm-1 decoder: `n_luts × 256` bytes where decode
+//!   tables hold symbols `< 240` or pointer values `256 − subtable_index`,
+//!   and the final table is the length table indexed by symbol — exactly
+//!   the indexing of Algorithm 1 lines 7–10.
+
+use super::canonical::CanonicalCode;
+
+const PTR_FLAG: u16 = 0x8000;
+
+/// Cascaded decode table for codes up to 16 bits.
+#[derive(Debug, Clone)]
+pub struct DecodeLut {
+    /// flat tables, 256 entries each; table 0 is the root
+    tables: Vec<u16>,
+    n_tables: usize,
+    max_len: u32,
+}
+
+impl DecodeLut {
+    /// Build from a canonical code book.
+    pub fn build(code: &CanonicalCode) -> Self {
+        assert!(code.max_len() <= 16, "LUT supports codes up to 16 bits");
+        let mut tables: Vec<u16> = vec![0u16; 256];
+        let mut n_tables = 1usize;
+        // map from 8-bit byte-aligned prefix -> subtable index
+        let mut sub_of_prefix: Vec<Option<usize>> = vec![None; 256];
+
+        for sym in 0..code.num_symbols() {
+            let len = code.lengths[sym];
+            if len == 0 {
+                continue;
+            }
+            let c = code.codes[sym];
+            if len <= 8 {
+                let lo = (c << (8 - len)) as usize;
+                let hi = ((c + 1) << (8 - len)) as usize;
+                let entry = pack_entry(sym as u16, len);
+                for b in lo..hi {
+                    tables[b] = entry;
+                }
+            } else {
+                let prefix = (c >> (len - 8)) as usize;
+                let sub = match sub_of_prefix[prefix] {
+                    Some(s) => s,
+                    None => {
+                        let s = n_tables;
+                        n_tables += 1;
+                        tables.extend(std::iter::repeat(0u16).take(256));
+                        sub_of_prefix[prefix] = Some(s);
+                        tables[prefix] = PTR_FLAG | s as u16;
+                        s
+                    }
+                };
+                let rem = c & ((1u32 << (len - 8)) - 1);
+                let lo = (rem << (16 - len)) as usize;
+                let hi = ((rem + 1) << (16 - len)) as usize;
+                let entry = pack_entry(sym as u16, len);
+                for b in lo..hi {
+                    tables[sub * 256 + b] = entry;
+                }
+            }
+        }
+        Self {
+            tables,
+            n_tables,
+            max_len: code.max_len(),
+        }
+    }
+
+    pub fn n_tables(&self) -> usize {
+        self.n_tables
+    }
+
+    pub fn max_len(&self) -> u32 {
+        self.max_len
+    }
+
+    /// Decode one symbol from a 16-bit MSB-aligned window.
+    /// Returns (symbol, code length in bits).
+    #[inline(always)]
+    pub fn decode(&self, window: u16) -> (u16, u32) {
+        let e = self.tables[(window >> 8) as usize];
+        let e = if e & PTR_FLAG != 0 {
+            let sub = (e & 0x7FFF) as usize;
+            self.tables[sub * 256 + (window & 0xFF) as usize]
+        } else {
+            e
+        };
+        unpack_entry(e)
+    }
+
+    /// Decode one symbol from the top 16 bits of a 64-bit sliding window
+    /// (`L` in Algorithm 1).
+    #[inline(always)]
+    pub fn decode_u64(&self, l: u64) -> (u16, u32) {
+        self.decode((l >> 48) as u16)
+    }
+
+    /// Emit the paper-exact flat u8 layout (only valid for alphabets with
+    /// < 240 symbols and ≤ 15 subtables — always true for the 16-symbol
+    /// FP8 exponent alphabet). Layout: decode tables 0..n−1, then the
+    /// length table; pointer entries are `256 − subtable_index`.
+    pub fn paper_flat_u8(&self, code: &CanonicalCode) -> Vec<u8> {
+        assert!(
+            code.num_symbols() < 240,
+            "paper u8 layout needs symbols < 240"
+        );
+        assert!(self.n_tables <= 16, "paper u8 layout supports <= 15 subtables");
+        let n_luts = self.n_tables + 1; // + length table
+        let mut flat = vec![0u8; n_luts * 256];
+        for t in 0..self.n_tables {
+            for b in 0..256usize {
+                let e = self.tables[t * 256 + b];
+                flat[t * 256 + b] = if e & PTR_FLAG != 0 {
+                    let sub = (e & 0x7FFF) as usize;
+                    (256 - sub) as u8
+                } else {
+                    (e & 0xFF) as u8
+                };
+            }
+        }
+        // final table: code length indexed by symbol (Algorithm 1 line 10)
+        for sym in 0..code.num_symbols() {
+            flat[self.n_tables * 256 + sym] = code.lengths[sym] as u8;
+        }
+        flat
+    }
+}
+
+/// Pair-decode table (perf pass, EXPERIMENTS.md §Perf): maps the top 12
+/// bits of the window to *two* decoded symbols when both codewords fit in
+/// 12 bits — on weight data (H(E) ≈ 2–3 bits, mean code ~3 bits) that
+/// covers the overwhelming majority of positions, halving per-symbol
+/// dispatch overhead. Entry layout (u32):
+///   bits 0..8   sym1
+///   bits 8..16  sym2
+///   bits 16..21 consumed bits (len1+len2)
+///   bit  31     valid-pair flag (0 ⇒ fall back to single decode)
+#[derive(Debug, Clone)]
+pub struct PairLut {
+    entries: Vec<u32>,
+}
+
+pub const PAIR_BITS: u32 = 12;
+const PAIR_VALID: u32 = 1 << 31;
+
+impl PairLut {
+    pub fn build(single: &DecodeLut) -> Self {
+        let n = 1usize << PAIR_BITS;
+        let mut entries = vec![0u32; n];
+        for w in 0..n {
+            // place the 12 bits at the top of a 16-bit window, zero-pad
+            let win1 = ((w as u16) << (16 - PAIR_BITS)) as u16;
+            let (s1, l1) = single.decode(win1);
+            if l1 == 0 || l1 > PAIR_BITS {
+                continue; // code longer than the index — fall back
+            }
+            // bits after code1, MSB-aligned into a fresh 16-bit window
+            // (zero-padded; the l1+l2 <= 12 check below guarantees the
+            // second decode consulted only real bits)
+            let win2: u16 = ((w as u32) << (16 + l1 - PAIR_BITS)) as u16;
+            let (s2, l2) = single.decode(win2);
+            if l2 == 0 || l1 + l2 > PAIR_BITS {
+                continue;
+            }
+            entries[w] = PAIR_VALID | ((l1 + l2) << 16) | ((s2 as u32) << 8) | s1 as u32;
+        }
+        Self { entries }
+    }
+
+    /// Decode up to two symbols from the top bits of a 64-bit window.
+    /// Returns Some((sym1, sym2, consumed)) when the pair entry covers.
+    #[inline(always)]
+    pub fn decode_pair(&self, l: u64) -> Option<(u8, u8, u32)> {
+        let e = self.entries[(l >> (64 - PAIR_BITS as u64)) as usize];
+        if e & PAIR_VALID != 0 {
+            Some(((e & 0xFF) as u8, ((e >> 8) & 0xFF) as u8, (e >> 16) & 0x1F))
+        } else {
+            None
+        }
+    }
+
+    /// Fraction of entries that decode a full pair (diagnostics).
+    pub fn coverage(&self) -> f64 {
+        self.entries.iter().filter(|&&e| e & PAIR_VALID != 0).count() as f64
+            / self.entries.len() as f64
+    }
+}
+
+#[inline(always)]
+fn pack_entry(sym: u16, len: u32) -> u16 {
+    debug_assert!(sym < 256 && len <= 16);
+    sym | ((len as u16) << 8)
+}
+
+#[inline(always)]
+fn unpack_entry(e: u16) -> (u16, u32) {
+    (e & 0xFF, (e >> 8) as u32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::huffman::canonical::CanonicalCode;
+
+    fn lut_for(freqs: &[u64]) -> (CanonicalCode, DecodeLut) {
+        let code = CanonicalCode::from_frequencies(freqs);
+        let lut = DecodeLut::build(&code);
+        (code, lut)
+    }
+
+    #[test]
+    fn single_level_decode() {
+        let (code, lut) = lut_for(&[5, 5, 5, 5]);
+        assert_eq!(lut.n_tables(), 1);
+        for sym in 0..4usize {
+            let (c, l) = code.encode(sym);
+            let window = (c << (16 - l)) as u16;
+            assert_eq!(lut.decode(window), (sym as u16, l));
+        }
+    }
+
+    #[test]
+    fn two_level_decode() {
+        // Fibonacci frequencies over 16 symbols -> some codes > 8 bits
+        let mut freqs = vec![0u64; 16];
+        let (mut a, mut b) = (1u64, 1u64);
+        for f in freqs.iter_mut() {
+            *f = a;
+            let c = a + b;
+            a = b;
+            b = c;
+        }
+        let (code, lut) = lut_for(&freqs);
+        assert!(code.max_len() > 8);
+        assert!(lut.n_tables() > 1);
+        for sym in 0..16usize {
+            let (c, l) = code.encode(sym);
+            let window = ((c as u32) << (16 - l)) as u16;
+            assert_eq!(lut.decode(window), (sym as u16, l), "sym {sym} len {l}");
+        }
+    }
+
+    #[test]
+    fn decode_ignores_trailing_bits() {
+        let (code, lut) = lut_for(&[10, 3, 1, 1]);
+        for sym in 0..4usize {
+            let (c, l) = code.encode(sym);
+            // fill the tail with all-ones garbage
+            let window = ((c << (16 - l)) | ((1 << (16 - l)) - 1)) as u16;
+            assert_eq!(lut.decode(window), (sym as u16, l));
+        }
+    }
+
+    #[test]
+    fn paper_flat_layout_roundtrip() {
+        let mut freqs = vec![0u64; 16];
+        let (mut a, mut b) = (1u64, 1u64);
+        for f in freqs.iter_mut() {
+            *f = a;
+            let c = a + b;
+            a = b;
+            b = c;
+        }
+        let (code, lut) = lut_for(&freqs);
+        let flat = lut.paper_flat_u8(&code);
+        let n_luts = flat.len() / 256;
+        assert_eq!(n_luts, lut.n_tables() + 1);
+
+        // decode every symbol through the paper's index arithmetic
+        for sym in 0..16usize {
+            let (c, l) = code.encode(sym);
+            let window: u16 = ((c << (16 - l)) & 0xFFFF) as u16;
+            let mut x = flat[(window >> 8) as usize];
+            if x >= 240 {
+                let sub = 256 - x as usize;
+                x = flat[256 * sub + (window & 0xFF) as usize];
+            }
+            assert_eq!(x as usize, sym);
+            let b_l = flat[256 * (n_luts - 1) + x as usize];
+            assert_eq!(b_l as u32, l);
+        }
+    }
+
+    #[test]
+    fn decode_u64_uses_top_bits() {
+        let (code, lut) = lut_for(&[7, 2, 1]);
+        let (c, l) = code.encode(0);
+        let l64 = (c as u64) << (64 - l);
+        assert_eq!(lut.decode_u64(l64), (0, l));
+    }
+
+    #[test]
+    fn bf16_scale_alphabet_256_symbols() {
+        // 256-symbol alphabet (the DFloat11 baseline case) uses the u16
+        // entries; ensure decode works for all symbols incl. two-level.
+        let freqs: Vec<u64> = (0..256u64).map(|i| 1 + (i % 37) * (i % 11)).collect();
+        let code = CanonicalCode::from_frequencies(&freqs);
+        let lut = DecodeLut::build(&code);
+        for sym in 0..256usize {
+            let (c, l) = code.encode(sym);
+            let window = ((c << (16 - l)) & 0xFFFF) as u16;
+            assert_eq!(lut.decode(window), (sym as u16, l), "sym {sym}");
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Huffman machinery for ECF8 (§3.1).
+//!
+//! * [`tree`] — optimal prefix-code construction from symbol frequencies.
+//! * [`canonical`] — canonical code assignment and the paper's 16-bit
+//!   length limit via iterative frequency adjustment.
+//! * [`lut`] — the hierarchical (cascaded 8-bit) decode tables of Fig. 2
+//!   plus the length table, in the exact flat layout Algorithm 1 indexes.
+//! * [`bitstream`] — MSB-first bit I/O used by the encoder and the
+//!   reference decoder.
+
+pub mod bitstream;
+pub mod canonical;
+pub mod lut;
+pub mod tree;
+
+pub use canonical::{CanonicalCode, MAX_CODE_LEN};
+pub use lut::DecodeLut;

@@ -1,0 +1,179 @@
+//! Optimal Huffman code-length computation from symbol frequencies
+//! (§3.1 "Huffman code generation").
+//!
+//! Only the code *lengths* matter downstream — canonical codes are
+//! assigned from lengths in [`super::canonical`] — so the tree is built
+//! with the classic two-queue O(n log n) merge and immediately reduced to
+//! a depth per symbol.
+
+/// Compute Huffman code lengths for `freqs` (zero-frequency symbols get
+/// length 0 = "absent"). Guarantees Kraft equality over present symbols.
+///
+/// Special cases: zero or one present symbol → that symbol gets length 1
+/// (a real bitstream still needs to advance).
+pub fn code_lengths(freqs: &[u64]) -> Vec<u32> {
+    let n = freqs.len();
+    let present: Vec<usize> = (0..n).filter(|&i| freqs[i] > 0).collect();
+    let mut lengths = vec![0u32; n];
+    match present.len() {
+        0 => return lengths,
+        1 => {
+            lengths[present[0]] = 1;
+            return lengths;
+        }
+        _ => {}
+    }
+
+    // Node arena: leaves then internals; each node stores (freq, parent).
+    #[derive(Clone, Copy)]
+    struct Node {
+        freq: u64,
+        parent: usize, // usize::MAX = root/none
+    }
+    let mut nodes: Vec<Node> = present
+        .iter()
+        .map(|&i| Node {
+            freq: freqs[i],
+            parent: usize::MAX,
+        })
+        .collect();
+
+    // min-heap via sorted index vector + binary heap
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = nodes
+        .iter()
+        .enumerate()
+        .map(|(i, n)| Reverse((n.freq, i)))
+        .collect();
+
+    while heap.len() > 1 {
+        let Reverse((f1, i1)) = heap.pop().unwrap();
+        let Reverse((f2, i2)) = heap.pop().unwrap();
+        let parent = nodes.len();
+        // saturating: frequencies only guide the tree shape, and callers
+        // may pass near-u64::MAX synthetic counts
+        let fsum = f1.saturating_add(f2);
+        nodes.push(Node {
+            freq: fsum,
+            parent: usize::MAX,
+        });
+        nodes[i1].parent = parent;
+        nodes[i2].parent = parent;
+        heap.push(Reverse((fsum, parent)));
+    }
+
+    for (leaf_idx, &sym) in present.iter().enumerate() {
+        let mut depth = 0u32;
+        let mut cur = leaf_idx;
+        while nodes[cur].parent != usize::MAX {
+            depth += 1;
+            cur = nodes[cur].parent;
+        }
+        lengths[sym] = depth;
+    }
+    lengths
+}
+
+/// Expected code length Σ p(x)·ℓ(x) in bits for a length assignment.
+pub fn expected_length(freqs: &[u64], lengths: &[u32]) -> f64 {
+    let total: u64 = freqs.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    freqs
+        .iter()
+        .zip(lengths)
+        .map(|(&f, &l)| f as f64 * l as f64)
+        .sum::<f64>()
+        / total as f64
+}
+
+/// Kraft sum Σ 2^{-ℓ} over present symbols (must be ≤ 1, = 1 for a
+/// complete code).
+pub fn kraft_sum(lengths: &[u32]) -> f64 {
+    lengths
+        .iter()
+        .filter(|&&l| l > 0)
+        .map(|&l| 2f64.powi(-(l as i32)))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::shannon_entropy;
+
+    #[test]
+    fn uniform_four_symbols_two_bits() {
+        let lens = code_lengths(&[5, 5, 5, 5]);
+        assert_eq!(lens, vec![2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn paper_figure2_example() {
+        // "aaabbcddeeeee": a=3 b=2 c=1 d=2 e=5
+        let lens = code_lengths(&[3, 2, 1, 2, 5]);
+        // optimal total cost for this multiset is 29 bits
+        // (merges: 1+2=3, 2+3=5, 3+5=8, 5+8=13 → 3+5+8+13 = 29)
+        let total: f64 = [3f64, 2.0, 1.0, 2.0, 5.0]
+            .iter()
+            .zip(&lens)
+            .map(|(f, &l)| f * l as f64)
+            .sum();
+        assert_eq!(total, 29.0, "lens={lens:?}");
+        // e (most frequent) must get the shortest code
+        let min = *lens.iter().min().unwrap();
+        assert_eq!(lens[4], min);
+        // c (least frequent) must get the longest
+        let max = *lens.iter().max().unwrap();
+        assert_eq!(lens[2], max);
+    }
+
+    #[test]
+    fn kraft_equality_holds() {
+        let freqs = [100, 50, 20, 10, 5, 3, 1, 1];
+        let lens = code_lengths(&freqs);
+        assert!((kraft_sum(&lens) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_symbol_gets_one_bit() {
+        let lens = code_lengths(&[0, 42, 0]);
+        assert_eq!(lens, vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn empty_freqs() {
+        assert_eq!(code_lengths(&[0, 0]), vec![0, 0]);
+        assert_eq!(code_lengths(&[]), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn expected_length_within_one_bit_of_entropy() {
+        // Huffman optimality: H <= E[l] < H + 1 for any distribution.
+        let freqs = [977u64, 312, 105, 44, 13, 7, 2, 1, 1, 538, 91, 3];
+        let lens = code_lengths(&freqs);
+        let h = shannon_entropy(&freqs);
+        let el = expected_length(&freqs, &lens);
+        assert!(el >= h - 1e-9, "el={el} h={h}");
+        assert!(el < h + 1.0, "el={el} h={h}");
+    }
+
+    #[test]
+    fn sixteen_symbol_alphabet_max_depth_is_bounded() {
+        // Fibonacci-like frequencies force the deepest possible tree;
+        // with 16 symbols depth <= 15.
+        let mut freqs = vec![0u64; 16];
+        let (mut a, mut b) = (1u64, 1u64);
+        for f in freqs.iter_mut() {
+            *f = a;
+            let c = a + b;
+            a = b;
+            b = c;
+        }
+        let lens = code_lengths(&freqs);
+        assert_eq!(*lens.iter().max().unwrap(), 15);
+        assert!((kraft_sum(&lens) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,22 @@
+//! # ECF8 — Exponent-Concentrated FP8 lossless weight compression
+//!
+//! Reproduction of *"To Compress or Not? Pushing the Frontier of Lossless
+//! GenAI Model Weights Compression with Exponent Concentration"*
+//! (Yang, Zhang, Xie, Li, Xu, Shrivastava — 2025).
+//!
+//! See DESIGN.md for the system inventory and experiment index.
+
+pub mod alphastable;
+pub mod baselines;
+pub mod bench_support;
+pub mod codec;
+pub mod coordinator;
+pub mod fp8;
+pub mod huffman;
+pub mod model;
+pub mod runtime;
+pub mod tensormgr;
+pub mod util;
+
+pub use codec::{compress_fp8, decompress_fp8, Ecf8Blob};
+pub use fp8::{BF16, F8E4M3, F8E5M2};

@@ -1,0 +1,332 @@
+//! `ecf8` — the command-line entry point.
+//!
+//! Subcommands:
+//!   compress    compress a raw FP8 tensor file into an .ecf8 container
+//!   decompress  reverse, verifying bit-exactness via the container CRC
+//!   inspect     show container metadata, code book, and entropy
+//!   entropy     exponent-entropy report for a tensor file or zoo model
+//!   gen-model   synthesize a model's weights into a compressed store
+//!   serve       run the serving loop on a runnable model
+//!   zoo         list the model zoo with sizes and paper targets
+
+use ecf8::codec::{container, decode, encode, Ecf8Params, Fp8Format};
+use ecf8::coordinator::server::{compiled_batch_for, ServeConfig, Server};
+use ecf8::coordinator::Request;
+use ecf8::model::config as zoo_config;
+use ecf8::model::store::{CompressedModel, ModelStore};
+use ecf8::runtime::executor::{LlmExecutor, SEQ_LEN};
+use ecf8::runtime::pjrt::PjrtRuntime;
+use ecf8::util::cli::{CliError, Command};
+use ecf8::util::humanize;
+use ecf8::util::prng::Xoshiro256;
+use ecf8::util::threadpool::ThreadPool;
+use std::sync::Arc;
+
+fn main() {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        usage();
+        std::process::exit(2);
+    }
+    let sub = args.remove(0);
+    let result = match sub.as_str() {
+        "compress" => cmd_compress(args),
+        "decompress" => cmd_decompress(args),
+        "inspect" => cmd_inspect(args),
+        "entropy" => cmd_entropy(args),
+        "gen-model" => cmd_gen_model(args),
+        "serve" => cmd_serve(args),
+        "zoo" => cmd_zoo(args),
+        "--help" | "-h" | "help" => {
+            usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand `{other}`\n");
+            usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "ecf8 — lossless exponent-concentrated FP8 weight compression\n\
+         \n\
+         USAGE: ecf8 <subcommand> [options]\n\
+         \n\
+         SUBCOMMANDS:\n\
+           compress    <in.fp8> <out.ecf8>   compress a raw FP8 byte tensor\n\
+           decompress  <in.ecf8> <out.fp8>   decompress (CRC-verified)\n\
+           inspect     <in.ecf8>             container metadata + code book\n\
+           entropy     --model <name> | <in.fp8>   exponent entropy report\n\
+           gen-model   --model <name> --out <dir>  synthesize + compress\n\
+           serve       --model <name> --requests N  run the serving loop\n\
+           zoo                               list models and paper targets\n"
+    );
+}
+
+fn handle_help(cmd: &Command, err: CliError) -> anyhow::Error {
+    if matches!(err, CliError::HelpRequested) {
+        println!("{}", cmd.help_text());
+        std::process::exit(0);
+    }
+    anyhow::anyhow!("{err}")
+}
+
+fn cmd_compress(raw: Vec<String>) -> anyhow::Result<()> {
+    let cmd = Command::new("compress", "compress a raw FP8 byte tensor")
+        .opt_default("threads-per-block", "T parameter", "256")
+        .opt_default("bytes-per-thread", "B parameter", "8")
+        .flag("e5m2", "treat input as E5M2 instead of E4M3");
+    let a = cmd.parse(raw).map_err(|e| handle_help(&cmd, e))?;
+    let [input, output] = a.positional() else {
+        anyhow::bail!("usage: ecf8 compress <in.fp8> <out.ecf8>");
+    };
+    let data = std::fs::read(input)?;
+    let params = Ecf8Params {
+        threads_per_block: a.get_parse_or("threads-per-block", 256),
+        bytes_per_thread: a.get_parse_or("bytes-per-thread", 8),
+    };
+    let fmt = if a.flag("e5m2") {
+        Fp8Format::E5M2
+    } else {
+        Fp8Format::E4M3
+    };
+    let blob = encode::encode(&data, fmt, params);
+    container::write_file(&blob, std::path::Path::new(output))?;
+    println!(
+        "{} -> {}  ({} -> {}, saving {:.1}%)",
+        input,
+        output,
+        humanize::bytes(data.len() as u64),
+        humanize::bytes(blob.compressed_bytes() as u64),
+        blob.memory_saving() * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_decompress(raw: Vec<String>) -> anyhow::Result<()> {
+    let cmd = Command::new("decompress", "decompress an .ecf8 container")
+        .opt_default("threads", "decoder threads (0 = serial)", "0");
+    let a = cmd.parse(raw).map_err(|e| handle_help(&cmd, e))?;
+    let [input, output] = a.positional() else {
+        anyhow::bail!("usage: ecf8 decompress <in.ecf8> <out.fp8>");
+    };
+    let blob = container::read_file(std::path::Path::new(input))?;
+    let threads: usize = a.get_parse_or("threads", 0);
+    let pool = (threads > 0).then(|| ThreadPool::new(threads));
+    let mut out = vec![0u8; blob.n_elem];
+    let (_, secs) = ecf8::bench_support::time_once(|| {
+        decode::decode_into(&blob, &mut out, pool.as_ref());
+    });
+    std::fs::write(output, &out)?;
+    println!(
+        "{} -> {} ({}, decoded at {})",
+        input,
+        output,
+        humanize::bytes(out.len() as u64),
+        humanize::throughput(out.len() as u64, secs)
+    );
+    Ok(())
+}
+
+fn cmd_inspect(raw: Vec<String>) -> anyhow::Result<()> {
+    let cmd = Command::new("inspect", "show container metadata");
+    let a = cmd.parse(raw).map_err(|e| handle_help(&cmd, e))?;
+    let [input] = a.positional() else {
+        anyhow::bail!("usage: ecf8 inspect <in.ecf8>");
+    };
+    let blob = container::read_file(std::path::Path::new(input))?;
+    println!("format:        {:?}", blob.format);
+    println!("elements:      {}", blob.n_elem);
+    println!(
+        "geometry:      B={} T={} blocks={}",
+        blob.params.bytes_per_thread,
+        blob.params.threads_per_block,
+        blob.n_blocks()
+    );
+    println!(
+        "encoded:       {} bits ({:.3} bits/exponent)",
+        blob.encoded_bits,
+        blob.encoded_bits as f64 / blob.n_elem.max(1) as f64
+    );
+    println!(
+        "total:         {} ({:.1}% saving vs raw FP8)",
+        humanize::bytes(blob.compressed_bytes() as u64),
+        blob.memory_saving() * 100.0
+    );
+    println!("code lengths:  {:?}", blob.code_lengths);
+    Ok(())
+}
+
+fn cmd_entropy(raw: Vec<String>) -> anyhow::Result<()> {
+    let cmd = Command::new("entropy", "exponent-entropy report")
+        .opt("model", "zoo model name (else positional tensor file)")
+        .opt_default("sample", "elements sampled per tensor", "400000")
+        .opt_default("seed", "rng seed", "5");
+    let a = cmd.parse(raw).map_err(|e| handle_help(&cmd, e))?;
+    if let Some(name) = a.get("model") {
+        let m = zoo_config::by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {name} (see `ecf8 zoo`)"))?;
+        let sample: usize = a.get_parse_or("sample", 400_000);
+        let seed: u64 = a.get_parse_or("seed", 5);
+        println!("# {} — per-block-type exponent entropy (Figure 1)", m.name);
+        let mut by_type: std::collections::BTreeMap<&str, (f64, usize)> = Default::default();
+        let mut seen: std::collections::HashSet<(u8, usize, usize, usize)> = Default::default();
+        // one representative per (type, layer, shape)
+        for spec in m
+            .tensors()
+            .iter()
+            .filter(|s| seen.insert((s.block_type as u8, s.layer, s.rows, s.cols)))
+        {
+            let data = ecf8::model::weights::sample_tensor_fp8(spec, seed, sample.min(65536));
+            let h = encode::exponent_entropy(&data, Fp8Format::E4M3);
+            let e = by_type.entry(spec.block_type.label()).or_insert((0.0, 0));
+            e.0 += h;
+            e.1 += 1;
+        }
+        for (bt, (sum, n)) in by_type {
+            println!("{bt:12} H(E) = {:.3} bits (over {n} tensors)", sum / n as f64);
+        }
+    } else {
+        let [input] = a.positional() else {
+            anyhow::bail!("usage: ecf8 entropy <in.fp8> | --model <name>");
+        };
+        let data = std::fs::read(input)?;
+        let h = encode::exponent_entropy(&data, Fp8Format::E4M3);
+        println!("{input}: H(E) = {h:.3} bits over {} bytes", data.len());
+    }
+    Ok(())
+}
+
+fn cmd_gen_model(raw: Vec<String>) -> anyhow::Result<()> {
+    let cmd = Command::new("gen-model", "synthesize and compress a model")
+        .opt("model", "zoo model name (runnable: tiny-llm-7m, pico-llm-125m, pico-dit-50m)")
+        .opt_default("out", "store directory", "models")
+        .opt_default("seed", "rng seed", "1");
+    let a = cmd.parse(raw).map_err(|e| handle_help(&cmd, e))?;
+    let name = a
+        .get("model")
+        .ok_or_else(|| anyhow::anyhow!("--model required"))?;
+    let m = zoo_config::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {name} (see `ecf8 zoo`)"))?;
+    let pool = ThreadPool::with_default_size();
+    let seed: u64 = a.get_parse_or("seed", 1);
+    let (model, secs) =
+        ecf8::bench_support::time_once(|| CompressedModel::synthesize(&m, seed, Some(&pool)));
+    let store = ModelStore::new(a.get_or("out", "models"));
+    store.save(&model)?;
+    println!(
+        "{}: {} tensors, {} -> {} ({:.1}% saving) in {}",
+        m.name,
+        model.tensors.len(),
+        humanize::gb(model.raw_bytes()),
+        humanize::gb(model.compressed_bytes()),
+        model.memory_saving() * 100.0,
+        humanize::duration(secs)
+    );
+    Ok(())
+}
+
+fn cmd_serve(raw: Vec<String>) -> anyhow::Result<()> {
+    let cmd = Command::new("serve", "run the serving loop")
+        .opt_default("model", "runnable model", "tiny-llm-7m")
+        .opt_default("requests", "number of requests", "16")
+        .opt_default("batch", "max batch size", "8")
+        .opt_default("seed", "rng seed", "1")
+        .opt_default("threads", "decode threads", "0");
+    let a = cmd.parse(raw).map_err(|e| handle_help(&cmd, e))?;
+    let name = a.get_or("model", "tiny-llm-7m");
+    let m = zoo_config::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?;
+    let n_requests: usize = a.get_parse_or("requests", 16);
+    let batch: usize = a.get_parse_or("batch", 8);
+    let threads: usize = a.get_parse_or("threads", 0);
+    let seed: u64 = a.get_parse_or("seed", 1);
+
+    let pool = (threads > 0).then(|| Arc::new(ThreadPool::new(threads)));
+    println!("synthesizing {} ...", m.name);
+    let gen_pool = ThreadPool::with_default_size();
+    let model = CompressedModel::synthesize(&m, seed, Some(&gen_pool));
+    println!(
+        "weights: {} raw -> {} compressed ({:.1}% saving)",
+        humanize::bytes(model.raw_bytes()),
+        humanize::bytes(model.compressed_bytes()),
+        model.memory_saving() * 100.0
+    );
+    let ex = LlmExecutor::new(m.clone(), model, PjrtRuntime::default_dir(), pool)?;
+    let mut server = Server::new(
+        ex,
+        ServeConfig {
+            max_batch: batch,
+            linger: std::time::Duration::from_millis(5),
+        },
+    );
+    println!(
+        "serving {n_requests} requests at exec batch {} on PJRT CPU",
+        compiled_batch_for(batch)
+    );
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    for id in 0..n_requests as u64 {
+        let tokens: Vec<i32> = (0..SEQ_LEN)
+            .map(|_| rng.next_below(m.vocab as u64) as i32)
+            .collect();
+        server.submit(Request::new(id, tokens));
+        let _ = server.tick()?;
+    }
+    let _ = server.drain()?;
+    let met = &server.metrics;
+    println!(
+        "served {} requests / {} tokens in {}",
+        met.requests_served,
+        met.tokens_served,
+        humanize::duration(met.wall_seconds())
+    );
+    println!(
+        "throughput: {:.2} tokens/s, {:.2} req/s, mean batch {:.1}",
+        met.tokens_per_second(),
+        met.requests_per_second(),
+        met.mean_batch_size()
+    );
+    if let Some(s) = met.latency_summary() {
+        println!(
+            "latency: p50 {} p90 {} p99 {}",
+            humanize::duration(s.p50),
+            humanize::duration(s.p90),
+            humanize::duration(s.p99)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_zoo(_raw: Vec<String>) -> anyhow::Result<()> {
+    let mut t = ecf8::bench_support::Table::new([
+        "model",
+        "family",
+        "params",
+        "fp8 bytes",
+        "paper mem ↓",
+    ]);
+    let mut all = zoo_config::zoo();
+    all.push(zoo_config::pico_llm());
+    all.push(zoo_config::tiny_llm());
+    all.push(zoo_config::pico_dit());
+    for m in all {
+        t.row([
+            m.name.to_string(),
+            format!("{:?}", m.family),
+            format!("{:.1}B", m.n_params() as f64 / 1e9),
+            humanize::gb(m.fp8_bytes()),
+            m.paper_memory_pct
+                .map(|p| format!("{p:.1}%"))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,17 @@
+//! Model substrate: shape inventories of the nine evaluated GenAI models,
+//! synthetic α-stable weight generation, and the compressed model store.
+//!
+//! The paper evaluates on real HuggingFace checkpoints; this environment
+//! has none, so per DESIGN.md "Substitutions" each model is reproduced as
+//! its exact *layer-shape inventory* with weights drawn from the α-stable
+//! laws the paper's §2 derives (which is precisely the statistical
+//! structure the codec exploits — the paper itself argues compression
+//! depends only on this distribution, §4.1).
+
+pub mod config;
+pub mod store;
+pub mod weights;
+
+pub use config::{BlockType, ModelConfig, ModelFamily, TensorSpec};
+pub use store::{CompressedModel, ModelStore};
+pub use weights::generate_tensor_fp8;

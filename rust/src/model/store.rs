@@ -1,0 +1,238 @@
+//! Compressed model store: a directory holding one `.ecf8` container per
+//! weight tensor plus a plain-text manifest. This is what the serving
+//! runtime loads; tensors stay compressed in memory and are decompressed
+//! just-in-time per layer (§3.3).
+
+use super::config::{ModelConfig, TensorSpec};
+use super::weights::generate_tensor_fp8;
+use crate::codec::{container, encode, Ecf8Blob, Ecf8Params, Fp8Format};
+use crate::util::threadpool::ThreadPool;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// An in-memory compressed model: every tensor as an [`Ecf8Blob`].
+pub struct CompressedModel {
+    pub name: String,
+    pub tensors: Vec<(TensorSpec, Ecf8Blob)>,
+    index: HashMap<String, usize>,
+}
+
+impl CompressedModel {
+    /// Generate-and-compress a whole model in memory (used by examples,
+    /// tests, and the serving runtime for runnable configs).
+    pub fn synthesize(config: &ModelConfig, seed: u64, pool: Option<&ThreadPool>) -> Self {
+        let specs = config.tensors();
+        let blobs: Vec<(TensorSpec, Ecf8Blob)> = match pool {
+            Some(pool) => {
+                use std::sync::Mutex;
+                let results: Vec<Mutex<Option<(TensorSpec, Ecf8Blob)>>> =
+                    specs.iter().map(|_| Mutex::new(None)).collect();
+                let specs_ref = &specs;
+                let results_ref = &results;
+                pool.scope_chunks(specs.len(), specs.len(), move |_, s, e| {
+                    for i in s..e {
+                        let spec = specs_ref[i].clone();
+                        let data = generate_tensor_fp8(&spec, seed);
+                        let blob = encode::encode(&data, Fp8Format::E4M3, Ecf8Params::default());
+                        *results_ref[i].lock().unwrap() = Some((spec, blob));
+                    }
+                });
+                results
+                    .into_iter()
+                    .map(|m| m.into_inner().unwrap().unwrap())
+                    .collect()
+            }
+            None => specs
+                .into_iter()
+                .map(|spec| {
+                    let data = generate_tensor_fp8(&spec, seed);
+                    let blob = encode::encode(&data, Fp8Format::E4M3, Ecf8Params::default());
+                    (spec, blob)
+                })
+                .collect(),
+        };
+        let index = blobs
+            .iter()
+            .enumerate()
+            .map(|(i, (s, _))| (s.name.clone(), i))
+            .collect();
+        Self {
+            name: config.name.to_string(),
+            tensors: blobs,
+            index,
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&(TensorSpec, Ecf8Blob)> {
+        self.index.get(name).map(|&i| &self.tensors[i])
+    }
+
+    /// Total raw FP8 bytes.
+    pub fn raw_bytes(&self) -> u64 {
+        self.tensors.iter().map(|(s, _)| s.n_elem() as u64).sum()
+    }
+
+    /// Total compressed bytes.
+    pub fn compressed_bytes(&self) -> u64 {
+        self.tensors
+            .iter()
+            .map(|(_, b)| b.compressed_bytes() as u64)
+            .sum()
+    }
+
+    /// Memory saving fraction (Table 1 "Memory ↓").
+    pub fn memory_saving(&self) -> f64 {
+        1.0 - self.compressed_bytes() as f64 / self.raw_bytes() as f64
+    }
+
+    /// Largest decoded tensor size — the §3.3 shared-buffer size.
+    pub fn max_tensor_bytes(&self) -> usize {
+        self.tensors.iter().map(|(s, _)| s.n_elem()).max().unwrap_or(0)
+    }
+}
+
+/// On-disk store.
+pub struct ModelStore {
+    pub root: PathBuf,
+}
+
+impl ModelStore {
+    pub fn new<P: Into<PathBuf>>(root: P) -> Self {
+        Self { root: root.into() }
+    }
+
+    fn tensor_path(&self, model: &str, tensor: &str) -> PathBuf {
+        self.root
+            .join(model)
+            .join(format!("{}.ecf8", tensor.replace('/', "_")))
+    }
+
+    fn manifest_path(&self, model: &str) -> PathBuf {
+        self.root.join(model).join("manifest.txt")
+    }
+
+    /// Persist a compressed model. The manifest line format is
+    /// `name<TAB>rows<TAB>cols<TAB>layer<TAB>block<TAB>file`.
+    pub fn save(&self, model: &CompressedModel) -> Result<()> {
+        let dir = self.root.join(&model.name);
+        std::fs::create_dir_all(&dir)?;
+        let mut manifest = String::new();
+        manifest.push_str(&format!("# ecf8-model v1 {}\n", model.name));
+        for (spec, blob) in &model.tensors {
+            let file = format!("{}.ecf8", spec.name.replace('/', "_"));
+            container::write_file(blob, &dir.join(&file))?;
+            manifest.push_str(&format!(
+                "{}\t{}\t{}\t{}\t{}\t{}\n",
+                spec.name,
+                spec.rows,
+                spec.cols,
+                spec.layer,
+                spec.block_type.label(),
+                file
+            ));
+        }
+        std::fs::write(self.manifest_path(&model.name), manifest)?;
+        Ok(())
+    }
+
+    /// Load a compressed model back from disk. `config` supplies the
+    /// distribution metadata the manifest doesn't carry.
+    pub fn load(&self, config: &ModelConfig) -> Result<CompressedModel> {
+        let manifest = std::fs::read_to_string(self.manifest_path(config.name))
+            .with_context(|| format!("reading manifest for {}", config.name))?;
+        let spec_by_name: HashMap<String, TensorSpec> = config
+            .tensors()
+            .into_iter()
+            .map(|s| (s.name.clone(), s))
+            .collect();
+        let mut tensors = Vec::new();
+        for line in manifest.lines().skip(1) {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = line.split('\t').collect();
+            if parts.len() != 6 {
+                bail!("malformed manifest line: {line}");
+            }
+            let name = parts[0];
+            let spec = spec_by_name
+                .get(name)
+                .with_context(|| format!("manifest tensor {name} not in config"))?
+                .clone();
+            let blob = container::read_file(&self.tensor_path(config.name, name))?;
+            if blob.n_elem != spec.n_elem() {
+                bail!("tensor {name}: stored {} elems, config {}", blob.n_elem, spec.n_elem());
+            }
+            tensors.push((spec, blob));
+        }
+        let index = tensors
+            .iter()
+            .enumerate()
+            .map(|(i, (s, _))| (s.name.clone(), i))
+            .collect();
+        Ok(CompressedModel {
+            name: config.name.to_string(),
+            tensors,
+            index,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::tiny_llm;
+
+    #[test]
+    fn synthesize_and_query() {
+        let m = CompressedModel::synthesize(&tiny_llm(), 1, None);
+        assert!(m.raw_bytes() > 5_000_000);
+        assert!(m.compressed_bytes() < m.raw_bytes());
+        assert!(m.get("layers.0.attn.q_proj").is_some());
+        assert!(m.get("nope").is_none());
+        let saving = m.memory_saving();
+        assert!(saving > 0.05 && saving < 0.35, "saving={saving}");
+    }
+
+    #[test]
+    fn parallel_synthesis_matches_serial() {
+        let pool = ThreadPool::new(4);
+        let cfg = tiny_llm();
+        let a = CompressedModel::synthesize(&cfg, 2, None);
+        let b = CompressedModel::synthesize(&cfg, 2, Some(&pool));
+        assert_eq!(a.tensors.len(), b.tensors.len());
+        for ((sa, ba), (sb, bb)) in a.tensors.iter().zip(&b.tensors) {
+            assert_eq!(sa.name, sb.name);
+            assert_eq!(ba.encoded, bb.encoded, "{}", sa.name);
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let cfg = tiny_llm();
+        let m = CompressedModel::synthesize(&cfg, 3, None);
+        let dir = std::env::temp_dir().join("ecf8_store_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let store = ModelStore::new(&dir);
+        store.save(&m).unwrap();
+        let back = store.load(&cfg).unwrap();
+        assert_eq!(back.tensors.len(), m.tensors.len());
+        for ((sa, ba), (sb, bb)) in m.tensors.iter().zip(&back.tensors) {
+            assert_eq!(sa.name, sb.name);
+            assert_eq!(ba.encoded, bb.encoded);
+            assert_eq!(ba.packed, bb.packed);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn decompressed_tensors_match_generation() {
+        let cfg = tiny_llm();
+        let m = CompressedModel::synthesize(&cfg, 4, None);
+        for (spec, blob) in m.tensors.iter().take(4) {
+            let original = generate_tensor_fp8(spec, 4);
+            assert_eq!(crate::codec::decompress_fp8(blob), original, "{}", spec.name);
+        }
+    }
+}

@@ -1,0 +1,272 @@
+//! Model driver: full LLM forward (embed → layers → head) over the AOT
+//! artifacts, with every weight tensor decompressed just-in-time from its
+//! ECF8 blob (§3.3). This is the request-path compute the coordinator
+//! calls into.
+
+use super::pjrt::{Artifact, Input, PjrtRuntime};
+use crate::model::config::ModelConfig;
+use crate::model::store::CompressedModel;
+use crate::tensormgr::JitDecompressor;
+use crate::util::threadpool::ThreadPool;
+use anyhow::{anyhow, Context, Result};
+use std::sync::Arc;
+
+/// Sequence length the artifacts were lowered with (aot.py SEQ_LEN).
+pub const SEQ_LEN: usize = 32;
+
+/// Maps a zoo config name to its artifact prefix.
+pub fn artifact_prefix(model_name: &str) -> Option<&'static str> {
+    match model_name {
+        "pico-llm-125m" => Some("pico_llm"),
+        "tiny-llm-7m" => Some("tiny_llm"),
+        "pico-dit-50m" => Some("pico_dit"),
+        _ => None,
+    }
+}
+
+/// Executes a compressed LLM through PJRT, decoding weights per layer.
+pub struct LlmExecutor {
+    rt: PjrtRuntime,
+    pub cfg: ModelConfig,
+    pub model: CompressedModel,
+    jit: JitDecompressor,
+    prefix: &'static str,
+    /// forward counters
+    pub forwards: u64,
+}
+
+impl LlmExecutor {
+    pub fn new(
+        cfg: ModelConfig,
+        model: CompressedModel,
+        artifacts_dir: std::path::PathBuf,
+        pool: Option<Arc<ThreadPool>>,
+    ) -> Result<Self> {
+        let prefix = artifact_prefix(cfg.name)
+            .ok_or_else(|| anyhow!("no artifacts lowered for model {}", cfg.name))?;
+        let rt = PjrtRuntime::new(artifacts_dir)?;
+        let jit = JitDecompressor::new(model.max_tensor_bytes(), pool);
+        Ok(Self {
+            rt,
+            cfg,
+            model,
+            jit,
+            prefix,
+            forwards: 0,
+        })
+    }
+
+    /// Pre-compile the artifacts for a batch size (embed, layer, head).
+    pub fn warmup(&mut self, batch: usize) -> Result<()> {
+        for part in ["embed", "layer", "head"] {
+            let name = format!("{}_{}_b{}", self.prefix, part, batch);
+            self.rt
+                .load(&name)
+                .with_context(|| format!("artifact {name} (run `make artifacts`?)"))?;
+        }
+        Ok(())
+    }
+
+    fn decode_input(&mut self, tensor: &str, shape: Vec<i64>) -> Result<Input> {
+        let (spec, blob) = self
+            .model
+            .get(tensor)
+            .ok_or_else(|| anyhow!("tensor {tensor} missing"))?;
+        debug_assert_eq!(
+            shape.iter().product::<i64>() as usize,
+            spec.n_elem(),
+            "{tensor}"
+        );
+        let blob = blob.clone();
+        let bytes = self.jit.with_decoded(&blob, |b| b.to_vec());
+        Ok(Input::U8(bytes, shape))
+    }
+
+    /// Full forward: `tokens` is `batch × SEQ_LEN` row-major; returns
+    /// logits `batch × vocab`.
+    pub fn forward(&mut self, tokens: &[i32], batch: usize) -> Result<Vec<f32>> {
+        assert_eq!(tokens.len(), batch * SEQ_LEN, "token count");
+        let d = self.cfg.hidden as i64;
+        let v = self.cfg.vocab as i64;
+        let t = SEQ_LEN as i64;
+        let b = batch as i64;
+        let q_dim = (self.cfg.n_heads * self.cfg.head_dim) as i64;
+        let kv_dim = (self.cfg.n_kv_heads * self.cfg.head_dim) as i64;
+        let ffn = self.cfg.ffn_inter as i64;
+
+        let embed_art = self.rt.load(&format!("{}_embed_b{batch}", self.prefix))?;
+        let layer_art = self.rt.load(&format!("{}_layer_b{batch}", self.prefix))?;
+        let head_art = self.rt.load(&format!("{}_head_b{batch}", self.prefix))?;
+
+        // embed
+        let embed_w = self.decode_input("embed_tokens", vec![v, d])?;
+        let mut x = embed_art.run_f32(&[Input::I32(tokens.to_vec(), vec![b, t]), embed_w])?;
+
+        // layers (norm gains are ones in the synthetic models)
+        let ones_d = vec![1.0f32; d as usize];
+        for l in 0..self.cfg.n_layers {
+            let inputs = vec![
+                Input::F32(x, vec![b, t, d]),
+                Input::F32(ones_d.clone(), vec![d]),
+                self.decode_input(&format!("layers.{l}.attn.q_proj"), vec![q_dim, d])?,
+                self.decode_input(&format!("layers.{l}.attn.k_proj"), vec![kv_dim, d])?,
+                self.decode_input(&format!("layers.{l}.attn.v_proj"), vec![kv_dim, d])?,
+                self.decode_input(&format!("layers.{l}.attn.o_proj"), vec![d, q_dim])?,
+                Input::F32(ones_d.clone(), vec![d]),
+                self.decode_input(&format!("layers.{l}.mlp.gate"), vec![ffn, d])?,
+                self.decode_input(&format!("layers.{l}.mlp.up"), vec![ffn, d])?,
+                self.decode_input(&format!("layers.{l}.mlp.down"), vec![d, ffn])?,
+            ];
+            x = layer_art.run_f32(&inputs)?;
+        }
+
+        // head
+        let head_w = self.decode_input("lm_head", vec![v, d])?;
+        let logits = head_art.run_f32(&[
+            Input::F32(x, vec![b, t, d]),
+            Input::F32(ones_d, vec![d]),
+            head_w,
+        ])?;
+        self.forwards += 1;
+        Ok(logits)
+    }
+
+    /// Forward with *pre-decoded raw* weights (bypasses ECF8) — the
+    /// baseline for bit-exactness checks (Figure 3's pixel-identity).
+    pub fn forward_raw(
+        &mut self,
+        tokens: &[i32],
+        batch: usize,
+        raw: &std::collections::HashMap<String, Vec<u8>>,
+    ) -> Result<Vec<f32>> {
+        assert_eq!(tokens.len(), batch * SEQ_LEN);
+        let d = self.cfg.hidden as i64;
+        let v = self.cfg.vocab as i64;
+        let t = SEQ_LEN as i64;
+        let b = batch as i64;
+        let q_dim = (self.cfg.n_heads * self.cfg.head_dim) as i64;
+        let kv_dim = (self.cfg.n_kv_heads * self.cfg.head_dim) as i64;
+        let ffn = self.cfg.ffn_inter as i64;
+        let get = |name: &str, shape: Vec<i64>| -> Result<Input> {
+            Ok(Input::U8(
+                raw.get(name)
+                    .ok_or_else(|| anyhow!("raw tensor {name} missing"))?
+                    .clone(),
+                shape,
+            ))
+        };
+
+        let embed_art = self.rt.load(&format!("{}_embed_b{batch}", self.prefix))?;
+        let layer_art = self.rt.load(&format!("{}_layer_b{batch}", self.prefix))?;
+        let head_art = self.rt.load(&format!("{}_head_b{batch}", self.prefix))?;
+
+        let mut x = embed_art.run_f32(&[
+            Input::I32(tokens.to_vec(), vec![b, t]),
+            get("embed_tokens", vec![v, d])?,
+        ])?;
+        let ones_d = vec![1.0f32; d as usize];
+        for l in 0..self.cfg.n_layers {
+            let inputs = vec![
+                Input::F32(x, vec![b, t, d]),
+                Input::F32(ones_d.clone(), vec![d]),
+                get(&format!("layers.{l}.attn.q_proj"), vec![q_dim, d])?,
+                get(&format!("layers.{l}.attn.k_proj"), vec![kv_dim, d])?,
+                get(&format!("layers.{l}.attn.v_proj"), vec![kv_dim, d])?,
+                get(&format!("layers.{l}.attn.o_proj"), vec![d, q_dim])?,
+                Input::F32(ones_d.clone(), vec![d]),
+                get(&format!("layers.{l}.mlp.gate"), vec![ffn, d])?,
+                get(&format!("layers.{l}.mlp.up"), vec![ffn, d])?,
+                get(&format!("layers.{l}.mlp.down"), vec![d, ffn])?,
+            ];
+            x = layer_art.run_f32(&inputs)?;
+        }
+        let logits = head_art.run_f32(&[
+            Input::F32(x, vec![b, t, d]),
+            Input::F32(ones_d, vec![d]),
+            get("lm_head", vec![v, d])?,
+        ])?;
+        Ok(logits)
+    }
+
+    /// JIT decompression statistics.
+    pub fn jit_stats(&self) -> crate::tensormgr::jit::JitStats {
+        self.jit.stats()
+    }
+}
+
+/// Load an artifact and panic-free check it exists (used by benches).
+pub fn artifact_available(dir: &std::path::Path, name: &str) -> bool {
+    dir.join(format!("{name}.hlo.txt")).exists()
+}
+
+#[allow(unused)]
+fn _assert_artifact_type_usage(_a: &Artifact) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::tiny_llm;
+    use crate::util::prng::Xoshiro256;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let d = PjrtRuntime::default_dir();
+        if d.join("MANIFEST.txt").exists() {
+            Some(d)
+        } else {
+            eprintln!("skipping: artifacts missing");
+            None
+        }
+    }
+
+    #[test]
+    fn tiny_llm_forward_runs_and_is_deterministic() {
+        let Some(dir) = artifacts_dir() else { return };
+        let cfg = tiny_llm();
+        let model = CompressedModel::synthesize(&cfg, 1, None);
+        let mut ex = LlmExecutor::new(cfg.clone(), model, dir, None).unwrap();
+        ex.warmup(2).unwrap();
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let tokens: Vec<i32> = (0..2 * SEQ_LEN)
+            .map(|_| (rng.next_below(cfg.vocab as u64)) as i32)
+            .collect();
+        let a = ex.forward(&tokens, 2).unwrap();
+        let b = ex.forward(&tokens, 2).unwrap();
+        assert_eq!(a.len(), 2 * cfg.vocab);
+        assert!(a.iter().all(|x| x.is_finite()));
+        assert_eq!(a, b, "deterministic");
+        assert_eq!(ex.forwards, 2);
+    }
+
+    #[test]
+    fn compressed_path_is_bit_exact_vs_raw() {
+        // Figure 3's losslessness, end-to-end: logits through ECF8
+        // decode == logits from the original weights, bit for bit.
+        let Some(dir) = artifacts_dir() else { return };
+        let cfg = tiny_llm();
+        let model = CompressedModel::synthesize(&cfg, 2, None);
+        let raw: std::collections::HashMap<String, Vec<u8>> = cfg
+            .tensors()
+            .iter()
+            .map(|s| {
+                (
+                    s.name.clone(),
+                    crate::model::weights::generate_tensor_fp8(s, 2),
+                )
+            })
+            .collect();
+        let mut ex = LlmExecutor::new(cfg.clone(), model, dir, None).unwrap();
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let tokens: Vec<i32> = (0..2 * SEQ_LEN)
+            .map(|_| (rng.next_below(cfg.vocab as u64)) as i32)
+            .collect();
+        let via_ecf8 = ex.forward(&tokens, 2).unwrap();
+        let via_raw = ex.forward_raw(&tokens, 2, &raw).unwrap();
+        assert_eq!(via_ecf8.len(), via_raw.len());
+        for (i, (a, b)) in via_ecf8.iter().zip(&via_raw).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "logit {i} differs: {a} vs {b}"
+            );
+        }
+    }
+}

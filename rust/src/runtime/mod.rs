@@ -1,0 +1,17 @@
+//! Runtime: PJRT execution of the AOT-lowered HLO artifacts.
+//!
+//! * [`pjrt`] — thin wrapper over the `xla` crate: load HLO text, compile
+//!   once, execute many times. One compiled executable per artifact.
+//! * [`executor`] — the model driver: runs the pico/tiny LLM forward
+//!   (embed → N layers → head) feeding weights decompressed just-in-time
+//!   by [`crate::tensormgr`], plus the DiT block driver.
+//!
+//! Python never runs here: artifacts are produced once by
+//! `make artifacts` and the request path is rust-only.
+
+pub mod executor;
+pub mod pjrt;
+
+
+pub use executor::LlmExecutor;
+pub use pjrt::{Artifact, PjrtRuntime};

@@ -1,0 +1,223 @@
+//! PJRT wrapper: `PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//! → compile → execute (the /opt/xla-example/load_hlo pattern).
+//!
+//! Artifacts are lowered with `return_tuple=True`, so every execution
+//! returns a 1-tuple that is unwrapped here.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One compiled HLO artifact.
+pub struct Artifact {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Typed input buffer for an execution.
+pub enum Input {
+    F32(Vec<f32>, Vec<i64>),
+    U8(Vec<u8>, Vec<i64>),
+    I32(Vec<i32>, Vec<i64>),
+}
+
+impl Input {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        fn dims(shape: &[i64]) -> Vec<usize> {
+            shape.iter().map(|&d| d as usize).collect()
+        }
+        Ok(match self {
+            Input::F32(data, shape) => xla::Literal::vec1(data).reshape(shape)?,
+            // the crate has no u8 NativeType; build via untyped bytes
+            Input::U8(data, shape) => xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::U8,
+                &dims(shape),
+                data,
+            )?,
+            Input::I32(data, shape) => xla::Literal::vec1(data).reshape(shape)?,
+        })
+    }
+}
+
+impl Artifact {
+    /// Execute with the given inputs; returns the tuple element 0 as f32
+    /// data (all our artifacts return a single f32 or i32 tensor; i32
+    /// results use [`Artifact::run_i32`]).
+    pub fn run_f32(&self, inputs: &[Input]) -> Result<Vec<f32>> {
+        let lit = self.run_literal(inputs)?;
+        Ok(lit.to_vec::<f32>()?)
+    }
+
+    pub fn run_i32(&self, inputs: &[Input]) -> Result<Vec<i32>> {
+        let lit = self.run_literal(inputs)?;
+        Ok(lit.to_vec::<i32>()?)
+    }
+
+    fn run_literal(&self, inputs: &[Input]) -> Result<xla::Literal> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|i| i.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        // return_tuple=True => unwrap the 1-tuple
+        Ok(result.to_tuple1()?)
+    }
+}
+
+/// The PJRT CPU runtime: loads artifacts by name from the artifacts
+/// directory, compiling each once and caching the executable.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, std::sync::Arc<Artifact>>,
+}
+
+impl PjrtRuntime {
+    /// CPU client over `dir` (usually `artifacts/`).
+    pub fn new<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            dir: dir.as_ref().to_path_buf(),
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Locate the artifacts directory: `$ECF8_ARTIFACTS`, `artifacts/`,
+    /// or `../artifacts/` relative to the current dir.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("ECF8_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        for cand in ["artifacts", "../artifacts"] {
+            let p = PathBuf::from(cand);
+            if p.join("MANIFEST.txt").exists() {
+                return p;
+            }
+        }
+        PathBuf::from("artifacts")
+    }
+
+    /// Load (compile-and-cache) an artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<std::sync::Arc<Artifact>> {
+        if let Some(a) = self.cache.get(name) {
+            return Ok(a.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let art = std::sync::Arc::new(Artifact {
+            name: name.to_string(),
+            exe,
+        });
+        self.cache.insert(name.to_string(), art.clone());
+        Ok(art)
+    }
+
+    /// Artifact names listed in MANIFEST.txt.
+    pub fn manifest(&self) -> Result<Vec<String>> {
+        let text = std::fs::read_to_string(self.dir.join("MANIFEST.txt"))?;
+        Ok(text
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(|l| l.split('\t').next().unwrap_or("").to_string())
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<PjrtRuntime> {
+        let dir = PjrtRuntime::default_dir();
+        if !dir.join("MANIFEST.txt").exists() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return None;
+        }
+        Some(PjrtRuntime::new(dir).expect("cpu client"))
+    }
+
+    #[test]
+    fn manifest_lists_artifacts() {
+        let Some(rt) = runtime() else { return };
+        let names = rt.manifest().unwrap();
+        assert!(names.iter().any(|n| n == "fp8_matmul_demo"), "{names:?}");
+        assert!(names.iter().any(|n| n == "pico_llm_layer_b8"));
+    }
+
+    #[test]
+    fn demo_matmul_executes_and_matches_cpu_decode() {
+        let Some(mut rt) = runtime() else { return };
+        let art = rt.load("fp8_matmul_demo").unwrap();
+        // x = identity-ish pattern, w = known fp8 bytes
+        let m = 128usize;
+        let k = 256usize;
+        let n = 128usize;
+        let mut rng = crate::util::prng::Xoshiro256::seed_from_u64(4);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.next_f32() - 0.5).collect();
+        let w: Vec<u8> = (0..k * n)
+            .map(|_| {
+                let v = (crate::util::sampling::normal(&mut rng) * 0.05) as f32;
+                crate::fp8::F8E4M3::from_f32(v).to_bits()
+            })
+            .collect();
+        let out = art
+            .run_f32(&[
+                Input::F32(x.clone(), vec![m as i64, k as i64]),
+                Input::U8(w.clone(), vec![k as i64, n as i64]),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), m * n);
+        // reference on the rust side
+        let table = crate::fp8::e4m3_f32_table();
+        let mut expect = vec![0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let a = x[i * k + kk];
+                for j in 0..n {
+                    expect[i * n + j] += a * table[w[kk * n + j] as usize];
+                }
+            }
+        }
+        for (o, e) in out.iter().zip(&expect) {
+            assert!((o - e).abs() < 1e-3 * e.abs().max(1.0), "{o} vs {e}");
+        }
+    }
+
+    #[test]
+    fn exponent_hist_artifact_matches_rust_histogram() {
+        let Some(mut rt) = runtime() else { return };
+        let art = rt.load("exponent_hist_demo").unwrap();
+        let mut rng = crate::util::prng::Xoshiro256::seed_from_u64(5);
+        let bits: Vec<u8> = (0..65536).map(|_| (rng.next_u64() >> 56) as u8).collect();
+        let out = art
+            .run_i32(&[Input::U8(bits.clone(), vec![65536])])
+            .unwrap();
+        let expect =
+            crate::codec::encode::exponent_histogram(&bits, crate::codec::Fp8Format::E4M3);
+        assert_eq!(out.len(), 16);
+        for (i, (&o, &e)) in out.iter().zip(&expect).enumerate() {
+            assert_eq!(o as u64, e, "bin {i}");
+        }
+    }
+
+    #[test]
+    fn artifact_cache_reuses_compilation() {
+        let Some(mut rt) = runtime() else { return };
+        let a1 = rt.load("fp8_matmul_demo").unwrap();
+        let a2 = rt.load("fp8_matmul_demo").unwrap();
+        assert!(std::sync::Arc::ptr_eq(&a1, &a2));
+    }
+}

@@ -1,0 +1,69 @@
+//! The §3.3 shared decode buffer: "a single pre-allocated GPU memory
+//! buffer of size equal to the largest layer's weight tensor, eliminating
+//! dynamic memory allocation overhead during inference".
+//!
+//! Here the buffer is host memory handed to PJRT; the contract is the
+//! same — zero allocation on the request path, reused across layers.
+
+/// A reusable, pre-allocated decode target.
+pub struct DecodeBuffer {
+    buf: Vec<u8>,
+    /// high-water mark of requested sizes (for diagnostics)
+    peak_request: usize,
+}
+
+impl DecodeBuffer {
+    /// Allocate once with the largest tensor size the model needs.
+    pub fn with_capacity(bytes: usize) -> Self {
+        Self {
+            buf: vec![0u8; bytes],
+            peak_request: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn peak_request(&self) -> usize {
+        self.peak_request
+    }
+
+    /// Borrow the first `n` bytes. Panics if the buffer was sized too
+    /// small — that's a configuration bug (the §3.3 invariant is that the
+    /// buffer covers the largest layer).
+    pub fn slice_mut(&mut self, n: usize) -> &mut [u8] {
+        assert!(
+            n <= self.buf.len(),
+            "decode buffer too small: need {n}, have {}",
+            self.buf.len()
+        );
+        self.peak_request = self.peak_request.max(n);
+        &mut self.buf[..n]
+    }
+
+    pub fn slice(&self, n: usize) -> &[u8] {
+        &self.buf[..n]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuse_without_reallocation() {
+        let mut b = DecodeBuffer::with_capacity(1024);
+        let p0 = b.slice_mut(512).as_ptr() as usize;
+        let p1 = b.slice_mut(1024).as_ptr() as usize;
+        assert_eq!(p0, p1, "no reallocation");
+        assert_eq!(b.peak_request(), 1024);
+    }
+
+    #[test]
+    #[should_panic(expected = "decode buffer too small")]
+    fn oversized_request_panics() {
+        let mut b = DecodeBuffer::with_capacity(8);
+        b.slice_mut(9);
+    }
+}

@@ -1,0 +1,148 @@
+//! Just-in-time layer decompression (§3.3): the forward hook analogue.
+//!
+//! Before layer ℓᵢ executes, its tensors are decoded from their ECF8
+//! blobs into the shared [`DecodeBuffer`]; the buffer is recycled for
+//! ℓᵢ₊₁ as soon as ℓᵢ's execution has consumed it (PJRT copies inputs
+//! into device buffers at execute time, matching the paper's
+//! "buffer becomes available after the layer's forward pass").
+//!
+//! Optional prefetch: with a thread pool, the next layer's tensors are
+//! decoded into a second buffer while the current layer executes —
+//! double buffering, the standard latency-hiding move.
+
+use super::buffer::DecodeBuffer;
+use crate::codec::decode::decode_into;
+use crate::codec::Ecf8Blob;
+use crate::util::threadpool::ThreadPool;
+use std::sync::Arc;
+
+/// Decompression statistics (per model forward).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct JitStats {
+    pub tensors_decoded: u64,
+    pub bytes_decoded: u64,
+    pub decode_seconds: f64,
+}
+
+/// JIT decompressor bound to a shared decode buffer.
+pub struct JitDecompressor {
+    buffer: DecodeBuffer,
+    pool: Option<Arc<ThreadPool>>,
+    stats: JitStats,
+}
+
+impl JitDecompressor {
+    /// `max_tensor_bytes` — the largest decoded tensor in the model
+    /// (the §3.3 buffer size); `pool` — optional block-parallel decode.
+    pub fn new(max_tensor_bytes: usize, pool: Option<Arc<ThreadPool>>) -> Self {
+        Self {
+            buffer: DecodeBuffer::with_capacity(max_tensor_bytes),
+            pool,
+            stats: JitStats::default(),
+        }
+    }
+
+    /// Decode `blob` into the shared buffer and run `consume` on the
+    /// decoded bytes (the layer execution). The buffer is free again when
+    /// this returns.
+    pub fn with_decoded<R>(&mut self, blob: &Ecf8Blob, consume: impl FnOnce(&[u8]) -> R) -> R {
+        let t0 = std::time::Instant::now();
+        let dst = self.buffer.slice_mut(blob.n_elem);
+        decode_into(blob, dst, self.pool.as_deref());
+        self.stats.tensors_decoded += 1;
+        self.stats.bytes_decoded += blob.n_elem as u64;
+        self.stats.decode_seconds += t0.elapsed().as_secs_f64();
+        consume(self.buffer.slice(blob.n_elem))
+    }
+
+    /// Decode a set of tensors sequentially into the shared buffer,
+    /// calling `consume` once per tensor (layer-by-layer order).
+    pub fn for_each_decoded(
+        &mut self,
+        blobs: &[&Ecf8Blob],
+        mut consume: impl FnMut(usize, &[u8]),
+    ) {
+        for (i, blob) in blobs.iter().enumerate() {
+            self.with_decoded(blob, |bytes| consume(i, bytes));
+        }
+    }
+
+    pub fn stats(&self) -> JitStats {
+        self.stats
+    }
+
+    pub fn buffer_capacity(&self) -> usize {
+        self.buffer.capacity()
+    }
+
+    /// Decode throughput so far (bytes of FP8 produced per second).
+    pub fn decode_throughput_bps(&self) -> f64 {
+        if self.stats.decode_seconds == 0.0 {
+            return 0.0;
+        }
+        self.stats.bytes_decoded as f64 / self.stats.decode_seconds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::compress_fp8;
+    use crate::util::prng::Xoshiro256;
+
+    fn blob(n: usize, seed: u64) -> (Vec<u8>, Ecf8Blob) {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let data: Vec<u8> = (0..n)
+            .map(|_| {
+                let x = (crate::util::sampling::normal(&mut rng) * 0.05) as f32;
+                crate::fp8::F8E4M3::from_f32(x).to_bits()
+            })
+            .collect();
+        let b = compress_fp8(&data);
+        (data, b)
+    }
+
+    #[test]
+    fn decodes_bit_exact_into_shared_buffer() {
+        let (d1, b1) = blob(10_000, 1);
+        let (d2, b2) = blob(5_000, 2);
+        let mut jit = JitDecompressor::new(10_000, None);
+        jit.with_decoded(&b1, |bytes| assert_eq!(bytes, &d1[..]));
+        jit.with_decoded(&b2, |bytes| assert_eq!(bytes, &d2[..]));
+        assert_eq!(jit.stats().tensors_decoded, 2);
+        assert_eq!(jit.stats().bytes_decoded, 15_000);
+    }
+
+    #[test]
+    fn parallel_pool_gives_same_bytes() {
+        let pool = Arc::new(ThreadPool::new(4));
+        let (d, b) = blob(300_000, 3);
+        let mut jit = JitDecompressor::new(300_000, Some(pool));
+        jit.with_decoded(&b, |bytes| assert_eq!(bytes, &d[..]));
+    }
+
+    #[test]
+    fn for_each_decoded_visits_in_order() {
+        let (d1, b1) = blob(1000, 4);
+        let (d2, b2) = blob(2000, 5);
+        let mut jit = JitDecompressor::new(2000, None);
+        let mut seen = Vec::new();
+        jit.for_each_decoded(&[&b1, &b2], |i, bytes| {
+            seen.push((i, bytes.len()));
+            if i == 0 {
+                assert_eq!(bytes, &d1[..]);
+            } else {
+                assert_eq!(bytes, &d2[..]);
+            }
+        });
+        assert_eq!(seen, vec![(0, 1000), (1, 2000)]);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let (_, b) = blob(100_000, 6);
+        let mut jit = JitDecompressor::new(100_000, None);
+        jit.with_decoded(&b, |_| ());
+        assert!(jit.decode_throughput_bps() > 0.0);
+    }
+}

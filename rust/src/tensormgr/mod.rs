@@ -1,0 +1,11 @@
+//! Tensor management (§3.3): just-in-time weight decompression with a
+//! single pre-allocated buffer, plus the VRAM-offload device model used
+//! by the DiT experiments (Table 3).
+
+pub mod buffer;
+pub mod jit;
+pub mod offload;
+
+pub use buffer::DecodeBuffer;
+pub use jit::JitDecompressor;
+pub use offload::{DeviceModel, OffloadSim};

@@ -1,0 +1,209 @@
+//! VRAM-offload device model — the substrate for Table 3 (DiT inference
+//! under DiffSynth-style VRAM management) and the capacity arithmetic of
+//! Table 1 ("Supported Machine").
+//!
+//! The paper's DiT latency gains come from one mechanism (§4.2): offload
+//! managers move weight components between host and device around every
+//! denoising step, and ECF8 moves ~25 % fewer bytes. This module models
+//! that pipeline: reload time = bytes / link bandwidth (+ decode time for
+//! compressed weights, overlapped when the decoder outruns the link),
+//! compute time = calibrated per-step cost.
+//!
+//! Bandwidths/capacities are the published SKU numbers (DESIGN.md
+//! "Substitutions": capacity arithmetic is exact; bandwidth-bound
+//! latencies reproduce ratios).
+
+/// A GPU SKU: capacity and bandwidths.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceModel {
+    pub name: &'static str,
+    pub vram_bytes: u64,
+    /// device memory bandwidth, bytes/s
+    pub hbm_bps: f64,
+    /// host↔device link bandwidth, bytes/s (PCIe or NVLink-C2C)
+    pub link_bps: f64,
+    /// sustained on-device ECF8 decode throughput, output bytes/s.
+    /// The paper's kernel decodes at HBM-class rates; we use a
+    /// conservative fraction of HBM bandwidth.
+    pub decode_bps: f64,
+}
+
+const GB: u64 = 1_000_000_000;
+const GBPS: f64 = 1e9;
+
+/// The SKUs named in Tables 1–3.
+pub fn device_zoo() -> Vec<DeviceModel> {
+    fn dev(name: &'static str, vram_gb: u64, hbm: f64, link: f64) -> DeviceModel {
+        DeviceModel {
+            name,
+            vram_bytes: vram_gb * GB,
+            hbm_bps: hbm * GBPS,
+            link_bps: link * GBPS,
+            decode_bps: hbm * GBPS * 0.25,
+        }
+    }
+    vec![
+        dev("H100 (80 GB)", 80, 3350.0, 64.0),
+        dev("H200 (141 GB)", 141, 4800.0, 64.0),
+        dev("GH200 (96 GB)", 96, 4000.0, 450.0), // NVLink-C2C host link
+        dev("RTX5090 (32 GB)", 32, 1790.0, 64.0),
+        dev("RTX4090 (24 GB)", 24, 1008.0, 32.0),
+        dev("RTX4080 (16 GB)", 16, 717.0, 32.0),
+        dev("RTX4070 (12 GB)", 12, 504.0, 32.0),
+    ]
+}
+
+pub fn device_by_name(name: &str) -> Option<DeviceModel> {
+    device_zoo().into_iter().find(|d| d.name == name)
+}
+
+/// Smallest zoo device (by VRAM) on which `bytes` of weights fit with
+/// `headroom_frac` of VRAM reserved for activations/KV — Table 1's
+/// "Supported Machine" logic. `count` identical devices share the bytes.
+pub fn smallest_supporting(bytes: u64, count: u64, headroom_frac: f64) -> Option<DeviceModel> {
+    let mut zoo = device_zoo();
+    zoo.sort_by_key(|d| d.vram_bytes);
+    zoo.into_iter().find(|d| {
+        let usable = (d.vram_bytes as f64 * (1.0 - headroom_frac)) * count as f64;
+        bytes as f64 <= usable
+    })
+}
+
+/// One DiT serving configuration under VRAM management.
+#[derive(Debug, Clone, Copy)]
+pub struct OffloadSim {
+    pub device: DeviceModel,
+    /// total weight bytes moved per denoising step (the offloaded
+    /// component set)
+    pub reload_bytes_raw: u64,
+    /// same weights in ECF8
+    pub reload_bytes_compressed: u64,
+    /// pure compute time per step, seconds (weights resident)
+    pub compute_per_step_s: f64,
+    pub n_steps: usize,
+    /// largest single offloaded component (the decode staging buffer —
+    /// §3.3: one pre-allocated buffer of the largest component's size)
+    pub largest_component_bytes: u64,
+}
+
+/// Per-variant simulated result.
+#[derive(Debug, Clone, Copy)]
+pub struct OffloadResult {
+    pub step_latency_s: f64,
+    pub e2e_latency_s: f64,
+    /// peak device memory: resident working set + staged component
+    pub peak_memory_bytes: u64,
+}
+
+impl OffloadSim {
+    /// Latency for the FP8 baseline: every step pays raw-bytes transfer.
+    pub fn run_fp8(&self) -> OffloadResult {
+        let transfer = self.reload_bytes_raw as f64 / self.device.link_bps;
+        let step = transfer + self.compute_per_step_s;
+        OffloadResult {
+            step_latency_s: step,
+            e2e_latency_s: step * self.n_steps as f64,
+            peak_memory_bytes: self.reload_bytes_raw,
+        }
+    }
+
+    /// Latency for ECF8: compressed bytes over the link, then on-device
+    /// block-parallel decode; decode overlaps the next component's
+    /// transfer, so the step pays max(transfer, decode) + compute, and
+    /// peak memory holds compressed + decoded of the staged component.
+    pub fn run_ecf8(&self) -> OffloadResult {
+        let transfer = self.reload_bytes_compressed as f64 / self.device.link_bps;
+        let decode = self.reload_bytes_raw as f64 / self.device.decode_bps;
+        let step = transfer.max(decode) + self.compute_per_step_s;
+        OffloadResult {
+            step_latency_s: step,
+            e2e_latency_s: step * self.n_steps as f64,
+            // compressed weights stay resident; decode stages one
+            // component at a time through the shared buffer
+            peak_memory_bytes: self.reload_bytes_compressed + self.largest_component_bytes,
+        }
+    }
+
+    /// (latency ↓ %, memory ↓ %) of ECF8 vs FP8 — Table 3's last columns.
+    pub fn improvement(&self) -> (f64, f64) {
+        let fp8 = self.run_fp8();
+        let ecf8 = self.run_ecf8();
+        (
+            (1.0 - ecf8.e2e_latency_s / fp8.e2e_latency_s) * 100.0,
+            (1.0 - ecf8.peak_memory_bytes as f64 / fp8.peak_memory_bytes as f64) * 100.0,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_covers_paper_skus() {
+        let names: Vec<&str> = device_zoo().iter().map(|d| d.name).collect();
+        for want in [
+            "H100 (80 GB)",
+            "H200 (141 GB)",
+            "GH200 (96 GB)",
+            "RTX4070 (12 GB)",
+            "RTX4090 (24 GB)",
+        ] {
+            assert!(names.contains(&want), "{want}");
+        }
+    }
+
+    #[test]
+    fn smallest_supporting_matches_table1_cases() {
+        // Wan2.1: 17.40 GB raw exceeds RTX4080 16GB budget with headroom;
+        // 12.65 GB compressed fits (the paper's example)
+        let raw = smallest_supporting(17_400_000_000, 1, 0.15).unwrap();
+        let comp = smallest_supporting(12_650_000_000, 1, 0.15).unwrap();
+        assert!(comp.vram_bytes <= raw.vram_bytes);
+        assert_eq!(comp.name, "RTX4080 (16 GB)");
+        // Qwen3-8B: 5.61 GB fits the 12 GB card
+        assert_eq!(
+            smallest_supporting(5_610_000_000, 1, 0.15).unwrap().name,
+            "RTX4070 (12 GB)"
+        );
+    }
+
+    #[test]
+    fn nothing_supports_absurd_sizes() {
+        assert!(smallest_supporting(10_000 * GB, 1, 0.1).is_none());
+    }
+
+    #[test]
+    fn ecf8_offload_is_faster_and_smaller() {
+        let sim = OffloadSim {
+            device: device_by_name("GH200 (96 GB)").unwrap(),
+            reload_bytes_raw: 10 * GB,
+            reload_bytes_compressed: 8 * GB,
+            compute_per_step_s: 0.2,
+            n_steps: 30,
+            largest_component_bytes: GB,
+        };
+        let fp8 = sim.run_fp8();
+        let ecf8 = sim.run_ecf8();
+        assert!(ecf8.e2e_latency_s < fp8.e2e_latency_s);
+        assert!(ecf8.peak_memory_bytes < fp8.peak_memory_bytes);
+        let (lat_down, mem_down) = sim.improvement();
+        assert!(lat_down > 0.0 && mem_down > 0.0);
+    }
+
+    #[test]
+    fn compute_bound_models_show_small_gains() {
+        // Wan-style: compute dominates -> latency gain is small (the
+        // paper's 3-4 % observation)
+        let sim = OffloadSim {
+            device: device_by_name("GH200 (96 GB)").unwrap(),
+            reload_bytes_raw: 17 * GB,
+            reload_bytes_compressed: 12 * GB,
+            compute_per_step_s: 9.0,
+            n_steps: 50,
+            largest_component_bytes: 2 * GB,
+        };
+        let (lat_down, _) = sim.improvement();
+        assert!(lat_down > 0.0 && lat_down < 10.0, "{lat_down}");
+    }
+}

@@ -1,0 +1,231 @@
+//! Minimal command-line parser (substrate: no `clap` in the offline
+//! registry). Supports subcommands, `--flag`, `--key value` /
+//! `--key=value`, and positional arguments, with generated help text.
+
+use std::collections::BTreeMap;
+
+/// Declarative option specification.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Option<T> {
+        self.get(key).and_then(|v| v.parse().ok())
+    }
+
+    pub fn get_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get_parse(key).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// A command with named options, parsed from an iterator of raw args.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option `{0}` (see --help)")]
+    UnknownOption(String),
+    #[error("option `{0}` requires a value")]
+    MissingValue(String),
+    #[error("help requested")]
+    HelpRequested,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default: None,
+        });
+        self
+    }
+
+    pub fn opt_default(
+        mut self,
+        name: &'static str,
+        help: &'static str,
+        default: &'static str,
+    ) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default: Some(default),
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let val = if o.takes_value { " <value>" } else { "" };
+            let def = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{}{}\n      {}{}\n", o.name, val, o.help, def));
+        }
+        s
+    }
+
+    /// Parse raw arguments (not including argv[0] / subcommand name).
+    pub fn parse<I: IntoIterator<Item = String>>(&self, raw: I) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(CliError::HelpRequested);
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| CliError::UnknownOption(key.clone()))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| CliError::MissingValue(key.clone()))?,
+                    };
+                    args.values.insert(key, val);
+                } else {
+                    args.flags.push(key);
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("test", "a test command")
+            .opt("model", "model name")
+            .opt_default("seed", "rng seed", "42")
+            .flag("verbose", "log more")
+    }
+
+    fn sv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let a = cmd().parse(sv(&["--model", "qwen3-8b"])).unwrap();
+        assert_eq!(a.get("model"), Some("qwen3-8b"));
+        let a = cmd().parse(sv(&["--model=qwen3-8b"])).unwrap();
+        assert_eq!(a.get("model"), Some("qwen3-8b"));
+    }
+
+    #[test]
+    fn default_applies_and_overrides() {
+        let a = cmd().parse(sv(&[])).unwrap();
+        assert_eq!(a.get_parse::<u64>("seed"), Some(42));
+        let a = cmd().parse(sv(&["--seed", "7"])).unwrap();
+        assert_eq!(a.get_parse::<u64>("seed"), Some(7));
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = cmd()
+            .parse(sv(&["input.bin", "--verbose", "out.bin"]))
+            .unwrap();
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.positional(), &["input.bin", "out.bin"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(matches!(
+            cmd().parse(sv(&["--bogus"])),
+            Err(CliError::UnknownOption(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(
+            cmd().parse(sv(&["--model"])),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn help_requested() {
+        assert!(matches!(
+            cmd().parse(sv(&["-h"])),
+            Err(CliError::HelpRequested)
+        ));
+        assert!(cmd().help_text().contains("--seed"));
+    }
+}

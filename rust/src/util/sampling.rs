@@ -1,0 +1,187 @@
+//! Random-variate sampling on top of [`crate::util::prng`].
+//!
+//! The centrepiece is the Chambers–Mallows–Stuck (CMS) sampler for
+//! symmetric α-stable laws, the distribution family the paper's §2 theory
+//! is built on: trained weights are modelled as X ~ S_α(β=0, γ, δ).
+
+use super::prng::Xoshiro256;
+use std::f64::consts::PI;
+
+/// Standard normal via the Marsaglia polar method (no trig, no tables).
+pub fn normal(rng: &mut Xoshiro256) -> f64 {
+    loop {
+        let u = 2.0 * rng.next_f64() - 1.0;
+        let v = 2.0 * rng.next_f64() - 1.0;
+        let s = u * u + v * v;
+        if s > 0.0 && s < 1.0 {
+            return u * (-2.0 * s.ln() / s).sqrt();
+        }
+    }
+}
+
+/// Symmetric α-stable variate S_α(β=0, γ=1, δ=0) via the
+/// Chambers–Mallows–Stuck method.
+///
+/// For β = 0 the CMS formula reduces to
+///   X = sin(αU) / cos(U)^{1/α} · ( cos(U − αU) / W )^{(1−α)/α}
+/// with U ~ Uniform(−π/2, π/2), W ~ Exp(1). α = 2 recovers a Gaussian with
+/// variance 2; α = 1 recovers the standard Cauchy.
+pub fn alpha_stable_std(rng: &mut Xoshiro256, alpha: f64) -> f64 {
+    assert!(alpha > 0.0 && alpha <= 2.0, "alpha must be in (0, 2]");
+    if (alpha - 2.0).abs() < 1e-12 {
+        // S_2(0,1,0) is N(0, 2): exact special case, avoids 0/0 in CMS.
+        return normal(rng) * std::f64::consts::SQRT_2;
+    }
+    let u = PI * (rng.next_f64() - 0.5); // Uniform(-pi/2, pi/2)
+    let w = -rng.next_f64().max(f64::MIN_POSITIVE).ln(); // Exp(1)
+    if (alpha - 1.0).abs() < 1e-9 {
+        // Cauchy
+        return u.tan();
+    }
+    let au = alpha * u;
+    (au.sin() / u.cos().powf(1.0 / alpha)) * ((u - au).cos() / w).powf((1.0 - alpha) / alpha)
+}
+
+/// Scaled/shifted symmetric α-stable: γ·X + δ with X ~ S_α(0,1,0).
+pub fn alpha_stable(rng: &mut Xoshiro256, alpha: f64, gamma: f64, delta: f64) -> f64 {
+    gamma * alpha_stable_std(rng, alpha) + delta
+}
+
+/// Fill a buffer with symmetric α-stable f32 variates.
+pub fn fill_alpha_stable_f32(rng: &mut Xoshiro256, alpha: f64, gamma: f64, out: &mut [f32]) {
+    for v in out.iter_mut() {
+        *v = (gamma * alpha_stable_std(rng, alpha)) as f32;
+    }
+}
+
+/// Exponential(1) variate.
+pub fn exponential(rng: &mut Xoshiro256) -> f64 {
+    -rng.next_f64().max(f64::MIN_POSITIVE).ln()
+}
+
+/// Pareto(α) variate with x_min = 1 (pure power-law tail, used by tests to
+/// cross-check tail-index estimation).
+pub fn pareto(rng: &mut Xoshiro256, alpha: f64) -> f64 {
+    (1.0 - rng.next_f64()).max(f64::MIN_POSITIVE).powf(-1.0 / alpha)
+}
+
+/// Sample from a discrete distribution given (unnormalised) weights.
+/// Linear scan — fine for the ≤ 256-symbol alphabets used here.
+pub fn discrete(rng: &mut Xoshiro256, weights: &[f64]) -> usize {
+    let total: f64 = weights.iter().sum();
+    let mut target = rng.next_f64() * total;
+    for (i, &w) in weights.iter().enumerate() {
+        target -= w;
+        if target <= 0.0 {
+            return i;
+        }
+    }
+    weights.len() - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn moments(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        (mean, var)
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let xs: Vec<f64> = (0..200_000).map(|_| normal(&mut rng)).collect();
+        let (mean, var) = moments(&xs);
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn stable_alpha2_is_gaussian_var2() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let xs: Vec<f64> = (0..200_000)
+            .map(|_| alpha_stable_std(&mut rng, 2.0))
+            .collect();
+        let (mean, var) = moments(&xs);
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 2.0).abs() < 0.06, "var={var}");
+    }
+
+    #[test]
+    fn stable_alpha1_is_cauchy_median() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let mut xs: Vec<f64> = (0..100_001)
+            .map(|_| alpha_stable_std(&mut rng, 1.0))
+            .collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = xs[xs.len() / 2];
+        assert!(median.abs() < 0.03, "median={median}");
+        // quartiles of standard Cauchy are ±1
+        let q1 = xs[xs.len() / 4];
+        let q3 = xs[3 * xs.len() / 4];
+        assert!((q1 + 1.0).abs() < 0.05, "q1={q1}");
+        assert!((q3 - 1.0).abs() < 0.05, "q3={q3}");
+    }
+
+    #[test]
+    fn stable_heavy_tail_rate() {
+        // For alpha=1.5 the tail P(|X|>x) ~ C x^-1.5: check the empirical
+        // tail ratio between x=10 and x=20 is near 2^-1.5.
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let n = 2_000_000usize;
+        let mut c10 = 0usize;
+        let mut c20 = 0usize;
+        for _ in 0..n {
+            let x = alpha_stable_std(&mut rng, 1.5).abs();
+            if x > 10.0 {
+                c10 += 1;
+            }
+            if x > 20.0 {
+                c20 += 1;
+            }
+        }
+        let ratio = c20 as f64 / c10 as f64;
+        let expect = 2f64.powf(-1.5);
+        assert!(
+            (ratio - expect).abs() < 0.05,
+            "ratio={ratio} expect={expect}"
+        );
+    }
+
+    #[test]
+    fn pareto_tail_index() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let n = 500_000;
+        let alpha = 2.0;
+        let count_above = |xs: &[f64], t: f64| xs.iter().filter(|&&x| x > t).count() as f64;
+        let xs: Vec<f64> = (0..n).map(|_| pareto(&mut rng, alpha)).collect();
+        let ratio = count_above(&xs, 4.0) / count_above(&xs, 2.0);
+        assert!((ratio - 0.25).abs() < 0.02, "ratio={ratio}");
+    }
+
+    #[test]
+    fn discrete_respects_weights() {
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let w = [1.0, 0.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[discrete(&mut rng, &w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let frac2 = counts[2] as f64 / 40_000.0;
+        assert!((frac2 - 0.75).abs() < 0.02, "frac2={frac2}");
+    }
+
+    #[test]
+    fn gamma_scaling() {
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let xs: Vec<f64> = (0..100_000)
+            .map(|_| alpha_stable(&mut rng, 2.0, 0.01, 0.0))
+            .collect();
+        let (_, var) = moments(&xs);
+        assert!((var - 2e-4).abs() < 2e-5, "var={var}");
+    }
+}

@@ -1,0 +1,230 @@
+//! Descriptive statistics: Shannon entropy, histograms, percentiles, and
+//! the Hill tail-index estimator used to fit α from weight tensors.
+
+/// Shannon entropy (bits) of a discrete frequency table. Zero-count bins
+/// contribute nothing.
+pub fn shannon_entropy(counts: &[u64]) -> f64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let total = total as f64;
+    let mut h = 0.0;
+    for &c in counts {
+        if c > 0 {
+            let p = c as f64 / total;
+            h -= p * p.log2();
+        }
+    }
+    h
+}
+
+/// Shannon entropy (bits) of an explicit probability vector (need not be
+/// normalised; it is renormalised first).
+pub fn entropy_of_probs(probs: &[f64]) -> f64 {
+    let total: f64 = probs.iter().sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let mut h = 0.0;
+    for &p in probs {
+        if p > 0.0 {
+            let q = p / total;
+            h -= q * q.log2();
+        }
+    }
+    h
+}
+
+/// Histogram of byte values (256 bins).
+pub fn byte_histogram(data: &[u8]) -> [u64; 256] {
+    let mut hist = [0u64; 256];
+    // 4-way unrolled accumulation into separate tables removes the
+    // store-to-load dependency on a single counter array (perf pass).
+    let mut h1 = [0u64; 256];
+    let mut h2 = [0u64; 256];
+    let mut h3 = [0u64; 256];
+    let mut chunks = data.chunks_exact(4);
+    for c in &mut chunks {
+        hist[c[0] as usize] += 1;
+        h1[c[1] as usize] += 1;
+        h2[c[2] as usize] += 1;
+        h3[c[3] as usize] += 1;
+    }
+    for &b in chunks.remainder() {
+        hist[b as usize] += 1;
+    }
+    for i in 0..256 {
+        hist[i] += h1[i] + h2[i] + h3[i];
+    }
+    hist
+}
+
+/// Summary percentiles of a sample (sorts a copy).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "Summary::of on empty sample");
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            let idx = ((s.len() - 1) as f64 * p).round() as usize;
+            s[idx]
+        };
+        Summary {
+            n: s.len(),
+            mean: s.iter().sum::<f64>() / s.len() as f64,
+            min: s[0],
+            p50: pct(0.50),
+            p90: pct(0.90),
+            p99: pct(0.99),
+            max: s[s.len() - 1],
+        }
+    }
+}
+
+/// Hill estimator of the tail index α from the top-k order statistics of
+/// |X|. Standard estimator: α̂ = k / Σ_{i<k} ln(x_(i) / x_(k)).
+pub fn hill_tail_index(samples_abs: &[f64], k: usize) -> f64 {
+    assert!(k >= 2, "need k >= 2");
+    let mut s: Vec<f64> = samples_abs
+        .iter()
+        .copied()
+        .filter(|x| x.is_finite() && *x > 0.0)
+        .collect();
+    assert!(s.len() > k, "need more than k positive samples");
+    s.sort_by(|a, b| b.partial_cmp(a).unwrap()); // descending
+    let xk = s[k];
+    let sum: f64 = s[..k].iter().map(|x| (x / xk).ln()).sum();
+    k as f64 / sum
+}
+
+/// Kullback–Leibler divergence D(p‖q) in bits between two frequency tables
+/// over the same alphabet (q bins with zero mass where p>0 yield +inf).
+pub fn kl_divergence_bits(p_counts: &[u64], q_probs: &[f64]) -> f64 {
+    let total: u64 = p_counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let total = total as f64;
+    let mut d = 0.0;
+    for (i, &c) in p_counts.iter().enumerate() {
+        if c > 0 {
+            let p = c as f64 / total;
+            let q = q_probs.get(i).copied().unwrap_or(0.0);
+            if q <= 0.0 {
+                return f64::INFINITY;
+            }
+            d += p * (p / q).log2();
+        }
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entropy_uniform_256() {
+        let counts = [10u64; 256];
+        assert!((shannon_entropy(&counts) - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entropy_degenerate_is_zero() {
+        let mut counts = [0u64; 16];
+        counts[3] = 1000;
+        assert_eq!(shannon_entropy(&counts), 0.0);
+    }
+
+    #[test]
+    fn entropy_two_point() {
+        let counts = [1u64, 1];
+        assert!((shannon_entropy(&counts) - 1.0).abs() < 1e-12);
+        let counts = [3u64, 1];
+        let h = shannon_entropy(&counts);
+        // h2(0.25) = 0.811278...
+        assert!((h - 0.8112781).abs() < 1e-6);
+    }
+
+    #[test]
+    fn entropy_empty_is_zero() {
+        assert_eq!(shannon_entropy(&[]), 0.0);
+        assert_eq!(shannon_entropy(&[0, 0, 0]), 0.0);
+    }
+
+    #[test]
+    fn byte_histogram_counts() {
+        let data = [0u8, 1, 1, 255, 255, 255, 7];
+        let h = byte_histogram(&data);
+        assert_eq!(h[0], 1);
+        assert_eq!(h[1], 2);
+        assert_eq!(h[255], 3);
+        assert_eq!(h[7], 1);
+        assert_eq!(h.iter().sum::<u64>(), 7);
+    }
+
+    #[test]
+    fn byte_histogram_matches_naive_on_large_input() {
+        let data: Vec<u8> = (0..100_003u32)
+            .map(|i| (i.wrapping_mul(2654435761)) as u8)
+            .collect();
+        let fast = byte_histogram(&data);
+        let mut naive = [0u64; 256];
+        for &b in &data {
+            naive[b as usize] += 1;
+        }
+        assert_eq!(fast, naive);
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.p50 - 50.0).abs() <= 1.0);
+        assert!((s.p99 - 99.0).abs() <= 1.0);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hill_recovers_pareto_alpha() {
+        use crate::util::prng::Xoshiro256;
+        use crate::util::sampling::pareto;
+        let mut rng = Xoshiro256::seed_from_u64(10);
+        for alpha in [1.0, 1.5, 2.0] {
+            let xs: Vec<f64> = (0..200_000).map(|_| pareto(&mut rng, alpha)).collect();
+            let est = hill_tail_index(&xs, 5_000);
+            assert!(
+                (est - alpha).abs() < 0.12,
+                "alpha={alpha} est={est}"
+            );
+        }
+    }
+
+    #[test]
+    fn kl_zero_when_matching() {
+        let counts = [25u64, 25, 50];
+        let q = [0.25, 0.25, 0.5];
+        assert!(kl_divergence_bits(&counts, &q).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kl_infinite_on_unsupported() {
+        let counts = [1u64, 1];
+        let q = [1.0, 0.0];
+        assert!(kl_divergence_bits(&counts, &q).is_infinite());
+    }
+}

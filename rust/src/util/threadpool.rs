@@ -1,0 +1,218 @@
+//! A small scoped thread pool (substrate: no `rayon` in the offline
+//! registry). Drives the block-parallel ECF8 decoder, weight generation,
+//! and model-wide compression.
+//!
+//! Design: N long-lived workers pull boxed closures from a shared injector
+//! queue. `scope_chunks` provides the only pattern the codebase needs:
+//! run a closure over disjoint index ranges in parallel and wait.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Message {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed-size worker pool.
+pub struct ThreadPool {
+    tx: mpsc::Sender<Message>,
+    shared_rx: Arc<Mutex<mpsc::Receiver<Message>>>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Pool sized to the number of available CPUs.
+    pub fn with_default_size() -> Self {
+        Self::new(available_parallelism())
+    }
+
+    pub fn new(size: usize) -> Self {
+        assert!(size > 0);
+        let (tx, rx) = mpsc::channel::<Message>();
+        let shared_rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|_| {
+                let rx = Arc::clone(&shared_rx);
+                std::thread::spawn(move || loop {
+                    let msg = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match msg {
+                        Ok(Message::Run(job)) => job(),
+                        Ok(Message::Shutdown) | Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        Self {
+            tx,
+            shared_rx,
+            workers,
+            size,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.send(Message::Run(Box::new(f))).expect("pool alive");
+    }
+
+    /// Run `f(chunk_index, start, end)` over `n_items` split into
+    /// `n_chunks` near-equal ranges, in parallel; blocks until all done.
+    ///
+    /// `f` must be `Sync` because multiple workers call it concurrently on
+    /// disjoint ranges.
+    pub fn scope_chunks<F>(&self, n_items: usize, n_chunks: usize, f: F)
+    where
+        F: Fn(usize, usize, usize) + Send + Sync,
+    {
+        if n_items == 0 || n_chunks == 0 {
+            return;
+        }
+        let n_chunks = n_chunks.min(n_items);
+        let remaining = Arc::new(AtomicUsize::new(n_chunks));
+        let (done_tx, done_rx) = mpsc::channel::<()>();
+        // SAFETY: this function blocks until every chunk signals
+        // completion, so `f` outlives all uses. The borrow is smuggled to
+        // the 'static workers as a type-erased address + a monomorphised
+        // trampoline (no `F: 'static` bound needed).
+        fn trampoline<F: Fn(usize, usize, usize) + Send + Sync>(
+            addr: usize,
+            c: usize,
+            s: usize,
+            e: usize,
+        ) {
+            let f = unsafe { &*(addr as *const F) };
+            f(c, s, e);
+        }
+        let f_addr = &f as *const F as usize;
+        let call: fn(usize, usize, usize, usize) = trampoline::<F>;
+
+        let base = n_items / n_chunks;
+        let extra = n_items % n_chunks;
+        let mut start = 0usize;
+        for c in 0..n_chunks {
+            let len = base + usize::from(c < extra);
+            let end = start + len;
+            let remaining = Arc::clone(&remaining);
+            let done_tx = done_tx.clone();
+            let s = start;
+            self.submit(move || {
+                call(f_addr, c, s, end);
+                if remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                    let _ = done_tx.send(());
+                }
+            });
+            start = end;
+        }
+        drop(done_tx);
+        done_rx.recv().expect("workers signal completion");
+    }
+
+    /// Map `f` over `0..n` in parallel, collecting results in order.
+    pub fn par_map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send + Default + Clone,
+        F: Fn(usize) -> T + Send + Sync,
+    {
+        let mut out = vec![T::default(); n];
+        {
+            let slots: Vec<Mutex<&mut T>> = out.iter_mut().map(Mutex::new).collect();
+            let slots = &slots;
+            let f = &f;
+            self.scope_chunks(n, self.size * 4, move |_, s, e| {
+                for i in s..e {
+                    **slots[i].lock().unwrap() = f(i);
+                }
+            });
+        }
+        out
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in 0..self.workers.len() {
+            let _ = self.tx.send(Message::Shutdown);
+        }
+        let _ = &self.shared_rx;
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Number of CPUs (substrate for `num_cpus`).
+pub fn available_parallelism() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn scope_chunks_covers_all_indices_once() {
+        let pool = ThreadPool::new(4);
+        let n = 1000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        pool.scope_chunks(n, 16, |_, s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn scope_chunks_handles_more_chunks_than_items() {
+        let pool = ThreadPool::new(2);
+        let sum = AtomicU64::new(0);
+        pool.scope_chunks(3, 100, |_, s, e| {
+            for i in s..e {
+                sum.fetch_add(i as u64, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 0 + 1 + 2);
+    }
+
+    #[test]
+    fn scope_chunks_zero_items_is_noop() {
+        let pool = ThreadPool::new(2);
+        pool.scope_chunks(0, 8, |_, _, _| panic!("should not run"));
+    }
+
+    #[test]
+    fn par_map_ordered_results() {
+        let pool = ThreadPool::new(4);
+        let out = pool.par_map(100, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn pool_reusable_across_scopes() {
+        let pool = ThreadPool::new(3);
+        for round in 0..5u64 {
+            let total = AtomicU64::new(0);
+            pool.scope_chunks(64, 8, |_, s, e| {
+                total.fetch_add((e - s) as u64 * round, Ordering::Relaxed);
+            });
+            assert_eq!(total.load(Ordering::Relaxed), 64 * round);
+        }
+    }
+}

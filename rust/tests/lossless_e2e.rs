@@ -1,0 +1,78 @@
+//! End-to-end losslessness (Figure 3): every path from weights to outputs
+//! must be bit-exact — tensor round-trip, container round-trip, store
+//! round-trip, and the full PJRT forward via JIT-decompressed weights.
+
+use ecf8::codec::{compress_fp8, container, decompress_fp8};
+use ecf8::model::config::tiny_llm;
+use ecf8::model::store::{CompressedModel, ModelStore};
+use ecf8::model::weights::generate_tensor_fp8;
+use ecf8::runtime::executor::{LlmExecutor, SEQ_LEN};
+use ecf8::runtime::pjrt::PjrtRuntime;
+use ecf8::util::prng::Xoshiro256;
+
+#[test]
+fn every_tensor_of_a_model_roundtrips() {
+    let cfg = tiny_llm();
+    for spec in cfg.tensors() {
+        let data = generate_tensor_fp8(&spec, 11);
+        let blob = compress_fp8(&data);
+        assert_eq!(decompress_fp8(&blob), data, "{}", spec.name);
+        // and through container serialization
+        let bytes = container::serialize(&blob);
+        let back = container::deserialize(&bytes).unwrap();
+        assert_eq!(decompress_fp8(&back), data, "{} via container", spec.name);
+    }
+}
+
+#[test]
+fn store_roundtrip_preserves_bits() {
+    let cfg = tiny_llm();
+    let model = CompressedModel::synthesize(&cfg, 12, None);
+    let dir = std::env::temp_dir().join("ecf8_e2e_store");
+    std::fs::remove_dir_all(&dir).ok();
+    let store = ModelStore::new(&dir);
+    store.save(&model).unwrap();
+    let back = store.load(&cfg).unwrap();
+    for ((sa, ba), (_, bb)) in model.tensors.iter().zip(&back.tensors) {
+        assert_eq!(decompress_fp8(ba), decompress_fp8(bb), "{}", sa.name);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn pjrt_forward_bit_exact_through_full_pipeline() {
+    // generate -> compress -> save -> load -> JIT decode -> PJRT forward
+    // must equal generate -> PJRT forward, bitwise (the paper's
+    // "no deviation in model outputs").
+    let dir = PjrtRuntime::default_dir();
+    if !dir.join("MANIFEST.txt").exists() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let cfg = tiny_llm();
+    let seed = 13u64;
+    let model = CompressedModel::synthesize(&cfg, seed, None);
+    let storedir = std::env::temp_dir().join("ecf8_e2e_pjrt");
+    std::fs::remove_dir_all(&storedir).ok();
+    let store = ModelStore::new(&storedir);
+    store.save(&model).unwrap();
+    let loaded = store.load(&cfg).unwrap();
+    std::fs::remove_dir_all(&storedir).ok();
+
+    let raw: std::collections::HashMap<String, Vec<u8>> = cfg
+        .tensors()
+        .iter()
+        .map(|s| (s.name.clone(), generate_tensor_fp8(s, seed)))
+        .collect();
+
+    let mut ex = LlmExecutor::new(cfg.clone(), loaded, dir, None).unwrap();
+    let mut rng = Xoshiro256::seed_from_u64(99);
+    let tokens: Vec<i32> = (0..2 * SEQ_LEN)
+        .map(|_| rng.next_below(cfg.vocab as u64) as i32)
+        .collect();
+    let via_store = ex.forward(&tokens, 2).unwrap();
+    let via_raw = ex.forward_raw(&tokens, 2, &raw).unwrap();
+    for (i, (a, b)) in via_store.iter().zip(&via_raw).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "logit {i}");
+    }
+}

@@ -1,0 +1,115 @@
+//! Serving-stack integration: coordinator + batcher + scheduler + runtime
+//! under load, and the FP8-vs-ECF8 capacity mechanism end to end.
+
+use ecf8::coordinator::scheduler::ServingPlan;
+use ecf8::coordinator::server::{ServeConfig, Server};
+use ecf8::coordinator::Request;
+use ecf8::model::config::tiny_llm;
+use ecf8::model::store::CompressedModel;
+use ecf8::runtime::executor::{LlmExecutor, SEQ_LEN};
+use ecf8::runtime::pjrt::PjrtRuntime;
+use ecf8::util::prng::Xoshiro256;
+use ecf8::util::threadpool::ThreadPool;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let d = PjrtRuntime::default_dir();
+    d.join("MANIFEST.txt").exists().then_some(d)
+}
+
+#[test]
+fn serve_many_requests_all_answered_once() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: artifacts missing");
+        return;
+    };
+    let cfg = tiny_llm();
+    let model = CompressedModel::synthesize(&cfg, 21, None);
+    let pool = Arc::new(ThreadPool::new(2));
+    let ex = LlmExecutor::new(cfg.clone(), model, dir, Some(pool)).unwrap();
+    let mut server = Server::new(
+        ex,
+        ServeConfig {
+            max_batch: 4,
+            linger: Duration::from_millis(1),
+        },
+    );
+    let n = 11u64;
+    let mut rng = Xoshiro256::seed_from_u64(5);
+    let mut got = Vec::new();
+    for id in 0..n {
+        let tokens: Vec<i32> = (0..SEQ_LEN)
+            .map(|_| rng.next_below(cfg.vocab as u64) as i32)
+            .collect();
+        server.submit(Request::new(id, tokens));
+        got.extend(server.tick().unwrap());
+    }
+    got.extend(server.drain().unwrap());
+    assert_eq!(got.len(), n as usize);
+    let mut ids: Vec<u64> = got.iter().map(|r| r.id).collect();
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len(), n as usize, "every request answered exactly once");
+    assert!(got.iter().all(|r| r.logits.len() == cfg.vocab));
+    assert_eq!(server.metrics.requests_served, n);
+}
+
+#[test]
+fn identical_requests_get_identical_logits_across_batches() {
+    // batch-invariance within the same compiled batch shape: the same
+    // request padded into different batch *fills* must return the same
+    // logits (padding rows don't contaminate real rows).
+    let Some(dir) = artifacts() else { return };
+    let cfg = tiny_llm();
+    let model = CompressedModel::synthesize(&cfg, 22, None);
+    let ex = LlmExecutor::new(cfg.clone(), model, dir, None).unwrap();
+    let mut server = Server::new(
+        ex,
+        ServeConfig {
+            max_batch: 2,
+            linger: Duration::from_millis(0),
+        },
+    );
+    let mut rng = Xoshiro256::seed_from_u64(6);
+    let tokens: Vec<i32> = (0..SEQ_LEN)
+        .map(|_| rng.next_below(cfg.vocab as u64) as i32)
+        .collect();
+    // full batch: [req, req]
+    server.submit(Request::new(0, tokens.clone()));
+    server.submit(Request::new(1, tokens.clone()));
+    let full = server.tick().unwrap();
+    assert_eq!(full.len(), 2);
+    // padded batch: [req, <zero pad>]
+    server.submit(Request::new(2, tokens.clone()));
+    let padded = server.drain().unwrap();
+    assert_eq!(padded.len(), 1);
+    for ((a, b), i) in full[0].logits.iter().zip(&padded[0].logits).zip(0..) {
+        assert_eq!(a.to_bits(), b.to_bits(), "logit {i}");
+    }
+}
+
+#[test]
+fn capacity_mechanism_end_to_end() {
+    // measured compression of a real model feeds the scheduler: the ECF8
+    // batch must match the arithmetic prediction.
+    let cfg = tiny_llm();
+    let model = CompressedModel::synthesize(&cfg, 23, None);
+    let raw = model.raw_bytes();
+    let comp = model.compressed_bytes();
+    assert!(comp < raw);
+    let budget = raw + 40 * (raw / 64); // room for 40 "requests" over raw
+    let plan = ServingPlan {
+        budget_bytes: budget,
+        raw_weight_bytes: raw,
+        compressed_weight_bytes: comp,
+        per_request_bytes: raw / 64,
+        overhead_bytes: 0,
+    };
+    let bf = plan.fp8_max_batch();
+    let be = plan.ecf8_max_batch();
+    assert_eq!(bf, 40);
+    let expected_extra = (raw - comp) / (raw / 64);
+    assert_eq!(be, 40 + expected_extra as usize);
+    assert!(be > bf);
+}
