@@ -77,7 +77,8 @@ fn main() {
     for (path, label) in [
         (DecodePath::Alg1, "Algorithm 1"),
         (DecodePath::FastSingle, "fast (single-symbol LUT)"),
-        (DecodePath::Fast, "fast (pair LUT)"),
+        (DecodePath::FastPair, "fast (pair LUT)"),
+        (DecodePath::Fast, "fast (multi LUT + carry-forward refill)"),
     ] {
         for threads in [1usize, 8] {
             let p = (threads > 1).then(|| ThreadPool::new(threads));

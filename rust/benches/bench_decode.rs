@@ -1,16 +1,19 @@
-//! Decoder throughput (§3.2): the ECF8 block-parallel decoder against the
-//! scalar reference, the faithful Algorithm-1 path, and general-purpose
-//! codecs (zstd, deflate) plus the DFloat11-style BF16 codec.
+//! Decoder throughput (§3.2): the ECF8 multi-symbol decode engine against
+//! its own ablation tiers (pair LUT, single LUT, faithful Algorithm 1),
+//! the scalar reference, the DFloat11-style BF16 codec, and — when built
+//! with `--features ext-codecs` — zstd/deflate.
 //!
 //! The paper's decoder turns memory compression into *acceleration*; on
-//! this CPU testbed the reproduced claim is the ordering: ECF8-parallel
-//! ≥ zstd ≫ deflate, with near-linear thread scaling.
+//! this CPU testbed the reproduced claims are (a) the ordering
+//! ECF8-parallel ≥ general-purpose codecs, with near-linear thread
+//! scaling, and (b) the PR-1 acceptance bar: the multi-symbol engine
+//! (`DecodePath::Fast`) ≥ 1.5× the single-LUT tier on weight-like E4M3
+//! data. Results are emitted both as a table and machine-readable
+//! `BENCH_decode.json` (GB/s per path × geometry).
 
-use ecf8::baselines::{Codec, DFloat11, Deflate, Zstd};
-use ecf8::bench_support::{banner, bench, black_box, Table};
-use ecf8::codec::decode::{decode_into_path, DecodePath};
-use ecf8::codec::{compress_fp8, encode};
-use ecf8::fp8::BF16;
+use ecf8::bench_support::{banner, bench, black_box, write_bench_json, Json, Table};
+use ecf8::codec::decode::{decode_into_path, DecodePath, ALL_PATHS};
+use ecf8::codec::{compress_fp8, encode, Ecf8Params, Fp8Format};
 use ecf8::util::prng::Xoshiro256;
 use ecf8::util::sampling::normal;
 use ecf8::util::threadpool::ThreadPool;
@@ -28,8 +31,17 @@ fn weight_bytes(n: usize, seed: u64) -> Vec<u8> {
         .collect()
 }
 
-fn gbps(bytes: usize, secs: f64) -> String {
-    format!("{:.2} GB/s", bytes as f64 / secs / 1e9)
+fn gbps(bytes: usize, secs: f64) -> f64 {
+    bytes as f64 / secs / 1e9
+}
+
+fn path_label(path: DecodePath) -> &'static str {
+    match path {
+        DecodePath::Fast => "fast-multi",
+        DecodePath::FastPair => "fast-pair",
+        DecodePath::FastSingle => "fast-single",
+        DecodePath::Alg1 => "alg1",
+    }
 }
 
 fn main() {
@@ -44,7 +56,8 @@ fn main() {
     );
 
     let mut out = vec![0u8; N];
-    let mut table = Table::new(["decoder", "mean time", "throughput", "speedup vs scalar"]);
+    let mut table = Table::new(["decoder", "geometry", "threads", "mean time", "GB/s"]);
+    let mut results = Json::arr();
 
     // scalar reference (slow prefix matcher) on a smaller slice
     let small = weight_bytes(N / 16, 8);
@@ -52,42 +65,66 @@ fn main() {
     let r = bench("scalar-ref", 1, 3, || {
         black_box(ecf8::codec::decode::decode_scalar_reference(&small_blob));
     });
-    let scalar_bps = (N / 16) as f64 / r.mean();
     table.row([
         "scalar reference (prefix match)".to_string(),
+        "B8 T256".to_string(),
+        "1".to_string(),
         format!("{:.1} ms (on 1/16 size)", r.mean() * 1e3),
-        gbps(N / 16, r.mean()),
-        "1.0×".to_string(),
+        format!("{:.2}", gbps(N / 16, r.mean())),
     ]);
+    results.push(
+        Json::obj()
+            .field("path", "scalar-ref")
+            .field("geometry", "B8 T256")
+            .field("threads", 1usize)
+            .field("bytes", N / 16)
+            .field("gbps", gbps(N / 16, r.mean())),
+    );
 
-    // faithful Algorithm-1, serial
-    let r = bench("alg1-serial", 1, ITERS, || {
-        decode_into_path(&blob, &mut out, None, DecodePath::Alg1);
-        black_box(&out);
-    });
-    assert_eq!(out, data);
-    table.row([
-        "Algorithm 1 (faithful, serial)".to_string(),
-        format!("{:.1} ms", r.mean() * 1e3),
-        gbps(N, r.mean()),
-        format!("{:.1}×", (N as f64 / r.mean()) / scalar_bps),
-    ]);
+    // ---- every decode path × geometry, serial -----------------------------
+    let geometries = [(8usize, 256usize), (8, 1024), (4, 128)];
+    let mut fast_serial_gbps = 0.0f64;
+    let mut single_serial_gbps = 0.0f64;
+    for &(bt, tpb) in &geometries {
+        let params = Ecf8Params {
+            bytes_per_thread: bt,
+            threads_per_block: tpb,
+        };
+        let gblob = encode::encode(&data, Fp8Format::E4M3, params);
+        let geom = format!("B{bt} T{tpb}");
+        for path in ALL_PATHS {
+            let r = bench(path_label(path), 1, ITERS, || {
+                decode_into_path(&gblob, &mut out, None, path);
+                black_box(&out);
+            });
+            assert_eq!(out, data, "{path:?} {geom}");
+            let g = gbps(N, r.mean());
+            if params == Ecf8Params::default() {
+                match path {
+                    DecodePath::Fast => fast_serial_gbps = g,
+                    DecodePath::FastSingle => single_serial_gbps = g,
+                    _ => {}
+                }
+            }
+            table.row([
+                path_label(path).to_string(),
+                geom.clone(),
+                "1".to_string(),
+                format!("{:.1} ms", r.mean() * 1e3),
+                format!("{g:.2}"),
+            ]);
+            results.push(
+                Json::obj()
+                    .field("path", path_label(path))
+                    .field("geometry", geom.as_str())
+                    .field("threads", 1usize)
+                    .field("bytes", N)
+                    .field("gbps", g),
+            );
+        }
+    }
 
-    // fast path, serial
-    let r = bench("fast-serial", 1, ITERS, || {
-        decode_into_path(&blob, &mut out, None, DecodePath::Fast);
-        black_box(&out);
-    });
-    assert_eq!(out, data);
-    let fast_serial = r.mean();
-    table.row([
-        "ECF8 fast (serial)".to_string(),
-        format!("{:.1} ms", r.mean() * 1e3),
-        gbps(N, r.mean()),
-        format!("{:.1}×", (N as f64 / r.mean()) / scalar_bps),
-    ]);
-
-    // fast path, parallel
+    // ---- fast path, parallel ---------------------------------------------
     for threads in [2usize, 4, 8] {
         let pool = ThreadPool::new(threads);
         let r = bench("fast-parallel", 1, ITERS, || {
@@ -95,68 +132,149 @@ fn main() {
             black_box(&out);
         });
         assert_eq!(out, data);
+        let g = gbps(N, r.mean());
         table.row([
-            format!("ECF8 fast ({threads} threads)"),
+            "fast-multi".to_string(),
+            "B8 T256".to_string(),
+            threads.to_string(),
             format!("{:.1} ms", r.mean() * 1e3),
-            gbps(N, r.mean()),
-            format!("{:.1}×", (N as f64 / r.mean()) / scalar_bps),
+            format!("{g:.2}"),
         ]);
+        results.push(
+            Json::obj()
+                .field("path", "fast-multi")
+                .field("geometry", "B8 T256")
+                .field("threads", threads)
+                .field("bytes", N)
+                .field("gbps", g),
+        );
     }
 
-    // general-purpose baselines
-    for codec in [
-        Box::new(Zstd(1)) as Box<dyn Codec>,
-        Box::new(Zstd(3)),
-        Box::new(Deflate(6)),
-    ] {
-        let comp = codec.compress(&data);
-        let r = bench(codec.name(), 1, ITERS, || {
-            black_box(codec.decompress(&comp, N));
+    // ---- general-purpose baselines (feature-gated) ------------------------
+    #[cfg(feature = "ext-codecs")]
+    {
+        use ecf8::baselines::{Codec, Deflate, Zstd};
+        for codec in [
+            Box::new(Zstd(1)) as Box<dyn Codec>,
+            Box::new(Zstd(3)),
+            Box::new(Deflate(6)),
+        ] {
+            let comp = codec.compress(&data);
+            let r = bench(codec.name(), 1, ITERS, || {
+                black_box(codec.decompress(&comp, N));
+            });
+            let g = gbps(N, r.mean());
+            table.row([
+                format!("{} (ratio {:.3})", codec.name(), comp.len() as f64 / N as f64),
+                "-".to_string(),
+                "1".to_string(),
+                format!("{:.1} ms", r.mean() * 1e3),
+                format!("{g:.2}"),
+            ]);
+            results.push(
+                Json::obj()
+                    .field("path", codec.name())
+                    .field("geometry", "-")
+                    .field("threads", 1usize)
+                    .field("bytes", N)
+                    .field("gbps", g),
+            );
+        }
+    }
+    #[cfg(not(feature = "ext-codecs"))]
+    println!("(zstd/deflate baselines skipped: build with --features ext-codecs)");
+
+    // ---- DFloat11-style BF16 (2 bytes/elem, same element count) -----------
+    {
+        use ecf8::baselines::{Codec, DFloat11};
+        use ecf8::fp8::BF16;
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let bf16_data: Vec<u8> = (0..N / 2)
+            .flat_map(|_| {
+                BF16::from_f32((normal(&mut rng) * 0.03) as f32)
+                    .to_bits()
+                    .to_le_bytes()
+            })
+            .collect();
+        let comp = DFloat11.compress(&bf16_data);
+        let r = bench("dfloat11", 1, ITERS, || {
+            black_box(DFloat11.decompress(&comp, bf16_data.len()));
         });
+        let g = gbps(bf16_data.len(), r.mean());
         table.row([
-            format!("{} (ratio {:.3})", codec.name(), comp.len() as f64 / N as f64),
+            format!(
+                "dfloat11-bf16 (ratio {:.3})",
+                comp.len() as f64 / bf16_data.len() as f64
+            ),
+            "-".to_string(),
+            "1".to_string(),
             format!("{:.1} ms", r.mean() * 1e3),
-            gbps(N, r.mean()),
-            format!("{:.1}×", (N as f64 / r.mean()) / scalar_bps),
+            format!("{g:.2}"),
         ]);
+        results.push(
+            Json::obj()
+                .field("path", "dfloat11-bf16")
+                .field("geometry", "-")
+                .field("threads", 1usize)
+                .field("bytes", bf16_data.len())
+                .field("gbps", g),
+        );
     }
-
-    // DFloat11-style BF16 (2 bytes/elem workload of same element count)
-    let mut rng = Xoshiro256::seed_from_u64(9);
-    let bf16_data: Vec<u8> = (0..N / 2)
-        .flat_map(|_| {
-            BF16::from_f32((normal(&mut rng) * 0.03) as f32)
-                .to_bits()
-                .to_le_bytes()
-        })
-        .collect();
-    let comp = DFloat11.compress(&bf16_data);
-    let r = bench("dfloat11", 1, ITERS, || {
-        black_box(DFloat11.decompress(&comp, bf16_data.len()));
-    });
-    table.row([
-        format!("dfloat11-bf16 (ratio {:.3})", comp.len() as f64 / bf16_data.len() as f64),
-        format!("{:.1} ms", r.mean() * 1e3),
-        gbps(bf16_data.len(), r.mean()),
-        format!("{:.1}×", (bf16_data.len() as f64 / r.mean()) / scalar_bps),
-    ]);
 
     table.print();
 
-    // encode throughput
-    let r = bench("encode", 1, 3, || {
-        black_box(encode::encode(
+    // ---- encode throughput: sequential vs parallel two-pass ---------------
+    let r = bench("encode-seq", 1, 3, || {
+        black_box(encode::encode(&data, Fp8Format::E4M3, Ecf8Params::default()));
+    });
+    let enc_seq = gbps(N, r.mean());
+    println!("\nencode (sequential): {:.1} ms ({enc_seq:.2} GB/s)", r.mean() * 1e3);
+    let pool = ThreadPool::new(8);
+    let par_blob = encode::encode_parallel(&data, Fp8Format::E4M3, Ecf8Params::default(), &pool);
+    assert_eq!(par_blob.encoded, blob.encoded, "parallel encode byte-identical");
+    assert_eq!(par_blob.gaps, blob.gaps);
+    assert_eq!(par_blob.outpos, blob.outpos);
+    let r = bench("encode-par", 1, 3, || {
+        black_box(encode::encode_parallel(
             &data,
-            ecf8::codec::Fp8Format::E4M3,
-            ecf8::codec::Ecf8Params::default(),
+            Fp8Format::E4M3,
+            Ecf8Params::default(),
+            &pool,
         ));
     });
-    println!("\nencode: {:.1} ms ({})", r.mean() * 1e3, gbps(N, r.mean()));
-    println!(
-        "serial fast path vs faithful Alg-1: the two-phase per-thread \
-         simulation costs ~2× (it decodes every symbol twice, as the GPU \
-         kernel does to avoid inter-thread communication)."
+    let enc_par = gbps(N, r.mean());
+    println!("encode (parallel ×8): {:.1} ms ({enc_par:.2} GB/s)", r.mean() * 1e3);
+    results.push(
+        Json::obj()
+            .field("path", "encode-seq")
+            .field("geometry", "B8 T256")
+            .field("threads", 1usize)
+            .field("bytes", N)
+            .field("gbps", enc_seq),
     );
-    let _ = fast_serial;
+    results.push(
+        Json::obj()
+            .field("path", "encode-par")
+            .field("geometry", "B8 T256")
+            .field("threads", 8usize)
+            .field("bytes", N)
+            .field("gbps", enc_par),
+    );
+
+    // ---- acceptance: multi engine vs single-LUT tier ----------------------
+    let speedup = fast_serial_gbps / single_serial_gbps.max(1e-12);
+    println!(
+        "\nfast-multi vs fast-single (serial, default geometry): {speedup:.2}× \
+         (acceptance bar: ≥ 1.5×)"
+    );
+
+    let doc = Json::obj()
+        .field("bench", "decode")
+        .field("workload", "weight-like E4M3, normal(0, 0.05)")
+        .field("bytes", N)
+        .field("multi_vs_single_speedup", speedup)
+        .field("results", results);
+    write_bench_json("BENCH_decode.json", &doc);
+
     println!("\nbench_decode done");
 }

@@ -40,10 +40,10 @@ fn measure_pico_dit_block() -> Option<f64> {
     let q_dim = cfg.n_heads * cfg.head_dim;
     let ffn = cfg.ffn_inter;
     let l = 0usize;
-    let mut dec = |name: String, shape: Vec<i64>| -> Input {
+    let mut dec = |name: String, shape: Vec<i64>| -> Input<'static> {
         let (_, blob) = model.get(&name).unwrap();
         let bytes = jit.with_decoded(blob, |b| b.to_vec());
-        Input::U8(bytes, shape)
+        Input::U8(bytes.into(), shape)
     };
     let di = d as i64;
     let qi = q_dim as i64;

@@ -12,6 +12,7 @@ use crate::codec::{decode as ecf8_decode, encode as ecf8_encode, Ecf8Params};
 use crate::fp8::BF16;
 use crate::huffman::bitstream::{BitReader, BitWriter};
 use crate::huffman::canonical::CanonicalCode;
+#[cfg(feature = "ext-codecs")]
 use std::io::{Read, Write};
 
 /// A named lossless codec over byte tensors, with measured sizes.
@@ -37,9 +38,12 @@ impl Codec for RawFp8 {
     }
 }
 
-/// zstd at a given level.
+/// zstd at a given level (requires the `ext-codecs` feature and the
+/// `zstd` dependency — see Cargo.toml).
+#[cfg(feature = "ext-codecs")]
 pub struct Zstd(pub i32);
 
+#[cfg(feature = "ext-codecs")]
 impl Codec for Zstd {
     fn name(&self) -> &'static str {
         "zstd"
@@ -52,9 +56,11 @@ impl Codec for Zstd {
     }
 }
 
-/// DEFLATE (flate2, miniz).
+/// DEFLATE (flate2, miniz; requires the `ext-codecs` feature).
+#[cfg(feature = "ext-codecs")]
 pub struct Deflate(pub u32);
 
+#[cfg(feature = "ext-codecs")]
 impl Codec for Deflate {
     fn name(&self) -> &'static str {
         "deflate"
@@ -214,16 +220,22 @@ impl Codec for DFloat11 {
     }
 }
 
-/// All FP8-tensor codecs for the decode benches.
+/// All FP8-tensor codecs for the decode benches. zstd/deflate appear
+/// only when built with the `ext-codecs` feature.
 pub fn fp8_codecs() -> Vec<Box<dyn Codec>> {
-    vec![
+    #[allow(unused_mut)]
+    let mut codecs: Vec<Box<dyn Codec>> = vec![
         Box::new(RawFp8),
         Box::new(Ecf8Codec),
-        Box::new(Zstd(3)),
-        Box::new(Zstd(1)),
-        Box::new(Deflate(6)),
         Box::new(FixedWidthPack),
-    ]
+    ];
+    #[cfg(feature = "ext-codecs")]
+    {
+        codecs.push(Box::new(Zstd(3)));
+        codecs.push(Box::new(Zstd(1)));
+        codecs.push(Box::new(Deflate(6)));
+    }
+    codecs
 }
 
 #[cfg(test)]
@@ -252,6 +264,7 @@ mod tests {
         }
     }
 
+    #[cfg(feature = "ext-codecs")]
     #[test]
     fn ecf8_ratio_competitive_with_general_purpose() {
         // Measured finding (EXPERIMENTS.md): zstd's FSE also captures the

@@ -128,6 +128,149 @@ pub fn banner(bench_id: &str, paper_ref: &str) {
     println!("\n=== {bench_id} — reproduces {paper_ref} ===");
 }
 
+// ---------------------------------------------------------------------------
+// Machine-readable bench output (substrate: no `serde_json` offline)
+// ---------------------------------------------------------------------------
+
+/// Minimal JSON value builder so benches can emit `BENCH_*.json` files
+/// (the bench-trajectory format: one object per run with a `results`
+/// array). Supports exactly what the benches need: objects, arrays,
+/// strings, finite numbers, booleans.
+#[derive(Debug, Clone)]
+pub enum Json {
+    Str(String),
+    Num(f64),
+    Int(i64),
+    Bool(bool),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn obj() -> Self {
+        Json::Obj(Vec::new())
+    }
+
+    pub fn arr() -> Self {
+        Json::Arr(Vec::new())
+    }
+
+    /// Add a field to an object (panics on non-objects: builder misuse).
+    pub fn field(mut self, key: &str, value: impl Into<Json>) -> Self {
+        match &mut self {
+            Json::Obj(fields) => fields.push((key.to_string(), value.into())),
+            _ => panic!("field() on non-object Json"),
+        }
+        self
+    }
+
+    /// Append an element to an array (panics on non-arrays).
+    pub fn push(&mut self, value: impl Into<Json>) {
+        match self {
+            Json::Arr(items) => items.push(value.into()),
+            _ => panic!("push() on non-array Json"),
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Str(v) => {
+                out.push('"');
+                for c in v.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c if (c as u32) < 0x20 => {
+                            out.push_str(&format!("\\u{:04x}", c as u32))
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Num(v) => {
+                if v.is_finite() {
+                    out.push_str(&format!("{v}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Int(v) => out.push_str(&v.to_string()),
+            Json::Bool(v) => out.push_str(if *v { "true" } else { "false" }),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+impl From<&str> for Json {
+    fn from(v: &str) -> Self {
+        Json::Str(v.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(v: String) -> Self {
+        Json::Str(v)
+    }
+}
+impl From<f64> for Json {
+    fn from(v: f64) -> Self {
+        Json::Num(v)
+    }
+}
+impl From<i64> for Json {
+    fn from(v: i64) -> Self {
+        Json::Int(v)
+    }
+}
+impl From<usize> for Json {
+    fn from(v: usize) -> Self {
+        Json::Int(v as i64)
+    }
+}
+impl From<bool> for Json {
+    fn from(v: bool) -> Self {
+        Json::Bool(v)
+    }
+}
+
+/// Write a bench-result JSON file next to the working dir, non-fatally.
+pub fn write_bench_json(file: &str, value: &Json) {
+    match std::fs::write(file, value.render() + "\n") {
+        Ok(()) => println!("wrote {file}"),
+        Err(e) => eprintln!("could not write {file}: {e}"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -162,6 +305,30 @@ mod tests {
     fn table_rejects_bad_row() {
         let mut t = Table::new(["a", "b"]);
         t.row(["only-one"]);
+    }
+
+    #[test]
+    fn json_renders_nested_structures() {
+        let mut results = Json::arr();
+        results.push(
+            Json::obj()
+                .field("path", "fast")
+                .field("gbps", 3.25)
+                .field("threads", 8usize),
+        );
+        let doc = Json::obj()
+            .field("bench", "decode")
+            .field("ok", true)
+            .field("results", results);
+        assert_eq!(
+            doc.render(),
+            r#"{"bench":"decode","ok":true,"results":[{"path":"fast","gbps":3.25,"threads":8}]}"#
+        );
+    }
+
+    #[test]
+    fn json_escapes_strings() {
+        assert_eq!(Json::from("a\"b\\c\n").render(), r#""a\"b\\c\n""#);
     }
 
     #[test]

@@ -31,21 +31,35 @@ pub const VERSION: u16 = 1;
 /// Fixed header size (pre-code_lengths), for size accounting.
 pub const HEADER_BYTES: usize = 72;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ContainerError {
-    #[error("bad magic (not an ECF8 container)")]
     BadMagic,
-    #[error("unsupported version {0}")]
     BadVersion(u16),
-    #[error("unknown format byte {0}")]
     BadFormat(u8),
-    #[error("container truncated: need {need} bytes, have {have}")]
     Truncated { need: usize, have: usize },
-    #[error("payload CRC mismatch (stored {stored:#010x}, computed {computed:#010x})")]
     CrcMismatch { stored: u32, computed: u32 },
-    #[error("inconsistent metadata: {0}")]
     Inconsistent(&'static str),
 }
+
+impl std::fmt::Display for ContainerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ContainerError::BadMagic => write!(f, "bad magic (not an ECF8 container)"),
+            ContainerError::BadVersion(v) => write!(f, "unsupported version {v}"),
+            ContainerError::BadFormat(b) => write!(f, "unknown format byte {b}"),
+            ContainerError::Truncated { need, have } => {
+                write!(f, "container truncated: need {need} bytes, have {have}")
+            }
+            ContainerError::CrcMismatch { stored, computed } => write!(
+                f,
+                "payload CRC mismatch (stored {stored:#010x}, computed {computed:#010x})"
+            ),
+            ContainerError::Inconsistent(what) => write!(f, "inconsistent metadata: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for ContainerError {}
 
 fn put_u16(buf: &mut Vec<u8>, v: u16) {
     buf.extend_from_slice(&v.to_le_bytes());
@@ -92,7 +106,7 @@ impl<'a> Cursor<'a> {
 pub fn serialize(blob: &Ecf8Blob) -> Vec<u8> {
     let alphabet = blob.format.alphabet_size();
     assert_eq!(blob.code_lengths.len(), alphabet);
-    let mut crc = crc32fast::Hasher::new();
+    let mut crc = crate::util::crc32::Hasher::new();
     crc.update(&blob.packed);
     crc.update(&blob.encoded);
     crc.update(&blob.gaps);
@@ -166,7 +180,7 @@ pub fn deserialize(data: &[u8]) -> Result<Ecf8Blob, ContainerError> {
     let packed = c.take(packed_len)?.to_vec();
     let encoded = c.take(encoded_len)?.to_vec();
 
-    let mut crc = crc32fast::Hasher::new();
+    let mut crc = crate::util::crc32::Hasher::new();
     crc.update(&packed);
     crc.update(&encoded);
     crc.update(&gaps);

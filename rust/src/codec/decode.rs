@@ -1,40 +1,111 @@
 //! ECF8 block-parallel decoder — Algorithm 1 (§3.2).
 //!
-//! Three paths, all bit-exact:
+//! ## Decode paths
 //!
-//! * [`decode_block_alg1`] — the faithful reproduction of Algorithm 1: per
-//!   simulated thread, a 64-bit sliding window `L`, 16-bit tail `S`,
-//!   headroom counter `f`; phase 1 counts symbols, an in-block exclusive
-//!   prefix sum assigns output slots, phase 2 decodes and assembles FP8
-//!   bytes. Each thread consumes exactly its `B`-byte window (plus ≤ 2
-//!   lookahead bytes), coordinated purely by the gap/outpos metadata — no
-//!   cross-thread communication, exactly as on the GPU.
-//! * [`decode_block_fast`] — the CPU-tuned path: one sequential sweep per
-//!   block using unaligned u64 loads (a CPU "thread" is the paper's
-//!   thread *block*; the per-thread machinery exists for intra-block SIMT
-//!   parallelism we don't have). Used by default.
-//! * [`decode_scalar_reference`] — whole-stream scalar decode via the
-//!   slow prefix-matching `CanonicalCode::decode_window`, ground truth in
-//!   tests.
+//! Four paths, all bit-exact against [`decode_scalar_reference`]:
+//!
+//! * [`DecodePath::Fast`] (default) — the multi-symbol throughput engine:
+//!   a branchless carry-forward bit reader ([`BitCursor`]) feeding a
+//!   14-bit [`MultiLut`] that emits up to 4 symbols per lookup, with
+//!   sign/mantissa nibbles streamed through a second cursor over the
+//!   packed nibble plane (u64 loads, 8 nibbles each).
+//! * [`DecodePath::FastPair`] — the previous-generation pair-LUT sweep
+//!   (2 symbols/lookup, reload-per-refill), kept as an ablation tier.
+//! * [`DecodePath::FastSingle`] — single-symbol LUT sweep (ablation).
+//! * [`DecodePath::Alg1`] — the faithful Algorithm-1 per-thread two-phase
+//!   simulation (64-bit window `L`, 16-bit tail `S`, prefix-sum slot
+//!   assignment), exactly the GPU kernel's structure.
+//!
+//! ## Tier dispatch (Fast path)
+//!
+//! ```text
+//!             ┌─ refill: avail ≥ 56 live bits in register ─┐
+//!   window ──▶│ MultiLut[top 14 bits]                      │
+//!             │   count = 4 ──▶ emit 4 syms + 4 nibbles    │ ~90 % of
+//!             │   count 1–3 ──▶ emit count syms            │ positions
+//!             │   count = 0 ──▶ DecodeLut (≤ 16-bit code)  │ ≪ 1 %
+//!             └────────────────────────────────────────────┘
+//!   tail (< 4 slots left) ──▶ single-symbol loop
+//! ```
+//!
+//! ## Refill invariants ([`BitCursor`])
+//!
+//! The cursor keeps live bits MSB-aligned in a u64 register across
+//! refills instead of re-reading from the bit position each outer
+//! iteration (the pre-rework sweep discarded up to 15 live bits per
+//! refill). Invariants:
+//!
+//! * `w`'s top `avail` bits are the next unconsumed stream bits;
+//! * `refill` ORs in the next unaligned u64 below them and advances the
+//!   byte pointer by the number of *whole* bytes absorbed, leaving
+//!   `avail ∈ [56, 63]` — fractional-byte bits are deliberately re-read
+//!   (identically) by the next refill, which keeps the advance exact
+//!   without any flag or branch on the bit phase;
+//! * `consume(k)` requires `k ≤ avail` (every tier consumes ≤ 16 bits
+//!   against ≥ 56 available, so one refill per lookup suffices).
+//!
+//! Loads past the buffer end are zero-filled; the encoder pads the
+//! encoded stream with 8 slack bytes so the hot branch stays perfectly
+//! predictable, and the packed nibble plane (no slack) only hits the
+//! zero-fill branch in its final refills.
 //!
 //! The public entry point [`decode_into`] fans blocks out over a thread
 //! pool; blocks write disjoint output slices (`outpos[b] .. outpos[b+1]`).
+//! Serving paths that decode the same tensor repeatedly should build the
+//! LUT tiers once via [`DecodeTables`] and call [`decode_into_cached`]
+//! (the JIT decompressor caches tables per code book).
 
 use super::{Ecf8Blob, Fp8Format};
 use crate::huffman::bitstream::BitReader;
-use crate::huffman::lut::DecodeLut;
+use crate::huffman::lut::{DecodeLut, MultiLut, PairLut, MULTI_MAX_SYMS};
 use crate::util::threadpool::ThreadPool;
 
 /// Which decode implementation to use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum DecodePath {
-    /// CPU-tuned single sweep per block with pair-LUT dispatch (default).
+    /// Multi-symbol LUT + branchless carry-forward refill (default).
     #[default]
     Fast,
-    /// Fast sweep without the pair LUT (ablation).
+    /// Pair-LUT sweep with reload-per-refill (previous default; ablation).
+    FastPair,
+    /// Fast sweep without any multi-symbol LUT (ablation).
     FastSingle,
     /// Faithful Algorithm-1 per-thread two-phase simulation.
     Alg1,
+}
+
+/// Prebuilt decode tiers for one code book. Building costs ~80 k LUT
+/// probes (dominated by the 16 k-entry [`MultiLut`]); amortize it across
+/// decodes of the same tensor by reusing one `DecodeTables`.
+#[derive(Debug, Clone)]
+pub struct DecodeTables {
+    pub(crate) lut: DecodeLut,
+    pub(crate) multi: Option<MultiLut>,
+    pub(crate) pair: Option<PairLut>,
+}
+
+impl DecodeTables {
+    /// Build the tiers the default ([`DecodePath::Fast`]) engine uses —
+    /// what the caching serving path wants. The pair tier is ablation-only
+    /// and deliberately left unbuilt here (it would be 16 KiB of dead
+    /// table per cached code book).
+    pub fn build(blob: &Ecf8Blob) -> Self {
+        let lut = blob.lut();
+        let multi = MultiLut::build(&lut);
+        Self {
+            lut,
+            multi: Some(multi),
+            pair: None,
+        }
+    }
+
+    /// Build only the tiers `path` dispatches to.
+    fn for_path(blob: &Ecf8Blob, path: DecodePath) -> Self {
+        let lut = blob.lut();
+        let multi = matches!(path, DecodePath::Fast).then(|| MultiLut::build(&lut));
+        let pair = matches!(path, DecodePath::FastPair).then(|| PairLut::build(&lut));
+        Self { lut, multi, pair }
+    }
 }
 
 /// Decode the whole blob into `out` (must be exactly `n_elem` bytes).
@@ -50,12 +121,29 @@ pub fn decode_into_path(
     pool: Option<&ThreadPool>,
     path: DecodePath,
 ) {
+    let tables = DecodeTables::for_path(blob, path);
+    decode_blocks(blob, out, pool, path, &tables)
+}
+
+/// Decode on the default path with prebuilt [`DecodeTables`] — the hot
+/// serving entry point (no per-call LUT construction).
+pub fn decode_into_cached(
+    blob: &Ecf8Blob,
+    out: &mut [u8],
+    pool: Option<&ThreadPool>,
+    tables: &DecodeTables,
+) {
+    decode_blocks(blob, out, pool, DecodePath::Fast, tables)
+}
+
+fn decode_blocks(
+    blob: &Ecf8Blob,
+    out: &mut [u8],
+    pool: Option<&ThreadPool>,
+    path: DecodePath,
+    tables: &DecodeTables,
+) {
     assert_eq!(out.len(), blob.n_elem, "output buffer size mismatch");
-    let lut = blob.lut();
-    let pair = match path {
-        DecodePath::Fast => Some(crate::huffman::lut::PairLut::build(&lut)),
-        _ => None,
-    };
     let n_blocks = blob.n_blocks();
 
     // Blocks own disjoint output ranges outpos[b]..outpos[b+1]; hand each
@@ -72,11 +160,22 @@ pub fn decode_into_path(
         let slice =
             unsafe { std::slice::from_raw_parts_mut((out_addr as *mut u8).add(lo), hi - lo) };
         match path {
-            DecodePath::Fast => {
-                decode_block_fast_pair(blob, &lut, pair.as_ref().unwrap(), b, slice)
-            }
-            DecodePath::FastSingle => decode_block_fast(blob, &lut, b, slice),
-            DecodePath::Alg1 => decode_block_alg1(blob, &lut, b, slice),
+            DecodePath::Fast => decode_block_fast_multi(
+                blob,
+                &tables.lut,
+                tables.multi.as_ref().expect("multi tier built"),
+                b,
+                slice,
+            ),
+            DecodePath::FastPair => decode_block_fast_pair(
+                blob,
+                &tables.lut,
+                tables.pair.as_ref().expect("pair tier built"),
+                b,
+                slice,
+            ),
+            DecodePath::FastSingle => decode_block_fast(blob, &tables.lut, b, slice),
+            DecodePath::Alg1 => decode_block_alg1(blob, &tables.lut, b, slice),
         }
     };
 
@@ -104,6 +203,174 @@ fn gap_of(gaps: &[u8], t_g: usize) -> u32 {
 #[inline(always)]
 fn rest_of(packed: &[u8], o: usize) -> u8 {
     (packed[o / 2] >> (4 - (o % 2) * 4)) & 0x0F
+}
+
+// ---------------------------------------------------------------------------
+// Branchless carry-forward bit reader
+// ---------------------------------------------------------------------------
+
+/// MSB-first bit cursor whose live bits survive refills in-register (see
+/// the module docs for the invariants). Works over any byte slice; loads
+/// past the end read as zero, so a slack-padded buffer (the encoded
+/// stream) never leaves the predictable fast-load branch while an
+/// unpadded one (the packed nibble plane) degrades gracefully at its
+/// tail.
+struct BitCursor<'a> {
+    buf: &'a [u8],
+    /// next byte to absorb
+    next: usize,
+    /// MSB-aligned live bits; everything below the top `avail` bits that
+    /// has been ORed in is genuine stream data awaiting re-absorption
+    w: u64,
+    /// guaranteed-valid bit count at the top of `w` (≤ 63)
+    avail: u32,
+}
+
+impl<'a> BitCursor<'a> {
+    #[inline(always)]
+    fn new(buf: &'a [u8], bitpos: usize) -> Self {
+        let mut c = Self {
+            buf,
+            next: bitpos >> 3,
+            w: 0,
+            avail: 0,
+        };
+        c.refill();
+        c.consume((bitpos & 7) as u32);
+        c
+    }
+
+    /// Top up to `avail ∈ [56, 63]` with one unaligned big-endian u64
+    /// load (Giesen's "variant 4" refill: advance by whole bytes only,
+    /// `avail |= 56`).
+    #[inline(always)]
+    fn refill(&mut self) {
+        let chunk = if self.next + 8 <= self.buf.len() {
+            u64::from_be_bytes(self.buf[self.next..self.next + 8].try_into().unwrap())
+        } else {
+            // zero-filled tail load (packed nibble plane has no slack)
+            let mut tmp = [0u8; 8];
+            if self.next < self.buf.len() {
+                let rem = self.buf.len() - self.next;
+                tmp[..rem].copy_from_slice(&self.buf[self.next..]);
+            }
+            u64::from_be_bytes(tmp)
+        };
+        debug_assert!(self.avail < 64);
+        self.w |= chunk >> self.avail;
+        self.next += ((63 - self.avail) >> 3) as usize;
+        self.avail |= 56;
+    }
+
+    /// The 64-bit MSB-aligned window (top `avail` bits guaranteed live).
+    #[inline(always)]
+    fn peek(&self) -> u64 {
+        self.w
+    }
+
+    #[inline(always)]
+    fn consume(&mut self, bits: u32) {
+        debug_assert!(bits <= self.avail, "consume {bits} of {}", self.avail);
+        self.w <<= bits;
+        self.avail -= bits;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Multi-symbol fast path
+// ---------------------------------------------------------------------------
+
+/// Decode block `b` with the multi-symbol engine: one [`BitCursor`] over
+/// the Huffman stream, one over the packed nibble plane, [`MultiLut`]
+/// dispatch emitting up to 4 symbols per lookup (see the module-doc tier
+/// diagram).
+pub fn decode_block_fast_multi(
+    blob: &Ecf8Blob,
+    lut: &DecodeLut,
+    multi: &MultiLut,
+    b: usize,
+    out_block: &mut [u8],
+) {
+    let block_bytes = blob.params.block_bytes();
+    let start_byte = b * block_bytes;
+    let t0 = b * blob.params.threads_per_block;
+    let gap = gap_of(&blob.gaps, t0) as usize;
+    let o_base = blob.outpos[b] as usize;
+    let n = out_block.len();
+    if n == 0 {
+        return;
+    }
+    let enc = &blob.encoded[..];
+    let packed = &blob.packed[..];
+
+    let mut bits = BitCursor::new(enc, start_byte * 8 + gap);
+    // nibble i lives at bit 4·i of the packed plane (high nibble first)
+    let mut nibs = BitCursor::new(packed, o_base * 4);
+    let mut o = 0usize;
+
+    macro_rules! sweep {
+        ($assemble:expr) => {{
+            while o + MULTI_MAX_SYMS <= n {
+                bits.refill();
+                let e = multi.lookup(bits.peek());
+                let count = MultiLut::count(e);
+                if count == MULTI_MAX_SYMS {
+                    bits.consume(MultiLut::consumed(e));
+                    nibs.refill();
+                    let r = (nibs.peek() >> 48) as u16;
+                    nibs.consume(16);
+                    out_block[o..o + 4].copy_from_slice(&[
+                        $assemble(MultiLut::sym(e, 0), (r >> 12) as u8 & 0x0F),
+                        $assemble(MultiLut::sym(e, 1), (r >> 8) as u8 & 0x0F),
+                        $assemble(MultiLut::sym(e, 2), (r >> 4) as u8 & 0x0F),
+                        $assemble(MultiLut::sym(e, 3), r as u8 & 0x0F),
+                    ]);
+                    o += 4;
+                } else if count > 0 {
+                    // long-code window: 1–3 symbols still resolved in one
+                    // lookup
+                    bits.consume(MultiLut::consumed(e));
+                    nibs.refill();
+                    for k in 0..count {
+                        let rest = (nibs.peek() >> 60) as u8;
+                        nibs.consume(4);
+                        out_block[o + k] = $assemble(MultiLut::sym(e, k), rest);
+                    }
+                    o += count;
+                } else {
+                    // leading code wider than the multi window (> 14 bits)
+                    let (x, len) = lut.decode((bits.peek() >> 48) as u16);
+                    bits.consume(len);
+                    nibs.refill();
+                    let rest = (nibs.peek() >> 60) as u8;
+                    nibs.consume(4);
+                    out_block[o] = $assemble(x as u8, rest);
+                    o += 1;
+                }
+            }
+            // tail: fewer than 4 slots left — single-symbol steps so a
+            // greedy multi entry can never overrun the block's output
+            while o < n {
+                bits.refill();
+                let (x, len) = lut.decode((bits.peek() >> 48) as u16);
+                bits.consume(len);
+                nibs.refill();
+                let rest = (nibs.peek() >> 60) as u8;
+                nibs.consume(4);
+                out_block[o] = $assemble(x as u8, rest);
+                o += 1;
+            }
+        }};
+    }
+
+    match blob.format {
+        Fp8Format::E4M3 => {
+            sweep!(|x: u8, rest: u8| ((rest & 0x08) << 4) | (x << 3) | (rest & 0x07))
+        }
+        Fp8Format::E5M2 => {
+            sweep!(|x: u8, rest: u8| ((rest & 0x04) << 5) | (x << 2) | (rest & 0x03))
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -245,16 +512,18 @@ impl WindowReader {
 }
 
 // ---------------------------------------------------------------------------
-// CPU fast path
+// CPU pair / single sweeps (ablation tiers)
 // ---------------------------------------------------------------------------
 
 /// Decode block `b` in one sequential sweep with unaligned u64 refills
 /// and pair-LUT dispatch (two symbols per lookup where the pair table
-/// covers — see [`crate::huffman::lut::PairLut`]).
+/// covers — see [`crate::huffman::lut::PairLut`]). Superseded by
+/// [`decode_block_fast_multi`]; kept as the ablation tier that isolates
+/// the multi-LUT + carry-forward-refill gains.
 pub fn decode_block_fast_pair(
     blob: &Ecf8Blob,
     lut: &DecodeLut,
-    pair: &crate::huffman::lut::PairLut,
+    pair: &PairLut,
     b: usize,
     out_block: &mut [u8],
 ) {
@@ -417,11 +686,20 @@ pub fn decode_scalar_reference(blob: &Ecf8Blob) -> Vec<u8> {
     out
 }
 
+/// Every decode path, for exhaustive cross-checking in tests/benches.
+pub const ALL_PATHS: [DecodePath; 4] = [
+    DecodePath::Fast,
+    DecodePath::FastPair,
+    DecodePath::FastSingle,
+    DecodePath::Alg1,
+];
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::codec::encode::encode;
+    use crate::codec::encode::{encode, encode_with_code};
     use crate::codec::{Ecf8Params, Fp8Format};
+    use crate::huffman::canonical::CanonicalCode;
     use crate::util::prng::Xoshiro256;
     use crate::util::quickprop::{property, Gen};
 
@@ -446,7 +724,9 @@ mod tests {
     fn fast_path_bit_exact_small() {
         for n in [0usize, 1, 2, 3, 7, 255, 256, 1000] {
             let data = weight_bytes(n, n as u64 + 1, 0.05);
-            roundtrip(&data, Fp8Format::E4M3, Ecf8Params::default(), DecodePath::Fast);
+            for path in [DecodePath::Fast, DecodePath::FastPair] {
+                roundtrip(&data, Fp8Format::E4M3, Ecf8Params::default(), path);
+            }
         }
     }
 
@@ -459,12 +739,12 @@ mod tests {
     }
 
     #[test]
-    fn both_paths_bit_exact_multi_block() {
+    fn all_paths_bit_exact_multi_block() {
         // > 1 block with default geometry requires > 2048 encoded bytes
         let data = weight_bytes(200_000, 42, 0.02);
         let blob = encode(&data, Fp8Format::E4M3, Ecf8Params::default());
         assert!(blob.n_blocks() > 1, "want multi-block, got {}", blob.n_blocks());
-        for path in [DecodePath::Fast, DecodePath::Alg1] {
+        for path in ALL_PATHS {
             let mut out = vec![0u8; data.len()];
             decode_into_path(&blob, &mut out, None, path);
             assert_eq!(out, data, "{path:?}");
@@ -492,6 +772,20 @@ mod tests {
     }
 
     #[test]
+    fn cached_tables_decode_matches() {
+        let data = weight_bytes(100_000, 12, 0.05);
+        let blob = encode(&data, Fp8Format::E4M3, Ecf8Params::default());
+        let tables = DecodeTables::build(&blob);
+        let mut out = vec![0u8; data.len()];
+        decode_into_cached(&blob, &mut out, None, &tables);
+        assert_eq!(out, data);
+        // reuse the same tables (the serving pattern)
+        out.fill(0);
+        decode_into_cached(&blob, &mut out, None, &tables);
+        assert_eq!(out, data);
+    }
+
+    #[test]
     fn e5m2_roundtrip() {
         let mut rng = Xoshiro256::seed_from_u64(9);
         let data: Vec<u8> = (0..50_000)
@@ -500,7 +794,7 @@ mod tests {
                 crate::fp8::F8E5M2::from_f32(x).to_bits()
             })
             .collect();
-        for path in [DecodePath::Fast, DecodePath::Alg1] {
+        for path in ALL_PATHS {
             roundtrip(&data, Fp8Format::E5M2, Ecf8Params::default(), path);
         }
     }
@@ -515,8 +809,9 @@ mod tests {
                 threads_per_block: tpb,
             };
             let data = weight_bytes(60_000, (bt * tpb) as u64, 0.05);
-            roundtrip(&data, Fp8Format::E4M3, params, DecodePath::Fast);
-            roundtrip(&data, Fp8Format::E4M3, params, DecodePath::Alg1);
+            for path in ALL_PATHS {
+                roundtrip(&data, Fp8Format::E4M3, params, path);
+            }
         }
     }
 
@@ -524,7 +819,7 @@ mod tests {
     fn adversarial_uniform_bytes_roundtrip() {
         let mut rng = Xoshiro256::seed_from_u64(10);
         let data: Vec<u8> = (0..123_457).map(|_| (rng.next_u64() >> 56) as u8).collect();
-        for path in [DecodePath::Fast, DecodePath::Alg1] {
+        for path in ALL_PATHS {
             roundtrip(&data, Fp8Format::E4M3, Ecf8Params::default(), path);
         }
     }
@@ -533,9 +828,97 @@ mod tests {
     fn all_same_exponent_roundtrip() {
         // degenerate single-symbol alphabet: code length forced to 1
         let data = vec![0x38u8; 10_000]; // 1.0 repeated
-        for path in [DecodePath::Fast, DecodePath::Alg1] {
+        for path in ALL_PATHS {
             roundtrip(&data, Fp8Format::E4M3, Ecf8Params::default(), path);
         }
+    }
+
+    /// A deliberately pathological code book: Fibonacci-ish frequencies
+    /// drive the rarest exponent symbols to the 16-bit MAX_CODE_LEN
+    /// ceiling, exercising the multi-LUT fallback tier and the two-level
+    /// single LUT on real streams.
+    fn max_depth_code() -> CanonicalCode {
+        let mut freqs = vec![0u64; 16];
+        let (mut a, mut b) = (1u64, 1u64);
+        for f in freqs.iter_mut() {
+            *f = a;
+            let c = a + b;
+            a = b;
+            b = c;
+        }
+        let code = CanonicalCode::from_frequencies(&freqs);
+        assert!(code.max_len() >= 15, "want deep codes, got {}", code.max_len());
+        code
+    }
+
+    #[test]
+    fn max_length_codes_hit_fallback_tier_and_stay_exact() {
+        let code = max_depth_code();
+        // Bias the data towards the frequency-poorest symbols (low fib
+        // indices ⇒ longest codes) so 15/16-bit codewords are dense in
+        // the stream, not just representable.
+        let mut rng = Xoshiro256::seed_from_u64(33);
+        let data: Vec<u8> = (0..80_000)
+            .map(|_| {
+                let sym = if rng.next_u64() & 3 == 0 {
+                    (rng.next_u64() % 16) as u8 // occasional short codes
+                } else {
+                    (rng.next_u64() % 4) as u8 // mostly 13–16-bit codes
+                };
+                let rest = (rng.next_u64() & 0x0F) as u8;
+                Fp8Format::E4M3.assemble(sym, rest)
+            })
+            .collect();
+        let blob = encode_with_code(&data, Fp8Format::E4M3, Ecf8Params::default(), &code);
+        let reference = decode_scalar_reference(&blob);
+        assert_eq!(reference, data);
+        for path in ALL_PATHS {
+            let mut out = vec![0u8; data.len()];
+            decode_into_path(&blob, &mut out, None, path);
+            assert_eq!(out, data, "{path:?}");
+        }
+    }
+
+    #[test]
+    fn property_all_paths_match_scalar_reference() {
+        property(
+            "every decode path == scalar reference on adversarial tensors",
+            40,
+            |g: &mut Gen| {
+                let n = g.usize_in(0..=8192);
+                // mix of uniform bytes and weight-like bytes
+                let data: Vec<u8> = if g.bool() {
+                    (0..n).map(|_| g.u8()).collect()
+                } else {
+                    (0..n)
+                        .map(|_| {
+                            let x = (g.f32() - 0.5) * 0.1;
+                            crate::fp8::F8E4M3::from_f32(x).to_bits()
+                        })
+                        .collect()
+                };
+                let params = *g.choose(&[
+                    Ecf8Params::default(),
+                    Ecf8Params {
+                        bytes_per_thread: 8,
+                        threads_per_block: 32,
+                    },
+                    Ecf8Params {
+                        bytes_per_thread: 4,
+                        threads_per_block: 128,
+                    },
+                ]);
+                let fmt = *g.choose(&[Fp8Format::E4M3, Fp8Format::E5M2]);
+                let blob = encode(&data, fmt, params);
+                let reference = decode_scalar_reference(&blob);
+                assert_eq!(reference, data);
+                for path in ALL_PATHS {
+                    let mut out = vec![0u8; n];
+                    decode_into_path(&blob, &mut out, None, path);
+                    assert_eq!(out, reference, "{path:?}");
+                }
+            },
+        );
     }
 
     #[test]
@@ -557,7 +940,7 @@ mod tests {
             let fmt = *g.choose(&[Fp8Format::E4M3, Fp8Format::E5M2]);
             let blob = encode(&data, fmt, params);
             let mut out = vec![0u8; n];
-            let path = if g.bool() { DecodePath::Fast } else { DecodePath::Alg1 };
+            let path = *g.choose(&ALL_PATHS);
             decode_into_path(&blob, &mut out, None, path);
             assert_eq!(out, data);
         });

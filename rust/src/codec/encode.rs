@@ -2,11 +2,26 @@
 //! sign/mantissa nibbles, and emit the synchronization metadata (per-thread
 //! gaps, per-block output positions) that lets thread blocks decode
 //! autonomously.
+//!
+//! Two equivalent implementations:
+//!
+//! * [`encode_with_code`] — the straightforward sequential pass;
+//! * [`encode_with_code_parallel`] — a block-sharded two-pass encoder
+//!   whose output is **byte-identical** to the sequential one. Pass 1
+//!   computes per-chunk code-length sums (a histogram × length dot
+//!   product) on the thread pool and prefix-sums them into exact bit
+//!   offsets; pass 2 writes every chunk's bitstream, nibble plane, and
+//!   window (gap / first-element) records independently, with only the
+//!   two bit-shared boundary bytes per chunk OR-merged sequentially at
+//!   the end.
 
 use super::{Ecf8Blob, Ecf8Params, Fp8Format};
 use crate::huffman::bitstream::BitWriter;
 use crate::huffman::canonical::CanonicalCode;
 use crate::util::stats::shannon_entropy;
+use crate::util::threadpool::ThreadPool;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 /// Histogram of exponent symbols of an FP8 byte tensor.
 pub fn exponent_histogram(data: &[u8], format: Fp8Format) -> Vec<u64> {
@@ -134,6 +149,223 @@ pub fn encode_with_code(
     }
 }
 
+/// Elements per parallel-encode chunk. Even, so each chunk owns a
+/// disjoint byte range of the packed nibble plane (two nibbles per byte).
+const PAR_CHUNK: usize = 1 << 16;
+
+/// Parallel [`encode`]: same histogram + code construction, chunked
+/// two-pass bitstream emission on `pool`.
+pub fn encode_parallel(
+    data: &[u8],
+    format: Fp8Format,
+    params: Ecf8Params,
+    pool: &ThreadPool,
+) -> Ecf8Blob {
+    let hist = exponent_histogram(data, format);
+    let code = CanonicalCode::from_frequencies(&hist);
+    encode_with_code_parallel(data, format, params, &code, pool)
+}
+
+/// Per-chunk output of parallel pass 2, merged sequentially afterwards.
+struct ChunkOut {
+    /// index + value of the chunk's first (bit-shared) stream byte
+    first_byte: usize,
+    first_val: u8,
+    /// index + value of the chunk's last (bit-shared) stream byte
+    last_byte: usize,
+    last_val: u8,
+    /// (window index, gap bits, first element index) candidates for every
+    /// window whose first codeword start lies in this chunk — the first
+    /// candidate may duplicate the previous chunk's last window and is
+    /// dropped at merge time
+    windows: Vec<(usize, u8, u64)>,
+}
+
+/// Two-pass block-sharded encoder, byte-identical to
+/// [`encode_with_code`]. See the module docs for the pass structure.
+pub fn encode_with_code_parallel(
+    data: &[u8],
+    format: Fp8Format,
+    params: Ecf8Params,
+    code: &CanonicalCode,
+    pool: &ThreadPool,
+) -> Ecf8Blob {
+    let n_elem = data.len();
+    // small tensors: chunking overhead dominates, and the sequential
+    // encoder also handles the empty-tensor edge cases
+    if n_elem < 2 * PAR_CHUNK {
+        return encode_with_code(data, format, params, code);
+    }
+    let n_chunks = n_elem.div_ceil(PAR_CHUNK);
+    let window_bits = (params.bytes_per_thread * 8) as u64;
+
+    // ---- Pass 1: exact bit offset of every chunk ------------------------
+    let chunk_bits: Vec<AtomicU64> = (0..n_chunks).map(|_| AtomicU64::new(0)).collect();
+    {
+        let chunk_bits = &chunk_bits;
+        pool.scope_chunks(n_chunks, pool.size() * 4, move |_, cs, ce| {
+            for c in cs..ce {
+                let lo = c * PAR_CHUNK;
+                let hi = ((c + 1) * PAR_CHUNK).min(n_elem);
+                let mut h = [0u64; 32];
+                for &b in &data[lo..hi] {
+                    h[format.split(b).0 as usize] += 1;
+                }
+                let bits: u64 = h
+                    .iter()
+                    .zip(code.lengths.iter())
+                    .map(|(&cnt, &len)| cnt * len as u64)
+                    .sum();
+                chunk_bits[c].store(bits, Ordering::Relaxed);
+            }
+        });
+    }
+    let mut start_bit = vec![0u64; n_chunks + 1];
+    for c in 0..n_chunks {
+        start_bit[c + 1] = start_bit[c] + chunk_bits[c].load(Ordering::Relaxed);
+    }
+    let total_bits = start_bit[n_chunks];
+
+    // ---- Geometry (identical to the sequential derivation) --------------
+    let last_len = code.encode(format.split(data[n_elem - 1]).0 as usize).1 as u64;
+    let last_start = total_bits - last_len;
+    let n_threads_used = (last_start / window_bits) as usize + 1;
+    let tpb = params.threads_per_block;
+    let n_blocks = n_threads_used.div_ceil(tpb).max(1);
+    let n_threads = n_blocks * tpb;
+
+    let mut encoded = vec![0u8; n_blocks * params.block_bytes() + 8];
+    let mut packed = vec![0u8; n_elem.div_ceil(2)];
+
+    // ---- Pass 2: independent chunk emission ------------------------------
+    let results: Vec<Mutex<Option<ChunkOut>>> =
+        (0..n_chunks).map(|_| Mutex::new(None)).collect();
+    {
+        let results = &results;
+        let start_bit = &start_bit;
+        let enc_addr = encoded.as_mut_ptr() as usize;
+        let packed_addr = packed.as_mut_ptr() as usize;
+        pool.scope_chunks(n_chunks, pool.size() * 4, move |_, cs, ce| {
+            for c in cs..ce {
+                let lo = c * PAR_CHUNK;
+                let hi = ((c + 1) * PAR_CHUNK).min(n_elem);
+                let s_bit = start_bit[c];
+                let lead = (s_bit % 8) as u32;
+                let mut w = BitWriter::with_capacity((hi - lo) / 2 + 16);
+                if lead > 0 {
+                    w.write(0, lead);
+                }
+                // SAFETY: lo is even, so chunks own disjoint byte ranges
+                // [lo/2, ceil(hi/2)) of the packed plane.
+                let pk = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        (packed_addr as *mut u8).add(lo / 2),
+                        hi.div_ceil(2) - lo / 2,
+                    )
+                };
+                let mut windows: Vec<(usize, u8, u64)> = Vec::new();
+                let mut p = s_bit;
+                let mut prev_window = u64::MAX;
+                for (i, &byte) in data[lo..hi].iter().enumerate() {
+                    let idx = lo + i;
+                    let (sym, rest) = format.split(byte);
+                    pk[i / 2] |= rest << (4 - (i % 2) * 4);
+                    let wd = p / window_bits;
+                    if wd != prev_window {
+                        // First codeword start this chunk sees in window
+                        // `wd`. Candidate only: when the window's true
+                        // first start lies in an earlier chunk this gap
+                        // is an overshoot (possibly ≥ 16) and the merge
+                        // discards it — the 4-bit bound is asserted there,
+                        // on accepted records.
+                        let gap = p - wd * window_bits;
+                        windows.push((wd as usize, gap as u8, idx as u64));
+                        prev_window = wd;
+                    }
+                    let (cw, l) = code.encode(sym as usize);
+                    w.write(cw, l);
+                    p += l as u64;
+                }
+                debug_assert_eq!(p, start_bit[c + 1]);
+                let bytes = w.finish();
+                let first_byte = (s_bit / 8) as usize;
+                debug_assert_eq!(
+                    first_byte + bytes.len() - 1,
+                    ((start_bit[c + 1] - 1) / 8) as usize
+                );
+                if bytes.len() > 2 {
+                    // SAFETY: interior bytes (first_byte, last_byte) are
+                    // bit-exclusive to this chunk; only the two boundary
+                    // bytes can share bits with neighbours and those are
+                    // OR-merged sequentially below.
+                    let dst = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            (enc_addr as *mut u8).add(first_byte + 1),
+                            bytes.len() - 2,
+                        )
+                    };
+                    dst.copy_from_slice(&bytes[1..bytes.len() - 1]);
+                }
+                *results[c].lock().unwrap() = Some(ChunkOut {
+                    first_byte,
+                    first_val: bytes[0],
+                    last_byte: first_byte + bytes.len() - 1,
+                    last_val: *bytes.last().unwrap(),
+                    windows,
+                });
+            }
+        });
+    }
+
+    // ---- Sequential merge: boundary bytes + window metadata --------------
+    let mut gaps4: Vec<u8> = Vec::with_capacity(n_threads);
+    let mut first_sym: Vec<u64> = Vec::with_capacity(n_threads);
+    for slot in &results {
+        let out = slot.lock().unwrap().take().expect("chunk emitted");
+        encoded[out.first_byte] |= out.first_val;
+        encoded[out.last_byte] |= out.last_val;
+        for (wd, gap, first) in out.windows {
+            if wd == gaps4.len() {
+                // genuinely the first codeword start in window `wd`:
+                // consecutive starts are ≤ MAX_CODE_LEN = 16 bits apart,
+                // so the accepted gap always fits the nibble
+                debug_assert!(gap < 16, "gap {gap} does not fit in 4 bits");
+                gaps4.push(gap);
+                first_sym.push(first);
+            } else {
+                // boundary window already claimed by the previous chunk
+                debug_assert!(wd < gaps4.len(), "window {wd} skipped");
+            }
+        }
+    }
+    debug_assert_eq!(gaps4.len(), n_threads_used, "window census mismatch");
+
+    // ---- Tail identical to the sequential encoder ------------------------
+    gaps4.resize(n_threads, 0);
+    first_sym.resize(n_threads, n_elem as u64);
+    let mut gaps = vec![0u8; n_threads.div_ceil(2)];
+    for (t, &g) in gaps4.iter().enumerate() {
+        gaps[t / 2] |= g << (4 - (t % 2) * 4);
+    }
+    let mut outpos = Vec::with_capacity(n_blocks + 1);
+    for b in 0..n_blocks {
+        outpos.push(first_sym[b * tpb]);
+    }
+    outpos.push(n_elem as u64);
+
+    Ecf8Blob {
+        format,
+        params,
+        n_elem,
+        code_lengths: code.lengths.iter().map(|&l| l as u8).collect(),
+        encoded,
+        encoded_bits: total_bits,
+        packed,
+        gaps,
+        outpos,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -213,6 +445,77 @@ mod tests {
             .map(|&b| code.encode(Fp8Format::E4M3.split(b).0 as usize).1 as u64)
             .sum();
         assert_eq!(blob.encoded_bits, expect);
+    }
+
+    fn assert_blob_eq(a: &crate::codec::Ecf8Blob, b: &crate::codec::Ecf8Blob) {
+        assert_eq!(a.n_elem, b.n_elem);
+        assert_eq!(a.encoded_bits, b.encoded_bits);
+        assert_eq!(a.encoded, b.encoded, "encoded stream differs");
+        assert_eq!(a.packed, b.packed, "packed nibbles differ");
+        assert_eq!(a.gaps, b.gaps, "gap metadata differs");
+        assert_eq!(a.outpos, b.outpos, "outpos differs");
+        assert_eq!(a.code_lengths, b.code_lengths);
+    }
+
+    #[test]
+    fn parallel_encode_byte_identical_to_sequential() {
+        let pool = ThreadPool::new(4);
+        // sizes straddling the chunk boundary and odd lengths that leave
+        // a half-filled packed byte at a chunk edge
+        for n in [
+            2 * super::PAR_CHUNK,
+            2 * super::PAR_CHUNK + 1,
+            3 * super::PAR_CHUNK - 1,
+            777_777,
+        ] {
+            let data = weight_like_bytes(n, n as u64);
+            let seq = encode(&data, Fp8Format::E4M3, Ecf8Params::default());
+            let par = encode_parallel(&data, Fp8Format::E4M3, Ecf8Params::default(), &pool);
+            assert_blob_eq(&seq, &par);
+        }
+    }
+
+    #[test]
+    fn parallel_encode_small_input_falls_back() {
+        let pool = ThreadPool::new(2);
+        for n in [0usize, 1, 100, super::PAR_CHUNK] {
+            let data = weight_like_bytes(n, 9);
+            let seq = encode(&data, Fp8Format::E4M3, Ecf8Params::default());
+            let par = encode_parallel(&data, Fp8Format::E4M3, Ecf8Params::default(), &pool);
+            assert_blob_eq(&seq, &par);
+        }
+    }
+
+    #[test]
+    fn property_parallel_encode_identity() {
+        use crate::util::quickprop::{property, Gen};
+        property("parallel encode == sequential encode", 12, |g: &mut Gen| {
+            // pool per case: keeps the closure free of captured channel
+            // state (quickprop requires RefUnwindSafe closures)
+            let pool = ThreadPool::new(3);
+            // straddle 2–3 chunk boundaries with adversarial content
+            let n = g.usize_in(2 * super::PAR_CHUNK..=3 * super::PAR_CHUNK);
+            let data: Vec<u8> = if g.bool() {
+                (0..n).map(|_| g.u8()).collect()
+            } else {
+                weight_like_bytes(n, g.u64())
+            };
+            let params = *g.choose(&[
+                Ecf8Params::default(),
+                Ecf8Params {
+                    bytes_per_thread: 4,
+                    threads_per_block: 128,
+                },
+            ]);
+            let fmt = *g.choose(&[Fp8Format::E4M3, Fp8Format::E5M2]);
+            let hist = exponent_histogram(&data, fmt);
+            let code = CanonicalCode::from_frequencies(&hist);
+            let seq = encode_with_code(&data, fmt, params, &code);
+            let par = encode_with_code_parallel(&data, fmt, params, &code, &pool);
+            assert_blob_eq(&seq, &par);
+            // and the parallel blob decodes losslessly
+            assert_eq!(crate::codec::decompress_fp8(&par), data);
+        });
     }
 
     #[test]

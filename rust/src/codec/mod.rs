@@ -155,9 +155,18 @@ impl Ecf8Blob {
     }
 }
 
+pub use decode::{DecodePath, DecodeTables};
+pub use encode::{encode_parallel, encode_with_code_parallel};
+
 /// Compress FP8 bytes (default params, E4M3). See [`encode::encode`].
 pub fn compress_fp8(data: &[u8]) -> Ecf8Blob {
     encode::encode(data, Fp8Format::E4M3, Ecf8Params::default())
+}
+
+/// Parallel [`compress_fp8`] — byte-identical output, chunked two-pass
+/// encode on `pool`. See [`encode::encode_with_code_parallel`].
+pub fn compress_fp8_parallel(data: &[u8], pool: &crate::util::threadpool::ThreadPool) -> Ecf8Blob {
+    encode::encode_parallel(data, Fp8Format::E4M3, Ecf8Params::default(), pool)
 }
 
 /// Decompress into a fresh buffer. See [`decode::decode_into`].

@@ -20,13 +20,26 @@ pub struct CanonicalCode {
     pub codes: Vec<u32>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CodeError {
-    #[error("code lengths violate Kraft inequality (sum {0} > 1)")]
     KraftViolation(f64),
-    #[error("code length {0} exceeds MAX_CODE_LEN {MAX_CODE_LEN}")]
     TooLong(u32),
 }
+
+impl std::fmt::Display for CodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodeError::KraftViolation(s) => {
+                write!(f, "code lengths violate Kraft inequality (sum {s} > 1)")
+            }
+            CodeError::TooLong(l) => {
+                write!(f, "code length {l} exceeds MAX_CODE_LEN {MAX_CODE_LEN}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CodeError {}
 
 impl CanonicalCode {
     /// Build a length-limited canonical code from symbol frequencies.

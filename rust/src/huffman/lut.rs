@@ -198,6 +198,103 @@ impl PairLut {
     }
 }
 
+/// Multi-symbol decode table: maps the top [`MULTI_BITS`] bits of the
+/// sliding window to up to [`MULTI_MAX_SYMS`] decoded symbols in a single
+/// lookup. With H(E) ≈ 2–3 bits (mean code ~3 bits) a 14-bit window holds
+/// 4 full codewords for the overwhelming majority of positions, so the
+/// per-symbol dispatch cost drops ~4× versus the single LUT and ~2×
+/// versus [`PairLut`]. The greedy fill also packs 1–3 symbols when codes
+/// are longer, so the single-symbol fallback triggers only for a leading
+/// code wider than 14 bits (possible only under the 15/16-bit tail of a
+/// length-limited book — a ≪1 % case on weight data).
+///
+/// Entry layout (u32):
+///   bits 0..20   syms[0..4], 5 bits each (exponent alphabets ≤ 32)
+///   bits 20..23  symbol count (0 ⇒ fall back to the single LUT)
+///   bits 23..28  consumed bits (≤ MULTI_BITS)
+///
+/// Correctness of the greedy fill rests on prefix-freeness: if the
+/// single-LUT decode of the zero-padded remainder returns a length that
+/// still fits inside the 14 indexed (real) bits, those bits *are* the
+/// unique matching codeword — no shorter codeword can be a prefix of a
+/// longer one, so padding can never fabricate a fitting parse (same
+/// argument as [`PairLut`], proved over one more level of induction).
+#[derive(Debug, Clone)]
+pub struct MultiLut {
+    entries: Vec<u32>,
+}
+
+/// Window width indexing [`MultiLut`] (2^14 × 4 B = 64 KiB table).
+pub const MULTI_BITS: u32 = 14;
+/// Maximum symbols emitted per lookup.
+pub const MULTI_MAX_SYMS: usize = 4;
+
+const MULTI_SYM_MASK: u32 = 0x1F;
+
+impl MultiLut {
+    pub fn build(single: &DecodeLut) -> Self {
+        let n = 1usize << MULTI_BITS;
+        let mut entries = vec![0u32; n];
+        for (w, entry) in entries.iter_mut().enumerate() {
+            // MSB-align the 14 index bits in a 16-bit shifting register
+            let bits = (w as u32) << (16 - MULTI_BITS);
+            let mut used = 0u32;
+            let mut syms = 0u32;
+            let mut count = 0u32;
+            while (count as usize) < MULTI_MAX_SYMS {
+                let win = ((bits << used) & 0xFFFF) as u16;
+                let (s, l) = single.decode(win);
+                if l == 0 || used + l > MULTI_BITS || s > MULTI_SYM_MASK as u16 {
+                    // incomplete code in padding, codeword overruns the
+                    // window, or symbol too wide to pack (≥ 32: the
+                    // BF16/DFloat11 256-symbol books use the single LUT)
+                    break;
+                }
+                syms |= (s as u32) << (5 * count);
+                used += l;
+                count += 1;
+            }
+            if count > 0 {
+                *entry = syms | (count << 20) | (used << 23);
+            }
+        }
+        Self { entries }
+    }
+
+    /// Raw entry for the top [`MULTI_BITS`] bits of a 64-bit MSB-aligned
+    /// window. Decode with [`MultiLut::count`] / [`MultiLut::consumed`] /
+    /// [`MultiLut::sym`]; a zero entry means "fall back to the single
+    /// LUT".
+    #[inline(always)]
+    pub fn lookup(&self, l: u64) -> u32 {
+        self.entries[(l >> (64 - MULTI_BITS)) as usize]
+    }
+
+    /// Number of symbols packed in `entry` (0 ⇒ fallback).
+    #[inline(always)]
+    pub fn count(entry: u32) -> usize {
+        ((entry >> 20) & 0x7) as usize
+    }
+
+    /// Total bits the packed symbols consume.
+    #[inline(always)]
+    pub fn consumed(entry: u32) -> u32 {
+        (entry >> 23) & 0x1F
+    }
+
+    /// `k`-th packed symbol (k < count).
+    #[inline(always)]
+    pub fn sym(entry: u32, k: usize) -> u8 {
+        ((entry >> (5 * k)) & MULTI_SYM_MASK) as u8
+    }
+
+    /// Fraction of entries that decode ≥ `k` symbols (diagnostics).
+    pub fn coverage(&self, k: usize) -> f64 {
+        self.entries.iter().filter(|&&e| Self::count(e) >= k).count() as f64
+            / self.entries.len() as f64
+    }
+}
+
 #[inline(always)]
 fn pack_entry(sym: u16, len: u32) -> u16 {
     debug_assert!(sym < 256 && len <= 16);
@@ -299,6 +396,75 @@ mod tests {
         let (c, l) = code.encode(0);
         let l64 = (c as u64) << (64 - l);
         assert_eq!(lut.decode_u64(l64), (0, l));
+    }
+
+    /// Reference re-decode of a MultiLut window through the single LUT.
+    fn multi_matches_single(lut: &DecodeLut, multi: &MultiLut, w: u64) {
+        let e = multi.lookup(w);
+        let count = MultiLut::count(e);
+        let mut used = 0u32;
+        for k in 0..count {
+            let (s, l) = lut.decode(((w << used) >> 48) as u16);
+            assert_eq!(MultiLut::sym(e, k), s as u8, "sym {k} of window {w:#x}");
+            used += l;
+        }
+        if count > 0 {
+            assert_eq!(MultiLut::consumed(e), used, "consumed of window {w:#x}");
+            assert!(used <= MULTI_BITS);
+        }
+    }
+
+    #[test]
+    fn multi_lut_agrees_with_single_on_all_windows() {
+        // skewed weight-like book (short codes) and a deep book
+        for freqs in [
+            vec![900u64, 500, 250, 120, 60, 30, 15, 8, 4, 2, 1, 1, 1, 1, 1, 1],
+            vec![5u64, 5, 5, 5, 5, 5, 5, 5, 5, 5, 5, 5, 5, 5, 5, 5],
+        ] {
+            let (_, lut) = lut_for(&freqs);
+            let multi = MultiLut::build(&lut);
+            for w in 0..(1u64 << MULTI_BITS) {
+                multi_matches_single(&lut, &multi, w << (64 - MULTI_BITS));
+            }
+        }
+    }
+
+    #[test]
+    fn multi_lut_covers_weightlike_books_densely() {
+        // mean code ≈ 2–3 bits ⇒ nearly every window packs 4 symbols
+        let freqs = [60_000u64, 25_000, 8_000, 4_000, 1_500, 700, 300, 100,
+                     40, 15, 6, 3, 1, 1, 1, 1];
+        let (_, lut) = lut_for(&freqs);
+        let multi = MultiLut::build(&lut);
+        assert!(multi.coverage(4) > 0.9, "coverage(4)={}", multi.coverage(4));
+        assert!(multi.coverage(1) > 0.99, "coverage(1)={}", multi.coverage(1));
+    }
+
+    #[test]
+    fn multi_lut_degenerate_single_symbol_book() {
+        // one symbol, code length 1: every window is 4 × symbol 0
+        let (_, lut) = lut_for(&[42]);
+        let multi = MultiLut::build(&lut);
+        let e = multi.lookup(0);
+        assert_eq!(MultiLut::count(e), 4);
+        assert_eq!(MultiLut::consumed(e), 4);
+        for k in 0..4 {
+            assert_eq!(MultiLut::sym(e, k), 0);
+        }
+    }
+
+    #[test]
+    fn multi_lut_rejects_wide_symbols() {
+        // 256-symbol book: symbols ≥ 32 cannot pack into 5-bit lanes; the
+        // builder must leave those windows on the fallback path rather
+        // than truncate.
+        let freqs: Vec<u64> = (0..256u64).map(|i| 1 + (i % 37) * (i % 11)).collect();
+        let code = CanonicalCode::from_frequencies(&freqs);
+        let lut = DecodeLut::build(&code);
+        let multi = MultiLut::build(&lut);
+        for w in 0..(1u64 << MULTI_BITS) {
+            multi_matches_single(&lut, &multi, w << (64 - MULTI_BITS));
+        }
     }
 
     #[test]

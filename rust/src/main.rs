@@ -82,6 +82,7 @@ fn cmd_compress(raw: Vec<String>) -> anyhow::Result<()> {
     let cmd = Command::new("compress", "compress a raw FP8 byte tensor")
         .opt_default("threads-per-block", "T parameter", "256")
         .opt_default("bytes-per-thread", "B parameter", "8")
+        .opt_default("threads", "encoder threads (0 = serial)", "0")
         .flag("e5m2", "treat input as E5M2 instead of E4M3");
     let a = cmd.parse(raw).map_err(|e| handle_help(&cmd, e))?;
     let [input, output] = a.positional() else {
@@ -97,7 +98,12 @@ fn cmd_compress(raw: Vec<String>) -> anyhow::Result<()> {
     } else {
         Fp8Format::E4M3
     };
-    let blob = encode::encode(&data, fmt, params);
+    let threads: usize = a.get_parse_or("threads", 0);
+    let blob = if threads > 0 {
+        encode::encode_parallel(&data, fmt, params, &ThreadPool::new(threads))
+    } else {
+        encode::encode(&data, fmt, params)
+    };
     container::write_file(&blob, std::path::Path::new(output))?;
     println!(
         "{} -> {}  ({} -> {}, saving {:.1}%)",

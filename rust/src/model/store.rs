@@ -3,7 +3,7 @@
 //! runtime loads; tensors stay compressed in memory and are decompressed
 //! just-in-time per layer (§3.3).
 
-use super::config::{ModelConfig, TensorSpec};
+use super::config::{BlockType, ModelConfig, TensorSpec};
 use super::weights::generate_tensor_fp8;
 use crate::codec::{container, encode, Ecf8Blob, Ecf8Params, Fp8Format};
 use crate::util::threadpool::ThreadPool;
@@ -89,6 +89,24 @@ impl CompressedModel {
     /// Largest decoded tensor size — the §3.3 shared-buffer size.
     pub fn max_tensor_bytes(&self) -> usize {
         self.tensors.iter().map(|(s, _)| s.n_elem()).max().unwrap_or(0)
+    }
+
+    /// Largest per-stage decoded working set — the zero-copy arena size.
+    /// Embedding and head run as their own stages (never resident
+    /// together with a transformer layer's weights), so they count as
+    /// solo tensors rather than joining their layer index's sum.
+    pub fn max_layer_bytes(&self) -> usize {
+        let mut by_layer: HashMap<usize, usize> = HashMap::new();
+        let mut solo_max = 0usize;
+        for (s, _) in &self.tensors {
+            match s.block_type {
+                BlockType::Embedding | BlockType::Head => {
+                    solo_max = solo_max.max(s.n_elem());
+                }
+                _ => *by_layer.entry(s.layer).or_insert(0) += s.n_elem(),
+            }
+        }
+        by_layer.values().copied().max().unwrap_or(0).max(solo_max)
     }
 }
 

@@ -2,13 +2,23 @@
 //! artifacts, with every weight tensor decompressed just-in-time from its
 //! ECF8 blob (§3.3). This is the request-path compute the coordinator
 //! calls into.
+//!
+//! The request path is zero-copy: each layer's tensors are decoded into
+//! the shared arena and PJRT borrows them in place — no per-forward blob
+//! clones and no per-tensor `to_vec` (both existed before the arena).
+//! [`LlmExecutor::forward_prefetch`] additionally decodes layer ℓ+1 on a
+//! background thread while layer ℓ executes (decode-ahead double
+//! buffering); its logits are bit-identical to [`LlmExecutor::forward`].
 
 use super::pjrt::{Artifact, Input, PjrtRuntime};
+use crate::codec::Ecf8Blob;
 use crate::model::config::ModelConfig;
 use crate::model::store::CompressedModel;
 use crate::tensormgr::JitDecompressor;
 use crate::util::threadpool::ThreadPool;
 use anyhow::{anyhow, Context, Result};
+use std::borrow::Cow;
+use std::ops::Range;
 use std::sync::Arc;
 
 /// Sequence length the artifacts were lowered with (aot.py SEQ_LEN).
@@ -35,6 +45,41 @@ pub struct LlmExecutor {
     pub forwards: u64,
 }
 
+/// Borrow a tensor's blob out of the model (free function so call sites
+/// can hold the borrow while `jit` is borrowed mutably).
+fn blob_of<'m>(model: &'m CompressedModel, name: &str) -> Result<&'m Ecf8Blob> {
+    model
+        .get(name)
+        .map(|(_, b)| b)
+        .ok_or_else(|| anyhow!("tensor {name} missing"))
+}
+
+/// Assemble the layer artifact's 10-input argument list — activations,
+/// attn-norm gain, q/k/v/o, mlp-norm gain, gate/up/down — from a weight
+/// provider (index order = [`LlmExecutor::layer_tensor_names`]). One
+/// definition so the plain and decode-ahead forwards cannot drift.
+fn layer_inputs<'a>(
+    x: Vec<f32>,
+    ones_d: &[f32],
+    b: i64,
+    t: i64,
+    d: i64,
+    weight: impl Fn(usize) -> Input<'a>,
+) -> Vec<Input<'a>> {
+    vec![
+        Input::F32(x, vec![b, t, d]),
+        Input::F32(ones_d.to_vec(), vec![d]),
+        weight(0),
+        weight(1),
+        weight(2),
+        weight(3),
+        Input::F32(ones_d.to_vec(), vec![d]),
+        weight(4),
+        weight(5),
+        weight(6),
+    ]
+}
+
 impl LlmExecutor {
     pub fn new(
         cfg: ModelConfig,
@@ -45,7 +90,10 @@ impl LlmExecutor {
         let prefix = artifact_prefix(cfg.name)
             .ok_or_else(|| anyhow!("no artifacts lowered for model {}", cfg.name))?;
         let rt = PjrtRuntime::new(artifacts_dir)?;
-        let jit = JitDecompressor::new(model.max_tensor_bytes(), pool);
+        // arena sized so a whole layer (and the largest single tensor)
+        // fits without request-path reallocation
+        let buffer_bytes = model.max_tensor_bytes().max(model.max_layer_bytes());
+        let jit = JitDecompressor::new(buffer_bytes, pool);
         Ok(Self {
             rt,
             cfg,
@@ -67,19 +115,43 @@ impl LlmExecutor {
         Ok(())
     }
 
-    fn decode_input(&mut self, tensor: &str, shape: Vec<i64>) -> Result<Input> {
-        let (spec, blob) = self
-            .model
-            .get(tensor)
-            .ok_or_else(|| anyhow!("tensor {tensor} missing"))?;
-        debug_assert_eq!(
-            shape.iter().product::<i64>() as usize,
-            spec.n_elem(),
-            "{tensor}"
-        );
-        let blob = blob.clone();
-        let bytes = self.jit.with_decoded(&blob, |b| b.to_vec());
-        Ok(Input::U8(bytes, shape))
+    /// The weight tensor names of transformer layer `l`, in artifact
+    /// input order.
+    fn layer_tensor_names(l: usize) -> [String; 7] {
+        [
+            format!("layers.{l}.attn.q_proj"),
+            format!("layers.{l}.attn.k_proj"),
+            format!("layers.{l}.attn.v_proj"),
+            format!("layers.{l}.attn.o_proj"),
+            format!("layers.{l}.mlp.gate"),
+            format!("layers.{l}.mlp.up"),
+            format!("layers.{l}.mlp.down"),
+        ]
+    }
+
+    /// The weight shapes matching [`Self::layer_tensor_names`].
+    fn layer_tensor_shapes(&self) -> [Vec<i64>; 7] {
+        let d = self.cfg.hidden as i64;
+        let q_dim = (self.cfg.n_heads * self.cfg.head_dim) as i64;
+        let kv_dim = (self.cfg.n_kv_heads * self.cfg.head_dim) as i64;
+        let ffn = self.cfg.ffn_inter as i64;
+        [
+            vec![q_dim, d],
+            vec![kv_dim, d],
+            vec![kv_dim, d],
+            vec![d, q_dim],
+            vec![ffn, d],
+            vec![ffn, d],
+            vec![d, ffn],
+        ]
+    }
+
+    /// Decode `tensor` into the shared arena (zero-copy: the returned
+    /// range indexes [`JitDecompressor::arena`]).
+    fn decode_to_arena(&mut self, tensor: &str, n_expect: usize) -> Result<Range<usize>> {
+        let blob = blob_of(&self.model, tensor)?;
+        debug_assert_eq!(blob.n_elem, n_expect, "{tensor}");
+        Ok(self.jit.decode_to_arena(blob))
     }
 
     /// Full forward: `tokens` is `batch × SEQ_LEN` row-major; returns
@@ -90,49 +162,111 @@ impl LlmExecutor {
         let v = self.cfg.vocab as i64;
         let t = SEQ_LEN as i64;
         let b = batch as i64;
-        let q_dim = (self.cfg.n_heads * self.cfg.head_dim) as i64;
-        let kv_dim = (self.cfg.n_kv_heads * self.cfg.head_dim) as i64;
-        let ffn = self.cfg.ffn_inter as i64;
 
         let embed_art = self.rt.load(&format!("{}_embed_b{batch}", self.prefix))?;
         let layer_art = self.rt.load(&format!("{}_layer_b{batch}", self.prefix))?;
         let head_art = self.rt.load(&format!("{}_head_b{batch}", self.prefix))?;
 
-        // embed
-        let embed_w = self.decode_input("embed_tokens", vec![v, d])?;
-        let mut x = embed_art.run_f32(&[Input::I32(tokens.to_vec(), vec![b, t]), embed_w])?;
+        // embed — arena-borrowed weight, no copy
+        self.jit.begin_layer();
+        let embed_range = self.decode_to_arena("embed_tokens", (v * d) as usize)?;
+        let mut x = embed_art.run_f32(&[
+            Input::I32(tokens.to_vec(), vec![b, t]),
+            Input::U8(Cow::Borrowed(&self.jit.arena()[embed_range]), vec![v, d]),
+        ])?;
 
         // layers (norm gains are ones in the synthetic models)
         let ones_d = vec![1.0f32; d as usize];
+        let shapes = self.layer_tensor_shapes();
         for l in 0..self.cfg.n_layers {
-            let inputs = vec![
-                Input::F32(x, vec![b, t, d]),
-                Input::F32(ones_d.clone(), vec![d]),
-                self.decode_input(&format!("layers.{l}.attn.q_proj"), vec![q_dim, d])?,
-                self.decode_input(&format!("layers.{l}.attn.k_proj"), vec![kv_dim, d])?,
-                self.decode_input(&format!("layers.{l}.attn.v_proj"), vec![kv_dim, d])?,
-                self.decode_input(&format!("layers.{l}.attn.o_proj"), vec![d, q_dim])?,
-                Input::F32(ones_d.clone(), vec![d]),
-                self.decode_input(&format!("layers.{l}.mlp.gate"), vec![ffn, d])?,
-                self.decode_input(&format!("layers.{l}.mlp.up"), vec![ffn, d])?,
-                self.decode_input(&format!("layers.{l}.mlp.down"), vec![d, ffn])?,
-            ];
+            self.jit.begin_layer();
+            let names = Self::layer_tensor_names(l);
+            let mut ranges: Vec<Range<usize>> = Vec::with_capacity(names.len());
+            for (name, shape) in names.iter().zip(&shapes) {
+                let n_expect = shape.iter().product::<i64>() as usize;
+                ranges.push(self.decode_to_arena(name, n_expect)?);
+            }
+            // all seven weights of the layer borrowed from the arena at
+            // once — the §3.3 buffer, now copy-free
+            let arena = self.jit.arena();
+            let inputs = layer_inputs(x, &ones_d, b, t, d, |i| {
+                Input::U8(Cow::Borrowed(&arena[ranges[i].clone()]), shapes[i].clone())
+            });
             x = layer_art.run_f32(&inputs)?;
         }
 
         // head
-        let head_w = self.decode_input("lm_head", vec![v, d])?;
+        self.jit.begin_layer();
+        let head_range = self.decode_to_arena("lm_head", (v * d) as usize)?;
         let logits = head_art.run_f32(&[
             Input::F32(x, vec![b, t, d]),
             Input::F32(ones_d, vec![d]),
-            head_w,
+            Input::U8(Cow::Borrowed(&self.jit.arena()[head_range]), vec![v, d]),
         ])?;
+        self.forwards += 1;
+        Ok(logits)
+    }
+
+    /// Decode-ahead forward: bit-identical logits to [`Self::forward`],
+    /// with layer ℓ+1's tensors decoding on a background thread while
+    /// layer ℓ executes (see
+    /// [`JitDecompressor::with_layers_decoded`]).
+    pub fn forward_prefetch(&mut self, tokens: &[i32], batch: usize) -> Result<Vec<f32>> {
+        assert_eq!(tokens.len(), batch * SEQ_LEN, "token count");
+        let d = self.cfg.hidden as i64;
+        let v = self.cfg.vocab as i64;
+        let t = SEQ_LEN as i64;
+        let b = batch as i64;
+        let n_layers = self.cfg.n_layers;
+
+        let embed_art = self.rt.load(&format!("{}_embed_b{batch}", self.prefix))?;
+        let layer_art = self.rt.load(&format!("{}_layer_b{batch}", self.prefix))?;
+        let head_art = self.rt.load(&format!("{}_head_b{batch}", self.prefix))?;
+
+        // stage plan: embed | layer 0..L | head
+        let mut stages: Vec<Vec<&Ecf8Blob>> = Vec::with_capacity(n_layers + 2);
+        stages.push(vec![blob_of(&self.model, "embed_tokens")?]);
+        for l in 0..n_layers {
+            let mut layer = Vec::with_capacity(7);
+            for name in Self::layer_tensor_names(l) {
+                layer.push(blob_of(&self.model, &name)?);
+            }
+            stages.push(layer);
+        }
+        stages.push(vec![blob_of(&self.model, "lm_head")?]);
+
+        let shapes = self.layer_tensor_shapes();
+        let ones_d = vec![1.0f32; d as usize];
+        let mut x: Vec<f32> = Vec::new();
+        let mut logits: Vec<f32> = Vec::new();
+        self.jit
+            .with_layers_decoded(&stages, |stage, arena| -> Result<()> {
+                if stage == 0 {
+                    x = embed_art.run_f32(&[
+                        Input::I32(tokens.to_vec(), vec![b, t]),
+                        Input::U8(Cow::Borrowed(arena.tensor(0)), vec![v, d]),
+                    ])?;
+                } else if stage <= n_layers {
+                    let inputs = layer_inputs(std::mem::take(&mut x), &ones_d, b, t, d, |i| {
+                        Input::U8(Cow::Borrowed(arena.tensor(i)), shapes[i].clone())
+                    });
+                    x = layer_art.run_f32(&inputs)?;
+                } else {
+                    logits = head_art.run_f32(&[
+                        Input::F32(std::mem::take(&mut x), vec![b, t, d]),
+                        Input::F32(ones_d.clone(), vec![d]),
+                        Input::U8(Cow::Borrowed(arena.tensor(0)), vec![v, d]),
+                    ])?;
+                }
+                Ok(())
+            })?;
         self.forwards += 1;
         Ok(logits)
     }
 
     /// Forward with *pre-decoded raw* weights (bypasses ECF8) — the
     /// baseline for bit-exactness checks (Figure 3's pixel-identity).
+    /// Borrows the raw tensors instead of cloning them per forward.
     pub fn forward_raw(
         &mut self,
         tokens: &[i32],
@@ -147,14 +281,20 @@ impl LlmExecutor {
         let q_dim = (self.cfg.n_heads * self.cfg.head_dim) as i64;
         let kv_dim = (self.cfg.n_kv_heads * self.cfg.head_dim) as i64;
         let ffn = self.cfg.ffn_inter as i64;
-        let get = |name: &str, shape: Vec<i64>| -> Result<Input> {
+        fn get<'r>(
+            raw: &'r std::collections::HashMap<String, Vec<u8>>,
+            name: &str,
+            shape: Vec<i64>,
+        ) -> Result<Input<'r>> {
             Ok(Input::U8(
-                raw.get(name)
-                    .ok_or_else(|| anyhow!("raw tensor {name} missing"))?
-                    .clone(),
+                Cow::Borrowed(
+                    raw.get(name)
+                        .ok_or_else(|| anyhow!("raw tensor {name} missing"))?
+                        .as_slice(),
+                ),
                 shape,
             ))
-        };
+        }
 
         let embed_art = self.rt.load(&format!("{}_embed_b{batch}", self.prefix))?;
         let layer_art = self.rt.load(&format!("{}_layer_b{batch}", self.prefix))?;
@@ -162,28 +302,28 @@ impl LlmExecutor {
 
         let mut x = embed_art.run_f32(&[
             Input::I32(tokens.to_vec(), vec![b, t]),
-            get("embed_tokens", vec![v, d])?,
+            get(raw, "embed_tokens", vec![v, d])?,
         ])?;
         let ones_d = vec![1.0f32; d as usize];
         for l in 0..self.cfg.n_layers {
             let inputs = vec![
                 Input::F32(x, vec![b, t, d]),
                 Input::F32(ones_d.clone(), vec![d]),
-                get(&format!("layers.{l}.attn.q_proj"), vec![q_dim, d])?,
-                get(&format!("layers.{l}.attn.k_proj"), vec![kv_dim, d])?,
-                get(&format!("layers.{l}.attn.v_proj"), vec![kv_dim, d])?,
-                get(&format!("layers.{l}.attn.o_proj"), vec![d, q_dim])?,
+                get(raw, &format!("layers.{l}.attn.q_proj"), vec![q_dim, d])?,
+                get(raw, &format!("layers.{l}.attn.k_proj"), vec![kv_dim, d])?,
+                get(raw, &format!("layers.{l}.attn.v_proj"), vec![kv_dim, d])?,
+                get(raw, &format!("layers.{l}.attn.o_proj"), vec![d, q_dim])?,
                 Input::F32(ones_d.clone(), vec![d]),
-                get(&format!("layers.{l}.mlp.gate"), vec![ffn, d])?,
-                get(&format!("layers.{l}.mlp.up"), vec![ffn, d])?,
-                get(&format!("layers.{l}.mlp.down"), vec![d, ffn])?,
+                get(raw, &format!("layers.{l}.mlp.gate"), vec![ffn, d])?,
+                get(raw, &format!("layers.{l}.mlp.up"), vec![ffn, d])?,
+                get(raw, &format!("layers.{l}.mlp.down"), vec![d, ffn])?,
             ];
             x = layer_art.run_f32(&inputs)?;
         }
         let logits = head_art.run_f32(&[
             Input::F32(x, vec![b, t, d]),
             Input::F32(ones_d, vec![d]),
-            get("lm_head", vec![v, d])?,
+            get(raw, "lm_head", vec![v, d])?,
         ])?;
         Ok(logits)
     }
@@ -268,5 +408,25 @@ mod tests {
                 "logit {i} differs: {a} vs {b}"
             );
         }
+    }
+
+    #[test]
+    fn prefetch_forward_bit_exact_vs_plain() {
+        // decode-ahead must change the schedule, not the numbers
+        let Some(dir) = artifacts_dir() else { return };
+        let cfg = tiny_llm();
+        let model = CompressedModel::synthesize(&cfg, 3, None);
+        let mut ex = LlmExecutor::new(cfg.clone(), model, dir, None).unwrap();
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let tokens: Vec<i32> = (0..2 * SEQ_LEN)
+            .map(|_| (rng.next_below(cfg.vocab as u64)) as i32)
+            .collect();
+        let plain = ex.forward(&tokens, 2).unwrap();
+        let ahead = ex.forward_prefetch(&tokens, 2).unwrap();
+        assert_eq!(plain.len(), ahead.len());
+        for (i, (a, b)) in plain.iter().zip(&ahead).enumerate() {
+            assert!(a.to_bits() == b.to_bits(), "logit {i} differs: {a} vs {b}");
+        }
+        assert_eq!(ex.forwards, 2);
     }
 }

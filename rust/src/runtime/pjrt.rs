@@ -3,140 +3,223 @@
 //!
 //! Artifacts are lowered with `return_tuple=True`, so every execution
 //! returns a 1-tuple that is unwrapped here.
+//!
+//! Two backends, selected at compile time:
+//!
+//! * with `--features pjrt-xla`, the real XLA-bindings backend (the
+//!   `xla` crate must be added to Cargo.toml — see the comments there);
+//! * without it, a stub whose constructor returns an error; everything
+//!   that needs artifacts (serving tests, table benches) detects the
+//!   missing artifacts dir first and skips, so the rest of the crate —
+//!   codec, huffman, tensormgr, coordinator — builds and tests with no
+//!   registry access at all.
 
-use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::borrow::Cow;
+use std::path::PathBuf;
 
-/// One compiled HLO artifact.
-pub struct Artifact {
-    pub name: String,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-/// Typed input buffer for an execution.
-pub enum Input {
+/// Typed input buffer for an execution. `U8` can borrow (the zero-copy
+/// JIT-decode path hands PJRT slices of the shared decode arena without
+/// an intermediate `to_vec`); `F32`/`I32` are small activations and stay
+/// owned.
+pub enum Input<'a> {
     F32(Vec<f32>, Vec<i64>),
-    U8(Vec<u8>, Vec<i64>),
+    U8(Cow<'a, [u8]>, Vec<i64>),
     I32(Vec<i32>, Vec<i64>),
 }
 
-impl Input {
-    fn to_literal(&self) -> Result<xla::Literal> {
-        fn dims(shape: &[i64]) -> Vec<usize> {
-            shape.iter().map(|&d| d as usize).collect()
+/// Locate the artifacts directory: `$ECF8_ARTIFACTS`, `artifacts/`, or
+/// `../artifacts/` relative to the current dir.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("ECF8_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    for cand in ["artifacts", "../artifacts"] {
+        let p = PathBuf::from(cand);
+        if p.join("MANIFEST.txt").exists() {
+            return p;
         }
-        Ok(match self {
-            Input::F32(data, shape) => xla::Literal::vec1(data).reshape(shape)?,
-            // the crate has no u8 NativeType; build via untyped bytes
-            Input::U8(data, shape) => xla::Literal::create_from_shape_and_untyped_data(
-                xla::ElementType::U8,
-                &dims(shape),
-                data,
-            )?,
-            Input::I32(data, shape) => xla::Literal::vec1(data).reshape(shape)?,
-        })
     }
+    PathBuf::from("artifacts")
 }
 
-impl Artifact {
-    /// Execute with the given inputs; returns the tuple element 0 as f32
-    /// data (all our artifacts return a single f32 or i32 tensor; i32
-    /// results use [`Artifact::run_i32`]).
-    pub fn run_f32(&self, inputs: &[Input]) -> Result<Vec<f32>> {
-        let lit = self.run_literal(inputs)?;
-        Ok(lit.to_vec::<f32>()?)
+#[cfg(feature = "pjrt-xla")]
+mod backend {
+    use super::Input;
+    use anyhow::{anyhow, Context, Result};
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+
+    /// One compiled HLO artifact.
+    pub struct Artifact {
+        pub name: String,
+        exe: xla::PjRtLoadedExecutable,
     }
 
-    pub fn run_i32(&self, inputs: &[Input]) -> Result<Vec<i32>> {
-        let lit = self.run_literal(inputs)?;
-        Ok(lit.to_vec::<i32>()?)
-    }
-
-    fn run_literal(&self, inputs: &[Input]) -> Result<xla::Literal> {
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|i| i.to_literal())
-            .collect::<Result<_>>()?;
-        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
-        // return_tuple=True => unwrap the 1-tuple
-        Ok(result.to_tuple1()?)
-    }
-}
-
-/// The PJRT CPU runtime: loads artifacts by name from the artifacts
-/// directory, compiling each once and caching the executable.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    cache: HashMap<String, std::sync::Arc<Artifact>>,
-}
-
-impl PjrtRuntime {
-    /// CPU client over `dir` (usually `artifacts/`).
-    pub fn new<P: AsRef<Path>>(dir: P) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Self {
-            client,
-            dir: dir.as_ref().to_path_buf(),
-            cache: HashMap::new(),
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Locate the artifacts directory: `$ECF8_ARTIFACTS`, `artifacts/`,
-    /// or `../artifacts/` relative to the current dir.
-    pub fn default_dir() -> PathBuf {
-        if let Ok(d) = std::env::var("ECF8_ARTIFACTS") {
-            return PathBuf::from(d);
-        }
-        for cand in ["artifacts", "../artifacts"] {
-            let p = PathBuf::from(cand);
-            if p.join("MANIFEST.txt").exists() {
-                return p;
+    impl Input<'_> {
+        fn to_literal(&self) -> Result<xla::Literal> {
+            fn dims(shape: &[i64]) -> Vec<usize> {
+                shape.iter().map(|&d| d as usize).collect()
             }
+            Ok(match self {
+                Input::F32(data, shape) => xla::Literal::vec1(data).reshape(shape)?,
+                // the crate has no u8 NativeType; build via untyped bytes
+                Input::U8(data, shape) => xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::U8,
+                    &dims(shape),
+                    data,
+                )?,
+                Input::I32(data, shape) => xla::Literal::vec1(data).reshape(shape)?,
+            })
         }
-        PathBuf::from("artifacts")
     }
 
-    /// Load (compile-and-cache) an artifact by name.
-    pub fn load(&mut self, name: &str) -> Result<std::sync::Arc<Artifact>> {
-        if let Some(a) = self.cache.get(name) {
-            return Ok(a.clone());
+    impl Artifact {
+        /// Execute with the given inputs; returns the tuple element 0 as
+        /// f32 data (all our artifacts return a single f32 or i32 tensor;
+        /// i32 results use [`Artifact::run_i32`]).
+        pub fn run_f32(&self, inputs: &[Input<'_>]) -> Result<Vec<f32>> {
+            let lit = self.run_literal(inputs)?;
+            Ok(lit.to_vec::<f32>()?)
         }
-        let path = self.dir.join(format!("{name}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not utf-8")?,
-        )
-        .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-        let art = std::sync::Arc::new(Artifact {
-            name: name.to_string(),
-            exe,
-        });
-        self.cache.insert(name.to_string(), art.clone());
-        Ok(art)
+
+        pub fn run_i32(&self, inputs: &[Input<'_>]) -> Result<Vec<i32>> {
+            let lit = self.run_literal(inputs)?;
+            Ok(lit.to_vec::<i32>()?)
+        }
+
+        fn run_literal(&self, inputs: &[Input<'_>]) -> Result<xla::Literal> {
+            let lits: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|i| i.to_literal())
+                .collect::<Result<_>>()?;
+            let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+            // return_tuple=True => unwrap the 1-tuple
+            Ok(result.to_tuple1()?)
+        }
     }
 
-    /// Artifact names listed in MANIFEST.txt.
-    pub fn manifest(&self) -> Result<Vec<String>> {
-        let text = std::fs::read_to_string(self.dir.join("MANIFEST.txt"))?;
-        Ok(text
-            .lines()
-            .filter(|l| !l.trim().is_empty())
-            .map(|l| l.split('\t').next().unwrap_or("").to_string())
-            .collect())
+    /// The PJRT CPU runtime: loads artifacts by name from the artifacts
+    /// directory, compiling each once and caching the executable.
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        cache: HashMap<String, std::sync::Arc<Artifact>>,
+    }
+
+    impl PjrtRuntime {
+        /// CPU client over `dir` (usually `artifacts/`).
+        pub fn new<P: AsRef<Path>>(dir: P) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+            Ok(Self {
+                client,
+                dir: dir.as_ref().to_path_buf(),
+                cache: HashMap::new(),
+            })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// See [`super::default_artifacts_dir`].
+        pub fn default_dir() -> PathBuf {
+            super::default_artifacts_dir()
+        }
+
+        /// Load (compile-and-cache) an artifact by name.
+        pub fn load(&mut self, name: &str) -> Result<std::sync::Arc<Artifact>> {
+            if let Some(a) = self.cache.get(name) {
+                return Ok(a.clone());
+            }
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            let art = std::sync::Arc::new(Artifact {
+                name: name.to_string(),
+                exe,
+            });
+            self.cache.insert(name.to_string(), art.clone());
+            Ok(art)
+        }
+
+        /// Artifact names listed in MANIFEST.txt.
+        pub fn manifest(&self) -> Result<Vec<String>> {
+            let text = std::fs::read_to_string(self.dir.join("MANIFEST.txt"))?;
+            Ok(text
+                .lines()
+                .filter(|l| !l.trim().is_empty())
+                .map(|l| l.split('\t').next().unwrap_or("").to_string())
+                .collect())
+        }
     }
 }
 
-#[cfg(test)]
+#[cfg(not(feature = "pjrt-xla"))]
+mod backend {
+    use super::Input;
+    use anyhow::{anyhow, bail, Result};
+    use std::path::{Path, PathBuf};
+
+    const UNAVAILABLE: &str =
+        "PJRT/XLA backend not compiled in — rebuild with `--features pjrt-xla` \
+         and the `xla` dependency enabled in Cargo.toml";
+
+    /// Stub artifact (never constructed; [`PjrtRuntime::new`] errors).
+    pub struct Artifact {
+        pub name: String,
+    }
+
+    impl Artifact {
+        pub fn run_f32(&self, _inputs: &[Input<'_>]) -> Result<Vec<f32>> {
+            bail!("{UNAVAILABLE}")
+        }
+
+        pub fn run_i32(&self, _inputs: &[Input<'_>]) -> Result<Vec<i32>> {
+            bail!("{UNAVAILABLE}")
+        }
+    }
+
+    /// Stub runtime: construction fails with a clear pointer at the
+    /// feature flag. Callers that gate on the artifacts dir (all tests
+    /// and benches do) never reach it.
+    pub struct PjrtRuntime {
+        _dir: PathBuf,
+    }
+
+    impl PjrtRuntime {
+        pub fn new<P: AsRef<Path>>(_dir: P) -> Result<Self> {
+            Err(anyhow!("{UNAVAILABLE}"))
+        }
+
+        pub fn platform(&self) -> String {
+            "stub".to_string()
+        }
+
+        /// See [`super::default_artifacts_dir`].
+        pub fn default_dir() -> PathBuf {
+            super::default_artifacts_dir()
+        }
+
+        pub fn load(&mut self, _name: &str) -> Result<std::sync::Arc<Artifact>> {
+            Err(anyhow!("{UNAVAILABLE}"))
+        }
+
+        pub fn manifest(&self) -> Result<Vec<String>> {
+            Err(anyhow!("{UNAVAILABLE}"))
+        }
+    }
+}
+
+pub use backend::{Artifact, PjrtRuntime};
+
+#[cfg(all(test, feature = "pjrt-xla"))]
 mod tests {
     use super::*;
 
@@ -176,7 +259,7 @@ mod tests {
         let out = art
             .run_f32(&[
                 Input::F32(x.clone(), vec![m as i64, k as i64]),
-                Input::U8(w.clone(), vec![k as i64, n as i64]),
+                Input::U8(w.clone().into(), vec![k as i64, n as i64]),
             ])
             .unwrap();
         assert_eq!(out.len(), m * n);
@@ -203,7 +286,7 @@ mod tests {
         let mut rng = crate::util::prng::Xoshiro256::seed_from_u64(5);
         let bits: Vec<u8> = (0..65536).map(|_| (rng.next_u64() >> 56) as u8).collect();
         let out = art
-            .run_i32(&[Input::U8(bits.clone(), vec![65536])])
+            .run_i32(&[Input::U8(bits.clone().into(), vec![65536])])
             .unwrap();
         let expect =
             crate::codec::encode::exponent_histogram(&bits, crate::codec::Fp8Format::E4M3);

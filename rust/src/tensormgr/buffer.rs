@@ -4,19 +4,34 @@
 //!
 //! Here the buffer is host memory handed to PJRT; the contract is the
 //! same — zero allocation on the request path, reused across layers.
+//!
+//! Two usage modes:
+//!
+//! * **whole-buffer** ([`DecodeBuffer::slice_mut`]) — one tensor at a
+//!   time, the original §3.3 shape;
+//! * **arena** ([`DecodeBuffer::reset`] / [`DecodeBuffer::alloc_mut`]) —
+//!   bump-allocate every tensor of a layer so the zero-copy serving path
+//!   can hand PJRT borrowed slices of all of them simultaneously,
+//!   without the per-tensor `to_vec` copies the pre-arena executor made.
+//!   Sized to the largest layer up front, the arena never reallocates on
+//!   the request path; undersized buffers grow once per high-water mark
+//!   during warm-up.
 
 /// A reusable, pre-allocated decode target.
 pub struct DecodeBuffer {
     buf: Vec<u8>,
+    /// arena bump pointer (whole-buffer mode ignores it)
+    used: usize,
     /// high-water mark of requested sizes (for diagnostics)
     peak_request: usize,
 }
 
 impl DecodeBuffer {
-    /// Allocate once with the largest tensor size the model needs.
+    /// Allocate once with the largest layer working-set the model needs.
     pub fn with_capacity(bytes: usize) -> Self {
         Self {
             buf: vec![0u8; bytes],
+            used: 0,
             peak_request: 0,
         }
     }
@@ -29,9 +44,9 @@ impl DecodeBuffer {
         self.peak_request
     }
 
-    /// Borrow the first `n` bytes. Panics if the buffer was sized too
-    /// small — that's a configuration bug (the §3.3 invariant is that the
-    /// buffer covers the largest layer).
+    /// Borrow the first `n` bytes (whole-buffer mode). Panics if the
+    /// buffer was sized too small — that's a configuration bug (the §3.3
+    /// invariant is that the buffer covers the largest layer).
     pub fn slice_mut(&mut self, n: usize) -> &mut [u8] {
         assert!(
             n <= self.buf.len(),
@@ -44,6 +59,38 @@ impl DecodeBuffer {
 
     pub fn slice(&self, n: usize) -> &[u8] {
         &self.buf[..n]
+    }
+
+    /// Recycle the arena (start of a new layer). O(1): no zeroing, the
+    /// decoder overwrites every allocated byte.
+    pub fn reset(&mut self) {
+        self.used = 0;
+    }
+
+    /// Bump-allocate `n` bytes and return (range, mutable slice). Grows
+    /// the backing store when the high-water mark rises (warm-up only in
+    /// a correctly-sized deployment); previously returned ranges stay
+    /// valid because they are offsets, not pointers.
+    pub fn alloc_mut(&mut self, n: usize) -> (std::ops::Range<usize>, &mut [u8]) {
+        let start = self.used;
+        let end = start + n;
+        if end > self.buf.len() {
+            self.buf.resize(end, 0);
+        }
+        self.used = end;
+        self.peak_request = self.peak_request.max(end);
+        (start..end, &mut self.buf[start..end])
+    }
+
+    /// Bytes currently allocated in arena mode.
+    pub fn used(&self) -> usize {
+        self.used
+    }
+
+    /// The whole backing store (index with ranges from
+    /// [`DecodeBuffer::alloc_mut`]).
+    pub fn bytes(&self) -> &[u8] {
+        &self.buf
     }
 }
 
@@ -65,5 +112,34 @@ mod tests {
     fn oversized_request_panics() {
         let mut b = DecodeBuffer::with_capacity(8);
         b.slice_mut(9);
+    }
+
+    #[test]
+    fn arena_allocations_are_disjoint_and_stable() {
+        let mut b = DecodeBuffer::with_capacity(64);
+        let (r1, s1) = b.alloc_mut(10);
+        s1.fill(0xAA);
+        let (r2, s2) = b.alloc_mut(20);
+        s2.fill(0xBB);
+        assert_eq!(r1, 0..10);
+        assert_eq!(r2, 10..30);
+        assert_eq!(b.used(), 30);
+        assert!(b.bytes()[r1].iter().all(|&x| x == 0xAA));
+        assert!(b.bytes()[r2].iter().all(|&x| x == 0xBB));
+        let base = b.bytes().as_ptr() as usize;
+        b.reset();
+        assert_eq!(b.used(), 0);
+        let (_, s) = b.alloc_mut(64);
+        assert_eq!(s.as_ptr() as usize, base, "steady state never reallocates");
+    }
+
+    #[test]
+    fn arena_grows_past_capacity_during_warmup() {
+        let mut b = DecodeBuffer::with_capacity(4);
+        let (r, s) = b.alloc_mut(16);
+        s.fill(1);
+        assert_eq!(r, 0..16);
+        assert_eq!(b.peak_request(), 16);
+        assert!(b.capacity() >= 16);
     }
 }

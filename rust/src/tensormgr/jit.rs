@@ -6,22 +6,90 @@
 //! into device buffers at execute time, matching the paper's
 //! "buffer becomes available after the layer's forward pass").
 //!
-//! Optional prefetch: with a thread pool, the next layer's tensors are
-//! decoded into a second buffer while the current layer executes —
-//! double buffering, the standard latency-hiding move.
+//! Three access patterns, cheapest last:
+//!
+//! * [`JitDecompressor::with_decoded`] — decode one tensor, borrow it
+//!   inside a closure (the original API; callers that need the bytes
+//!   past the closure still copy);
+//! * arena mode ([`JitDecompressor::begin_layer`] /
+//!   [`JitDecompressor::decode_to_arena`] /
+//!   [`JitDecompressor::arena`]) — decode a whole layer into the shared
+//!   buffer and hand out `Range` handles, so every weight of the layer
+//!   can be *borrowed* simultaneously with zero copies;
+//! * decode-ahead ([`JitDecompressor::with_layers_decoded`]) — a
+//!   background thread decodes layer ℓ+1 into a second arena while the
+//!   caller's closure executes layer ℓ (double buffering, the standard
+//!   latency-hiding move). The ahead-decoder runs serially on its own
+//!   thread — block-parallel decode there would contend with the
+//!   executing layer's compute.
+//!
+//! All paths share one [`DecodeTables`] cache keyed by code book, so the
+//! multi-symbol LUT tiers are built once per distinct book (layers often
+//! share books) instead of once per decode call.
 
 use super::buffer::DecodeBuffer;
-use crate::codec::decode::decode_into;
+use crate::codec::decode::{decode_into_cached, DecodeTables};
 use crate::codec::Ecf8Blob;
 use crate::util::threadpool::ThreadPool;
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::ops::Range;
+use std::sync::{mpsc, Arc};
 
 /// Decompression statistics (per model forward).
 #[derive(Debug, Default, Clone, Copy)]
 pub struct JitStats {
     pub tensors_decoded: u64,
     pub bytes_decoded: u64,
+    /// foreground decode wall time; decode-ahead time is hidden behind
+    /// compute and intentionally not accumulated here
     pub decode_seconds: f64,
+}
+
+/// One decoded layer handed to the [`JitDecompressor::with_layers_decoded`]
+/// consumer: a private arena plus per-tensor extents, in blob order.
+#[derive(Default)]
+pub struct LayerArena {
+    buf: Vec<u8>,
+    ends: Vec<usize>,
+}
+
+impl LayerArena {
+    fn decode_layer(
+        &mut self,
+        blobs: &[&Ecf8Blob],
+        pool: Option<&ThreadPool>,
+        tables: &HashMap<Vec<u8>, Arc<DecodeTables>>,
+    ) {
+        self.ends.clear();
+        let total: usize = blobs.iter().map(|b| b.n_elem).sum();
+        if self.buf.len() < total {
+            self.buf.resize(total, 0);
+        }
+        let mut off = 0usize;
+        for blob in blobs {
+            let t = tables
+                .get(&blob.code_lengths)
+                .expect("tables prebuilt for every code book");
+            decode_into_cached(blob, &mut self.buf[off..off + blob.n_elem], pool, t);
+            off += blob.n_elem;
+            self.ends.push(off);
+        }
+    }
+
+    /// Decoded bytes of the `i`-th blob of this layer.
+    pub fn tensor(&self, i: usize) -> &[u8] {
+        let start = if i == 0 { 0 } else { self.ends[i - 1] };
+        &self.buf[start..self.ends[i]]
+    }
+
+    /// Number of tensors decoded into this arena.
+    pub fn len(&self) -> usize {
+        self.ends.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ends.is_empty()
+    }
 }
 
 /// JIT decompressor bound to a shared decode buffer.
@@ -29,17 +97,32 @@ pub struct JitDecompressor {
     buffer: DecodeBuffer,
     pool: Option<Arc<ThreadPool>>,
     stats: JitStats,
+    /// decode tiers per canonical code book (keyed by stored lengths)
+    tables: HashMap<Vec<u8>, Arc<DecodeTables>>,
+    /// recycled decode-ahead ping-pong buffers, so steady-state
+    /// [`Self::with_layers_decoded`] calls allocate nothing
+    spare_arenas: Vec<LayerArena>,
 }
 
 impl JitDecompressor {
-    /// `max_tensor_bytes` — the largest decoded tensor in the model
-    /// (the §3.3 buffer size); `pool` — optional block-parallel decode.
-    pub fn new(max_tensor_bytes: usize, pool: Option<Arc<ThreadPool>>) -> Self {
+    /// `buffer_bytes` — the largest layer working-set in the model (the
+    /// §3.3 buffer size); `pool` — optional block-parallel decode.
+    pub fn new(buffer_bytes: usize, pool: Option<Arc<ThreadPool>>) -> Self {
         Self {
-            buffer: DecodeBuffer::with_capacity(max_tensor_bytes),
+            buffer: DecodeBuffer::with_capacity(buffer_bytes),
             pool,
             stats: JitStats::default(),
+            tables: HashMap::new(),
+            spare_arenas: Vec::new(),
         }
+    }
+
+    /// Cached decode tiers for `blob`'s code book (built on first use).
+    fn tables_for(&mut self, blob: &Ecf8Blob) -> Arc<DecodeTables> {
+        self.tables
+            .entry(blob.code_lengths.clone())
+            .or_insert_with(|| Arc::new(DecodeTables::build(blob)))
+            .clone()
     }
 
     /// Decode `blob` into the shared buffer and run `consume` on the
@@ -47,8 +130,10 @@ impl JitDecompressor {
     /// this returns.
     pub fn with_decoded<R>(&mut self, blob: &Ecf8Blob, consume: impl FnOnce(&[u8]) -> R) -> R {
         let t0 = std::time::Instant::now();
+        let tables = self.tables_for(blob);
+        let pool = self.pool.clone();
         let dst = self.buffer.slice_mut(blob.n_elem);
-        decode_into(blob, dst, self.pool.as_deref());
+        decode_into_cached(blob, dst, pool.as_deref(), &tables);
         self.stats.tensors_decoded += 1;
         self.stats.bytes_decoded += blob.n_elem as u64;
         self.stats.decode_seconds += t0.elapsed().as_secs_f64();
@@ -65,6 +150,108 @@ impl JitDecompressor {
         for (i, blob) in blobs.iter().enumerate() {
             self.with_decoded(blob, |bytes| consume(i, bytes));
         }
+    }
+
+    /// Start a new layer in arena mode: recycles the shared buffer.
+    pub fn begin_layer(&mut self) {
+        self.buffer.reset();
+    }
+
+    /// Decode `blob` into the arena and return its extent. Slices of all
+    /// tensors decoded since [`Self::begin_layer`] stay simultaneously
+    /// valid — index [`Self::arena`] with the returned ranges.
+    pub fn decode_to_arena(&mut self, blob: &Ecf8Blob) -> Range<usize> {
+        let t0 = std::time::Instant::now();
+        let tables = self.tables_for(blob);
+        let pool = self.pool.clone();
+        let (range, dst) = self.buffer.alloc_mut(blob.n_elem);
+        decode_into_cached(blob, dst, pool.as_deref(), &tables);
+        self.stats.tensors_decoded += 1;
+        self.stats.bytes_decoded += blob.n_elem as u64;
+        self.stats.decode_seconds += t0.elapsed().as_secs_f64();
+        range
+    }
+
+    /// The arena backing store (borrow with ranges from
+    /// [`Self::decode_to_arena`]).
+    pub fn arena(&self) -> &[u8] {
+        self.buffer.bytes()
+    }
+
+    /// Decode-ahead over a sequence of layers: a background thread keeps
+    /// one [`LayerArena`] decoded ahead of the consumer (two arenas
+    /// ping-pong through channels), so layer ℓ+1's decode overlaps layer
+    /// ℓ's `consume`. Returns the consumer's results, or its first error
+    /// (the decoder thread winds down when the channels drop).
+    pub fn with_layers_decoded<R, E>(
+        &mut self,
+        layers: &[Vec<&Ecf8Blob>],
+        mut consume: impl FnMut(usize, &LayerArena) -> Result<R, E>,
+    ) -> Result<Vec<R>, E> {
+        // Build every code book's tiers up front so the decoder thread
+        // only reads the cache.
+        for layer in layers {
+            for blob in layer {
+                self.tables_for(blob);
+            }
+        }
+        let tables = &self.tables;
+        // double buffer: decode of layer l+1 overlaps consume(l); reuse
+        // the buffers recovered from the previous call (steady state:
+        // zero allocation on the request path)
+        let mut seed_arenas = std::mem::take(&mut self.spare_arenas);
+        seed_arenas.truncate(2);
+        while seed_arenas.len() < 2 {
+            seed_arenas.push(LayerArena::default());
+        }
+        let mut results = Vec::with_capacity(layers.len());
+        let scope_out: Result<Vec<LayerArena>, E> = std::thread::scope(|s| {
+            let (full_tx, full_rx) = mpsc::channel::<LayerArena>();
+            let (free_tx, free_rx) = mpsc::channel::<LayerArena>();
+            for arena in seed_arenas {
+                free_tx.send(arena).expect("fresh channel");
+            }
+            let decoder = s.spawn(move || {
+                for layer in layers {
+                    // consumer hung up (error path) => stop decoding
+                    let Ok(mut arena) = free_rx.recv() else {
+                        return Vec::new();
+                    };
+                    arena.decode_layer(layer, None, tables);
+                    if full_tx.send(arena).is_err() {
+                        return Vec::new();
+                    }
+                }
+                // recover the ping-pong buffers for the next call: drain
+                // until the consumer drops its sender
+                let mut leftover = Vec::new();
+                while let Ok(arena) = free_rx.recv() {
+                    leftover.push(arena);
+                }
+                leftover
+            });
+            for l in 0..layers.len() {
+                let arena = full_rx.recv().expect("decoder thread alive");
+                match consume(l, &arena) {
+                    Ok(r) => results.push(r),
+                    // dropping free_tx/full_rx unblocks the decoder (the
+                    // recycled buffers are lost on this path — fine, the
+                    // next call reallocates)
+                    Err(e) => return Err(e),
+                }
+                let _ = free_tx.send(arena);
+            }
+            drop(free_tx);
+            Ok(decoder.join().expect("decoder thread panicked"))
+        });
+        self.spare_arenas = scope_out?;
+        for layer in layers {
+            for blob in layer {
+                self.stats.tensors_decoded += 1;
+                self.stats.bytes_decoded += blob.n_elem as u64;
+            }
+        }
+        Ok(results)
     }
 
     pub fn stats(&self) -> JitStats {
@@ -144,5 +331,85 @@ mod tests {
         let mut jit = JitDecompressor::new(100_000, None);
         jit.with_decoded(&b, |_| ());
         assert!(jit.decode_throughput_bps() > 0.0);
+    }
+
+    #[test]
+    fn arena_holds_a_whole_layer_zero_copy() {
+        let (d1, b1) = blob(10_000, 7);
+        let (d2, b2) = blob(4_000, 8);
+        let (d3, b3) = blob(6_000, 9);
+        let mut jit = JitDecompressor::new(20_000, None);
+        jit.begin_layer();
+        let r1 = jit.decode_to_arena(&b1);
+        let r2 = jit.decode_to_arena(&b2);
+        let r3 = jit.decode_to_arena(&b3);
+        // all three live at once, borrowed straight from the buffer
+        let arena = jit.arena();
+        assert_eq!(&arena[r1], &d1[..]);
+        assert_eq!(&arena[r2], &d2[..]);
+        assert_eq!(&arena[r3], &d3[..]);
+        // recycling reuses the same memory
+        jit.begin_layer();
+        let r1b = jit.decode_to_arena(&b1);
+        assert_eq!(r1b, 0..10_000);
+        assert_eq!(&jit.arena()[r1b], &d1[..]);
+    }
+
+    #[test]
+    fn decode_ahead_layers_bit_exact() {
+        let (d1, b1) = blob(8_000, 10);
+        let (d2, b2) = blob(3_000, 11);
+        let (d3, b3) = blob(5_000, 12);
+        let (d4, b4) = blob(1_000, 13);
+        let mut jit = JitDecompressor::new(0, None);
+        let layers: Vec<Vec<&Ecf8Blob>> = vec![vec![&b1, &b2], vec![&b3], vec![&b4]];
+        let expect: Vec<Vec<&[u8]>> =
+            vec![vec![&d1[..], &d2[..]], vec![&d3[..]], vec![&d4[..]]];
+        let sizes = jit
+            .with_layers_decoded(&layers, |l, arena| -> Result<usize, String> {
+                assert_eq!(arena.len(), expect[l].len(), "layer {l}");
+                for (i, want) in expect[l].iter().enumerate() {
+                    assert_eq!(arena.tensor(i), *want, "layer {l} tensor {i}");
+                }
+                Ok(arena.tensor(0).len())
+            })
+            .unwrap();
+        assert_eq!(sizes, vec![8_000, 3_000, 5_000]);
+        assert_eq!(jit.stats().tensors_decoded, 4);
+        assert_eq!(jit.stats().bytes_decoded, 17_000);
+        // second pass reuses the recycled ping-pong arenas (steady-state
+        // zero-allocation path) and stays bit-exact
+        let again = jit
+            .with_layers_decoded(&layers, |l, arena| -> Result<(), String> {
+                for (i, want) in expect[l].iter().enumerate() {
+                    assert_eq!(arena.tensor(i), *want, "pass 2 layer {l} tensor {i}");
+                }
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(again.len(), 3);
+        assert_eq!(jit.stats().tensors_decoded, 8);
+    }
+
+    #[test]
+    fn decode_ahead_consumer_error_shuts_down_cleanly() {
+        let (_, b1) = blob(2_000, 14);
+        let (_, b2) = blob(2_000, 15);
+        let mut jit = JitDecompressor::new(0, None);
+        let layers: Vec<Vec<&Ecf8Blob>> = vec![vec![&b1], vec![&b2], vec![&b1]];
+        let err = jit
+            .with_layers_decoded(&layers, |l, _| -> Result<(), String> {
+                if l == 1 {
+                    Err("boom".to_string())
+                } else {
+                    Ok(())
+                }
+            })
+            .unwrap_err();
+        assert_eq!(err, "boom");
+        // must return (not deadlock) and the decompressor stays usable
+        jit.begin_layer();
+        let r = jit.decode_to_arena(&b1);
+        assert_eq!(r.len(), 2_000);
     }
 }

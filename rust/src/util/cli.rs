@@ -54,15 +54,24 @@ pub struct Command {
     pub opts: Vec<OptSpec>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown option `{0}` (see --help)")]
     UnknownOption(String),
-    #[error("option `{0}` requires a value")]
     MissingValue(String),
-    #[error("help requested")]
     HelpRequested,
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::UnknownOption(o) => write!(f, "unknown option `{o}` (see --help)"),
+            CliError::MissingValue(o) => write!(f, "option `{o}` requires a value"),
+            CliError::HelpRequested => write!(f, "help requested"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Command {
     pub fn new(name: &'static str, about: &'static str) -> Self {

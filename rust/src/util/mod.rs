@@ -3,6 +3,7 @@
 //! DESIGN.md "Substitutions".
 
 pub mod cli;
+pub mod crc32;
 pub mod humanize;
 pub mod prng;
 pub mod quickprop;
