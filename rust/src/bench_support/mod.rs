@@ -50,6 +50,26 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
     }
 }
 
+/// Deterministic serving workload: `n` requests of `SEQ_LEN` tokens drawn
+/// below `vocab` from a seeded generator. One definition shared by the
+/// serving bench, the serving integration tests, and the pipeline's unit
+/// tests, so the workloads cannot drift apart.
+pub fn seeded_requests(n: u64, vocab: usize, seed: u64) -> Vec<crate::coordinator::Request> {
+    use crate::coordinator::Request;
+    use crate::runtime::executor::SEQ_LEN;
+    let mut rng = crate::util::prng::Xoshiro256::seed_from_u64(seed);
+    (0..n)
+        .map(|id| {
+            Request::new(
+                id,
+                (0..SEQ_LEN)
+                    .map(|_| rng.next_below(vocab as u64) as i32)
+                    .collect(),
+            )
+        })
+        .collect()
+}
+
 /// Time a single long-running invocation.
 pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
     let t0 = Instant::now();

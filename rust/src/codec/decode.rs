@@ -8,7 +8,9 @@
 //!   a branchless carry-forward bit reader ([`BitCursor`]) feeding a
 //!   14-bit [`MultiLut`] that emits up to 4 symbols per lookup, with
 //!   sign/mantissa nibbles streamed through a second cursor over the
-//!   packed nibble plane (u64 loads, 8 nibbles each).
+//!   packed nibble plane (u64 loads, 8 nibbles each) and exponent/nibble
+//!   reassembly vectorized by the [`simd`] tier (SSE2/NEON/SWAR — up to
+//!   16 output bytes per store, four lookups per bit refill).
 //! * [`DecodePath::FastPair`] — the previous-generation pair-LUT sweep
 //!   (2 symbols/lookup, reload-per-refill), kept as an ablation tier.
 //! * [`DecodePath::FastSingle`] — single-symbol LUT sweep (ablation).
@@ -55,10 +57,13 @@
 //! LUT tiers once via [`DecodeTables`] and call [`decode_into_cached`]
 //! (the JIT decompressor caches tables per code book).
 
+use super::simd;
 use super::{Ecf8Blob, Fp8Format};
 use crate::huffman::bitstream::BitReader;
 use crate::huffman::lut::{DecodeLut, MultiLut, PairLut, MULTI_MAX_SYMS};
 use crate::util::threadpool::ThreadPool;
+use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Which decode implementation to use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -105,6 +110,39 @@ impl DecodeTables {
         let multi = matches!(path, DecodePath::Fast).then(|| MultiLut::build(&lut));
         let pair = matches!(path, DecodePath::FastPair).then(|| PairLut::build(&lut));
         Self { lut, multi, pair }
+    }
+}
+
+/// Shared cache of [`DecodeTables`] keyed by code book (the stored
+/// canonical lengths fully determine the book). Layers routinely share
+/// books, so the serving paths — the JIT decompressor and the
+/// coordinator's decode-ahead stage — build each table set once and clone
+/// `Arc`s from here.
+#[derive(Debug, Default)]
+pub struct DecodeTableCache {
+    map: HashMap<Vec<u8>, Arc<DecodeTables>>,
+}
+
+impl DecodeTableCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Tables for `blob`'s code book, building them on first use.
+    pub fn get_or_build(&mut self, blob: &Ecf8Blob) -> Arc<DecodeTables> {
+        self.map
+            .entry(blob.code_lengths.clone())
+            .or_insert_with(|| Arc::new(DecodeTables::build(blob)))
+            .clone()
+    }
+
+    /// Number of distinct code books cached.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
     }
 }
 
@@ -283,7 +321,14 @@ impl<'a> BitCursor<'a> {
 /// Decode block `b` with the multi-symbol engine: one [`BitCursor`] over
 /// the Huffman stream, one over the packed nibble plane, [`MultiLut`]
 /// dispatch emitting up to 4 symbols per lookup (see the module-doc tier
-/// diagram).
+/// diagram), and SIMD/SWAR nibble assembly ([`simd`]) retiring up to 16
+/// output bytes per store.
+///
+/// The 16-wide gather rides the [`BitCursor`] refill invariant: one
+/// refill leaves ≥ 56 live bits and a full-count [`MultiLut`] entry
+/// consumes ≤ 14, so up to four lookups resolve off a single refill —
+/// before the g-th gathered lookup at least `56 − 14·g ≥ 14` valid bits
+/// remain at the top of the window, exactly the table's index width.
 pub fn decode_block_fast_multi(
     blob: &Ecf8Blob,
     lut: &DecodeLut,
@@ -302,6 +347,7 @@ pub fn decode_block_fast_multi(
     }
     let enc = &blob.encoded[..];
     let packed = &blob.packed[..];
+    let spec = simd::FormatSpec::of(blob.format);
 
     let mut bits = BitCursor::new(enc, start_byte * 8 + gap);
     // nibble i lives at bit 4·i of the packed plane (high nibble first)
@@ -317,15 +363,51 @@ pub fn decode_block_fast_multi(
                 if count == MULTI_MAX_SYMS {
                     bits.consume(MultiLut::consumed(e));
                     nibs.refill();
-                    let r = (nibs.peek() >> 48) as u16;
+                    let r0 = (nibs.peek() >> 48) as u16;
                     nibs.consume(16);
-                    out_block[o..o + 4].copy_from_slice(&[
-                        $assemble(MultiLut::sym(e, 0), (r >> 12) as u8 & 0x0F),
-                        $assemble(MultiLut::sym(e, 1), (r >> 8) as u8 & 0x0F),
-                        $assemble(MultiLut::sym(e, 2), (r >> 4) as u8 & 0x0F),
-                        $assemble(MultiLut::sym(e, 3), r as u8 & 0x0F),
-                    ]);
-                    o += 4;
+                    if o + 16 <= n {
+                        // gather up to 3 more full-count windows off the
+                        // same refill and retire 16 bytes in one store
+                        let mut sym_words = [MultiLut::sym_bytes(e), 0, 0, 0];
+                        let mut rests = [r0, 0, 0, 0];
+                        let mut g = 1usize;
+                        while g < 4 {
+                            let e2 = multi.lookup(bits.peek());
+                            if MultiLut::count(e2) != MULTI_MAX_SYMS {
+                                break;
+                            }
+                            bits.consume(MultiLut::consumed(e2));
+                            nibs.refill();
+                            rests[g] = (nibs.peek() >> 48) as u16;
+                            nibs.consume(16);
+                            sym_words[g] = MultiLut::sym_bytes(e2);
+                            g += 1;
+                        }
+                        if g == 4 {
+                            let dst: &mut [u8; 16] =
+                                (&mut out_block[o..o + 16]).try_into().unwrap();
+                            simd::assemble16(spec, &sym_words, &rests, dst);
+                            o += 16;
+                        } else {
+                            // partial gather (long-code window ahead):
+                            // flush what we have 4 bytes at a time
+                            for i in 0..g {
+                                out_block[o..o + 4].copy_from_slice(&simd::assemble4(
+                                    spec,
+                                    sym_words[i],
+                                    rests[i],
+                                ));
+                                o += 4;
+                            }
+                        }
+                    } else {
+                        out_block[o..o + 4].copy_from_slice(&simd::assemble4(
+                            spec,
+                            MultiLut::sym_bytes(e),
+                            r0,
+                        ));
+                        o += 4;
+                    }
                 } else if count > 0 {
                     // long-code window: 1–3 symbols still resolved in one
                     // lookup

@@ -15,6 +15,7 @@
 pub mod container;
 pub mod decode;
 pub mod encode;
+pub mod simd;
 
 use crate::huffman::canonical::CanonicalCode;
 use crate::huffman::lut::DecodeLut;
@@ -155,7 +156,7 @@ impl Ecf8Blob {
     }
 }
 
-pub use decode::{DecodePath, DecodeTables};
+pub use decode::{DecodePath, DecodeTableCache, DecodeTables};
 pub use encode::{encode_parallel, encode_with_code_parallel};
 
 /// Compress FP8 bytes (default params, E4M3). See [`encode::encode`].

@@ -1,0 +1,335 @@
+//! SIMD/SWAR nibble assembly — the vectorized back half of the
+//! multi-symbol decode fast path.
+//!
+//! The multi-symbol engine ([`crate::codec::decode`]) resolves exponent
+//! symbols four at a time out of the [`crate::huffman::lut::MultiLut`];
+//! what remains per output byte is pure data movement: merge each 5-bit
+//! exponent symbol with its 4-bit sign/mantissa ("rest") nibble back into
+//! an FP8 byte. Done scalar, that movement is the LUT-dispatch bound the
+//! ROADMAP calls out. This module does it 4 or 16 bytes at a time:
+//!
+//! * [`assemble4`] — one [`MultiLut`] entry (4 symbols in byte lanes) +
+//!   16 bits of rest nibbles → 4 FP8 bytes, via portable u32 SWAR;
+//! * [`assemble16`] — four consecutive full-count entries + 64 bits of
+//!   rest nibbles → 16 FP8 bytes in one store.
+//!
+//! ## Tier matrix (`#[cfg]`)
+//!
+//! | tier     | selected when                                     |
+//! |----------|---------------------------------------------------|
+//! | `sse2`   | `x86_64` (SSE2 is baseline) and not `force-swar`  |
+//! | `neon`   | `aarch64` (NEON is baseline) and not `force-swar` |
+//! | `swar64` | any other arch, or the `force-swar` cargo feature |
+//!
+//! The portable SWAR kernels are always compiled (they back `assemble4`
+//! everywhere and `assemble16` on the `swar64` tier) and every tier is
+//! pinned to them by tests, so CI exercising `--features force-swar` on
+//! x86_64 covers the exact code path a no-SIMD target would run.
+//!
+//! ## Bit-layout contract
+//!
+//! Per FP8 byte (matching [`Fp8Format::assemble`]):
+//!
+//! * E4M3: `out = (rest & 8) << 4 | sym << 3 | (rest & 7)`
+//! * E5M2: `out = (rest & 4) << 5 | sym << 2 | (rest & 3)`
+//!
+//! Symbols arrive in byte lanes already (`MultiLut::sym_bytes`), capped
+//! below 32 by the table builder, so the lane shift (`<< 3` / `<< 2`)
+//! cannot carry across byte boundaries. Rest nibbles arrive as the next
+//! 16 (or 64) MSB-first bits of the packed nibble plane: nibble `k` of
+//! the operand is the rest of output byte `k`.
+
+use super::Fp8Format;
+
+/// Human-readable name of the compiled assembly tier (benches/logs).
+#[cfg(all(not(feature = "force-swar"), target_arch = "x86_64"))]
+pub const TIER: &str = "sse2";
+#[cfg(all(not(feature = "force-swar"), target_arch = "aarch64"))]
+pub const TIER: &str = "neon";
+#[cfg(any(
+    feature = "force-swar",
+    not(any(target_arch = "x86_64", target_arch = "aarch64"))
+))]
+pub const TIER: &str = "swar64";
+
+/// Per-format SWAR constants: (sym lane shift, sign mask, sign shift,
+/// low-bits mask), each replicated across the four byte lanes where the
+/// kernels need it.
+#[derive(Debug, Clone, Copy)]
+pub struct FormatSpec {
+    pub sym_shift: u32,
+    pub sign_mask: u8,
+    pub sign_shift: u32,
+    pub low_mask: u8,
+}
+
+impl FormatSpec {
+    #[inline(always)]
+    pub const fn of(format: Fp8Format) -> Self {
+        match format {
+            Fp8Format::E4M3 => FormatSpec {
+                sym_shift: 3,
+                sign_mask: 0x08,
+                sign_shift: 4,
+                low_mask: 0x07,
+            },
+            Fp8Format::E5M2 => FormatSpec {
+                sym_shift: 2,
+                sign_mask: 0x04,
+                sign_shift: 5,
+                low_mask: 0x03,
+            },
+        }
+    }
+
+    #[inline(always)]
+    fn splat4(mask: u8) -> u32 {
+        u32::from_ne_bytes([mask; 4])
+    }
+}
+
+/// Spread 4 MSB-first rest nibbles into the low nibble of 4 byte lanes
+/// (lane k = nibble k, i.e. lane 0 gets the *most significant* nibble,
+/// matching stream order).
+#[inline(always)]
+pub fn spread_rests(rests: u16) -> u32 {
+    let r = rests as u32;
+    (r >> 12) | (r & 0x0F00) | ((r & 0x00F0) << 12) | ((r & 0x000F) << 24)
+}
+
+/// Assemble 4 FP8 bytes from one full-count [`MultiLut`] entry's byte
+/// lanes and the next 16 bits of the packed nibble plane. Byte `k` of the
+/// returned array is output element `k`. Portable SWAR; every tier uses
+/// this for sub-16-byte work.
+#[inline(always)]
+pub fn assemble4(spec: FormatSpec, sym_bytes: u32, rests: u16) -> [u8; 4] {
+    let sp = spread_rests(rests);
+    let sign = (sp & FormatSpec::splat4(spec.sign_mask)) << spec.sign_shift;
+    // syms < 32 ⇒ the lane shift stays inside each byte
+    let mid = sym_bytes << spec.sym_shift;
+    let low = sp & FormatSpec::splat4(spec.low_mask);
+    (sign | mid | low).to_le_bytes()
+}
+
+/// Assemble 16 FP8 bytes from four consecutive full-count entries and 64
+/// bits of the packed nibble plane. `rests[g]` carries the nibbles of
+/// output bytes `4g .. 4g+4` (MSB-first, stream order). Dispatches to the
+/// compiled tier; bit-identical to four [`assemble4`] calls by
+/// construction (and by test on every tier).
+#[inline(always)]
+pub fn assemble16(spec: FormatSpec, sym_words: &[u32; 4], rests: &[u16; 4], out: &mut [u8; 16]) {
+    imp::assemble16(spec, sym_words, rests, out)
+}
+
+/// Portable reference kernels — `assemble16` as four SWAR `assemble4`s.
+/// Always compiled so the SIMD tiers can be differential-tested against
+/// it on their own hardware.
+pub mod portable {
+    use super::{assemble4, FormatSpec};
+
+    #[inline(always)]
+    pub fn assemble16(
+        spec: FormatSpec,
+        sym_words: &[u32; 4],
+        rests: &[u16; 4],
+        out: &mut [u8; 16],
+    ) {
+        for g in 0..4 {
+            out[4 * g..4 * g + 4].copy_from_slice(&assemble4(spec, sym_words[g], rests[g]));
+        }
+    }
+}
+
+#[cfg(any(
+    feature = "force-swar",
+    not(any(target_arch = "x86_64", target_arch = "aarch64"))
+))]
+use self::portable as imp;
+
+#[cfg(all(not(feature = "force-swar"), target_arch = "x86_64"))]
+mod imp {
+    use super::FormatSpec;
+    use core::arch::x86_64::*;
+
+    /// SSE2 (x86_64 baseline — no runtime detection needed): one 16-byte
+    /// store per 16 outputs. Variable-count shifts (`_mm_sll_epi16`) keep
+    /// the kernel format-generic without const-generic plumbing.
+    #[inline(always)]
+    pub fn assemble16(
+        spec: FormatSpec,
+        sym_words: &[u32; 4],
+        rests: &[u16; 4],
+        out: &mut [u8; 16],
+    ) {
+        // Big-endian concatenation: byte j of `nib` holds the rests of
+        // output bytes 2j (high nibble) and 2j+1 (low nibble).
+        let nib: [u8; 8] = (((rests[0] as u64) << 48)
+            | ((rests[1] as u64) << 32)
+            | ((rests[2] as u64) << 16)
+            | rests[3] as u64)
+            .to_be_bytes();
+        // SAFETY: SSE2 is unconditionally available on x86_64; all loads
+        // and stores are unaligned-tolerant (`loadl`/`loadu`/`storeu`)
+        // over properly sized Rust arrays.
+        unsafe {
+            let v = _mm_loadl_epi64(nib.as_ptr() as *const __m128i);
+            let x0f = _mm_set1_epi8(0x0F);
+            // even nibbles (outputs 0,2,..) and odd nibbles (1,3,..),
+            // interleaved back into stream order: byte k = rest of out k
+            let hi = _mm_and_si128(_mm_srli_epi16::<4>(v), x0f);
+            let lo = _mm_and_si128(v, x0f);
+            let sp = _mm_unpacklo_epi8(hi, lo);
+
+            // [u32; 4] in memory is exactly byte lanes 0..16 of the syms
+            let syms = _mm_loadu_si128(sym_words.as_ptr() as *const __m128i);
+            let sign_shift = _mm_cvtsi32_si128(spec.sign_shift as i32);
+            let sym_shift = _mm_cvtsi32_si128(spec.sym_shift as i32);
+            // masked operands keep the epi16 shifts from bleeding across
+            // byte lanes: sign bits ≤ bit 3 shifted ≤ 5, syms < 32
+            let sign = _mm_sll_epi16(
+                _mm_and_si128(sp, _mm_set1_epi8(spec.sign_mask as i8)),
+                sign_shift,
+            );
+            let mid = _mm_sll_epi16(syms, sym_shift);
+            let low = _mm_and_si128(sp, _mm_set1_epi8(spec.low_mask as i8));
+            let assembled = _mm_or_si128(_mm_or_si128(sign, mid), low);
+            _mm_storeu_si128(out.as_mut_ptr() as *mut __m128i, assembled);
+        }
+    }
+}
+
+#[cfg(all(not(feature = "force-swar"), target_arch = "aarch64"))]
+mod imp {
+    use super::FormatSpec;
+    use core::arch::aarch64::*;
+
+    /// NEON (aarch64 baseline): mirror of the SSE2 kernel. `vshlq_u8`
+    /// with a splatted signed count is the variable per-byte shift.
+    #[inline(always)]
+    pub fn assemble16(
+        spec: FormatSpec,
+        sym_words: &[u32; 4],
+        rests: &[u16; 4],
+        out: &mut [u8; 16],
+    ) {
+        let nib: [u8; 8] = (((rests[0] as u64) << 48)
+            | ((rests[1] as u64) << 32)
+            | ((rests[2] as u64) << 16)
+            | rests[3] as u64)
+            .to_be_bytes();
+        // SAFETY: NEON is unconditionally available on aarch64; loads and
+        // stores are over properly sized Rust arrays.
+        unsafe {
+            let v = vld1_u8(nib.as_ptr());
+            let x0f = vdup_n_u8(0x0F);
+            let hi = vand_u8(vshl_u8(v, vdup_n_s8(-4)), x0f);
+            let lo = vand_u8(v, x0f);
+            // interleave high/low nibbles back into stream order
+            let sp = vcombine_u8(vzip1_u8(hi, lo), vzip2_u8(hi, lo));
+
+            let syms = vld1q_u8(sym_words.as_ptr() as *const u8);
+            let sign = vshlq_u8(
+                vandq_u8(sp, vdupq_n_u8(spec.sign_mask)),
+                vdupq_n_s8(spec.sign_shift as i8),
+            );
+            let mid = vshlq_u8(syms, vdupq_n_s8(spec.sym_shift as i8));
+            let low = vandq_u8(sp, vdupq_n_u8(spec.low_mask));
+            let assembled = vorrq_u8(vorrq_u8(sign, mid), low);
+            vst1q_u8(out.as_mut_ptr(), assembled);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    fn scalar_reference(
+        spec: FormatSpec,
+        format: Fp8Format,
+        sym_bytes: u32,
+        rests: u16,
+    ) -> [u8; 4] {
+        let mut out = [0u8; 4];
+        for (k, slot) in out.iter_mut().enumerate() {
+            let sym = (sym_bytes >> (8 * k)) as u8;
+            let rest = ((rests >> (12 - 4 * k)) & 0x0F) as u8;
+            *slot = format.assemble(sym, rest);
+        }
+        let _ = spec;
+        out
+    }
+
+    fn random_sym_word(rng: &mut Xoshiro256, format: Fp8Format) -> u32 {
+        let cap = format.alphabet_size() as u64;
+        let mut w = 0u32;
+        for k in 0..4 {
+            w |= (rng.next_below(cap) as u32) << (8 * k);
+        }
+        w
+    }
+
+    #[test]
+    fn assemble4_matches_scalar_exhaustive_rests() {
+        let mut rng = Xoshiro256::seed_from_u64(41);
+        for format in [Fp8Format::E4M3, Fp8Format::E5M2] {
+            let spec = FormatSpec::of(format);
+            for r in 0..=u16::MAX {
+                let sw = random_sym_word(&mut rng, format);
+                assert_eq!(
+                    assemble4(spec, sw, r),
+                    scalar_reference(spec, format, sw, r),
+                    "format {format:?} rests {r:#06x} syms {sw:#010x}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn assemble16_matches_portable_and_scalar() {
+        let mut rng = Xoshiro256::seed_from_u64(42);
+        for format in [Fp8Format::E4M3, Fp8Format::E5M2] {
+            let spec = FormatSpec::of(format);
+            for _ in 0..20_000 {
+                let sym_words = [
+                    random_sym_word(&mut rng, format),
+                    random_sym_word(&mut rng, format),
+                    random_sym_word(&mut rng, format),
+                    random_sym_word(&mut rng, format),
+                ];
+                let rests = [
+                    rng.next_u64() as u16,
+                    rng.next_u64() as u16,
+                    rng.next_u64() as u16,
+                    rng.next_u64() as u16,
+                ];
+                let mut tier = [0u8; 16];
+                let mut swar = [0u8; 16];
+                assemble16(spec, &sym_words, &rests, &mut tier);
+                portable::assemble16(spec, &sym_words, &rests, &mut swar);
+                assert_eq!(tier, swar, "tier {TIER} diverges from portable SWAR");
+                for g in 0..4 {
+                    assert_eq!(
+                        &tier[4 * g..4 * g + 4],
+                        &scalar_reference(spec, format, sym_words[g], rests[g]),
+                        "group {g}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spread_rests_lane_mapping() {
+        // nibble 0 (most significant) lands in byte lane 0
+        assert_eq!(spread_rests(0xABCD).to_le_bytes(), [0x0A, 0x0B, 0x0C, 0x0D]);
+        assert_eq!(spread_rests(0x0000), 0);
+        assert_eq!(spread_rests(0xFFFF), 0x0F0F0F0F);
+    }
+
+    #[test]
+    fn tier_is_named() {
+        assert!(["sse2", "neon", "swar64"].contains(&TIER));
+    }
+}

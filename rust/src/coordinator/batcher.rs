@@ -30,28 +30,41 @@ impl DynamicBatcher {
         self.queue.len()
     }
 
-    /// Pop a batch if policy says it's time: full batch available, or the
-    /// oldest request has waited past the linger deadline.
-    pub fn pop_batch(&mut self, now: Instant) -> Option<Vec<Request>> {
+    /// Take the next batch off the queue, oldest-first, at most
+    /// `max_batch` requests. The single chunking path — `pop_batch` and
+    /// `drain_all` both go through it, so shutdown chunks can never
+    /// disagree with steady-state chunks.
+    fn take_chunk(&mut self) -> Option<Vec<Request>> {
         if self.queue.is_empty() {
             return None;
         }
-        let oldest_wait = now.duration_since(self.queue.front().unwrap().arrived);
+        let n = self.queue.len().min(self.max_batch);
+        Some(self.queue.drain(..n).collect())
+    }
+
+    /// When the oldest waiter's linger deadline expires (admission can
+    /// sleep exactly until then). `None` when the queue is empty.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queue.front().map(|r| r.arrived + self.linger)
+    }
+
+    /// Pop a batch if policy says it's time: full batch available, or the
+    /// oldest request has waited past the linger deadline (`>=` — a
+    /// request exactly at its deadline is due).
+    pub fn pop_batch(&mut self, now: Instant) -> Option<Vec<Request>> {
+        let front = self.queue.front()?;
+        let oldest_wait = now.saturating_duration_since(front.arrived);
         if self.queue.len() >= self.max_batch || oldest_wait >= self.linger {
-            let n = self.queue.len().min(self.max_batch);
-            return Some(self.queue.drain(..n).collect());
+            return self.take_chunk();
         }
         None
     }
 
-    /// Drain everything in max_batch-sized chunks (shutdown path).
+    /// Drain everything in pop-consistent chunks (shutdown path): same
+    /// oldest-first order and `max_batch` sizing as [`Self::pop_batch`],
+    /// linger ignored.
     pub fn drain_all(&mut self) -> Vec<Vec<Request>> {
-        let mut out = Vec::new();
-        while !self.queue.is_empty() {
-            let n = self.queue.len().min(self.max_batch);
-            out.push(self.queue.drain(..n).collect());
-        }
-        out
+        std::iter::from_fn(|| self.take_chunk()).collect()
     }
 }
 
@@ -117,5 +130,68 @@ mod tests {
     fn empty_queue_pops_nothing() {
         let mut b = DynamicBatcher::new(4, Duration::from_millis(1));
         assert!(b.pop_batch(Instant::now()).is_none());
+        assert!(b.next_deadline().is_none());
+        assert!(b.drain_all().is_empty());
+    }
+
+    #[test]
+    fn exactly_at_deadline_pops() {
+        let mut b = DynamicBatcher::new(4, Duration::from_millis(50));
+        b.push(req(0));
+        let deadline = b.next_deadline().unwrap();
+        // one tick before the deadline: not due
+        assert!(b.pop_batch(deadline - Duration::from_nanos(1)).is_none());
+        // exactly at the deadline: due (>= comparison)
+        let batch = b.pop_batch(deadline).unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn clock_before_arrival_does_not_underflow() {
+        // a `now` sampled before the request arrived (caller raced the
+        // clock) must behave like zero wait, not panic
+        let mut b = DynamicBatcher::new(4, Duration::from_millis(50));
+        b.push(req(0));
+        let past = Instant::now() - Duration::from_secs(1);
+        assert!(b.pop_batch(past).is_none());
+    }
+
+    #[test]
+    fn drain_all_chunks_consistent_with_pop_batch() {
+        // the drain decomposition must equal repeated pops on an
+        // identically loaded batcher: oldest-first, max_batch-sized
+        let mk = |n: u64| {
+            let mut b = DynamicBatcher::new(3, Duration::ZERO);
+            for i in 0..n {
+                b.push(req(i));
+            }
+            b
+        };
+        for n in [1u64, 2, 3, 4, 6, 7, 11] {
+            let drained = mk(n).drain_all();
+            let mut popped = Vec::new();
+            let mut b = mk(n);
+            while let Some(batch) = b.pop_batch(Instant::now()) {
+                popped.push(batch);
+            }
+            assert_eq!(drained.len(), popped.len(), "n={n}");
+            for (d, p) in drained.iter().zip(&popped) {
+                let d_ids: Vec<u64> = d.iter().map(|r| r.id).collect();
+                let p_ids: Vec<u64> = p.iter().map(|r| r.id).collect();
+                assert_eq!(d_ids, p_ids, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn oldest_first_order_across_pops_and_drain() {
+        let mut b = DynamicBatcher::new(2, Duration::ZERO);
+        for i in 0..5 {
+            b.push(req(i));
+        }
+        let first = b.pop_batch(Instant::now()).unwrap();
+        assert_eq!(first.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        let rest: Vec<u64> = b.drain_all().into_iter().flatten().map(|r| r.id).collect();
+        assert_eq!(rest, vec![2, 3, 4]);
     }
 }

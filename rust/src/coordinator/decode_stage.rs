@@ -1,0 +1,294 @@
+//! The pipeline's decode-ahead stage: per-tensor weight decompression
+//! running ahead of execution.
+//!
+//! This is the layer-granular decode-ahead that used to live inside
+//! `runtime/executor.rs` / `tensormgr/jit.rs`, promoted to a coordinator
+//! stage (ROADMAP "per-tensor decode + PJRT execute pipelining in the
+//! coordinator") and sharpened from layer granularity to *tensor*
+//! granularity: each stage's tensors are independent work items pulled
+//! off the shared [`ThreadPool`]'s injector queue, decoding into disjoint
+//! extents of one [`LayerArena`].
+//!
+//! ## Shape
+//!
+//! ```text
+//!  stage plan (embed | layer 0..L | head)
+//!        │                                 free arenas (window = W)
+//!        ▼                                 ◀──────────────┐
+//!  decoder thread ── per-tensor work ──▶ pool workers     │
+//!        │                                                │
+//!        └── ready arena ──▶ consumer (PJRT execute) ─────┘
+//! ```
+//!
+//! Backpressure: the decoder blocks receiving a free arena, so at most
+//! `window` stages are decoded-but-unexecuted — bounded memory no matter
+//! how far decode outruns compute. The consumer blocks receiving a ready
+//! arena, so a slow decode stalls execution rather than corrupting it.
+//! Stage decode latency and the ready-queue depth go to the
+//! [`SharedStageMetrics`] observer when one is attached.
+//!
+//! Error path: a consumer error drops both channel ends; the decoder's
+//! next send/recv fails and it winds down. The recycled arenas are lost
+//! on that path (the next call re-allocates) — identical contract to the
+//! PR-1 `with_layers_decoded` it replaces.
+
+use super::metrics::SharedStageMetrics;
+use crate::codec::decode::DecodeTables;
+use crate::codec::Ecf8Blob;
+use crate::tensormgr::{JitDecompressor, LayerArena};
+use crate::util::threadpool::ThreadPool;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+/// Default number of stages decoded ahead of execution (double
+/// buffering; more only helps when stage decode times are very uneven).
+pub const DEFAULT_DECODE_WINDOW: usize = 2;
+
+/// Drive `consume` over `stages` (one call per stage, in order) while a
+/// decoder thread keeps up to `window` stages decoded ahead, each stage's
+/// tensors decoding as independent work items on `pool` (serial without
+/// one). Returns the consumer's results, or its first error.
+///
+/// Bit-exactness contract: `consume(l, arena)` sees exactly the bytes a
+/// serial `decode` of `stages[l]` would produce — the pipeline changes
+/// the schedule, never the data.
+pub fn with_stages_decoded<R, E>(
+    jit: &mut JitDecompressor,
+    pool: Option<&ThreadPool>,
+    window: usize,
+    stages: &[Vec<&Ecf8Blob>],
+    observer: Option<&SharedStageMetrics>,
+    mut consume: impl FnMut(usize, &LayerArena) -> Result<R, E>,
+) -> Result<Vec<R>, E> {
+    let window = window.max(2);
+    // Build every code book's decode tiers up front (cached across calls
+    // in the jit's table cache) so the decoder thread only reads Arcs.
+    let stage_tables: Vec<Vec<Arc<DecodeTables>>> = {
+        let (cache, _) = jit.decode_ahead_parts();
+        stages
+            .iter()
+            .map(|blobs| blobs.iter().map(|b| cache.get_or_build(b)).collect())
+            .collect()
+    };
+    // Seed the free-arena ring from the recycled pool (steady state:
+    // zero allocation on the request path).
+    let mut seed_arenas = {
+        let (_, spares) = jit.decode_ahead_parts();
+        std::mem::take(spares)
+    };
+    seed_arenas.truncate(window);
+    while seed_arenas.len() < window {
+        seed_arenas.push(LayerArena::default());
+    }
+
+    let mut results = Vec::with_capacity(stages.len());
+    // decoded-but-unconsumed stages (the ready queue's depth gauge)
+    let in_flight = AtomicUsize::new(0);
+    let scope_out: Result<Vec<LayerArena>, E> = std::thread::scope(|s| {
+        let (full_tx, full_rx) = mpsc::channel::<(usize, LayerArena)>();
+        let (free_tx, free_rx) = mpsc::channel::<LayerArena>();
+        for arena in seed_arenas {
+            free_tx.send(arena).expect("fresh channel");
+        }
+        let stage_tables = &stage_tables;
+        let in_flight = &in_flight;
+        let decoder = s.spawn(move || {
+            for (l, blobs) in stages.iter().enumerate() {
+                // consumer hung up (error path) => stop decoding; this
+                // recv is also the backpressure stall that bounds the
+                // number of decoded-ahead stages at `window`
+                let Ok(mut arena) = free_rx.recv() else {
+                    return Vec::new();
+                };
+                let t0 = Instant::now();
+                arena.decode_stage_tensors(blobs, &stage_tables[l], pool);
+                if let Some(m) = observer {
+                    m.record(t0.elapsed().as_secs_f64());
+                    m.observe_depth(in_flight.fetch_add(1, Ordering::AcqRel) + 1);
+                } else {
+                    in_flight.fetch_add(1, Ordering::AcqRel);
+                }
+                if full_tx.send((l, arena)).is_err() {
+                    return Vec::new();
+                }
+            }
+            // recover the ring buffers for the next call: drain until the
+            // consumer drops its sender
+            let mut leftover = Vec::new();
+            while let Ok(arena) = free_rx.recv() {
+                leftover.push(arena);
+            }
+            leftover
+        });
+        for l in 0..stages.len() {
+            let (decoded_l, arena) = full_rx.recv().expect("decoder thread alive");
+            debug_assert_eq!(decoded_l, l, "stages delivered in order");
+            in_flight.fetch_sub(1, Ordering::AcqRel);
+            match consume(l, &arena) {
+                Ok(r) => results.push(r),
+                // dropping free_tx/full_rx unblocks the decoder (the
+                // recycled buffers are lost on this path — fine, the
+                // next call reallocates)
+                Err(e) => return Err(e),
+            }
+            let _ = free_tx.send(arena);
+        }
+        drop(free_tx);
+        Ok(decoder.join().expect("decoder thread panicked"))
+    });
+    let spares = scope_out?;
+    {
+        let (_, spare_pool) = jit.decode_ahead_parts();
+        *spare_pool = spares;
+    }
+    let (tensors, bytes) = stages.iter().flatten().fold((0u64, 0u64), |(t, by), b| {
+        (t + 1, by + b.n_elem as u64)
+    });
+    jit.record_decoded(tensors, bytes);
+    Ok(results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::compress_fp8;
+    use crate::util::prng::Xoshiro256;
+
+    fn blob(n: usize, seed: u64) -> (Vec<u8>, Ecf8Blob) {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let data: Vec<u8> = (0..n)
+            .map(|_| {
+                let x = (crate::util::sampling::normal(&mut rng) * 0.05) as f32;
+                crate::fp8::F8E4M3::from_f32(x).to_bits()
+            })
+            .collect();
+        let b = compress_fp8(&data);
+        (data, b)
+    }
+
+    #[test]
+    fn stages_decoded_ahead_bit_exact() {
+        let (d1, b1) = blob(8_000, 10);
+        let (d2, b2) = blob(3_000, 11);
+        let (d3, b3) = blob(5_000, 12);
+        let (d4, b4) = blob(1_000, 13);
+        let mut jit = JitDecompressor::new(0, None);
+        let layers: Vec<Vec<&Ecf8Blob>> = vec![vec![&b1, &b2], vec![&b3], vec![&b4]];
+        let expect: Vec<Vec<&[u8]>> =
+            vec![vec![&d1[..], &d2[..]], vec![&d3[..]], vec![&d4[..]]];
+        let sizes = with_stages_decoded(
+            &mut jit,
+            None,
+            DEFAULT_DECODE_WINDOW,
+            &layers,
+            None,
+            |l, arena| -> Result<usize, String> {
+                assert_eq!(arena.len(), expect[l].len(), "layer {l}");
+                for (i, want) in expect[l].iter().enumerate() {
+                    assert_eq!(arena.tensor(i), *want, "layer {l} tensor {i}");
+                }
+                Ok(arena.tensor(0).len())
+            },
+        )
+        .unwrap();
+        assert_eq!(sizes, vec![8_000, 3_000, 5_000]);
+        assert_eq!(jit.stats().tensors_decoded, 4);
+        assert_eq!(jit.stats().bytes_decoded, 17_000);
+        // second pass reuses the recycled arenas (steady-state
+        // zero-allocation path) and stays bit-exact
+        let again = with_stages_decoded(
+            &mut jit,
+            None,
+            DEFAULT_DECODE_WINDOW,
+            &layers,
+            None,
+            |l, arena| -> Result<(), String> {
+                for (i, want) in expect[l].iter().enumerate() {
+                    assert_eq!(arena.tensor(i), *want, "pass 2 layer {l} tensor {i}");
+                }
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(again.len(), 3);
+        assert_eq!(jit.stats().tensors_decoded, 8);
+    }
+
+    #[test]
+    fn per_tensor_pool_decode_bit_exact_and_observed() {
+        let pool = ThreadPool::new(4);
+        let blobs: Vec<(Vec<u8>, Ecf8Blob)> = (0..7)
+            .map(|i| blob(4_000 + 512 * i, 40 + i as u64))
+            .collect();
+        let stages: Vec<Vec<&Ecf8Blob>> = vec![
+            blobs[..3].iter().map(|(_, b)| b).collect(),
+            blobs[3..].iter().map(|(_, b)| b).collect(),
+        ];
+        let mut jit = JitDecompressor::new(0, None);
+        let obs = SharedStageMetrics::default();
+        with_stages_decoded(
+            &mut jit,
+            Some(&pool),
+            3,
+            &stages,
+            Some(&obs),
+            |l, arena| -> Result<(), String> {
+                let base = if l == 0 { 0 } else { 3 };
+                for i in 0..arena.len() {
+                    assert_eq!(arena.tensor(i), &blobs[base + i].0[..], "stage {l} tensor {i}");
+                }
+                Ok(())
+            },
+        )
+        .unwrap();
+        let snap = obs.snapshot();
+        assert_eq!(snap.events, 2, "one decode event per stage");
+        assert!(snap.queue_depth_peak >= 1);
+        assert!(snap.queue_depth_peak <= 3, "window bounds the ready queue");
+    }
+
+    #[test]
+    fn consumer_error_shuts_down_cleanly() {
+        let (_, b1) = blob(2_000, 14);
+        let (_, b2) = blob(2_000, 15);
+        let mut jit = JitDecompressor::new(0, None);
+        let layers: Vec<Vec<&Ecf8Blob>> = vec![vec![&b1], vec![&b2], vec![&b1]];
+        let err = with_stages_decoded(
+            &mut jit,
+            None,
+            DEFAULT_DECODE_WINDOW,
+            &layers,
+            None,
+            |l, _| -> Result<(), String> {
+                if l == 1 {
+                    Err("boom".to_string())
+                } else {
+                    Ok(())
+                }
+            },
+        )
+        .unwrap_err();
+        assert_eq!(err, "boom");
+        // must return (not deadlock) and the decompressor stays usable
+        jit.begin_layer();
+        let r = jit.decode_to_arena(&b1);
+        assert_eq!(r.len(), 2_000);
+    }
+
+    #[test]
+    fn empty_stage_plan_is_noop() {
+        let mut jit = JitDecompressor::new(0, None);
+        let out = with_stages_decoded(
+            &mut jit,
+            None,
+            2,
+            &[],
+            None,
+            |_, _| -> Result<(), String> { panic!("no stages") },
+        )
+        .unwrap();
+        assert!(out.is_empty());
+        assert_eq!(jit.stats().tensors_decoded, 0);
+    }
+}

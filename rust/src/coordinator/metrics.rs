@@ -1,6 +1,9 @@
-//! Serving metrics: latency samples, token/request throughput.
+//! Serving metrics: latency samples, token/request throughput, and —
+//! for the pipelined coordinator — per-stage latency histograms and
+//! queue-depth watermarks.
 
 use crate::util::stats::Summary;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Accumulated serving statistics.
@@ -72,6 +75,147 @@ impl Metrics {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Pipeline stage metrics
+// ---------------------------------------------------------------------------
+
+/// Number of log₂ buckets in [`LatencyHistogram`].
+const HIST_BUCKETS: usize = 28;
+/// Lower edge of bucket 0 (seconds): 1 µs. Bucket `i` counts samples in
+/// `[2^i, 2^{i+1})` µs; the last bucket absorbs everything slower.
+const HIST_BASE_S: f64 = 1e-6;
+
+/// Fixed-size log₂ latency histogram (1 µs … ~2 min), constant-memory so
+/// every stage of the pipeline can keep one without unbounded growth
+/// under sustained load (unlike the raw `latencies_s` vector of
+/// [`Metrics`], which the closed-loop benches own).
+#[derive(Debug, Clone, Default)]
+pub struct LatencyHistogram {
+    buckets: [u64; HIST_BUCKETS],
+    count: u64,
+    sum_s: f64,
+    max_s: f64,
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, seconds: f64) {
+        let ratio = (seconds / HIST_BASE_S).max(1.0);
+        let bucket = (ratio.log2().floor() as usize).min(HIST_BUCKETS - 1);
+        self.buckets[bucket] += 1;
+        self.count += 1;
+        self.sum_s += seconds;
+        self.max_s = self.max_s.max(seconds);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_s / self.count as f64
+        }
+    }
+
+    pub fn max_s(&self) -> f64 {
+        self.max_s
+    }
+
+    /// Upper edge (seconds) of the bucket containing quantile `q` —
+    /// a conservative (over-)estimate, exact to within the 2× bucket
+    /// resolution.
+    pub fn quantile_s(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return HIST_BASE_S * 2f64.powi(i as i32 + 1);
+            }
+        }
+        HIST_BASE_S * 2f64.powi(HIST_BUCKETS as i32)
+    }
+}
+
+/// One pipeline stage's counters: how often it ran, how long each run
+/// took (histogram), and how deep its downstream queue got.
+#[derive(Debug, Clone, Default)]
+pub struct StageMetrics {
+    pub latency: LatencyHistogram,
+    pub events: u64,
+    pub queue_depth_peak: usize,
+}
+
+impl StageMetrics {
+    pub fn record(&mut self, seconds: f64) {
+        self.events += 1;
+        self.latency.record(seconds);
+    }
+
+    pub fn observe_depth(&mut self, depth: usize) {
+        self.queue_depth_peak = self.queue_depth_peak.max(depth);
+    }
+}
+
+/// Thread-shared handle to one stage's metrics — cheap to clone across
+/// the stage threads; `snapshot` for reporting.
+#[derive(Debug, Clone, Default)]
+pub struct SharedStageMetrics(Arc<Mutex<StageMetrics>>);
+
+impl SharedStageMetrics {
+    pub fn record(&self, seconds: f64) {
+        self.0.lock().unwrap().record(seconds);
+    }
+
+    pub fn observe_depth(&self, depth: usize) {
+        self.0.lock().unwrap().observe_depth(depth);
+    }
+
+    pub fn snapshot(&self) -> StageMetrics {
+        self.0.lock().unwrap().clone()
+    }
+}
+
+/// The pipelined coordinator's per-stage metrics: admission (batch
+/// formation + backpressure wait on the bounded batch queue), decode
+/// (per-stage tensor decode-ahead), execute (PJRT forward + response
+/// fan-out).
+#[derive(Debug, Clone, Default)]
+pub struct PipelineMetrics {
+    pub admission: SharedStageMetrics,
+    pub decode: SharedStageMetrics,
+    pub execute: SharedStageMetrics,
+}
+
+impl PipelineMetrics {
+    /// Multi-line human-readable report.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, stage) in [
+            ("admission", self.admission.snapshot()),
+            ("decode", self.decode.snapshot()),
+            ("execute", self.execute.snapshot()),
+        ] {
+            out.push_str(&format!(
+                "{name:9}: {:6} events, mean {:8.3} ms, p50 {:8.3} ms, p99 {:8.3} ms, \
+                 max {:8.3} ms, peak queue depth {}\n",
+                stage.events,
+                stage.latency.mean_s() * 1e3,
+                stage.latency.quantile_s(0.50) * 1e3,
+                stage.latency.quantile_s(0.99) * 1e3,
+                stage.latency.max_s() * 1e3,
+                stage.queue_depth_peak,
+            ));
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -99,5 +243,53 @@ mod tests {
         assert_eq!(m.tokens_per_second(), 0.0);
         assert!(m.latency_summary().is_none());
         assert_eq!(m.mean_batch_size(), 0.0);
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let mut h = LatencyHistogram::default();
+        for _ in 0..90 {
+            h.record(1e-3); // ~bucket 10
+        }
+        for _ in 0..10 {
+            h.record(1.0); // slow tail
+        }
+        assert_eq!(h.count(), 100);
+        assert!(h.mean_s() > 0.0);
+        assert!((h.max_s() - 1.0).abs() < 1e-12);
+        let p50 = h.quantile_s(0.50);
+        assert!(p50 >= 1e-3 && p50 <= 4e-3, "p50 {p50}");
+        let p99 = h.quantile_s(0.99);
+        assert!(p99 >= 1.0, "p99 {p99}");
+        // degenerate inputs stay in range
+        h.record(0.0);
+        h.record(1e9);
+        assert!(h.quantile_s(1.0) > 0.0);
+        assert_eq!(LatencyHistogram::default().quantile_s(0.5), 0.0);
+    }
+
+    #[test]
+    fn stage_metrics_shared_across_clones() {
+        let shared = SharedStageMetrics::default();
+        let other = shared.clone();
+        shared.record(0.25);
+        other.record(0.5);
+        other.observe_depth(3);
+        shared.observe_depth(1);
+        let snap = shared.snapshot();
+        assert_eq!(snap.events, 2);
+        assert_eq!(snap.queue_depth_peak, 3);
+        assert_eq!(snap.latency.count(), 2);
+    }
+
+    #[test]
+    fn pipeline_metrics_render() {
+        let p = PipelineMetrics::default();
+        p.execute.record(0.01);
+        p.execute.observe_depth(2);
+        let s = p.render();
+        assert!(s.contains("admission"));
+        assert!(s.contains("execute"));
+        assert!(s.contains("peak queue depth 2"));
     }
 }

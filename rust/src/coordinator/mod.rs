@@ -10,17 +10,29 @@
 //!   "Max Batch Size" column);
 //! * [`batcher`] — dynamic batching: close a batch when full or when the
 //!   oldest request exceeds the linger deadline;
-//! * [`server`] — the std-thread event loop tying router → batcher →
-//!   JIT-decompress → PJRT execute, with metrics;
-//! * [`metrics`] — latency/throughput counters.
+//! * [`server`] — the serial-tick event loop tying router → batcher →
+//!   JIT-decompress → PJRT execute, with metrics, and the [`BatchEngine`]
+//!   abstraction both coordinators execute through;
+//! * [`pipeline`] — the staged coordinator: admission / decode-ahead /
+//!   execute on separate threads with bounded hand-off queues
+//!   (backpressure) — the serving path that overlaps batch formation and
+//!   weight decompression with PJRT compute;
+//! * [`decode_stage`] — the decode-ahead stage itself: per-tensor decode
+//!   work items running `window` stages ahead of execution;
+//! * [`metrics`] — latency/throughput counters plus per-stage latency
+//!   histograms and queue-depth watermarks.
 
 pub mod batcher;
+pub mod decode_stage;
 pub mod metrics;
+pub mod pipeline;
 pub mod request;
 pub mod scheduler;
 pub mod server;
 
 pub use batcher::DynamicBatcher;
+pub use metrics::{LatencyHistogram, PipelineMetrics, SharedStageMetrics, StageMetrics};
+pub use pipeline::{PipelineConfig, PipelinedServer, SyntheticEngine};
 pub use request::{Request, Response};
 pub use scheduler::{MemoryModel, ServingPlan};
-pub use server::{ServeConfig, Server};
+pub use server::{BatchEngine, ServeConfig, Server};

@@ -1,0 +1,548 @@
+//! The pipelined serving coordinator: admission → decode-ahead → execute
+//! as concurrently running stages with bounded hand-offs.
+//!
+//! [`super::server::Server`]'s tick loop is serial: while a batch
+//! executes, nothing batches, and nothing decodes ahead. This module
+//! splits the request path into stages that overlap:
+//!
+//! ```text
+//!  submit() ──▶ [batcher queue]                  (continuous admission)
+//!                    │ admission thread: linger/full policy
+//!                    ▼
+//!              [bounded batch queue]             (backpressure, cap B)
+//!                    │ execute thread
+//!                    ▼
+//!              decode stage ⇄ PJRT execute       (per-tensor decode-ahead,
+//!                    │                            coordinator::decode_stage)
+//!                    ▼
+//!              [response queue] ──▶ collect_ready() / shutdown()
+//! ```
+//!
+//! * **Admission** keeps forming batches while the executor is busy —
+//!   the batcher queue accepts submissions at any time, and the bounded
+//!   batch queue stalls admission (never the submitters) when execution
+//!   falls behind.
+//! * **Decode-ahead** runs inside the execute stage's engine: layer ℓ+1's
+//!   tensors decode as per-tensor pool work while layer ℓ executes
+//!   ([`crate::coordinator::decode_stage`]).
+//! * **Execute** drives the PJRT artifacts from exactly one thread (the
+//!   PJRT single-driver constraint the serial server also obeys).
+//!
+//! Scheduling changes, numerics don't: with the same batch composition,
+//! responses are bit-identical to the serial server's (asserted by the
+//! integration tests and the Table-2 bench).
+
+use super::batcher::DynamicBatcher;
+use super::metrics::{Metrics, PipelineMetrics, SharedStageMetrics};
+use super::request::{Request, Response};
+use super::server::{compiled_batch_for, execute_batch_on, BatchEngine, ServeConfig};
+use crate::runtime::executor::SEQ_LEN;
+use crate::util::channel::{self, Sender};
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Pipeline tuning knobs on top of the serving policy.
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineConfig {
+    pub serve: ServeConfig,
+    /// capacity of the admission → execute batch queue (the backpressure
+    /// bound: at most this many formed-but-unexecuted batches)
+    pub batch_queue_cap: usize,
+}
+
+impl PipelineConfig {
+    pub fn new(serve: ServeConfig) -> Self {
+        Self {
+            serve,
+            batch_queue_cap: 2,
+        }
+    }
+}
+
+/// State shared with the admission thread.
+struct AdmissionShared {
+    batcher: Mutex<DynamicBatcher>,
+    wake: Condvar,
+    shutdown: AtomicBool,
+}
+
+impl AdmissionShared {
+    /// Set the shutdown flag *under the batcher lock*: the admission
+    /// loop only sleeps while holding the lock, so it either sees the
+    /// flag before waiting or is already waiting and gets the notify —
+    /// the wakeup cannot be lost, which lets the loop sleep without any
+    /// poll timeout.
+    fn signal_shutdown(&self) {
+        let _guard = self.batcher.lock().unwrap();
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.wake.notify_all();
+    }
+}
+
+/// Everything the pipeline hands back at shutdown.
+pub struct ShutdownReport<E> {
+    pub engine: E,
+    /// throughput/latency counters (same shape as the serial server's)
+    pub metrics: Metrics,
+    /// responses produced since the last `collect_ready`
+    pub responses: Vec<Response>,
+    /// per-stage latency histograms and queue-depth watermarks
+    pub stages: PipelineMetrics,
+}
+
+/// What the execute thread hands back at join time.
+type ExecuteOutcome<E> = (E, Metrics, Option<anyhow::Error>);
+
+/// The staged serving coordinator. Construction spawns the admission and
+/// execute threads; [`Self::shutdown`] drains and joins them.
+pub struct PipelinedServer<E: BatchEngine + 'static> {
+    shared: Arc<AdmissionShared>,
+    admission: Option<JoinHandle<()>>,
+    execute: Option<JoinHandle<ExecuteOutcome<E>>>,
+    resp_rx: mpsc::Receiver<Response>,
+    stages: PipelineMetrics,
+    exec_batch: usize,
+    batch_queue_cap: usize,
+}
+
+impl<E: BatchEngine + 'static> PipelinedServer<E> {
+    pub fn new(engine: E, cfg: PipelineConfig) -> Self {
+        let exec_batch = compiled_batch_for(cfg.serve.max_batch);
+        let shared = Arc::new(AdmissionShared {
+            batcher: Mutex::new(DynamicBatcher::new(exec_batch, cfg.serve.linger)),
+            wake: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let (batch_tx, batch_rx) = channel::bounded::<Vec<Request>>(cfg.batch_queue_cap);
+        let (resp_tx, resp_rx) = mpsc::channel::<Response>();
+        let stages = PipelineMetrics::default();
+
+        let admission = std::thread::spawn({
+            let shared = Arc::clone(&shared);
+            let stage = stages.admission.clone();
+            move || admission_loop(&shared, &batch_tx, &stage)
+        });
+        let execute = std::thread::spawn({
+            let decode_stage = stages.decode.clone();
+            let execute_stage = stages.execute.clone();
+            let mut engine = engine;
+            move || {
+                let mut metrics = Metrics::default();
+                metrics.start();
+                let mut first_err = None;
+                while let Ok(batch) = batch_rx.recv() {
+                    execute_stage.observe_depth(batch_rx.len());
+                    let t0 = Instant::now();
+                    match execute_batch_on(
+                        &mut engine,
+                        &batch,
+                        exec_batch,
+                        true,
+                        Some(&decode_stage),
+                    ) {
+                        Ok(responses) => {
+                            execute_stage.record(t0.elapsed().as_secs_f64());
+                            let latencies: Vec<f64> =
+                                responses.iter().map(|r| r.latency_s).collect();
+                            metrics.record_batch(
+                                batch.len(),
+                                (batch.len() * SEQ_LEN) as u64,
+                                &latencies,
+                            );
+                            for r in responses {
+                                // receiver alive for the server's lifetime
+                                let _ = resp_tx.send(r);
+                            }
+                        }
+                        Err(e) => {
+                            first_err = Some(e);
+                            break; // dropping batch_rx fails admission sends
+                        }
+                    }
+                }
+                metrics.finish();
+                (engine, metrics, first_err)
+            }
+        });
+
+        Self {
+            shared,
+            admission: Some(admission),
+            execute: Some(execute),
+            resp_rx,
+            stages,
+            exec_batch,
+            batch_queue_cap: cfg.batch_queue_cap,
+        }
+    }
+
+    /// The batch size actually executed (largest compiled ≤ admitted).
+    pub fn exec_batch(&self) -> usize {
+        self.exec_batch
+    }
+
+    /// The backpressure bound on formed-but-unexecuted batches.
+    pub fn batch_queue_cap(&self) -> usize {
+        self.batch_queue_cap
+    }
+
+    /// Enqueue a request. Never blocks on execution — admission is
+    /// continuous; only *formed batches* are bounded.
+    pub fn submit(&self, r: Request) {
+        self.shared.batcher.lock().unwrap().push(r);
+        self.shared.wake.notify_one();
+    }
+
+    /// Requests waiting in the batcher (formed batches not included).
+    pub fn pending(&self) -> usize {
+        self.shared.batcher.lock().unwrap().pending()
+    }
+
+    /// Responses completed so far (non-blocking).
+    pub fn collect_ready(&self) -> Vec<Response> {
+        let mut out = Vec::new();
+        while let Ok(r) = self.resp_rx.try_recv() {
+            out.push(r);
+        }
+        out
+    }
+
+    /// Per-stage metrics handle (live; snapshot to read).
+    pub fn stage_metrics(&self) -> &PipelineMetrics {
+        &self.stages
+    }
+
+    /// Flush pending work, stop the stage threads, and return the engine,
+    /// metrics, and any responses not yet collected. Fails with the
+    /// execute stage's first error, if it hit one.
+    pub fn shutdown(mut self) -> Result<ShutdownReport<E>> {
+        self.shared.signal_shutdown();
+        if let Some(h) = self.admission.take() {
+            h.join().map_err(|_| anyhow!("admission thread panicked"))?;
+        }
+        let (engine, metrics, first_err) = self
+            .execute
+            .take()
+            .expect("execute joined once")
+            .join()
+            .map_err(|_| anyhow!("execute thread panicked"))?;
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        let mut responses = Vec::new();
+        while let Ok(r) = self.resp_rx.try_recv() {
+            responses.push(r);
+        }
+        Ok(ShutdownReport {
+            engine,
+            metrics,
+            responses,
+            stages: self.stages.clone(),
+        })
+    }
+}
+
+impl<E: BatchEngine + 'static> Drop for PipelinedServer<E> {
+    fn drop(&mut self) {
+        // shutdown() takes the handles; a plain drop still winds the
+        // threads down instead of leaking them
+        self.shared.signal_shutdown();
+        if let Some(h) = self.admission.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.execute.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The admission stage: form batches under the batcher's policy (full
+/// batch or linger deadline) and push them into the bounded batch queue.
+/// The send is the stage's backpressure stall and is what the stage
+/// latency histogram records.
+fn admission_loop(
+    shared: &AdmissionShared,
+    batch_tx: &Sender<Vec<Request>>,
+    stage: &SharedStageMetrics,
+) {
+    loop {
+        let mut batcher = shared.batcher.lock().unwrap();
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let now = Instant::now();
+        if let Some(batch) = batcher.pop_batch(now) {
+            drop(batcher); // never hold the submit lock across the send
+            stage.observe_depth(batch_tx.len());
+            let t0 = Instant::now();
+            if batch_tx.send(batch).is_err() {
+                return; // execute stage gone (error path)
+            }
+            stage.record(t0.elapsed().as_secs_f64());
+            continue;
+        }
+        // Nothing due: sleep until the oldest waiter's linger deadline,
+        // or — empty queue — until a submit/shutdown notification. No
+        // poll timeout needed: submits notify after pushing under this
+        // lock, and shutdown sets its flag under this lock
+        // (signal_shutdown), so wakeups cannot be lost.
+        let guard = match batcher.next_deadline() {
+            Some(deadline) => {
+                let wait = deadline.saturating_duration_since(now);
+                shared.wake.wait_timeout(batcher, wait).unwrap().0
+            }
+            None => shared.wake.wait(batcher).unwrap(),
+        };
+        drop(guard);
+    }
+    // shutdown: drain everything still queued, in pop_batch-consistent
+    // chunks, then close the channel so the execute stage finishes
+    let chunks = shared.batcher.lock().unwrap().drain_all();
+    for chunk in chunks {
+        stage.observe_depth(batch_tx.len());
+        let t0 = Instant::now();
+        if batch_tx.send(chunk).is_err() {
+            return;
+        }
+        stage.record(t0.elapsed().as_secs_f64());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic engine (benches + tests)
+// ---------------------------------------------------------------------------
+
+/// A deterministic stand-in for [`crate::runtime::executor::LlmExecutor`]
+/// where AOT artifacts are unavailable (CI, artifact-less checkouts).
+/// Logits are a pure function of the padded token matrix, so the serial
+/// and pipelined coordinators must produce bit-identical responses for
+/// identical batch compositions. Costs model the paper's serving shape:
+/// `run_batch` pays decode + compute serially, `run_batch_ahead` pays
+/// `max(decode, compute)` (perfect overlap), mirroring how the real
+/// engine hides JIT decompression behind PJRT execution.
+pub struct SyntheticEngine {
+    pub vocab: usize,
+    /// emulated per-batch weight-decode cost
+    pub decode_cost: Duration,
+    /// emulated per-batch execute cost
+    pub compute_cost: Duration,
+    /// error injection: fail the n-th forward (tests)
+    pub fail_on_forward: Option<u64>,
+    pub forwards: u64,
+}
+
+impl SyntheticEngine {
+    /// Zero-cost engine (pure logits function).
+    pub fn instant(vocab: usize) -> Self {
+        Self::with_costs(vocab, Duration::ZERO, Duration::ZERO)
+    }
+
+    pub fn with_costs(vocab: usize, decode_cost: Duration, compute_cost: Duration) -> Self {
+        Self {
+            vocab,
+            decode_cost,
+            compute_cost,
+            fail_on_forward: None,
+            forwards: 0,
+        }
+    }
+
+    fn logits(&self, tokens: &[i32], batch: usize) -> Vec<f32> {
+        let vocab = self.vocab;
+        let mut out = vec![0f32; batch * vocab];
+        for b in 0..batch {
+            // FNV-1a over the row, then splitmix per logit
+            let mut h = 0xcbf29ce484222325u64;
+            for &t in &tokens[b * SEQ_LEN..(b + 1) * SEQ_LEN] {
+                h ^= t as u32 as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+            for (v, slot) in out[b * vocab..(b + 1) * vocab].iter_mut().enumerate() {
+                let mut x = h ^ (v as u64).wrapping_mul(0x9E3779B97F4A7C15);
+                x ^= x >> 30;
+                x = x.wrapping_mul(0xBF58476D1CE4E5B9);
+                x ^= x >> 27;
+                *slot = (x >> 40) as f32 / (1u64 << 24) as f32 - 0.5;
+            }
+        }
+        out
+    }
+
+    fn step(&mut self) -> Result<()> {
+        self.forwards += 1;
+        if self.fail_on_forward == Some(self.forwards) {
+            return Err(anyhow!("synthetic engine failure on forward {}", self.forwards));
+        }
+        Ok(())
+    }
+}
+
+impl BatchEngine for SyntheticEngine {
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn run_batch(&mut self, tokens: &[i32], batch: usize) -> Result<Vec<f32>> {
+        self.step()?;
+        let cost = self.decode_cost + self.compute_cost;
+        if !cost.is_zero() {
+            std::thread::sleep(cost);
+        }
+        Ok(self.logits(tokens, batch))
+    }
+
+    fn run_batch_ahead(
+        &mut self,
+        tokens: &[i32],
+        batch: usize,
+        observer: Option<&SharedStageMetrics>,
+    ) -> Result<Vec<f32>> {
+        self.step()?;
+        if let Some(obs) = observer {
+            obs.record(self.decode_cost.as_secs_f64());
+        }
+        let cost = self.decode_cost.max(self.compute_cost);
+        if !cost.is_zero() {
+            std::thread::sleep(cost);
+        }
+        Ok(self.logits(tokens, batch))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_support::seeded_requests as requests;
+    use crate::coordinator::server::Server;
+    use std::collections::HashMap;
+
+    #[test]
+    fn pipelined_flood_matches_serial_bitwise() {
+        let vocab = 96;
+        let cfg = ServeConfig {
+            max_batch: 4,
+            linger: Duration::from_secs(30), // only full batches + drain
+        };
+        let reqs = requests(23, vocab, 77);
+
+        // serial reference
+        let mut serial = Server::new(SyntheticEngine::instant(vocab), cfg);
+        for r in &reqs {
+            serial.submit(r.clone());
+        }
+        let mut want: Vec<Response> = Vec::new();
+        loop {
+            let got = serial.tick().unwrap();
+            if got.is_empty() {
+                break;
+            }
+            want.extend(got);
+        }
+        want.extend(serial.drain().unwrap());
+        assert_eq!(want.len(), 23);
+
+        // pipelined under the same policy and arrival order
+        let server = PipelinedServer::new(
+            SyntheticEngine::instant(vocab),
+            PipelineConfig::new(cfg),
+        );
+        for r in &reqs {
+            server.submit(r.clone());
+        }
+        let report = server.shutdown().unwrap();
+        let mut got = report.responses;
+        assert_eq!(got.len(), 23);
+        got.sort_by_key(|r| r.id);
+
+        let by_id: HashMap<u64, &Response> = want.iter().map(|r| (r.id, r)).collect();
+        for g in &got {
+            let w = by_id[&g.id];
+            assert_eq!(g.batch_size, w.batch_size, "req {}", g.id);
+            assert_eq!(g.logits.len(), w.logits.len());
+            for (i, (a, b)) in g.logits.iter().zip(&w.logits).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "req {} logit {i}", g.id);
+            }
+        }
+        assert_eq!(report.metrics.requests_served, 23);
+        assert_eq!(report.engine.forwards, 6); // 5 full + 1 drain chunk
+    }
+
+    #[test]
+    fn backpressure_bounds_batch_queue_depth() {
+        let vocab = 8;
+        let cfg = ServeConfig {
+            max_batch: 1,
+            linger: Duration::ZERO,
+        };
+        let mut pipe_cfg = PipelineConfig::new(cfg);
+        pipe_cfg.batch_queue_cap = 2;
+        let server = PipelinedServer::new(
+            SyntheticEngine::with_costs(vocab, Duration::from_millis(2), Duration::from_millis(2)),
+            pipe_cfg,
+        );
+        for r in requests(30, vocab, 5) {
+            server.submit(r);
+        }
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.metrics.requests_served, 30);
+        let adm = report.stages.admission.snapshot();
+        assert_eq!(adm.events, 30, "every formed batch recorded");
+        assert!(
+            adm.queue_depth_peak <= 2,
+            "bounded queue exceeded: {}",
+            adm.queue_depth_peak
+        );
+        let exec = report.stages.execute.snapshot();
+        assert_eq!(exec.events, 30);
+        let dec = report.stages.decode.snapshot();
+        assert_eq!(dec.events, 30, "decode-ahead observed per batch");
+    }
+
+    #[test]
+    fn collect_ready_streams_responses_while_running() {
+        let vocab = 16;
+        let server = PipelinedServer::new(
+            SyntheticEngine::instant(vocab),
+            PipelineConfig::new(ServeConfig {
+                max_batch: 2,
+                linger: Duration::ZERO,
+            }),
+        );
+        let mut got = Vec::new();
+        for r in requests(10, vocab, 9) {
+            server.submit(r);
+            got.extend(server.collect_ready());
+        }
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while got.len() < 10 && Instant::now() < deadline {
+            got.extend(server.collect_ready());
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(got.len(), 10, "all responses streamed before shutdown");
+        let report = server.shutdown().unwrap();
+        assert!(report.responses.is_empty());
+        assert_eq!(report.metrics.requests_served, 10);
+    }
+
+    #[test]
+    fn engine_error_surfaces_at_shutdown() {
+        let vocab = 8;
+        let mut engine = SyntheticEngine::instant(vocab);
+        engine.fail_on_forward = Some(2);
+        let server = PipelinedServer::new(
+            engine,
+            PipelineConfig::new(ServeConfig {
+                max_batch: 1,
+                linger: Duration::ZERO,
+            }),
+        );
+        for r in requests(5, vocab, 3) {
+            server.submit(r);
+        }
+        let err = server.shutdown().unwrap_err();
+        assert!(err.to_string().contains("synthetic engine failure"));
+    }
+}

@@ -1,19 +1,51 @@
 //! The serving event loop: router → dynamic batcher → JIT-decompressed
 //! PJRT execution → responses.
 //!
-//! Single-threaded reactor design (PJRT executables are driven from one
-//! thread; decode parallelism lives inside the block-parallel decoder's
-//! pool). Producers call [`Server::submit`]; [`Server::tick`] advances
-//! the loop; [`Server::drain`] flushes at shutdown. The serve example and
+//! Two coordinators share this module's [`BatchEngine`] abstraction:
+//!
+//! * [`Server`] — the single-threaded reactor (batch → execute → respond
+//!   serially per [`Server::tick`]); the baseline the Table-2 bench
+//!   labels "serial-tick";
+//! * [`super::pipeline::PipelinedServer`] — the staged pipeline
+//!   (admission / decode-ahead / execute on separate threads with
+//!   bounded hand-off queues).
+//!
+//! Producers call [`Server::submit`]; [`Server::tick`] advances the
+//! loop; [`Server::drain`] flushes at shutdown. The serve example and
 //! Table-2 bench drive open/closed-loop arrival patterns through this
 //! API.
 
 use super::batcher::DynamicBatcher;
-use super::metrics::Metrics;
+use super::metrics::{Metrics, SharedStageMetrics};
 use super::request::{Request, Response};
 use crate::runtime::executor::{LlmExecutor, SEQ_LEN};
 use anyhow::Result;
 use std::time::{Duration, Instant};
+
+/// Anything that can execute a padded `batch × SEQ_LEN` token matrix and
+/// return `batch × vocab` logits. Implemented by [`LlmExecutor`] (the
+/// PJRT stack) and by the synthetic engine the benches/tests use where
+/// artifacts are unavailable.
+pub trait BatchEngine: Send {
+    /// Logits per request row.
+    fn vocab(&self) -> usize;
+
+    /// Execute one padded batch (`tokens.len() == batch * SEQ_LEN`).
+    fn run_batch(&mut self, tokens: &[i32], batch: usize) -> Result<Vec<f32>>;
+
+    /// Execute with the engine's decode-ahead path, reporting decode
+    /// stage metrics to `observer`. Default: plain [`Self::run_batch`]
+    /// (engines without a decode stage).
+    fn run_batch_ahead(
+        &mut self,
+        tokens: &[i32],
+        batch: usize,
+        observer: Option<&SharedStageMetrics>,
+    ) -> Result<Vec<f32>> {
+        let _ = observer;
+        self.run_batch(tokens, batch)
+    }
+}
 
 /// Serving configuration.
 #[derive(Debug, Clone, Copy)]
@@ -37,16 +69,54 @@ pub fn compiled_batch_for(want: usize) -> usize {
         .unwrap_or(1)
 }
 
-/// The server: owns the executor, the batcher, and the metrics.
-pub struct Server {
-    pub executor: LlmExecutor,
+/// Pad `batch` to the compiled shape, execute it on `engine`, and build
+/// per-request responses. One definition shared by the serial-tick and
+/// pipelined coordinators so their numerics cannot drift: given the same
+/// batch composition, both produce bit-identical responses.
+pub(crate) fn execute_batch_on<E: BatchEngine>(
+    engine: &mut E,
+    batch: &[Request],
+    exec_batch: usize,
+    ahead: bool,
+    observer: Option<&SharedStageMetrics>,
+) -> Result<Vec<Response>> {
+    let real = batch.len();
+    debug_assert!(real <= exec_batch);
+    // pad to the compiled shape with zero tokens
+    let mut tokens = vec![0i32; exec_batch * SEQ_LEN];
+    for (i, r) in batch.iter().enumerate() {
+        assert_eq!(r.tokens.len(), SEQ_LEN, "request token window");
+        tokens[i * SEQ_LEN..(i + 1) * SEQ_LEN].copy_from_slice(&r.tokens);
+    }
+    let logits = if ahead {
+        engine.run_batch_ahead(&tokens, exec_batch, observer)?
+    } else {
+        engine.run_batch(&tokens, exec_batch)?
+    };
+    let vocab = engine.vocab();
+    let now = Instant::now();
+    Ok(batch
+        .iter()
+        .enumerate()
+        .map(|(i, r)| Response {
+            id: r.id,
+            logits: logits[i * vocab..(i + 1) * vocab].to_vec(),
+            latency_s: now.duration_since(r.arrived).as_secs_f64(),
+            batch_size: real,
+        })
+        .collect())
+}
+
+/// The serial-tick server: owns the engine, the batcher, and the metrics.
+pub struct Server<E: BatchEngine = LlmExecutor> {
+    pub executor: E,
     batcher: DynamicBatcher,
     pub metrics: Metrics,
     exec_batch: usize,
 }
 
-impl Server {
-    pub fn new(executor: LlmExecutor, cfg: ServeConfig) -> Self {
+impl<E: BatchEngine> Server<E> {
+    pub fn new(executor: E, cfg: ServeConfig) -> Self {
         let exec_batch = compiled_batch_for(cfg.max_batch);
         let mut metrics = Metrics::default();
         metrics.start();
@@ -91,35 +161,10 @@ impl Server {
     }
 
     fn execute_batch(&mut self, batch: Vec<Request>) -> Result<Vec<Response>> {
-        let real = batch.len();
-        let b = self.exec_batch;
-        debug_assert!(real <= b);
-        // pad to the compiled shape with zero tokens
-        let mut tokens = vec![0i32; b * SEQ_LEN];
-        for (i, r) in batch.iter().enumerate() {
-            assert_eq!(r.tokens.len(), SEQ_LEN, "request token window");
-            tokens[i * SEQ_LEN..(i + 1) * SEQ_LEN].copy_from_slice(&r.tokens);
-        }
-        let logits = self.executor.forward(&tokens, b)?;
-        let vocab = self.executor.cfg.vocab;
-        let now = Instant::now();
-        let mut latencies = Vec::with_capacity(real);
-        let responses: Vec<Response> = batch
-            .iter()
-            .enumerate()
-            .map(|(i, r)| {
-                let lat = now.duration_since(r.arrived).as_secs_f64();
-                latencies.push(lat);
-                Response {
-                    id: r.id,
-                    logits: logits[i * vocab..(i + 1) * vocab].to_vec(),
-                    latency_s: lat,
-                    batch_size: real,
-                }
-            })
-            .collect();
+        let responses = execute_batch_on(&mut self.executor, &batch, self.exec_batch, false, None)?;
+        let latencies: Vec<f64> = responses.iter().map(|r| r.latency_s).collect();
         self.metrics
-            .record_batch(real, (real * SEQ_LEN) as u64, &latencies);
+            .record_batch(batch.len(), (batch.len() * SEQ_LEN) as u64, &latencies);
         Ok(responses)
     }
 }

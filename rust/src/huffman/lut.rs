@@ -208,10 +208,19 @@ impl PairLut {
 /// code wider than 14 bits (possible only under the 15/16-bit tail of a
 /// length-limited book — a ≪1 % case on weight data).
 ///
-/// Entry layout (u32):
-///   bits 0..20   syms[0..4], 5 bits each (exponent alphabets ≤ 32)
-///   bits 20..23  symbol count (0 ⇒ fall back to the single LUT)
-///   bits 23..28  consumed bits (≤ MULTI_BITS)
+/// Entry layout (u64, 2^14 × 8 B = 128 KiB table):
+///   bits 0..32   syms[0..4], one *byte lane* per symbol (lane k = k-th
+///                decoded symbol) — the low u32 is exactly the operand
+///                the SIMD/SWAR nibble-assembly tier
+///                ([`crate::codec::simd`]) consumes, so a full-count
+///                entry needs zero repacking on the hot path
+///   bits 32..35  symbol count (0 ⇒ fall back to the single LUT)
+///   bits 35..40  consumed bits (≤ MULTI_BITS)
+///
+/// Symbols are still capped below 32 (`MULTI_SYM_MASK`): the SIMD
+/// assembler left-shifts the sym lanes by up to 3 bits inside their
+/// bytes, which is lossless only for 5-bit values (and the exponent
+/// alphabets this table serves are ≤ 32 symbols anyway).
 ///
 /// Correctness of the greedy fill rests on prefix-freeness: if the
 /// single-LUT decode of the zero-padded remainder returns a length that
@@ -221,41 +230,41 @@ impl PairLut {
 /// argument as [`PairLut`], proved over one more level of induction).
 #[derive(Debug, Clone)]
 pub struct MultiLut {
-    entries: Vec<u32>,
+    entries: Vec<u64>,
 }
 
-/// Window width indexing [`MultiLut`] (2^14 × 4 B = 64 KiB table).
+/// Window width indexing [`MultiLut`] (2^14 entries).
 pub const MULTI_BITS: u32 = 14;
 /// Maximum symbols emitted per lookup.
 pub const MULTI_MAX_SYMS: usize = 4;
 
-const MULTI_SYM_MASK: u32 = 0x1F;
+const MULTI_SYM_MASK: u64 = 0x1F;
 
 impl MultiLut {
     pub fn build(single: &DecodeLut) -> Self {
         let n = 1usize << MULTI_BITS;
-        let mut entries = vec![0u32; n];
+        let mut entries = vec![0u64; n];
         for (w, entry) in entries.iter_mut().enumerate() {
             // MSB-align the 14 index bits in a 16-bit shifting register
             let bits = (w as u32) << (16 - MULTI_BITS);
             let mut used = 0u32;
-            let mut syms = 0u32;
-            let mut count = 0u32;
+            let mut syms = 0u64;
+            let mut count = 0u64;
             while (count as usize) < MULTI_MAX_SYMS {
                 let win = ((bits << used) & 0xFFFF) as u16;
                 let (s, l) = single.decode(win);
-                if l == 0 || used + l > MULTI_BITS || s > MULTI_SYM_MASK as u16 {
+                if l == 0 || used + l > MULTI_BITS || s as u64 > MULTI_SYM_MASK {
                     // incomplete code in padding, codeword overruns the
                     // window, or symbol too wide to pack (≥ 32: the
                     // BF16/DFloat11 256-symbol books use the single LUT)
                     break;
                 }
-                syms |= (s as u32) << (5 * count);
+                syms |= (s as u64) << (8 * count);
                 used += l;
                 count += 1;
             }
             if count > 0 {
-                *entry = syms | (count << 20) | (used << 23);
+                *entry = syms | (count << 32) | ((used as u64) << 35);
             }
         }
         Self { entries }
@@ -263,29 +272,36 @@ impl MultiLut {
 
     /// Raw entry for the top [`MULTI_BITS`] bits of a 64-bit MSB-aligned
     /// window. Decode with [`MultiLut::count`] / [`MultiLut::consumed`] /
-    /// [`MultiLut::sym`]; a zero entry means "fall back to the single
-    /// LUT".
+    /// [`MultiLut::sym`] / [`MultiLut::sym_bytes`]; a zero entry means
+    /// "fall back to the single LUT".
     #[inline(always)]
-    pub fn lookup(&self, l: u64) -> u32 {
+    pub fn lookup(&self, l: u64) -> u64 {
         self.entries[(l >> (64 - MULTI_BITS)) as usize]
     }
 
     /// Number of symbols packed in `entry` (0 ⇒ fallback).
     #[inline(always)]
-    pub fn count(entry: u32) -> usize {
-        ((entry >> 20) & 0x7) as usize
+    pub fn count(entry: u64) -> usize {
+        ((entry >> 32) & 0x7) as usize
     }
 
     /// Total bits the packed symbols consume.
     #[inline(always)]
-    pub fn consumed(entry: u32) -> u32 {
-        (entry >> 23) & 0x1F
+    pub fn consumed(entry: u64) -> u32 {
+        ((entry >> 35) & 0x1F) as u32
     }
 
     /// `k`-th packed symbol (k < count).
     #[inline(always)]
-    pub fn sym(entry: u32, k: usize) -> u8 {
-        ((entry >> (5 * k)) & MULTI_SYM_MASK) as u8
+    pub fn sym(entry: u64, k: usize) -> u8 {
+        (entry >> (8 * k)) as u8
+    }
+
+    /// All four symbol byte lanes at once (valid when count == 4) — the
+    /// operand of [`crate::codec::simd::assemble4`]/`assemble16`.
+    #[inline(always)]
+    pub fn sym_bytes(entry: u64) -> u32 {
+        entry as u32
     }
 
     /// Fraction of entries that decode ≥ `k` symbols (diagnostics).
@@ -411,6 +427,14 @@ mod tests {
         if count > 0 {
             assert_eq!(MultiLut::consumed(e), used, "consumed of window {w:#x}");
             assert!(used <= MULTI_BITS);
+        }
+        // the byte-lane view must agree with the per-symbol view
+        for k in 0..count {
+            assert_eq!(
+                (MultiLut::sym_bytes(e) >> (8 * k)) as u8,
+                MultiLut::sym(e, k),
+                "sym_bytes lane {k} of window {w:#x}"
+            );
         }
     }
 

@@ -6,12 +6,16 @@
 //! The request path is zero-copy: each layer's tensors are decoded into
 //! the shared arena and PJRT borrows them in place — no per-forward blob
 //! clones and no per-tensor `to_vec` (both existed before the arena).
-//! [`LlmExecutor::forward_prefetch`] additionally decodes layer ℓ+1 on a
-//! background thread while layer ℓ executes (decode-ahead double
-//! buffering); its logits are bit-identical to [`LlmExecutor::forward`].
+//! [`LlmExecutor::forward_prefetch`] additionally runs the coordinator's
+//! decode-ahead stage ([`crate::coordinator::decode_stage`]): layer ℓ+1's
+//! tensors decode as per-tensor work items on the shared pool while layer
+//! ℓ executes; its logits are bit-identical to [`LlmExecutor::forward`].
 
 use super::pjrt::{Artifact, Input, PjrtRuntime};
 use crate::codec::Ecf8Blob;
+use crate::coordinator::decode_stage::{self, DEFAULT_DECODE_WINDOW};
+use crate::coordinator::metrics::SharedStageMetrics;
+use crate::coordinator::server::BatchEngine;
 use crate::model::config::ModelConfig;
 use crate::model::store::CompressedModel;
 use crate::tensormgr::JitDecompressor;
@@ -40,6 +44,9 @@ pub struct LlmExecutor {
     pub cfg: ModelConfig,
     pub model: CompressedModel,
     jit: JitDecompressor,
+    /// shared pool: block-parallel foreground decode *and* the decode
+    /// stage's per-tensor work items
+    pool: Option<Arc<ThreadPool>>,
     prefix: &'static str,
     /// forward counters
     pub forwards: u64,
@@ -93,12 +100,13 @@ impl LlmExecutor {
         // arena sized so a whole layer (and the largest single tensor)
         // fits without request-path reallocation
         let buffer_bytes = model.max_tensor_bytes().max(model.max_layer_bytes());
-        let jit = JitDecompressor::new(buffer_bytes, pool);
+        let jit = JitDecompressor::new(buffer_bytes, pool.clone());
         Ok(Self {
             rt,
             cfg,
             model,
             jit,
+            pool,
             prefix,
             forwards: 0,
         })
@@ -208,10 +216,22 @@ impl LlmExecutor {
     }
 
     /// Decode-ahead forward: bit-identical logits to [`Self::forward`],
-    /// with layer ℓ+1's tensors decoding on a background thread while
-    /// layer ℓ executes (see
-    /// [`JitDecompressor::with_layers_decoded`]).
+    /// with layer ℓ+1's tensors decoding as per-tensor work items while
+    /// layer ℓ executes (the coordinator pipeline's decode stage — see
+    /// [`decode_stage::with_stages_decoded`]).
     pub fn forward_prefetch(&mut self, tokens: &[i32], batch: usize) -> Result<Vec<f32>> {
+        self.forward_prefetch_observed(tokens, batch, None)
+    }
+
+    /// [`Self::forward_prefetch`] with an optional decode-stage metrics
+    /// observer (stage latency histogram + ready-queue depth) — the hook
+    /// the pipelined server attaches.
+    pub fn forward_prefetch_observed(
+        &mut self,
+        tokens: &[i32],
+        batch: usize,
+        observer: Option<&SharedStageMetrics>,
+    ) -> Result<Vec<f32>> {
         assert_eq!(tokens.len(), batch * SEQ_LEN, "token count");
         let d = self.cfg.hidden as i64;
         let v = self.cfg.vocab as i64;
@@ -239,8 +259,14 @@ impl LlmExecutor {
         let ones_d = vec![1.0f32; d as usize];
         let mut x: Vec<f32> = Vec::new();
         let mut logits: Vec<f32> = Vec::new();
-        self.jit
-            .with_layers_decoded(&stages, |stage, arena| -> Result<()> {
+        let pool = self.pool.clone();
+        decode_stage::with_stages_decoded(
+            &mut self.jit,
+            pool.as_deref(),
+            DEFAULT_DECODE_WINDOW,
+            &stages,
+            observer,
+            |stage, arena| -> Result<()> {
                 if stage == 0 {
                     x = embed_art.run_f32(&[
                         Input::I32(tokens.to_vec(), vec![b, t]),
@@ -259,7 +285,8 @@ impl LlmExecutor {
                     ])?;
                 }
                 Ok(())
-            })?;
+            },
+        )?;
         self.forwards += 1;
         Ok(logits)
     }
@@ -331,6 +358,27 @@ impl LlmExecutor {
     /// JIT decompression statistics.
     pub fn jit_stats(&self) -> crate::tensormgr::jit::JitStats {
         self.jit.stats()
+    }
+}
+
+impl BatchEngine for LlmExecutor {
+    fn vocab(&self) -> usize {
+        self.cfg.vocab
+    }
+
+    fn run_batch(&mut self, tokens: &[i32], batch: usize) -> Result<Vec<f32>> {
+        self.forward(tokens, batch)
+    }
+
+    /// The pipelined coordinator's execute stage overlaps per-tensor
+    /// decode with PJRT compute (bit-identical to [`Self::forward`]).
+    fn run_batch_ahead(
+        &mut self,
+        tokens: &[i32],
+        batch: usize,
+        observer: Option<&SharedStageMetrics>,
+    ) -> Result<Vec<f32>> {
+        self.forward_prefetch_observed(tokens, batch, observer)
     }
 }
 

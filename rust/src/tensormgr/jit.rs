@@ -6,7 +6,7 @@
 //! into device buffers at execute time, matching the paper's
 //! "buffer becomes available after the layer's forward pass").
 //!
-//! Three access patterns, cheapest last:
+//! Two access patterns, cheapest last:
 //!
 //! * [`JitDecompressor::with_decoded`] — decode one tensor, borrow it
 //!   inside a closure (the original API; callers that need the bytes
@@ -15,25 +15,25 @@
 //!   [`JitDecompressor::decode_to_arena`] /
 //!   [`JitDecompressor::arena`]) — decode a whole layer into the shared
 //!   buffer and hand out `Range` handles, so every weight of the layer
-//!   can be *borrowed* simultaneously with zero copies;
-//! * decode-ahead ([`JitDecompressor::with_layers_decoded`]) — a
-//!   background thread decodes layer ℓ+1 into a second arena while the
-//!   caller's closure executes layer ℓ (double buffering, the standard
-//!   latency-hiding move). The ahead-decoder runs serially on its own
-//!   thread — block-parallel decode there would contend with the
-//!   executing layer's compute.
+//!   can be *borrowed* simultaneously with zero copies.
 //!
-//! All paths share one [`DecodeTables`] cache keyed by code book, so the
+//! Decode-*ahead* (layer ℓ+1 decoding while layer ℓ executes) is no
+//! longer implemented here: it moved to the serving coordinator's decode
+//! stage ([`crate::coordinator::decode_stage`]), which pulls per-tensor
+//! decode work off the shared thread pool and recycles the
+//! [`LayerArena`]s this module still owns (via
+//! [`JitDecompressor::decode_ahead_parts`]).
+//!
+//! All paths share one [`DecodeTableCache`] keyed by code book, so the
 //! multi-symbol LUT tiers are built once per distinct book (layers often
 //! share books) instead of once per decode call.
 
 use super::buffer::DecodeBuffer;
-use crate::codec::decode::{decode_into_cached, DecodeTables};
+use crate::codec::decode::{decode_into_cached, DecodeTableCache, DecodeTables};
 use crate::codec::Ecf8Blob;
 use crate::util::threadpool::ThreadPool;
-use std::collections::HashMap;
 use std::ops::Range;
-use std::sync::{mpsc, Arc};
+use std::sync::Arc;
 
 /// Decompression statistics (per model forward).
 #[derive(Debug, Default, Clone, Copy)]
@@ -45,8 +45,9 @@ pub struct JitStats {
     pub decode_seconds: f64,
 }
 
-/// One decoded layer handed to the [`JitDecompressor::with_layers_decoded`]
-/// consumer: a private arena plus per-tensor extents, in blob order.
+/// One decoded pipeline stage (a layer's worth of tensors): a private
+/// arena plus per-tensor extents, in blob order. Filled by the
+/// coordinator's decode stage, borrowed by the executor.
 #[derive(Default)]
 pub struct LayerArena {
     buf: Vec<u8>,
@@ -54,29 +55,64 @@ pub struct LayerArena {
 }
 
 impl LayerArena {
-    fn decode_layer(
-        &mut self,
-        blobs: &[&Ecf8Blob],
-        pool: Option<&ThreadPool>,
-        tables: &HashMap<Vec<u8>, Arc<DecodeTables>>,
-    ) {
+    /// Lay out the arena for `blobs`: per-tensor extents computed, backing
+    /// store grown if needed (steady state: no allocation — arenas are
+    /// recycled across forwards at the model's high-water mark).
+    pub fn prepare(&mut self, blobs: &[&Ecf8Blob]) {
         self.ends.clear();
-        let total: usize = blobs.iter().map(|b| b.n_elem).sum();
-        if self.buf.len() < total {
-            self.buf.resize(total, 0);
-        }
         let mut off = 0usize;
         for blob in blobs {
-            let t = tables
-                .get(&blob.code_lengths)
-                .expect("tables prebuilt for every code book");
-            decode_into_cached(blob, &mut self.buf[off..off + blob.n_elem], pool, t);
             off += blob.n_elem;
             self.ends.push(off);
         }
+        if self.buf.len() < off {
+            self.buf.resize(off, 0);
+        }
     }
 
-    /// Decoded bytes of the `i`-th blob of this layer.
+    /// Decode every tensor of the stage into its extent. With a pool,
+    /// each tensor is an independent work item (the coordinator pipeline's
+    /// per-tensor decode granularity); tensors write disjoint extents, so
+    /// they parallelise without coordination. Serial without a pool.
+    pub fn decode_stage_tensors(
+        &mut self,
+        blobs: &[&Ecf8Blob],
+        tables: &[Arc<DecodeTables>],
+        pool: Option<&ThreadPool>,
+    ) {
+        assert_eq!(blobs.len(), tables.len(), "one table set per blob");
+        self.prepare(blobs);
+        let ends = &self.ends;
+        // SAFETY-SUPPORT: hand workers the base address; extents
+        // [start_i, ends[i]) are disjoint and in-bounds by construction
+        // in `prepare` (same contract as the block-parallel decoder).
+        let base_addr = self.buf.as_mut_ptr() as usize;
+        let decode_one = |i: usize| {
+            let start = if i == 0 { 0 } else { ends[i - 1] };
+            let len = ends[i] - start;
+            // SAFETY: extents are disjoint across i and within the
+            // buffer; no other code touches the buffer while this runs.
+            let dst =
+                unsafe { std::slice::from_raw_parts_mut((base_addr as *mut u8).add(start), len) };
+            decode_into_cached(blobs[i], dst, None, &tables[i]);
+        };
+        match pool {
+            Some(pool) if blobs.len() > 1 => {
+                pool.scope_chunks(blobs.len(), blobs.len(), |_, s, e| {
+                    for i in s..e {
+                        decode_one(i);
+                    }
+                });
+            }
+            _ => {
+                for i in 0..blobs.len() {
+                    decode_one(i);
+                }
+            }
+        }
+    }
+
+    /// Decoded bytes of the `i`-th blob of this stage.
     pub fn tensor(&self, i: usize) -> &[u8] {
         let start = if i == 0 { 0 } else { self.ends[i - 1] };
         &self.buf[start..self.ends[i]]
@@ -98,9 +134,9 @@ pub struct JitDecompressor {
     pool: Option<Arc<ThreadPool>>,
     stats: JitStats,
     /// decode tiers per canonical code book (keyed by stored lengths)
-    tables: HashMap<Vec<u8>, Arc<DecodeTables>>,
-    /// recycled decode-ahead ping-pong buffers, so steady-state
-    /// [`Self::with_layers_decoded`] calls allocate nothing
+    tables: DecodeTableCache,
+    /// recycled decode-ahead arenas, so steady-state pipelined forwards
+    /// allocate nothing (filled/drained by the coordinator decode stage)
     spare_arenas: Vec<LayerArena>,
 }
 
@@ -112,17 +148,29 @@ impl JitDecompressor {
             buffer: DecodeBuffer::with_capacity(buffer_bytes),
             pool,
             stats: JitStats::default(),
-            tables: HashMap::new(),
+            tables: DecodeTableCache::new(),
             spare_arenas: Vec::new(),
         }
     }
 
     /// Cached decode tiers for `blob`'s code book (built on first use).
-    fn tables_for(&mut self, blob: &Ecf8Blob) -> Arc<DecodeTables> {
-        self.tables
-            .entry(blob.code_lengths.clone())
-            .or_insert_with(|| Arc::new(DecodeTables::build(blob)))
-            .clone()
+    pub fn tables_for(&mut self, blob: &Ecf8Blob) -> Arc<DecodeTables> {
+        self.tables.get_or_build(blob)
+    }
+
+    /// The pieces the coordinator's decode-ahead stage needs: the shared
+    /// table cache and the recycled arena pool. Split-borrowed so callers
+    /// can hold blob borrows of the model at the same time.
+    pub fn decode_ahead_parts(&mut self) -> (&mut DecodeTableCache, &mut Vec<LayerArena>) {
+        (&mut self.tables, &mut self.spare_arenas)
+    }
+
+    /// Account decode-ahead work performed on this decompressor's behalf
+    /// (the decode stage hides its wall time behind compute, so only
+    /// volume counters move).
+    pub fn record_decoded(&mut self, tensors: u64, bytes: u64) {
+        self.stats.tensors_decoded += tensors;
+        self.stats.bytes_decoded += bytes;
     }
 
     /// Decode `blob` into the shared buffer and run `consume` on the
@@ -130,7 +178,7 @@ impl JitDecompressor {
     /// this returns.
     pub fn with_decoded<R>(&mut self, blob: &Ecf8Blob, consume: impl FnOnce(&[u8]) -> R) -> R {
         let t0 = std::time::Instant::now();
-        let tables = self.tables_for(blob);
+        let tables = self.tables.get_or_build(blob);
         let pool = self.pool.clone();
         let dst = self.buffer.slice_mut(blob.n_elem);
         decode_into_cached(blob, dst, pool.as_deref(), &tables);
@@ -162,7 +210,7 @@ impl JitDecompressor {
     /// valid — index [`Self::arena`] with the returned ranges.
     pub fn decode_to_arena(&mut self, blob: &Ecf8Blob) -> Range<usize> {
         let t0 = std::time::Instant::now();
-        let tables = self.tables_for(blob);
+        let tables = self.tables.get_or_build(blob);
         let pool = self.pool.clone();
         let (range, dst) = self.buffer.alloc_mut(blob.n_elem);
         decode_into_cached(blob, dst, pool.as_deref(), &tables);
@@ -176,82 +224,6 @@ impl JitDecompressor {
     /// [`Self::decode_to_arena`]).
     pub fn arena(&self) -> &[u8] {
         self.buffer.bytes()
-    }
-
-    /// Decode-ahead over a sequence of layers: a background thread keeps
-    /// one [`LayerArena`] decoded ahead of the consumer (two arenas
-    /// ping-pong through channels), so layer ℓ+1's decode overlaps layer
-    /// ℓ's `consume`. Returns the consumer's results, or its first error
-    /// (the decoder thread winds down when the channels drop).
-    pub fn with_layers_decoded<R, E>(
-        &mut self,
-        layers: &[Vec<&Ecf8Blob>],
-        mut consume: impl FnMut(usize, &LayerArena) -> Result<R, E>,
-    ) -> Result<Vec<R>, E> {
-        // Build every code book's tiers up front so the decoder thread
-        // only reads the cache.
-        for layer in layers {
-            for blob in layer {
-                self.tables_for(blob);
-            }
-        }
-        let tables = &self.tables;
-        // double buffer: decode of layer l+1 overlaps consume(l); reuse
-        // the buffers recovered from the previous call (steady state:
-        // zero allocation on the request path)
-        let mut seed_arenas = std::mem::take(&mut self.spare_arenas);
-        seed_arenas.truncate(2);
-        while seed_arenas.len() < 2 {
-            seed_arenas.push(LayerArena::default());
-        }
-        let mut results = Vec::with_capacity(layers.len());
-        let scope_out: Result<Vec<LayerArena>, E> = std::thread::scope(|s| {
-            let (full_tx, full_rx) = mpsc::channel::<LayerArena>();
-            let (free_tx, free_rx) = mpsc::channel::<LayerArena>();
-            for arena in seed_arenas {
-                free_tx.send(arena).expect("fresh channel");
-            }
-            let decoder = s.spawn(move || {
-                for layer in layers {
-                    // consumer hung up (error path) => stop decoding
-                    let Ok(mut arena) = free_rx.recv() else {
-                        return Vec::new();
-                    };
-                    arena.decode_layer(layer, None, tables);
-                    if full_tx.send(arena).is_err() {
-                        return Vec::new();
-                    }
-                }
-                // recover the ping-pong buffers for the next call: drain
-                // until the consumer drops its sender
-                let mut leftover = Vec::new();
-                while let Ok(arena) = free_rx.recv() {
-                    leftover.push(arena);
-                }
-                leftover
-            });
-            for l in 0..layers.len() {
-                let arena = full_rx.recv().expect("decoder thread alive");
-                match consume(l, &arena) {
-                    Ok(r) => results.push(r),
-                    // dropping free_tx/full_rx unblocks the decoder (the
-                    // recycled buffers are lost on this path — fine, the
-                    // next call reallocates)
-                    Err(e) => return Err(e),
-                }
-                let _ = free_tx.send(arena);
-            }
-            drop(free_tx);
-            Ok(decoder.join().expect("decoder thread panicked"))
-        });
-        self.spare_arenas = scope_out?;
-        for layer in layers {
-            for blob in layer {
-                self.stats.tensors_decoded += 1;
-                self.stats.bytes_decoded += blob.n_elem as u64;
-            }
-        }
-        Ok(results)
     }
 
     pub fn stats(&self) -> JitStats {
@@ -356,60 +328,47 @@ mod tests {
     }
 
     #[test]
-    fn decode_ahead_layers_bit_exact() {
+    fn layer_arena_decodes_tensors_bit_exact_serial_and_parallel() {
         let (d1, b1) = blob(8_000, 10);
         let (d2, b2) = blob(3_000, 11);
         let (d3, b3) = blob(5_000, 12);
-        let (d4, b4) = blob(1_000, 13);
-        let mut jit = JitDecompressor::new(0, None);
-        let layers: Vec<Vec<&Ecf8Blob>> = vec![vec![&b1, &b2], vec![&b3], vec![&b4]];
-        let expect: Vec<Vec<&[u8]>> =
-            vec![vec![&d1[..], &d2[..]], vec![&d3[..]], vec![&d4[..]]];
-        let sizes = jit
-            .with_layers_decoded(&layers, |l, arena| -> Result<usize, String> {
-                assert_eq!(arena.len(), expect[l].len(), "layer {l}");
-                for (i, want) in expect[l].iter().enumerate() {
-                    assert_eq!(arena.tensor(i), *want, "layer {l} tensor {i}");
-                }
-                Ok(arena.tensor(0).len())
-            })
-            .unwrap();
-        assert_eq!(sizes, vec![8_000, 3_000, 5_000]);
-        assert_eq!(jit.stats().tensors_decoded, 4);
-        assert_eq!(jit.stats().bytes_decoded, 17_000);
-        // second pass reuses the recycled ping-pong arenas (steady-state
-        // zero-allocation path) and stays bit-exact
-        let again = jit
-            .with_layers_decoded(&layers, |l, arena| -> Result<(), String> {
-                for (i, want) in expect[l].iter().enumerate() {
-                    assert_eq!(arena.tensor(i), *want, "pass 2 layer {l} tensor {i}");
-                }
-                Ok(())
-            })
-            .unwrap();
-        assert_eq!(again.len(), 3);
-        assert_eq!(jit.stats().tensors_decoded, 8);
+        let blobs: Vec<&Ecf8Blob> = vec![&b1, &b2, &b3];
+        let mut cache = DecodeTableCache::new();
+        let tables: Vec<Arc<DecodeTables>> =
+            blobs.iter().map(|b| cache.get_or_build(b)).collect();
+
+        let mut arena = LayerArena::default();
+        arena.decode_stage_tensors(&blobs, &tables, None);
+        assert_eq!(arena.len(), 3);
+        assert_eq!(arena.tensor(0), &d1[..]);
+        assert_eq!(arena.tensor(1), &d2[..]);
+        assert_eq!(arena.tensor(2), &d3[..]);
+
+        let pool = ThreadPool::new(3);
+        let mut par = LayerArena::default();
+        par.decode_stage_tensors(&blobs, &tables, Some(&pool));
+        assert_eq!(par.tensor(0), &d1[..]);
+        assert_eq!(par.tensor(1), &d2[..]);
+        assert_eq!(par.tensor(2), &d3[..]);
+
+        // recycling with a different stage shape stays exact
+        par.decode_stage_tensors(&[&b2], &tables[1..2], Some(&pool));
+        assert_eq!(par.len(), 1);
+        assert_eq!(par.tensor(0), &d2[..]);
     }
 
     #[test]
-    fn decode_ahead_consumer_error_shuts_down_cleanly() {
+    fn decode_ahead_parts_share_table_cache() {
         let (_, b1) = blob(2_000, 14);
-        let (_, b2) = blob(2_000, 15);
         let mut jit = JitDecompressor::new(0, None);
-        let layers: Vec<Vec<&Ecf8Blob>> = vec![vec![&b1], vec![&b2], vec![&b1]];
-        let err = jit
-            .with_layers_decoded(&layers, |l, _| -> Result<(), String> {
-                if l == 1 {
-                    Err("boom".to_string())
-                } else {
-                    Ok(())
-                }
-            })
-            .unwrap_err();
-        assert_eq!(err, "boom");
-        // must return (not deadlock) and the decompressor stays usable
-        jit.begin_layer();
-        let r = jit.decode_to_arena(&b1);
-        assert_eq!(r.len(), 2_000);
+        let t1 = jit.tables_for(&b1);
+        let (cache, spares) = jit.decode_ahead_parts();
+        let t2 = cache.get_or_build(&b1);
+        assert!(Arc::ptr_eq(&t1, &t2), "same cached tables");
+        assert!(spares.is_empty());
+        spares.push(LayerArena::default());
+        jit.record_decoded(1, 2_000);
+        assert_eq!(jit.stats().tensors_decoded, 1);
+        assert_eq!(jit.stats().bytes_decoded, 2_000);
     }
 }

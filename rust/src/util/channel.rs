@@ -1,0 +1,302 @@
+//! Bounded MPMC channel (substrate: no `crossbeam` in the offline
+//! registry). The serving pipeline's stage connectors: a blocking `send`
+//! is the backpressure mechanism — a producer stage stalls when the
+//! consumer stage falls `capacity` batches behind, which bounds every
+//! queue in the pipeline by construction.
+//!
+//! Built on `Mutex<VecDeque>` + two condvars (not-empty / not-full).
+//! Channels close when every `Sender` *or* every `Receiver` is dropped;
+//! senders see `Err` once no receiver can ever take the value, receivers
+//! drain remaining values before seeing `Err`.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct State<T> {
+    queue: VecDeque<T>,
+    senders: usize,
+    receivers: usize,
+    /// high-water mark of queue depth (backpressure diagnostics)
+    peak_depth: usize,
+}
+
+struct Inner<T> {
+    state: Mutex<State<T>>,
+    capacity: usize,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+/// Create a bounded channel of the given capacity (≥ 1 enforced).
+pub fn bounded<T>(capacity: usize) -> (Sender<T>, Receiver<T>) {
+    let inner = Arc::new(Inner {
+        state: Mutex::new(State {
+            queue: VecDeque::new(),
+            senders: 1,
+            receivers: 1,
+            peak_depth: 0,
+        }),
+        capacity: capacity.max(1),
+        not_empty: Condvar::new(),
+        not_full: Condvar::new(),
+    });
+    (
+        Sender {
+            inner: Arc::clone(&inner),
+        },
+        Receiver { inner },
+    )
+}
+
+/// Error returned by [`Sender::send`] when the channel is closed; carries
+/// the rejected value back to the caller.
+#[derive(Debug, PartialEq, Eq)]
+pub struct SendError<T>(pub T);
+
+/// Error returned by [`Receiver::recv`] when the channel is closed and
+/// drained.
+#[derive(Debug, PartialEq, Eq)]
+pub struct RecvError;
+
+pub struct Sender<T> {
+    inner: Arc<Inner<T>>,
+}
+
+pub struct Receiver<T> {
+    inner: Arc<Inner<T>>,
+}
+
+impl<T> Sender<T> {
+    /// Blocking send: waits while the queue is full (the backpressure
+    /// stall). Fails only when every receiver is gone.
+    pub fn send(&self, value: T) -> Result<(), SendError<T>> {
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if st.receivers == 0 {
+                return Err(SendError(value));
+            }
+            if st.queue.len() < self.inner.capacity {
+                st.queue.push_back(value);
+                st.peak_depth = st.peak_depth.max(st.queue.len());
+                self.inner.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.inner.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking send; `Err` carries the value back whether the queue
+    /// is full or the channel closed.
+    pub fn try_send(&self, value: T) -> Result<(), SendError<T>> {
+        let mut st = self.inner.state.lock().unwrap();
+        if st.receivers == 0 || st.queue.len() >= self.inner.capacity {
+            return Err(SendError(value));
+        }
+        st.queue.push_back(value);
+        st.peak_depth = st.peak_depth.max(st.queue.len());
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Current queue depth (snapshot).
+    pub fn len(&self) -> usize {
+        self.inner.state.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive: waits for a value; drains buffered values even
+    /// after all senders dropped, then reports closure.
+    pub fn recv(&self) -> Result<T, RecvError> {
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if let Some(v) = st.queue.pop_front() {
+                self.inner.not_full.notify_one();
+                return Ok(v);
+            }
+            if st.senders == 0 {
+                return Err(RecvError);
+            }
+            st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking receive: `None` when empty (channel may still be
+    /// open) — pair with [`Receiver::is_closed`] to distinguish.
+    pub fn try_recv(&self) -> Option<T> {
+        let mut st = self.inner.state.lock().unwrap();
+        let v = st.queue.pop_front();
+        if v.is_some() {
+            self.inner.not_full.notify_one();
+        }
+        v
+    }
+
+    /// True when every sender is gone (buffered values may remain).
+    pub fn is_closed(&self) -> bool {
+        self.inner.state.lock().unwrap().senders == 0
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.state.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Deepest the queue has ever been (bounded by capacity — the
+    /// backpressure invariant the channel tests pin).
+    pub fn peak_depth(&self) -> usize {
+        self.inner.state.lock().unwrap().peak_depth
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.inner.state.lock().unwrap().senders += 1;
+        Self {
+            inner: Arc::clone(&self.inner),
+        }
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        self.inner.state.lock().unwrap().receivers += 1;
+        Self {
+            inner: Arc::clone(&self.inner),
+        }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut st = self.inner.state.lock().unwrap();
+        st.senders -= 1;
+        if st.senders == 0 {
+            // wake receivers so they observe closure
+            self.inner.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        let mut st = self.inner.state.lock().unwrap();
+        st.receivers -= 1;
+        if st.receivers == 0 {
+            // wake blocked senders so they observe closure
+            self.inner.not_full.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order_and_capacity() {
+        let (tx, rx) = bounded::<u32>(4);
+        for i in 0..4 {
+            tx.send(i).unwrap();
+        }
+        assert_eq!(tx.len(), 4);
+        assert_eq!(tx.try_send(99), Err(SendError(99)), "full queue rejects");
+        for i in 0..4 {
+            assert_eq!(rx.recv(), Ok(i));
+        }
+        assert_eq!(rx.try_recv(), None);
+        assert_eq!(rx.peak_depth(), 4);
+    }
+
+    #[test]
+    fn blocking_send_resumes_on_recv() {
+        let (tx, rx) = bounded::<u32>(1);
+        tx.send(0).unwrap();
+        let t = std::thread::spawn(move || {
+            tx.send(1).unwrap(); // blocks until the main thread recvs
+            tx.send(2).unwrap();
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(rx.recv(), Ok(0));
+        assert_eq!(rx.recv(), Ok(1));
+        assert_eq!(rx.recv(), Ok(2));
+        t.join().unwrap();
+        assert!(rx.is_closed());
+        assert_eq!(rx.recv(), Err(RecvError));
+    }
+
+    #[test]
+    fn drop_receiver_fails_send() {
+        let (tx, rx) = bounded::<u32>(1);
+        drop(rx);
+        assert_eq!(tx.send(7), Err(SendError(7)));
+    }
+
+    #[test]
+    fn drop_all_senders_drains_then_closes() {
+        let (tx, rx) = bounded::<u32>(2);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv(), Ok(1));
+        assert_eq!(rx.recv(), Ok(2));
+        assert_eq!(rx.recv(), Err(RecvError));
+    }
+
+    #[test]
+    fn depth_never_exceeds_capacity_under_contention() {
+        let (tx, rx) = bounded::<usize>(3);
+        let producer = {
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                for i in 0..200 {
+                    tx.send(i).unwrap();
+                }
+            })
+        };
+        drop(tx);
+        let mut got = Vec::new();
+        while let Ok(v) = rx.recv() {
+            got.push(v);
+        }
+        producer.join().unwrap();
+        assert_eq!(got, (0..200).collect::<Vec<_>>());
+        assert!(rx.peak_depth() <= 3, "bounded send overfilled the queue");
+    }
+
+    #[test]
+    fn mpmc_every_value_delivered_once() {
+        let (tx, rx) = bounded::<usize>(2);
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let rx = rx.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Ok(v) = rx.recv() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        drop(rx);
+        for i in 0..120 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let mut all: Vec<usize> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..120).collect::<Vec<_>>());
+    }
+}

@@ -2,6 +2,7 @@
 //! lacks the usual crates (`rand`, `rayon`, `clap`, `proptest`). See
 //! DESIGN.md "Substitutions".
 
+pub mod channel;
 pub mod cli;
 pub mod crc32;
 pub mod humanize;

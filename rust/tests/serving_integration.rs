@@ -1,15 +1,19 @@
 //! Serving-stack integration: coordinator + batcher + scheduler + runtime
-//! under load, and the FP8-vs-ECF8 capacity mechanism end to end.
+//! under load, the FP8-vs-ECF8 capacity mechanism end to end, and the
+//! pipelined coordinator against the serial-tick reference (bit-identical
+//! responses, bounded queues under backpressure).
 
+use ecf8::coordinator::pipeline::{PipelineConfig, PipelinedServer, SyntheticEngine};
 use ecf8::coordinator::scheduler::ServingPlan;
 use ecf8::coordinator::server::{ServeConfig, Server};
-use ecf8::coordinator::Request;
+use ecf8::coordinator::{Request, Response};
 use ecf8::model::config::tiny_llm;
 use ecf8::model::store::CompressedModel;
 use ecf8::runtime::executor::{LlmExecutor, SEQ_LEN};
 use ecf8::runtime::pjrt::PjrtRuntime;
 use ecf8::util::prng::Xoshiro256;
 use ecf8::util::threadpool::ThreadPool;
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -87,6 +91,145 @@ fn identical_requests_get_identical_logits_across_batches() {
     for ((a, b), i) in full[0].logits.iter().zip(&padded[0].logits).zip(0..) {
         assert_eq!(a.to_bits(), b.to_bits(), "logit {i}");
     }
+}
+
+use ecf8::bench_support::seeded_requests as make_requests;
+
+fn assert_bit_identical(got: &[Response], want: &[Response]) {
+    assert_eq!(got.len(), want.len());
+    let by_id: HashMap<u64, &Response> = want.iter().map(|r| (r.id, r)).collect();
+    for g in got {
+        let w = by_id.get(&g.id).expect("id served by reference");
+        assert_eq!(g.batch_size, w.batch_size, "req {} batch size", g.id);
+        assert_eq!(g.logits.len(), w.logits.len(), "req {}", g.id);
+        for (i, (a, b)) in g.logits.iter().zip(&w.logits).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "req {} logit {i}", g.id);
+        }
+    }
+}
+
+/// Pipelined coordinator == serial tick loop, bit for bit, across full
+/// batches and the padded drain chunk (synthetic engine: runs everywhere,
+/// no artifacts needed — the engine is a pure function of the padded
+/// token matrix, so any scheduling difference would show up in the bits).
+#[test]
+fn pipelined_responses_bit_identical_to_serial_tick() {
+    let vocab = 128;
+    let cfg = ServeConfig {
+        max_batch: 4,
+        linger: Duration::from_secs(60), // deterministic: full batches + drain
+    };
+    let reqs = make_requests(27, vocab, 1234);
+
+    let mut serial = Server::new(SyntheticEngine::instant(vocab), cfg);
+    for r in &reqs {
+        serial.submit(r.clone());
+    }
+    let mut want = Vec::new();
+    loop {
+        let got = serial.tick().unwrap();
+        if got.is_empty() {
+            break;
+        }
+        want.extend(got);
+    }
+    want.extend(serial.drain().unwrap());
+
+    let pipelined = PipelinedServer::new(SyntheticEngine::instant(vocab), PipelineConfig::new(cfg));
+    for r in &reqs {
+        pipelined.submit(r.clone());
+    }
+    let report = pipelined.shutdown().unwrap();
+    assert_bit_identical(&report.responses, &want);
+    assert_eq!(report.metrics.requests_served, 27);
+    // 27 requests at max_batch 4 ⇒ 6 full batches + 1 drain chunk of 3,
+    // identically on both coordinators
+    assert_eq!(report.metrics.batches_executed, 7);
+    assert_eq!(report.stages.execute.snapshot().events, 7);
+    assert_eq!(report.stages.admission.snapshot().events, 7);
+}
+
+/// Backpressure: with a slow engine and a capacity-2 batch queue, the
+/// formed-batch queue depth never exceeds the bound while every request
+/// is still answered exactly once.
+#[test]
+fn backpressure_bounds_queue_depth_under_slow_engine() {
+    let vocab = 16;
+    let mut cfg = PipelineConfig::new(ServeConfig {
+        max_batch: 2,
+        linger: Duration::ZERO,
+    });
+    cfg.batch_queue_cap = 2;
+    let engine = SyntheticEngine::with_costs(
+        vocab,
+        Duration::from_millis(1),
+        Duration::from_millis(2),
+    );
+    let server = PipelinedServer::new(engine, cfg);
+    let n = 40u64;
+    for r in make_requests(n, vocab, 99) {
+        server.submit(r);
+    }
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.metrics.requests_served, n);
+    let mut ids: Vec<u64> = report.responses.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n as usize, "every request answered exactly once");
+    let adm = report.stages.admission.snapshot();
+    assert!(
+        adm.queue_depth_peak <= 2,
+        "batch queue depth {} exceeded the backpressure bound",
+        adm.queue_depth_peak
+    );
+    // the decode stage was exercised once per executed batch
+    let dec = report.stages.decode.snapshot();
+    assert_eq!(dec.events, report.metrics.batches_executed);
+}
+
+/// Full-stack variant on the real model when artifacts exist: pipelined
+/// coordinator (decode-ahead through the coordinator decode stage) must
+/// match the serial server bit for bit.
+#[test]
+fn pipelined_real_model_matches_serial_when_artifacts_present() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: artifacts missing");
+        return;
+    };
+    let cfg = tiny_llm();
+    let vocab = cfg.vocab;
+    let serve = ServeConfig {
+        max_batch: 2,
+        linger: Duration::from_secs(60),
+    };
+    let reqs = make_requests(5, vocab, 31);
+
+    let model = CompressedModel::synthesize(&cfg, 24, None);
+    let ex = LlmExecutor::new(cfg.clone(), model, dir.clone(), None).unwrap();
+    let mut serial = Server::new(ex, serve);
+    for r in &reqs {
+        serial.submit(r.clone());
+    }
+    let mut want = Vec::new();
+    loop {
+        let got = serial.tick().unwrap();
+        if got.is_empty() {
+            break;
+        }
+        want.extend(got);
+    }
+    want.extend(serial.drain().unwrap());
+
+    let model = CompressedModel::synthesize(&cfg, 24, None);
+    let pool = Arc::new(ThreadPool::new(2));
+    let ex = LlmExecutor::new(cfg.clone(), model, dir, Some(pool)).unwrap();
+    let pipelined = PipelinedServer::new(ex, PipelineConfig::new(serve));
+    for r in &reqs {
+        pipelined.submit(r.clone());
+    }
+    let report = pipelined.shutdown().unwrap();
+    assert_bit_identical(&report.responses, &want);
+    assert!(report.stages.decode.snapshot().events > 0, "decode stage ran");
 }
 
 #[test]
