@@ -79,6 +79,108 @@ impl Codec for Deflate {
     }
 }
 
+// --- container-v2 registry adapters (`ext-codecs` builds) -----------------
+//
+// The same baselines also slot in behind the artifact-path codec seam
+// (`codec::codecs::Codec`), so a v2 store can carry zstd/deflate records
+// for comparisons. They are never chosen by the automatic entropy probe.
+
+#[cfg(feature = "ext-codecs")]
+impl crate::codec::codecs::Codec for Zstd {
+    fn id(&self) -> crate::codec::codecs::CodecId {
+        crate::codec::codecs::CodecId::Zstd
+    }
+
+    fn probe(&self, data: &[u8], _format: crate::codec::Fp8Format) -> crate::codec::codecs::Probe {
+        // no cheap analytic size model: compress a bounded sample and scale
+        let sample = &data[..data.len().min(1 << 18)];
+        let estimated_bytes = if sample.is_empty() {
+            16
+        } else {
+            let c = zstd::bulk::compress(sample, self.0).expect("zstd compress");
+            (c.len() as f64 * data.len() as f64 / sample.len() as f64) as usize
+        };
+        crate::codec::codecs::Probe {
+            codec: self.id(),
+            estimated_bytes,
+        }
+    }
+
+    fn encode_into(
+        &self,
+        data: &[u8],
+        _format: crate::codec::Fp8Format,
+        _params: Ecf8Params,
+        out: &mut Vec<u8>,
+    ) {
+        out.extend_from_slice(&zstd::bulk::compress(data, self.0).expect("zstd compress"));
+    }
+
+    fn decode_into(
+        &self,
+        payload: &[u8],
+        _format: crate::codec::Fp8Format,
+        dst: &mut [u8],
+        _pool: Option<&crate::util::threadpool::ThreadPool>,
+    ) -> Result<(), crate::codec::container::ContainerError> {
+        use crate::codec::container::ContainerError;
+        let v = zstd::bulk::decompress(payload, dst.len())
+            .map_err(|_| ContainerError::Inconsistent("zstd payload"))?;
+        if v.len() != dst.len() {
+            return Err(ContainerError::Inconsistent("zstd decoded length"));
+        }
+        dst.copy_from_slice(&v);
+        Ok(())
+    }
+}
+
+#[cfg(feature = "ext-codecs")]
+impl crate::codec::codecs::Codec for Deflate {
+    fn id(&self) -> crate::codec::codecs::CodecId {
+        crate::codec::codecs::CodecId::Deflate
+    }
+
+    fn probe(&self, data: &[u8], _format: crate::codec::Fp8Format) -> crate::codec::codecs::Probe {
+        let sample = &data[..data.len().min(1 << 18)];
+        let estimated_bytes = if sample.is_empty() {
+            16
+        } else {
+            let c = Codec::compress(self, sample);
+            (c.len() as f64 * data.len() as f64 / sample.len() as f64) as usize
+        };
+        crate::codec::codecs::Probe {
+            codec: crate::codec::codecs::CodecId::Deflate,
+            estimated_bytes,
+        }
+    }
+
+    fn encode_into(
+        &self,
+        data: &[u8],
+        _format: crate::codec::Fp8Format,
+        _params: Ecf8Params,
+        out: &mut Vec<u8>,
+    ) {
+        out.extend_from_slice(&Codec::compress(self, data));
+    }
+
+    fn decode_into(
+        &self,
+        payload: &[u8],
+        _format: crate::codec::Fp8Format,
+        dst: &mut [u8],
+        _pool: Option<&crate::util::threadpool::ThreadPool>,
+    ) -> Result<(), crate::codec::container::ContainerError> {
+        use crate::codec::container::ContainerError;
+        let v = Codec::decompress(self, payload, dst.len());
+        if v.len() != dst.len() {
+            return Err(ContainerError::Inconsistent("deflate decoded length"));
+        }
+        dst.copy_from_slice(&v);
+        Ok(())
+    }
+}
+
 /// ECF8 itself, through the [`Codec`] interface (serial decode; the
 /// benches exercise the parallel path separately).
 pub struct Ecf8Codec;

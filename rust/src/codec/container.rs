@@ -1,6 +1,7 @@
-//! On-disk / wire container for ECF8 blobs.
+//! On-disk / wire containers for ECF8 artifacts: the legacy v1 one-blob
+//! format, and the v2 sharded record format behind the codec registry.
 //!
-//! Layout (little-endian):
+//! ## v1 — one `.ecf8` file per tensor (little-endian)
 //!
 //! ```text
 //! 0    magic "ECF8"            4 bytes
@@ -23,13 +24,66 @@
 //! ..   packed                  packed_len bytes
 //! ..   encoded                 encoded_len bytes
 //! ```
+//!
+//! ## v2 — sharded model artifact with a binary tensor index
+//!
+//! A v2 model is a directory:
+//!
+//! ```text
+//! <model>/
+//!   index.ecf8i        binary tensor index (written last, CRC-trailed)
+//!   shard-0000.ecf8s   records back to back behind an 8-byte header
+//!   shard-0001.ecf8s   ...
+//! ```
+//!
+//! Shard header: `magic "ECS8" (4) | version u16 | shard_index u16`.
+//!
+//! Record — every tensor is independently decodable from its record
+//! alone (the header names the codec; the payload carries a CRC):
+//!
+//! ```text
+//! 0    magic "ECR8"    4 bytes
+//! 4    codec           u8   (CodecId — see codec::codecs)
+//! 5    format          u8   (Fp8Format)
+//! 6    flags           u16  (reserved, 0)
+//! 8    n_elem          u64
+//! 16   payload_len     u64
+//! 24   payload_crc32   u32
+//! 28   reserved        u32
+//! 32   payload         payload_len bytes
+//! ```
+//!
+//! Index: a fixed header, one entry per tensor (shape/role metadata plus
+//! the record's shard/offset/len and payload CRC), and a trailing CRC-32
+//! of every preceding byte. See [`TensorIndex`].
+//!
+//! Writers stream through [`std::io::Write`] ([`serialize_into`],
+//! [`ShardWriter`]); nothing larger than one tensor's payload is ever
+//! buffered. Readers operate on byte slices so callers can feed them
+//! from files, mmaps, or in-memory stores.
 
 use super::{Ecf8Blob, Ecf8Params, Fp8Format};
+use std::io::Write;
 
 pub const MAGIC: &[u8; 4] = b"ECF8";
 pub const VERSION: u16 = 1;
 /// Fixed header size (pre-code_lengths), for size accounting.
 pub const HEADER_BYTES: usize = 72;
+
+pub const SHARD_MAGIC: &[u8; 4] = b"ECS8";
+pub const RECORD_MAGIC: &[u8; 4] = b"ECR8";
+pub const INDEX_MAGIC: &[u8; 4] = b"ECI8";
+pub const V2_VERSION: u16 = 2;
+pub const SHARD_HEADER_BYTES: usize = 8;
+pub const RECORD_HEADER_BYTES: usize = 32;
+
+/// File name of the v2 binary tensor index inside a model directory.
+pub const INDEX_FILE: &str = "index.ecf8i";
+
+/// File name of shard `i` inside a model directory.
+pub fn shard_file_name(i: u32) -> String {
+    format!("shard-{i:04}.ecf8s")
+}
 
 #[derive(Debug)]
 pub enum ContainerError {
@@ -78,15 +132,26 @@ struct Cursor<'a> {
 
 impl<'a> Cursor<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8], ContainerError> {
-        if self.pos + n > self.data.len() {
+        // checked: `n` may come from an untrusted length field
+        let end = self
+            .pos
+            .checked_add(n)
+            .ok_or_else(|| ContainerError::Truncated {
+                need: usize::MAX,
+                have: self.data.len(),
+            })?;
+        if end > self.data.len() {
             return Err(ContainerError::Truncated {
-                need: self.pos + n,
+                need: end,
                 have: self.data.len(),
             });
         }
-        let s = &self.data[self.pos..self.pos + n];
-        self.pos += n;
+        let s = &self.data[self.pos..end];
+        self.pos = end;
         Ok(s)
+    }
+    fn remaining(&self) -> usize {
+        self.data.len() - self.pos
     }
     fn u16(&mut self) -> Result<u16, ContainerError> {
         Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
@@ -102,8 +167,19 @@ impl<'a> Cursor<'a> {
     }
 }
 
-/// Serialize a blob to container bytes.
-pub fn serialize(blob: &Ecf8Blob) -> Vec<u8> {
+/// Exact byte length [`serialize`] / [`serialize_into`] will produce.
+pub fn serialized_len(blob: &Ecf8Blob) -> usize {
+    HEADER_BYTES
+        + blob.code_lengths.len()
+        + blob.outpos.len() * 8
+        + blob.gaps.len()
+        + blob.packed.len()
+        + blob.encoded.len()
+}
+
+/// Stream a blob's container bytes into `w` (wrap file handles in a
+/// `BufWriter`; the per-field writes are small).
+pub fn serialize_into<W: Write>(blob: &Ecf8Blob, w: &mut W) -> std::io::Result<()> {
     let alphabet = blob.format.alphabet_size();
     assert_eq!(blob.code_lengths.len(), alphabet);
     let mut crc = crate::util::crc32::Hasher::new();
@@ -112,36 +188,37 @@ pub fn serialize(blob: &Ecf8Blob) -> Vec<u8> {
     crc.update(&blob.gaps);
     let crc = crc.finalize();
 
-    let mut out = Vec::with_capacity(
-        HEADER_BYTES
-            + alphabet
-            + blob.outpos.len() * 8
-            + blob.gaps.len()
-            + blob.packed.len()
-            + blob.encoded.len(),
-    );
-    out.extend_from_slice(MAGIC);
-    put_u16(&mut out, VERSION);
-    out.push(blob.format as u8);
-    out.push(alphabet as u8);
-    put_u64(&mut out, blob.n_elem as u64);
-    put_u32(&mut out, blob.params.bytes_per_thread as u32);
-    put_u32(&mut out, blob.params.threads_per_block as u32);
-    put_u64(&mut out, blob.n_blocks() as u64);
-    put_u64(&mut out, blob.encoded_bits);
-    put_u64(&mut out, blob.encoded.len() as u64);
-    put_u64(&mut out, blob.packed.len() as u64);
-    put_u64(&mut out, blob.gaps.len() as u64);
-    put_u32(&mut out, crc);
-    out.extend_from_slice(&[0u8; 4]); // reserved
-    debug_assert_eq!(out.len(), HEADER_BYTES);
-    out.extend_from_slice(&blob.code_lengths);
+    let mut head = Vec::with_capacity(HEADER_BYTES);
+    head.extend_from_slice(MAGIC);
+    put_u16(&mut head, VERSION);
+    head.push(blob.format as u8);
+    head.push(alphabet as u8);
+    put_u64(&mut head, blob.n_elem as u64);
+    put_u32(&mut head, blob.params.bytes_per_thread as u32);
+    put_u32(&mut head, blob.params.threads_per_block as u32);
+    put_u64(&mut head, blob.n_blocks() as u64);
+    put_u64(&mut head, blob.encoded_bits);
+    put_u64(&mut head, blob.encoded.len() as u64);
+    put_u64(&mut head, blob.packed.len() as u64);
+    put_u64(&mut head, blob.gaps.len() as u64);
+    put_u32(&mut head, crc);
+    head.extend_from_slice(&[0u8; 4]); // reserved
+    debug_assert_eq!(head.len(), HEADER_BYTES);
+    w.write_all(&head)?;
+    w.write_all(&blob.code_lengths)?;
     for &p in &blob.outpos {
-        put_u64(&mut out, p);
+        w.write_all(&p.to_le_bytes())?;
     }
-    out.extend_from_slice(&blob.gaps);
-    out.extend_from_slice(&blob.packed);
-    out.extend_from_slice(&blob.encoded);
+    w.write_all(&blob.gaps)?;
+    w.write_all(&blob.packed)?;
+    w.write_all(&blob.encoded)?;
+    Ok(())
+}
+
+/// Serialize a blob to container bytes.
+pub fn serialize(blob: &Ecf8Blob) -> Vec<u8> {
+    let mut out = Vec::with_capacity(serialized_len(blob));
+    serialize_into(blob, &mut out).expect("Vec<u8> writes are infallible");
     out
 }
 
@@ -172,7 +249,10 @@ pub fn deserialize(data: &[u8]) -> Result<Ecf8Blob, ContainerError> {
     let stored_crc = c.u32()?;
     let _reserved = c.take(4)?;
     let code_lengths = c.take(alphabet)?.to_vec();
-    let mut outpos = Vec::with_capacity(n_blocks + 1);
+    // cap the pre-allocation by what the input could actually hold, so a
+    // corrupt n_blocks cannot trigger a huge allocation (or an overflow
+    // in `n_blocks + 1`) before the cursor reports Truncated
+    let mut outpos = Vec::with_capacity(n_blocks.min(c.remaining() / 8) + 1);
     for _ in 0..=n_blocks {
         outpos.push(c.u64()?);
     }
@@ -219,15 +299,358 @@ pub fn deserialize(data: &[u8]) -> Result<Ecf8Blob, ContainerError> {
     })
 }
 
-/// Write a blob to a file.
+/// Write a blob to a file (streamed through a `BufWriter` — no
+/// whole-container `Vec<u8>` round-trip).
 pub fn write_file(blob: &Ecf8Blob, path: &std::path::Path) -> std::io::Result<()> {
-    std::fs::write(path, serialize(blob))
+    let f = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(f);
+    serialize_into(blob, &mut w)?;
+    w.flush()
 }
 
 /// Read a blob from a file.
 pub fn read_file(path: &std::path::Path) -> anyhow::Result<Ecf8Blob> {
     let data = std::fs::read(path)?;
     Ok(deserialize(&data)?)
+}
+
+// ---------------------------------------------------------------------------
+// Container v2: sharded tensor records + binary index
+// ---------------------------------------------------------------------------
+
+/// Header of one v2 tensor record (see the module docs for the layout).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecordHeader {
+    /// codec id byte (see `codec::codecs::CodecId`)
+    pub codec: u8,
+    /// FP8 format byte (see [`Fp8Format::from_u8`])
+    pub format: u8,
+    pub n_elem: u64,
+    pub payload_len: u64,
+    pub payload_crc: u32,
+}
+
+impl RecordHeader {
+    pub fn write_into<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
+        let mut head = [0u8; RECORD_HEADER_BYTES];
+        head[0..4].copy_from_slice(RECORD_MAGIC);
+        head[4] = self.codec;
+        head[5] = self.format;
+        // [6..8] flags, reserved
+        head[8..16].copy_from_slice(&self.n_elem.to_le_bytes());
+        head[16..24].copy_from_slice(&self.payload_len.to_le_bytes());
+        head[24..28].copy_from_slice(&self.payload_crc.to_le_bytes());
+        // [28..32] reserved
+        w.write_all(&head)
+    }
+
+    pub fn parse(data: &[u8]) -> Result<Self, ContainerError> {
+        let mut c = Cursor { data, pos: 0 };
+        if c.take(4)? != RECORD_MAGIC {
+            return Err(ContainerError::BadMagic);
+        }
+        let codec = c.u8()?;
+        let format = c.u8()?;
+        let _flags = c.u16()?;
+        let n_elem = c.u64()?;
+        let payload_len = c.u64()?;
+        let payload_crc = c.u32()?;
+        let _reserved = c.u32()?;
+        Ok(Self {
+            codec,
+            format,
+            n_elem,
+            payload_len,
+            payload_crc,
+        })
+    }
+
+    /// Total record length (header + payload).
+    pub fn record_len(&self) -> u64 {
+        RECORD_HEADER_BYTES as u64 + self.payload_len
+    }
+}
+
+/// Parse one record from the start of `data`: header + CRC-verified
+/// payload slice.
+pub fn read_record(data: &[u8]) -> Result<(RecordHeader, &[u8]), ContainerError> {
+    let h = RecordHeader::parse(data)?;
+    let plen = usize::try_from(h.payload_len).map_err(|_| ContainerError::Truncated {
+        need: usize::MAX,
+        have: data.len(),
+    })?;
+    let end = RECORD_HEADER_BYTES
+        .checked_add(plen)
+        .ok_or_else(|| ContainerError::Truncated {
+            need: usize::MAX,
+            have: data.len(),
+        })?;
+    if end > data.len() {
+        return Err(ContainerError::Truncated {
+            need: end,
+            have: data.len(),
+        });
+    }
+    let payload = &data[RECORD_HEADER_BYTES..end];
+    let computed = crate::util::crc32::crc32(payload);
+    if computed != h.payload_crc {
+        return Err(ContainerError::CrcMismatch {
+            stored: h.payload_crc,
+            computed,
+        });
+    }
+    Ok((h, payload))
+}
+
+/// Validate an in-memory shard image's 8-byte header; returns the shard
+/// index it claims.
+pub fn parse_shard_header(data: &[u8]) -> Result<u16, ContainerError> {
+    let mut c = Cursor { data, pos: 0 };
+    if c.take(4)? != SHARD_MAGIC {
+        return Err(ContainerError::BadMagic);
+    }
+    let v = c.u16()?;
+    if v != V2_VERSION {
+        return Err(ContainerError::BadVersion(v));
+    }
+    c.u16()
+}
+
+/// Walk every record of an in-memory shard image in order, CRC-checking
+/// each payload — the index-free inspection/recovery scan. Returns each
+/// record's header and the byte range of its payload within `data`.
+pub fn walk_shard(
+    data: &[u8],
+) -> Result<Vec<(RecordHeader, std::ops::Range<usize>)>, ContainerError> {
+    parse_shard_header(data)?;
+    let mut pos = SHARD_HEADER_BYTES;
+    let mut out = Vec::new();
+    while pos < data.len() {
+        let (h, payload) = read_record(&data[pos..])?;
+        let start = pos + RECORD_HEADER_BYTES;
+        out.push((h, start..start + payload.len()));
+        pos = start + payload.len();
+    }
+    Ok(out)
+}
+
+/// Where a record landed inside its shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecordLocation {
+    /// byte offset of the record header within the shard file
+    pub offset: u64,
+    /// total record length (header + payload)
+    pub len: u64,
+    pub payload_crc: u32,
+}
+
+/// Streaming writer for one `.ecf8s` shard: records are appended through
+/// a buffered file handle, so nothing larger than one tensor's payload is
+/// ever resident.
+pub struct ShardWriter {
+    w: std::io::BufWriter<std::fs::File>,
+    bytes: u64,
+}
+
+impl ShardWriter {
+    pub fn create(path: &std::path::Path, shard_index: u16) -> std::io::Result<Self> {
+        let f = std::fs::File::create(path)?;
+        let mut w = std::io::BufWriter::new(f);
+        w.write_all(SHARD_MAGIC)?;
+        w.write_all(&V2_VERSION.to_le_bytes())?;
+        w.write_all(&shard_index.to_le_bytes())?;
+        Ok(Self {
+            w,
+            bytes: SHARD_HEADER_BYTES as u64,
+        })
+    }
+
+    /// Append one record; returns where it landed.
+    pub fn append(
+        &mut self,
+        codec: u8,
+        format: u8,
+        n_elem: u64,
+        payload: &[u8],
+    ) -> std::io::Result<RecordLocation> {
+        let payload_crc = crate::util::crc32::crc32(payload);
+        let header = RecordHeader {
+            codec,
+            format,
+            n_elem,
+            payload_len: payload.len() as u64,
+            payload_crc,
+        };
+        let offset = self.bytes;
+        header.write_into(&mut self.w)?;
+        self.w.write_all(payload)?;
+        self.bytes += header.record_len();
+        Ok(RecordLocation {
+            offset,
+            len: header.record_len(),
+            payload_crc,
+        })
+    }
+
+    /// Bytes written so far (header included) — the shard-rollover gauge.
+    pub fn bytes_written(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Flush and close; returns the final shard size.
+    pub fn finish(mut self) -> std::io::Result<u64> {
+        self.w.flush()?;
+        Ok(self.bytes)
+    }
+}
+
+/// One tensor's entry in the v2 binary index: shape/role metadata (what
+/// the v1 plain-text manifest carried) plus the record's location and
+/// payload CRC.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IndexEntry {
+    pub name: String,
+    pub rows: u64,
+    pub cols: u64,
+    pub layer: u32,
+    /// `BlockType` code (see `model::config::BlockType::from_code`)
+    pub block_type: u8,
+    /// codec id byte (see `codec::codecs::CodecId`)
+    pub codec: u8,
+    /// FP8 format byte
+    pub format: u8,
+    pub shard: u32,
+    pub offset: u64,
+    pub len: u64,
+    pub payload_crc: u32,
+}
+
+impl IndexEntry {
+    /// Element count; saturates on a crafted rows×cols overflow (the
+    /// saturated value then fails the record-header cross-check instead
+    /// of panicking in debug builds).
+    pub fn n_elem(&self) -> u64 {
+        self.rows.saturating_mul(self.cols)
+    }
+}
+
+/// The v2 binary tensor index: the decode plan for a sharded model
+/// artifact. Serialized with a trailing CRC-32 over every preceding byte.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TensorIndex {
+    pub model: String,
+    pub n_shards: u32,
+    pub entries: Vec<IndexEntry>,
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    assert!(s.len() <= u16::MAX as usize, "name too long for index");
+    put_u16(buf, s.len() as u16);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn read_str(c: &mut Cursor<'_>) -> Result<String, ContainerError> {
+    let len = c.u16()? as usize;
+    let bytes = c.take(len)?;
+    String::from_utf8(bytes.to_vec())
+        .map_err(|_| ContainerError::Inconsistent("non-UTF-8 name in index"))
+}
+
+impl TensorIndex {
+    /// Total stored bytes across all records (headers included).
+    pub fn stored_bytes(&self) -> u64 {
+        self.entries.iter().map(|e| e.len).sum()
+    }
+
+    /// Total raw FP8 bytes the records decode to.
+    pub fn raw_bytes(&self) -> u64 {
+        self.entries.iter().map(|e| e.n_elem()).sum()
+    }
+
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(INDEX_MAGIC);
+        put_u16(&mut out, V2_VERSION);
+        put_u16(&mut out, 0); // flags
+        put_u32(&mut out, self.n_shards);
+        put_u32(&mut out, self.entries.len() as u32);
+        put_str(&mut out, &self.model);
+        for e in &self.entries {
+            put_str(&mut out, &e.name);
+            put_u64(&mut out, e.rows);
+            put_u64(&mut out, e.cols);
+            put_u32(&mut out, e.layer);
+            out.push(e.block_type);
+            out.push(e.codec);
+            out.push(e.format);
+            out.push(0); // reserved
+            put_u32(&mut out, e.shard);
+            put_u64(&mut out, e.offset);
+            put_u64(&mut out, e.len);
+            put_u32(&mut out, e.payload_crc);
+        }
+        let crc = crate::util::crc32::crc32(&out);
+        put_u32(&mut out, crc);
+        out
+    }
+
+    pub fn deserialize(data: &[u8]) -> Result<Self, ContainerError> {
+        let mut c = Cursor { data, pos: 0 };
+        if c.take(4)? != INDEX_MAGIC {
+            return Err(ContainerError::BadMagic);
+        }
+        let version = c.u16()?;
+        if version != V2_VERSION {
+            return Err(ContainerError::BadVersion(version));
+        }
+        let _flags = c.u16()?;
+        let n_shards = c.u32()?;
+        let n_tensors = c.u32()? as usize;
+        let model = read_str(&mut c)?;
+        // entries are ≥ 50 bytes each; cap pre-allocation by the input
+        let mut entries = Vec::with_capacity(n_tensors.min(c.remaining() / 50 + 1));
+        for _ in 0..n_tensors {
+            let name = read_str(&mut c)?;
+            let rows = c.u64()?;
+            let cols = c.u64()?;
+            let layer = c.u32()?;
+            let block_type = c.u8()?;
+            let codec = c.u8()?;
+            let format = c.u8()?;
+            let _reserved = c.u8()?;
+            let shard = c.u32()?;
+            let offset = c.u64()?;
+            let len = c.u64()?;
+            let payload_crc = c.u32()?;
+            entries.push(IndexEntry {
+                name,
+                rows,
+                cols,
+                layer,
+                block_type,
+                codec,
+                format,
+                shard,
+                offset,
+                len,
+                payload_crc,
+            });
+        }
+        let body_end = c.pos;
+        let stored = c.u32()?;
+        let computed = crate::util::crc32::crc32(&data[..body_end]);
+        if stored != computed {
+            return Err(ContainerError::CrcMismatch { stored, computed });
+        }
+        if c.remaining() != 0 {
+            return Err(ContainerError::Inconsistent("trailing bytes after index"));
+        }
+        Ok(Self {
+            model,
+            n_shards,
+            entries,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -327,5 +750,136 @@ mod tests {
         let payload = blob.encoded.len() + blob.packed.len() + blob.gaps.len();
         // metadata overhead < 2% for MB-scale tensors
         assert!((bytes.len() - payload) as f64 / (bytes.len() as f64) < 0.02);
+    }
+
+    #[test]
+    fn serialized_len_matches_serialize() {
+        for n in [0usize, 1, 4097, 123_456] {
+            let blob = sample_blob(n);
+            assert_eq!(serialize(&blob).len(), serialized_len(&blob), "n={n}");
+        }
+    }
+
+    #[test]
+    fn record_roundtrip_and_crc() {
+        let payload = b"some codec payload bytes".to_vec();
+        let mut buf = Vec::new();
+        let crc = crate::util::crc32::crc32(&payload);
+        let h = RecordHeader {
+            codec: 1,
+            format: 0,
+            n_elem: 24,
+            payload_len: payload.len() as u64,
+            payload_crc: crc,
+        };
+        h.write_into(&mut buf).unwrap();
+        buf.extend_from_slice(&payload);
+        let (back, p) = read_record(&buf).unwrap();
+        assert_eq!(back, h);
+        assert_eq!(p, &payload[..]);
+        // flipped payload bit => CrcMismatch
+        let mut bad = buf.clone();
+        let n = bad.len();
+        bad[n - 3] ^= 0x10;
+        assert!(matches!(
+            read_record(&bad),
+            Err(ContainerError::CrcMismatch { .. })
+        ));
+        // truncated payload => Truncated
+        assert!(matches!(
+            read_record(&buf[..buf.len() - 1]),
+            Err(ContainerError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn shard_write_walk_roundtrip() {
+        let dir = std::env::temp_dir().join("ecf8_shard_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(shard_file_name(0));
+        let mut w = ShardWriter::create(&path, 0).unwrap();
+        let a = w.append(1, 0, 3, b"abc").unwrap();
+        let b = w.append(1, 0, 5, b"defgh").unwrap();
+        assert_eq!(a.offset, SHARD_HEADER_BYTES as u64);
+        assert_eq!(b.offset, a.offset + a.len);
+        let total = w.finish().unwrap();
+        let data = std::fs::read(&path).unwrap();
+        assert_eq!(data.len() as u64, total);
+        assert_eq!(parse_shard_header(&data).unwrap(), 0);
+        let records = walk_shard(&data).unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(records[0].0.n_elem, 3);
+        assert_eq!(&data[records[0].1.clone()], b"abc");
+        assert_eq!(&data[records[1].1.clone()], b"defgh");
+        std::fs::remove_file(&path).ok();
+    }
+
+    fn sample_index() -> TensorIndex {
+        TensorIndex {
+            model: "tiny-llm-7m".into(),
+            n_shards: 2,
+            entries: vec![
+                IndexEntry {
+                    name: "embed_tokens".into(),
+                    rows: 256,
+                    cols: 64,
+                    layer: 0,
+                    block_type: 0,
+                    codec: 0,
+                    format: 0,
+                    shard: 0,
+                    offset: 8,
+                    len: 9000,
+                    payload_crc: 0xDEAD_BEEF,
+                },
+                IndexEntry {
+                    name: "layers.0.attn.q_proj".into(),
+                    rows: 64,
+                    cols: 64,
+                    layer: 0,
+                    block_type: 1,
+                    codec: 1,
+                    format: 0,
+                    shard: 1,
+                    offset: 8,
+                    len: 4128,
+                    payload_crc: 7,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn index_roundtrip() {
+        let idx = sample_index();
+        let bytes = idx.serialize();
+        let back = TensorIndex::deserialize(&bytes).unwrap();
+        assert_eq!(back, idx);
+        assert_eq!(back.stored_bytes(), 9000 + 4128);
+        assert_eq!(back.raw_bytes(), 256 * 64 + 64 * 64);
+    }
+
+    #[test]
+    fn index_detects_corruption_and_truncation() {
+        let idx = sample_index();
+        let bytes = idx.serialize();
+        // flip a metadata byte => trailer CRC catches it
+        let mut bad = bytes.clone();
+        bad[20] ^= 0x01;
+        assert!(matches!(
+            TensorIndex::deserialize(&bad),
+            Err(ContainerError::CrcMismatch { .. })
+        ));
+        // every truncation point is a structured error, never a panic
+        for cut in 0..bytes.len() {
+            let err = TensorIndex::deserialize(&bytes[..cut]).unwrap_err();
+            assert!(
+                matches!(
+                    err,
+                    ContainerError::Truncated { .. } | ContainerError::CrcMismatch { .. }
+                ),
+                "cut={cut}: {err}"
+            );
+        }
     }
 }

@@ -12,6 +12,7 @@
 //! [`encode`] builds the streams; [`decode`] reconstructs the original
 //! bytes, bit-exactly, via the block-parallel scheme of Algorithm 1.
 
+pub mod codecs;
 pub mod container;
 pub mod decode;
 pub mod encode;
@@ -156,6 +157,7 @@ impl Ecf8Blob {
     }
 }
 
+pub use codecs::{compress_auto, select_codec, Codec, CodecId, CompressedTensor};
 pub use decode::{DecodePath, DecodeTableCache, DecodeTables};
 pub use encode::{encode_parallel, encode_with_code_parallel};
 

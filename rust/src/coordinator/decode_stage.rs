@@ -7,7 +7,9 @@
 //! coordinator") and sharpened from layer granularity to *tensor*
 //! granularity: each stage's tensors are independent work items pulled
 //! off the shared [`ThreadPool`]'s injector queue, decoding into disjoint
-//! extents of one [`LayerArena`].
+//! extents of one [`LayerArena`]. Work items are [`CompressedTensor`]s —
+//! the container-v2 codec seam — so a stage may mix ECF8 records with
+//! raw-passthrough ones and the schedule never needs to know.
 //!
 //! ## Shape
 //!
@@ -34,7 +36,7 @@
 
 use super::metrics::SharedStageMetrics;
 use crate::codec::decode::DecodeTables;
-use crate::codec::Ecf8Blob;
+use crate::codec::CompressedTensor;
 use crate::tensormgr::{JitDecompressor, LayerArena};
 use crate::util::threadpool::ThreadPool;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -57,19 +59,25 @@ pub fn with_stages_decoded<R, E>(
     jit: &mut JitDecompressor,
     pool: Option<&ThreadPool>,
     window: usize,
-    stages: &[Vec<&Ecf8Blob>],
+    stages: &[Vec<&CompressedTensor>],
     observer: Option<&SharedStageMetrics>,
     mut consume: impl FnMut(usize, &LayerArena) -> Result<R, E>,
 ) -> Result<Vec<R>, E> {
     let window = window.max(2);
     // Build every code book's decode tiers up front (cached across calls
     // in the jit's table cache) so the decoder thread only reads Arcs.
-    let stage_tables: Vec<Vec<Arc<DecodeTables>>> = {
+    // Tensors on table-free codecs (raw passthrough) carry `None`.
+    let stage_tables: Vec<Vec<Option<Arc<DecodeTables>>>> = {
         let (cache, _) = jit.decode_ahead_parts();
-        stages
-            .iter()
-            .map(|blobs| blobs.iter().map(|b| cache.get_or_build(b)).collect())
-            .collect()
+        let mut all = Vec::with_capacity(stages.len());
+        for tensors in stages {
+            let mut per_stage = Vec::with_capacity(tensors.len());
+            for t in tensors {
+                per_stage.push(t.tables(cache));
+            }
+            all.push(per_stage);
+        }
+        all
     };
     // Seed the free-arena ring from the recycled pool (steady state:
     // zero allocation on the request path).
@@ -94,7 +102,7 @@ pub fn with_stages_decoded<R, E>(
         let stage_tables = &stage_tables;
         let in_flight = &in_flight;
         let decoder = s.spawn(move || {
-            for (l, blobs) in stages.iter().enumerate() {
+            for (l, tensors) in stages.iter().enumerate() {
                 // consumer hung up (error path) => stop decoding; this
                 // recv is also the backpressure stall that bounds the
                 // number of decoded-ahead stages at `window`
@@ -102,7 +110,7 @@ pub fn with_stages_decoded<R, E>(
                     return Vec::new();
                 };
                 let t0 = Instant::now();
-                arena.decode_stage_tensors(blobs, &stage_tables[l], pool);
+                arena.decode_stage_tensors(tensors, &stage_tables[l], pool);
                 if let Some(m) = observer {
                     m.record(t0.elapsed().as_secs_f64());
                     m.observe_depth(in_flight.fetch_add(1, Ordering::AcqRel) + 1);
@@ -142,8 +150,8 @@ pub fn with_stages_decoded<R, E>(
         let (_, spare_pool) = jit.decode_ahead_parts();
         *spare_pool = spares;
     }
-    let (tensors, bytes) = stages.iter().flatten().fold((0u64, 0u64), |(t, by), b| {
-        (t + 1, by + b.n_elem as u64)
+    let (tensors, bytes) = stages.iter().flatten().fold((0u64, 0u64), |(t, by), x| {
+        (t + 1, by + x.n_elem() as u64)
     });
     jit.record_decoded(tensors, bytes);
     Ok(results)
@@ -155,7 +163,7 @@ mod tests {
     use crate::codec::compress_fp8;
     use crate::util::prng::Xoshiro256;
 
-    fn blob(n: usize, seed: u64) -> (Vec<u8>, Ecf8Blob) {
+    fn blob(n: usize, seed: u64) -> (Vec<u8>, CompressedTensor) {
         let mut rng = Xoshiro256::seed_from_u64(seed);
         let data: Vec<u8> = (0..n)
             .map(|_| {
@@ -163,7 +171,7 @@ mod tests {
                 crate::fp8::F8E4M3::from_f32(x).to_bits()
             })
             .collect();
-        let b = compress_fp8(&data);
+        let b = CompressedTensor::Ecf8(compress_fp8(&data));
         (data, b)
     }
 
@@ -174,7 +182,7 @@ mod tests {
         let (d3, b3) = blob(5_000, 12);
         let (d4, b4) = blob(1_000, 13);
         let mut jit = JitDecompressor::new(0, None);
-        let layers: Vec<Vec<&Ecf8Blob>> = vec![vec![&b1, &b2], vec![&b3], vec![&b4]];
+        let layers: Vec<Vec<&CompressedTensor>> = vec![vec![&b1, &b2], vec![&b3], vec![&b4]];
         let expect: Vec<Vec<&[u8]>> =
             vec![vec![&d1[..], &d2[..]], vec![&d3[..]], vec![&d4[..]]];
         let sizes = with_stages_decoded(
@@ -218,10 +226,10 @@ mod tests {
     #[test]
     fn per_tensor_pool_decode_bit_exact_and_observed() {
         let pool = ThreadPool::new(4);
-        let blobs: Vec<(Vec<u8>, Ecf8Blob)> = (0..7)
+        let blobs: Vec<(Vec<u8>, CompressedTensor)> = (0..7)
             .map(|i| blob(4_000 + 512 * i, 40 + i as u64))
             .collect();
-        let stages: Vec<Vec<&Ecf8Blob>> = vec![
+        let stages: Vec<Vec<&CompressedTensor>> = vec![
             blobs[..3].iter().map(|(_, b)| b).collect(),
             blobs[3..].iter().map(|(_, b)| b).collect(),
         ];
@@ -253,7 +261,7 @@ mod tests {
         let (_, b1) = blob(2_000, 14);
         let (_, b2) = blob(2_000, 15);
         let mut jit = JitDecompressor::new(0, None);
-        let layers: Vec<Vec<&Ecf8Blob>> = vec![vec![&b1], vec![&b2], vec![&b1]];
+        let layers: Vec<Vec<&CompressedTensor>> = vec![vec![&b1], vec![&b2], vec![&b1]];
         let err = with_stages_decoded(
             &mut jit,
             None,

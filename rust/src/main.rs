@@ -3,13 +3,15 @@
 //! Subcommands:
 //!   compress    compress a raw FP8 tensor file into an .ecf8 container
 //!   decompress  reverse, verifying bit-exactness via the container CRC
-//!   inspect     show container metadata, code book, and entropy
+//!   pack        synthesize a model into a sharded container-v2 artifact
+//!   inspect     container-v1 file or v2 store: metadata, codecs, CRCs
+//!   migrate     rewrite a v1 model store as container v2 (verified)
 //!   entropy     exponent-entropy report for a tensor file or zoo model
 //!   gen-model   synthesize a model's weights into a compressed store
 //!   serve       run the serving loop on a runnable model
 //!   zoo         list the model zoo with sizes and paper targets
 
-use ecf8::codec::{container, decode, encode, Ecf8Params, Fp8Format};
+use ecf8::codec::{codecs, container, decode, encode, CodecId, Ecf8Params, Fp8Format};
 use ecf8::coordinator::server::{compiled_batch_for, ServeConfig, Server};
 use ecf8::coordinator::Request;
 use ecf8::model::config as zoo_config;
@@ -32,7 +34,9 @@ fn main() {
     let result = match sub.as_str() {
         "compress" => cmd_compress(args),
         "decompress" => cmd_decompress(args),
+        "pack" => cmd_pack(args),
         "inspect" => cmd_inspect(args),
+        "migrate" => cmd_migrate(args),
         "entropy" => cmd_entropy(args),
         "gen-model" => cmd_gen_model(args),
         "serve" => cmd_serve(args),
@@ -62,7 +66,11 @@ fn usage() {
          SUBCOMMANDS:\n\
            compress    <in.fp8> <out.ecf8>   compress a raw FP8 byte tensor\n\
            decompress  <in.ecf8> <out.fp8>   decompress (CRC-verified)\n\
-           inspect     <in.ecf8>             container metadata + code book\n\
+           pack        --model <name> --out <dir>  synthesize into a sharded\n\
+                                             container-v2 artifact\n\
+           inspect     <path>                v1 .ecf8 file or v2 store dir:\n\
+                                             metadata, codecs, CRC verify\n\
+           migrate     <model-dir>           rewrite a v1 store as v2\n\
            entropy     --model <name> | <in.fp8>   exponent entropy report\n\
            gen-model   --model <name> --out <dir>  synthesize + compress\n\
            serve       --model <name> --requests N  run the serving loop\n\
@@ -142,12 +150,34 @@ fn cmd_decompress(raw: Vec<String>) -> anyhow::Result<()> {
 }
 
 fn cmd_inspect(raw: Vec<String>) -> anyhow::Result<()> {
-    let cmd = Command::new("inspect", "show container metadata");
+    let cmd = Command::new("inspect", "show container / store metadata")
+        .arg(
+            "path",
+            "a v1 .ecf8 container file, or a v2 model directory / index.ecf8i",
+        )
+        .flag("tensors", "list every tensor record of a v2 store")
+        .flag("verify", "re-read every v2 record and check payload CRCs");
     let a = cmd.parse(raw).map_err(|e| handle_help(&cmd, e))?;
     let [input] = a.positional() else {
-        anyhow::bail!("usage: ecf8 inspect <in.ecf8>");
+        anyhow::bail!("usage: ecf8 inspect <in.ecf8 | model-dir | index.ecf8i>");
     };
-    let blob = container::read_file(std::path::Path::new(input))?;
+    let path = std::path::Path::new(input);
+    let v2_dir = if path.is_dir() {
+        Some(path.to_path_buf())
+    } else if path.file_name().and_then(|f| f.to_str()) == Some(container::INDEX_FILE) {
+        Some(path.parent().unwrap_or_else(|| std::path::Path::new(".")).to_path_buf())
+    } else {
+        None
+    };
+    match v2_dir {
+        Some(dir) => inspect_v2_store(&dir, a.flag("tensors"), a.flag("verify")),
+        None => inspect_v1_file(path),
+    }
+}
+
+fn inspect_v1_file(path: &std::path::Path) -> anyhow::Result<()> {
+    let blob = container::read_file(path)?;
+    println!("layout:        container v1 (single blob)");
     println!("format:        {:?}", blob.format);
     println!("elements:      {}", blob.n_elem);
     println!(
@@ -167,6 +197,191 @@ fn cmd_inspect(raw: Vec<String>) -> anyhow::Result<()> {
         blob.memory_saving() * 100.0
     );
     println!("code lengths:  {:?}", blob.code_lengths);
+    Ok(())
+}
+
+fn inspect_v2_store(dir: &std::path::Path, tensors: bool, verify: bool) -> anyhow::Result<()> {
+    let lazy = ecf8::model::store::LazyModel::open(dir)?;
+    let index = lazy.index();
+    println!("layout:        container v2 (sharded + binary index)");
+    println!("model:         {}", lazy.name());
+    println!("tensors:       {}", lazy.len());
+    println!("shards:        {}", index.n_shards);
+    for s in 0..index.n_shards {
+        let path = dir.join(container::shard_file_name(s));
+        let size = std::fs::metadata(&path)?.len();
+        let records = index.entries.iter().filter(|e| e.shard == s).count();
+        println!(
+            "  {}  {} ({} records)",
+            container::shard_file_name(s),
+            humanize::bytes(size),
+            records
+        );
+    }
+    let mut census: Vec<(u8, usize, u64)> = Vec::new();
+    for e in &index.entries {
+        match census.iter_mut().find(|(c, _, _)| *c == e.codec) {
+            Some((_, n, b)) => {
+                *n += 1;
+                *b += e.len;
+            }
+            None => census.push((e.codec, 1, e.len)),
+        }
+    }
+    for (c, n, b) in &census {
+        let label = CodecId::from_u8(*c).map(|c| c.label()).unwrap_or("unknown");
+        println!("codec:         {label}: {n} tensors, {}", humanize::bytes(*b));
+    }
+    println!(
+        "total:         {} -> {} ({:.1}% saving vs raw FP8)",
+        humanize::bytes(index.raw_bytes()),
+        humanize::bytes(index.stored_bytes()),
+        (1.0 - index.stored_bytes() as f64 / index.raw_bytes().max(1) as f64) * 100.0
+    );
+    if tensors {
+        let mut t =
+            ecf8::bench_support::Table::new(["tensor", "shape", "codec", "shard", "stored"]);
+        for e in &index.entries {
+            t.row([
+                e.name.clone(),
+                format!("{}x{}", e.rows, e.cols),
+                CodecId::from_u8(e.codec)
+                    .map(|c| c.label().to_string())
+                    .unwrap_or_else(|| format!("#{}", e.codec)),
+                format!("{}", e.shard),
+                humanize::bytes(e.len),
+            ]);
+        }
+        t.print();
+    }
+    if verify {
+        let (model, secs) = ecf8::bench_support::time_once(|| lazy.load_all(None));
+        let model = model?;
+        println!(
+            "verify:        {} records read, CRCs checked, parsed via the codec registry in {}",
+            model.tensors.len(),
+            humanize::duration(secs)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_pack(raw: Vec<String>) -> anyhow::Result<()> {
+    let cmd = Command::new(
+        "pack",
+        "synthesize a model into a sharded container-v2 artifact",
+    )
+    .opt("model", "zoo model name (see `ecf8 zoo`)")
+    .opt_default("out", "store root directory", "models")
+    .opt_default("seed", "rng seed", "1")
+    .opt_default("shard-mb", "shard rollover size in MiB", "64")
+    .opt_default(
+        "noise-tensors",
+        "append N incompressible raw-FP8-codec tensors (demo-only artifact)",
+        "0",
+    )
+    .flag("v1", "write the legacy v1 per-tensor layout instead");
+    let a = cmd.parse(raw).map_err(|e| handle_help(&cmd, e))?;
+    let name = a
+        .get("model")
+        .ok_or_else(|| anyhow::anyhow!("--model required"))?;
+    let m = zoo_config::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {name} (see `ecf8 zoo`)"))?;
+    let pool = ThreadPool::with_default_size();
+    let seed: u64 = a.get_parse_or("seed", 1);
+    let shard_bytes = a.get_parse_or::<u64>("shard-mb", 64) << 20;
+    let (mut model, gen_secs) =
+        ecf8::bench_support::time_once(|| CompressedModel::synthesize(&m, seed, Some(&pool)));
+    let n_noise: usize = a.get_parse_or("noise-tensors", 0);
+    for i in 0..n_noise {
+        let n = 1 << 20;
+        let data = ecf8::model::weights::generate_noise_fp8(n, seed ^ i as u64);
+        let spec = ecf8::model::config::TensorSpec {
+            name: format!("noise.{i}"),
+            rows: 1,
+            cols: n,
+            block_type: ecf8::model::config::BlockType::Modulation,
+            layer: 0,
+            alpha: 0.0,
+            gamma: 0.0,
+            row_sigma: 0.0,
+        };
+        model.push(spec, codecs::compress_auto(&data, Fp8Format::E4M3, Ecf8Params::default()));
+    }
+    let store = ModelStore::new(a.get_or("out", "models"));
+    let (saved, save_secs) = ecf8::bench_support::time_once(|| {
+        if a.flag("v1") {
+            store.save_v1(&model)
+        } else {
+            store.save_v2(&model, shard_bytes)
+        }
+    });
+    saved?;
+    println!(
+        "{}: {} tensors, {} -> {} ({:.1}% saving); synthesized in {}, packed in {}",
+        m.name,
+        model.tensors.len(),
+        humanize::gb(model.raw_bytes()),
+        humanize::gb(model.compressed_bytes()),
+        model.memory_saving() * 100.0,
+        humanize::duration(gen_secs),
+        humanize::duration(save_secs)
+    );
+    for (codec, n) in model.codec_census() {
+        println!("  codec {}: {} tensors", codec.label(), n);
+    }
+    if !a.flag("v1") {
+        let lazy = store.open(m.name)?;
+        println!(
+            "  layout: {} shards + {} ({} index entries)",
+            lazy.index().n_shards,
+            container::INDEX_FILE,
+            lazy.len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_migrate(raw: Vec<String>) -> anyhow::Result<()> {
+    let cmd = Command::new("migrate", "rewrite a v1 model store as container v2")
+        .arg(
+            "model-dir",
+            "model directory holding manifest.txt and per-tensor .ecf8 files",
+        )
+        .opt_default("shard-mb", "shard rollover size in MiB", "64")
+        .flag("no-verify", "skip the decode-and-compare verification pass");
+    let a = cmd.parse(raw).map_err(|e| handle_help(&cmd, e))?;
+    let [input] = a.positional() else {
+        anyhow::bail!("usage: ecf8 migrate <model-dir>");
+    };
+    let dir = std::path::Path::new(input);
+    let model = dir
+        .file_name()
+        .and_then(|f| f.to_str())
+        .ok_or_else(|| anyhow::anyhow!("{input} has no model directory name"))?;
+    let root = dir.parent().unwrap_or_else(|| std::path::Path::new("."));
+    let store = ModelStore::new(root);
+    let shard_bytes = a.get_parse_or::<u64>("shard-mb", 64) << 20;
+    let (report, secs) = ecf8::bench_support::time_once(|| {
+        store.migrate(model, shard_bytes, !a.flag("no-verify"))
+    });
+    let report = report?;
+    println!(
+        "{model}: {} tensors re-framed into {} shards ({} v1 payload -> {} v2 incl. index) in {}",
+        report.tensors,
+        report.shards,
+        humanize::bytes(report.v1_bytes),
+        humanize::bytes(report.v2_bytes),
+        humanize::duration(secs)
+    );
+    println!(
+        "verification:  {}",
+        if report.verified {
+            "every tensor decoded from both layouts, bit-identical"
+        } else {
+            "skipped (--no-verify)"
+        }
+    );
     Ok(())
 }
 

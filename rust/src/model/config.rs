@@ -45,6 +45,45 @@ impl BlockType {
             BlockType::Head => "lm_head",
         }
     }
+
+    /// Stable one-byte code for the container-v2 binary index.
+    pub fn code(self) -> u8 {
+        self as u8
+    }
+
+    /// Inverse of [`BlockType::code`].
+    pub fn from_code(c: u8) -> Option<Self> {
+        match c {
+            0 => Some(BlockType::Embedding),
+            1 => Some(BlockType::AttnQkv),
+            2 => Some(BlockType::AttnOut),
+            3 => Some(BlockType::MlpUp),
+            4 => Some(BlockType::MlpDown),
+            5 => Some(BlockType::Expert),
+            6 => Some(BlockType::CrossAttn),
+            7 => Some(BlockType::Modulation),
+            8 => Some(BlockType::Head),
+            _ => None,
+        }
+    }
+
+    /// Inverse of [`BlockType::label`] — used by the config-free v1
+    /// manifest reader (the migration path).
+    pub fn from_label(s: &str) -> Option<Self> {
+        [
+            BlockType::Embedding,
+            BlockType::AttnQkv,
+            BlockType::AttnOut,
+            BlockType::MlpUp,
+            BlockType::MlpDown,
+            BlockType::Expert,
+            BlockType::CrossAttn,
+            BlockType::Modulation,
+            BlockType::Head,
+        ]
+        .into_iter()
+        .find(|b| b.label() == s)
+    }
 }
 
 /// One weight tensor: name, shape, role, layer index, and the α-stable
@@ -652,5 +691,16 @@ mod tests {
     fn max_tensor_is_embedding_for_llms() {
         let m = qwen3_8b();
         assert_eq!(m.max_tensor_elems(), 151936 * 4096);
+    }
+
+    #[test]
+    fn block_type_code_and_label_roundtrip() {
+        for c in 0..=8u8 {
+            let b = BlockType::from_code(c).unwrap();
+            assert_eq!(b.code(), c);
+            assert_eq!(BlockType::from_label(b.label()), Some(b));
+        }
+        assert!(BlockType::from_code(9).is_none());
+        assert!(BlockType::from_label("nope").is_none());
     }
 }

@@ -13,5 +13,5 @@ pub mod store;
 pub mod weights;
 
 pub use config::{BlockType, ModelConfig, ModelFamily, TensorSpec};
-pub use store::{CompressedModel, ModelStore};
+pub use store::{CompressedModel, LazyModel, MigrationReport, ModelStore};
 pub use weights::generate_tensor_fp8;

@@ -1,70 +1,94 @@
-//! Compressed model store: a directory holding one `.ecf8` container per
-//! weight tensor plus a plain-text manifest. This is what the serving
-//! runtime loads; tensors stay compressed in memory and are decompressed
-//! just-in-time per layer (§3.3).
+//! Compressed model store: sharded container-v2 artifacts (`.ecf8s`
+//! shards + binary tensor index) with a back-compat reader for the legacy
+//! v1 layout (one `.ecf8` file per tensor + plain-text manifest).
+//!
+//! The serving runtime loads models from here; tensors stay compressed in
+//! memory (each behind the [`CompressedTensor`] codec seam) and are
+//! decompressed just-in-time per layer (§3.3).
+//!
+//! Three access shapes, cheapest last:
+//!
+//! * [`ModelStore::load`] — eager whole-model load (v2 index if present,
+//!   else v1 manifest), validated against a [`ModelConfig`];
+//! * [`LazyModel::load_all`] — the v2 loader itself: per-shard parallel,
+//!   records streamed by offset order within each shard;
+//! * [`LazyModel::load_layer`] / [`LazyModel::load_tensor`] — lazy
+//!   partial loads for the offload path (Table 3): only the records of
+//!   one pipeline stage are read and parsed.
 
 use super::config::{BlockType, ModelConfig, TensorSpec};
 use super::weights::generate_tensor_fp8;
-use crate::codec::{container, encode, Ecf8Blob, Ecf8Params, Fp8Format};
+use crate::codec::container::{
+    self, shard_file_name, IndexEntry, ShardWriter, TensorIndex, INDEX_FILE,
+};
+use crate::codec::{codecs, CompressedTensor, Ecf8Params, Fp8Format};
+use crate::tensormgr::offload::LayerStats;
 use crate::util::threadpool::ThreadPool;
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
 
-/// An in-memory compressed model: every tensor as an [`Ecf8Blob`].
+/// Default shard-rollover size: tensors append to the current shard until
+/// it would exceed this many bytes (a tensor larger than the limit gets a
+/// shard of its own).
+pub const DEFAULT_SHARD_BYTES: u64 = 64 << 20;
+
+/// An in-memory compressed model: every tensor behind the codec seam.
 pub struct CompressedModel {
     pub name: String,
-    pub tensors: Vec<(TensorSpec, Ecf8Blob)>,
+    pub tensors: Vec<(TensorSpec, CompressedTensor)>,
     index: HashMap<String, usize>,
+}
+
+fn index_of(tensors: &[(TensorSpec, CompressedTensor)]) -> HashMap<String, usize> {
+    tensors
+        .iter()
+        .enumerate()
+        .map(|(i, (s, _))| (s.name.clone(), i))
+        .collect()
 }
 
 impl CompressedModel {
     /// Generate-and-compress a whole model in memory (used by examples,
-    /// tests, and the serving runtime for runnable configs).
+    /// tests, and the serving runtime for runnable configs). Each tensor
+    /// goes through the §3.2 entropy probe, so incompressible tensors
+    /// land on the raw-FP8 passthrough codec.
     pub fn synthesize(config: &ModelConfig, seed: u64, pool: Option<&ThreadPool>) -> Self {
         let specs = config.tensors();
-        let blobs: Vec<(TensorSpec, Ecf8Blob)> = match pool {
-            Some(pool) => {
-                use std::sync::Mutex;
-                let results: Vec<Mutex<Option<(TensorSpec, Ecf8Blob)>>> =
-                    specs.iter().map(|_| Mutex::new(None)).collect();
-                let specs_ref = &specs;
-                let results_ref = &results;
-                pool.scope_chunks(specs.len(), specs.len(), move |_, s, e| {
-                    for i in s..e {
-                        let spec = specs_ref[i].clone();
-                        let data = generate_tensor_fp8(&spec, seed);
-                        let blob = encode::encode(&data, Fp8Format::E4M3, Ecf8Params::default());
-                        *results_ref[i].lock().unwrap() = Some((spec, blob));
-                    }
-                });
-                results
-                    .into_iter()
-                    .map(|m| m.into_inner().unwrap().unwrap())
-                    .collect()
-            }
-            None => specs
-                .into_iter()
-                .map(|spec| {
-                    let data = generate_tensor_fp8(&spec, seed);
-                    let blob = encode::encode(&data, Fp8Format::E4M3, Ecf8Params::default());
-                    (spec, blob)
-                })
-                .collect(),
+        let make = |spec: &TensorSpec| {
+            let data = generate_tensor_fp8(spec, seed);
+            let tensor = codecs::compress_auto(&data, Fp8Format::E4M3, Ecf8Params::default());
+            (spec.clone(), tensor)
         };
-        let index = blobs
-            .iter()
-            .enumerate()
-            .map(|(i, (s, _))| (s.name.clone(), i))
-            .collect();
+        let tensors: Vec<(TensorSpec, CompressedTensor)> = match pool {
+            Some(pool) => pool.scope_map(specs.len(), |i| make(&specs[i])),
+            None => specs.iter().map(make).collect(),
+        };
+        let index = index_of(&tensors);
         Self {
             name: config.name.to_string(),
-            tensors: blobs,
+            tensors,
             index,
         }
     }
 
-    pub fn get(&self, name: &str) -> Option<&(TensorSpec, Ecf8Blob)> {
+    pub fn from_tensors(name: String, tensors: Vec<(TensorSpec, CompressedTensor)>) -> Self {
+        let index = index_of(&tensors);
+        Self {
+            name,
+            tensors,
+            index,
+        }
+    }
+
+    /// Append a tensor, keeping the name index coherent.
+    pub fn push(&mut self, spec: TensorSpec, tensor: CompressedTensor) {
+        self.index.insert(spec.name.clone(), self.tensors.len());
+        self.tensors.push((spec, tensor));
+    }
+
+    pub fn get(&self, name: &str) -> Option<&(TensorSpec, CompressedTensor)> {
         self.index.get(name).map(|&i| &self.tensors[i])
     }
 
@@ -77,7 +101,7 @@ impl CompressedModel {
     pub fn compressed_bytes(&self) -> u64 {
         self.tensors
             .iter()
-            .map(|(_, b)| b.compressed_bytes() as u64)
+            .map(|(_, t)| t.compressed_bytes() as u64)
             .sum()
     }
 
@@ -108,9 +132,34 @@ impl CompressedModel {
         }
         by_layer.values().copied().max().unwrap_or(0).max(solo_max)
     }
+
+    /// Tensors counted per codec id — the pack/inspect summary.
+    pub fn codec_census(&self) -> Vec<(crate::codec::CodecId, usize)> {
+        let mut census: Vec<(crate::codec::CodecId, usize)> = Vec::new();
+        for (_, t) in &self.tensors {
+            match census.iter_mut().find(|(id, _)| *id == t.codec_id()) {
+                Some((_, n)) => *n += 1,
+                None => census.push((t.codec_id(), 1)),
+            }
+        }
+        census
+    }
 }
 
-/// On-disk store.
+/// Outcome of a v1 → v2 migration (see [`ModelStore::migrate`]).
+#[derive(Debug, Clone)]
+pub struct MigrationReport {
+    pub tensors: usize,
+    pub shards: u32,
+    /// total v1 container bytes re-framed into v2 records
+    pub v1_bytes: u64,
+    /// total v2 bytes (records + index)
+    pub v2_bytes: u64,
+    /// true when every tensor was decoded from both layouts and compared
+    pub verified: bool,
+}
+
+/// On-disk store: a root directory holding one model directory per model.
 pub struct ModelStore {
     pub root: PathBuf,
 }
@@ -120,24 +169,105 @@ impl ModelStore {
         Self { root: root.into() }
     }
 
+    fn model_dir(&self, model: &str) -> PathBuf {
+        self.root.join(model)
+    }
+
     fn tensor_path(&self, model: &str, tensor: &str) -> PathBuf {
-        self.root
-            .join(model)
+        self.model_dir(model)
             .join(format!("{}.ecf8", tensor.replace('/', "_")))
     }
 
     fn manifest_path(&self, model: &str) -> PathBuf {
-        self.root.join(model).join("manifest.txt")
+        self.model_dir(model).join("manifest.txt")
     }
 
-    /// Persist a compressed model. The manifest line format is
-    /// `name<TAB>rows<TAB>cols<TAB>layer<TAB>block<TAB>file`.
+    fn index_path(&self, model: &str) -> PathBuf {
+        self.model_dir(model).join(INDEX_FILE)
+    }
+
+    /// Persist a compressed model as a container-v2 sharded artifact
+    /// (the default layout).
     pub fn save(&self, model: &CompressedModel) -> Result<()> {
-        let dir = self.root.join(&model.name);
+        self.save_v2(model, DEFAULT_SHARD_BYTES)
+    }
+
+    /// [`ModelStore::save`] with an explicit shard-rollover size.
+    pub fn save_v2(&self, model: &CompressedModel, shard_limit: u64) -> Result<()> {
+        let dir = self.model_dir(&model.name);
+        std::fs::create_dir_all(&dir)?;
+        let shard_limit = shard_limit.max(1);
+        let mut entries: Vec<IndexEntry> = Vec::with_capacity(model.tensors.len());
+        let mut shard: u32 = 0;
+        let mut writer = ShardWriter::create(&dir.join(shard_file_name(0)), 0)?;
+        for (spec, tensor) in &model.tensors {
+            let payload = tensor.payload_bytes();
+            let record_len = (container::RECORD_HEADER_BYTES + payload.len()) as u64;
+            // roll to a new shard when this record would overflow the
+            // current (non-empty) one
+            if writer.bytes_written() > container::SHARD_HEADER_BYTES as u64
+                && writer.bytes_written() + record_len > shard_limit
+            {
+                writer.finish()?;
+                shard += 1;
+                // the shard header stores its index as u16; refuse to
+                // silently wrap past that (raise --shard-mb instead)
+                let claimed = u16::try_from(shard).map_err(|_| {
+                    anyhow!(
+                        "model needs more than {} shards; raise the shard size limit",
+                        u16::MAX
+                    )
+                })?;
+                writer = ShardWriter::create(&dir.join(shard_file_name(shard)), claimed)?;
+            }
+            let loc = writer.append(
+                tensor.codec_id().as_u8(),
+                tensor.format() as u8,
+                tensor.n_elem() as u64,
+                &payload,
+            )?;
+            entries.push(IndexEntry {
+                name: spec.name.clone(),
+                rows: spec.rows as u64,
+                cols: spec.cols as u64,
+                layer: spec.layer as u32,
+                block_type: spec.block_type.code(),
+                codec: tensor.codec_id().as_u8(),
+                format: tensor.format() as u8,
+                shard,
+                offset: loc.offset,
+                len: loc.len,
+                payload_crc: loc.payload_crc,
+            });
+        }
+        writer.finish()?;
+        let index = TensorIndex {
+            model: model.name.clone(),
+            n_shards: shard + 1,
+            entries,
+        };
+        // the index is written last: a crashed pack never leaves a
+        // readable-but-incomplete artifact behind
+        std::fs::write(self.index_path(&model.name), index.serialize())?;
+        Ok(())
+    }
+
+    /// Persist in the legacy v1 layout (one `.ecf8` per tensor + text
+    /// manifest). Kept for migration tests and old readers; the manifest
+    /// line format is `name<TAB>rows<TAB>cols<TAB>layer<TAB>block<TAB>file`.
+    pub fn save_v1(&self, model: &CompressedModel) -> Result<()> {
+        let dir = self.model_dir(&model.name);
         std::fs::create_dir_all(&dir)?;
         let mut manifest = String::new();
         manifest.push_str(&format!("# ecf8-model v1 {}\n", model.name));
-        for (spec, blob) in &model.tensors {
+        for (spec, tensor) in &model.tensors {
+            let blob = tensor.as_ecf8().ok_or_else(|| {
+                anyhow!(
+                    "tensor {}: v1 stores only carry the ECF8 codec (got {})",
+                    spec.name,
+                    tensor.codec_id().label()
+                )
+            })?;
             let file = format!("{}.ecf8", spec.name.replace('/', "_"));
             container::write_file(blob, &dir.join(&file))?;
             manifest.push_str(&format!(
@@ -154,16 +284,50 @@ impl ModelStore {
         Ok(())
     }
 
-    /// Load a compressed model back from disk. `config` supplies the
-    /// distribution metadata the manifest doesn't carry.
+    /// Load a compressed model back from disk — the v2 index when one
+    /// exists, else the legacy v1 manifest. `config` supplies the
+    /// synthesis metadata neither layout carries and validates shapes.
     pub fn load(&self, config: &ModelConfig) -> Result<CompressedModel> {
-        let manifest = std::fs::read_to_string(self.manifest_path(config.name))
-            .with_context(|| format!("reading manifest for {}", config.name))?;
+        let loaded = if self.index_path(config.name).exists() {
+            self.open(config.name)?.load_all(None)?
+        } else {
+            self.load_v1_manifest(config.name)?
+        };
+        // overlay the config's specs (validated): the on-disk metadata
+        // carries shapes/roles but not distribution parameters
         let spec_by_name: HashMap<String, TensorSpec> = config
             .tensors()
             .into_iter()
             .map(|s| (s.name.clone(), s))
             .collect();
+        let mut tensors = Vec::with_capacity(loaded.tensors.len());
+        for (stored_spec, tensor) in loaded.tensors {
+            let spec = spec_by_name
+                .get(&stored_spec.name)
+                .with_context(|| format!("stored tensor {} not in config", stored_spec.name))?
+                .clone();
+            if tensor.n_elem() != spec.n_elem() {
+                bail!(
+                    "tensor {}: stored {} elems, config {}",
+                    spec.name,
+                    tensor.n_elem(),
+                    spec.n_elem()
+                );
+            }
+            tensors.push((spec, tensor));
+        }
+        Ok(CompressedModel::from_tensors(
+            config.name.to_string(),
+            tensors,
+        ))
+    }
+
+    /// Config-free v1 reader: shapes and roles come from the manifest;
+    /// the synthesis parameters v1 never stored are zeroed (they are not
+    /// needed to decode, serve, or migrate).
+    pub fn load_v1_manifest(&self, model: &str) -> Result<CompressedModel> {
+        let manifest = std::fs::read_to_string(self.manifest_path(model))
+            .with_context(|| format!("reading manifest for {model}"))?;
         let mut tensors = Vec::new();
         for line in manifest.lines().skip(1) {
             if line.trim().is_empty() {
@@ -173,27 +337,277 @@ impl ModelStore {
             if parts.len() != 6 {
                 bail!("malformed manifest line: {line}");
             }
-            let name = parts[0];
-            let spec = spec_by_name
-                .get(name)
-                .with_context(|| format!("manifest tensor {name} not in config"))?
-                .clone();
-            let blob = container::read_file(&self.tensor_path(config.name, name))?;
+            let (name, rows, cols, layer, block) =
+                (parts[0], parts[1], parts[2], parts[3], parts[4]);
+            let spec = TensorSpec {
+                name: name.to_string(),
+                rows: rows.parse().with_context(|| format!("rows of {name}"))?,
+                cols: cols.parse().with_context(|| format!("cols of {name}"))?,
+                block_type: BlockType::from_label(block)
+                    .ok_or_else(|| anyhow!("unknown block type {block} for {name}"))?,
+                layer: layer.parse().with_context(|| format!("layer of {name}"))?,
+                alpha: 0.0,
+                gamma: 0.0,
+                row_sigma: 0.0,
+            };
+            let blob = container::read_file(&self.tensor_path(model, name))?;
             if blob.n_elem != spec.n_elem() {
-                bail!("tensor {name}: stored {} elems, config {}", blob.n_elem, spec.n_elem());
+                bail!(
+                    "tensor {name}: stored {} elems, manifest {}",
+                    blob.n_elem,
+                    spec.n_elem()
+                );
             }
-            tensors.push((spec, blob));
+            tensors.push((spec, CompressedTensor::Ecf8(blob)));
         }
-        let index = tensors
+        Ok(CompressedModel::from_tensors(model.to_string(), tensors))
+    }
+
+    /// Open a v2 artifact for lazy access (index parsed, shard headers
+    /// validated, no tensor data read).
+    pub fn open(&self, model: &str) -> Result<LazyModel> {
+        LazyModel::open(&self.model_dir(model))
+    }
+
+    /// Rewrite a v1 store as container v2 (shards + binary index) in the
+    /// same model directory; the v1 files are left in place and
+    /// [`ModelStore::load`] prefers the v2 index from then on. With
+    /// `verify`, every tensor is decoded from both layouts and compared
+    /// bit for bit before the report claims success.
+    pub fn migrate(&self, model: &str, shard_limit: u64, verify: bool) -> Result<MigrationReport> {
+        let v1 = self.load_v1_manifest(model)?;
+        let v1_bytes: u64 = v1
+            .tensors
+            .iter()
+            .map(|(_, t)| t.payload_len() as u64)
+            .sum();
+        self.save_v2(&v1, shard_limit)?;
+        let lazy = self.open(model)?;
+        let v2_bytes = lazy.index().stored_bytes()
+            + std::fs::metadata(self.index_path(model))?.len();
+        let shards = lazy.index().n_shards;
+        if verify {
+            let v2 = lazy.load_all(None)?;
+            if v2.tensors.len() != v1.tensors.len() {
+                bail!("migration dropped tensors: {} vs {}", v2.tensors.len(), v1.tensors.len());
+            }
+            for ((sa, ta), (sb, tb)) in v1.tensors.iter().zip(&v2.tensors) {
+                if sa.name != sb.name {
+                    bail!("migration reordered tensors: {} vs {}", sa.name, sb.name);
+                }
+                if ta.decode_to_vec() != tb.decode_to_vec() {
+                    bail!("tensor {} decodes differently after migration", sa.name);
+                }
+            }
+        }
+        Ok(MigrationReport {
+            tensors: v1.tensors.len(),
+            shards,
+            v1_bytes,
+            v2_bytes,
+            verified: verify,
+        })
+    }
+}
+
+/// A v2 artifact opened for lazy access: the parsed [`TensorIndex`] plus
+/// shard paths. Individual tensors, whole layers, or the full model can
+/// be loaded on demand — the offload path (Table 3) reloads one layer at
+/// a time and never holds the whole model.
+pub struct LazyModel {
+    dir: PathBuf,
+    index: TensorIndex,
+    by_name: HashMap<String, usize>,
+}
+
+impl LazyModel {
+    /// Parse `<dir>/index.ecf8i` and validate every shard's header.
+    pub fn open(dir: &Path) -> Result<Self> {
+        let index_bytes = std::fs::read(dir.join(INDEX_FILE))
+            .with_context(|| format!("reading {} in {}", INDEX_FILE, dir.display()))?;
+        let index = TensorIndex::deserialize(&index_bytes)?;
+        for s in 0..index.n_shards {
+            let path = dir.join(shard_file_name(s));
+            let mut f = std::fs::File::open(&path)
+                .with_context(|| format!("opening shard {}", path.display()))?;
+            let mut head = [0u8; container::SHARD_HEADER_BYTES];
+            f.read_exact(&mut head)
+                .with_context(|| format!("shard header of {}", path.display()))?;
+            let claimed = container::parse_shard_header(&head)?;
+            if claimed as u32 != s {
+                bail!("shard {} claims index {claimed}", path.display());
+            }
+        }
+        let by_name = index
+            .entries
             .iter()
             .enumerate()
-            .map(|(i, (s, _))| (s.name.clone(), i))
+            .map(|(i, e)| (e.name.clone(), i))
             .collect();
-        Ok(CompressedModel {
-            name: config.name.to_string(),
-            tensors,
+        Ok(Self {
+            dir: dir.to_path_buf(),
             index,
+            by_name,
         })
+    }
+
+    pub fn index(&self) -> &TensorIndex {
+        &self.index
+    }
+
+    pub fn name(&self) -> &str {
+        &self.index.model
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.entries.is_empty()
+    }
+
+    /// Reconstruct a [`TensorSpec`] from an index entry (synthesis
+    /// parameters zeroed — the binary index stores shapes and roles).
+    pub fn spec(entry: &IndexEntry) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: entry.name.clone(),
+            rows: entry.rows as usize,
+            cols: entry.cols as usize,
+            block_type: BlockType::from_code(entry.block_type)
+                .ok_or_else(|| anyhow!("unknown block type code {}", entry.block_type))?,
+            layer: entry.layer as usize,
+            alpha: 0.0,
+            gamma: 0.0,
+            row_sigma: 0.0,
+        })
+    }
+
+    /// Read, CRC-verify, and parse one record through the codec registry.
+    fn load_entry(
+        &self,
+        entry: &IndexEntry,
+        file: &mut std::fs::File,
+    ) -> Result<CompressedTensor> {
+        let len = usize::try_from(entry.len).context("record length")?;
+        let mut buf = vec![0u8; len];
+        file.seek(SeekFrom::Start(entry.offset))?;
+        file.read_exact(&mut buf)
+            .with_context(|| format!("record bytes of {}", entry.name))?;
+        let (header, payload) = container::read_record(&buf)?;
+        if header.codec != entry.codec
+            || header.format != entry.format
+            || header.n_elem != entry.n_elem()
+            || header.payload_crc != entry.payload_crc
+        {
+            bail!("index entry for {} disagrees with its record header", entry.name);
+        }
+        Ok(codecs::parse_record(
+            header.codec,
+            header.format,
+            header.n_elem as usize,
+            payload,
+        )?)
+    }
+
+    fn open_shard(&self, shard: u32) -> Result<std::fs::File> {
+        let path = self.dir.join(shard_file_name(shard));
+        std::fs::File::open(&path).with_context(|| format!("opening {}", path.display()))
+    }
+
+    /// Load one tensor by name.
+    pub fn load_tensor(&self, name: &str) -> Result<(TensorSpec, CompressedTensor)> {
+        let &i = self
+            .by_name
+            .get(name)
+            .ok_or_else(|| anyhow!("tensor {name} not in index"))?;
+        let entry = &self.index.entries[i];
+        let mut f = self.open_shard(entry.shard)?;
+        Ok((Self::spec(entry)?, self.load_entry(entry, &mut f)?))
+    }
+
+    /// Load every tensor of transformer layer `layer` (embedding/head
+    /// excluded), in index order — the offload path's per-step reload.
+    pub fn load_layer(&self, layer: usize) -> Result<Vec<(TensorSpec, CompressedTensor)>> {
+        let mut out = Vec::new();
+        let mut file: Option<(u32, std::fs::File)> = None;
+        for entry in &self.index.entries {
+            let bt = BlockType::from_code(entry.block_type);
+            if entry.layer as usize != layer
+                || matches!(bt, Some(BlockType::Embedding) | Some(BlockType::Head))
+            {
+                continue;
+            }
+            // reuse the handle while consecutive records share a shard
+            if file.as_ref().map(|(s, _)| *s) != Some(entry.shard) {
+                file = Some((entry.shard, self.open_shard(entry.shard)?));
+            }
+            let f = &mut file.as_mut().unwrap().1;
+            out.push((Self::spec(entry)?, self.load_entry(entry, f)?));
+        }
+        Ok(out)
+    }
+
+    /// Eager whole-model load. With a pool, shards load in parallel (one
+    /// work item per shard; records within a shard stream in offset
+    /// order through one handle).
+    pub fn load_all(&self, pool: Option<&ThreadPool>) -> Result<CompressedModel> {
+        let n_shards = self.index.n_shards as usize;
+        let load_shard = |s: usize| -> Result<Vec<(usize, CompressedTensor)>> {
+            let mut f = self.open_shard(s as u32)?;
+            let mut out = Vec::new();
+            for (i, entry) in self.index.entries.iter().enumerate() {
+                if entry.shard as usize == s {
+                    out.push((i, self.load_entry(entry, &mut f)?));
+                }
+            }
+            Ok(out)
+        };
+        let per_shard: Vec<Result<Vec<(usize, CompressedTensor)>>> = match pool {
+            Some(pool) if n_shards > 1 => pool.scope_map(n_shards, load_shard),
+            _ => (0..n_shards).map(load_shard).collect(),
+        };
+        let mut slots: Vec<Option<CompressedTensor>> = Vec::with_capacity(self.len());
+        slots.resize_with(self.len(), || None);
+        for shard in per_shard {
+            for (i, tensor) in shard? {
+                slots[i] = Some(tensor);
+            }
+        }
+        let mut tensors = Vec::with_capacity(self.len());
+        for (entry, slot) in self.index.entries.iter().zip(slots) {
+            let tensor = slot.ok_or_else(|| anyhow!("record of {} never loaded", entry.name))?;
+            tensors.push((Self::spec(entry)?, tensor));
+        }
+        Ok(CompressedModel::from_tensors(
+            self.index.model.clone(),
+            tensors,
+        ))
+    }
+
+    /// Per-transformer-layer (raw, stored) byte totals straight from the
+    /// index — no tensor data read. Feeds
+    /// [`crate::tensormgr::offload::OffloadSim::from_layer_stats`]: the
+    /// Table-3 offload arithmetic over a real packed artifact.
+    pub fn layer_stats(&self) -> Vec<LayerStats> {
+        let mut by_layer: HashMap<u32, LayerStats> = HashMap::new();
+        for e in &self.index.entries {
+            if matches!(
+                BlockType::from_code(e.block_type),
+                Some(BlockType::Embedding) | Some(BlockType::Head)
+            ) {
+                continue;
+            }
+            let s = by_layer.entry(e.layer).or_insert(LayerStats {
+                raw_bytes: 0,
+                stored_bytes: 0,
+            });
+            s.raw_bytes += e.n_elem();
+            s.stored_bytes += e.len;
+        }
+        let mut layers: Vec<(u32, LayerStats)> = by_layer.into_iter().collect();
+        layers.sort_by_key(|(l, _)| *l);
+        layers.into_iter().map(|(_, s)| s).collect()
     }
 }
 
@@ -211,6 +625,10 @@ mod tests {
         assert!(m.get("nope").is_none());
         let saving = m.memory_saving();
         assert!(saving > 0.05 && saving < 0.35, "saving={saving}");
+        // weight-like tensors all pick the ECF8 codec
+        let census = m.codec_census();
+        assert_eq!(census.len(), 1);
+        assert_eq!(census[0].0, crate::codec::CodecId::Ecf8Huffman);
     }
 
     #[test]
@@ -220,26 +638,129 @@ mod tests {
         let a = CompressedModel::synthesize(&cfg, 2, None);
         let b = CompressedModel::synthesize(&cfg, 2, Some(&pool));
         assert_eq!(a.tensors.len(), b.tensors.len());
-        for ((sa, ba), (sb, bb)) in a.tensors.iter().zip(&b.tensors) {
+        for ((sa, ta), (sb, tb)) in a.tensors.iter().zip(&b.tensors) {
             assert_eq!(sa.name, sb.name);
-            assert_eq!(ba.encoded, bb.encoded, "{}", sa.name);
+            assert_eq!(ta.payload_bytes(), tb.payload_bytes(), "{}", sa.name);
         }
     }
 
     #[test]
-    fn save_load_roundtrip() {
+    fn save_load_roundtrip_v2() {
         let cfg = tiny_llm();
         let m = CompressedModel::synthesize(&cfg, 3, None);
-        let dir = std::env::temp_dir().join("ecf8_store_test");
+        let dir = std::env::temp_dir().join("ecf8_store_test_v2");
         std::fs::remove_dir_all(&dir).ok();
         let store = ModelStore::new(&dir);
         store.save(&m).unwrap();
+        assert!(dir.join(cfg.name).join(INDEX_FILE).exists());
         let back = store.load(&cfg).unwrap();
         assert_eq!(back.tensors.len(), m.tensors.len());
-        for ((sa, ba), (sb, bb)) in m.tensors.iter().zip(&back.tensors) {
+        for ((sa, ta), (sb, tb)) in m.tensors.iter().zip(&back.tensors) {
             assert_eq!(sa.name, sb.name);
-            assert_eq!(ba.encoded, bb.encoded);
-            assert_eq!(ba.packed, bb.packed);
+            assert_eq!(ta.payload_bytes(), tb.payload_bytes());
+            // config overlay restores synthesis params on load
+            assert!(sb.alpha > 0.0);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn save_load_roundtrip_v1_back_compat() {
+        let cfg = tiny_llm();
+        let m = CompressedModel::synthesize(&cfg, 4, None);
+        let dir = std::env::temp_dir().join("ecf8_store_test_v1");
+        std::fs::remove_dir_all(&dir).ok();
+        let store = ModelStore::new(&dir);
+        store.save_v1(&m).unwrap();
+        assert!(!dir.join(cfg.name).join(INDEX_FILE).exists());
+        let back = store.load(&cfg).unwrap();
+        assert_eq!(back.tensors.len(), m.tensors.len());
+        for ((sa, ta), (_, tb)) in m.tensors.iter().zip(&back.tensors) {
+            assert_eq!(ta.payload_bytes(), tb.payload_bytes(), "{}", sa.name);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn small_shard_limit_produces_multiple_shards_and_parallel_load_matches() {
+        let cfg = tiny_llm();
+        let m = CompressedModel::synthesize(&cfg, 5, None);
+        let dir = std::env::temp_dir().join("ecf8_store_test_shards");
+        std::fs::remove_dir_all(&dir).ok();
+        let store = ModelStore::new(&dir);
+        store.save_v2(&m, 1 << 20).unwrap(); // 1 MiB shards
+        let lazy = store.open(cfg.name).unwrap();
+        assert!(lazy.index().n_shards > 1, "expected multiple shards");
+        for s in 0..lazy.index().n_shards {
+            assert!(dir.join(cfg.name).join(shard_file_name(s)).exists());
+        }
+        let serial = lazy.load_all(None).unwrap();
+        let pool = ThreadPool::new(4);
+        let parallel = lazy.load_all(Some(&pool)).unwrap();
+        assert_eq!(serial.tensors.len(), m.tensors.len());
+        for ((sa, ta), (sb, tb)) in serial.tensors.iter().zip(&parallel.tensors) {
+            assert_eq!(sa.name, sb.name);
+            assert_eq!(ta.payload_bytes(), tb.payload_bytes());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lazy_tensor_and_layer_loads() {
+        let cfg = tiny_llm();
+        let m = CompressedModel::synthesize(&cfg, 6, None);
+        let dir = std::env::temp_dir().join("ecf8_store_test_lazy");
+        std::fs::remove_dir_all(&dir).ok();
+        let store = ModelStore::new(&dir);
+        store.save_v2(&m, 1 << 20).unwrap();
+        let lazy = store.open(cfg.name).unwrap();
+        assert_eq!(lazy.len(), m.tensors.len());
+
+        let (spec, tensor) = lazy.load_tensor("layers.0.attn.q_proj").unwrap();
+        let (want_spec, want) = m.get("layers.0.attn.q_proj").unwrap();
+        assert_eq!(spec.rows, want_spec.rows);
+        assert_eq!(tensor.decode_to_vec(), want.decode_to_vec());
+        assert!(lazy.load_tensor("nope").is_err());
+
+        let layer0 = lazy.load_layer(0).unwrap();
+        assert!(!layer0.is_empty());
+        for (s, t) in &layer0 {
+            assert_eq!(s.layer, 0);
+            assert!(!matches!(
+                s.block_type,
+                BlockType::Embedding | BlockType::Head
+            ));
+            let (_, want) = m.get(&s.name).unwrap();
+            assert_eq!(t.decode_to_vec(), want.decode_to_vec(), "{}", s.name);
+        }
+
+        let stats = lazy.layer_stats();
+        assert_eq!(stats.len(), cfg.n_layers);
+        assert!(stats.iter().all(|s| s.stored_bytes < s.raw_bytes));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn migrate_v1_store_bit_identical() {
+        let cfg = tiny_llm();
+        let m = CompressedModel::synthesize(&cfg, 7, None);
+        let dir = std::env::temp_dir().join("ecf8_store_test_migrate");
+        std::fs::remove_dir_all(&dir).ok();
+        let store = ModelStore::new(&dir);
+        store.save_v1(&m).unwrap();
+        let report = store.migrate(cfg.name, 2 << 20, true).unwrap();
+        assert!(report.verified);
+        assert_eq!(report.tensors, m.tensors.len());
+        assert!(report.shards >= 1);
+        // load now prefers the v2 index and still matches the original
+        let back = store.load(&cfg).unwrap();
+        for ((sa, ta), (_, tb)) in m.tensors.iter().zip(&back.tensors) {
+            assert_eq!(
+                ta.decode_to_vec(),
+                tb.decode_to_vec(),
+                "{} after migration",
+                sa.name
+            );
         }
         std::fs::remove_dir_all(&dir).ok();
     }
@@ -248,9 +769,9 @@ mod tests {
     fn decompressed_tensors_match_generation() {
         let cfg = tiny_llm();
         let m = CompressedModel::synthesize(&cfg, 4, None);
-        for (spec, blob) in m.tensors.iter().take(4) {
+        for (spec, tensor) in m.tensors.iter().take(4) {
             let original = generate_tensor_fp8(spec, 4);
-            assert_eq!(crate::codec::decompress_fp8(blob), original, "{}", spec.name);
+            assert_eq!(tensor.decode_to_vec(), original, "{}", spec.name);
         }
     }
 }

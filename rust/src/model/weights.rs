@@ -81,6 +81,16 @@ pub fn sample_tensor_fp8(spec: &TensorSpec, seed: u64, n: usize) -> Vec<u8> {
     out
 }
 
+/// Adversarial *incompressible* tensor: uniform random FP8 bytes, so the
+/// exponent field is uniform over the alphabet (H(E) ≈ 4 bits for E4M3).
+/// The §3.2 entropy probe must route these to the raw-FP8 passthrough
+/// codec — used by the container-v2 codec-selection tests and
+/// `ecf8 pack --noise-tensors`.
+pub fn generate_noise_fp8(n: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Xoshiro256::seed_from_u64(seed ^ 0x0F5E_ED00_0000_401Eu64);
+    (0..n).map(|_| (rng.next_u64() >> 56) as u8).collect()
+}
+
 /// Parallel full-tensor generation — bit-identical to
 /// [`generate_tensor_fp8`] (rows are independent streams).
 pub fn generate_tensor_fp8_parallel(spec: &TensorSpec, seed: u64, pool: &ThreadPool) -> Vec<u8> {
@@ -196,6 +206,15 @@ mod tests {
                 paper_saving * 100.0
             );
         }
+    }
+
+    #[test]
+    fn noise_tensor_has_near_uniform_exponents() {
+        let data = generate_noise_fp8(100_000, 1);
+        let h = exponent_entropy(&data, Fp8Format::E4M3);
+        assert!(h > 3.9, "H(E)={h}");
+        assert_eq!(data, generate_noise_fp8(100_000, 1), "deterministic");
+        assert_ne!(data, generate_noise_fp8(100_000, 2));
     }
 
     #[test]

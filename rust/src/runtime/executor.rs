@@ -12,7 +12,7 @@
 //! ℓ executes; its logits are bit-identical to [`LlmExecutor::forward`].
 
 use super::pjrt::{Artifact, Input, PjrtRuntime};
-use crate::codec::Ecf8Blob;
+use crate::codec::CompressedTensor;
 use crate::coordinator::decode_stage::{self, DEFAULT_DECODE_WINDOW};
 use crate::coordinator::metrics::SharedStageMetrics;
 use crate::coordinator::server::BatchEngine;
@@ -52,12 +52,12 @@ pub struct LlmExecutor {
     pub forwards: u64,
 }
 
-/// Borrow a tensor's blob out of the model (free function so call sites
-/// can hold the borrow while `jit` is borrowed mutably).
-fn blob_of<'m>(model: &'m CompressedModel, name: &str) -> Result<&'m Ecf8Blob> {
+/// Borrow a tensor out of the model (free function so call sites can
+/// hold the borrow while `jit` is borrowed mutably).
+fn tensor_of<'m>(model: &'m CompressedModel, name: &str) -> Result<&'m CompressedTensor> {
     model
         .get(name)
-        .map(|(_, b)| b)
+        .map(|(_, t)| t)
         .ok_or_else(|| anyhow!("tensor {name} missing"))
 }
 
@@ -157,9 +157,9 @@ impl LlmExecutor {
     /// Decode `tensor` into the shared arena (zero-copy: the returned
     /// range indexes [`JitDecompressor::arena`]).
     fn decode_to_arena(&mut self, tensor: &str, n_expect: usize) -> Result<Range<usize>> {
-        let blob = blob_of(&self.model, tensor)?;
-        debug_assert_eq!(blob.n_elem, n_expect, "{tensor}");
-        Ok(self.jit.decode_to_arena(blob))
+        let t = tensor_of(&self.model, tensor)?;
+        debug_assert_eq!(t.n_elem(), n_expect, "{tensor}");
+        Ok(self.jit.decode_to_arena(t))
     }
 
     /// Full forward: `tokens` is `batch × SEQ_LEN` row-major; returns
@@ -243,17 +243,18 @@ impl LlmExecutor {
         let layer_art = self.rt.load(&format!("{}_layer_b{batch}", self.prefix))?;
         let head_art = self.rt.load(&format!("{}_head_b{batch}", self.prefix))?;
 
-        // stage plan: embed | layer 0..L | head
-        let mut stages: Vec<Vec<&Ecf8Blob>> = Vec::with_capacity(n_layers + 2);
-        stages.push(vec![blob_of(&self.model, "embed_tokens")?]);
+        // stage plan: embed | layer 0..L | head (work items behind the
+        // codec seam — each stage decodes whatever codec its records use)
+        let mut stages: Vec<Vec<&CompressedTensor>> = Vec::with_capacity(n_layers + 2);
+        stages.push(vec![tensor_of(&self.model, "embed_tokens")?]);
         for l in 0..n_layers {
             let mut layer = Vec::with_capacity(7);
             for name in Self::layer_tensor_names(l) {
-                layer.push(blob_of(&self.model, &name)?);
+                layer.push(tensor_of(&self.model, &name)?);
             }
             stages.push(layer);
         }
-        stages.push(vec![blob_of(&self.model, "lm_head")?]);
+        stages.push(vec![tensor_of(&self.model, "lm_head")?]);
 
         let shapes = self.layer_tensor_shapes();
         let ones_d = vec![1.0f32; d as usize];

@@ -1,7 +1,9 @@
 //! Just-in-time layer decompression (§3.3): the forward hook analogue.
 //!
-//! Before layer ℓᵢ executes, its tensors are decoded from their ECF8
-//! blobs into the shared [`DecodeBuffer`]; the buffer is recycled for
+//! Before layer ℓᵢ executes, its tensors are decoded from their
+//! [`CompressedTensor`] records (the codec seam — ECF8 blobs, raw-FP8
+//! passthrough, or any registered codec) into the shared
+//! [`DecodeBuffer`]; the buffer is recycled for
 //! ℓᵢ₊₁ as soon as ℓᵢ's execution has consumed it (PJRT copies inputs
 //! into device buffers at execute time, matching the paper's
 //! "buffer becomes available after the layer's forward pass").
@@ -26,11 +28,12 @@
 //!
 //! All paths share one [`DecodeTableCache`] keyed by code book, so the
 //! multi-symbol LUT tiers are built once per distinct book (layers often
-//! share books) instead of once per decode call.
+//! share books) instead of once per decode call. Tensors on codecs
+//! without a code book (raw passthrough) simply carry no table entry.
 
 use super::buffer::DecodeBuffer;
-use crate::codec::decode::{decode_into_cached, DecodeTableCache, DecodeTables};
-use crate::codec::Ecf8Blob;
+use crate::codec::decode::{DecodeTableCache, DecodeTables};
+use crate::codec::CompressedTensor;
 use crate::util::threadpool::ThreadPool;
 use std::ops::Range;
 use std::sync::Arc;
@@ -55,14 +58,15 @@ pub struct LayerArena {
 }
 
 impl LayerArena {
-    /// Lay out the arena for `blobs`: per-tensor extents computed, backing
-    /// store grown if needed (steady state: no allocation — arenas are
-    /// recycled across forwards at the model's high-water mark).
-    pub fn prepare(&mut self, blobs: &[&Ecf8Blob]) {
+    /// Lay out the arena for `tensors`: per-tensor extents computed,
+    /// backing store grown if needed (steady state: no allocation —
+    /// arenas are recycled across forwards at the model's high-water
+    /// mark).
+    pub fn prepare(&mut self, tensors: &[&CompressedTensor]) {
         self.ends.clear();
         let mut off = 0usize;
-        for blob in blobs {
-            off += blob.n_elem;
+        for tensor in tensors {
+            off += tensor.n_elem();
             self.ends.push(off);
         }
         if self.buf.len() < off {
@@ -76,12 +80,12 @@ impl LayerArena {
     /// they parallelise without coordination. Serial without a pool.
     pub fn decode_stage_tensors(
         &mut self,
-        blobs: &[&Ecf8Blob],
-        tables: &[Arc<DecodeTables>],
+        tensors: &[&CompressedTensor],
+        tables: &[Option<Arc<DecodeTables>>],
         pool: Option<&ThreadPool>,
     ) {
-        assert_eq!(blobs.len(), tables.len(), "one table set per blob");
-        self.prepare(blobs);
+        assert_eq!(tensors.len(), tables.len(), "one table slot per tensor");
+        self.prepare(tensors);
         let ends = &self.ends;
         // SAFETY-SUPPORT: hand workers the base address; extents
         // [start_i, ends[i]) are disjoint and in-bounds by construction
@@ -94,25 +98,25 @@ impl LayerArena {
             // buffer; no other code touches the buffer while this runs.
             let dst =
                 unsafe { std::slice::from_raw_parts_mut((base_addr as *mut u8).add(start), len) };
-            decode_into_cached(blobs[i], dst, None, &tables[i]);
+            tensors[i].decode_into_cached(dst, None, tables[i].as_deref());
         };
         match pool {
-            Some(pool) if blobs.len() > 1 => {
-                pool.scope_chunks(blobs.len(), blobs.len(), |_, s, e| {
+            Some(pool) if tensors.len() > 1 => {
+                pool.scope_chunks(tensors.len(), tensors.len(), |_, s, e| {
                     for i in s..e {
                         decode_one(i);
                     }
                 });
             }
             _ => {
-                for i in 0..blobs.len() {
+                for i in 0..tensors.len() {
                     decode_one(i);
                 }
             }
         }
     }
 
-    /// Decoded bytes of the `i`-th blob of this stage.
+    /// Decoded bytes of the `i`-th tensor of this stage.
     pub fn tensor(&self, i: usize) -> &[u8] {
         let start = if i == 0 { 0 } else { self.ends[i - 1] };
         &self.buf[start..self.ends[i]]
@@ -153,9 +157,10 @@ impl JitDecompressor {
         }
     }
 
-    /// Cached decode tiers for `blob`'s code book (built on first use).
-    pub fn tables_for(&mut self, blob: &Ecf8Blob) -> Arc<DecodeTables> {
-        self.tables.get_or_build(blob)
+    /// Cached decode tiers for `tensor`'s code book (built on first
+    /// use); `None` when its codec needs no tables (raw passthrough).
+    pub fn tables_for(&mut self, tensor: &CompressedTensor) -> Option<Arc<DecodeTables>> {
+        tensor.tables(&mut self.tables)
     }
 
     /// The pieces the coordinator's decode-ahead stage needs: the shared
@@ -173,30 +178,35 @@ impl JitDecompressor {
         self.stats.bytes_decoded += bytes;
     }
 
-    /// Decode `blob` into the shared buffer and run `consume` on the
+    /// Decode `tensor` into the shared buffer and run `consume` on the
     /// decoded bytes (the layer execution). The buffer is free again when
     /// this returns.
-    pub fn with_decoded<R>(&mut self, blob: &Ecf8Blob, consume: impl FnOnce(&[u8]) -> R) -> R {
+    pub fn with_decoded<R>(
+        &mut self,
+        tensor: &CompressedTensor,
+        consume: impl FnOnce(&[u8]) -> R,
+    ) -> R {
         let t0 = std::time::Instant::now();
-        let tables = self.tables.get_or_build(blob);
+        let tables = tensor.tables(&mut self.tables);
         let pool = self.pool.clone();
-        let dst = self.buffer.slice_mut(blob.n_elem);
-        decode_into_cached(blob, dst, pool.as_deref(), &tables);
+        let n = tensor.n_elem();
+        let dst = self.buffer.slice_mut(n);
+        tensor.decode_into_cached(dst, pool.as_deref(), tables.as_deref());
         self.stats.tensors_decoded += 1;
-        self.stats.bytes_decoded += blob.n_elem as u64;
+        self.stats.bytes_decoded += n as u64;
         self.stats.decode_seconds += t0.elapsed().as_secs_f64();
-        consume(self.buffer.slice(blob.n_elem))
+        consume(self.buffer.slice(n))
     }
 
     /// Decode a set of tensors sequentially into the shared buffer,
     /// calling `consume` once per tensor (layer-by-layer order).
     pub fn for_each_decoded(
         &mut self,
-        blobs: &[&Ecf8Blob],
+        tensors: &[&CompressedTensor],
         mut consume: impl FnMut(usize, &[u8]),
     ) {
-        for (i, blob) in blobs.iter().enumerate() {
-            self.with_decoded(blob, |bytes| consume(i, bytes));
+        for (i, tensor) in tensors.iter().enumerate() {
+            self.with_decoded(tensor, |bytes| consume(i, bytes));
         }
     }
 
@@ -205,17 +215,18 @@ impl JitDecompressor {
         self.buffer.reset();
     }
 
-    /// Decode `blob` into the arena and return its extent. Slices of all
-    /// tensors decoded since [`Self::begin_layer`] stay simultaneously
+    /// Decode `tensor` into the arena and return its extent. Slices of
+    /// all tensors decoded since [`Self::begin_layer`] stay simultaneously
     /// valid — index [`Self::arena`] with the returned ranges.
-    pub fn decode_to_arena(&mut self, blob: &Ecf8Blob) -> Range<usize> {
+    pub fn decode_to_arena(&mut self, tensor: &CompressedTensor) -> Range<usize> {
         let t0 = std::time::Instant::now();
-        let tables = self.tables.get_or_build(blob);
+        let tables = tensor.tables(&mut self.tables);
         let pool = self.pool.clone();
-        let (range, dst) = self.buffer.alloc_mut(blob.n_elem);
-        decode_into_cached(blob, dst, pool.as_deref(), &tables);
+        let n = tensor.n_elem();
+        let (range, dst) = self.buffer.alloc_mut(n);
+        tensor.decode_into_cached(dst, pool.as_deref(), tables.as_deref());
         self.stats.tensors_decoded += 1;
-        self.stats.bytes_decoded += blob.n_elem as u64;
+        self.stats.bytes_decoded += n as u64;
         self.stats.decode_seconds += t0.elapsed().as_secs_f64();
         range
     }
@@ -246,10 +257,11 @@ impl JitDecompressor {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::codec::compress_fp8;
+    use crate::codec::codecs::RawTensor;
+    use crate::codec::{compress_fp8, Fp8Format};
     use crate::util::prng::Xoshiro256;
 
-    fn blob(n: usize, seed: u64) -> (Vec<u8>, Ecf8Blob) {
+    fn blob(n: usize, seed: u64) -> (Vec<u8>, CompressedTensor) {
         let mut rng = Xoshiro256::seed_from_u64(seed);
         let data: Vec<u8> = (0..n)
             .map(|_| {
@@ -257,8 +269,18 @@ mod tests {
                 crate::fp8::F8E4M3::from_f32(x).to_bits()
             })
             .collect();
-        let b = compress_fp8(&data);
+        let b = CompressedTensor::Ecf8(compress_fp8(&data));
         (data, b)
+    }
+
+    fn raw(n: usize, seed: u64) -> (Vec<u8>, CompressedTensor) {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let data: Vec<u8> = (0..n).map(|_| (rng.next_u64() >> 56) as u8).collect();
+        let t = CompressedTensor::Raw(RawTensor {
+            format: Fp8Format::E4M3,
+            bytes: data.clone(),
+        });
+        (data, t)
     }
 
     #[test]
@@ -332,10 +354,10 @@ mod tests {
         let (d1, b1) = blob(8_000, 10);
         let (d2, b2) = blob(3_000, 11);
         let (d3, b3) = blob(5_000, 12);
-        let blobs: Vec<&Ecf8Blob> = vec![&b1, &b2, &b3];
+        let blobs: Vec<&CompressedTensor> = vec![&b1, &b2, &b3];
         let mut cache = DecodeTableCache::new();
-        let tables: Vec<Arc<DecodeTables>> =
-            blobs.iter().map(|b| cache.get_or_build(b)).collect();
+        let tables: Vec<Option<Arc<DecodeTables>>> =
+            blobs.iter().map(|b| b.tables(&mut cache)).collect();
 
         let mut arena = LayerArena::default();
         arena.decode_stage_tensors(&blobs, &tables, None);
@@ -358,12 +380,35 @@ mod tests {
     }
 
     #[test]
+    fn mixed_codec_stage_decodes_bit_exact() {
+        // an ECF8 tensor and a raw-passthrough tensor share one arena
+        let (d1, b1) = blob(6_000, 20);
+        let (d2, b2) = raw(2_500, 21);
+        let tensors: Vec<&CompressedTensor> = vec![&b1, &b2];
+        let mut cache = DecodeTableCache::new();
+        let tables: Vec<Option<Arc<DecodeTables>>> =
+            tensors.iter().map(|t| t.tables(&mut cache)).collect();
+        assert!(tables[0].is_some());
+        assert!(tables[1].is_none(), "raw passthrough needs no tables");
+        let mut arena = LayerArena::default();
+        arena.decode_stage_tensors(&tensors, &tables, None);
+        assert_eq!(arena.tensor(0), &d1[..]);
+        assert_eq!(arena.tensor(1), &d2[..]);
+        // and through the jit buffer paths
+        let mut jit = JitDecompressor::new(6_000, None);
+        jit.with_decoded(&b2, |bytes| assert_eq!(bytes, &d2[..]));
+        jit.begin_layer();
+        let r = jit.decode_to_arena(&b2);
+        assert_eq!(&jit.arena()[r], &d2[..]);
+    }
+
+    #[test]
     fn decode_ahead_parts_share_table_cache() {
         let (_, b1) = blob(2_000, 14);
         let mut jit = JitDecompressor::new(0, None);
-        let t1 = jit.tables_for(&b1);
+        let t1 = jit.tables_for(&b1).expect("ecf8 tensor has tables");
         let (cache, spares) = jit.decode_ahead_parts();
-        let t2 = cache.get_or_build(&b1);
+        let t2 = b1.tables(cache).expect("ecf8 tensor has tables");
         assert!(Arc::ptr_eq(&t1, &t2), "same cached tables");
         assert!(spares.is_empty());
         spares.push(LayerArena::default());

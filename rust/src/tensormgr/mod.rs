@@ -8,4 +8,4 @@ pub mod offload;
 
 pub use buffer::DecodeBuffer;
 pub use jit::{JitDecompressor, LayerArena};
-pub use offload::{DeviceModel, OffloadSim};
+pub use offload::{DeviceModel, LayerStats, OffloadSim};

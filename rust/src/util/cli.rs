@@ -47,11 +47,21 @@ impl Args {
     }
 }
 
-/// A command with named options, parsed from an iterator of raw args.
+/// Declarative positional-argument specification (help/usage only; the
+/// parser collects positionals in order regardless).
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+}
+
+/// A command with named options and declared positional arguments,
+/// parsed from an iterator of raw args.
 pub struct Command {
     pub name: &'static str,
     pub about: &'static str,
     pub opts: Vec<OptSpec>,
+    pub args: Vec<ArgSpec>,
 }
 
 #[derive(Debug)]
@@ -79,7 +89,27 @@ impl Command {
             name,
             about,
             opts: Vec::new(),
+            args: Vec::new(),
         }
+    }
+
+    /// Declare a positional argument (shown in the usage line and the
+    /// Arguments section of `--help`).
+    pub fn arg(mut self, name: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec { name, help });
+        self
+    }
+
+    /// One-line usage synopsis: `name [options] <arg1> <arg2>`.
+    pub fn usage_line(&self) -> String {
+        let mut s = self.name.to_string();
+        if !self.opts.is_empty() {
+            s.push_str(" [options]");
+        }
+        for a in &self.args {
+            s.push_str(&format!(" <{}>", a.name));
+        }
+        s
     }
 
     pub fn opt(mut self, name: &'static str, help: &'static str) -> Self {
@@ -118,7 +148,19 @@ impl Command {
     }
 
     pub fn help_text(&self) -> String {
-        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        let mut s = format!(
+            "{} — {}\n\nUsage: {}\n",
+            self.name,
+            self.about,
+            self.usage_line()
+        );
+        if !self.args.is_empty() {
+            s.push_str("\nArguments:\n");
+            for a in &self.args {
+                s.push_str(&format!("  <{}>\n      {}\n", a.name, a.help));
+            }
+        }
+        s.push_str("\nOptions:\n");
         for o in &self.opts {
             let val = if o.takes_value { " <value>" } else { "" };
             let def = o
@@ -178,6 +220,7 @@ mod tests {
 
     fn cmd() -> Command {
         Command::new("test", "a test command")
+            .arg("input", "input file")
             .opt("model", "model name")
             .opt_default("seed", "rng seed", "42")
             .flag("verbose", "log more")
@@ -235,6 +278,9 @@ mod tests {
             cmd().parse(sv(&["-h"])),
             Err(CliError::HelpRequested)
         ));
-        assert!(cmd().help_text().contains("--seed"));
+        let help = cmd().help_text();
+        assert!(help.contains("--seed"));
+        assert!(help.contains("<input>"), "positional in help: {help}");
+        assert_eq!(cmd().usage_line(), "test [options] <input>");
     }
 }

@@ -119,24 +119,39 @@ impl ThreadPool {
         done_rx.recv().expect("workers signal completion");
     }
 
+    /// Map `f` over `0..n` in parallel, collecting results in order, with
+    /// no bounds beyond `T: Send`: each result is written exactly once
+    /// into its pre-allocated slot, one item per chunk (so wildly uneven
+    /// work items — e.g. whole model tensors — still balance).
+    pub fn scope_map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Send + Sync,
+    {
+        let mut slots: Vec<Option<T>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        let addr = slots.as_mut_ptr() as usize;
+        self.scope_chunks(n, n, move |_, s, e| {
+            for i in s..e {
+                let v = f(i);
+                // SAFETY: slot `i` belongs to exactly one chunk range
+                // [s, e), each written by a single worker; scope_chunks
+                // blocks until every chunk completes, so `slots` outlives
+                // all writes and no slot is aliased.
+                unsafe { *(addr as *mut Option<T>).add(i) = Some(v) };
+            }
+        });
+        slots.into_iter().map(|s| s.expect("slot filled")).collect()
+    }
+
     /// Map `f` over `0..n` in parallel, collecting results in order.
+    /// (Legacy bounds; [`ThreadPool::scope_map`] is the general form.)
     pub fn par_map<T, F>(&self, n: usize, f: F) -> Vec<T>
     where
         T: Send + Default + Clone,
         F: Fn(usize) -> T + Send + Sync,
     {
-        let mut out = vec![T::default(); n];
-        {
-            let slots: Vec<Mutex<&mut T>> = out.iter_mut().map(Mutex::new).collect();
-            let slots = &slots;
-            let f = &f;
-            self.scope_chunks(n, self.size * 4, move |_, s, e| {
-                for i in s..e {
-                    **slots[i].lock().unwrap() = f(i);
-                }
-            });
-        }
-        out
+        self.scope_map(n, f)
     }
 }
 
@@ -202,6 +217,20 @@ mod tests {
         for (i, v) in out.iter().enumerate() {
             assert_eq!(*v, i * i);
         }
+    }
+
+    #[test]
+    fn scope_map_no_default_bound_and_ordered() {
+        // String is Clone but the point is Vec<(usize, String)> results
+        // with no Default requirement on the tuple
+        let pool = ThreadPool::new(3);
+        let out = pool.scope_map(57, |i| (i, format!("item-{i}")));
+        assert_eq!(out.len(), 57);
+        for (i, (j, s)) in out.iter().enumerate() {
+            assert_eq!(*j, i);
+            assert_eq!(s, &format!("item-{i}"));
+        }
+        assert!(pool.scope_map(0, |i| i).is_empty());
     }
 
     #[test]

@@ -1,0 +1,300 @@
+//! Container-v2 integration: the sharded artifact + binary index + codec
+//! registry end to end — migration bit-identity, corruption/truncation
+//! robustness (the "never panic" property), mixed-codec stores, and the
+//! index-driven offload arithmetic.
+
+use ecf8::codec::container::{self, ContainerError, TensorIndex};
+use ecf8::codec::{codecs, compress_fp8, CodecId, CompressedTensor, Ecf8Params, Fp8Format};
+use ecf8::model::config::{tiny_llm, BlockType, TensorSpec};
+use ecf8::model::store::{CompressedModel, LazyModel, ModelStore};
+use ecf8::model::weights::{generate_noise_fp8, generate_tensor_fp8};
+use ecf8::tensormgr::offload::OffloadSim;
+use ecf8::util::prng::Xoshiro256;
+
+fn weight_bytes(n: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    (0..n)
+        .map(|_| {
+            let x = (ecf8::util::sampling::normal(&mut rng) * 0.05) as f32;
+            ecf8::fp8::F8E4M3::from_f32(x).to_bits()
+        })
+        .collect()
+}
+
+fn spec(name: &str, rows: usize, cols: usize, layer: usize, bt: BlockType) -> TensorSpec {
+    TensorSpec {
+        name: name.to_string(),
+        rows,
+        cols,
+        block_type: bt,
+        layer,
+        alpha: 0.0,
+        gamma: 0.0,
+        row_sigma: 0.0,
+    }
+}
+
+/// A small mixed-codec model: weight-like tensors (ECF8) plus one
+/// incompressible tensor the entropy probe routes to raw passthrough.
+fn small_mixed_model(name: &str) -> (CompressedModel, Vec<Vec<u8>>) {
+    let planes = vec![
+        weight_bytes(3_000, 1),
+        weight_bytes(2_000, 2),
+        generate_noise_fp8(1_500, 3),
+        weight_bytes(2_500, 4),
+    ];
+    let specs = vec![
+        spec("embed", 30, 100, 0, BlockType::Embedding),
+        spec("layers.0.a", 20, 100, 0, BlockType::AttnQkv),
+        spec("layers.0.noise", 15, 100, 0, BlockType::MlpUp),
+        spec("layers.1.a", 25, 100, 1, BlockType::AttnQkv),
+    ];
+    let tensors = specs
+        .into_iter()
+        .zip(&planes)
+        .map(|(s, d)| {
+            (
+                s,
+                codecs::compress_auto(d, Fp8Format::E4M3, Ecf8Params::default()),
+            )
+        })
+        .collect();
+    (
+        CompressedModel::from_tensors(name.to_string(), tensors),
+        planes,
+    )
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+// ---------------------------------------------------------------------------
+// Truncation property: every byte-boundary cut of every v2 artifact (and
+// the v1 container) is a structured error — Truncated or CrcMismatch —
+// never a panic.
+// ---------------------------------------------------------------------------
+
+fn structured(err: &ContainerError) -> bool {
+    matches!(
+        err,
+        ContainerError::Truncated { .. } | ContainerError::CrcMismatch { .. }
+    )
+}
+
+#[test]
+fn truncating_v1_container_at_every_byte_is_structured_error() {
+    let blob = compress_fp8(&weight_bytes(4_000, 10));
+    let bytes = container::serialize(&blob);
+    container::deserialize(&bytes).expect("intact container parses");
+    for cut in 0..bytes.len() {
+        let err = container::deserialize(&bytes[..cut]).unwrap_err();
+        assert!(structured(&err), "cut={cut}: unexpected {err}");
+    }
+}
+
+#[test]
+fn truncating_v2_index_and_shards_at_every_byte_is_structured_error() {
+    let (model, _) = small_mixed_model("trunc-prop");
+    let dir = tmp("ecf8_v2_trunc_prop");
+    let store = ModelStore::new(&dir);
+    store.save_v2(&model, 4 << 10).unwrap(); // 4 KiB shards => several
+    let model_dir = dir.join("trunc-prop");
+
+    let index_bytes = std::fs::read(model_dir.join(container::INDEX_FILE)).unwrap();
+    TensorIndex::deserialize(&index_bytes).expect("intact index parses");
+    for cut in 0..index_bytes.len() {
+        let err = TensorIndex::deserialize(&index_bytes[..cut]).unwrap_err();
+        assert!(structured(&err), "index cut={cut}: unexpected {err}");
+    }
+
+    let lazy = LazyModel::open(&model_dir).unwrap();
+    assert!(lazy.index().n_shards > 1, "want a multi-shard artifact");
+    for s in 0..lazy.index().n_shards {
+        let shard_bytes = std::fs::read(model_dir.join(container::shard_file_name(s))).unwrap();
+        let full = container::walk_shard(&shard_bytes).unwrap();
+        for cut in 0..shard_bytes.len() {
+            match container::walk_shard(&shard_bytes[..cut]) {
+                // a cut exactly on a record boundary is a valid shorter
+                // scan — the index (whose entries then point past EOF)
+                // catches it, not the scan
+                Ok(records) => assert!(
+                    records.len() < full.len(),
+                    "shard {s} cut={cut}: prefix scan can't see all records"
+                ),
+                Err(err) => {
+                    assert!(structured(&err), "shard {s} cut={cut}: unexpected {err}")
+                }
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn container_error_implements_std_error() {
+    // the satellite contract: ContainerError is a real std error with a
+    // Display that names the failure
+    fn takes_std_error<E: std::error::Error>(e: E) -> String {
+        format!("{e}")
+    }
+    let msg = takes_std_error(ContainerError::Truncated { need: 10, have: 3 });
+    assert!(msg.contains("truncated"));
+    let msg = takes_std_error(ContainerError::CrcMismatch {
+        stored: 1,
+        computed: 2,
+    });
+    assert!(msg.contains("CRC"));
+}
+
+// ---------------------------------------------------------------------------
+// Migration + corruption detection + mixed codecs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn migrate_tiny_llm_v1_store_roundtrips_bit_identically() {
+    let cfg = tiny_llm();
+    let model = CompressedModel::synthesize(&cfg, 31, None);
+    let dir = tmp("ecf8_v2_migrate_e2e");
+    let store = ModelStore::new(&dir);
+    store.save_v1(&model).unwrap();
+
+    let report = store.migrate(cfg.name, 2 << 20, true).unwrap();
+    assert!(report.verified);
+    assert_eq!(report.tensors, model.tensors.len());
+    assert!(report.shards > 1, "2 MiB shards over a ~6 MB model");
+
+    // post-migration: load prefers v2 and every decoded plane matches the
+    // original generation
+    let back = store.load(&cfg).unwrap();
+    for (spec, tensor) in back.tensors.iter().take(6) {
+        assert_eq!(
+            tensor.decode_to_vec(),
+            generate_tensor_fp8(spec, 31),
+            "{}",
+            spec.name
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupted_shard_record_is_detected_on_load() {
+    let (model, _) = small_mixed_model("corrupt");
+    let dir = tmp("ecf8_v2_corrupt");
+    let store = ModelStore::new(&dir);
+    store.save_v2(&model, 64 << 20).unwrap();
+    let shard_path = dir.join("corrupt").join(container::shard_file_name(0));
+    let mut bytes = std::fs::read(&shard_path).unwrap();
+    let n = bytes.len();
+    bytes[n - 40] ^= 0x80; // flip a payload bit in the last record
+    std::fs::write(&shard_path, &bytes).unwrap();
+    let lazy = LazyModel::open(dir.join("corrupt").as_path()).unwrap();
+    let err = lazy.load_all(None).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("CRC"),
+        "corruption must surface as a CRC error, got: {err:#}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn mixed_codec_store_roundtrips_through_registry() {
+    let (model, planes) = small_mixed_model("mixed");
+    // the probe split the tensors across codecs
+    let census = model.codec_census();
+    assert!(census.iter().any(|(c, _)| *c == CodecId::Ecf8Huffman));
+    assert!(census.iter().any(|(c, _)| *c == CodecId::RawFp8));
+
+    let dir = tmp("ecf8_v2_mixed");
+    let store = ModelStore::new(&dir);
+    store.save_v2(&model, 8 << 10).unwrap();
+    let lazy = store.open("mixed").unwrap();
+    let back = lazy.load_all(None).unwrap();
+    assert_eq!(back.tensors.len(), model.tensors.len());
+    for (i, ((sa, ta), (sb, tb))) in model.tensors.iter().zip(&back.tensors).enumerate() {
+        assert_eq!(sa.name, sb.name);
+        assert_eq!(ta.codec_id(), tb.codec_id(), "{}", sa.name);
+        assert_eq!(tb.decode_to_vec(), planes[i], "{}", sa.name);
+    }
+    // the noise tensor really is raw on disk
+    let noise_entry = lazy
+        .index()
+        .entries
+        .iter()
+        .find(|e| e.name == "layers.0.noise")
+        .unwrap();
+    assert_eq!(noise_entry.codec, CodecId::RawFp8.as_u8());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Lazy per-layer load feeding the decode stage and the offload arithmetic
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lazy_layer_load_drives_decode_stage_bit_exact() {
+    let (model, planes) = small_mixed_model("lazy-stage");
+    let dir = tmp("ecf8_v2_lazy_stage");
+    let store = ModelStore::new(&dir);
+    store.save_v2(&model, 8 << 10).unwrap();
+    let lazy = store.open("lazy-stage").unwrap();
+
+    // stage plan keyed by index records: one stage per transformer layer,
+    // loaded lazily (embedding/head excluded by load_layer)
+    let layer0 = lazy.load_layer(0).unwrap();
+    let layer1 = lazy.load_layer(1).unwrap();
+    assert_eq!(layer0.len(), 2); // layers.0.a + layers.0.noise
+    assert_eq!(layer1.len(), 1);
+    let stages: Vec<Vec<&CompressedTensor>> = vec![
+        layer0.iter().map(|(_, t)| t).collect(),
+        layer1.iter().map(|(_, t)| t).collect(),
+    ];
+    let mut jit = ecf8::tensormgr::JitDecompressor::new(0, None);
+    let expect: Vec<Vec<&[u8]>> = vec![
+        vec![&planes[1][..], &planes[2][..]],
+        vec![&planes[3][..]],
+    ];
+    ecf8::coordinator::decode_stage::with_stages_decoded(
+        &mut jit,
+        None,
+        2,
+        &stages,
+        None,
+        |l, arena| -> Result<(), String> {
+            assert_eq!(arena.len(), expect[l].len());
+            for (i, want) in expect[l].iter().enumerate() {
+                assert_eq!(arena.tensor(i), *want, "stage {l} tensor {i}");
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn index_layer_stats_feed_offload_sim() {
+    let cfg = tiny_llm();
+    let model = CompressedModel::synthesize(&cfg, 33, None);
+    let dir = tmp("ecf8_v2_offload");
+    let store = ModelStore::new(&dir);
+    store.save_v2(&model, 1 << 20).unwrap();
+    let lazy = store.open(cfg.name).unwrap();
+    let stats = lazy.layer_stats();
+    assert_eq!(stats.len(), cfg.n_layers);
+    let device = ecf8::tensormgr::offload::device_by_name("RTX4090 (24 GB)").unwrap();
+    let sim = OffloadSim::from_layer_stats(device, &stats, 0.05, 20);
+    assert_eq!(
+        sim.reload_bytes_raw,
+        stats.iter().map(|s| s.raw_bytes).sum::<u64>()
+    );
+    let fp8 = sim.run_fp8();
+    let ecf8_run = sim.run_ecf8();
+    // compressed layers move fewer bytes per step => faster and smaller
+    assert!(ecf8_run.e2e_latency_s < fp8.e2e_latency_s);
+    assert!(ecf8_run.peak_memory_bytes < fp8.peak_memory_bytes);
+    std::fs::remove_dir_all(&dir).ok();
+}

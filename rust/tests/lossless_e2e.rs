@@ -26,17 +26,25 @@ fn every_tensor_of_a_model_roundtrips() {
 
 #[test]
 fn store_roundtrip_preserves_bits() {
+    // `save` writes the container-v2 sharded layout; `save_v1` the legacy
+    // per-tensor files — both must round-trip bit-exactly through `load`.
     let cfg = tiny_llm();
     let model = CompressedModel::synthesize(&cfg, 12, None);
-    let dir = std::env::temp_dir().join("ecf8_e2e_store");
-    std::fs::remove_dir_all(&dir).ok();
-    let store = ModelStore::new(&dir);
-    store.save(&model).unwrap();
-    let back = store.load(&cfg).unwrap();
-    for ((sa, ba), (_, bb)) in model.tensors.iter().zip(&back.tensors) {
-        assert_eq!(decompress_fp8(ba), decompress_fp8(bb), "{}", sa.name);
+    for v1 in [false, true] {
+        let dir = std::env::temp_dir().join(format!("ecf8_e2e_store_{v1}"));
+        std::fs::remove_dir_all(&dir).ok();
+        let store = ModelStore::new(&dir);
+        if v1 {
+            store.save_v1(&model).unwrap();
+        } else {
+            store.save(&model).unwrap();
+        }
+        let back = store.load(&cfg).unwrap();
+        for ((sa, ta), (_, tb)) in model.tensors.iter().zip(&back.tensors) {
+            assert_eq!(ta.decode_to_vec(), tb.decode_to_vec(), "{} v1={v1}", sa.name);
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
-    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]

@@ -232,6 +232,61 @@ fn pipelined_real_model_matches_serial_when_artifacts_present() {
     assert!(report.stages.decode.snapshot().events > 0, "decode stage ran");
 }
 
+/// Container v2 end to end: the same requests served from a v2-packed
+/// store (shards + binary index, parsed through the codec registry) must
+/// be bit-identical to serving the in-memory synthesized model.
+#[test]
+fn serving_from_v2_store_bit_identical_to_in_memory() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: artifacts missing");
+        return;
+    };
+    let cfg = tiny_llm();
+    let vocab = cfg.vocab;
+    let serve = ServeConfig {
+        max_batch: 2,
+        linger: Duration::from_secs(60),
+    };
+    let reqs = make_requests(5, vocab, 47);
+
+    let run = |model: ecf8::model::store::CompressedModel| {
+        let ex = LlmExecutor::new(cfg.clone(), model, dir.clone(), None).unwrap();
+        let mut server = Server::new(ex, serve);
+        for r in &reqs {
+            server.submit(r.clone());
+        }
+        let mut out = Vec::new();
+        loop {
+            let got = server.tick().unwrap();
+            if got.is_empty() {
+                break;
+            }
+            out.extend(got);
+        }
+        out.extend(server.drain().unwrap());
+        out
+    };
+
+    let want = run(CompressedModel::synthesize(&cfg, 25, None));
+
+    // pack small shards so the parallel multi-shard load path is the one
+    // under test, then serve from the reloaded store
+    let storedir = std::env::temp_dir().join("ecf8_serving_v2_store");
+    std::fs::remove_dir_all(&storedir).ok();
+    let store = ecf8::model::store::ModelStore::new(&storedir);
+    store
+        .save_v2(&CompressedModel::synthesize(&cfg, 25, None), 1 << 20)
+        .unwrap();
+    let lazy = store.open(cfg.name).unwrap();
+    assert!(lazy.index().n_shards > 1, "multi-shard store");
+    let pool = ThreadPool::new(4);
+    let loaded = lazy.load_all(Some(&pool)).unwrap();
+    std::fs::remove_dir_all(&storedir).ok();
+
+    let got = run(loaded);
+    assert_bit_identical(&got, &want);
+}
+
 #[test]
 fn capacity_mechanism_end_to_end() {
     // measured compression of a real model feeds the scheduler: the ECF8
