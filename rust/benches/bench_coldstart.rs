@@ -1,0 +1,181 @@
+//! Cold-start / reload throughput: how fast a v2 artifact's bytes reach
+//! the decoder — the I/O half of the paper's serving claim (§5: the win
+//! requires decompression to be cheaper than the I/O it replaces).
+//!
+//! Grid: access mode (mmap vs read-copy) × placement (layer-contiguous
+//! vs interleaved). Two metrics per cell:
+//!
+//! * **TTFL** — time-to-first-decoded-layer: fresh `LazyModel` open +
+//!   `load_layer(0)` + decode of those tensors (what the offload path
+//!   pays every reload step, and what a serving cold start pays before
+//!   the first forward);
+//! * **full** — whole-model load + decode of every tensor.
+//!
+//! Plus the materialization proxy: payload bytes copied by explicit
+//! reads (zero on the mmap path) and decoded output bytes — a peak-RSS
+//! stand-in that needs no OS counters. All numbers are page-cache-warm
+//! (the artifact was just written); the JSON says so. Emits
+//! `BENCH_coldstart.json`.
+
+use ecf8::bench_support::{banner, bench, black_box, write_bench_json, Json, Table};
+use ecf8::model::config::tiny_llm;
+use ecf8::model::store::{AccessMode, CompressedModel, ModelStore, Placement};
+use ecf8::util::threadpool::ThreadPool;
+
+const SHARD_LIMIT: u64 = 2 << 20;
+const ITERS: usize = 5;
+
+fn gbps(bytes: u64, secs: f64) -> f64 {
+    bytes as f64 / secs / 1e9
+}
+
+fn mode_label(mode: AccessMode) -> &'static str {
+    match mode {
+        AccessMode::Mapped => "mmap",
+        AccessMode::ReadCopy => "read-copy",
+    }
+}
+
+fn placement_label(p: Placement) -> &'static str {
+    match p {
+        Placement::LayerContiguous => "layer-contiguous",
+        Placement::Interleaved => "interleaved",
+    }
+}
+
+fn main() {
+    banner(
+        "bench_coldstart",
+        "§5 serving I/O: mmap vs read × placement",
+    );
+    let cfg = tiny_llm();
+    let pool = ThreadPool::with_default_size();
+    let model = CompressedModel::synthesize(&cfg, 77, Some(&pool));
+    let raw_bytes = model.raw_bytes();
+    let layer0_raw: u64 = model
+        .tensors
+        .iter()
+        .filter(|(s, _)| s.layer == 0 && s.block_type.is_layer_weight())
+        .map(|(s, _)| s.n_elem() as u64)
+        .sum();
+    println!(
+        "workload: {} ({} tensors, {} raw, {} compressed, {} MiB shards)",
+        cfg.name,
+        model.tensors.len(),
+        raw_bytes,
+        model.compressed_bytes(),
+        SHARD_LIMIT >> 20
+    );
+
+    let root = std::env::temp_dir().join("ecf8_bench_coldstart");
+    std::fs::remove_dir_all(&root).ok();
+    let placements = [Placement::LayerContiguous, Placement::Interleaved];
+    let mut stores = Vec::new();
+    for p in placements {
+        let dir = root.join(placement_label(p));
+        let store = ModelStore::new(&dir);
+        store.save_v2_placed(&model, SHARD_LIMIT, p).unwrap();
+        stores.push((p, store));
+    }
+
+    let mut table = Table::new([
+        "placement",
+        "access",
+        "TTFL",
+        "TTFL GB/s",
+        "full load+decode",
+        "full GB/s",
+        "payload copied",
+    ]);
+    let mut results = Json::arr();
+    let mut cells: Vec<(Placement, AccessMode, f64, f64)> = Vec::new();
+
+    for &(placement, ref store) in &stores {
+        for mode in [AccessMode::Mapped, AccessMode::ReadCopy] {
+            // --- time-to-first-decoded-layer (fresh open every iter) ----
+            let ttfl = bench("ttfl", 1, ITERS, || {
+                let lazy = store.open_mode(cfg.name, mode).unwrap();
+                let layer = lazy.load_layer(0).unwrap();
+                for (_, t) in &layer {
+                    black_box(t.decode_to_vec());
+                }
+            });
+            // --- full model: load + decode every tensor -----------------
+            let full = bench("full", 1, ITERS, || {
+                let lazy = store.open_mode(cfg.name, mode).unwrap();
+                let whole = lazy.load_all(None).unwrap();
+                for (_, t) in &whole.tensors {
+                    black_box(t.decode_to_vec());
+                }
+            });
+            // --- materialization proxy (one instrumented pass) ----------
+            let lazy = store.open_mode(cfg.name, mode).unwrap();
+            let whole = lazy.load_all(None).unwrap();
+            let _ = lazy.load_layer(0).unwrap();
+            let (reads, payload_copied) = lazy.io_stats();
+            let decoded: u64 = whole.tensors.iter().map(|(_, t)| t.n_elem() as u64).sum();
+
+            table.row([
+                placement_label(placement).to_string(),
+                mode_label(mode).to_string(),
+                format!("{:.2} ms", ttfl.mean() * 1e3),
+                format!("{:.2}", gbps(layer0_raw, ttfl.mean())),
+                format!("{:.2} ms", full.mean() * 1e3),
+                format!("{:.2}", gbps(raw_bytes, full.mean())),
+                format!("{payload_copied}"),
+            ]);
+            results.push(
+                Json::obj()
+                    .field("placement", placement_label(placement))
+                    .field("access", mode_label(mode))
+                    .field("ttfl_s", ttfl.mean())
+                    .field("ttfl_gbps", gbps(layer0_raw, ttfl.mean()))
+                    .field("full_s", full.mean())
+                    .field("full_gbps", gbps(raw_bytes, full.mean()))
+                    .field("reads", reads as usize)
+                    .field("payload_bytes_copied", payload_copied as usize)
+                    .field("decoded_bytes", decoded as usize),
+            );
+            cells.push((placement, mode, ttfl.mean(), full.mean()));
+        }
+    }
+    table.print();
+
+    let cell = |p: Placement, m: AccessMode| {
+        cells
+            .iter()
+            .find(|&&(cp, cm, _, _)| cp == p && cm == m)
+            .map(|&(_, _, t, f)| (t, f))
+            .unwrap()
+    };
+    let (ttfl_map, full_map) = cell(Placement::LayerContiguous, AccessMode::Mapped);
+    let (ttfl_read, full_read) = cell(Placement::LayerContiguous, AccessMode::ReadCopy);
+    let (ttfl_inter, _) = cell(Placement::Interleaved, AccessMode::Mapped);
+    let mmap_speedup = ttfl_read / ttfl_map;
+    let placement_speedup = ttfl_inter / ttfl_map;
+    println!(
+        "mmap vs read-copy TTFL: {mmap_speedup:.2}x; \
+         layer-contiguous vs interleaved TTFL (mmap): {placement_speedup:.2}x; \
+         full-model mmap vs read: {:.2}x",
+        full_read / full_map
+    );
+
+    let doc = Json::obj()
+        .field("bench", "coldstart")
+        .field("model", cfg.name)
+        .field("raw_bytes", raw_bytes as usize)
+        .field("shard_limit_bytes", SHARD_LIMIT as usize)
+        .field("iters", ITERS)
+        .field("real_mmap", ecf8::util::mmap::real_mmap())
+        .field(
+            "note",
+            "page-cache-warm: the artifact is written immediately before \
+             timing; numbers measure the copy/parse path, not disk",
+        )
+        .field("mmap_vs_read_ttfl_speedup", mmap_speedup)
+        .field("contiguous_vs_interleaved_ttfl_speedup", placement_speedup)
+        .field("mmap_vs_read_full_speedup", full_read / full_map)
+        .field("results", results);
+    write_bench_json("BENCH_coldstart.json", &doc);
+    std::fs::remove_dir_all(&root).ok();
+}

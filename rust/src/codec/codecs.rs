@@ -27,6 +27,7 @@ use super::decode::{self, DecodeTableCache, DecodeTables};
 use super::encode;
 use super::{Ecf8Blob, Ecf8Params, Fp8Format};
 use crate::huffman::canonical::CanonicalCode;
+use crate::util::mmap::ByteView;
 use crate::util::threadpool::ThreadPool;
 use std::sync::Arc;
 
@@ -159,7 +160,7 @@ impl Codec for Ecf8Huffman {
         dst: &mut [u8],
         pool: Option<&ThreadPool>,
     ) -> Result<(), ContainerError> {
-        let blob = container::deserialize(payload)?;
+        let blob = container::deserialize_owned(payload.to_vec())?;
         if blob.format != format {
             return Err(ContainerError::Inconsistent("record format vs payload"));
         }
@@ -262,17 +263,19 @@ pub fn compress_auto(data: &[u8], format: Fp8Format, params: Ecf8Params) -> Comp
         CodecId::Ecf8Huffman => CompressedTensor::Ecf8(encode::encode(data, format, params)),
         CodecId::RawFp8 => CompressedTensor::Raw(RawTensor {
             format,
-            bytes: data.to_vec(),
+            bytes: data.to_vec().into(),
         }),
         other => unreachable!("auto-selection is restricted to built-ins, got {other:?}"),
     }
 }
 
-/// Raw FP8 passthrough tensor (the [`RawFp8`] codec's parsed form).
+/// Raw FP8 passthrough tensor (the [`RawFp8`] codec's parsed form). The
+/// bytes are a [`ByteView`]: a window into the mapped shard on the
+/// zero-copy load path, an owned buffer otherwise.
 #[derive(Debug, Clone)]
 pub struct RawTensor {
     pub format: Fp8Format,
-    pub bytes: Vec<u8>,
+    pub bytes: ByteView,
 }
 
 /// A payload held for a registry codec outside the built-ins (zstd /
@@ -282,7 +285,7 @@ pub struct ExternalTensor {
     pub codec: CodecId,
     pub format: Fp8Format,
     pub n_elem: usize,
-    pub payload: Vec<u8>,
+    pub payload: ByteView,
 }
 
 /// An in-memory compressed tensor behind the codec seam — the parsed
@@ -363,8 +366,21 @@ impl CompressedTensor {
     pub fn payload_bytes(&self) -> Vec<u8> {
         match self {
             CompressedTensor::Ecf8(b) => container::serialize(b),
-            CompressedTensor::Raw(r) => r.bytes.clone(),
-            CompressedTensor::External(e) => e.payload.clone(),
+            CompressedTensor::Raw(r) => r.bytes.to_vec(),
+            CompressedTensor::External(e) => e.payload.to_vec(),
+        }
+    }
+
+    /// True when every payload byte of this tensor lives in a real file
+    /// mapping (the zero-copy load path; always false for encoder-built
+    /// tensors and on the read-copy tier).
+    pub fn payload_is_mapped(&self) -> bool {
+        match self {
+            CompressedTensor::Ecf8(b) => {
+                b.encoded.is_mapped() && b.packed.is_mapped() && b.gaps.is_mapped()
+            }
+            CompressedTensor::Raw(r) => r.bytes.is_mapped(),
+            CompressedTensor::External(e) => e.payload.is_mapped(),
         }
     }
 
@@ -407,18 +423,32 @@ impl CompressedTensor {
 
 /// Parse a CRC-verified v2 record payload into its in-memory serving
 /// form. `codec`/`format` are the record-header bytes; `n_elem` the
-/// header's element count (cross-checked against the payload).
+/// header's element count (cross-checked against the payload). Copies
+/// the payload once; the load paths hold a [`ByteView`] already and use
+/// [`parse_record_view`], which copies nothing.
 pub fn parse_record(
     codec: u8,
     format: u8,
     n_elem: usize,
     payload: &[u8],
 ) -> Result<CompressedTensor, ContainerError> {
+    parse_record_view(codec, format, n_elem, ByteView::from_vec(payload.to_vec()))
+}
+
+/// Zero-copy [`parse_record`]: the parsed tensor's payload bytes share
+/// `payload`'s backing, so a tensor from a mapped shard serves straight
+/// out of the page cache.
+pub fn parse_record_view(
+    codec: u8,
+    format: u8,
+    n_elem: usize,
+    payload: ByteView,
+) -> Result<CompressedTensor, ContainerError> {
     let codec = CodecId::from_u8(codec).ok_or(ContainerError::Inconsistent("unknown codec id"))?;
     let format = Fp8Format::from_u8(format).ok_or(ContainerError::BadFormat(format))?;
     match codec {
         CodecId::Ecf8Huffman => {
-            let blob = container::deserialize(payload)?;
+            let blob = container::deserialize_view(&payload)?;
             if blob.n_elem != n_elem || blob.format != format {
                 return Err(ContainerError::Inconsistent("record metadata vs payload"));
             }
@@ -430,7 +460,7 @@ pub fn parse_record(
             }
             Ok(CompressedTensor::Raw(RawTensor {
                 format,
-                bytes: payload.to_vec(),
+                bytes: payload,
             }))
         }
         other => {
@@ -441,12 +471,12 @@ pub fn parse_record(
             // their own (unlike ECF8 blobs), so validate by trial decode
             // here — the serving decode paths cannot surface errors
             let mut scratch = vec![0u8; n_elem];
-            codec.decode_into(payload, format, &mut scratch, None)?;
+            codec.decode_into(&payload, format, &mut scratch, None)?;
             Ok(CompressedTensor::External(ExternalTensor {
                 codec: other,
                 format,
                 n_elem,
-                payload: payload.to_vec(),
+                payload,
             }))
         }
     }

@@ -63,6 +63,7 @@
 //! from files, mmaps, or in-memory stores.
 
 use super::{Ecf8Blob, Ecf8Params, Fp8Format};
+use crate::util::mmap::ByteView;
 use std::io::Write;
 
 pub const MAGIC: &[u8; 4] = b"ECF8";
@@ -74,6 +75,10 @@ pub const SHARD_MAGIC: &[u8; 4] = b"ECS8";
 pub const RECORD_MAGIC: &[u8; 4] = b"ECR8";
 pub const INDEX_MAGIC: &[u8; 4] = b"ECI8";
 pub const V2_VERSION: u16 = 2;
+/// Current index version: v3 appends the per-layer extent table (the
+/// layer-contiguous placement record) after the entries; v2 indexes
+/// (no extents) remain readable.
+pub const INDEX_VERSION: u16 = 3;
 pub const SHARD_HEADER_BYTES: usize = 8;
 pub const RECORD_HEADER_BYTES: usize = 32;
 
@@ -223,8 +228,26 @@ pub fn serialize(blob: &Ecf8Blob) -> Vec<u8> {
 }
 
 /// Deserialize container bytes back into a blob (validates CRC and
-/// internal consistency).
+/// internal consistency). Copies the input once to own the streams;
+/// callers that already hold a [`ByteView`] (mapped shards, whole-file
+/// reads) should use [`deserialize_view`] / [`deserialize_owned`], which
+/// share the backing instead.
 pub fn deserialize(data: &[u8]) -> Result<Ecf8Blob, ContainerError> {
+    deserialize_view(&ByteView::from_vec(data.to_vec()))
+}
+
+/// [`deserialize`] taking ownership of the buffer — zero extra copies
+/// (the blob's stream views share the one allocation).
+pub fn deserialize_owned(data: Vec<u8>) -> Result<Ecf8Blob, ContainerError> {
+    deserialize_view(&ByteView::from_vec(data))
+}
+
+/// Zero-copy deserialize: the returned blob's `encoded`/`packed`/`gaps`
+/// are sub-views of `src` (small metadata — code lengths, outpos — is
+/// parsed out). This is the mmap serving path: a blob parsed from a
+/// mapped shard record decodes directly out of the page cache.
+pub fn deserialize_view(src: &ByteView) -> Result<Ecf8Blob, ContainerError> {
+    let data = src.as_slice();
     let mut c = Cursor { data, pos: 0 };
     if c.take(4)? != MAGIC {
         return Err(ContainerError::BadMagic);
@@ -256,14 +279,19 @@ pub fn deserialize(data: &[u8]) -> Result<Ecf8Blob, ContainerError> {
     for _ in 0..=n_blocks {
         outpos.push(c.u64()?);
     }
-    let gaps = c.take(gaps_len)?.to_vec();
-    let packed = c.take(packed_len)?.to_vec();
-    let encoded = c.take(encoded_len)?.to_vec();
+    // the three streams become sub-views of `src` — no copies; `take`
+    // supplies the bounds checking, the cursor position the offsets
+    let gaps_start = c.pos;
+    let gaps = c.take(gaps_len)?;
+    let packed_start = c.pos;
+    let packed = c.take(packed_len)?;
+    let encoded_start = c.pos;
+    let encoded = c.take(encoded_len)?;
 
     let mut crc = crate::util::crc32::Hasher::new();
-    crc.update(&packed);
-    crc.update(&encoded);
-    crc.update(&gaps);
+    crc.update(packed);
+    crc.update(encoded);
+    crc.update(gaps);
     let computed = crc.finalize();
     if computed != stored_crc {
         return Err(ContainerError::CrcMismatch {
@@ -291,10 +319,10 @@ pub fn deserialize(data: &[u8]) -> Result<Ecf8Blob, ContainerError> {
         params,
         n_elem,
         code_lengths,
-        encoded,
+        encoded: src.slice(encoded_start..encoded_start + encoded_len),
         encoded_bits,
-        packed,
-        gaps,
+        packed: src.slice(packed_start..packed_start + packed_len),
+        gaps: src.slice(gaps_start..gaps_start + gaps_len),
         outpos,
     })
 }
@@ -308,10 +336,11 @@ pub fn write_file(blob: &Ecf8Blob, path: &std::path::Path) -> std::io::Result<()
     w.flush()
 }
 
-/// Read a blob from a file.
+/// Read a blob from a file (one read; the blob's streams share the
+/// buffer).
 pub fn read_file(path: &std::path::Path) -> anyhow::Result<Ecf8Blob> {
     let data = std::fs::read(path)?;
-    Ok(deserialize(&data)?)
+    Ok(deserialize_owned(data)?)
 }
 
 // ---------------------------------------------------------------------------
@@ -400,6 +429,16 @@ pub fn read_record(data: &[u8]) -> Result<(RecordHeader, &[u8]), ContainerError>
         });
     }
     Ok((h, payload))
+}
+
+/// [`read_record`] over a [`ByteView`] positioned at a record start: the
+/// returned payload is a sub-view sharing `src`'s backing (for a mapped
+/// shard, a window straight into the page cache). CRC-verified like the
+/// slice reader.
+pub fn read_record_view(src: &ByteView) -> Result<(RecordHeader, ByteView), ContainerError> {
+    let (header, payload) = read_record(src.as_slice())?;
+    let start = RECORD_HEADER_BYTES;
+    Ok((header, src.slice(start..start + payload.len())))
 }
 
 /// Validate an in-memory shard image's 8-byte header; returns the shard
@@ -534,13 +573,37 @@ impl IndexEntry {
     }
 }
 
+/// One transformer layer's contiguous byte range inside a shard — the
+/// placement record that lets readers fetch (or `madvise`) a whole layer
+/// as one extent. Only layers whose records landed contiguously in a
+/// single shard get an extent; `offset`/`len` cover the records
+/// (headers included) back to back.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerExtent {
+    pub layer: u32,
+    pub shard: u32,
+    pub offset: u64,
+    pub len: u64,
+}
+
+impl LayerExtent {
+    pub fn end(&self) -> u64 {
+        self.offset + self.len
+    }
+}
+
 /// The v2 binary tensor index: the decode plan for a sharded model
 /// artifact. Serialized with a trailing CRC-32 over every preceding byte.
+/// Since index v3 it also records [`LayerExtent`]s for layers the writer
+/// placed contiguously.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct TensorIndex {
     pub model: String,
     pub n_shards: u32,
     pub entries: Vec<IndexEntry>,
+    /// per-layer contiguous placement (empty for v2 indexes and for
+    /// interleaved layouts)
+    pub layer_extents: Vec<LayerExtent>,
 }
 
 fn put_str(buf: &mut Vec<u8>, s: &str) {
@@ -567,10 +630,16 @@ impl TensorIndex {
         self.entries.iter().map(|e| e.n_elem()).sum()
     }
 
+    /// Extent of transformer layer `layer`, when the writer placed it
+    /// contiguously.
+    pub fn layer_extent(&self, layer: u32) -> Option<&LayerExtent> {
+        self.layer_extents.iter().find(|e| e.layer == layer)
+    }
+
     pub fn serialize(&self) -> Vec<u8> {
         let mut out = Vec::new();
         out.extend_from_slice(INDEX_MAGIC);
-        put_u16(&mut out, V2_VERSION);
+        put_u16(&mut out, INDEX_VERSION);
         put_u16(&mut out, 0); // flags
         put_u32(&mut out, self.n_shards);
         put_u32(&mut out, self.entries.len() as u32);
@@ -589,6 +658,14 @@ impl TensorIndex {
             put_u64(&mut out, e.len);
             put_u32(&mut out, e.payload_crc);
         }
+        // v3 extent table
+        put_u32(&mut out, self.layer_extents.len() as u32);
+        for x in &self.layer_extents {
+            put_u32(&mut out, x.layer);
+            put_u32(&mut out, x.shard);
+            put_u64(&mut out, x.offset);
+            put_u64(&mut out, x.len);
+        }
         let crc = crate::util::crc32::crc32(&out);
         put_u32(&mut out, crc);
         out
@@ -600,7 +677,7 @@ impl TensorIndex {
             return Err(ContainerError::BadMagic);
         }
         let version = c.u16()?;
-        if version != V2_VERSION {
+        if version != V2_VERSION && version != INDEX_VERSION {
             return Err(ContainerError::BadVersion(version));
         }
         let _flags = c.u16()?;
@@ -636,6 +713,24 @@ impl TensorIndex {
                 payload_crc,
             });
         }
+        let mut layer_extents = Vec::new();
+        if version >= INDEX_VERSION {
+            let n_extents = c.u32()? as usize;
+            // extents are 24 bytes each; cap pre-allocation by the input
+            layer_extents.reserve(n_extents.min(c.remaining() / 24 + 1));
+            for _ in 0..n_extents {
+                let layer = c.u32()?;
+                let shard = c.u32()?;
+                let offset = c.u64()?;
+                let len = c.u64()?;
+                layer_extents.push(LayerExtent {
+                    layer,
+                    shard,
+                    offset,
+                    len,
+                });
+            }
+        }
         let body_end = c.pos;
         let stored = c.u32()?;
         let computed = crate::util::crc32::crc32(&data[..body_end]);
@@ -649,6 +744,7 @@ impl TensorIndex {
             model,
             n_shards,
             entries,
+            layer_extents,
         })
     }
 }
@@ -846,6 +942,12 @@ mod tests {
                     payload_crc: 7,
                 },
             ],
+            layer_extents: vec![LayerExtent {
+                layer: 0,
+                shard: 1,
+                offset: 8,
+                len: 4128,
+            }],
         }
     }
 
@@ -857,6 +959,55 @@ mod tests {
         assert_eq!(back, idx);
         assert_eq!(back.stored_bytes(), 9000 + 4128);
         assert_eq!(back.raw_bytes(), 256 * 64 + 64 * 64);
+        let ext = back.layer_extent(0).expect("layer 0 extent recorded");
+        assert_eq!((ext.shard, ext.offset, ext.end()), (1, 8, 8 + 4128));
+        assert!(back.layer_extent(7).is_none());
+    }
+
+    #[test]
+    fn v2_index_without_extent_table_still_parses() {
+        // hand-build the pre-extent (version 2) serialization and check
+        // the v3 reader accepts it with an empty extent table
+        let idx = sample_index();
+        let v3 = idx.serialize();
+        let mut v2 = Vec::new();
+        v2.extend_from_slice(&v3[..4]);
+        put_u16(&mut v2, V2_VERSION);
+        // body minus magic/version, minus extent table, minus CRC
+        let extent_bytes = 4 + idx.layer_extents.len() * 24;
+        v2.extend_from_slice(&v3[6..v3.len() - 4 - extent_bytes]);
+        let crc = crate::util::crc32::crc32(&v2);
+        put_u32(&mut v2, crc);
+        let back = TensorIndex::deserialize(&v2).unwrap();
+        assert_eq!(back.entries, idx.entries);
+        assert!(back.layer_extents.is_empty());
+    }
+
+    #[test]
+    fn record_view_shares_backing_with_source() {
+        let payload = b"view-backed payload".to_vec();
+        let mut buf = Vec::new();
+        let h = RecordHeader {
+            codec: 1,
+            format: 0,
+            n_elem: payload.len() as u64,
+            payload_len: payload.len() as u64,
+            payload_crc: crate::util::crc32::crc32(&payload),
+        };
+        h.write_into(&mut buf).unwrap();
+        buf.extend_from_slice(&payload);
+        let src = ByteView::from_vec(buf);
+        let (back, view) = read_record_view(&src).unwrap();
+        assert_eq!(back, h);
+        assert_eq!(view, payload);
+        let outer = src.backing_addr_range();
+        let inner = view.addr_range();
+        assert!(outer.start <= inner.start && inner.end <= outer.end);
+        // truncation through the view reader is still structured
+        assert!(matches!(
+            read_record_view(&src.slice(0..src.len() - 1)),
+            Err(ContainerError::Truncated { .. })
+        ));
     }
 
     #[test]

@@ -141,10 +141,10 @@ pub fn encode_with_code(
         params,
         n_elem,
         code_lengths: code.lengths.iter().map(|&l| l as u8).collect(),
-        encoded,
+        encoded: encoded.into(),
         encoded_bits,
-        packed,
-        gaps,
+        packed: packed.into(),
+        gaps: gaps.into(),
         outpos,
     }
 }
@@ -358,10 +358,10 @@ pub fn encode_with_code_parallel(
         params,
         n_elem,
         code_lengths: code.lengths.iter().map(|&l| l as u8).collect(),
-        encoded,
+        encoded: encoded.into(),
         encoded_bits: total_bits,
-        packed,
-        gaps,
+        packed: packed.into(),
+        gaps: gaps.into(),
         outpos,
     }
 }

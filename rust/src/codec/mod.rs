@@ -20,6 +20,7 @@ pub mod simd;
 
 use crate::huffman::canonical::CanonicalCode;
 use crate::huffman::lut::DecodeLut;
+use crate::util::mmap::ByteView;
 
 /// Which FP8 flavour a blob holds. Determines the exponent alphabet and
 /// the sign/mantissa packing.
@@ -102,14 +103,17 @@ pub struct Ecf8Blob {
     /// canonical Huffman code lengths per exponent symbol (the code book
     /// is fully determined by these)
     pub code_lengths: Vec<u8>,
-    /// Huffman bitstream, zero-padded to `n_blocks·T·B + 8` bytes
-    pub encoded: Vec<u8>,
+    /// Huffman bitstream, zero-padded to `n_blocks·T·B + 8` bytes. The
+    /// streams are [`ByteView`]s so a blob parsed from a mapped shard
+    /// decodes straight out of the page cache (encoder-built blobs carry
+    /// owned buffers behind the same type).
+    pub encoded: ByteView,
     /// true bit length of the stream (pre-padding)
     pub encoded_bits: u64,
     /// packed rest nibbles, two per byte, first element in the high nibble
-    pub packed: Vec<u8>,
+    pub packed: ByteView,
     /// packed 4-bit per-thread gaps, even thread in the high nibble
-    pub gaps: Vec<u8>,
+    pub gaps: ByteView,
     /// per-block cumulative output element counts, length `n_blocks + 1`
     pub outpos: Vec<u64>,
 }

@@ -52,6 +52,14 @@ pub const DEFAULT_DECODE_WINDOW: usize = 2;
 /// tensors decoding as independent work items on `pool` (serial without
 /// one). Returns the consumer's results, or its first error.
 ///
+/// `advise` is the mmap readahead hook: when set, the decoder thread
+/// calls `advise(l + 1)` right before it starts decoding stage `l` (and
+/// `advise(0)` once up front), so the callback can `madvise(WILLNEED)`
+/// the *next* stage's shard extent while the current one decodes —
+/// sequential readahead driven by the pipeline, not the kernel's guess
+/// (see `CompressedModel::advise_layer`). Purely advisory: it must not
+/// touch the arenas and has no effect on the decoded bytes.
+///
 /// Bit-exactness contract: `consume(l, arena)` sees exactly the bytes a
 /// serial `decode` of `stages[l]` would produce — the pipeline changes
 /// the schedule, never the data.
@@ -61,6 +69,7 @@ pub fn with_stages_decoded<R, E>(
     window: usize,
     stages: &[Vec<&CompressedTensor>],
     observer: Option<&SharedStageMetrics>,
+    advise: Option<&(dyn Fn(usize) + Sync)>,
     mut consume: impl FnMut(usize, &LayerArena) -> Result<R, E>,
 ) -> Result<Vec<R>, E> {
     let window = window.max(2);
@@ -102,6 +111,10 @@ pub fn with_stages_decoded<R, E>(
         let stage_tables = &stage_tables;
         let in_flight = &in_flight;
         let decoder = s.spawn(move || {
+            if let Some(f) = advise {
+                // kick readahead for the first stage before its decode
+                f(0);
+            }
             for (l, tensors) in stages.iter().enumerate() {
                 // consumer hung up (error path) => stop decoding; this
                 // recv is also the backpressure stall that bounds the
@@ -109,6 +122,12 @@ pub fn with_stages_decoded<R, E>(
                 let Ok(mut arena) = free_rx.recv() else {
                     return Vec::new();
                 };
+                if let Some(f) = advise {
+                    if l + 1 < stages.len() {
+                        // stage l+1's pages stream in while stage l decodes
+                        f(l + 1);
+                    }
+                }
                 let t0 = Instant::now();
                 arena.decode_stage_tensors(tensors, &stage_tables[l], pool);
                 if let Some(m) = observer {
@@ -191,6 +210,7 @@ mod tests {
             DEFAULT_DECODE_WINDOW,
             &layers,
             None,
+            None,
             |l, arena| -> Result<usize, String> {
                 assert_eq!(arena.len(), expect[l].len(), "layer {l}");
                 for (i, want) in expect[l].iter().enumerate() {
@@ -210,6 +230,7 @@ mod tests {
             None,
             DEFAULT_DECODE_WINDOW,
             &layers,
+            None,
             None,
             |l, arena| -> Result<(), String> {
                 for (i, want) in expect[l].iter().enumerate() {
@@ -241,6 +262,7 @@ mod tests {
             3,
             &stages,
             Some(&obs),
+            None,
             |l, arena| -> Result<(), String> {
                 let base = if l == 0 { 0 } else { 3 };
                 for i in 0..arena.len() {
@@ -257,6 +279,30 @@ mod tests {
     }
 
     #[test]
+    fn advise_hook_sees_every_stage_once_ahead_of_decode() {
+        let (_, b1) = blob(2_000, 60);
+        let (_, b2) = blob(2_000, 61);
+        let (_, b3) = blob(2_000, 62);
+        let mut jit = JitDecompressor::new(0, None);
+        let stages: Vec<Vec<&CompressedTensor>> = vec![vec![&b1], vec![&b2], vec![&b3]];
+        let advised = std::sync::Mutex::new(Vec::new());
+        let hook = |l: usize| advised.lock().unwrap().push(l);
+        with_stages_decoded(
+            &mut jit,
+            None,
+            DEFAULT_DECODE_WINDOW,
+            &stages,
+            None,
+            Some(&hook),
+            |_, _| -> Result<(), String> { Ok(()) },
+        )
+        .unwrap();
+        // stage 0 kicked up front, then l+1 before each stage l decodes;
+        // the final stage advises nothing past the plan
+        assert_eq!(*advised.lock().unwrap(), vec![0, 1, 2]);
+    }
+
+    #[test]
     fn consumer_error_shuts_down_cleanly() {
         let (_, b1) = blob(2_000, 14);
         let (_, b2) = blob(2_000, 15);
@@ -267,6 +313,7 @@ mod tests {
             None,
             DEFAULT_DECODE_WINDOW,
             &layers,
+            None,
             None,
             |l, _| -> Result<(), String> {
                 if l == 1 {
@@ -292,6 +339,7 @@ mod tests {
             None,
             2,
             &[],
+            None,
             None,
             |_, _| -> Result<(), String> { panic!("no stages") },
         )

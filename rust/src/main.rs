@@ -232,6 +232,30 @@ fn inspect_v2_store(dir: &std::path::Path, tensors: bool, verify: bool) -> anyho
         let label = CodecId::from_u8(*c).map(|c| c.label()).unwrap_or("unknown");
         println!("codec:         {label}: {n} tensors, {}", humanize::bytes(*b));
     }
+    let n_layers: usize = {
+        let mut layers: Vec<u32> = index
+            .entries
+            .iter()
+            .filter(|e| ecf8::model::config::BlockType::code_is_layer_weight(e.block_type))
+            .map(|e| e.layer)
+            .collect();
+        layers.sort_unstable();
+        layers.dedup();
+        layers.len()
+    };
+    println!(
+        "placement:     {}/{} layers layer-contiguous (one extent each)",
+        index.layer_extents.len(),
+        n_layers
+    );
+    println!(
+        "access:        {}",
+        if ecf8::util::mmap::real_mmap() {
+            "mmap (shards mapped once, zero-copy records)"
+        } else {
+            "read-copy tier (no-mmap build or non-unix)"
+        }
+    );
     println!(
         "total:         {} -> {} ({:.1}% saving vs raw FP8)",
         humanize::bytes(index.raw_bytes()),
@@ -280,7 +304,12 @@ fn cmd_pack(raw: Vec<String>) -> anyhow::Result<()> {
         "append N incompressible raw-FP8-codec tensors (demo-only artifact)",
         "0",
     )
-    .flag("v1", "write the legacy v1 per-tensor layout instead");
+    .flag("v1", "write the legacy v1 per-tensor layout instead")
+    .flag(
+        "interleaved",
+        "stripe records across layers instead of the layer-contiguous \
+         default (cold-start bench baseline; no layer extents recorded)",
+    );
     let a = cmd.parse(raw).map_err(|e| handle_help(&cmd, e))?;
     let name = a
         .get("model")
@@ -309,11 +338,16 @@ fn cmd_pack(raw: Vec<String>) -> anyhow::Result<()> {
         model.push(spec, codecs::compress_auto(&data, Fp8Format::E4M3, Ecf8Params::default()));
     }
     let store = ModelStore::new(a.get_or("out", "models"));
+    let placement = if a.flag("interleaved") {
+        ecf8::model::store::Placement::Interleaved
+    } else {
+        ecf8::model::store::Placement::LayerContiguous
+    };
     let (saved, save_secs) = ecf8::bench_support::time_once(|| {
         if a.flag("v1") {
             store.save_v1(&model)
         } else {
-            store.save_v2(&model, shard_bytes)
+            store.save_v2_placed(&model, shard_bytes, placement)
         }
     });
     saved?;
@@ -333,10 +367,11 @@ fn cmd_pack(raw: Vec<String>) -> anyhow::Result<()> {
     if !a.flag("v1") {
         let lazy = store.open(m.name)?;
         println!(
-            "  layout: {} shards + {} ({} index entries)",
+            "  layout: {} shards + {} ({} index entries, {} layer extents)",
             lazy.index().n_shards,
             container::INDEX_FILE,
-            lazy.len()
+            lazy.len(),
+            lazy.index().layer_extents.len()
         );
     }
     Ok(())

@@ -51,6 +51,25 @@ impl BlockType {
         self as u8
     }
 
+    /// True for tensors that belong to a transformer layer's working set
+    /// — everything except embedding and head, which run as their own
+    /// pipeline stages. This is the one definition behind layer grouping
+    /// (`save_v2` placement), `load_layer` filtering, layer extents /
+    /// advise targets, layer stats, and the inspect placement census.
+    pub fn is_layer_weight(self) -> bool {
+        !matches!(self, BlockType::Embedding | BlockType::Head)
+    }
+
+    /// [`BlockType::is_layer_weight`] straight off an index entry's code
+    /// byte (unknown codes count as layer weights, matching the previous
+    /// inline `matches!` filters).
+    pub fn code_is_layer_weight(code: u8) -> bool {
+        !matches!(
+            BlockType::from_code(code),
+            Some(BlockType::Embedding) | Some(BlockType::Head)
+        )
+    }
+
     /// Inverse of [`BlockType::code`].
     pub fn from_code(c: u8) -> Option<Self> {
         match c {

@@ -19,26 +19,63 @@
 use super::config::{BlockType, ModelConfig, TensorSpec};
 use super::weights::generate_tensor_fp8;
 use crate::codec::container::{
-    self, shard_file_name, IndexEntry, ShardWriter, TensorIndex, INDEX_FILE,
+    self, shard_file_name, IndexEntry, LayerExtent, ShardWriter, TensorIndex, INDEX_FILE,
 };
 use crate::codec::{codecs, CompressedTensor, Ecf8Params, Fp8Format};
 use crate::tensormgr::offload::LayerStats;
+use crate::util::mmap::{Advice, ByteView, Mmap};
 use crate::util::threadpool::ThreadPool;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::io::{Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// Default shard-rollover size: tensors append to the current shard until
 /// it would exceed this many bytes (a tensor larger than the limit gets a
 /// shard of its own).
 pub const DEFAULT_SHARD_BYTES: u64 = 64 << 20;
 
+/// How [`ModelStore::save_v2`] lays records out across shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Placement {
+    /// One transformer layer = one contiguous byte range in one shard
+    /// (rollover only *between* layers unless a single layer exceeds the
+    /// shard limit); the index records each layer's [`LayerExtent`], so
+    /// a layer loads — or `madvise`s — as one extent.
+    #[default]
+    LayerContiguous,
+    /// Stripe records round-robin across layers (per-tensor rollover, no
+    /// extents recorded). The worst case for readahead — kept as the
+    /// cold-start bench/test baseline, not a serving layout.
+    Interleaved,
+}
+
+/// How a [`LazyModel`] reaches shard bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AccessMode {
+    /// Map each shard once at open; every record is a zero-copy
+    /// [`ByteView`] into the mapping. On the `no-mmap`/non-unix tier the
+    /// "mapping" is one whole-shard buffer instead — same API, one copy,
+    /// and it is read lazily on first access so `open()` still touches
+    /// only headers.
+    #[default]
+    Mapped,
+    /// Explicit file reads: one contiguous read per layer extent, one
+    /// seek+read per record otherwise. The offload path's choice when
+    /// address space (not copies) is the scarce resource.
+    ReadCopy,
+}
+
 /// An in-memory compressed model: every tensor behind the codec seam.
 pub struct CompressedModel {
     pub name: String,
     pub tensors: Vec<(TensorSpec, CompressedTensor)>,
     index: HashMap<String, usize>,
+    /// per-transformer-layer shard extents, carried over from a mapped
+    /// [`LazyModel`] load — the decode-ahead stage's `madvise` targets
+    layer_extents: Vec<Option<ByteView>>,
 }
 
 fn index_of(tensors: &[(TensorSpec, CompressedTensor)]) -> HashMap<String, usize> {
@@ -70,6 +107,7 @@ impl CompressedModel {
             name: config.name.to_string(),
             tensors,
             index,
+            layer_extents: Vec::new(),
         }
     }
 
@@ -79,7 +117,31 @@ impl CompressedModel {
             name,
             tensors,
             index,
+            layer_extents: Vec::new(),
         }
+    }
+
+    /// Attach per-layer shard extents (mapped loads only; see
+    /// [`LazyModel::layer_extent_views`]).
+    pub fn set_layer_extents(&mut self, extents: Vec<Option<ByteView>>) {
+        self.layer_extents = extents;
+    }
+
+    /// Hint the kernel that transformer layer `layer`'s compressed bytes
+    /// are about to be read (`madvise(WILLNEED)` on its extent). Returns
+    /// whether a real hint was issued — false when the model was not
+    /// loaded from a mapped, layer-contiguous artifact.
+    pub fn advise_layer(&self, layer: usize) -> bool {
+        self.layer_extents
+            .get(layer)
+            .and_then(|e| e.as_ref())
+            .map(|v| v.advise(Advice::WillNeed))
+            .unwrap_or(false)
+    }
+
+    /// Number of layers with an advisable extent attached.
+    pub fn advisable_layers(&self) -> usize {
+        self.layer_extents.iter().flatten().count()
     }
 
     /// Append a tensor, keeping the name index coherent.
@@ -123,11 +185,10 @@ impl CompressedModel {
         let mut by_layer: HashMap<usize, usize> = HashMap::new();
         let mut solo_max = 0usize;
         for (s, _) in &self.tensors {
-            match s.block_type {
-                BlockType::Embedding | BlockType::Head => {
-                    solo_max = solo_max.max(s.n_elem());
-                }
-                _ => *by_layer.entry(s.layer).or_insert(0) += s.n_elem(),
+            if s.block_type.is_layer_weight() {
+                *by_layer.entry(s.layer).or_insert(0) += s.n_elem();
+            } else {
+                solo_max = solo_max.max(s.n_elem());
             }
         }
         by_layer.values().copied().max().unwrap_or(0).max(solo_max)
@@ -187,68 +248,172 @@ impl ModelStore {
     }
 
     /// Persist a compressed model as a container-v2 sharded artifact
-    /// (the default layout).
+    /// (the default layout: layer-contiguous placement).
     pub fn save(&self, model: &CompressedModel) -> Result<()> {
         self.save_v2(model, DEFAULT_SHARD_BYTES)
     }
 
     /// [`ModelStore::save`] with an explicit shard-rollover size.
     pub fn save_v2(&self, model: &CompressedModel, shard_limit: u64) -> Result<()> {
+        self.save_v2_placed(model, shard_limit, Placement::LayerContiguous)
+    }
+
+    /// [`ModelStore::save_v2`] with an explicit [`Placement`] policy.
+    pub fn save_v2_placed(
+        &self,
+        model: &CompressedModel,
+        shard_limit: u64,
+        placement: Placement,
+    ) -> Result<()> {
         let dir = self.model_dir(&model.name);
         std::fs::create_dir_all(&dir)?;
         let shard_limit = shard_limit.max(1);
-        let mut entries: Vec<IndexEntry> = Vec::with_capacity(model.tensors.len());
-        let mut shard: u32 = 0;
-        let mut writer = ShardWriter::create(&dir.join(shard_file_name(0)), 0)?;
-        for (spec, tensor) in &model.tensors {
-            let payload = tensor.payload_bytes();
-            let record_len = (container::RECORD_HEADER_BYTES + payload.len()) as u64;
-            // roll to a new shard when this record would overflow the
-            // current (non-empty) one
-            if writer.bytes_written() > container::SHARD_HEADER_BYTES as u64
-                && writer.bytes_written() + record_len > shard_limit
-            {
-                writer.finish()?;
-                shard += 1;
-                // the shard header stores its index as u16; refuse to
-                // silently wrap past that (raise --shard-mb instead)
-                let claimed = u16::try_from(shard).map_err(|_| {
-                    anyhow!(
-                        "model needs more than {} shards; raise the shard size limit",
-                        u16::MAX
-                    )
-                })?;
-                writer = ShardWriter::create(&dir.join(shard_file_name(shard)), claimed)?;
+
+        // ---- placement groups -------------------------------------------
+        // Embedding/head run as their own pipeline stages, so each is its
+        // own group; everything else groups by transformer layer (even
+        // tensors appended out of order, e.g. pack's noise tensors).
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        let mut group_of_layer: HashMap<usize, usize> = HashMap::new();
+        for (i, (spec, _)) in model.tensors.iter().enumerate() {
+            if !spec.block_type.is_layer_weight() {
+                groups.push(vec![i]);
+            } else if let Some(&g) = group_of_layer.get(&spec.layer) {
+                groups[g].push(i);
+            } else {
+                group_of_layer.insert(spec.layer, groups.len());
+                groups.push(vec![i]);
             }
-            let loc = writer.append(
-                tensor.codec_id().as_u8(),
-                tensor.format() as u8,
-                tensor.n_elem() as u64,
-                &payload,
-            )?;
-            entries.push(IndexEntry {
-                name: spec.name.clone(),
-                rows: spec.rows as u64,
-                cols: spec.cols as u64,
-                layer: spec.layer as u32,
-                block_type: spec.block_type.code(),
-                codec: tensor.codec_id().as_u8(),
-                format: tensor.format() as u8,
-                shard,
-                offset: loc.offset,
-                len: loc.len,
-                payload_crc: loc.payload_crc,
-            });
         }
-        writer.finish()?;
+        // write order: whole groups back to back, or striped round-robin
+        // across groups for the interleaved baseline
+        let write_plan: Vec<Vec<usize>> = match placement {
+            Placement::LayerContiguous => groups,
+            Placement::Interleaved => {
+                let depth = groups.iter().map(Vec::len).max().unwrap_or(0);
+                let mut striped = Vec::new();
+                for k in 0..depth {
+                    for g in &groups {
+                        if let Some(&i) = g.get(k) {
+                            striped.push(vec![i]);
+                        }
+                    }
+                }
+                striped
+            }
+        };
+
+        // ---- record emission --------------------------------------------
+        // Every file is written to a `.tmp` sibling and renamed into
+        // place once complete. Rename replaces the *name*, never the old
+        // inode's bytes, so a live mapping of a previous artifact (a
+        // serving process mid-reload, a tensor view someone still holds)
+        // keeps reading the old bytes instead of faulting SIGBUS when a
+        // store is re-packed or migrated in the same directory.
+        let record_len = |i: usize| -> u64 {
+            (container::RECORD_HEADER_BYTES + model.tensors[i].1.payload_len()) as u64
+        };
+        fn shard_tmp(dir: &Path, i: u32) -> PathBuf {
+            dir.join(format!("{}.tmp", shard_file_name(i)))
+        }
+        fn commit(dir: &Path, i: u32, writer: ShardWriter) -> Result<()> {
+            writer.finish()?;
+            let to = dir.join(shard_file_name(i));
+            // unlink-then-rename (instead of truncating the destination)
+            // keeps any existing mapping of the old shard intact
+            let _ = std::fs::remove_file(&to);
+            std::fs::rename(shard_tmp(dir, i), &to)
+                .with_context(|| format!("committing {}", to.display()))?;
+            Ok(())
+        }
+        fn roll(dir: &Path, writer: &mut ShardWriter, shard: &mut u32) -> Result<()> {
+            *shard += 1;
+            // the shard header stores its index as u16; refuse to
+            // silently wrap past that (raise --shard-mb instead)
+            let claimed = u16::try_from(*shard).map_err(|_| {
+                anyhow!(
+                    "model needs more than {} shards; raise the shard size limit",
+                    u16::MAX
+                )
+            })?;
+            let next = ShardWriter::create(&shard_tmp(dir, *shard), claimed)?;
+            commit(dir, *shard - 1, std::mem::replace(writer, next))?;
+            Ok(())
+        }
+        let mut entry_slots: Vec<Option<IndexEntry>> = vec![None; model.tensors.len()];
+        let mut shard: u32 = 0;
+        let mut writer = ShardWriter::create(&shard_tmp(&dir, 0), 0)?;
+        for group in &write_plan {
+            let group_bytes: u64 = group.iter().map(|&i| record_len(i)).sum();
+            let non_empty = |w: &ShardWriter| w.bytes_written() > container::SHARD_HEADER_BYTES as u64;
+            // roll *between* groups: the whole group moves to a fresh
+            // shard when it would overflow the current (non-empty) one
+            if non_empty(&writer) && writer.bytes_written() + group_bytes > shard_limit {
+                roll(&dir, &mut writer, &mut shard)?;
+            }
+            // a single group larger than the shard limit falls back to
+            // per-record rollover (its layer then has no extent)
+            let oversize = group_bytes > shard_limit;
+            for &i in group {
+                let (spec, tensor) = &model.tensors[i];
+                if oversize
+                    && non_empty(&writer)
+                    && writer.bytes_written() + record_len(i) > shard_limit
+                {
+                    roll(&dir, &mut writer, &mut shard)?;
+                }
+                let payload = tensor.payload_bytes();
+                let loc = writer.append(
+                    tensor.codec_id().as_u8(),
+                    tensor.format() as u8,
+                    tensor.n_elem() as u64,
+                    &payload,
+                )?;
+                entry_slots[i] = Some(IndexEntry {
+                    name: spec.name.clone(),
+                    rows: spec.rows as u64,
+                    cols: spec.cols as u64,
+                    layer: spec.layer as u32,
+                    block_type: spec.block_type.code(),
+                    codec: tensor.codec_id().as_u8(),
+                    format: tensor.format() as u8,
+                    shard,
+                    offset: loc.offset,
+                    len: loc.len,
+                    payload_crc: loc.payload_crc,
+                });
+            }
+        }
+        commit(&dir, shard, writer)?;
+        // index entries keep the model's tensor order regardless of the
+        // physical write order, so loads (and migration comparisons)
+        // observe the same sequence either way
+        let entries: Vec<IndexEntry> = entry_slots
+            .into_iter()
+            .map(|s| s.expect("every tensor written"))
+            .collect();
+        // extents are a *placement promise*, not an observation: the
+        // interleaved baseline records none even when a single-tensor
+        // layer happens to be trivially contiguous, so readers (and the
+        // cold-start bench) see a uniformly extent-free layout
+        let layer_extents = match placement {
+            Placement::LayerContiguous => compute_layer_extents(&entries),
+            Placement::Interleaved => Vec::new(),
+        };
         let index = TensorIndex {
             model: model.name.clone(),
             n_shards: shard + 1,
             entries,
+            layer_extents,
         };
-        // the index is written last: a crashed pack never leaves a
-        // readable-but-incomplete artifact behind
-        std::fs::write(self.index_path(&model.name), index.serialize())?;
+        // the index is written last (tmp + rename like the shards): a
+        // crashed pack never leaves a readable-but-incomplete artifact
+        let index_path = self.index_path(&model.name);
+        let index_tmp = index_path.with_extension("ecf8i.tmp");
+        std::fs::write(&index_tmp, index.serialize())?;
+        let _ = std::fs::remove_file(&index_path);
+        std::fs::rename(&index_tmp, &index_path)
+            .with_context(|| format!("committing {}", index_path.display()))?;
         Ok(())
     }
 
@@ -300,6 +465,7 @@ impl ModelStore {
             .into_iter()
             .map(|s| (s.name.clone(), s))
             .collect();
+        let extents = loaded.layer_extents;
         let mut tensors = Vec::with_capacity(loaded.tensors.len());
         for (stored_spec, tensor) in loaded.tensors {
             let spec = spec_by_name
@@ -316,10 +482,9 @@ impl ModelStore {
             }
             tensors.push((spec, tensor));
         }
-        Ok(CompressedModel::from_tensors(
-            config.name.to_string(),
-            tensors,
-        ))
+        let mut model = CompressedModel::from_tensors(config.name.to_string(), tensors);
+        model.set_layer_extents(extents);
+        Ok(model)
     }
 
     /// Config-free v1 reader: shapes and roles come from the manifest;
@@ -364,9 +529,14 @@ impl ModelStore {
     }
 
     /// Open a v2 artifact for lazy access (index parsed, shard headers
-    /// validated, no tensor data read).
+    /// validated, shards mapped, no tensor data read).
     pub fn open(&self, model: &str) -> Result<LazyModel> {
         LazyModel::open(&self.model_dir(model))
+    }
+
+    /// [`ModelStore::open`] with an explicit [`AccessMode`].
+    pub fn open_mode(&self, model: &str, mode: AccessMode) -> Result<LazyModel> {
+        LazyModel::open_mode(&self.model_dir(model), mode)
     }
 
     /// Rewrite a v1 store as container v2 (shards + binary index) in the
@@ -410,30 +580,146 @@ impl ModelStore {
     }
 }
 
+/// Per-layer contiguous extents computed from final record locations:
+/// a layer gets an extent iff all its (non-embedding/head) records
+/// landed back to back in one shard.
+fn compute_layer_extents(entries: &[IndexEntry]) -> Vec<LayerExtent> {
+    let mut by_layer: HashMap<u32, Vec<(u32, u64, u64)>> = HashMap::new();
+    for e in entries {
+        if !BlockType::code_is_layer_weight(e.block_type) {
+            continue;
+        }
+        by_layer.entry(e.layer).or_default().push((e.shard, e.offset, e.len));
+    }
+    let mut extents = Vec::new();
+    'layers: for (layer, mut recs) in by_layer {
+        let shard = recs[0].0;
+        if recs.iter().any(|&(s, _, _)| s != shard) {
+            continue;
+        }
+        recs.sort_by_key(|&(_, off, _)| off);
+        for w in recs.windows(2) {
+            if w[0].1 + w[0].2 != w[1].1 {
+                continue 'layers;
+            }
+        }
+        let offset = recs[0].1;
+        let end = recs.last().map(|&(_, off, len)| off + len).unwrap();
+        extents.push(LayerExtent {
+            layer,
+            shard,
+            offset,
+            len: end - offset,
+        });
+    }
+    extents.sort_by_key(|e| e.layer);
+    extents
+}
+
+/// One shard's byte source inside a [`LazyModel`].
+enum ShardSource {
+    /// whole-shard view — records slice out of it with zero further
+    /// copies. On the real-mmap tier the view is created (mapped) at
+    /// open; on the fallback tier the cell starts empty and the
+    /// whole-shard buffer is read lazily on first record access, so
+    /// `open()` still touches only headers.
+    Mapped(MappedShard),
+    /// lazily opened file; records are read on demand
+    File(PathBuf),
+}
+
+enum MappedShard {
+    /// real-mmap tier: the view is immutable after open — no lock on the
+    /// per-record hot path
+    Eager(ByteView),
+    /// fallback tier: the whole-shard buffer materializes on first access
+    Lazy {
+        path: PathBuf,
+        cell: std::sync::Mutex<Option<ByteView>>,
+    },
+}
+
+impl MappedShard {
+    fn lazy(path: PathBuf) -> Self {
+        Self::Lazy {
+            path,
+            cell: std::sync::Mutex::new(None),
+        }
+    }
+
+    /// The current view, if materialized.
+    fn get(&self) -> Option<ByteView> {
+        match self {
+            MappedShard::Eager(v) => Some(v.clone()),
+            MappedShard::Lazy { cell, .. } => cell.lock().unwrap().clone(),
+        }
+    }
+}
+
 /// A v2 artifact opened for lazy access: the parsed [`TensorIndex`] plus
-/// shard paths. Individual tensors, whole layers, or the full model can
-/// be loaded on demand — the offload path (Table 3) reloads one layer at
-/// a time and never holds the whole model.
+/// per-shard byte sources. Individual tensors, whole layers, or the full
+/// model can be loaded on demand — the offload path (Table 3) reloads one
+/// layer at a time and never holds the whole model.
+///
+/// In the default [`AccessMode::Mapped`] every shard is mapped exactly
+/// once at open; tensors parsed from it are zero-copy views into the
+/// mapping, and they (not the `LazyModel`) own the mapping's lifetime —
+/// dropping the `LazyModel` never invalidates a loaded tensor.
 pub struct LazyModel {
-    dir: PathBuf,
     index: TensorIndex,
     by_name: HashMap<String, usize>,
+    shards: Vec<ShardSource>,
+    mode: AccessMode,
+    /// explicit read() calls issued (mapped loads never count)
+    reads: AtomicU64,
+    /// payload bytes materialized by those reads — the cold-start bench's
+    /// peak-RSS proxy
+    bytes_copied: AtomicU64,
 }
 
 impl LazyModel {
-    /// Parse `<dir>/index.ecf8i` and validate every shard's header.
+    /// Open with the default zero-copy mapped access. Parses
+    /// `<dir>/index.ecf8i` and validates every shard's header.
     pub fn open(dir: &Path) -> Result<Self> {
+        Self::open_mode(dir, AccessMode::Mapped)
+    }
+
+    /// [`LazyModel::open`] with an explicit [`AccessMode`].
+    pub fn open_mode(dir: &Path, mode: AccessMode) -> Result<Self> {
         let index_bytes = std::fs::read(dir.join(INDEX_FILE))
             .with_context(|| format!("reading {} in {}", INDEX_FILE, dir.display()))?;
         let index = TensorIndex::deserialize(&index_bytes)?;
+        let mut shards = Vec::with_capacity(index.n_shards as usize);
         for s in 0..index.n_shards {
             let path = dir.join(shard_file_name(s));
-            let mut f = std::fs::File::open(&path)
-                .with_context(|| format!("opening shard {}", path.display()))?;
-            let mut head = [0u8; container::SHARD_HEADER_BYTES];
-            f.read_exact(&mut head)
-                .with_context(|| format!("shard header of {}", path.display()))?;
-            let claimed = container::parse_shard_header(&head)?;
+            let claimed = match mode {
+                // real mmap: map now (costs address space, no reads); the
+                // fallback tier defers its whole-shard read to first
+                // access so open() touches only headers on every tier
+                AccessMode::Mapped if crate::util::mmap::real_mmap() => {
+                    let map = Mmap::map_file(&path)
+                        .with_context(|| format!("mapping shard {}", path.display()))?;
+                    let view = ByteView::from_mmap(Arc::new(map));
+                    let claimed = container::parse_shard_header(&view)?;
+                    shards.push(ShardSource::Mapped(MappedShard::Eager(view)));
+                    claimed
+                }
+                _ => {
+                    let mut f = std::fs::File::open(&path)
+                        .with_context(|| format!("opening shard {}", path.display()))?;
+                    let mut head = [0u8; container::SHARD_HEADER_BYTES];
+                    f.read_exact(&mut head)
+                        .with_context(|| format!("shard header of {}", path.display()))?;
+                    let claimed = container::parse_shard_header(&head)?;
+                    shards.push(match mode {
+                        AccessMode::Mapped => {
+                            ShardSource::Mapped(MappedShard::lazy(path.clone()))
+                        }
+                        AccessMode::ReadCopy => ShardSource::File(path.clone()),
+                    });
+                    claimed
+                }
+            };
             if claimed as u32 != s {
                 bail!("shard {} claims index {claimed}", path.display());
             }
@@ -445,10 +731,112 @@ impl LazyModel {
             .map(|(i, e)| (e.name.clone(), i))
             .collect();
         Ok(Self {
-            dir: dir.to_path_buf(),
             index,
             by_name,
+            shards,
+            mode,
+            reads: AtomicU64::new(0),
+            bytes_copied: AtomicU64::new(0),
         })
+    }
+
+    pub fn mode(&self) -> AccessMode {
+        self.mode
+    }
+
+    /// (explicit reads issued, payload bytes copied by them) since open.
+    /// Zero on the mapped path — the acceptance gauge for "zero
+    /// per-tensor payload copies".
+    pub fn io_stats(&self) -> (u64, u64) {
+        (
+            self.reads.load(Ordering::Relaxed),
+            self.bytes_copied.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Address range of shard `s`'s backing bytes (mapped mode only;
+    /// `None` until a lazy fallback-tier shard is first accessed) — lets
+    /// tests assert loaded views point into the mapping.
+    pub fn shard_addr_range(&self, s: u32) -> Option<std::ops::Range<usize>> {
+        match self.shards.get(s as usize)? {
+            ShardSource::Mapped(m) => m.get().map(|v| v.backing_addr_range()),
+            ShardSource::File(_) => None,
+        }
+    }
+
+    /// The whole-shard view of a mapped shard, materializing the
+    /// fallback tier's owned buffer (one counted `read`) on first use.
+    fn mapped_shard_view(&self, m: &MappedShard) -> Result<ByteView> {
+        let (path, cell) = match m {
+            MappedShard::Eager(v) => return Ok(v.clone()),
+            MappedShard::Lazy { path, cell } => (path, cell),
+        };
+        let mut cell = cell.lock().unwrap();
+        if let Some(v) = &*cell {
+            return Ok(v.clone());
+        }
+        let data =
+            std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        self.reads.fetch_add(1, Ordering::Relaxed);
+        self.bytes_copied.fetch_add(data.len() as u64, Ordering::Relaxed);
+        let view = ByteView::from_vec(data);
+        *cell = Some(view.clone());
+        Ok(view)
+    }
+
+    /// Byte range of `shard[offset..offset+len]` as a view, bounds-checked
+    /// against the mapping (mapped mode) or read through a (cached) file
+    /// handle in one seek+read (read-copy mode).
+    fn range_bytes(
+        &self,
+        shard: u32,
+        offset: u64,
+        len: u64,
+        handle: &mut Option<(u32, std::fs::File)>,
+    ) -> Result<ByteView> {
+        let shard_src = self
+            .shards
+            .get(shard as usize)
+            .ok_or_else(|| anyhow!("shard {shard} out of range"))?;
+        let off = usize::try_from(offset).context("record offset")?;
+        let len = usize::try_from(len).context("record length")?;
+        let end = off.checked_add(len).context("record end overflows")?;
+        match shard_src {
+            ShardSource::Mapped(m) => self
+                .mapped_shard_view(m)?
+                .try_slice(off..end)
+                .ok_or_else(|| anyhow!("record range {off}..{end} outside shard {shard}")),
+            ShardSource::File(path) => {
+                // reuse the handle while consecutive reads share a shard
+                if handle.as_ref().map(|(s, _)| *s) != Some(shard) {
+                    let f = std::fs::File::open(path)
+                        .with_context(|| format!("opening {}", path.display()))?;
+                    *handle = Some((shard, f));
+                }
+                let f = &mut handle.as_mut().unwrap().1;
+                let mut buf = vec![0u8; len];
+                f.seek(SeekFrom::Start(offset))?;
+                f.read_exact(&mut buf)
+                    .with_context(|| format!("reading {len} bytes of shard {shard}"))?;
+                self.reads.fetch_add(1, Ordering::Relaxed);
+                self.bytes_copied.fetch_add(len as u64, Ordering::Relaxed);
+                Ok(ByteView::from_vec(buf))
+            }
+        }
+    }
+
+    /// Whole-shard bytes: the mapped view, or one full-file read.
+    fn shard_bytes(&self, shard: u32) -> Result<ByteView> {
+        match &self.shards[shard as usize] {
+            ShardSource::Mapped(m) => self.mapped_shard_view(m),
+            ShardSource::File(path) => {
+                let data = std::fs::read(path)
+                    .with_context(|| format!("reading {}", path.display()))?;
+                self.reads.fetch_add(1, Ordering::Relaxed);
+                self.bytes_copied.fetch_add(data.len() as u64, Ordering::Relaxed);
+                Ok(ByteView::from_vec(data))
+            }
+        }
     }
 
     pub fn index(&self) -> &TensorIndex {
@@ -483,18 +871,11 @@ impl LazyModel {
         })
     }
 
-    /// Read, CRC-verify, and parse one record through the codec registry.
-    fn load_entry(
-        &self,
-        entry: &IndexEntry,
-        file: &mut std::fs::File,
-    ) -> Result<CompressedTensor> {
-        let len = usize::try_from(entry.len).context("record length")?;
-        let mut buf = vec![0u8; len];
-        file.seek(SeekFrom::Start(entry.offset))?;
-        file.read_exact(&mut buf)
-            .with_context(|| format!("record bytes of {}", entry.name))?;
-        let (header, payload) = container::read_record(&buf)?;
+    /// CRC-verify and parse one record out of its [`ByteView`] through
+    /// the codec registry (zero-copy: the tensor's payload shares the
+    /// view's backing).
+    fn parse_entry(&self, entry: &IndexEntry, record: &ByteView) -> Result<CompressedTensor> {
+        let (header, payload) = container::read_record_view(record)?;
         if header.codec != entry.codec
             || header.format != entry.format
             || header.n_elem != entry.n_elem()
@@ -502,7 +883,7 @@ impl LazyModel {
         {
             bail!("index entry for {} disagrees with its record header", entry.name);
         }
-        Ok(codecs::parse_record(
+        Ok(codecs::parse_record_view(
             header.codec,
             header.format,
             header.n_elem as usize,
@@ -510,9 +891,14 @@ impl LazyModel {
         )?)
     }
 
-    fn open_shard(&self, shard: u32) -> Result<std::fs::File> {
-        let path = self.dir.join(shard_file_name(shard));
-        std::fs::File::open(&path).with_context(|| format!("opening {}", path.display()))
+    /// One record's bytes: a mapped sub-view, or one seek+read.
+    fn record_bytes(
+        &self,
+        entry: &IndexEntry,
+        handle: &mut Option<(u32, std::fs::File)>,
+    ) -> Result<ByteView> {
+        self.range_bytes(entry.shard, entry.offset, entry.len, handle)
+            .with_context(|| format!("record bytes of {}", entry.name))
     }
 
     /// Load one tensor by name.
@@ -522,44 +908,112 @@ impl LazyModel {
             .get(name)
             .ok_or_else(|| anyhow!("tensor {name} not in index"))?;
         let entry = &self.index.entries[i];
-        let mut f = self.open_shard(entry.shard)?;
-        Ok((Self::spec(entry)?, self.load_entry(entry, &mut f)?))
+        let record = self.record_bytes(entry, &mut None)?;
+        Ok((Self::spec(entry)?, self.parse_entry(entry, &record)?))
     }
 
     /// Load every tensor of transformer layer `layer` (embedding/head
     /// excluded), in index order — the offload path's per-step reload.
+    ///
+    /// When the index records a [`LayerExtent`] for the layer this is
+    /// exactly one contiguous slice of the mapping (mapped mode) or one
+    /// contiguous `read()` (read-copy mode); records then parse as
+    /// sub-views of that one extent. Without an extent (interleaved or
+    /// oversize layers) it falls back to per-record access.
     pub fn load_layer(&self, layer: usize) -> Result<Vec<(TensorSpec, CompressedTensor)>> {
+        let layer_u32 = u32::try_from(layer).context("layer index")?;
+        let wanted = |entry: &IndexEntry| {
+            entry.layer as usize == layer && BlockType::code_is_layer_weight(entry.block_type)
+        };
+        if let Some(ext) = self.index.layer_extent(layer_u32) {
+            let base = self
+                .range_bytes(ext.shard, ext.offset, ext.len, &mut None)
+                .with_context(|| format!("extent of layer {layer}"))?;
+            let mut out = Vec::new();
+            for entry in self.index.entries.iter().filter(|e| wanted(e)) {
+                let rel = entry
+                    .offset
+                    .checked_sub(ext.offset)
+                    .and_then(|r| usize::try_from(r).ok())
+                    .ok_or_else(|| anyhow!("{} outside its layer extent", entry.name))?;
+                let len = usize::try_from(entry.len).context("record length")?;
+                let record = rel
+                    .checked_add(len)
+                    .and_then(|end| base.try_slice(rel..end))
+                    .ok_or_else(|| anyhow!("{} overruns its layer extent", entry.name))?;
+                out.push((Self::spec(entry)?, self.parse_entry(entry, &record)?));
+            }
+            return Ok(out);
+        }
         let mut out = Vec::new();
-        let mut file: Option<(u32, std::fs::File)> = None;
-        for entry in &self.index.entries {
-            let bt = BlockType::from_code(entry.block_type);
-            if entry.layer as usize != layer
-                || matches!(bt, Some(BlockType::Embedding) | Some(BlockType::Head))
-            {
-                continue;
-            }
-            // reuse the handle while consecutive records share a shard
-            if file.as_ref().map(|(s, _)| *s) != Some(entry.shard) {
-                file = Some((entry.shard, self.open_shard(entry.shard)?));
-            }
-            let f = &mut file.as_mut().unwrap().1;
-            out.push((Self::spec(entry)?, self.load_entry(entry, f)?));
+        let mut handle: Option<(u32, std::fs::File)> = None;
+        for entry in self.index.entries.iter().filter(|e| wanted(e)) {
+            let record = self.record_bytes(entry, &mut handle)?;
+            out.push((Self::spec(entry)?, self.parse_entry(entry, &record)?));
         }
         Ok(out)
     }
 
+    /// Per-layer extent views into the mapped shards (layer-indexed,
+    /// `None` where no extent is recorded or in read-copy mode) — what
+    /// [`CompressedModel::advise_layer`] runs on.
+    pub fn layer_extent_views(&self) -> Vec<Option<ByteView>> {
+        // a genuine model has at most one distinct layer per entry, so
+        // clamp the allocation by the entry count — a crafted index with
+        // layer = u32::MAX must not drive a multi-GB vec![None; ..]
+        let n_layers = self
+            .index
+            .entries
+            .iter()
+            .filter(|e| BlockType::code_is_layer_weight(e.block_type))
+            .map(|e| e.layer as usize + 1)
+            .max()
+            .unwrap_or(0)
+            .min(self.index.entries.len());
+        let mut views = vec![None; n_layers];
+        for ext in &self.index.layer_extents {
+            // extents come from an untrusted index: bounds-check both the
+            // shard id and the byte range instead of indexing. Only real
+            // mappings are worth advising (the fallback tier's owned
+            // buffers would just be pinned RAM behind a no-op madvise).
+            let Some(ShardSource::Mapped(m)) = self.shards.get(ext.shard as usize) else {
+                continue;
+            };
+            let Some(shard) = m.get().filter(|v| v.is_mapped()) else {
+                continue;
+            };
+            let (Ok(off), Ok(len)) = (usize::try_from(ext.offset), usize::try_from(ext.len)) else {
+                continue;
+            };
+            if let (Some(slot), Some(end)) =
+                (views.get_mut(ext.layer as usize), off.checked_add(len))
+            {
+                *slot = shard.try_slice(off..end);
+            }
+        }
+        views
+    }
+
     /// Eager whole-model load. With a pool, shards load in parallel (one
-    /// work item per shard; records within a shard stream in offset
-    /// order through one handle).
+    /// work item per shard). Mapped mode performs no reads at all —
+    /// every tensor is a view into its shard's mapping; read-copy mode
+    /// reads each shard file exactly once and slices records out of that
+    /// one buffer.
     pub fn load_all(&self, pool: Option<&ThreadPool>) -> Result<CompressedModel> {
         let n_shards = self.index.n_shards as usize;
         let load_shard = |s: usize| -> Result<Vec<(usize, CompressedTensor)>> {
-            let mut f = self.open_shard(s as u32)?;
+            let shard = self.shard_bytes(s as u32)?;
             let mut out = Vec::new();
             for (i, entry) in self.index.entries.iter().enumerate() {
-                if entry.shard as usize == s {
-                    out.push((i, self.load_entry(entry, &mut f)?));
+                if entry.shard as usize != s {
+                    continue;
                 }
+                let off = usize::try_from(entry.offset).context("record offset")?;
+                let len = usize::try_from(entry.len).context("record length")?;
+                let record = shard
+                    .try_slice(off..off.saturating_add(len))
+                    .ok_or_else(|| anyhow!("record of {} outside shard {s}", entry.name))?;
+                out.push((i, self.parse_entry(entry, &record)?));
             }
             Ok(out)
         };
@@ -579,10 +1033,9 @@ impl LazyModel {
             let tensor = slot.ok_or_else(|| anyhow!("record of {} never loaded", entry.name))?;
             tensors.push((Self::spec(entry)?, tensor));
         }
-        Ok(CompressedModel::from_tensors(
-            self.index.model.clone(),
-            tensors,
-        ))
+        let mut model = CompressedModel::from_tensors(self.index.model.clone(), tensors);
+        model.set_layer_extents(self.layer_extent_views());
+        Ok(model)
     }
 
     /// Per-transformer-layer (raw, stored) byte totals straight from the
@@ -592,10 +1045,7 @@ impl LazyModel {
     pub fn layer_stats(&self) -> Vec<LayerStats> {
         let mut by_layer: HashMap<u32, LayerStats> = HashMap::new();
         for e in &self.index.entries {
-            if matches!(
-                BlockType::from_code(e.block_type),
-                Some(BlockType::Embedding) | Some(BlockType::Head)
-            ) {
+            if !BlockType::code_is_layer_weight(e.block_type) {
                 continue;
             }
             let s = by_layer.entry(e.layer).or_insert(LayerStats {
@@ -761,6 +1211,111 @@ mod tests {
                 "{} after migration",
                 sa.name
             );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn layer_contiguous_placement_records_an_extent_per_layer() {
+        let cfg = tiny_llm();
+        let m = CompressedModel::synthesize(&cfg, 8, None);
+        let dir = std::env::temp_dir().join("ecf8_store_test_placement");
+        std::fs::remove_dir_all(&dir).ok();
+        let store = ModelStore::new(&dir);
+        store.save_v2(&m, 1 << 20).unwrap();
+        let lazy = store.open(cfg.name).unwrap();
+        let index = lazy.index();
+        assert_eq!(index.layer_extents.len(), cfg.n_layers);
+        for l in 0..cfg.n_layers as u32 {
+            let ext = index.layer_extent(l).expect("every layer has an extent");
+            // the extent covers exactly the layer's records, back to back
+            let mut recs: Vec<(u64, u64)> = index
+                .entries
+                .iter()
+                .filter(|e| e.layer == l && BlockType::code_is_layer_weight(e.block_type))
+                .map(|e| {
+                    assert_eq!(e.shard, ext.shard, "layer {l} split across shards");
+                    (e.offset, e.len)
+                })
+                .collect();
+            recs.sort_unstable();
+            assert_eq!(recs.first().unwrap().0, ext.offset);
+            let mut pos = ext.offset;
+            for (off, len) in recs {
+                assert_eq!(off, pos, "gap inside layer {l}");
+                pos = off + len;
+            }
+            assert_eq!(pos, ext.end());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn interleaved_placement_loads_identically_but_records_no_extents() {
+        let cfg = tiny_llm();
+        let m = CompressedModel::synthesize(&cfg, 9, None);
+        let dir_a = std::env::temp_dir().join("ecf8_store_test_place_a");
+        let dir_b = std::env::temp_dir().join("ecf8_store_test_place_b");
+        std::fs::remove_dir_all(&dir_a).ok();
+        std::fs::remove_dir_all(&dir_b).ok();
+        let (sa, sb) = (ModelStore::new(&dir_a), ModelStore::new(&dir_b));
+        sa.save_v2_placed(&m, 1 << 20, Placement::LayerContiguous).unwrap();
+        sb.save_v2_placed(&m, 1 << 20, Placement::Interleaved).unwrap();
+        let la = sa.open(cfg.name).unwrap();
+        let lb = sb.open(cfg.name).unwrap();
+        assert!(lb.index().layer_extents.is_empty());
+        let (ma, mb) = (la.load_all(None).unwrap(), lb.load_all(None).unwrap());
+        assert_eq!(ma.tensors.len(), mb.tensors.len());
+        for ((xa, ta), (xb, tb)) in ma.tensors.iter().zip(&mb.tensors) {
+            assert_eq!(xa.name, xb.name, "index order independent of layout");
+            assert_eq!(ta.payload_bytes(), tb.payload_bytes(), "{}", xa.name);
+        }
+        // interleaved load_layer falls back to per-record access, same bytes
+        for l in 0..cfg.n_layers {
+            let (va, vb) = (la.load_layer(l).unwrap(), lb.load_layer(l).unwrap());
+            assert_eq!(va.len(), vb.len());
+            for ((_, ta), (_, tb)) in va.iter().zip(&vb) {
+                assert_eq!(ta.decode_to_vec(), tb.decode_to_vec());
+            }
+        }
+        std::fs::remove_dir_all(&dir_a).ok();
+        std::fs::remove_dir_all(&dir_b).ok();
+    }
+
+    #[test]
+    fn mapped_load_performs_zero_payload_reads_and_read_copy_one_per_layer() {
+        let cfg = tiny_llm();
+        let m = CompressedModel::synthesize(&cfg, 10, None);
+        let dir = std::env::temp_dir().join("ecf8_store_test_modes");
+        std::fs::remove_dir_all(&dir).ok();
+        let store = ModelStore::new(&dir);
+        store.save_v2(&m, 1 << 20).unwrap();
+
+        let mapped = store.open_mode(cfg.name, AccessMode::Mapped).unwrap();
+        let whole = mapped.load_all(None).unwrap();
+        if crate::util::mmap::real_mmap() {
+            assert_eq!(mapped.io_stats(), (0, 0), "mapped load copies nothing");
+            // every layer carries an extent view to advise
+            assert_eq!(whole.advisable_layers(), cfg.n_layers);
+        } else {
+            // fallback tier: at most one whole-shard read per shard,
+            // never per tensor, and no advise targets (madvise is a no-op)
+            let (reads, _) = mapped.io_stats();
+            assert!(reads <= mapped.index().n_shards as u64, "reads={reads}");
+            assert_eq!(whole.advisable_layers(), 0);
+        }
+
+        let rc = store.open_mode(cfg.name, AccessMode::ReadCopy).unwrap();
+        let layer0 = rc.load_layer(0).unwrap();
+        let (reads, copied) = rc.io_stats();
+        assert_eq!(reads, 1, "contiguous layer = exactly one read");
+        let ext = rc.index().layer_extent(0).unwrap();
+        assert_eq!(copied, ext.len);
+        // parity against the mapped path, bit for bit
+        let layer0_mapped = mapped.load_layer(0).unwrap();
+        assert_eq!(layer0.len(), layer0_mapped.len());
+        for ((_, ta), (_, tb)) in layer0.iter().zip(&layer0_mapped) {
+            assert_eq!(ta.decode_to_vec(), tb.decode_to_vec());
         }
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -261,12 +261,23 @@ impl LlmExecutor {
         let mut x: Vec<f32> = Vec::new();
         let mut logits: Vec<f32> = Vec::new();
         let pool = self.pool.clone();
+        // mmap readahead: when the model came off a mapped layer-contiguous
+        // artifact, madvise(WILLNEED) stage l+1's shard extent while stage
+        // l decodes (stages 1..=n_layers are transformer layers; embed and
+        // head have no recorded extent and the hook no-ops)
+        let model = &self.model;
+        let advise = move |stage: usize| {
+            if (1..=n_layers).contains(&stage) {
+                model.advise_layer(stage - 1);
+            }
+        };
         decode_stage::with_stages_decoded(
             &mut self.jit,
             pool.as_deref(),
             DEFAULT_DECODE_WINDOW,
             &stages,
             observer,
+            Some(&advise),
             |stage, arena| -> Result<()> {
                 if stage == 0 {
                     x = embed_art.run_f32(&[

@@ -278,7 +278,7 @@ mod tests {
         let data: Vec<u8> = (0..n).map(|_| (rng.next_u64() >> 56) as u8).collect();
         let t = CompressedTensor::Raw(RawTensor {
             format: Fp8Format::E4M3,
-            bytes: data.clone(),
+            bytes: data.clone().into(),
         });
         (data, t)
     }

@@ -1,0 +1,502 @@
+//! Minimal read-only memory mapping + the shared [`ByteView`] payload
+//! type — the substrate of the zero-copy serving read path.
+//!
+//! The offline registry snapshot has no `memmap2`/`libc` crates, but std
+//! already links the platform libc on unix, so [`Mmap`] declares the four
+//! calls it needs (`mmap`/`munmap`/`madvise`/`getpagesize`) as raw
+//! `extern "C"` items — same substitution policy as `util::crc32` and
+//! `util::prng` (see `util/mod.rs`).
+//!
+//! ## Tiers
+//!
+//! * **64-bit unix, default features** — a real
+//!   `mmap(PROT_READ, MAP_PRIVATE)` of the whole file; decode reads
+//!   straight out of the page cache and [`Mmap::advise`] forwards
+//!   readahead hints to `madvise`. (Gated on
+//!   `target_pointer_width = "64"`: the raw declaration types `offset`
+//!   as `i64`, which is only the libc `off_t` ABI on LP64 targets —
+//!   32-bit unix gets the fallback tier instead of a silent ABI
+//!   mismatch.)
+//! * **anything else, or `--features no-mmap`** — the read-copy tier:
+//!   the "mapping" is one owned buffer filled by a single
+//!   `std::fs::read`. Every `ByteView` API behaves identically (views,
+//!   slicing, lifetime), only [`real_mmap`] reports `false` and `advise`
+//!   is a no-op. CI pins this tier the same way `force-swar` pins the
+//!   SIMD fallback.
+//!
+//! ## Lifetime story
+//!
+//! A [`ByteView`] is `(Arc<backing>, offset, len)`: a cheaply clonable
+//! window over either a mapping or an owned `Vec<u8>`. Whoever holds a
+//! view holds the backing alive — a tensor parsed out of a mapped shard
+//! keeps that shard mapped even after the `LazyModel` that created it is
+//! dropped; the last view dropped unmaps (or frees) the backing. There is
+//! deliberately no way to get a `ByteView` whose bytes can disappear
+//! underneath it.
+
+use std::io;
+use std::ops::{Deref, Range};
+use std::path::Path;
+use std::sync::Arc;
+
+/// `madvise` hints the decode pipeline issues. Values are identical on
+/// Linux and macOS; on the read-copy tier they are ignored.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Advice {
+    /// Expect access soon: kick off readahead (`MADV_WILLNEED`).
+    WillNeed,
+    /// Sequential scan ahead (`MADV_SEQUENTIAL`).
+    Sequential,
+    /// Pages can be dropped (`MADV_DONTNEED`).
+    DontNeed,
+}
+
+/// True when this build's [`Mmap`] is a real memory mapping (64-bit
+/// unix, without `--features no-mmap`); false on the read-copy fallback
+/// tier.
+pub const fn real_mmap() -> bool {
+    cfg!(all(unix, target_pointer_width = "64", not(feature = "no-mmap")))
+}
+
+#[cfg(all(unix, target_pointer_width = "64", not(feature = "no-mmap")))]
+mod sys {
+    use std::ffi::c_void;
+
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+    pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
+
+    pub fn advice_code(a: super::Advice) -> i32 {
+        match a {
+            super::Advice::Sequential => 2,
+            super::Advice::WillNeed => 3,
+            super::Advice::DontNeed => 4,
+        }
+    }
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+        pub fn madvise(addr: *mut c_void, len: usize, advice: i32) -> i32;
+        pub fn getpagesize() -> i32;
+    }
+}
+
+/// A read-only mapping of one file (or, on the fallback tier, one owned
+/// copy of it). Always created whole-file; windows are carved out with
+/// [`ByteView`]s, never with partial maps.
+pub struct Mmap {
+    #[cfg(all(unix, target_pointer_width = "64", not(feature = "no-mmap")))]
+    ptr: *mut u8,
+    #[cfg(all(unix, target_pointer_width = "64", not(feature = "no-mmap")))]
+    len: usize,
+    #[cfg(not(all(unix, target_pointer_width = "64", not(feature = "no-mmap"))))]
+    data: Vec<u8>,
+}
+
+// SAFETY: the mapping is PROT_READ and never mutated or remapped after
+// construction; concurrent reads from any thread are fine, and `Drop`
+// requires exclusive ownership. The fallback tier is a plain Vec.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map `path` read-only in its entirety (fallback tier: read it).
+    pub fn map_file(path: &Path) -> io::Result<Self> {
+        #[cfg(all(unix, target_pointer_width = "64", not(feature = "no-mmap")))]
+        {
+            use std::os::unix::io::AsRawFd;
+            let file = std::fs::File::open(path)?;
+            let len = file.metadata()?.len();
+            let len = usize::try_from(len)
+                .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "file too large to map"))?;
+            if len == 0 {
+                // mmap(len = 0) is EINVAL; an empty file maps to an empty view
+                return Ok(Self {
+                    ptr: std::ptr::null_mut(),
+                    len: 0,
+                });
+            }
+            // SAFETY: fd is valid for the duration of the call; we request
+            // a fresh PROT_READ/MAP_PRIVATE mapping and check MAP_FAILED.
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr == sys::MAP_FAILED {
+                return Err(io::Error::last_os_error());
+            }
+            // the fd can close now: the mapping holds its own reference
+            Ok(Self {
+                ptr: ptr as *mut u8,
+                len,
+            })
+        }
+        #[cfg(not(all(unix, target_pointer_width = "64", not(feature = "no-mmap"))))]
+        {
+            Ok(Self {
+                data: std::fs::read(path)?,
+            })
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        #[cfg(all(unix, target_pointer_width = "64", not(feature = "no-mmap")))]
+        {
+            self.len
+        }
+        #[cfg(not(all(unix, target_pointer_width = "64", not(feature = "no-mmap"))))]
+        {
+            self.data.len()
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        #[cfg(all(unix, target_pointer_width = "64", not(feature = "no-mmap")))]
+        {
+            if self.len == 0 {
+                return &[];
+            }
+            // SAFETY: ptr/len describe a live PROT_READ mapping that
+            // outlives the borrow and is never written through.
+            unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+        }
+        #[cfg(not(all(unix, target_pointer_width = "64", not(feature = "no-mmap"))))]
+        {
+            &self.data
+        }
+    }
+
+    /// Forward an access hint for `range` (byte offsets into the mapping)
+    /// to the kernel. Purely advisory: returns whether a real `madvise`
+    /// was issued (always `false` on the read-copy tier); failures are
+    /// swallowed — a missed hint only costs readahead.
+    pub fn advise(&self, range: Range<usize>, advice: Advice) -> bool {
+        debug_assert!(range.start <= range.end && range.end <= self.len());
+        #[cfg(all(unix, target_pointer_width = "64", not(feature = "no-mmap")))]
+        {
+            if range.is_empty() || self.len == 0 {
+                return false;
+            }
+            // madvise requires a page-aligned start address
+            let page = unsafe { sys::getpagesize() }.max(1) as usize;
+            let start = range.start - (range.start % page);
+            let len = range.end - start;
+            // SAFETY: [start, start+len) is within the mapping; madvise
+            // never invalidates the mapping for the advice codes we use.
+            let rc = unsafe {
+                sys::madvise(
+                    self.ptr.add(start) as *mut std::ffi::c_void,
+                    len,
+                    sys::advice_code(advice),
+                )
+            };
+            rc == 0
+        }
+        #[cfg(not(all(unix, target_pointer_width = "64", not(feature = "no-mmap"))))]
+        {
+            let _ = (range, advice);
+            false
+        }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_pointer_width = "64", not(feature = "no-mmap")))]
+        if self.len > 0 {
+            // SAFETY: ptr/len came from a successful mmap and are unmapped
+            // exactly once.
+            unsafe { sys::munmap(self.ptr as *mut std::ffi::c_void, self.len) };
+        }
+    }
+}
+
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mmap")
+            .field("len", &self.len())
+            .field("real", &real_mmap())
+            .finish()
+    }
+}
+
+#[derive(Clone)]
+enum Backing {
+    Owned(Arc<Vec<u8>>),
+    Mapped(Arc<Mmap>),
+}
+
+/// A cheaply clonable read-only window over shared bytes: either a
+/// mapped file region or an owned buffer. This is the one lifetime story
+/// for compressed payloads — codec payloads, `Ecf8Blob` streams, and raw
+/// passthrough tensors all hold `ByteView`s, so a tensor loaded from a
+/// mapped shard decodes straight out of the page cache with zero copies,
+/// while the same tensor built in memory carries its own buffer behind
+/// the identical API.
+#[derive(Clone)]
+pub struct ByteView {
+    backing: Backing,
+    off: usize,
+    len: usize,
+}
+
+impl ByteView {
+    /// View over an owned buffer (takes ownership; no copy).
+    pub fn from_vec(data: Vec<u8>) -> Self {
+        let len = data.len();
+        Self {
+            backing: Backing::Owned(Arc::new(data)),
+            off: 0,
+            len,
+        }
+    }
+
+    /// View over a whole mapping.
+    pub fn from_mmap(map: Arc<Mmap>) -> Self {
+        let len = map.len();
+        Self {
+            backing: Backing::Mapped(map),
+            off: 0,
+            len,
+        }
+    }
+
+    /// Sub-view of this view (both share the backing). Panics on
+    /// out-of-bounds ranges — validate untrusted offsets with
+    /// [`ByteView::try_slice`] instead.
+    pub fn slice(&self, range: Range<usize>) -> Self {
+        self.try_slice(range).expect("ByteView::slice out of bounds")
+    }
+
+    /// Bounds-checked [`ByteView::slice`] for untrusted offsets.
+    pub fn try_slice(&self, range: Range<usize>) -> Option<Self> {
+        if range.start > range.end || range.end > self.len {
+            return None;
+        }
+        Some(Self {
+            backing: self.backing.clone(),
+            off: self.off + range.start,
+            len: range.end - range.start,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        let base = match &self.backing {
+            Backing::Owned(v) => v.as_slice(),
+            Backing::Mapped(m) => m.as_slice(),
+        };
+        &base[self.off..self.off + self.len]
+    }
+
+    /// True when the bytes live in a real file mapping (not an owned
+    /// buffer, and not the read-copy fallback tier).
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.backing, Backing::Mapped(_)) && real_mmap()
+    }
+
+    /// Address range of this view's bytes — the zero-copy assertions in
+    /// tests check these fall inside the shard's backing range.
+    pub fn addr_range(&self) -> Range<usize> {
+        let p = self.as_slice().as_ptr() as usize;
+        p..p + self.len
+    }
+
+    /// Address range of the *whole* backing buffer/mapping.
+    pub fn backing_addr_range(&self) -> Range<usize> {
+        let base = match &self.backing {
+            Backing::Owned(v) => v.as_slice(),
+            Backing::Mapped(m) => m.as_slice(),
+        };
+        let p = base.as_ptr() as usize;
+        p..p + base.len()
+    }
+
+    /// Issue an access hint for exactly this view's byte range (no-op
+    /// unless the backing is a real mapping). Returns whether a real
+    /// `madvise` was issued.
+    pub fn advise(&self, advice: Advice) -> bool {
+        match &self.backing {
+            Backing::Mapped(m) => m.advise(self.off..self.off + self.len, advice),
+            Backing::Owned(_) => false,
+        }
+    }
+}
+
+impl Deref for ByteView {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl AsRef<[u8]> for ByteView {
+    fn as_ref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<u8>> for ByteView {
+    fn from(v: Vec<u8>) -> Self {
+        Self::from_vec(v)
+    }
+}
+
+impl Default for ByteView {
+    fn default() -> Self {
+        Self::from_vec(Vec::new())
+    }
+}
+
+impl PartialEq for ByteView {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+impl Eq for ByteView {}
+
+impl PartialEq<[u8]> for ByteView {
+    fn eq(&self, other: &[u8]) -> bool {
+        self.as_slice() == other
+    }
+}
+impl PartialEq<Vec<u8>> for ByteView {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl std::fmt::Debug for ByteView {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ByteView")
+            .field("len", &self.len)
+            .field("mapped", &self.is_mapped())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_file(name: &str, data: &[u8]) -> std::path::PathBuf {
+        let path = std::env::temp_dir().join(name);
+        std::fs::write(&path, data).unwrap();
+        path
+    }
+
+    #[test]
+    fn map_file_sees_exact_bytes() {
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i * 7) as u8).collect();
+        let path = tmp_file("ecf8_mmap_exact.bin", &data);
+        let map = Mmap::map_file(&path).unwrap();
+        assert_eq!(map.len(), data.len());
+        assert_eq!(map.as_slice(), &data[..]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_file_maps_empty() {
+        let path = tmp_file("ecf8_mmap_empty.bin", &[]);
+        let map = Mmap::map_file(&path).unwrap();
+        assert!(map.is_empty());
+        assert_eq!(map.as_slice(), &[] as &[u8]);
+        let view = ByteView::from_mmap(Arc::new(map));
+        assert!(view.is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_is_an_error_not_a_panic() {
+        assert!(Mmap::map_file(Path::new("/definitely/not/here.ecf8s")).is_err());
+    }
+
+    #[test]
+    fn views_share_backing_and_outlive_the_creator() {
+        let data: Vec<u8> = (0..4096u32).map(|i| i as u8).collect();
+        let path = tmp_file("ecf8_mmap_share.bin", &data);
+        let sub;
+        {
+            let map = Arc::new(Mmap::map_file(&path).unwrap());
+            let whole = ByteView::from_mmap(map);
+            sub = whole.slice(100..300);
+            // `whole` (and the Arc) drop here; `sub` keeps the map alive
+        }
+        assert_eq!(&*sub, &data[100..300]);
+        assert_eq!(sub.len(), 200);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn owned_views_slice_and_compare() {
+        let v = ByteView::from_vec(vec![1, 2, 3, 4, 5]);
+        assert!(!v.is_mapped());
+        assert_eq!(v.slice(1..4), vec![2u8, 3, 4]);
+        assert_eq!(v.slice(1..4).slice(1..2), vec![3u8]);
+        assert!(v.try_slice(3..6).is_none());
+        #[allow(clippy::reversed_empty_ranges)]
+        let reversed = v.try_slice(4..2);
+        assert!(reversed.is_none());
+        assert_eq!(v.try_slice(5..5).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn view_addr_ranges_nest_in_backing() {
+        let v = ByteView::from_vec((0..100).collect());
+        let s = v.slice(10..60);
+        let backing = v.backing_addr_range();
+        let sub = s.addr_range();
+        assert!(backing.start <= sub.start && sub.end <= backing.end);
+    }
+
+    #[test]
+    fn advise_is_safe_on_every_backing() {
+        let data = vec![0u8; 3 * 4096 + 17];
+        let path = tmp_file("ecf8_mmap_advise.bin", &data);
+        let map = Arc::new(Mmap::map_file(&path).unwrap());
+        let view = ByteView::from_mmap(map);
+        // unaligned interior range: must not fault regardless of tier
+        let hinted = view.slice(5..2 * 4096 + 3).advise(Advice::WillNeed);
+        assert_eq!(hinted, real_mmap());
+        assert!(!view.slice(10..10).advise(Advice::WillNeed), "empty range");
+        assert!(!ByteView::from_vec(vec![1, 2, 3]).advise(Advice::Sequential));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn mapped_views_equal_read_bytes() {
+        // the parity contract in miniature: map vs read, same bytes
+        let data: Vec<u8> = (0..65_536u32).map(|i| (i ^ (i >> 3)) as u8).collect();
+        let path = tmp_file("ecf8_mmap_parity.bin", &data);
+        let mapped = ByteView::from_mmap(Arc::new(Mmap::map_file(&path).unwrap()));
+        let read = ByteView::from_vec(std::fs::read(&path).unwrap());
+        assert_eq!(mapped, read);
+        assert_eq!(mapped.slice(1000..2000), read.slice(1000..2000));
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -6,6 +6,7 @@ pub mod channel;
 pub mod cli;
 pub mod crc32;
 pub mod humanize;
+pub mod mmap;
 pub mod prng;
 pub mod quickprop;
 pub mod sampling;

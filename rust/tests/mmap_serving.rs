@@ -1,0 +1,367 @@
+//! Zero-copy mmap serving, end to end: mapped-vs-read parity, pointer
+//! containment (views really live inside the mapping), truncation
+//! robustness over the mapped path (structured errors, never a
+//! panic/SIGBUS), and the layer-contiguous placement invariant.
+
+use ecf8::codec::container;
+use ecf8::codec::{codecs, CompressedTensor, Ecf8Params, Fp8Format};
+use ecf8::model::config::{tiny_llm, BlockType, TensorSpec};
+use ecf8::model::store::{AccessMode, CompressedModel, LazyModel, ModelStore};
+use ecf8::util::mmap::real_mmap;
+use ecf8::util::prng::Xoshiro256;
+
+fn weight_bytes(n: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    (0..n)
+        .map(|_| {
+            let x = (ecf8::util::sampling::normal(&mut rng) * 0.05) as f32;
+            ecf8::fp8::F8E4M3::from_f32(x).to_bits()
+        })
+        .collect()
+}
+
+fn spec(name: &str, rows: usize, cols: usize, layer: usize, bt: BlockType) -> TensorSpec {
+    TensorSpec {
+        name: name.to_string(),
+        rows,
+        cols,
+        block_type: bt,
+        layer,
+        alpha: 0.0,
+        gamma: 0.0,
+        row_sigma: 0.0,
+    }
+}
+
+/// Mixed-codec model with two transformer layers plus embed/head.
+fn mixed_model(name: &str) -> (CompressedModel, Vec<Vec<u8>>) {
+    let planes = vec![
+        weight_bytes(3_000, 1),
+        weight_bytes(2_000, 2),
+        ecf8::model::weights::generate_noise_fp8(1_500, 3),
+        weight_bytes(2_500, 4),
+        weight_bytes(2_800, 5),
+    ];
+    let specs = vec![
+        spec("embed", 30, 100, 0, BlockType::Embedding),
+        spec("layers.0.a", 20, 100, 0, BlockType::AttnQkv),
+        spec("layers.0.noise", 15, 100, 0, BlockType::MlpUp),
+        spec("layers.1.a", 25, 100, 1, BlockType::AttnQkv),
+        spec("head", 28, 100, 0, BlockType::Head),
+    ];
+    let tensors = specs
+        .into_iter()
+        .zip(&planes)
+        .map(|(s, d)| {
+            (
+                s,
+                codecs::compress_auto(d, Fp8Format::E4M3, Ecf8Params::default()),
+            )
+        })
+        .collect();
+    (
+        CompressedModel::from_tensors(name.to_string(), tensors),
+        planes,
+    )
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+// ---------------------------------------------------------------------------
+// Parity: mapped and read-copy paths produce identical CompressedModels
+// and bit-identical decoded bytes.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mmap_and_read_copy_paths_are_bit_identical() {
+    let cfg = tiny_llm();
+    let model = CompressedModel::synthesize(&cfg, 51, None);
+    let dir = tmp("ecf8_mmap_parity_store");
+    let store = ModelStore::new(&dir);
+    store.save_v2(&model, 1 << 20).unwrap();
+
+    let mapped = store.open_mode(cfg.name, AccessMode::Mapped).unwrap();
+    let copied = store.open_mode(cfg.name, AccessMode::ReadCopy).unwrap();
+    let ma = mapped.load_all(None).unwrap();
+    let mb = copied.load_all(None).unwrap();
+    assert_eq!(ma.tensors.len(), mb.tensors.len());
+    for (((sa, ta), (sb, tb)), (s0, t0)) in
+        ma.tensors.iter().zip(&mb.tensors).zip(&model.tensors)
+    {
+        assert_eq!(sa.name, sb.name);
+        assert_eq!(sa.name, s0.name);
+        assert_eq!(ta.codec_id(), tb.codec_id());
+        assert_eq!(ta.payload_bytes(), tb.payload_bytes(), "{}", sa.name);
+        let (da, db) = (ta.decode_to_vec(), tb.decode_to_vec());
+        assert_eq!(da, db, "{}", sa.name);
+        assert_eq!(da, t0.decode_to_vec(), "{}", sa.name);
+    }
+    // per-tensor and per-layer lazy paths agree too
+    let (_, qa) = mapped.load_tensor("layers.0.attn.q_proj").unwrap();
+    let (_, qb) = copied.load_tensor("layers.0.attn.q_proj").unwrap();
+    assert_eq!(qa.decode_to_vec(), qb.decode_to_vec());
+    for l in 0..cfg.n_layers {
+        let (la, lb) = (mapped.load_layer(l).unwrap(), copied.load_layer(l).unwrap());
+        assert_eq!(la.len(), lb.len());
+        for ((xa, ta), (_, tb)) in la.iter().zip(&lb) {
+            assert_eq!(ta.decode_to_vec(), tb.decode_to_vec(), "{}", xa.name);
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Zero-copy: payload views of mapped loads point into the shard mapping,
+// and the LazyModel's read counters stay at zero.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mapped_payload_views_point_into_the_shard_mapping() {
+    let (model, _) = mixed_model("zero-copy");
+    let dir = tmp("ecf8_mmap_zero_copy");
+    let store = ModelStore::new(&dir);
+    store.save_v2(&model, 8 << 10).unwrap();
+    let lazy = store.open_mode("zero-copy", AccessMode::Mapped).unwrap();
+
+    let whole = lazy.load_all(None).unwrap();
+    if real_mmap() {
+        assert_eq!(lazy.io_stats(), (0, 0), "no explicit reads on the mmap path");
+    } else {
+        // fallback tier: whole-shard buffers, at most one read per shard
+        let (reads, _) = lazy.io_stats();
+        assert!(reads <= lazy.index().n_shards as u64, "reads={reads}");
+    }
+    for (entry, (spec, tensor)) in lazy.index().entries.iter().zip(&whole.tensors) {
+        assert_eq!(entry.name, spec.name);
+        let shard = lazy
+            .shard_addr_range(entry.shard)
+            .expect("mapped mode exposes shard ranges");
+        let views: Vec<ecf8::util::mmap::ByteView> = match tensor {
+            CompressedTensor::Ecf8(b) => {
+                vec![b.encoded.clone(), b.packed.clone(), b.gaps.clone()]
+            }
+            CompressedTensor::Raw(r) => vec![r.bytes.clone()],
+            CompressedTensor::External(e) => vec![e.payload.clone()],
+        };
+        for v in views {
+            let r = v.addr_range();
+            assert!(
+                shard.start <= r.start && r.end <= shard.end,
+                "{}: payload view [{:#x},{:#x}) outside shard [{:#x},{:#x})",
+                spec.name,
+                r.start,
+                r.end,
+                shard.start,
+                shard.end
+            );
+            assert_eq!(v.is_mapped(), real_mmap(), "{}", spec.name);
+        }
+        assert_eq!(tensor.payload_is_mapped(), real_mmap(), "{}", spec.name);
+    }
+    // the lazy paths are equally zero-copy
+    let (_, t) = lazy.load_tensor("layers.0.a").unwrap();
+    assert_eq!(t.payload_is_mapped(), real_mmap());
+    let layer0 = lazy.load_layer(0).unwrap();
+    assert!(layer0.iter().all(|(_, t)| t.payload_is_mapped() == real_mmap()));
+    if real_mmap() {
+        assert_eq!(lazy.io_stats(), (0, 0));
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn loaded_tensors_outlive_the_lazy_model() {
+    // views own the mapping: dropping the LazyModel must not invalidate
+    // tensors already parsed out of it
+    let (model, planes) = mixed_model("outlive");
+    let dir = tmp("ecf8_mmap_outlive");
+    let store = ModelStore::new(&dir);
+    store.save_v2(&model, 64 << 20).unwrap();
+    let tensor = {
+        let lazy = store.open_mode("outlive", AccessMode::Mapped).unwrap();
+        lazy.load_tensor("layers.0.a").unwrap().1
+        // lazy drops here; the record's view keeps the shard mapped
+    };
+    assert_eq!(tensor.decode_to_vec(), planes[1]);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Truncation property over the mapped path: every byte-boundary cut of a
+// mapped shard yields a structured error — never a panic (and, because
+// maps are created from the already-truncated file, never a SIGBUS).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn truncating_a_mapped_shard_at_every_byte_is_a_structured_error() {
+    let (model, _) = mixed_model("trunc-map");
+    let dir = tmp("ecf8_mmap_trunc");
+    let store = ModelStore::new(&dir);
+    store.save_v2(&model, 4 << 10).unwrap();
+    let model_dir = dir.join("trunc-map");
+    let full = LazyModel::open(&model_dir).unwrap();
+    assert!(full.index().n_shards > 1, "want a multi-shard artifact");
+    full.load_all(None).unwrap();
+
+    // truncate shard 0 at every byte boundary; reopen + load every time
+    let shard_path = model_dir.join(container::shard_file_name(0));
+    let shard_bytes = std::fs::read(&shard_path).unwrap();
+    for cut in 0..shard_bytes.len() {
+        std::fs::write(&shard_path, &shard_bytes[..cut]).unwrap();
+        let outcome = LazyModel::open(&model_dir).and_then(|lazy| {
+            lazy.load_all(None)?;
+            // per-layer and per-tensor paths must be equally structured
+            for l in 0..2 {
+                lazy.load_layer(l)?;
+            }
+            Ok(())
+        });
+        assert!(outcome.is_err(), "cut={cut}: truncated shard must not load");
+    }
+    std::fs::write(&shard_path, &shard_bytes).unwrap();
+    LazyModel::open(&model_dir)
+        .unwrap()
+        .load_all(None)
+        .expect("restored shard loads again");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupted_record_in_mapped_shard_is_a_crc_error() {
+    let (model, _) = mixed_model("corrupt-map");
+    let dir = tmp("ecf8_mmap_corrupt");
+    let store = ModelStore::new(&dir);
+    store.save_v2(&model, 64 << 20).unwrap();
+    let shard_path = dir.join("corrupt-map").join(container::shard_file_name(0));
+    let mut bytes = std::fs::read(&shard_path).unwrap();
+    let n = bytes.len();
+    bytes[n - 25] ^= 0x40;
+    std::fs::write(&shard_path, &bytes).unwrap();
+    let lazy = LazyModel::open(dir.join("corrupt-map").as_path()).unwrap();
+    let err = lazy.load_all(None).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("CRC"),
+        "corruption through the mapping must surface as CRC, got {err:#}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Placement invariant: with the default placement, every layer that fits
+// the shard limit occupies one contiguous extent of one shard; oversize
+// layers may split but everything still round-trips.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn placement_invariant_layers_within_limit_are_one_extent() {
+    let (model, _) = mixed_model("place-inv");
+    let dir = tmp("ecf8_mmap_place_inv");
+    let store = ModelStore::new(&dir);
+    store.save_v2(&model, 8 << 10).unwrap();
+    let lazy = store.open("place-inv").unwrap();
+    let index = lazy.index();
+    for layer in [0u32, 1] {
+        let ext = index
+            .layer_extent(layer)
+            .unwrap_or_else(|| panic!("layer {layer} has an extent"));
+        assert!(ext.len <= 8 << 10, "layer fits the limit");
+        let mut recs: Vec<(u64, u64)> = index
+            .entries
+            .iter()
+            .filter(|e| e.layer == layer && BlockType::code_is_layer_weight(e.block_type))
+            .map(|e| {
+                assert_eq!(e.shard, ext.shard);
+                (e.offset, e.len)
+            })
+            .collect();
+        recs.sort_unstable();
+        let mut pos = ext.offset;
+        for (off, len) in recs {
+            assert_eq!(off, pos, "layer {layer} contiguous");
+            pos = off + len;
+        }
+        assert_eq!(pos, ext.end());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn oversize_layer_splits_but_still_roundtrips() {
+    // a layer bigger than the shard limit cannot be one extent; it must
+    // fall back to per-record rollover and still load bit-exactly
+    let (model, planes) = mixed_model("place-big");
+    let dir = tmp("ecf8_mmap_place_big");
+    let store = ModelStore::new(&dir);
+    // limit far below layer 0's ~5 KB of records
+    store.save_v2(&model, 2 << 10).unwrap();
+    let lazy = store.open("place-big").unwrap();
+    assert!(
+        lazy.index().layer_extent(0).is_none(),
+        "oversize layer records no extent"
+    );
+    let whole = lazy.load_all(None).unwrap();
+    for ((s, t), plane) in whole.tensors.iter().zip(&planes) {
+        assert_eq!(t.decode_to_vec(), *plane, "{}", s.name);
+    }
+    let layer0 = lazy.load_layer(0).unwrap();
+    assert_eq!(layer0.len(), 2);
+    assert_eq!(layer0[0].1.decode_to_vec(), planes[1]);
+    assert_eq!(layer0[1].1.decode_to_vec(), planes[2]);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// The decode stage runs off mapped tensors (mixed codecs) bit-exactly,
+// with the advise hook wired the way the executor wires it.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn decode_stage_over_mapped_store_with_advise_is_bit_exact() {
+    let (model, planes) = mixed_model("stage-map");
+    let dir = tmp("ecf8_mmap_stage");
+    let store = ModelStore::new(&dir);
+    store.save_v2(&model, 8 << 10).unwrap();
+    let lazy = store.open("stage-map").unwrap();
+    let loaded = lazy.load_all(None).unwrap();
+
+    let layer0 = lazy.load_layer(0).unwrap();
+    let layer1 = lazy.load_layer(1).unwrap();
+    let stages: Vec<Vec<&CompressedTensor>> = vec![
+        layer0.iter().map(|(_, t)| t).collect(),
+        layer1.iter().map(|(_, t)| t).collect(),
+    ];
+    let expect: Vec<Vec<&[u8]>> = vec![
+        vec![&planes[1][..], &planes[2][..]],
+        vec![&planes[3][..]],
+    ];
+    let mut jit = ecf8::tensormgr::JitDecompressor::new(0, None);
+    let advise = |stage: usize| {
+        // same shape as the executor's hook: readahead the next layer
+        loaded.advise_layer(stage);
+    };
+    ecf8::coordinator::decode_stage::with_stages_decoded(
+        &mut jit,
+        None,
+        2,
+        &stages,
+        None,
+        Some(&advise),
+        |l, arena| -> Result<(), String> {
+            assert_eq!(arena.len(), expect[l].len());
+            for (i, want) in expect[l].iter().enumerate() {
+                assert_eq!(arena.tensor(i), *want, "stage {l} tensor {i}");
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+    // the advise targets exist exactly when the backing is a real map
+    assert_eq!(loaded.advisable_layers(), if real_mmap() { 2 } else { 0 });
+    assert_eq!(loaded.advise_layer(0), real_mmap());
+    assert!(!loaded.advise_layer(99), "out-of-range layer is a no-op");
+    std::fs::remove_dir_all(&dir).ok();
+}
