@@ -1,0 +1,332 @@
+//! Continuous batching vs static batching on the synthetic open-loop
+//! workload — the ROADMAP's "KV-cache-aware continuous batching" rung,
+//! measured.
+//!
+//! Three sections:
+//! 1. **Identity flood** — continuous scheduling with a pool tight
+//!    enough to force preemption must produce token-for-token identical
+//!    responses to the static batch-to-completion oracle, with every
+//!    evicted KV block round-tripped through the codec registry and
+//!    zero leaked blocks. This is the correctness gate for everything
+//!    below.
+//! 2. **Open-loop comparison** — the same arrival process (fixed gap)
+//!    through both schedulers on a cost-modelled engine
+//!    (`fixed + per_slot × width` per iteration): continuous admits
+//!    into running iterations and pays only live slots; static waits
+//!    for batch formation and pays dead slots until each group drains.
+//!    Reported: tokens/s, TTFT p50/p99, TPOT p50/p99, occupancy.
+//! 3. **`BENCH_continuous.json`** — machine-readable rows plus the
+//!    headline `continuous_vs_static_tokens_speedup`, the TTFT p99
+//!    ratio, the eviction codec census, and the invariant flags.
+
+use ecf8::bench_support::{banner, write_bench_json, Json, Table};
+use ecf8::codec::Fp8Format;
+use ecf8::coordinator::metrics::SchedulerMetrics;
+use ecf8::scheduler::{
+    run_static, ContinuousScheduler, ContinuousServer, GenRequest, KvCacheConfig, KvCacheManager,
+    KvStats, SchedConfig, SyntheticIterationEngine, SystemClock,
+};
+use ecf8::util::prng::Xoshiro256;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const VOCAB: usize = 96;
+const PROMPT: usize = 12;
+/// generation budgets are heterogeneous (uniform in GEN_MIN..=GEN_MAX):
+/// static batching runs every group to its longest member, so ragged
+/// budgets are exactly where iteration-level scheduling wins
+const GEN_MIN: usize = 4;
+const GEN_MAX: usize = 64;
+const BLOCK_TOKENS: usize = 8;
+const BYTES_PER_TOKEN: usize = 128;
+/// static baseline's batch width (its memory-model admitted batch)
+const MAX_BATCH: usize = 4;
+/// continuous live-slot cap (overcommit; preemption is the safety valve)
+const MAX_RUNNING: usize = 16;
+
+fn kv_cfg(n_blocks: usize) -> KvCacheConfig {
+    KvCacheConfig {
+        block_tokens: BLOCK_TOKENS,
+        bytes_per_token: BYTES_PER_TOKEN,
+        n_blocks,
+        format: Fp8Format::E4M3,
+    }
+}
+
+/// worst-case blocks one sequence can ever hold
+fn per_seq_blocks() -> usize {
+    (PROMPT + GEN_MAX).div_ceil(BLOCK_TOKENS)
+}
+
+fn requests(n: u64, seed: u64, start: Instant, gap: Duration) -> Vec<GenRequest> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    (0..n)
+        .map(|id| {
+            GenRequest::at(
+                id,
+                (0..PROMPT).map(|_| rng.next_below(VOCAB as u64) as i32).collect(),
+                GEN_MIN + rng.next_below((GEN_MAX - GEN_MIN + 1) as u64) as usize,
+                start + gap * id as u32,
+            )
+        })
+        .collect()
+}
+
+/// Section 1: correctness under preemption.
+fn identity_flood() -> (KvStats, u64) {
+    println!("\n## identity: continuous (preempting) == static oracle");
+    let reqs = requests(24, 11, Instant::now(), Duration::ZERO);
+
+    let mut eng_s = SyntheticIterationEngine::instant(VOCAB);
+    let mut kv_s = KvCacheManager::new(kv_cfg(MAX_BATCH * per_seq_blocks()));
+    let mut ms = SchedulerMetrics::default();
+    let want: HashMap<u64, Vec<i32>> =
+        run_static(&mut eng_s, &mut kv_s, &reqs, MAX_BATCH, &SystemClock, &mut ms, false)
+            .expect("static run")
+            .into_iter()
+            .map(|r| (r.id, r.tokens))
+            .collect();
+    kv_s.leak_check().expect("static: zero leaked blocks");
+
+    // pool of 3 sequences' worst case for 16 live slots → heavy pressure
+    let mut eng_c = SyntheticIterationEngine::instant(VOCAB);
+    let mut sched = ContinuousScheduler::new(
+        SchedConfig { max_running: MAX_RUNNING },
+        kv_cfg(3 * per_seq_blocks()),
+        Arc::new(SystemClock),
+    );
+    for r in &reqs {
+        sched.submit(r.clone());
+    }
+    let got = sched.run_to_completion(&mut eng_c).expect("continuous run");
+    sched.kv().leak_check().expect("continuous: zero leaked blocks");
+    assert_eq!(got.len(), want.len());
+    for r in &got {
+        assert_eq!(r.tokens, want[&r.id], "request {} diverged", r.id);
+    }
+    let stats = sched.kv().stats().clone();
+    assert!(stats.evictions > 0, "tight pool must preempt");
+    assert_eq!(stats.evictions, stats.restores, "every eviction resumed");
+    println!(
+        "24 requests bit-identical across schedulers; {} preemption round-trips, \
+         {} blocks through the codec registry, zero leaked blocks ✓",
+        stats.evictions, stats.blocks_evicted
+    );
+    (stats, sched.metrics.preemptions)
+}
+
+struct DriveResult {
+    tokens_per_s: f64,
+    ttft_p50_s: f64,
+    ttft_p99_s: f64,
+    tpot_p50_s: f64,
+    tpot_p99_s: f64,
+    occupancy: f64,
+    iterations: u64,
+    preemptions: u64,
+    peak_width: usize,
+}
+
+/// Exact quantile over raw samples (the TTFT assertions must not be
+/// quantized by the histogram's 2× buckets).
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[idx]
+}
+
+/// TTFT quantiles come from the responses' exact per-request stamps;
+/// TPOT from the constant-memory histograms (reporting only).
+fn summarize(
+    metrics: &SchedulerMetrics,
+    responses: &[ecf8::scheduler::GenResponse],
+    wall_s: f64,
+) -> DriveResult {
+    let mut ttfts: Vec<f64> = responses.iter().map(|r| r.ttft_s).collect();
+    ttfts.sort_by(f64::total_cmp);
+    DriveResult {
+        tokens_per_s: metrics.tokens_generated as f64 / wall_s.max(1e-9),
+        ttft_p50_s: quantile(&ttfts, 0.50),
+        ttft_p99_s: quantile(&ttfts, 0.99),
+        tpot_p50_s: metrics.tpot.quantile_s(0.50),
+        tpot_p99_s: metrics.tpot.quantile_s(0.99),
+        occupancy: metrics.occupancy(),
+        iterations: metrics.iterations,
+        preemptions: metrics.preemptions,
+        peak_width: metrics.peak_running,
+    }
+}
+
+/// Section 2: the open-loop drive. Both schedulers see the same arrival
+/// schedule and the same cost model; the pool gives the static baseline
+/// exactly its conservative sizing and continuous the same total pool.
+fn open_loop(results: &mut Json) -> (DriveResult, DriveResult, KvStats) {
+    println!("\n## open-loop arrivals (gap 300 µs, iteration = 500 µs + 150 µs/slot)");
+    let n = 96u64;
+    let gap = Duration::from_micros(300);
+    let fixed = Duration::from_micros(500);
+    let per_slot = Duration::from_micros(150);
+    let pool_blocks = MAX_BATCH * per_seq_blocks();
+
+    // ---- static: groups of MAX_BATCH, batch formation waits for the
+    // group's last arrival, rectangles held until the group drains ----
+    let start_s = Instant::now();
+    let reqs_s = requests(n, 22, start_s, gap);
+    let mut eng_s = SyntheticIterationEngine::with_costs(VOCAB, fixed, per_slot);
+    let mut kv_s = KvCacheManager::new(kv_cfg(pool_blocks));
+    let mut metrics_s = SchedulerMetrics::default();
+    let resp_s = run_static(
+        &mut eng_s, &mut kv_s, &reqs_s, MAX_BATCH, &SystemClock, &mut metrics_s, true,
+    )
+    .expect("static drive");
+    let wall_s = start_s.elapsed().as_secs_f64();
+    kv_s.leak_check().expect("static: zero leaked blocks");
+    assert_eq!(resp_s.len(), n as usize);
+    let static_r = summarize(&metrics_s, &resp_s, wall_s);
+
+    // ---- continuous: same pool, same arrivals, iteration-level ----
+    let start_c = Instant::now();
+    let reqs_c = requests(n, 22, start_c, gap);
+    let server = ContinuousServer::new(
+        SyntheticIterationEngine::with_costs(VOCAB, fixed, per_slot),
+        ContinuousScheduler::new(
+            SchedConfig { max_running: MAX_RUNNING },
+            kv_cfg(pool_blocks),
+            Arc::new(SystemClock),
+        ),
+    );
+    for r in reqs_c {
+        let now = Instant::now();
+        if r.arrived > now {
+            std::thread::sleep(r.arrived - now);
+        }
+        server.submit(r);
+    }
+    let report = server.shutdown().expect("continuous drive");
+    let wall_c = start_c.elapsed().as_secs_f64();
+    report.leak_check.expect("continuous: zero leaked blocks");
+    assert_eq!(report.metrics.finished, n);
+    let cont_r = summarize(&report.metrics, &report.responses, wall_c);
+
+    let mut t = Table::new([
+        "scheduler",
+        "tokens/s",
+        "ttft p50",
+        "ttft p99",
+        "tpot p50",
+        "tpot p99",
+        "occupancy",
+        "preempt",
+    ]);
+    for (name, r) in [("static", &static_r), ("continuous", &cont_r)] {
+        t.row([
+            name.to_string(),
+            format!("{:.0}", r.tokens_per_s),
+            format!("{:.1} ms", r.ttft_p50_s * 1e3),
+            format!("{:.1} ms", r.ttft_p99_s * 1e3),
+            format!("{:.2} ms", r.tpot_p50_s * 1e3),
+            format!("{:.2} ms", r.tpot_p99_s * 1e3),
+            format!("{:.1}%", r.occupancy * 100.0),
+            r.preemptions.to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "continuous vs static: {:.2}× tokens/s, ttft p99 {:.2}×",
+        cont_r.tokens_per_s / static_r.tokens_per_s.max(1e-9),
+        cont_r.ttft_p99_s / static_r.ttft_p99_s.max(1e-9),
+    );
+
+    for (mode, r) in [("static", &static_r), ("continuous", &cont_r)] {
+        results.push(
+            Json::obj()
+                .field("mode", mode)
+                .field("requests", n as i64)
+                .field("tokens_per_s", r.tokens_per_s)
+                .field("ttft_p50_s", r.ttft_p50_s)
+                .field("ttft_p99_s", r.ttft_p99_s)
+                .field("tpot_p50_s", r.tpot_p50_s)
+                .field("tpot_p99_s", r.tpot_p99_s)
+                .field("occupancy", r.occupancy)
+                .field("iterations", r.iterations as i64)
+                .field("preemptions", r.preemptions as i64)
+                .field("peak_width", r.peak_width as i64),
+        );
+    }
+    (static_r, cont_r, report.kv_stats)
+}
+
+fn main() {
+    banner(
+        "bench_continuous",
+        "continuous batching over the paged, codec-evictable KV cache (ROADMAP rung)",
+    );
+    println!(
+        "workload: prompt {PROMPT} + {GEN_MIN}..={GEN_MAX} generated tokens (ragged), \
+         {BLOCK_TOKENS}-token blocks, static batch {MAX_BATCH} (conservatively sized pool) vs \
+         continuous width ≤ {MAX_RUNNING} on the same pool"
+    );
+
+    let (flood_stats, _) = identity_flood();
+
+    let mut results = Json::arr();
+    let (static_r, cont_r, open_stats) = open_loop(&mut results);
+
+    let mut census = Json::arr();
+    for (codec, blocks) in flood_stats
+        .evicted_by_codec
+        .iter()
+        .chain(open_stats.evicted_by_codec.iter())
+        .fold(Vec::<(String, u64)>::new(), |mut acc, (c, n)| {
+            match acc.iter_mut().find(|(l, _)| l == c.label()) {
+                Some((_, total)) => *total += n,
+                None => acc.push((c.label().to_string(), *n)),
+            }
+            acc
+        })
+    {
+        census.push(Json::obj().field("codec", codec).field("blocks", blocks as i64));
+    }
+
+    let speedup = cont_r.tokens_per_s / static_r.tokens_per_s.max(1e-9);
+    let ttft_ratio = cont_r.ttft_p99_s / static_r.ttft_p99_s.max(1e-9);
+    let doc = Json::obj()
+        .field("bench", "continuous")
+        .field(
+            "workload",
+            format!(
+                "open-loop arrivals (gap 300us), {PROMPT}+{GEN_MIN}..{GEN_MAX}-token gens; \
+                 synthetic iteration engine 500us + 150us/slot; static batch {MAX_BATCH} \
+                 vs continuous width <= {MAX_RUNNING} on one {}-block pool",
+                MAX_BATCH * per_seq_blocks()
+            ),
+        )
+        .field("continuous_vs_static_tokens_speedup", speedup)
+        .field("continuous_vs_static_ttft_p99_ratio", ttft_ratio)
+        .field("evict_restore_bit_identical", true)
+        .field("zero_leaked_blocks", true)
+        .field("eviction_codec_census", census)
+        .field(
+            "evicted_raw_bytes",
+            (flood_stats.evicted_raw_bytes + open_stats.evicted_raw_bytes) as i64,
+        )
+        .field(
+            "evicted_stored_bytes",
+            (flood_stats.evicted_stored_bytes + open_stats.evicted_stored_bytes) as i64,
+        )
+        .field("results", results);
+    write_bench_json("BENCH_continuous.json", &doc);
+
+    assert!(
+        speedup > 1.0,
+        "continuous must beat static tokens/s (got {speedup:.2}x)"
+    );
+    assert!(
+        ttft_ratio < 1.0,
+        "continuous must cut p99 TTFT (got {ttft_ratio:.2}x)"
+    );
+    println!("\nbench_continuous done (speedup {speedup:.2}×, ttft p99 ratio {ttft_ratio:.2})");
+}

@@ -1,8 +1,18 @@
 //! Dynamic batcher: accumulate requests until the batch is full (the
 //! scheduler's max batch) or the oldest waiter hits the linger deadline.
+//!
+//! Time is injected: the batcher carries a [`Clock`]
+//! (system clock by default) shared with the continuous scheduler's
+//! time source, so sim tests drive the linger policy and the
+//! iteration-level scheduler from one [`crate::scheduler::SimClock`].
+//! [`DynamicBatcher::next_deadline`] is `None` exactly when the queue
+//! is empty — a scheduler wake-up with nothing queued must sleep on
+//! its condvar, never on a stale deadline (pinned by test).
 
 use super::request::Request;
+use crate::scheduler::{Clock, SystemClock};
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Batching policy + pending queue.
@@ -10,16 +20,36 @@ pub struct DynamicBatcher {
     pub max_batch: usize,
     pub linger: Duration,
     queue: VecDeque<Request>,
+    clock: Arc<dyn Clock>,
 }
 
 impl DynamicBatcher {
     pub fn new(max_batch: usize, linger: Duration) -> Self {
+        Self::with_clock(max_batch, linger, Arc::new(SystemClock))
+    }
+
+    /// Inject the time source (sim tests share one [`Clock`] between the
+    /// batcher and the continuous scheduler).
+    pub fn with_clock(max_batch: usize, linger: Duration, clock: Arc<dyn Clock>) -> Self {
         assert!(max_batch > 0);
         Self {
             max_batch,
             linger,
             queue: VecDeque::new(),
+            clock,
         }
+    }
+
+    /// The injected clock's current time (what the admission loop uses
+    /// for its pop/sleep decisions).
+    pub fn now(&self) -> Instant {
+        self.clock.now()
+    }
+
+    /// [`Self::pop_batch`] at the injected clock's current time.
+    pub fn pop_batch_now(&mut self) -> Option<Vec<Request>> {
+        let now = self.clock.now();
+        self.pop_batch(now)
     }
 
     pub fn push(&mut self, r: Request) {
@@ -43,7 +73,9 @@ impl DynamicBatcher {
     }
 
     /// When the oldest waiter's linger deadline expires (admission can
-    /// sleep exactly until then). `None` when the queue is empty.
+    /// sleep exactly until then). `None` when the queue is empty — the
+    /// deadline is recomputed from the live queue head on every call,
+    /// so a wake-up after a pop/drain can never see a stale deadline.
     pub fn next_deadline(&self) -> Option<Instant> {
         self.queue.front().map(|r| r.arrived + self.linger)
     }
@@ -154,6 +186,39 @@ mod tests {
         b.push(req(0));
         let past = Instant::now() - Duration::from_secs(1);
         assert!(b.pop_batch(past).is_none());
+    }
+
+    #[test]
+    fn deadline_clears_once_the_queue_empties() {
+        // regression: a scheduler wake-up after the queue drained must
+        // see None, not the popped request's stale deadline
+        let mut b = DynamicBatcher::new(4, Duration::from_millis(50));
+        b.push(req(0));
+        assert!(b.next_deadline().is_some());
+        let _ = b.drain_all();
+        assert_eq!(b.next_deadline(), None, "stale deadline after drain");
+        b.push(req(1));
+        b.push(req(2));
+        let popped = b.pop_batch(Instant::now() + Duration::from_millis(60));
+        assert_eq!(popped.unwrap().len(), 2);
+        assert_eq!(b.next_deadline(), None, "stale deadline after pop");
+    }
+
+    #[test]
+    fn sim_clock_drives_batcher_and_scheduler_from_one_source() {
+        use crate::scheduler::SimClock;
+        let clock = SimClock::new();
+        let mut b =
+            DynamicBatcher::with_clock(4, Duration::from_millis(50), clock.clone());
+        b.push(Request::at(0, vec![0; 4], clock.now()));
+        // no wall time passes: the sim clock alone decides "due"
+        assert!(b.pop_batch_now().is_none());
+        clock.advance(Duration::from_millis(49));
+        assert!(b.pop_batch_now().is_none());
+        clock.advance(Duration::from_millis(1));
+        let batch = b.pop_batch_now().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(b.next_deadline(), None);
     }
 
     #[test]

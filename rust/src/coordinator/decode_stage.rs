@@ -52,13 +52,17 @@ pub const DEFAULT_DECODE_WINDOW: usize = 2;
 /// tensors decoding as independent work items on `pool` (serial without
 /// one). Returns the consumer's results, or its first error.
 ///
-/// `advise` is the mmap readahead hook: when set, the decoder thread
+/// `advise` is the mmap paging hook: when set, the decoder thread
 /// calls `advise(l + 1)` right before it starts decoding stage `l` (and
 /// `advise(0)` once up front), so the callback can `madvise(WILLNEED)`
 /// the *next* stage's shard extent while the current one decodes —
 /// sequential readahead driven by the pipeline, not the kernel's guess
-/// (see `CompressedModel::advise_layer`). Purely advisory: it must not
-/// touch the arenas and has no effect on the decoded bytes.
+/// (see `CompressedModel::advise_layer`). After the final stage's
+/// decode it fires once more with `stages.len()` (one past the end),
+/// so the callback's counterpart can retire the trailing stages'
+/// consumed extents too (`madvise(DONTNEED)`, see
+/// `CompressedModel::drop_layer`). Purely advisory: it must not touch
+/// the arenas and has no effect on the decoded bytes.
 ///
 /// Bit-exactness contract: `consume(l, arena)` sees exactly the bytes a
 /// serial `decode` of `stages[l]` would produce — the pipeline changes
@@ -138,6 +142,13 @@ pub fn with_stages_decoded<R, E>(
                 }
                 if full_tx.send((l, arena)).is_err() {
                     return Vec::new();
+                }
+            }
+            if let Some(f) = advise {
+                if !stages.is_empty() {
+                    // one past the end: every stage's compressed bytes
+                    // are consumed — the hook can retire the tail
+                    f(stages.len());
                 }
             }
             // recover the ring buffers for the next call: drain until the
@@ -297,9 +308,10 @@ mod tests {
             |_, _| -> Result<(), String> { Ok(()) },
         )
         .unwrap();
-        // stage 0 kicked up front, then l+1 before each stage l decodes;
-        // the final stage advises nothing past the plan
-        assert_eq!(*advised.lock().unwrap(), vec![0, 1, 2]);
+        // stage 0 kicked up front, l+1 before each stage l decodes, and
+        // one-past-the-end after the final stage (the DONTNEED
+        // counterpart's retirement signal)
+        assert_eq!(*advised.lock().unwrap(), vec![0, 1, 2, 3]);
     }
 
     #[test]

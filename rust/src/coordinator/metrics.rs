@@ -216,6 +216,84 @@ impl PipelineMetrics {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Continuous-scheduler metrics
+// ---------------------------------------------------------------------------
+
+/// Counters and token-level latency histograms for the iteration-level
+/// scheduler (`crate::scheduler`). Unlike the batch-level [`Metrics`],
+/// latency is split the way generation serving reports it: TTFT
+/// (arrival → first generated token) and TPOT (inter-token interval),
+/// both constant-memory [`LatencyHistogram`]s. Slot accounting
+/// (`slot_tokens` / `slot_capacity`) makes static batching's rectangle
+/// waste visible as an occupancy ratio.
+#[derive(Debug, Clone, Default)]
+pub struct SchedulerMetrics {
+    /// arrival → first generated token
+    pub ttft: LatencyHistogram,
+    /// interval between consecutive generated tokens of one sequence
+    pub tpot: LatencyHistogram,
+    pub iterations: u64,
+    pub tokens_generated: u64,
+    pub admitted: u64,
+    pub finished: u64,
+    /// sequences evicted under block pressure
+    pub preemptions: u64,
+    /// sequences restored after preemption
+    pub resumes: u64,
+    /// widest iteration executed (live slots)
+    pub peak_running: usize,
+    /// Σ live slots over all iterations
+    pub slot_tokens: u64,
+    /// Σ (live + dead) slots over all iterations — dead slots are
+    /// static batching's padding waste; equal to `slot_tokens` under
+    /// continuous scheduling
+    pub slot_capacity: u64,
+}
+
+impl SchedulerMetrics {
+    pub fn record_iteration(&mut self, live: usize, pad: usize) {
+        self.iterations += 1;
+        self.slot_tokens += live as u64;
+        self.slot_capacity += (live + pad) as u64;
+    }
+
+    /// Fraction of paid-for iteration slots that produced a token
+    /// (1.0 = no padding waste).
+    pub fn occupancy(&self) -> f64 {
+        if self.slot_capacity == 0 {
+            return 0.0;
+        }
+        self.slot_tokens as f64 / self.slot_capacity as f64
+    }
+
+    /// Multi-line human-readable report.
+    pub fn render(&self) -> String {
+        format!(
+            "iterations {:6}  tokens {:6}  occupancy {:5.1}%  peak width {}\n\
+             admitted {} finished {} preemptions {} resumes {}\n\
+             ttft: p50 {:8.3} ms, p99 {:8.3} ms, max {:8.3} ms ({} samples)\n\
+             tpot: p50 {:8.3} ms, p99 {:8.3} ms, max {:8.3} ms ({} samples)\n",
+            self.iterations,
+            self.tokens_generated,
+            self.occupancy() * 100.0,
+            self.peak_running,
+            self.admitted,
+            self.finished,
+            self.preemptions,
+            self.resumes,
+            self.ttft.quantile_s(0.50) * 1e3,
+            self.ttft.quantile_s(0.99) * 1e3,
+            self.ttft.max_s() * 1e3,
+            self.ttft.count(),
+            self.tpot.quantile_s(0.50) * 1e3,
+            self.tpot.quantile_s(0.99) * 1e3,
+            self.tpot.max_s() * 1e3,
+            self.tpot.count(),
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -280,6 +358,27 @@ mod tests {
         assert_eq!(snap.events, 2);
         assert_eq!(snap.queue_depth_peak, 3);
         assert_eq!(snap.latency.count(), 2);
+    }
+
+    #[test]
+    fn scheduler_metrics_occupancy_and_render() {
+        let mut m = SchedulerMetrics::default();
+        assert_eq!(m.occupancy(), 0.0, "no iterations yet");
+        m.record_iteration(4, 0);
+        m.record_iteration(3, 1);
+        m.record_iteration(1, 3);
+        m.tokens_generated = 8;
+        m.ttft.record(0.004);
+        m.tpot.record(0.001);
+        m.peak_running = 4;
+        assert_eq!(m.iterations, 3);
+        assert_eq!(m.slot_tokens, 8);
+        assert_eq!(m.slot_capacity, 12);
+        assert!((m.occupancy() - 8.0 / 12.0).abs() < 1e-12);
+        let s = m.render();
+        assert!(s.contains("occupancy"));
+        assert!(s.contains("ttft"));
+        assert!(s.contains("tpot"));
     }
 
     #[test]

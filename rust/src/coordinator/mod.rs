@@ -20,7 +20,15 @@
 //! * [`decode_stage`] — the decode-ahead stage itself: per-tensor decode
 //!   work items running `window` stages ahead of execution;
 //! * [`metrics`] — latency/throughput counters plus per-stage latency
-//!   histograms and queue-depth watermarks.
+//!   histograms and queue-depth watermarks, and the TTFT/TPOT metrics
+//!   of the iteration-level scheduler.
+//!
+//! Both coordinators here are *batch-level* (a formed batch executes to
+//! completion). The iteration-level continuous-batching coordinator —
+//! ragged per-iteration batches over a paged, codec-evictable KV cache
+//! — lives in [`crate::scheduler`] and executes through the same
+//! [`BatchEngine`] seam (extended to
+//! [`crate::scheduler::IterationEngine`]).
 
 pub mod batcher;
 pub mod decode_stage;
@@ -31,7 +39,9 @@ pub mod scheduler;
 pub mod server;
 
 pub use batcher::DynamicBatcher;
-pub use metrics::{LatencyHistogram, PipelineMetrics, SharedStageMetrics, StageMetrics};
+pub use metrics::{
+    LatencyHistogram, PipelineMetrics, SchedulerMetrics, SharedStageMetrics, StageMetrics,
+};
 pub use pipeline::{PipelineConfig, PipelinedServer, SyntheticEngine};
 pub use request::{Request, Response};
 pub use scheduler::{MemoryModel, ServingPlan};

@@ -31,6 +31,12 @@
 //! Scheduling changes, numerics don't: with the same batch composition,
 //! responses are bit-identical to the serial server's (asserted by the
 //! integration tests and the Table-2 bench).
+//!
+//! This coordinator is still *batch-level* — a formed batch executes to
+//! completion. Its iteration-level sibling,
+//! [`crate::scheduler::ContinuousServer`], replaces formed batches with
+//! ragged per-iteration batches over a paged KV cache and the same
+//! submit / collect_ready / shutdown surface.
 
 use super::batcher::DynamicBatcher;
 use super::metrics::{Metrics, PipelineMetrics, SharedStageMetrics};
@@ -273,7 +279,9 @@ fn admission_loop(
         if shared.shutdown.load(Ordering::SeqCst) {
             break;
         }
-        let now = Instant::now();
+        // the batcher's injected clock decides "due" (system clock in
+        // production; the condvar sleep below is always wall time)
+        let now = batcher.now();
         if let Some(batch) = batcher.pop_batch(now) {
             drop(batcher); // never hold the submit lock across the send
             stage.observe_depth(batch_tx.len());

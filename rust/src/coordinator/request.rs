@@ -14,10 +14,17 @@ pub struct Request {
 
 impl Request {
     pub fn new(id: u64, tokens: Vec<i32>) -> Self {
+        Self::at(id, tokens, Instant::now())
+    }
+
+    /// Construction with an explicit arrival stamp — pairs with an
+    /// injected [`crate::scheduler::Clock`] so sim tests drive the
+    /// linger policy without wall time.
+    pub fn at(id: u64, tokens: Vec<i32>, arrived: Instant) -> Self {
         Self {
             id,
             tokens,
-            arrived: Instant::now(),
+            arrived,
         }
     }
 }

@@ -69,6 +69,33 @@ pub fn compiled_batch_for(want: usize) -> usize {
         .unwrap_or(1)
 }
 
+/// Pad `rows` (each exactly `SEQ_LEN` tokens) to the compiled
+/// `exec_batch × SEQ_LEN` rectangle with zero rows and execute it.
+/// Returns the full `exec_batch × vocab` logits; callers slice off the
+/// rows they care about. The one padding definition shared by the
+/// batch-level coordinators and the iteration-level window re-scoring
+/// path (`LlmExecutor`'s `IterationEngine` impl), so rectangle
+/// composition cannot drift between them.
+pub(crate) fn run_rows<E: BatchEngine>(
+    engine: &mut E,
+    rows: &[&[i32]],
+    exec_batch: usize,
+    ahead: bool,
+    observer: Option<&SharedStageMetrics>,
+) -> Result<Vec<f32>> {
+    debug_assert!(rows.len() <= exec_batch);
+    let mut tokens = vec![0i32; exec_batch * SEQ_LEN];
+    for (i, row) in rows.iter().enumerate() {
+        assert_eq!(row.len(), SEQ_LEN, "row token window");
+        tokens[i * SEQ_LEN..(i + 1) * SEQ_LEN].copy_from_slice(row);
+    }
+    if ahead {
+        engine.run_batch_ahead(&tokens, exec_batch, observer)
+    } else {
+        engine.run_batch(&tokens, exec_batch)
+    }
+}
+
 /// Pad `batch` to the compiled shape, execute it on `engine`, and build
 /// per-request responses. One definition shared by the serial-tick and
 /// pipelined coordinators so their numerics cannot drift: given the same
@@ -82,17 +109,8 @@ pub(crate) fn execute_batch_on<E: BatchEngine>(
 ) -> Result<Vec<Response>> {
     let real = batch.len();
     debug_assert!(real <= exec_batch);
-    // pad to the compiled shape with zero tokens
-    let mut tokens = vec![0i32; exec_batch * SEQ_LEN];
-    for (i, r) in batch.iter().enumerate() {
-        assert_eq!(r.tokens.len(), SEQ_LEN, "request token window");
-        tokens[i * SEQ_LEN..(i + 1) * SEQ_LEN].copy_from_slice(&r.tokens);
-    }
-    let logits = if ahead {
-        engine.run_batch_ahead(&tokens, exec_batch, observer)?
-    } else {
-        engine.run_batch(&tokens, exec_batch)?
-    };
+    let rows: Vec<&[i32]> = batch.iter().map(|r| r.tokens.as_slice()).collect();
+    let logits = run_rows(engine, &rows, exec_batch, ahead, observer)?;
     let vocab = engine.vocab();
     let now = Instant::now();
     Ok(batch

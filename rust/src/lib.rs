@@ -15,6 +15,7 @@ pub mod fp8;
 pub mod huffman;
 pub mod model;
 pub mod runtime;
+pub mod scheduler;
 pub mod tensormgr;
 pub mod util;
 

@@ -9,6 +9,10 @@
 //!   entropy     exponent-entropy report for a tensor file or zoo model
 //!   gen-model   synthesize a model's weights into a compressed store
 //!   serve       run the serving loop on a runnable model
+//!               (--continuous: iteration-level scheduling over the
+//!               paged KV cache instead of the batch-level tick loop)
+//!   kv-sim      continuous-vs-static scheduling simulation on the
+//!               synthetic engine: identity, preemption, zero-leak
 //!   zoo         list the model zoo with sizes and paper targets
 
 use ecf8::codec::{codecs, container, decode, encode, CodecId, Ecf8Params, Fp8Format};
@@ -40,6 +44,7 @@ fn main() {
         "entropy" => cmd_entropy(args),
         "gen-model" => cmd_gen_model(args),
         "serve" => cmd_serve(args),
+        "kv-sim" => cmd_kv_sim(args),
         "zoo" => cmd_zoo(args),
         "--help" | "-h" | "help" => {
             usage();
@@ -74,6 +79,9 @@ fn usage() {
            entropy     --model <name> | <in.fp8>   exponent entropy report\n\
            gen-model   --model <name> --out <dir>  synthesize + compress\n\
            serve       --model <name> --requests N  run the serving loop\n\
+                       (--continuous for iteration-level KV-paged scheduling)\n\
+           kv-sim      --requests N --blocks B  continuous vs static\n\
+                                             scheduling sim (synthetic engine)\n\
            zoo                               list models and paper targets\n"
     );
 }
@@ -495,7 +503,19 @@ fn cmd_serve(raw: Vec<String>) -> anyhow::Result<()> {
         .opt_default("requests", "number of requests", "16")
         .opt_default("batch", "max batch size", "8")
         .opt_default("seed", "rng seed", "1")
-        .opt_default("threads", "decode threads", "0");
+        .opt_default("threads", "decode threads", "0")
+        .flag(
+            "continuous",
+            "iteration-level continuous batching over the paged KV cache \
+             instead of the batch-level tick loop",
+        )
+        .opt_default("gen", "generated tokens per request (--continuous)", "16")
+        .opt_default("block-tokens", "tokens per KV block (--continuous)", "16")
+        .opt_default(
+            "kv-blocks",
+            "KV block pool size (--continuous; 0 = size for batch × worst case)",
+            "0",
+        );
     let a = cmd.parse(raw).map_err(|e| handle_help(&cmd, e))?;
     let name = a.get_or("model", "tiny-llm-7m");
     let m = zoo_config::by_name(name)
@@ -516,6 +536,18 @@ fn cmd_serve(raw: Vec<String>) -> anyhow::Result<()> {
         model.memory_saving() * 100.0
     );
     let ex = LlmExecutor::new(m.clone(), model, PjrtRuntime::default_dir(), pool)?;
+    if a.flag("continuous") {
+        return serve_continuous(
+            ex,
+            &m,
+            n_requests,
+            batch,
+            a.get_parse_or("gen", 16),
+            a.get_parse_or("block-tokens", 16),
+            a.get_parse_or("kv-blocks", 0),
+            seed,
+        );
+    }
     let mut server = Server::new(
         ex,
         ServeConfig {
@@ -557,6 +589,207 @@ fn cmd_serve(raw: Vec<String>) -> anyhow::Result<()> {
             humanize::duration(s.p99)
         );
     }
+    Ok(())
+}
+
+/// `serve --continuous`: iteration-level scheduling of the real
+/// executor — ragged iterations over compiled rectangles, the KV pool
+/// governing admission/preemption with codec-compressed eviction.
+#[allow(clippy::too_many_arguments)]
+fn serve_continuous(
+    ex: LlmExecutor,
+    m: &ecf8::model::config::ModelConfig,
+    n_requests: usize,
+    batch: usize,
+    gen: usize,
+    block_tokens: usize,
+    kv_blocks: usize,
+    seed: u64,
+) -> anyhow::Result<()> {
+    use ecf8::scheduler::{ContinuousScheduler, GenRequest, KvCacheConfig, SchedConfig, SystemClock};
+    let mut kv_cfg = KvCacheConfig::for_model(m, block_tokens, 0);
+    let per_seq = kv_cfg.blocks_for_tokens(SEQ_LEN + gen);
+    kv_cfg.n_blocks = if kv_blocks > 0 { kv_blocks } else { batch.max(1) * per_seq };
+    println!(
+        "continuous batching: pool {} blocks × {} ({} tokens each), {} blocks/seq worst case",
+        kv_cfg.n_blocks,
+        humanize::bytes(kv_cfg.block_bytes() as u64),
+        block_tokens,
+        per_seq
+    );
+    let mut sched = ContinuousScheduler::new(
+        SchedConfig {
+            max_running: (2 * batch).max(1),
+        },
+        kv_cfg,
+        Arc::new(SystemClock),
+    );
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    for id in 0..n_requests as u64 {
+        sched.submit(GenRequest::new(
+            id,
+            (0..SEQ_LEN).map(|_| rng.next_below(m.vocab as u64) as i32).collect(),
+            gen,
+        ));
+    }
+    let mut ex = ex;
+    let (responses, secs) =
+        ecf8::bench_support::time_once(|| sched.run_to_completion(&mut ex));
+    let responses = responses?;
+    sched
+        .kv()
+        .leak_check()
+        .map_err(|e| anyhow::anyhow!("leaked KV blocks: {e}"))?;
+    println!(
+        "served {} generations × {gen} tokens in {} ({:.1} tokens/s)",
+        responses.len(),
+        humanize::duration(secs),
+        sched.metrics.tokens_generated as f64 / secs.max(1e-9)
+    );
+    print!("{}", sched.metrics.render());
+    for (codec, n) in &sched.kv().stats().evicted_by_codec {
+        println!("evicted via {}: {n} blocks", codec.label());
+    }
+    println!("leaked blocks: 0");
+    Ok(())
+}
+
+fn cmd_kv_sim(raw: Vec<String>) -> anyhow::Result<()> {
+    use ecf8::coordinator::metrics::SchedulerMetrics;
+    use ecf8::scheduler::{
+        run_static, ContinuousScheduler, GenRequest, KvCacheConfig, KvCacheManager, SchedConfig,
+        SyntheticIterationEngine, SystemClock,
+    };
+    let cmd = Command::new(
+        "kv-sim",
+        "continuous-vs-static scheduling simulation (synthetic engine, no artifacts)",
+    )
+    .opt_default("requests", "number of generation requests", "24")
+    .opt_default("vocab", "synthetic vocabulary size", "96")
+    .opt_default("prompt", "prompt tokens per request", "12")
+    .opt_default("gen", "generated tokens per request", "24")
+    .opt_default("block-tokens", "tokens per KV block", "8")
+    .opt_default("bytes-per-token", "KV bytes per token", "128")
+    .opt_default(
+        "blocks",
+        "continuous scheduler's block pool (small pools force preemption)",
+        "20",
+    )
+    .opt_default("max-batch", "static baseline's batch size", "4")
+    .opt_default("max-running", "continuous scheduler's live-slot cap", "12")
+    .opt_default("seed", "rng seed", "1");
+    let a = cmd.parse(raw).map_err(|e| handle_help(&cmd, e))?;
+    let n: u64 = a.get_parse_or("requests", 24);
+    let vocab: usize = a.get_parse_or("vocab", 96);
+    let prompt: usize = a.get_parse_or("prompt", 12);
+    let gen: usize = a.get_parse_or("gen", 24);
+    let block_tokens: usize = a.get_parse_or("block-tokens", 8);
+    let bytes_per_token: usize = a.get_parse_or("bytes-per-token", 128);
+    let blocks: usize = a.get_parse_or("blocks", 20);
+    let max_batch: usize = a.get_parse_or("max-batch", 4);
+    let max_running: usize = a.get_parse_or("max-running", 12);
+    let seed: u64 = a.get_parse_or("seed", 1);
+
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let requests: Vec<GenRequest> = (0..n)
+        .map(|id| {
+            GenRequest::new(
+                id,
+                (0..prompt).map(|_| rng.next_below(vocab as u64) as i32).collect(),
+                gen,
+            )
+        })
+        .collect();
+    let kv_cfg = |pool_blocks: usize| KvCacheConfig {
+        block_tokens,
+        bytes_per_token,
+        n_blocks: pool_blocks,
+        format: Fp8Format::E4M3,
+    };
+    let per_seq_blocks = (prompt + gen).div_ceil(block_tokens);
+
+    // static baseline: conservative sizing — the whole batch's worst
+    // case is preallocated, so the pool is max_batch × per-seq blocks
+    let static_blocks = max_batch * per_seq_blocks;
+    let mut eng_s = SyntheticIterationEngine::instant(vocab);
+    let mut kv_s = KvCacheManager::new(kv_cfg(static_blocks));
+    let mut metrics_s = SchedulerMetrics::default();
+    let static_resp = run_static(
+        &mut eng_s, &mut kv_s, &requests, max_batch, &SystemClock, &mut metrics_s, false,
+    )?;
+    kv_s.leak_check().map_err(|e| anyhow::anyhow!("static leak: {e}"))?;
+
+    // continuous: overcommitted pool, preemption as the safety valve
+    let mut eng_c = SyntheticIterationEngine::instant(vocab);
+    let mut sched = ContinuousScheduler::new(
+        SchedConfig { max_running },
+        kv_cfg(blocks),
+        std::sync::Arc::new(SystemClock),
+    );
+    for r in &requests {
+        sched.submit(r.clone());
+    }
+    let cont_resp = sched.run_to_completion(&mut eng_c)?;
+    sched
+        .kv()
+        .leak_check()
+        .map_err(|e| anyhow::anyhow!("continuous leak: {e}"))?;
+
+    // identity: scheduling must never change tokens
+    let by_id: std::collections::HashMap<u64, &ecf8::scheduler::GenResponse> =
+        static_resp.iter().map(|r| (r.id, r)).collect();
+    anyhow::ensure!(cont_resp.len() == static_resp.len(), "response count mismatch");
+    for r in &cont_resp {
+        let s = by_id
+            .get(&r.id)
+            .ok_or_else(|| anyhow::anyhow!("request {} missing from static run", r.id))?;
+        anyhow::ensure!(
+            r.tokens == s.tokens,
+            "request {} diverged between continuous and static scheduling",
+            r.id
+        );
+    }
+
+    let mut t = ecf8::bench_support::Table::new([
+        "mode", "pool blocks", "iterations", "occupancy", "preemptions", "peak width",
+    ]);
+    t.row([
+        "static".to_string(),
+        static_blocks.to_string(),
+        metrics_s.iterations.to_string(),
+        format!("{:.1}%", metrics_s.occupancy() * 100.0),
+        "0".to_string(),
+        metrics_s.peak_running.to_string(),
+    ]);
+    t.row([
+        "continuous".to_string(),
+        blocks.to_string(),
+        sched.metrics.iterations.to_string(),
+        format!("{:.1}%", sched.metrics.occupancy() * 100.0),
+        sched.metrics.preemptions.to_string(),
+        sched.metrics.peak_running.to_string(),
+    ]);
+    t.print();
+    let stats = sched.kv().stats();
+    for (codec, n_blocks) in &stats.evicted_by_codec {
+        println!("evicted via {}: {} blocks", codec.label(), n_blocks);
+    }
+    if stats.blocks_evicted > 0 {
+        println!(
+            "eviction ledger: {} -> {} bytes ({:.1}% saved in swap)",
+            stats.evicted_raw_bytes,
+            stats.evicted_stored_bytes,
+            (1.0 - stats.evicted_stored_bytes as f64 / stats.evicted_raw_bytes.max(1) as f64)
+                * 100.0
+        );
+    }
+    println!(
+        "identity: continuous == static ({} requests, bit-identical tokens)",
+        cont_resp.len()
+    );
+    println!("preemptions: {}", sched.metrics.preemptions);
+    println!("restores: {}", sched.metrics.resumes);
+    println!("leaked blocks: 0");
     Ok(())
 }
 

@@ -139,6 +139,24 @@ impl CompressedModel {
             .unwrap_or(false)
     }
 
+    /// Tell the kernel transformer layer `layer`'s compressed bytes are
+    /// consumed for this pass (`madvise(DONTNEED)` on its extent) — the
+    /// [`Self::advise_layer`] readahead's counterpart, fired by the
+    /// executor once a layer's decode has read its pages, so a serving
+    /// process under memory pressure sheds page cache in decode order
+    /// instead of by LRU guesswork. Safe at any time: the mapping is a
+    /// read-only `MAP_PRIVATE` file map, so dropped pages simply
+    /// re-fault from the shard on the next access (bit-identical by
+    /// test). Returns whether a real hint was issued — always false on
+    /// the read-copy tier or when the model carries no extents.
+    pub fn drop_layer(&self, layer: usize) -> bool {
+        self.layer_extents
+            .get(layer)
+            .and_then(|e| e.as_ref())
+            .map(|v| v.advise(Advice::DontNeed))
+            .unwrap_or(false)
+    }
+
     /// Number of layers with an advisable extent attached.
     pub fn advisable_layers(&self) -> usize {
         self.layer_extents.iter().flatten().count()
@@ -1304,6 +1322,16 @@ mod tests {
             assert!(reads <= mapped.index().n_shards as u64, "reads={reads}");
             assert_eq!(whole.advisable_layers(), 0);
         }
+
+        // WILLNEED and its DONTNEED counterpart mirror each other: real
+        // hints exactly on the mapped tier, silent no-ops elsewhere, and
+        // out-of-range layers never a real hint on any tier
+        for l in 0..cfg.n_layers {
+            assert_eq!(whole.advise_layer(l), crate::util::mmap::real_mmap());
+            assert_eq!(whole.drop_layer(l), crate::util::mmap::real_mmap());
+        }
+        assert!(!whole.advise_layer(cfg.n_layers + 5));
+        assert!(!whole.drop_layer(cfg.n_layers + 5));
 
         let rc = store.open_mode(cfg.name, AccessMode::ReadCopy).unwrap();
         let layer0 = rc.load_layer(0).unwrap();

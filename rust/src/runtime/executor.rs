@@ -15,9 +15,11 @@ use super::pjrt::{Artifact, Input, PjrtRuntime};
 use crate::codec::CompressedTensor;
 use crate::coordinator::decode_stage::{self, DEFAULT_DECODE_WINDOW};
 use crate::coordinator::metrics::SharedStageMetrics;
-use crate::coordinator::server::BatchEngine;
+use crate::coordinator::server::{compiled_batch_for, run_rows, BatchEngine};
 use crate::model::config::ModelConfig;
 use crate::model::store::CompressedModel;
+use crate::scheduler::iteration::{IterationBatch, IterationEngine};
+use crate::scheduler::kv_cache::KvCacheManager;
 use crate::tensormgr::JitDecompressor;
 use crate::util::threadpool::ThreadPool;
 use anyhow::{anyhow, Context, Result};
@@ -261,14 +263,23 @@ impl LlmExecutor {
         let mut x: Vec<f32> = Vec::new();
         let mut logits: Vec<f32> = Vec::new();
         let pool = self.pool.clone();
-        // mmap readahead: when the model came off a mapped layer-contiguous
-        // artifact, madvise(WILLNEED) stage l+1's shard extent while stage
-        // l decodes (stages 1..=n_layers are transformer layers; embed and
-        // head have no recorded extent and the hook no-ops)
+        // mmap paging, both directions: when the model came off a mapped
+        // layer-contiguous artifact, madvise(WILLNEED) stage l+1's shard
+        // extent while stage l decodes (stages 1..=n_layers are
+        // transformer layers; embed and head have no recorded extent and
+        // the hook no-ops) — and madvise(DONTNEED) the extent two stages
+        // back: when the hook fires with `stage`, stage-1 is about to
+        // decode, so stage-2 (layer stage-3) has fully consumed its
+        // compressed pages and a memory-pressured server can shed them
+        // now instead of waiting for LRU. The one-past-the-end call
+        // after the final stage retires the last layer the same way.
         let model = &self.model;
         let advise = move |stage: usize| {
             if (1..=n_layers).contains(&stage) {
                 model.advise_layer(stage - 1);
+            }
+            if stage >= 3 {
+                model.drop_layer(stage - 3);
             }
         };
         decode_stage::with_stages_decoded(
@@ -394,6 +405,46 @@ impl BatchEngine for LlmExecutor {
     }
 }
 
+impl IterationEngine for LlmExecutor {
+    fn kv_bytes_per_token(&self) -> usize {
+        // FP8 K+V per token: 2 · layers · kv_dim bytes
+        2 * self.cfg.n_layers * self.cfg.n_kv_heads * self.cfg.head_dim
+    }
+
+    /// Iteration slots through the fixed-shape AOT artifacts: the
+    /// artifacts are stateless `batch × SEQ_LEN` rectangles (no KV
+    /// inputs were lowered), so each slot is scored by re-running its
+    /// last `SEQ_LEN` tokens (left-padded with 0) and the ragged batch
+    /// is chunked greedily into the largest compiled rectangles. The KV
+    /// manager still governs admission/preemption — it is the §4.2
+    /// memory mechanism; the attention state itself is recomputed.
+    /// Exact-width chunks mean a 7-slot iteration runs as 4+2+1, not a
+    /// padded 8 — the ragged win over one fixed rectangle.
+    fn step(&mut self, batch: &IterationBatch<'_>, _kv: &KvCacheManager) -> Result<Vec<f32>> {
+        let vocab = self.cfg.vocab;
+        let windows: Vec<Vec<i32>> = batch
+            .slots
+            .iter()
+            .map(|slot| {
+                let mut w = vec![0i32; SEQ_LEN.saturating_sub(slot.tokens.len())];
+                let tail = &slot.tokens[slot.tokens.len().saturating_sub(SEQ_LEN)..];
+                w.extend_from_slice(tail);
+                w
+            })
+            .collect();
+        let mut out = Vec::with_capacity(windows.len() * vocab);
+        let mut i = 0;
+        while i < windows.len() {
+            let rect = compiled_batch_for(windows.len() - i);
+            let rows: Vec<&[i32]> = windows[i..i + rect].iter().map(|w| w.as_slice()).collect();
+            let logits = run_rows(self, &rows, rect, false, None)?;
+            out.extend_from_slice(&logits[..rect * vocab]);
+            i += rect;
+        }
+        Ok(out)
+    }
+}
+
 /// Load an artifact and panic-free check it exists (used by benches).
 pub fn artifact_available(dir: &std::path::Path, name: &str) -> bool {
     dir.join(format!("{name}.hlo.txt")).exists()
@@ -468,6 +519,57 @@ mod tests {
                 "logit {i} differs: {a} vs {b}"
             );
         }
+    }
+
+    #[test]
+    fn iteration_step_matches_forward_rows() {
+        // the ragged path must score each slot exactly as a solo
+        // rectangle of its window would
+        let Some(dir) = artifacts_dir() else { return };
+        use crate::scheduler::iteration::{IterationBatch, IterationEngine, SeqSlot};
+        use crate::scheduler::kv_cache::{KvCacheConfig, KvCacheManager};
+        let cfg = tiny_llm();
+        let model = CompressedModel::synthesize(&cfg, 5, None);
+        let mut ex = LlmExecutor::new(cfg.clone(), model, dir, None).unwrap();
+        let kv = KvCacheManager::new(KvCacheConfig::for_model(&cfg, 16, 4));
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        // ragged: one short history (left-padded), two full windows
+        let hists: Vec<Vec<i32>> = [5usize, SEQ_LEN, SEQ_LEN + 7]
+            .iter()
+            .map(|&n| {
+                (0..n)
+                    .map(|_| rng.next_below(cfg.vocab as u64) as i32)
+                    .collect()
+            })
+            .collect();
+        let batch = IterationBatch {
+            slots: hists
+                .iter()
+                .enumerate()
+                .map(|(i, h)| SeqSlot { seq: i as u64, tokens: h, pos: h.len() })
+                .collect(),
+            pad_slots: 0,
+        };
+        let got = ex.step(&batch, &kv).unwrap();
+        assert_eq!(got.len(), 3 * cfg.vocab);
+        // expected: the same greedy rectangles (2 then 1) driven through
+        // forward() directly — same compiled shapes, so bit-identical
+        let windows: Vec<Vec<i32>> = hists
+            .iter()
+            .map(|h| {
+                let mut w = vec![0i32; SEQ_LEN.saturating_sub(h.len())];
+                w.extend_from_slice(&h[h.len().saturating_sub(SEQ_LEN)..]);
+                w
+            })
+            .collect();
+        let mut want = Vec::new();
+        let pair: Vec<i32> = windows[0].iter().chain(&windows[1]).copied().collect();
+        want.extend(ex.forward(&pair, 2).unwrap());
+        want.extend(ex.forward(&windows[2], 1).unwrap());
+        for (j, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "logit {j}");
+        }
+        assert_eq!(ex.kv_bytes_per_token(), 2 * cfg.n_layers * cfg.n_kv_heads * cfg.head_dim);
     }
 
     #[test]

@@ -1,0 +1,274 @@
+//! The ragged per-iteration execution seam.
+//!
+//! Batch-level serving executes rectangles: `batch × SEQ_LEN` tokens,
+//! padded. Iteration-level serving executes *one token per live
+//! sequence per iteration*, and the sequences have different lengths —
+//! an [`IterationBatch`] is ragged by construction and carries no
+//! padding for live work. Static batching's rectangle waste is modelled
+//! explicitly as [`IterationBatch::pad_slots`]: dead slots the engine
+//! still pays for (finished sequences held until their batch drains).
+//!
+//! [`IterationEngine`] extends [`BatchEngine`] — every iteration engine
+//! can still serve the batch-level coordinators, and the continuous
+//! scheduler only needs the one extra entry point.
+
+use super::kv_cache::KvCacheManager;
+use crate::coordinator::server::BatchEngine;
+use anyhow::{anyhow, Result};
+use std::time::Duration;
+
+/// One live sequence's slice of an iteration.
+#[derive(Debug)]
+pub struct SeqSlot<'a> {
+    pub seq: u64,
+    /// full visible history (prompt + generated), newest last; the
+    /// iteration computes the *next* token's logits
+    pub tokens: &'a [i32],
+    /// KV positions already written for this sequence (== tokens.len()
+    /// once the prompt is prefilled)
+    pub pos: usize,
+}
+
+/// A ragged iteration: per-sequence lengths, no padding for live work.
+#[derive(Debug, Default)]
+pub struct IterationBatch<'a> {
+    pub slots: Vec<SeqSlot<'a>>,
+    /// dead rectangle slots the executor still pays for (static
+    /// batching's padding waste; always 0 under continuous scheduling)
+    pub pad_slots: usize,
+}
+
+impl IterationBatch<'_> {
+    /// Slots the engine pays for (live + dead).
+    pub fn width(&self) -> usize {
+        self.slots.len() + self.pad_slots
+    }
+}
+
+/// An engine that can run ragged per-iteration batches on top of its
+/// batch-level interface. Returns `slots.len() × vocab` logits — one
+/// next-token row per live slot, in slot order.
+pub trait IterationEngine: BatchEngine {
+    /// KV bytes one token of context costs this engine's model (drives
+    /// the [`KvCacheManager`] pool arithmetic).
+    fn kv_bytes_per_token(&self) -> usize;
+
+    /// Execute one iteration. `kv` is the paged cache — engines that
+    /// model attention state read it (the synthetic engine folds the
+    /// stored bytes into its logits, so a corrupted evict/restore
+    /// changes tokens); the KV for the tokens generated from these
+    /// logits is written back by the scheduler, not the engine.
+    fn step(&mut self, batch: &IterationBatch<'_>, kv: &KvCacheManager) -> Result<Vec<f32>>;
+}
+
+/// Deterministic iteration engine for artifact-less tests and benches.
+///
+/// Logits are a pure function of `(seq, stored KV bytes)` — and the KV
+/// bytes are themselves a pure function of `(seq, positions, tokens)` —
+/// so generated tokens depend only on the request, never on scheduling:
+/// continuous and static runs must produce identical responses, and any
+/// evict/restore corruption diverges them. Cost model: one iteration
+/// sleeps `fixed_cost + per_slot_cost × width` (width counts dead pad
+/// slots — the rectangle waste continuous scheduling eliminates).
+pub struct SyntheticIterationEngine {
+    inner: crate::coordinator::pipeline::SyntheticEngine,
+    pub fixed_cost: Duration,
+    pub per_slot_cost: Duration,
+    /// iterations executed (scheduling observability for tests)
+    pub steps: u64,
+    /// live slots summed over iterations
+    pub slot_tokens: u64,
+}
+
+impl SyntheticIterationEngine {
+    /// Zero-cost engine (pure logits function).
+    pub fn instant(vocab: usize) -> Self {
+        Self::with_costs(vocab, Duration::ZERO, Duration::ZERO)
+    }
+
+    pub fn with_costs(vocab: usize, fixed_cost: Duration, per_slot_cost: Duration) -> Self {
+        Self {
+            inner: crate::coordinator::pipeline::SyntheticEngine::instant(vocab),
+            fixed_cost,
+            per_slot_cost,
+            steps: 0,
+            slot_tokens: 0,
+        }
+    }
+}
+
+impl BatchEngine for SyntheticIterationEngine {
+    fn vocab(&self) -> usize {
+        self.inner.vocab
+    }
+
+    fn run_batch(&mut self, tokens: &[i32], batch: usize) -> Result<Vec<f32>> {
+        self.inner.run_batch(tokens, batch)
+    }
+}
+
+impl IterationEngine for SyntheticIterationEngine {
+    fn kv_bytes_per_token(&self) -> usize {
+        32
+    }
+
+    fn step(&mut self, batch: &IterationBatch<'_>, kv: &KvCacheManager) -> Result<Vec<f32>> {
+        self.steps += 1;
+        self.slot_tokens += batch.slots.len() as u64;
+        let cost = self.fixed_cost + self.per_slot_cost * batch.width() as u32;
+        if !cost.is_zero() {
+            std::thread::sleep(cost);
+        }
+        let vocab = self.vocab();
+        let mut out = Vec::with_capacity(batch.slots.len() * vocab);
+        for slot in &batch.slots {
+            debug_assert_eq!(slot.pos, slot.tokens.len(), "prefilled history");
+            // read the stored KV — the whole point: logits must flow
+            // through the paged cache so restores are load-bearing
+            let h = kv
+                .fold_kv(slot.seq, slot.pos)
+                .map_err(|e| anyhow!("synthetic engine KV read: {e}"))?
+                ^ slot.seq.wrapping_mul(0x9E3779B97F4A7C15);
+            for v in 0..vocab {
+                let mut x = h ^ (v as u64).wrapping_mul(0x9E3779B97F4A7C15);
+                x ^= x >> 30;
+                x = x.wrapping_mul(0xBF58476D1CE4E5B9);
+                x ^= x >> 27;
+                out.push((x >> 40) as f32 / (1u64 << 24) as f32 - 0.5);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Deterministic argmax (first strict maximum) — the scheduler's greedy
+/// token pick. One definition so continuous and static decoding cannot
+/// tie-break differently.
+pub fn argmax(row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &x) in row.iter().enumerate() {
+        if x > row[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::Fp8Format;
+    use crate::scheduler::kv_cache::KvCacheConfig;
+
+    fn kv_with(seq: u64, tokens: &[i32]) -> KvCacheManager {
+        let mut kv = KvCacheManager::new(KvCacheConfig {
+            block_tokens: 4,
+            bytes_per_token: 32,
+            n_blocks: 16,
+            format: Fp8Format::E4M3,
+        });
+        kv.register(seq).unwrap();
+        kv.ensure_capacity(seq, tokens.len() + 1).unwrap();
+        for &t in tokens {
+            kv.write_token(seq, t).unwrap();
+        }
+        kv
+    }
+
+    #[test]
+    fn step_is_deterministic_and_kv_dependent() {
+        let toks = [3i32, 1, 4, 1, 5];
+        let kv = kv_with(9, &toks);
+        let mut eng = SyntheticIterationEngine::instant(64);
+        let batch = IterationBatch {
+            slots: vec![SeqSlot {
+                seq: 9,
+                tokens: &toks,
+                pos: toks.len(),
+            }],
+            pad_slots: 0,
+        };
+        let a = eng.step(&batch, &kv).unwrap();
+        let b = eng.step(&batch, &kv).unwrap();
+        assert_eq!(a.len(), 64);
+        assert_eq!(a, b, "deterministic");
+        // different history → different logits (via the KV bytes)
+        let toks2 = [3i32, 1, 4, 1, 6];
+        let kv2 = kv_with(9, &toks2);
+        let batch2 = IterationBatch {
+            slots: vec![SeqSlot {
+                seq: 9,
+                tokens: &toks2,
+                pos: toks2.len(),
+            }],
+            pad_slots: 0,
+        };
+        let c = eng.step(&batch2, &kv2).unwrap();
+        assert_ne!(a, c);
+        assert_eq!(eng.steps, 3);
+        assert_eq!(eng.slot_tokens, 3);
+    }
+
+    #[test]
+    fn ragged_batch_rows_match_solo_rows() {
+        // a sequence's logits must not depend on who else is in the
+        // iteration — the property that makes continuous == static
+        let t1 = [5i32, 6, 7];
+        let t2 = [8i32, 9];
+        let mut kv = kv_with(1, &t1);
+        kv.register(2).unwrap();
+        kv.ensure_capacity(2, t2.len() + 1).unwrap();
+        for &t in &t2 {
+            kv.write_token(2, t).unwrap();
+        }
+        let mut eng = SyntheticIterationEngine::instant(32);
+        let together = eng
+            .step(
+                &IterationBatch {
+                    slots: vec![
+                        SeqSlot { seq: 1, tokens: &t1, pos: 3 },
+                        SeqSlot { seq: 2, tokens: &t2, pos: 2 },
+                    ],
+                    pad_slots: 2,
+                },
+                &kv,
+            )
+            .unwrap();
+        let solo1 = eng
+            .step(
+                &IterationBatch {
+                    slots: vec![SeqSlot { seq: 1, tokens: &t1, pos: 3 }],
+                    pad_slots: 0,
+                },
+                &kv,
+            )
+            .unwrap();
+        let solo2 = eng
+            .step(
+                &IterationBatch {
+                    slots: vec![SeqSlot { seq: 2, tokens: &t2, pos: 2 }],
+                    pad_slots: 0,
+                },
+                &kv,
+            )
+            .unwrap();
+        assert_eq!(&together[..32], &solo1[..]);
+        assert_eq!(&together[32..], &solo2[..]);
+    }
+
+    #[test]
+    fn argmax_is_first_strict_max() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.9, 0.2]), 1);
+        assert_eq!(argmax(&[1.0]), 0);
+        assert_eq!(argmax(&[-3.0, -1.0, -2.0]), 1);
+    }
+
+    #[test]
+    fn batch_engine_supertrait_still_serves_rectangles() {
+        use crate::runtime::executor::SEQ_LEN;
+        let mut eng = SyntheticIterationEngine::instant(16);
+        let tokens = vec![1i32; 2 * SEQ_LEN];
+        let logits = eng.run_batch(&tokens, 2).unwrap();
+        assert_eq!(logits.len(), 2 * 16);
+    }
+}

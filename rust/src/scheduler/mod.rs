@@ -1,0 +1,126 @@
+//! Continuous-batching scheduler with a paged, ECF8-compressible
+//! KV-cache manager — the ROADMAP's "KV-cache-aware continuous batching"
+//! rung.
+//!
+//! The coordinator's serving loop so far is *batch-level*: form a
+//! rectangle of requests, execute it to completion, repeat
+//! ([`crate::coordinator::Server`] and the pipelined variant overlap the
+//! stages but keep the rectangle). This module replaces that with
+//! *iteration-level* scheduling in the vLLM/Orca shape, specialised to
+//! this repo's compression story:
+//!
+//! * [`kv_cache`] — [`kv_cache::KvCacheManager`]: a paged block pool
+//!   (fixed-size token blocks, per-sequence block tables; decode-only
+//!   serving needs no copy-on-write). Preempted sequences do not spill
+//!   raw bytes: their KV blocks are **evicted through the
+//!   [`crate::codec::codecs`] registry** — `ecf8-huffman` or `raw-fp8`
+//!   chosen per block by the paper's §3.2 entropy probe — and restored
+//!   losslessly on resume. Heilper & Singer (2025) show K/V caches
+//!   concentrate exponents like weights do, so the same machinery
+//!   applies.
+//! * [`policy`] — [`policy::ContinuousScheduler`]: iteration-level
+//!   admission (new sequences join running iterations the moment blocks
+//!   are free), preemption under block pressure (lowest priority first,
+//!   newest first within a priority), FIFO resume; plus the static
+//!   batch-to-completion baseline ([`policy::run_static`]) and a
+//!   threaded [`policy::ContinuousServer`] mirroring
+//!   [`crate::coordinator::PipelinedServer`]'s submit/collect/shutdown
+//!   surface.
+//! * [`iteration`] — [`iteration::IterationEngine`]: the ragged
+//!   per-iteration execution seam (per-sequence lengths, no padding
+//!   waste), extending [`crate::coordinator::BatchEngine`]. Implemented
+//!   by the deterministic [`iteration::SyntheticIterationEngine`]
+//!   (every scheduling decision testable and benchable without
+//!   artifacts) and by [`crate::runtime::executor::LlmExecutor`]
+//!   (fixed-shape AOT rectangles re-scoring a sliding window; the KV
+//!   manager supplies the paging/eviction memory mechanism).
+//!
+//! Everything the scheduler decides — admission order, preemption
+//! victim, block accounting, evict/restore bit-identity — is a pure
+//! function of its inputs plus the injected [`Clock`], so the sim tests
+//! and `ecf8 kv-sim` replay identical schedules from a seed.
+
+pub mod iteration;
+pub mod kv_cache;
+pub mod policy;
+
+pub use iteration::{IterationBatch, IterationEngine, SeqSlot, SyntheticIterationEngine};
+pub use kv_cache::{KvCacheConfig, KvCacheManager, KvError, KvStats};
+pub use policy::{
+    run_static, ContinuousReport, ContinuousScheduler, ContinuousServer, GenRequest, GenResponse,
+    SchedConfig, StepReport,
+};
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// The scheduler's time source. One trait for every clock consumer —
+/// the continuous scheduler's TTFT/TPOT stamps and the
+/// [`crate::coordinator::DynamicBatcher`]'s linger policy share it, so
+/// sim tests drive both from a single [`SimClock`].
+pub trait Clock: Send + Sync {
+    fn now(&self) -> Instant;
+}
+
+/// The real wall clock (production default).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SystemClock;
+
+impl Clock for SystemClock {
+    fn now(&self) -> Instant {
+        Instant::now()
+    }
+}
+
+/// A deterministic, manually advanced clock for synchronous sim tests:
+/// a settable offset over a fixed origin. Not for the *threaded*
+/// coordinators — their condvar waits sleep in real time.
+#[derive(Debug)]
+pub struct SimClock {
+    origin: Instant,
+    offset: Mutex<Duration>,
+}
+
+impl SimClock {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self {
+            origin: Instant::now(),
+            offset: Mutex::new(Duration::ZERO),
+        })
+    }
+
+    /// Move time forward by `d` (monotone by construction).
+    pub fn advance(&self, d: Duration) {
+        *self.offset.lock().unwrap() += d;
+    }
+}
+
+impl Clock for SimClock {
+    fn now(&self) -> Instant {
+        self.origin + *self.offset.lock().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_clock_advances_deterministically() {
+        let clock = SimClock::new();
+        let t0 = clock.now();
+        assert_eq!(clock.now(), t0, "no implicit progress");
+        clock.advance(Duration::from_millis(5));
+        assert_eq!(clock.now(), t0 + Duration::from_millis(5));
+        clock.advance(Duration::from_millis(7));
+        assert_eq!(clock.now(), t0 + Duration::from_millis(12));
+    }
+
+    #[test]
+    fn system_clock_is_monotone() {
+        let c = SystemClock;
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+}

@@ -48,6 +48,69 @@ pub struct JitStats {
     pub decode_seconds: f64,
 }
 
+/// Decode `tensors[i]` into `extents[i]` of `buf`, one work item per
+/// tensor on `pool` (serial without one). The one disjoint-extent
+/// parallel-fill primitive, shared by the decode-ahead
+/// [`LayerArena`]s (prefix-sum extents into a stage arena) and the
+/// KV-cache restore path (`scheduler::kv_cache`, arbitrary block
+/// extents into the block slab) — both have the same shape: many
+/// independent codec decodes writing non-overlapping windows of one
+/// buffer.
+///
+/// The extents must be pairwise disjoint and in-bounds; this is
+/// checked up front (it is the safety contract of the raw-pointer
+/// writes the workers do).
+pub fn decode_into_disjoint(
+    buf: &mut [u8],
+    extents: &[Range<usize>],
+    tensors: &[&CompressedTensor],
+    tables: &[Option<Arc<DecodeTables>>],
+    pool: Option<&ThreadPool>,
+) {
+    assert_eq!(extents.len(), tensors.len(), "one extent per tensor");
+    assert_eq!(tensors.len(), tables.len(), "one table slot per tensor");
+    // Well-formedness + bounds for EVERY extent, then disjointness over
+    // a sorted copy. Cheap (extent counts are per-stage / per-sequence,
+    // not per-element) and it is what makes the unsafe below sound
+    // against any caller — an inverted range must never reach the
+    // raw-pointer slice construction.
+    for r in extents {
+        assert!(r.start <= r.end && r.end <= buf.len(), "extent out of bounds");
+    }
+    let mut sorted: Vec<&Range<usize>> = extents.iter().collect();
+    sorted.sort_by_key(|r| (r.start, r.end));
+    for w in sorted.windows(2) {
+        assert!(w[0].end <= w[1].start, "overlapping extents");
+    }
+    // SAFETY-SUPPORT: hand workers the base address; the extents were
+    // just proven disjoint and in-bounds (same contract as the
+    // block-parallel decoder).
+    let base_addr = buf.as_mut_ptr() as usize;
+    let decode_one = |i: usize| {
+        let r = &extents[i];
+        // SAFETY: extents are disjoint across i and within the buffer;
+        // no other code touches the buffer while this runs.
+        let dst = unsafe {
+            std::slice::from_raw_parts_mut((base_addr as *mut u8).add(r.start), r.end - r.start)
+        };
+        tensors[i].decode_into_cached(dst, None, tables[i].as_deref());
+    };
+    match pool {
+        Some(pool) if tensors.len() > 1 => {
+            pool.scope_chunks(tensors.len(), tensors.len(), |_, s, e| {
+                for i in s..e {
+                    decode_one(i);
+                }
+            });
+        }
+        _ => {
+            for i in 0..tensors.len() {
+                decode_one(i);
+            }
+        }
+    }
+}
+
 /// One decoded pipeline stage (a layer's worth of tensors): a private
 /// arena plus per-tensor extents, in blob order. Filled by the
 /// coordinator's decode stage, borrowed by the executor.
@@ -84,36 +147,14 @@ impl LayerArena {
         tables: &[Option<Arc<DecodeTables>>],
         pool: Option<&ThreadPool>,
     ) {
-        assert_eq!(tensors.len(), tables.len(), "one table slot per tensor");
         self.prepare(tensors);
-        let ends = &self.ends;
-        // SAFETY-SUPPORT: hand workers the base address; extents
-        // [start_i, ends[i]) are disjoint and in-bounds by construction
-        // in `prepare` (same contract as the block-parallel decoder).
-        let base_addr = self.buf.as_mut_ptr() as usize;
-        let decode_one = |i: usize| {
-            let start = if i == 0 { 0 } else { ends[i - 1] };
-            let len = ends[i] - start;
-            // SAFETY: extents are disjoint across i and within the
-            // buffer; no other code touches the buffer while this runs.
-            let dst =
-                unsafe { std::slice::from_raw_parts_mut((base_addr as *mut u8).add(start), len) };
-            tensors[i].decode_into_cached(dst, None, tables[i].as_deref());
-        };
-        match pool {
-            Some(pool) if tensors.len() > 1 => {
-                pool.scope_chunks(tensors.len(), tensors.len(), |_, s, e| {
-                    for i in s..e {
-                        decode_one(i);
-                    }
-                });
-            }
-            _ => {
-                for i in 0..tensors.len() {
-                    decode_one(i);
-                }
-            }
-        }
+        let extents: Vec<Range<usize>> = self
+            .ends
+            .iter()
+            .enumerate()
+            .map(|(i, &end)| if i == 0 { 0..end } else { self.ends[i - 1]..end })
+            .collect();
+        decode_into_disjoint(&mut self.buf, &extents, tensors, tables, pool);
     }
 
     /// Decoded bytes of the `i`-th tensor of this stage.
@@ -377,6 +418,62 @@ mod tests {
         par.decode_stage_tensors(&[&b2], &tables[1..2], Some(&pool));
         assert_eq!(par.len(), 1);
         assert_eq!(par.tensor(0), &d2[..]);
+    }
+
+    #[test]
+    fn decode_into_disjoint_handles_non_monotone_extents() {
+        // the KV-restore shape: block extents in table order, not in
+        // ascending buffer order, with a partially filled last block
+        let (d1, b1) = blob(1_024, 30);
+        let (d2, b2) = blob(1_024, 31);
+        let (d3, b3) = blob(512, 32);
+        let mut cache = DecodeTableCache::new();
+        let tensors: Vec<&CompressedTensor> = vec![&b1, &b2, &b3];
+        let tables: Vec<Option<Arc<DecodeTables>>> =
+            tensors.iter().map(|t| t.tables(&mut cache)).collect();
+        let mut slab = vec![0u8; 4 * 1_024];
+        // tensor 0 → block 2, tensor 1 → block 0, tensor 2 → half of block 3
+        let extents = vec![2_048..3_072, 0..1_024, 3_072..3_584];
+        decode_into_disjoint(&mut slab, &extents, &tensors, &tables, None);
+        assert_eq!(&slab[2_048..3_072], &d1[..]);
+        assert_eq!(&slab[0..1_024], &d2[..]);
+        assert_eq!(&slab[3_072..3_584], &d3[..]);
+        assert!(slab[1_024..2_048].iter().all(|&b| b == 0), "untouched block");
+        // parallel fill is bit-identical
+        let pool = ThreadPool::new(2);
+        let mut par = vec![0u8; 4 * 1_024];
+        decode_into_disjoint(&mut par, &extents, &tensors, &tables, Some(&pool));
+        assert_eq!(par, slab);
+    }
+
+    #[test]
+    #[should_panic(expected = "overlapping extents")]
+    fn decode_into_disjoint_rejects_overlap() {
+        let (_, b1) = blob(100, 33);
+        let (_, b2) = blob(100, 34);
+        let mut cache = DecodeTableCache::new();
+        let tensors: Vec<&CompressedTensor> = vec![&b1, &b2];
+        let tables: Vec<Option<Arc<DecodeTables>>> =
+            tensors.iter().map(|t| t.tables(&mut cache)).collect();
+        let mut buf = vec![0u8; 256];
+        decode_into_disjoint(&mut buf, &[0..100, 50..150], &tensors, &tables, None);
+    }
+
+    #[test]
+    #[should_panic(expected = "extent out of bounds")]
+    fn decode_into_disjoint_rejects_inverted_range() {
+        // an inverted non-last range must be caught by the up-front
+        // validation, never reach the raw-pointer slice construction
+        let (_, b1) = blob(100, 35);
+        let (_, b2) = blob(40, 36);
+        let mut cache = DecodeTableCache::new();
+        let tensors: Vec<&CompressedTensor> = vec![&b1, &b2];
+        let tables: Vec<Option<Arc<DecodeTables>>> =
+            tensors.iter().map(|t| t.tables(&mut cache)).collect();
+        let mut buf = vec![0u8; 256];
+        #[allow(clippy::reversed_empty_ranges)]
+        let extents = [150..50, 200..240];
+        decode_into_disjoint(&mut buf, &extents, &tensors, &tables, None);
     }
 
     #[test]

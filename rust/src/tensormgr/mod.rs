@@ -7,5 +7,5 @@ pub mod jit;
 pub mod offload;
 
 pub use buffer::DecodeBuffer;
-pub use jit::{JitDecompressor, LayerArena};
+pub use jit::{decode_into_disjoint, JitDecompressor, LayerArena};
 pub use offload::{DeviceModel, LayerStats, OffloadSim};

@@ -11,6 +11,7 @@
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 struct State<T> {
     queue: VecDeque<T>,
@@ -57,6 +58,15 @@ pub struct SendError<T>(pub T);
 /// drained.
 #[derive(Debug, PartialEq, Eq)]
 pub struct RecvError;
+
+/// Error returned by [`Receiver::recv_timeout`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum RecvTimeoutError {
+    /// Nothing arrived before the deadline (channel may still be open).
+    Timeout,
+    /// Every sender is gone and the queue is drained.
+    Closed,
+}
 
 pub struct Sender<T> {
     inner: Arc<Inner<T>>,
@@ -122,6 +132,35 @@ impl<T> Receiver<T> {
                 return Err(RecvError);
             }
             st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// [`Self::recv`] with a deadline: waits at most `timeout` for a
+    /// value. Buffered values still drain after all senders dropped
+    /// (then [`RecvTimeoutError::Closed`]). The continuous scheduler's
+    /// idle wait — it must wake for new work *or* shutdown without
+    /// spinning.
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<T, RecvTimeoutError> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if let Some(v) = st.queue.pop_front() {
+                self.inner.not_full.notify_one();
+                return Ok(v);
+            }
+            if st.senders == 0 {
+                return Err(RecvTimeoutError::Closed);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(RecvTimeoutError::Timeout);
+            }
+            st = self
+                .inner
+                .not_empty
+                .wait_timeout(st, deadline - now)
+                .unwrap()
+                .0;
         }
     }
 
@@ -231,6 +270,34 @@ mod tests {
         t.join().unwrap();
         assert!(rx.is_closed());
         assert_eq!(rx.recv(), Err(RecvError));
+    }
+
+    #[test]
+    fn recv_timeout_times_out_delivers_and_closes() {
+        let (tx, rx) = bounded::<u32>(2);
+        // empty + open → Timeout
+        let t0 = std::time::Instant::now();
+        assert_eq!(
+            rx.recv_timeout(Duration::from_millis(10)),
+            Err(RecvTimeoutError::Timeout)
+        );
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+        // value arriving mid-wait is delivered
+        let sender = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            tx.send(42).unwrap();
+            tx // keep it alive past the send
+        });
+        assert_eq!(rx.recv_timeout(Duration::from_secs(5)), Ok(42));
+        let tx = sender.join().unwrap();
+        // buffered values drain after close, then Closed
+        tx.send(7).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv_timeout(Duration::from_millis(1)), Ok(7));
+        assert_eq!(
+            rx.recv_timeout(Duration::from_millis(1)),
+            Err(RecvTimeoutError::Closed)
+        );
     }
 
     #[test]

@@ -365,3 +365,44 @@ fn decode_stage_over_mapped_store_with_advise_is_bit_exact() {
     assert!(!loaded.advise_layer(99), "out-of-range layer is a no-op");
     std::fs::remove_dir_all(&dir).ok();
 }
+
+// ---------------------------------------------------------------------------
+// MADV_DONTNEED drop of consumed layers: dropping pages is purely a
+// page-cache hint — the next decode re-faults from the shard and stays
+// bit-identical. No-op (false) on the read-copy tier.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn drop_layer_then_redecode_is_bit_identical() {
+    let (model, planes) = mixed_model("drop-map");
+    let dir = tmp("ecf8_mmap_drop");
+    let store = ModelStore::new(&dir);
+    store.save_v2(&model, 8 << 10).unwrap();
+    let lazy = store.open("drop-map").unwrap();
+    let loaded = lazy.load_all(None).unwrap();
+
+    // decode both layers once (pages faulted in)
+    let decode_layer = |l: usize, want: &[&[u8]]| {
+        for ((_, t), w) in lazy.load_layer(l).unwrap().iter().zip(want) {
+            assert_eq!(t.decode_to_vec().as_slice(), *w, "layer {l}");
+        }
+    };
+    decode_layer(0, &[&planes[1][..], &planes[2][..]]);
+    decode_layer(1, &[&planes[3][..]]);
+
+    // drop each consumed layer's extent the way the executor's hook
+    // counterpart does, then decode again: bytes must be identical
+    // (dropped pages re-fault from the mapped shard file)
+    for l in 0..2 {
+        assert_eq!(loaded.drop_layer(l), real_mmap(), "layer {l}");
+    }
+    assert!(!loaded.drop_layer(99), "out-of-range layer is a no-op");
+    decode_layer(0, &[&planes[1][..], &planes[2][..]]);
+    decode_layer(1, &[&planes[3][..]]);
+    // already-loaded tensors (views into the dropped range) also still
+    // decode bit-exactly
+    for ((spec, t), plane) in loaded.tensors.iter().zip(&planes) {
+        assert_eq!(&t.decode_to_vec(), plane, "{}", spec.name);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,267 @@
+//! Scheduler-subsystem invariants, end to end:
+//!
+//! * the block pool never double-frees or leaks across
+//!   admit/preempt/resume/finish churn (seeded sweeps over many
+//!   geometries);
+//! * evict → compress → restore of KV blocks is bit-identical through
+//!   the probe-chosen codec *and* through every codec in the registry;
+//! * continuous scheduling produces responses identical to the static
+//!   batch-to-completion oracle on the synthetic engine — scheduling
+//!   changes wall time, never tokens.
+
+use ecf8::codec::codecs::{parse_record, registry};
+use ecf8::codec::{Ecf8Params, Fp8Format};
+use ecf8::coordinator::metrics::SchedulerMetrics;
+use ecf8::scheduler::{
+    run_static, ContinuousScheduler, ContinuousServer, GenRequest, KvCacheConfig, KvCacheManager,
+    SchedConfig, SimClock, SyntheticIterationEngine, SystemClock,
+};
+use ecf8::util::prng::Xoshiro256;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn kv_cfg(block_tokens: usize, n_blocks: usize) -> KvCacheConfig {
+    KvCacheConfig {
+        block_tokens,
+        bytes_per_token: 48,
+        n_blocks,
+        format: Fp8Format::E4M3,
+    }
+}
+
+fn requests(n: u64, vocab: usize, rng: &mut Xoshiro256) -> Vec<GenRequest> {
+    (0..n)
+        .map(|id| {
+            let prompt_len = 1 + rng.next_below(9) as usize;
+            let max_new = 1 + rng.next_below(12) as usize;
+            GenRequest::new(
+                id,
+                (0..prompt_len)
+                    .map(|_| rng.next_below(vocab as u64) as i32)
+                    .collect(),
+                max_new,
+            )
+            .with_priority(rng.next_below(3) as u8)
+        })
+        .collect()
+}
+
+#[test]
+fn block_pool_survives_seeded_churn_without_leaks() {
+    // many geometries × priorities × ragged lengths; after every drain
+    // the pool's books must balance exactly
+    let vocab = 64;
+    for (seed, block_tokens, n_blocks, max_running) in [
+        (1u64, 2usize, 12usize, 4usize),
+        (2, 4, 6, 3),
+        (3, 8, 30, 16),
+        (4, 3, 10, 5),
+        (5, 5, 12, 2),
+    ] {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let reqs = requests(20, vocab, &mut rng);
+        // skip configs a single sequence could never fit (those stall by
+        // contract); prompt ≤ 9 + new ≤ 12 + headroom 1
+        let worst = (9 + 12 + 1usize).div_ceil(block_tokens);
+        if worst > n_blocks {
+            continue;
+        }
+        let mut sched = ContinuousScheduler::new(
+            SchedConfig { max_running },
+            kv_cfg(block_tokens, n_blocks),
+            SimClock::new(),
+        );
+        for r in &reqs {
+            sched.submit(r.clone());
+        }
+        let mut eng = SyntheticIterationEngine::instant(vocab);
+        let mut responses = Vec::new();
+        let mut steps = 0usize;
+        while sched.has_work() {
+            let report = sched.step(&mut eng).unwrap();
+            assert!(
+                !report.no_progress(),
+                "seed {seed}: stalled with work queued"
+            );
+            responses.extend(report.responses);
+            // mid-run: the books must balance at every step, not just
+            // at the end
+            sched.kv().leak_check().unwrap_or_else(|e| {
+                panic!("seed {seed} step {steps}: {e}");
+            });
+            steps += 1;
+            assert!(steps < 10_000, "seed {seed}: runaway schedule");
+        }
+        assert_eq!(responses.len(), reqs.len(), "seed {seed}");
+        assert_eq!(sched.kv().free_blocks(), n_blocks, "seed {seed}: all returned");
+        for r in &responses {
+            let want = reqs.iter().find(|q| q.id == r.id).unwrap().max_new_tokens;
+            assert_eq!(r.tokens.len(), want, "seed {seed} request {}", r.id);
+        }
+    }
+}
+
+#[test]
+fn continuous_equals_static_across_seeds_and_pressure() {
+    let vocab = 80;
+    for seed in [10u64, 11, 12] {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let reqs = requests(16, vocab, &mut rng);
+
+        let mut eng_s = SyntheticIterationEngine::instant(vocab);
+        let mut kv_s = KvCacheManager::new(kv_cfg(4, 128));
+        let mut ms = SchedulerMetrics::default();
+        let want: HashMap<u64, Vec<i32>> =
+            run_static(&mut eng_s, &mut kv_s, &reqs, 4, &SystemClock, &mut ms, false)
+                .unwrap()
+                .into_iter()
+                .map(|r| (r.id, r.tokens))
+                .collect();
+        kv_s.leak_check().unwrap();
+
+        // tight pool → preemption; priorities reorder completion, not
+        // content
+        let mut eng_c = SyntheticIterationEngine::instant(vocab);
+        let mut sched = ContinuousScheduler::new(
+            SchedConfig { max_running: 10 },
+            kv_cfg(4, 12),
+            SimClock::new(),
+        );
+        for r in &reqs {
+            sched.submit(r.clone());
+        }
+        let got = sched.run_to_completion(&mut eng_c).unwrap();
+        sched.kv().leak_check().unwrap();
+        assert_eq!(got.len(), want.len(), "seed {seed}");
+        for r in &got {
+            assert_eq!(r.tokens, want[&r.id], "seed {seed} request {}", r.id);
+        }
+        assert!(
+            sched.metrics.preemptions > 0,
+            "seed {seed}: 12-block pool must preempt"
+        );
+        assert_eq!(sched.kv().stats().evictions, sched.kv().stats().restores);
+    }
+}
+
+#[test]
+fn evicted_blocks_roundtrip_through_every_registered_codec() {
+    // integration-level restatement of the acceptance criterion: take
+    // real scheduler-written KV state (weight-like and noise sequences,
+    // ragged lengths), push every block through every registry codec's
+    // encode → parse → decode, and require byte identity
+    let cfg = kv_cfg(8, 24);
+    let mut kv = KvCacheManager::new(cfg);
+    let lens = [19usize, 8, 5, 23];
+    for (i, &len) in lens.iter().enumerate() {
+        let seq = i as u64; // seq 3 is the noise generator's lane
+        kv.register(seq).unwrap();
+        kv.ensure_capacity(seq, len + 1).unwrap();
+        for p in 0..len {
+            kv.write_token(seq, (p as i32) * 7 + i as i32).unwrap();
+        }
+    }
+    for (i, &len) in lens.iter().enumerate() {
+        let seq = i as u64;
+        let n_blocks = len.div_ceil(cfg.block_tokens);
+        for b in 0..n_blocks {
+            // reconstruct the block's filled bytes from the read API
+            let filled_tokens = (len - b * cfg.block_tokens).min(cfg.block_tokens);
+            let mut block = Vec::with_capacity(filled_tokens * cfg.bytes_per_token);
+            for within in 0..filled_tokens {
+                block.extend_from_slice(
+                    kv.token_bytes(seq, b * cfg.block_tokens + within).unwrap(),
+                );
+            }
+            for codec in registry() {
+                let mut payload = Vec::new();
+                codec.encode_into(&block, cfg.format, Ecf8Params::default(), &mut payload);
+                let parsed =
+                    parse_record(codec.id().as_u8(), cfg.format as u8, block.len(), &payload)
+                        .unwrap();
+                assert_eq!(
+                    parsed.decode_to_vec(),
+                    block,
+                    "seq {seq} block {b} via {}",
+                    codec.id().label()
+                );
+            }
+        }
+    }
+    // and the manager's own probe-driven round-trip on the same state
+    let folds: Vec<u64> = lens
+        .iter()
+        .enumerate()
+        .map(|(i, &len)| kv.fold_kv(i as u64, len).unwrap())
+        .collect();
+    for i in 0..lens.len() {
+        kv.evict(i as u64).unwrap();
+    }
+    assert_eq!(kv.blocks_in_use(), 0);
+    for i in (0..lens.len()).rev() {
+        kv.restore(i as u64, None).unwrap();
+    }
+    for (i, &len) in lens.iter().enumerate() {
+        assert_eq!(kv.fold_kv(i as u64, len).unwrap(), folds[i], "seq {i}");
+    }
+    kv.leak_check().unwrap();
+}
+
+#[test]
+fn threaded_continuous_server_with_costs_streams_everything() {
+    // the threaded coordinator under a real cost model + trickled
+    // arrivals: all responses stream out, books balance, and tokens
+    // still match a synchronous run of the same requests
+    let vocab = 48;
+    let mut rng = Xoshiro256::seed_from_u64(77);
+    let reqs = requests(14, vocab, &mut rng);
+
+    let mut eng = SyntheticIterationEngine::instant(vocab);
+    let mut sched = ContinuousScheduler::new(
+        SchedConfig { max_running: 5 },
+        kv_cfg(4, 16),
+        SimClock::new(),
+    );
+    for r in &reqs {
+        sched.submit(r.clone());
+    }
+    let want: HashMap<u64, Vec<i32>> = sched
+        .run_to_completion(&mut eng)
+        .unwrap()
+        .into_iter()
+        .map(|r| (r.id, r.tokens))
+        .collect();
+
+    let server = ContinuousServer::new(
+        SyntheticIterationEngine::with_costs(
+            vocab,
+            Duration::from_micros(200),
+            Duration::from_micros(50),
+        ),
+        ContinuousScheduler::new(
+            SchedConfig { max_running: 5 },
+            kv_cfg(4, 16),
+            Arc::new(SystemClock),
+        ),
+    );
+    let mut got = Vec::new();
+    for r in &reqs {
+        server.submit(r.clone());
+        std::thread::sleep(Duration::from_micros(300));
+        got.extend(server.collect_ready());
+    }
+    let report = server.shutdown().unwrap();
+    got.extend(report.responses);
+    report.leak_check.expect("zero leaked blocks");
+    assert_eq!(got.len(), reqs.len());
+    for r in &got {
+        assert_eq!(r.tokens, want[&r.id], "request {}", r.id);
+        assert!(r.ttft_s >= 0.0 && r.latency_s >= r.ttft_s);
+    }
+    assert_eq!(report.metrics.finished, reqs.len() as u64);
+    assert_eq!(report.metrics.ttft.count(), reqs.len() as u64);
+    // continuous scheduling never pays dead slots
+    assert_eq!(report.metrics.slot_tokens, report.metrics.slot_capacity);
+    assert!((report.metrics.occupancy() - 1.0).abs() < 1e-12);
+}
