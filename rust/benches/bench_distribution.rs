@@ -1,0 +1,199 @@
+//! Fleet distribution: goodput and time-to-first-layer under seeded
+//! packet loss — the robustness half of the serving story. Two grids:
+//!
+//! * **goodput vs loss** — one full send pass plus bounded
+//!   retransmission rounds through the deterministic fault channel, at
+//!   a fixed parity budget. Reports wall time, wire overhead, FEC
+//!   repairs, and whether the transfer completed byte-identically.
+//! * **TTFL: streaming vs download-then-serve** — over a clean channel,
+//!   how much of the wire a receiver must ingest before the first
+//!   transformer layer is servable (the availability barrier opening)
+//!   versus ingesting everything. The gap is what serve-while-
+//!   downloading buys.
+//!
+//! All transfers are in-memory (no sockets, no disk I/O on the wire
+//! path), so times measure the packet/FEC/commit CPU cost, not a
+//! network. Emits `BENCH_distribution.json`.
+
+use ecf8::bench_support::{banner, write_bench_json, Json, Table};
+use ecf8::distribution::{
+    AvailabilityMap, FaultPlan, FaultyChannel, Receiver, Sender, SenderConfig, Transport,
+};
+use ecf8::model::config::tiny_llm;
+use ecf8::model::store::{CompressedModel, ModelStore};
+use ecf8::util::threadpool::ThreadPool;
+use std::sync::Arc;
+use std::time::Instant;
+
+const SHARD_LIMIT: u64 = 256 << 10;
+const MAX_ROUNDS: usize = 10;
+const SEED: u64 = 7;
+
+/// Captures every wire frame for frame-at-a-time replay.
+#[derive(Default)]
+struct CollectChannel {
+    frames: Vec<Vec<u8>>,
+}
+
+impl Transport for CollectChannel {
+    fn send(&mut self, packet: &[u8]) {
+        self.frames.push(packet.to_vec());
+    }
+
+    fn recv(&mut self) -> Option<Vec<u8>> {
+        None
+    }
+}
+
+fn main() {
+    banner(
+        "bench_distribution",
+        "fleet distribution: goodput vs loss, TTFL streaming vs full download",
+    );
+    let cfg = tiny_llm();
+    let pool = ThreadPool::with_default_size();
+    let model = CompressedModel::synthesize(&cfg, 77, Some(&pool));
+    let root = std::env::temp_dir().join("ecf8_bench_distribution");
+    std::fs::remove_dir_all(&root).ok();
+    ModelStore::new(root.join("src"))
+        .save_v2(&model, SHARD_LIMIT)
+        .unwrap();
+    let src = root.join("src").join(cfg.name);
+    let sender_cfg = SenderConfig::default();
+    let sender = Sender::from_dir(&src, &sender_cfg).unwrap();
+    println!(
+        "workload: {} ({} compressed, {} KiB shards, parity ratio {:.2}, \
+         {} packets per pass)",
+        cfg.name,
+        model.compressed_bytes(),
+        SHARD_LIMIT >> 10,
+        sender_cfg.parity_ratio,
+        sender.packets_per_pass()
+    );
+
+    // --- goodput vs loss ---------------------------------------------------
+    let mut table = Table::new([
+        "loss",
+        "rounds",
+        "repaired",
+        "wire bytes",
+        "elapsed",
+        "goodput MB/s",
+        "outcome",
+    ]);
+    let mut sweep = Json::arr();
+    for loss in [0.0, 0.1, 0.2, 0.3, 0.4] {
+        let dst = root.join(format!("recv-loss-{}", (loss * 100.0) as u32));
+        let mut ch = FaultyChannel::new(FaultPlan::loss(SEED, loss));
+        let map = Arc::new(AvailabilityMap::for_layers(cfg.n_layers));
+        let mut rx = Receiver::new(&dst);
+        rx.set_availability(Arc::clone(&map));
+
+        let t0 = Instant::now();
+        let mut send = sender.send_all(&mut ch).unwrap();
+        rx.drain(&mut ch);
+        let mut rounds = 0usize;
+        for _ in 0..MAX_ROUNDS {
+            if rx.is_complete() {
+                break;
+            }
+            let missing = rx.missing_blocks();
+            send.absorb(sender.send_blocks(&mut ch, &missing).unwrap());
+            rx.drain(&mut ch);
+            rounds += 1;
+        }
+        let complete = rx.finish().is_ok();
+        let elapsed = t0.elapsed().as_secs_f64();
+        let report = rx.report().clone();
+        let goodput = send.payload_bytes as f64 / elapsed / 1e6;
+
+        table.row([
+            format!("{loss:.2}"),
+            format!("{rounds}"),
+            format!("{}", report.blocks_repaired),
+            format!("{}", send.wire_bytes),
+            format!("{:.2} ms", elapsed * 1e3),
+            format!("{goodput:.1}"),
+            if complete { "byte-identical" } else { "incomplete" }.to_string(),
+        ]);
+        sweep.push(
+            Json::obj()
+                .field("loss", loss)
+                .field("retransmit_rounds", rounds)
+                .field("blocks_repaired", report.blocks_repaired as usize)
+                .field("bad_packets", report.bad_packets as usize)
+                .field("wire_bytes", send.wire_bytes as usize)
+                .field("payload_bytes", send.payload_bytes as usize)
+                .field("elapsed_s", elapsed)
+                .field("goodput_mbps", goodput)
+                .field("complete", complete),
+        );
+    }
+    table.print();
+
+    // --- TTFL: streaming vs download-then-serve ----------------------------
+    // Capture one clean pass, then replay frame-at-a-time and mark how
+    // deep into the wire the first transformer layer (availability
+    // unit 1) becomes servable.
+    let mut collect = CollectChannel::default();
+    let send = sender.send_all(&mut collect).unwrap();
+    let dst = root.join("recv-stream");
+    let map = Arc::new(AvailabilityMap::for_layers(cfg.n_layers));
+    let mut rx = Receiver::new(&dst);
+    rx.set_availability(Arc::clone(&map));
+
+    let total_frames = collect.frames.len();
+    let total_wire: u64 = collect.frames.iter().map(|f| f.len() as u64).sum();
+    let mut wire_seen = 0u64;
+    let mut first_layer: Option<(usize, u64, f64)> = None;
+    let t0 = Instant::now();
+    for (i, frame) in collect.frames.iter().enumerate() {
+        rx.ingest(frame).unwrap();
+        wire_seen += frame.len() as u64;
+        if first_layer.is_none() && map.snapshot().get(1).copied().unwrap_or(false) {
+            first_layer = Some((i + 1, wire_seen, t0.elapsed().as_secs_f64()));
+        }
+    }
+    rx.finish().unwrap();
+    let total_s = t0.elapsed().as_secs_f64();
+    let (frames_at_first, wire_at_first, ttfl_s) =
+        first_layer.expect("first layer never became servable");
+    let wire_frac = wire_at_first as f64 / total_wire as f64;
+    println!(
+        "TTFL: layer 0 servable after {frames_at_first}/{total_frames} frames \
+         ({:.1}% of the wire, {:.2} ms) vs {:.2} ms for the full download — \
+         {:.2}x earlier",
+        wire_frac * 100.0,
+        ttfl_s * 1e3,
+        total_s * 1e3,
+        total_s / ttfl_s.max(1e-9)
+    );
+
+    let doc = Json::obj()
+        .field("bench", "distribution")
+        .field("model", cfg.name)
+        .field("compressed_bytes", model.compressed_bytes() as usize)
+        .field("shard_limit_bytes", SHARD_LIMIT as usize)
+        .field("parity_ratio", sender_cfg.parity_ratio)
+        .field("seed", SEED as usize)
+        .field("max_retransmit_rounds", MAX_ROUNDS)
+        .field(
+            "note",
+            "in-memory transfers: times measure packet/FEC/commit CPU, not a network",
+        )
+        .field("goodput_vs_loss", sweep)
+        .field(
+            "ttfl",
+            Json::obj()
+                .field("frames_total", total_frames)
+                .field("wire_bytes_total", total_wire as usize)
+                .field("frames_until_first_layer", frames_at_first)
+                .field("wire_bytes_until_first_layer", wire_at_first as usize)
+                .field("wire_fraction_until_first_layer", wire_frac)
+                .field("streaming_ttfl_s", ttfl_s)
+                .field("download_then_serve_s", total_s)
+                .field("payload_bytes", send.payload_bytes as usize),
+        );
+    write_bench_json("BENCH_distribution.json", &doc);
+    std::fs::remove_dir_all(&root).ok();
+}

@@ -80,6 +80,23 @@ impl DynamicBatcher {
         self.queue.front().map(|r| r.arrived + self.linger)
     }
 
+    /// Remove and return every queued request whose service deadline has
+    /// passed (`now >= deadline` — exactly at the deadline is expired,
+    /// the same comparison [`Self::pop_batch`] uses for "due"). Callers
+    /// turn these into structured `Expired` responses; an expired
+    /// request never reaches the execute stage.
+    pub fn shed_expired(&mut self, now: Instant) -> Vec<Request> {
+        let mut expired = Vec::new();
+        self.queue.retain(|r| match r.deadline {
+            Some(d) if now >= d => {
+                expired.push(r.clone());
+                false
+            }
+            _ => true,
+        });
+        expired
+    }
+
     /// Pop a batch if policy says it's time: full batch available, or the
     /// oldest request has waited past the linger deadline (`>=` — a
     /// request exactly at its deadline is due).
@@ -202,6 +219,40 @@ mod tests {
         let popped = b.pop_batch(Instant::now() + Duration::from_millis(60));
         assert_eq!(popped.unwrap().len(), 2);
         assert_eq!(b.next_deadline(), None, "stale deadline after pop");
+    }
+
+    #[test]
+    fn shed_expired_drops_exactly_at_deadline_and_keeps_the_rest() {
+        use crate::scheduler::SimClock;
+        let clock = SimClock::new();
+        let mut b = DynamicBatcher::with_clock(4, Duration::from_secs(10), clock.clone());
+        let t0 = clock.now();
+        b.push(Request::at(0, vec![0; 4], t0).with_deadline(t0 + Duration::from_millis(50)));
+        b.push(Request::at(1, vec![0; 4], t0).with_deadline(t0 + Duration::from_millis(80)));
+        b.push(Request::at(2, vec![0; 4], t0)); // no deadline: never sheds
+
+        // one tick before the earliest deadline: nothing expires
+        clock.advance(Duration::from_millis(50) - Duration::from_nanos(1));
+        assert!(b.shed_expired(clock.now()).is_empty());
+        assert_eq!(b.pending(), 3);
+
+        // exactly at the deadline: expired (>= — mirrors pop_batch)
+        clock.advance(Duration::from_nanos(1));
+        let shed = b.shed_expired(clock.now());
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].id, 0);
+        assert_eq!(b.pending(), 2);
+
+        // far past every deadline: only the deadline-less request stays
+        clock.advance(Duration::from_secs(1));
+        let shed = b.shed_expired(clock.now());
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].id, 1);
+        assert_eq!(b.pending(), 1);
+        assert!(b.shed_expired(clock.now()).is_empty(), "idempotent");
+        // the survivor still pops normally
+        let batch = b.pop_batch(clock.now() + Duration::from_secs(20)).unwrap();
+        assert_eq!(batch[0].id, 2);
     }
 
     #[test]

@@ -64,9 +64,21 @@ pub const DEFAULT_DECODE_WINDOW: usize = 2;
 /// `CompressedModel::drop_layer`). Purely advisory: it must not touch
 /// the arenas and has no effect on the decoded bytes.
 ///
+/// `gate` is the serve-while-downloading availability *barrier*: when
+/// set, the decoder thread calls `gate(l)` immediately before decoding
+/// stage `l` and the call may **block** until stage `l`'s bytes are
+/// servable (see `distribution::AvailabilityMap` and
+/// `CompressedModel::gate_stage`). Unlike `advise` — which fires for
+/// stage `l + 1` *ahead* of need and must never block — the gate fires
+/// for exactly the stage about to decode, so layer ℓ serves while layer
+/// ℓ+k is still in flight and the pipeline stalls only when it truly
+/// catches up with the download frontier. Consumption of already-decoded
+/// stages proceeds while the decoder is parked on the gate.
+///
 /// Bit-exactness contract: `consume(l, arena)` sees exactly the bytes a
 /// serial `decode` of `stages[l]` would produce — the pipeline changes
 /// the schedule, never the data.
+#[allow(clippy::too_many_arguments)]
 pub fn with_stages_decoded<R, E>(
     jit: &mut JitDecompressor,
     pool: Option<&ThreadPool>,
@@ -74,6 +86,7 @@ pub fn with_stages_decoded<R, E>(
     stages: &[Vec<&CompressedTensor>],
     observer: Option<&SharedStageMetrics>,
     advise: Option<&(dyn Fn(usize) + Sync)>,
+    gate: Option<&(dyn Fn(usize) + Sync)>,
     mut consume: impl FnMut(usize, &LayerArena) -> Result<R, E>,
 ) -> Result<Vec<R>, E> {
     let window = window.max(2);
@@ -126,6 +139,11 @@ pub fn with_stages_decoded<R, E>(
                 let Ok(mut arena) = free_rx.recv() else {
                     return Vec::new();
                 };
+                if let Some(g) = gate {
+                    // availability barrier: may block until stage l's
+                    // bytes exist; already-decoded stages keep serving
+                    g(l);
+                }
                 if let Some(f) = advise {
                     if l + 1 < stages.len() {
                         // stage l+1's pages stream in while stage l decodes
@@ -222,6 +240,7 @@ mod tests {
             &layers,
             None,
             None,
+            None,
             |l, arena| -> Result<usize, String> {
                 assert_eq!(arena.len(), expect[l].len(), "layer {l}");
                 for (i, want) in expect[l].iter().enumerate() {
@@ -241,6 +260,7 @@ mod tests {
             None,
             DEFAULT_DECODE_WINDOW,
             &layers,
+            None,
             None,
             None,
             |l, arena| -> Result<(), String> {
@@ -274,6 +294,7 @@ mod tests {
             &stages,
             Some(&obs),
             None,
+            None,
             |l, arena| -> Result<(), String> {
                 let base = if l == 0 { 0 } else { 3 };
                 for i in 0..arena.len() {
@@ -305,6 +326,7 @@ mod tests {
             &stages,
             None,
             Some(&hook),
+            None,
             |_, _| -> Result<(), String> { Ok(()) },
         )
         .unwrap();
@@ -312,6 +334,54 @@ mod tests {
         // one-past-the-end after the final stage (the DONTNEED
         // counterpart's retirement signal)
         assert_eq!(*advised.lock().unwrap(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn gate_blocks_each_stage_until_published() {
+        // serve-while-downloading: a publisher "downloads" stages one by
+        // one; the gate must hold each stage's decode until its unit is
+        // published, and the output must stay bit-exact.
+        let (d1, b1) = blob(2_000, 70);
+        let (d2, b2) = blob(2_000, 71);
+        let (d3, b3) = blob(2_000, 72);
+        let mut jit = JitDecompressor::new(0, None);
+        let stages: Vec<Vec<&CompressedTensor>> = vec![vec![&b1], vec![&b2], vec![&b3]];
+        let expect = [&d1, &d2, &d3];
+        let map = Arc::new(crate::distribution::AvailabilityMap::new(3));
+        // count of units published so far; bumped strictly before the
+        // publish, so a consumed stage proves its publish happened first
+        let published = Arc::new(AtomicUsize::new(0));
+        let publisher = {
+            let map = Arc::clone(&map);
+            let published = Arc::clone(&published);
+            std::thread::spawn(move || {
+                for u in 0..3 {
+                    std::thread::sleep(std::time::Duration::from_millis(15));
+                    published.store(u + 1, Ordering::SeqCst);
+                    map.publish(u);
+                }
+            })
+        };
+        let gate = |l: usize| map.wait(l);
+        with_stages_decoded(
+            &mut jit,
+            None,
+            DEFAULT_DECODE_WINDOW,
+            &stages,
+            None,
+            None,
+            Some(&gate),
+            |l, arena| -> Result<(), String> {
+                assert!(
+                    published.load(Ordering::SeqCst) >= l + 1,
+                    "stage {l} consumed before its unit was published"
+                );
+                assert_eq!(arena.tensor(0), &expect[l][..], "stage {l} bit-exact");
+                Ok(())
+            },
+        )
+        .unwrap();
+        publisher.join().unwrap();
     }
 
     #[test]
@@ -325,6 +395,7 @@ mod tests {
             None,
             DEFAULT_DECODE_WINDOW,
             &layers,
+            None,
             None,
             None,
             |l, _| -> Result<(), String> {
@@ -351,6 +422,7 @@ mod tests {
             None,
             2,
             &[],
+            None,
             None,
             None,
             |_, _| -> Result<(), String> { panic!("no stages") },

@@ -237,6 +237,8 @@ pub struct SchedulerMetrics {
     pub tokens_generated: u64,
     pub admitted: u64,
     pub finished: u64,
+    /// requests shed while waiting because their deadline passed
+    pub expired: u64,
     /// sequences evicted under block pressure
     pub preemptions: u64,
     /// sequences restored after preemption

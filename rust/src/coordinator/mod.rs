@@ -43,6 +43,6 @@ pub use metrics::{
     LatencyHistogram, PipelineMetrics, SchedulerMetrics, SharedStageMetrics, StageMetrics,
 };
 pub use pipeline::{PipelineConfig, PipelinedServer, SyntheticEngine};
-pub use request::{Request, Response};
+pub use request::{Request, Response, ResponseStatus};
 pub use scheduler::{MemoryModel, ServingPlan};
 pub use server::{BatchEngine, ServeConfig, Server};

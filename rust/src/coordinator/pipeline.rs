@@ -129,7 +129,8 @@ impl<E: BatchEngine + 'static> PipelinedServer<E> {
         let admission = std::thread::spawn({
             let shared = Arc::clone(&shared);
             let stage = stages.admission.clone();
-            move || admission_loop(&shared, &batch_tx, &stage)
+            let resp_tx = resp_tx.clone();
+            move || admission_loop(&shared, &batch_tx, &resp_tx, &stage)
         });
         let execute = std::thread::spawn({
             let decode_stage = stages.decode.clone();
@@ -142,14 +143,22 @@ impl<E: BatchEngine + 'static> PipelinedServer<E> {
                 while let Ok(batch) = batch_rx.recv() {
                     execute_stage.observe_depth(batch_rx.len());
                     let t0 = Instant::now();
-                    match execute_batch_on(
-                        &mut engine,
-                        &batch,
-                        exec_batch,
-                        true,
-                        Some(&decode_stage),
-                    ) {
-                        Ok(responses) => {
+                    // A panicking engine poisons the *batch*, not the
+                    // server: its members get structured `Failed`
+                    // responses and the loop keeps serving. A clean
+                    // `Err` still stops the stage (first_err below) —
+                    // that's the engine reporting it cannot continue.
+                    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        execute_batch_on(&mut engine, &batch, exec_batch, true, Some(&decode_stage))
+                    }));
+                    match outcome {
+                        Err(payload) => {
+                            let msg = panic_msg(payload);
+                            for r in &batch {
+                                let _ = resp_tx.send(Response::failed(r, msg.clone(), batch.len()));
+                            }
+                        }
+                        Ok(Ok(responses)) => {
                             execute_stage.record(t0.elapsed().as_secs_f64());
                             let latencies: Vec<f64> =
                                 responses.iter().map(|r| r.latency_s).collect();
@@ -163,7 +172,7 @@ impl<E: BatchEngine + 'static> PipelinedServer<E> {
                                 let _ = resp_tx.send(r);
                             }
                         }
-                        Err(e) => {
+                        Ok(Err(e)) => {
                             first_err = Some(e);
                             break; // dropping batch_rx fails admission sends
                         }
@@ -265,13 +274,28 @@ impl<E: BatchEngine + 'static> Drop for PipelinedServer<E> {
     }
 }
 
+/// What a panicking execute stage left behind, as a response message.
+fn panic_msg(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "execute stage panicked".to_string()
+    }
+}
+
 /// The admission stage: form batches under the batcher's policy (full
 /// batch or linger deadline) and push them into the bounded batch queue.
 /// The send is the stage's backpressure stall and is what the stage
-/// latency histogram records.
+/// latency histogram records. Requests whose service deadline passed
+/// while queued are shed here — before batch formation, so an expired
+/// request never reaches the execute stage — as structured `Expired`
+/// responses.
 fn admission_loop(
     shared: &AdmissionShared,
     batch_tx: &Sender<Vec<Request>>,
+    resp_tx: &mpsc::Sender<Response>,
     stage: &SharedStageMetrics,
 ) {
     loop {
@@ -282,6 +306,9 @@ fn admission_loop(
         // the batcher's injected clock decides "due" (system clock in
         // production; the condvar sleep below is always wall time)
         let now = batcher.now();
+        for r in batcher.shed_expired(now) {
+            let _ = resp_tx.send(Response::expired(&r, now));
+        }
         if let Some(batch) = batcher.pop_batch(now) {
             drop(batcher); // never hold the submit lock across the send
             stage.observe_depth(batch_tx.len());
@@ -307,8 +334,17 @@ fn admission_loop(
         drop(guard);
     }
     // shutdown: drain everything still queued, in pop_batch-consistent
-    // chunks, then close the channel so the execute stage finishes
-    let chunks = shared.batcher.lock().unwrap().drain_all();
+    // chunks, then close the channel so the execute stage finishes.
+    // Expired waiters are shed first — shutdown must not execute a
+    // request the steady-state loop would have refused.
+    let chunks = {
+        let mut batcher = shared.batcher.lock().unwrap();
+        let now = batcher.now();
+        for r in batcher.shed_expired(now) {
+            let _ = resp_tx.send(Response::expired(&r, now));
+        }
+        batcher.drain_all()
+    };
     for chunk in chunks {
         stage.observe_depth(batch_tx.len());
         let t0 = Instant::now();
@@ -339,6 +375,8 @@ pub struct SyntheticEngine {
     pub compute_cost: Duration,
     /// error injection: fail the n-th forward (tests)
     pub fail_on_forward: Option<u64>,
+    /// panic injection: panic on the n-th forward (poisoned-batch tests)
+    pub panic_on_forward: Option<u64>,
     pub forwards: u64,
 }
 
@@ -354,6 +392,7 @@ impl SyntheticEngine {
             decode_cost,
             compute_cost,
             fail_on_forward: None,
+            panic_on_forward: None,
             forwards: 0,
         }
     }
@@ -381,6 +420,9 @@ impl SyntheticEngine {
 
     fn step(&mut self) -> Result<()> {
         self.forwards += 1;
+        if self.panic_on_forward == Some(self.forwards) {
+            panic!("synthetic engine panic on forward {}", self.forwards);
+        }
         if self.fail_on_forward == Some(self.forwards) {
             return Err(anyhow!("synthetic engine failure on forward {}", self.forwards));
         }
@@ -533,6 +575,75 @@ mod tests {
         let report = server.shutdown().unwrap();
         assert!(report.responses.is_empty());
         assert_eq!(report.metrics.requests_served, 10);
+    }
+
+    #[test]
+    fn panicking_engine_poisons_batch_not_server() {
+        use crate::coordinator::request::ResponseStatus;
+        let vocab = 8;
+        let mut engine = SyntheticEngine::instant(vocab);
+        engine.panic_on_forward = Some(2);
+        let server = PipelinedServer::new(
+            engine,
+            PipelineConfig::new(ServeConfig {
+                max_batch: 1,
+                linger: Duration::ZERO,
+            }),
+        );
+        for r in requests(5, vocab, 3) {
+            server.submit(r);
+        }
+        // the poisoned batch must not kill the execute thread
+        let report = server.shutdown().unwrap();
+        let mut got = report.responses;
+        got.sort_by_key(|r| r.id);
+        assert_eq!(got.len(), 5, "every request answered");
+        let failed: Vec<&Response> = got.iter().filter(|r| !r.is_ok()).collect();
+        assert_eq!(failed.len(), 1, "exactly the poisoned batch failed");
+        match &failed[0].status {
+            ResponseStatus::Failed(msg) => {
+                assert!(msg.contains("synthetic engine panic"), "{msg}")
+            }
+            other => panic!("wrong status: {other:?}"),
+        }
+        assert!(failed[0].logits.is_empty());
+        for r in got.iter().filter(|r| r.is_ok()) {
+            assert_eq!(r.logits.len(), vocab);
+        }
+        // only executed batches count as served
+        assert_eq!(report.metrics.requests_served, 4);
+        assert_eq!(report.engine.forwards, 5, "engine kept running after the panic");
+    }
+
+    #[test]
+    fn expired_requests_are_shed_with_structured_responses() {
+        use crate::coordinator::request::ResponseStatus;
+        let vocab = 8;
+        let server = PipelinedServer::new(
+            SyntheticEngine::instant(vocab),
+            PipelineConfig::new(ServeConfig {
+                max_batch: 4,
+                linger: Duration::from_secs(30),
+            }),
+        );
+        let reqs = requests(3, vocab, 11);
+        // id 1 arrives already past its deadline — deterministically shed
+        // (the admission loop sheds before every pop and before the
+        // shutdown drain); the others carry no deadline
+        let past = Instant::now() - Duration::from_millis(5);
+        server.submit(reqs[0].clone());
+        server.submit(reqs[1].clone().with_deadline(past));
+        server.submit(reqs[2].clone());
+        let report = server.shutdown().unwrap();
+        let mut got = report.responses;
+        got.sort_by_key(|r| r.id);
+        assert_eq!(got.len(), 3, "shed requests still get a response");
+        assert_eq!(got[1].status, ResponseStatus::Expired);
+        assert!(got[1].logits.is_empty());
+        assert_eq!(got[1].batch_size, 0);
+        assert!(got[0].is_ok() && got[2].is_ok());
+        // expired requests never reach the engine or the served count
+        assert_eq!(report.metrics.requests_served, 2);
     }
 
     #[test]

@@ -10,6 +10,11 @@ pub struct Request {
     pub id: u64,
     pub tokens: Vec<i32>,
     pub arrived: Instant,
+    /// optional service deadline: a request still *queued* at this
+    /// instant is shed with a structured [`ResponseStatus::Expired`]
+    /// response instead of being executed (exactly at the deadline
+    /// counts as expired, mirroring the linger policy's `>=`)
+    pub deadline: Option<Instant>,
 }
 
 impl Request {
@@ -25,8 +30,29 @@ impl Request {
             id,
             tokens,
             arrived,
+            deadline: None,
         }
     }
+
+    pub fn with_deadline(mut self, deadline: Instant) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+}
+
+/// How a request's service ended — success is the quiet case; the two
+/// degraded outcomes are structured so callers can tell "dropped before
+/// execution" from "the execute stage blew up under it".
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub enum ResponseStatus {
+    /// executed; `logits` are valid
+    #[default]
+    Ok,
+    /// shed while queued: the deadline passed before execution started
+    Expired,
+    /// the execute stage failed or panicked on this request's batch;
+    /// the message names the cause
+    Failed(String),
 }
 
 /// The served result: per-request logits for the final position.
@@ -38,6 +64,36 @@ pub struct Response {
     pub latency_s: f64,
     /// batch this request was served in
     pub batch_size: usize,
+    pub status: ResponseStatus,
+}
+
+impl Response {
+    /// True for a normally executed response.
+    pub fn is_ok(&self) -> bool {
+        self.status == ResponseStatus::Ok
+    }
+
+    /// The structured shed-at-deadline response (no logits, batch 0).
+    pub fn expired(r: &Request, now: Instant) -> Self {
+        Self {
+            id: r.id,
+            logits: Vec::new(),
+            latency_s: now.saturating_duration_since(r.arrived).as_secs_f64(),
+            batch_size: 0,
+            status: ResponseStatus::Expired,
+        }
+    }
+
+    /// The structured execute-failure response for one batch member.
+    pub fn failed(r: &Request, reason: String, batch_size: usize) -> Self {
+        Self {
+            id: r.id,
+            logits: Vec::new(),
+            latency_s: r.arrived.elapsed().as_secs_f64(),
+            batch_size,
+            status: ResponseStatus::Failed(reason),
+        }
+    }
 }
 
 #[cfg(test)]

@@ -121,6 +121,7 @@ pub(crate) fn execute_batch_on<E: BatchEngine>(
             logits: logits[i * vocab..(i + 1) * vocab].to_vec(),
             latency_s: now.duration_since(r.arrived).as_secs_f64(),
             batch_size: real,
+            status: super::request::ResponseStatus::Ok,
         })
         .collect())
 }

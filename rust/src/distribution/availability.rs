@@ -1,0 +1,171 @@
+//! Per-stage availability: the bridge between the receiver (publishing
+//! units as their bytes commit) and the executor (blocking its decode
+//! gate until a stage's bytes exist on disk).
+//!
+//! Units use the executor's stage indexing exactly: unit 0 is the
+//! embedding stage, units `1..=n_layers` are the transformer layers, and
+//! unit `n_layers + 1` is the head stage (any non-layer tensor that is
+//! neither embedding nor head — e.g. a final norm — rides with the head
+//! unit, since the executor decodes it in that stage). The receiver maps
+//! committed shards onto units via the tensor index; the executor's
+//! `gate` hook calls [`AvailabilityMap::wait`] with the stage number it
+//! is about to decode, so serving proceeds layer-by-layer behind the
+//! download frontier and is bit-identical to a fully-local store.
+
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Unit index of the embedding stage (the first executor stage).
+pub const UNIT_EMBED: usize = 0;
+
+/// A monotonic set of "these stages are servable" bits with blocking
+/// waiters. Bits only ever go false→true; there is no retraction,
+/// because a committed shard is never un-committed.
+pub struct AvailabilityMap {
+    ready: Mutex<Vec<bool>>,
+    cv: Condvar,
+}
+
+impl AvailabilityMap {
+    /// A map for an executor plan with `n_layers` transformer layers:
+    /// `n_layers + 2` units (embed + layers + head).
+    pub fn for_layers(n_layers: usize) -> Self {
+        Self::new(n_layers + 2)
+    }
+
+    pub fn new(n_units: usize) -> Self {
+        Self {
+            ready: Mutex::new(vec![false; n_units]),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn n_units(&self) -> usize {
+        self.ready.lock().unwrap().len()
+    }
+
+    /// Unit index of the head stage for this map.
+    pub fn unit_head(&self) -> usize {
+        self.n_units() - 1
+    }
+
+    /// Mark one unit servable and wake every waiter. Idempotent.
+    pub fn publish(&self, unit: usize) {
+        let mut ready = self.ready.lock().unwrap();
+        if unit < ready.len() && !ready[unit] {
+            ready[unit] = true;
+            self.cv.notify_all();
+        }
+    }
+
+    /// Mark every unit servable (fully-local store, or transfer done).
+    pub fn publish_all(&self) {
+        let mut ready = self.ready.lock().unwrap();
+        for r in ready.iter_mut() {
+            *r = true;
+        }
+        self.cv.notify_all();
+    }
+
+    pub fn is_ready(&self, unit: usize) -> bool {
+        let ready = self.ready.lock().unwrap();
+        unit < ready.len() && ready[unit]
+    }
+
+    pub fn all_ready(&self) -> bool {
+        self.ready.lock().unwrap().iter().all(|&r| r)
+    }
+
+    /// Servable-unit snapshot (for reports and the partial-availability
+    /// printout when a transfer ends degraded).
+    pub fn snapshot(&self) -> Vec<bool> {
+        self.ready.lock().unwrap().clone()
+    }
+
+    /// Block until `unit` is servable. Out-of-range units (a stage plan
+    /// longer than the map) are treated as ready so a mismatched plan
+    /// degrades to a no-op gate instead of a deadlock.
+    pub fn wait(&self, unit: usize) {
+        let mut ready = self.ready.lock().unwrap();
+        while unit < ready.len() && !ready[unit] {
+            ready = self.cv.wait(ready).unwrap();
+        }
+    }
+
+    /// Like [`wait`](Self::wait) but gives up after `timeout`; returns
+    /// whether the unit became servable.
+    pub fn wait_timeout(&self, unit: usize, timeout: Duration) -> bool {
+        let mut ready = self.ready.lock().unwrap();
+        if unit >= ready.len() {
+            return true;
+        }
+        while !ready[unit] {
+            let (guard, res) = self.cv.wait_timeout(ready, timeout).unwrap();
+            ready = guard;
+            if res.timed_out() {
+                return ready[unit];
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn publish_is_monotonic_and_idempotent() {
+        let map = AvailabilityMap::for_layers(2);
+        assert_eq!(map.n_units(), 4);
+        assert!(!map.is_ready(UNIT_EMBED));
+        map.publish(UNIT_EMBED);
+        map.publish(UNIT_EMBED);
+        assert!(map.is_ready(UNIT_EMBED));
+        assert!(!map.all_ready());
+        map.publish_all();
+        assert!(map.all_ready());
+        assert_eq!(map.snapshot(), vec![true; 4]);
+    }
+
+    #[test]
+    fn wait_blocks_until_published() {
+        let map = Arc::new(AvailabilityMap::new(3));
+        let waiter = {
+            let map = Arc::clone(&map);
+            std::thread::spawn(move || {
+                map.wait(2);
+                assert!(map.is_ready(2));
+            })
+        };
+        // publishing a different unit must not release the waiter
+        map.publish(0);
+        assert!(!map.wait_timeout(2, Duration::from_millis(20)));
+        map.publish(2);
+        waiter.join().unwrap();
+    }
+
+    #[test]
+    fn out_of_range_units_never_deadlock() {
+        let map = AvailabilityMap::new(1);
+        map.wait(5); // returns immediately
+        assert!(map.wait_timeout(5, Duration::from_millis(1)));
+        map.publish(5); // ignored, no panic
+        assert!(!map.is_ready(5));
+    }
+
+    #[test]
+    fn wait_timeout_reports_late_publish() {
+        let map = Arc::new(AvailabilityMap::new(2));
+        let publisher = {
+            let map = Arc::clone(&map);
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(30));
+                map.publish(1);
+            })
+        };
+        assert!(map.wait_timeout(1, Duration::from_secs(10)));
+        publisher.join().unwrap();
+    }
+}

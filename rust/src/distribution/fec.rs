@@ -1,0 +1,591 @@
+//! Forward error correction over GF(2⁸): the [`FecCodec`] seam and its
+//! two built-ins — [`NoCode`] (passthrough, id 0) and [`ReedSolomon8`]
+//! (systematic Reed–Solomon erasure coding, id 1).
+//!
+//! The registry mirrors `codec::codecs`: senders negotiate a codec by
+//! one id byte carried in every packet, receivers resolve it through
+//! [`fec_for`], and an unknown id is a structured
+//! [`DistError::UnknownFec`] — never a panic.
+//!
+//! ## The code
+//!
+//! A source block is `k` equal-length symbols; the encoder appends
+//! `parity` repair symbols for `n = k + parity ≤ 255` total. The
+//! generator matrix is the classic systematic construction: an `n × k`
+//! Vandermonde matrix over GF(2⁸) (evaluation points `0..n`, all
+//! distinct, so every `k × k` submatrix is invertible) multiplied by the
+//! inverse of its own top square — the top `k` rows become the identity,
+//! so source symbols ship unmodified and a loss-free receiver never runs
+//! the decoder at all. Decoding is the dual: gather any `k` received
+//! symbols, invert their generator rows (Gauss–Jordan in GF(2⁸)), and
+//! reconstruct exactly the missing source symbols. Recovery succeeds
+//! **iff** at least `k` of the `n` symbols arrive — the property the
+//! test suite sweeps exhaustively for small geometries.
+
+use super::DistError;
+use std::sync::OnceLock;
+
+/// GF(2⁸) modulus: x⁸ + x⁴ + x³ + x² + 1 (the AES-unrelated 0x11D used
+/// by RS erasure codes; primitive element α = 2).
+const GF_POLY: u32 = 0x11D;
+
+/// Largest total symbol count (`k + parity`) one block may carry: the
+/// Vandermonde evaluation points are the 255 distinct nonzero-capable
+/// field indices `0..255`.
+pub const MAX_TOTAL_SYMBOLS: usize = 255;
+
+struct GfTables {
+    /// α^i for i in 0..510 (doubled so `exp[log a + log b]` never wraps)
+    exp: [u8; 510],
+    /// log α of 1..=255 (index 0 unused)
+    log: [u8; 256],
+}
+
+fn tables() -> &'static GfTables {
+    static TABLES: OnceLock<GfTables> = OnceLock::new();
+    TABLES.get_or_init(|| {
+        let mut exp = [0u8; 510];
+        let mut log = [0u8; 256];
+        let mut x: u32 = 1;
+        for i in 0..255 {
+            exp[i] = x as u8;
+            log[x as usize] = i as u8;
+            x <<= 1;
+            if x & 0x100 != 0 {
+                x ^= GF_POLY;
+            }
+        }
+        for i in 255..510 {
+            exp[i] = exp[i - 255];
+        }
+        GfTables { exp, log }
+    })
+}
+
+/// GF(2⁸) multiply.
+#[inline]
+pub fn gf_mul(a: u8, b: u8) -> u8 {
+    if a == 0 || b == 0 {
+        return 0;
+    }
+    let t = tables();
+    t.exp[t.log[a as usize] as usize + t.log[b as usize] as usize]
+}
+
+/// GF(2⁸) multiplicative inverse (`a` must be nonzero).
+#[inline]
+pub fn gf_inv(a: u8) -> u8 {
+    debug_assert_ne!(a, 0, "zero has no inverse");
+    let t = tables();
+    t.exp[255 - t.log[a as usize] as usize]
+}
+
+/// `x^e` in GF(2⁸) with `0^0 = 1`.
+#[inline]
+fn gf_pow(x: u8, e: usize) -> u8 {
+    if e == 0 {
+        return 1;
+    }
+    if x == 0 {
+        return 0;
+    }
+    let t = tables();
+    t.exp[(t.log[x as usize] as usize * e) % 255]
+}
+
+/// `dst ^= c · src`, element-wise.
+fn mul_acc(dst: &mut [u8], src: &[u8], c: u8) {
+    debug_assert_eq!(dst.len(), src.len());
+    if c == 0 {
+        return;
+    }
+    if c == 1 {
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d ^= s;
+        }
+        return;
+    }
+    let t = tables();
+    let lc = t.log[c as usize] as usize;
+    for (d, &s) in dst.iter_mut().zip(src) {
+        if s != 0 {
+            *d ^= t.exp[lc + t.log[s as usize] as usize];
+        }
+    }
+}
+
+/// Gauss–Jordan inverse of a `k × k` matrix over GF(2⁸); `None` when
+/// singular (cannot happen for Vandermonde-derived rows, but the decoder
+/// treats it as a structured error rather than trusting that).
+fn invert(mut m: Vec<Vec<u8>>) -> Option<Vec<Vec<u8>>> {
+    let k = m.len();
+    let mut inv: Vec<Vec<u8>> = (0..k)
+        .map(|r| (0..k).map(|c| u8::from(r == c)).collect())
+        .collect();
+    for col in 0..k {
+        let piv = (col..k).find(|&r| m[r][col] != 0)?;
+        m.swap(col, piv);
+        inv.swap(col, piv);
+        let d = gf_inv(m[col][col]);
+        for j in 0..k {
+            m[col][j] = gf_mul(m[col][j], d);
+            inv[col][j] = gf_mul(inv[col][j], d);
+        }
+        for r in 0..k {
+            if r != col && m[r][col] != 0 {
+                let f = m[r][col];
+                for j in 0..k {
+                    let a = gf_mul(f, m[col][j]);
+                    let b = gf_mul(f, inv[col][j]);
+                    m[r][j] ^= a;
+                    inv[r][j] ^= b;
+                }
+            }
+        }
+    }
+    Some(inv)
+}
+
+/// The systematic `n × k` generator matrix: Vandermonde times the
+/// inverse of its top square. Rows `0..k` are the identity; any `k` rows
+/// are linearly independent.
+fn generator(k: usize, n: usize) -> Vec<Vec<u8>> {
+    debug_assert!(k >= 1 && n >= k && n <= MAX_TOTAL_SYMBOLS);
+    let vander: Vec<Vec<u8>> = (0..n)
+        .map(|r| (0..k).map(|c| gf_pow(r as u8, c)).collect())
+        .collect();
+    let top_inv = invert(vander[..k].to_vec()).expect("Vandermonde top square is invertible");
+    (0..n)
+        .map(|r| {
+            (0..k)
+                .map(|c| {
+                    let mut acc = 0u8;
+                    for j in 0..k {
+                        acc ^= gf_mul(vander[r][j], top_inv[j][c]);
+                    }
+                    acc
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// One block's negotiated FEC geometry, carried in every packet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FecParams {
+    pub fec: FecId,
+    /// source symbols per block
+    pub k: u16,
+    /// repair symbols per block
+    pub parity: u16,
+    /// bytes per symbol (the last source symbol is zero-padded to this)
+    pub symbol_bytes: u32,
+}
+
+impl FecParams {
+    /// Total symbols per block.
+    pub fn n(&self) -> usize {
+        self.k as usize + self.parity as usize
+    }
+
+    /// Reject impossible geometries with a structured error (packet
+    /// fields are untrusted input).
+    pub fn validate(&self) -> Result<(), DistError> {
+        if self.k == 0 {
+            return Err(DistError::BadParams("k = 0"));
+        }
+        if self.n() > MAX_TOTAL_SYMBOLS {
+            return Err(DistError::BadParams("k + parity > 255"));
+        }
+        if self.symbol_bytes == 0 {
+            return Err(DistError::BadParams("symbol_bytes = 0"));
+        }
+        if self.fec == FecId::NoCode && self.parity != 0 {
+            return Err(DistError::BadParams("no-code block claims parity symbols"));
+        }
+        Ok(())
+    }
+}
+
+/// FEC encoding id — one byte on the wire, registry index in memory
+/// (mirrors `codec::CodecId`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FecId {
+    /// passthrough: no repair symbols, a block decodes iff every source
+    /// symbol arrives
+    NoCode = 0,
+    /// systematic Reed–Solomon over GF(2⁸)
+    ReedSolomon8 = 1,
+}
+
+impl FecId {
+    pub fn from_u8(v: u8) -> Option<Self> {
+        match v {
+            0 => Some(FecId::NoCode),
+            1 => Some(FecId::ReedSolomon8),
+            _ => None,
+        }
+    }
+
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            FecId::NoCode => "no-code",
+            FecId::ReedSolomon8 => "rs-gf256",
+        }
+    }
+}
+
+/// An erasure codec: emit repair symbols at send time, reconstruct
+/// missing source symbols at receive time. Implementations are stateless
+/// (`&'static` registry entries), like the container codecs.
+pub trait FecCodec: Send + Sync {
+    fn id(&self) -> FecId;
+
+    /// The `params.parity` repair symbols for `source` (each slice
+    /// exactly `params.symbol_bytes` long, the last one pre-padded).
+    fn encode_parity(
+        &self,
+        params: &FecParams,
+        source: &[Vec<u8>],
+    ) -> Result<Vec<Vec<u8>>, DistError>;
+
+    /// Reconstruct every missing *source* slot of `symbols` in place.
+    /// `symbols` is the full `n`-slot receive window (source then
+    /// parity); present slots must hold `params.symbol_bytes` bytes.
+    /// Fails with [`DistError::NeedMoreSymbols`] when fewer than `k`
+    /// symbols are present.
+    fn recover(
+        &self,
+        params: &FecParams,
+        symbols: &mut [Option<Vec<u8>>],
+    ) -> Result<(), DistError>;
+}
+
+/// Id 0: no repair symbols; every source symbol must arrive.
+pub struct NoCode;
+
+impl FecCodec for NoCode {
+    fn id(&self) -> FecId {
+        FecId::NoCode
+    }
+
+    fn encode_parity(
+        &self,
+        params: &FecParams,
+        _source: &[Vec<u8>],
+    ) -> Result<Vec<Vec<u8>>, DistError> {
+        params.validate()?;
+        Ok(Vec::new())
+    }
+
+    fn recover(
+        &self,
+        params: &FecParams,
+        symbols: &mut [Option<Vec<u8>>],
+    ) -> Result<(), DistError> {
+        params.validate()?;
+        let k = params.k as usize;
+        let have = symbols[..k].iter().filter(|s| s.is_some()).count();
+        if have < k {
+            return Err(DistError::NeedMoreSymbols { have, need: k });
+        }
+        Ok(())
+    }
+}
+
+/// Id 1: systematic Reed–Solomon over GF(2⁸).
+pub struct ReedSolomon8;
+
+impl FecCodec for ReedSolomon8 {
+    fn id(&self) -> FecId {
+        FecId::ReedSolomon8
+    }
+
+    fn encode_parity(
+        &self,
+        params: &FecParams,
+        source: &[Vec<u8>],
+    ) -> Result<Vec<Vec<u8>>, DistError> {
+        params.validate()?;
+        let (k, sym) = (params.k as usize, params.symbol_bytes as usize);
+        if source.len() != k || source.iter().any(|s| s.len() != sym) {
+            return Err(DistError::BadParams("source symbol geometry"));
+        }
+        let g = generator(k, params.n());
+        let mut parity = Vec::with_capacity(params.parity as usize);
+        for row in &g[k..] {
+            let mut out = vec![0u8; sym];
+            for (j, src) in source.iter().enumerate() {
+                mul_acc(&mut out, src, row[j]);
+            }
+            parity.push(out);
+        }
+        Ok(parity)
+    }
+
+    fn recover(
+        &self,
+        params: &FecParams,
+        symbols: &mut [Option<Vec<u8>>],
+    ) -> Result<(), DistError> {
+        params.validate()?;
+        let (k, n, sym) = (params.k as usize, params.n(), params.symbol_bytes as usize);
+        if symbols.len() != n {
+            return Err(DistError::BadParams("receive window length"));
+        }
+        if symbols.iter().flatten().any(|s| s.len() != sym) {
+            return Err(DistError::BadParams("received symbol length"));
+        }
+        if symbols[..k].iter().all(|s| s.is_some()) {
+            return Ok(());
+        }
+        let present: Vec<usize> = (0..n).filter(|&i| symbols[i].is_some()).collect();
+        if present.len() < k {
+            return Err(DistError::NeedMoreSymbols {
+                have: present.len(),
+                need: k,
+            });
+        }
+        let g = generator(k, n);
+        let rows: Vec<Vec<u8>> = present[..k].iter().map(|&i| g[i].clone()).collect();
+        let inv = invert(rows).ok_or(DistError::BadParams("singular decode matrix"))?;
+        let missing: Vec<usize> = (0..k).filter(|&j| symbols[j].is_none()).collect();
+        for &j in &missing {
+            let mut out = vec![0u8; sym];
+            for (i, &idx) in present[..k].iter().enumerate() {
+                let y = symbols[idx].as_ref().expect("present symbol");
+                mul_acc(&mut out, y, inv[j][i]);
+            }
+            symbols[j] = Some(out);
+        }
+        Ok(())
+    }
+}
+
+static NO_CODE: NoCode = NoCode;
+static RS8: ReedSolomon8 = ReedSolomon8;
+static REGISTRY: [&(dyn FecCodec); 2] = [&NO_CODE, &RS8];
+
+/// Every registered FEC codec, indexed by id.
+pub fn registry() -> &'static [&'static dyn FecCodec] {
+    &REGISTRY
+}
+
+/// Resolve one wire id to its codec (`None` for ids not negotiated into
+/// this build — the receiver maps that to [`DistError::UnknownFec`]).
+pub fn fec_for(id: u8) -> Option<&'static dyn FecCodec> {
+    let id = FecId::from_u8(id)?;
+    registry().iter().copied().find(|c| c.id() == id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    fn params(k: u16, parity: u16, sym: u32) -> FecParams {
+        FecParams {
+            fec: FecId::ReedSolomon8,
+            k,
+            parity,
+            symbol_bytes: sym,
+        }
+    }
+
+    fn source_block(k: usize, sym: usize, seed: u64) -> Vec<Vec<u8>> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        (0..k)
+            .map(|_| (0..sym).map(|_| rng.next_u64() as u8).collect())
+            .collect()
+    }
+
+    #[test]
+    fn gf_field_axioms() {
+        // spot inverse + distributivity on a deterministic sweep
+        for a in 1..=255u8 {
+            assert_eq!(gf_mul(a, gf_inv(a)), 1, "a={a}");
+            assert_eq!(gf_mul(a, 1), a);
+            assert_eq!(gf_mul(a, 0), 0);
+        }
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        for _ in 0..1000 {
+            let (a, b, c) = (
+                rng.next_u64() as u8,
+                rng.next_u64() as u8,
+                rng.next_u64() as u8,
+            );
+            assert_eq!(gf_mul(a, b), gf_mul(b, a));
+            assert_eq!(gf_mul(a, b ^ c), gf_mul(a, b) ^ gf_mul(a, c));
+        }
+    }
+
+    #[test]
+    fn generator_is_systematic() {
+        for (k, n) in [(1usize, 3usize), (4, 6), (8, 12), (32, 40)] {
+            let g = generator(k, n);
+            for (r, row) in g[..k].iter().enumerate() {
+                for (c, &v) in row.iter().enumerate() {
+                    assert_eq!(v, u8::from(r == c), "G[{r}][{c}] of k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parity_roundtrip_after_erasures() {
+        let p = params(8, 4, 128);
+        let source = source_block(8, 128, 11);
+        let parity = RS8.encode_parity(&p, &source).unwrap();
+        assert_eq!(parity.len(), 4);
+        // drop 4 source symbols, keep all parity
+        let mut window: Vec<Option<Vec<u8>>> = source.iter().cloned().map(Some).collect();
+        window.extend(parity.into_iter().map(Some));
+        for dead in [0usize, 2, 5, 7] {
+            window[dead] = None;
+        }
+        RS8.recover(&p, &mut window).unwrap();
+        for (j, s) in source.iter().enumerate() {
+            assert_eq!(window[j].as_deref(), Some(s.as_slice()), "symbol {j}");
+        }
+    }
+
+    #[test]
+    fn recovers_iff_k_of_n_arrive_exhaustive() {
+        // every subset of a small geometry: decode succeeds exactly when
+        // ≥ k symbols survive, and always bit-exactly
+        let (k, parity) = (3u16, 2u16);
+        let p = params(k, parity, 16);
+        let source = source_block(k as usize, 16, 21);
+        let par = RS8.encode_parity(&p, &source).unwrap();
+        let n = p.n();
+        for mask in 0u32..(1 << n) {
+            let mut window: Vec<Option<Vec<u8>>> = (0..n)
+                .map(|i| {
+                    if mask & (1 << i) != 0 {
+                        Some(if i < k as usize {
+                            source[i].clone()
+                        } else {
+                            par[i - k as usize].clone()
+                        })
+                    } else {
+                        None
+                    }
+                })
+                .collect();
+            let have = mask.count_ones() as usize;
+            match RS8.recover(&p, &mut window) {
+                Ok(()) => {
+                    assert!(have >= k as usize, "decoded from {have} < k symbols");
+                    for (j, s) in source.iter().enumerate() {
+                        assert_eq!(window[j].as_deref(), Some(s.as_slice()));
+                    }
+                }
+                Err(DistError::NeedMoreSymbols { have: h, need }) => {
+                    assert!(have < k as usize, "refused with {have} >= k");
+                    assert_eq!(h, have);
+                    assert_eq!(need, k as usize);
+                }
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+    }
+
+    #[test]
+    fn recovers_at_exactly_k_random_large() {
+        // seeded random sweeps for a production-sized geometry
+        let p = params(32, 8, 512);
+        let source = source_block(32, 512, 33);
+        let par = RS8.encode_parity(&p, &source).unwrap();
+        let mut rng = Xoshiro256::seed_from_u64(34);
+        for trial in 0..40 {
+            let mut window: Vec<Option<Vec<u8>>> = source.iter().cloned().map(Some).collect();
+            window.extend(par.iter().cloned().map(Some));
+            // erase exactly `parity` symbols (any mix) — still decodable
+            let mut dead = std::collections::HashSet::new();
+            while dead.len() < 8 {
+                dead.insert(rng.next_below(40) as usize);
+            }
+            for &d in &dead {
+                window[d] = None;
+            }
+            RS8.recover(&p, &mut window).unwrap();
+            for (j, s) in source.iter().enumerate() {
+                assert_eq!(window[j].as_deref(), Some(s.as_slice()), "trial {trial}");
+            }
+            // one more erasure than parity → structured refusal
+            let mut window: Vec<Option<Vec<u8>>> = source.iter().cloned().map(Some).collect();
+            window.extend(par.iter().cloned().map(Some));
+            let mut dead = std::collections::HashSet::new();
+            while dead.len() < 9 {
+                dead.insert(rng.next_below(40) as usize);
+            }
+            for &d in &dead {
+                window[d] = None;
+            }
+            match RS8.recover(&p, &mut window) {
+                Err(DistError::NeedMoreSymbols { have, need }) => {
+                    assert_eq!(have, 31);
+                    assert_eq!(need, 32);
+                }
+                other => panic!("expected NeedMoreSymbols, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn no_code_requires_every_source_symbol() {
+        let p = FecParams {
+            fec: FecId::NoCode,
+            k: 4,
+            parity: 0,
+            symbol_bytes: 8,
+        };
+        let source = source_block(4, 8, 5);
+        assert!(NO_CODE.encode_parity(&p, &source).unwrap().is_empty());
+        let mut window: Vec<Option<Vec<u8>>> = source.iter().cloned().map(Some).collect();
+        NO_CODE.recover(&p, &mut window).unwrap();
+        window[2] = None;
+        match NO_CODE.recover(&p, &mut window) {
+            Err(DistError::NeedMoreSymbols { have: 3, need: 4 }) => {}
+            other => panic!("expected NeedMoreSymbols, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_params_are_structured_errors() {
+        let zero_k = FecParams {
+            fec: FecId::ReedSolomon8,
+            k: 0,
+            parity: 1,
+            symbol_bytes: 8,
+        };
+        assert!(matches!(
+            zero_k.validate(),
+            Err(DistError::BadParams("k = 0"))
+        ));
+        let too_many = params(200, 100, 8);
+        assert!(matches!(too_many.validate(), Err(DistError::BadParams(_))));
+        let fake_parity = FecParams {
+            fec: FecId::NoCode,
+            k: 4,
+            parity: 2,
+            symbol_bytes: 8,
+        };
+        assert!(matches!(
+            fake_parity.validate(),
+            Err(DistError::BadParams(_))
+        ));
+    }
+
+    #[test]
+    fn registry_resolves_ids() {
+        assert_eq!(fec_for(0).unwrap().id(), FecId::NoCode);
+        assert_eq!(fec_for(1).unwrap().id(), FecId::ReedSolomon8);
+        assert!(fec_for(7).is_none());
+        assert_eq!(FecId::ReedSolomon8.label(), "rs-gf256");
+    }
+}

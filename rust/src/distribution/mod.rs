@@ -1,0 +1,115 @@
+//! Fleet shard distribution: FEC-protected streaming of container-v2
+//! artifacts over lossy transports, with serve-while-downloading.
+//!
+//! The container design made every tensor an independently decodable
+//! CRC'd record and every transformer layer one contiguous shard extent;
+//! this module is the protocol that exploits it. The shape mirrors the
+//! FLUTE/ALC sender/receiver split (block encoder / block decoder with a
+//! pluggable FEC codec — RFC 6726 / RFC 5510 lineage):
+//!
+//! * [`fec`] — GF(2⁸) arithmetic and a systematic Reed–Solomon erasure
+//!   codec behind the [`fec::FecCodec`] trait, registry-negotiated like
+//!   `codec::codecs` (a [`fec::NoCode`] passthrough is id 0).
+//! * [`sender`] — partitions shards into **record-aligned source
+//!   blocks** (block boundaries never split a record), splits each block
+//!   into `k` source symbols, and emits `k + parity` CRC-framed packets.
+//! * [`transport`] — the packet channel abstraction plus a
+//!   deterministic, seeded fault-injection channel (drop, burst loss,
+//!   reorder, duplicate, bit-flip, truncate) for the robustness sweep.
+//! * [`receiver`] — reassembles packets into blocks, FEC-repairs missing
+//!   source symbols, CRC-verifies **every recovered record** via
+//!   `walk_shard`, and commits files under the store's tmp+rename
+//!   discipline. Nothing unverified ever becomes servable.
+//! * [`availability`] — the per-stage [`availability::AvailabilityMap`]
+//!   the receiver publishes as units commit; the executor's decode gate
+//!   blocks on it, so layer ℓ serves bit-identically while layer ℓ+k is
+//!   still in flight.
+//!
+//! Loss up to the parity budget is invisible: the committed store is
+//! byte-identical to the source. Beyond it, everything degrades into
+//! *structured* [`DistError`]s and a partial-availability report — never
+//! a panic, never a silently corrupt record.
+
+pub mod availability;
+pub mod fec;
+pub mod receiver;
+pub mod sender;
+pub mod transport;
+
+pub use availability::{AvailabilityMap, UNIT_EMBED};
+pub use fec::{fec_for, FecCodec, FecId, FecParams};
+pub use receiver::{RecvReport, Receiver};
+pub use sender::{Manifest, SendReport, Sender, SenderConfig, StreamPlan};
+pub use transport::{FaultPlan, FaultyChannel, LosslessChannel, Transport, TransportStats};
+
+/// Structured distribution-path errors. The receiver's contract is that
+/// every malformed packet, unrecoverable block, or corrupt record maps
+/// to one of these — corruption and loss are *reported*, never panicked
+/// on and never silently committed.
+#[derive(Debug)]
+pub enum DistError {
+    /// packet does not start with the `ECP8` magic
+    BadMagic,
+    /// unknown packet version byte
+    BadVersion(u8),
+    /// packet or manifest shorter than its own framing claims
+    Truncated { need: usize, have: usize },
+    /// packet frame CRC mismatch (bit-flip on the wire)
+    CrcMismatch { stored: u32, computed: u32 },
+    /// a structurally valid packet carries impossible FEC parameters
+    BadParams(&'static str),
+    /// FEC encoding id not in the registry
+    UnknownFec(u8),
+    /// block cannot decode yet: fewer than `need` of its symbols arrived
+    NeedMoreSymbols { have: usize, need: usize },
+    /// packets of one block disagree about its geometry
+    BlockInconsistent {
+        stream: u16,
+        block: u32,
+        what: &'static str,
+    },
+    /// a fully reassembled stream failed record-level CRC verification
+    RecordCorrupt { stream: u16, what: String },
+    /// commit attempted while blocks are still missing
+    Incomplete { missing: usize },
+    Io(String),
+}
+
+impl std::fmt::Display for DistError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DistError::BadMagic => write!(f, "bad magic (not an ECF8 distribution packet)"),
+            DistError::BadVersion(v) => write!(f, "unsupported packet version {v}"),
+            DistError::Truncated { need, have } => {
+                write!(f, "packet truncated: need {need} bytes, have {have}")
+            }
+            DistError::CrcMismatch { stored, computed } => write!(
+                f,
+                "packet CRC mismatch (stored {stored:#010x}, computed {computed:#010x})"
+            ),
+            DistError::BadParams(what) => write!(f, "bad FEC parameters: {what}"),
+            DistError::UnknownFec(id) => write!(f, "unknown FEC encoding id {id}"),
+            DistError::NeedMoreSymbols { have, need } => {
+                write!(f, "block undecodable: {have} of {need} required symbols")
+            }
+            DistError::BlockInconsistent { stream, block, what } => {
+                write!(f, "stream {stream} block {block}: inconsistent packets ({what})")
+            }
+            DistError::RecordCorrupt { stream, what } => {
+                write!(f, "stream {stream}: corrupt record after reassembly ({what})")
+            }
+            DistError::Incomplete { missing } => {
+                write!(f, "transfer incomplete: {missing} blocks missing")
+            }
+            DistError::Io(what) => write!(f, "distribution i/o: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for DistError {}
+
+impl From<std::io::Error> for DistError {
+    fn from(e: std::io::Error) -> Self {
+        DistError::Io(e.to_string())
+    }
+}

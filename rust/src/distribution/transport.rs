@@ -1,0 +1,282 @@
+//! The packet channel abstraction and the seeded fault-injection
+//! channel the robustness sweep runs on.
+//!
+//! [`FaultyChannel`] is deterministic: the same [`FaultPlan`] (seed
+//! included) applied to the same send sequence produces the same
+//! delivered packet sequence, so every loss/corruption scenario in the
+//! tests, the `distribute-sim` CLI, and the Python verify port replays
+//! bit-for-bit. Fault draw order is part of the contract: each `send`
+//! draws exactly four uniforms — drop, duplicate, bit-flip, truncate, in
+//! that order — then conditional draws for flip position/bit, truncate
+//! length, and reorder insertion. Keep `sim_distribution.py` in sync
+//! when changing it.
+
+use crate::util::prng::Xoshiro256;
+use std::collections::VecDeque;
+
+/// Where packets go. In-process for the sim/bench/tests; the trait is
+/// the seam a real datagram socket would implement.
+pub trait Transport {
+    /// Queue one packet (the channel may drop/corrupt/duplicate it).
+    fn send(&mut self, packet: &[u8]);
+
+    /// Pull the next delivered packet, `None` when drained.
+    fn recv(&mut self) -> Option<Vec<u8>>;
+}
+
+/// A lossless in-order channel (the control case).
+#[derive(Default)]
+pub struct LosslessChannel {
+    queue: VecDeque<Vec<u8>>,
+    pub stats: TransportStats,
+}
+
+impl Transport for LosslessChannel {
+    fn send(&mut self, packet: &[u8]) {
+        self.stats.sent += 1;
+        self.stats.delivered += 1;
+        self.queue.push_back(packet.to_vec());
+    }
+
+    fn recv(&mut self) -> Option<Vec<u8>> {
+        self.queue.pop_front()
+    }
+}
+
+/// Deterministic fault model for one channel instance.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// probability a sent packet is dropped (burst trigger included)
+    pub drop_rate: f64,
+    /// when a drop triggers, this many *further* consecutive packets are
+    /// also dropped (0 = independent losses)
+    pub burst_len: u32,
+    /// probability a delivered packet is delivered twice
+    pub dup_rate: f64,
+    /// probability one bit of a delivered packet is flipped
+    pub flip_rate: f64,
+    /// probability a delivered packet is truncated to a random prefix
+    pub truncate_rate: f64,
+    /// delivered packets may be inserted up to this many slots before
+    /// the queue tail (0 = strictly in order)
+    pub reorder_window: usize,
+}
+
+impl FaultPlan {
+    /// No faults at all (still deterministic).
+    pub fn clean(seed: u64) -> Self {
+        Self {
+            seed,
+            drop_rate: 0.0,
+            burst_len: 0,
+            dup_rate: 0.0,
+            flip_rate: 0.0,
+            truncate_rate: 0.0,
+            reorder_window: 0,
+        }
+    }
+
+    /// Pure random loss at `rate`, everything else clean.
+    pub fn loss(seed: u64, rate: f64) -> Self {
+        Self {
+            drop_rate: rate,
+            ..Self::clean(seed)
+        }
+    }
+
+    /// The full gauntlet the fault sweep uses: loss + bursts + reorder +
+    /// duplication + corruption + truncation.
+    pub fn gauntlet(seed: u64, rate: f64) -> Self {
+        Self {
+            seed,
+            drop_rate: rate,
+            burst_len: 2,
+            dup_rate: 0.05,
+            flip_rate: 0.02,
+            truncate_rate: 0.02,
+            reorder_window: 8,
+        }
+    }
+}
+
+/// What the channel did to the traffic — the sim report's loss ledger.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransportStats {
+    pub sent: u64,
+    pub delivered: u64,
+    pub dropped: u64,
+    pub duplicated: u64,
+    pub corrupted: u64,
+    pub truncated: u64,
+    pub reordered: u64,
+}
+
+/// The seeded lossy channel: applies the [`FaultPlan`] to every send.
+pub struct FaultyChannel {
+    plan: FaultPlan,
+    rng: Xoshiro256,
+    queue: VecDeque<Vec<u8>>,
+    burst_left: u32,
+    pub stats: TransportStats,
+}
+
+impl FaultyChannel {
+    pub fn new(plan: FaultPlan) -> Self {
+        Self {
+            plan,
+            rng: Xoshiro256::seed_from_u64(plan.seed),
+            queue: VecDeque::new(),
+            burst_left: 0,
+            stats: TransportStats::default(),
+        }
+    }
+
+    fn deliver(&mut self, packet: Vec<u8>) {
+        let len = self.queue.len();
+        let pos = if self.plan.reorder_window > 0 && len > 0 {
+            let w = self.plan.reorder_window.min(len);
+            let back = self.rng.next_below(w as u64 + 1) as usize;
+            if back > 0 {
+                self.stats.reordered += 1;
+            }
+            len - back
+        } else {
+            len
+        };
+        self.queue.insert(pos, packet);
+        self.stats.delivered += 1;
+    }
+}
+
+impl Transport for FaultyChannel {
+    fn send(&mut self, packet: &[u8]) {
+        self.stats.sent += 1;
+        // fixed draw order (see module docs): every send consumes these
+        // four uniforms whether or not each fault fires
+        let r_drop = self.rng.next_f64();
+        let r_dup = self.rng.next_f64();
+        let r_flip = self.rng.next_f64();
+        let r_trunc = self.rng.next_f64();
+        if self.burst_left > 0 {
+            self.burst_left -= 1;
+            self.stats.dropped += 1;
+            return;
+        }
+        if r_drop < self.plan.drop_rate {
+            self.burst_left = self.plan.burst_len;
+            self.stats.dropped += 1;
+            return;
+        }
+        let mut pkt = packet.to_vec();
+        if r_flip < self.plan.flip_rate && !pkt.is_empty() {
+            let pos = self.rng.next_below(pkt.len() as u64) as usize;
+            let bit = self.rng.next_below(8) as u32;
+            pkt[pos] ^= 1 << bit;
+            self.stats.corrupted += 1;
+        }
+        if r_trunc < self.plan.truncate_rate && !pkt.is_empty() {
+            let keep = self.rng.next_below(pkt.len() as u64) as usize;
+            pkt.truncate(keep);
+            self.stats.truncated += 1;
+        }
+        let dup = r_dup < self.plan.dup_rate;
+        if dup {
+            self.stats.duplicated += 1;
+            self.deliver(pkt.clone());
+        }
+        self.deliver(pkt);
+    }
+
+    fn recv(&mut self) -> Option<Vec<u8>> {
+        self.queue.pop_front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pkts(n: usize) -> Vec<Vec<u8>> {
+        (0..n).map(|i| vec![(i % 251) as u8; 64]).collect()
+    }
+
+    fn drain(t: &mut impl Transport) -> Vec<Vec<u8>> {
+        let mut out = Vec::new();
+        while let Some(p) = t.recv() {
+            out.push(p);
+        }
+        out
+    }
+
+    #[test]
+    fn clean_plan_is_lossless_in_order() {
+        let mut ch = FaultyChannel::new(FaultPlan::clean(1));
+        let sent = pkts(50);
+        for p in &sent {
+            ch.send(p);
+        }
+        assert_eq!(drain(&mut ch), sent);
+        assert_eq!(ch.stats.dropped, 0);
+        assert_eq!(ch.stats.delivered, 50);
+    }
+
+    #[test]
+    fn same_seed_same_fault_sequence() {
+        let plan = FaultPlan::gauntlet(77, 0.2);
+        let mut a = FaultyChannel::new(plan);
+        let mut b = FaultyChannel::new(plan);
+        for p in pkts(200) {
+            a.send(&p);
+            b.send(&p);
+        }
+        assert_eq!(a.stats, b.stats);
+        assert_eq!(drain(&mut a), drain(&mut b));
+    }
+
+    #[test]
+    fn drop_rate_is_roughly_honored() {
+        let mut ch = FaultyChannel::new(FaultPlan::loss(5, 0.3));
+        for p in pkts(2000) {
+            ch.send(&p);
+        }
+        let frac = ch.stats.dropped as f64 / ch.stats.sent as f64;
+        assert!((0.2..0.4).contains(&frac), "drop fraction {frac}");
+        assert_eq!(ch.stats.delivered + ch.stats.dropped, ch.stats.sent);
+    }
+
+    #[test]
+    fn burst_drops_consecutive_packets() {
+        let plan = FaultPlan {
+            burst_len: 3,
+            ..FaultPlan::loss(9, 0.05)
+        };
+        let mut ch = FaultyChannel::new(plan);
+        for p in pkts(1000) {
+            ch.send(&p);
+        }
+        // every trigger costs 1 + up to burst_len packets, so the total
+        // drop fraction must exceed the trigger rate alone
+        let frac = ch.stats.dropped as f64 / ch.stats.sent as f64;
+        assert!(frac > 0.08, "burst amplification missing: {frac}");
+    }
+
+    #[test]
+    fn faults_are_counted_and_bounded() {
+        let mut ch = FaultyChannel::new(FaultPlan::gauntlet(13, 0.1));
+        let sent = pkts(500);
+        for p in &sent {
+            ch.send(p);
+        }
+        let got = drain(&mut ch);
+        assert_eq!(got.len() as u64, ch.stats.delivered);
+        assert!(ch.stats.corrupted > 0);
+        assert!(ch.stats.duplicated > 0);
+        assert!(ch.stats.reordered > 0);
+        // a duplicated packet adds a delivery beyond the sends
+        assert_eq!(
+            ch.stats.delivered,
+            ch.stats.sent - ch.stats.dropped + ch.stats.duplicated
+        );
+    }
+}

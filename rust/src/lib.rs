@@ -11,6 +11,7 @@ pub mod baselines;
 pub mod bench_support;
 pub mod codec;
 pub mod coordinator;
+pub mod distribution;
 pub mod fp8;
 pub mod huffman;
 pub mod model;

@@ -13,6 +13,10 @@
 //!               paged KV cache instead of the batch-level tick loop)
 //!   kv-sim      continuous-vs-static scheduling simulation on the
 //!               synthetic engine: identity, preemption, zero-leak
+//!   send        encode a v2 store into an FEC-protected packet trace
+//!   recv        reassemble a packet trace back into a verified store
+//!   distribute-sim  in-process sender → lossy channel → receiver sweep
+//!               with retransmission rounds and byte-identity check
 //!   zoo         list the model zoo with sizes and paper targets
 
 use ecf8::codec::{codecs, container, decode, encode, CodecId, Ecf8Params, Fp8Format};
@@ -45,6 +49,9 @@ fn main() {
         "gen-model" => cmd_gen_model(args),
         "serve" => cmd_serve(args),
         "kv-sim" => cmd_kv_sim(args),
+        "send" => cmd_send(args),
+        "recv" => cmd_recv(args),
+        "distribute-sim" => cmd_distribute_sim(args),
         "zoo" => cmd_zoo(args),
         "--help" | "-h" | "help" => {
             usage();
@@ -82,6 +89,11 @@ fn usage() {
                        (--continuous for iteration-level KV-paged scheduling)\n\
            kv-sim      --requests N --blocks B  continuous vs static\n\
                                              scheduling sim (synthetic engine)\n\
+           send        <model-dir> --trace <file>  encode a v2 store into an\n\
+                                             FEC-protected packet trace\n\
+           recv        --trace <file> --out <dir>  reassemble + verify a trace\n\
+           distribute-sim --loss R --parity R --seed S  in-process lossy\n\
+                                             transfer sweep, byte-identity check\n\
            zoo                               list models and paper targets\n"
     );
 }
@@ -164,7 +176,12 @@ fn cmd_inspect(raw: Vec<String>) -> anyhow::Result<()> {
             "a v1 .ecf8 container file, or a v2 model directory / index.ecf8i",
         )
         .flag("tensors", "list every tensor record of a v2 store")
-        .flag("verify", "re-read every v2 record and check payload CRCs");
+        .flag("verify", "re-read every v2 record and check payload CRCs")
+        .flag(
+            "repair",
+            "recovery scan: quarantine corrupt/missing records to a sidecar \
+             and report which layers are still servable",
+        );
     let a = cmd.parse(raw).map_err(|e| handle_help(&cmd, e))?;
     let [input] = a.positional() else {
         anyhow::bail!("usage: ecf8 inspect <in.ecf8 | model-dir | index.ecf8i>");
@@ -178,9 +195,57 @@ fn cmd_inspect(raw: Vec<String>) -> anyhow::Result<()> {
         None
     };
     match v2_dir {
+        Some(dir) if a.flag("repair") => inspect_repair(&dir),
         Some(dir) => inspect_v2_store(&dir, a.flag("tensors"), a.flag("verify")),
         None => inspect_v1_file(path),
     }
+}
+
+/// `inspect --repair`: the `repair_scan` recovery pass over a v2 store.
+fn inspect_repair(dir: &std::path::Path) -> anyhow::Result<()> {
+    let report = ecf8::model::store::repair_scan(dir, true)?;
+    println!("recovery scan: {}", dir.display());
+    println!(
+        "records:       {} checked, {} clean, {} quarantined",
+        report.records,
+        report.clean,
+        report.quarantined.len()
+    );
+    if !report.missing_shards.is_empty() {
+        println!("missing shards: {:?}", report.missing_shards);
+    }
+    for q in &report.quarantined {
+        println!(
+            "  CORRUPT {} (shard {} offset {} len {}): {}",
+            q.tensor, q.shard, q.offset, q.len, q.reason
+        );
+    }
+    println!(
+        "servable:      {}/{} transformer layers{}",
+        report.servable_layer_count(),
+        report.layers.len(),
+        if report.other_servable {
+            ", embed/head intact"
+        } else {
+            ", embed/head DAMAGED"
+        }
+    );
+    for (l, ok) in &report.layers {
+        if !ok {
+            println!("  layer {l}: UNSERVABLE");
+        }
+    }
+    match &report.quarantine_path {
+        Some(p) => println!("quarantine:    {}", p.display()),
+        None => println!("quarantine:    clean store, no sidecar written"),
+    }
+    if !report.is_clean() {
+        anyhow::bail!(
+            "{} records quarantined — store is damaged (partially servable)",
+            report.quarantined.len()
+        );
+    }
+    Ok(())
 }
 
 fn inspect_v1_file(path: &std::path::Path) -> anyhow::Result<()> {
@@ -791,6 +856,287 @@ fn cmd_kv_sim(raw: Vec<String>) -> anyhow::Result<()> {
     println!("restores: {}", sched.metrics.resumes);
     println!("leaked blocks: 0");
     Ok(())
+}
+
+/// A [`Transport`](ecf8::distribution::Transport) that journals every
+/// packet to a byte buffer: `u32` LE frame length, then the frame. The
+/// file format `ecf8 send` writes and `ecf8 recv` replays.
+#[derive(Default)]
+struct TraceWriter {
+    buf: Vec<u8>,
+    packets: u64,
+}
+
+impl ecf8::distribution::Transport for TraceWriter {
+    fn send(&mut self, packet: &[u8]) {
+        self.buf.extend_from_slice(&(packet.len() as u32).to_le_bytes());
+        self.buf.extend_from_slice(packet);
+        self.packets += 1;
+    }
+
+    fn recv(&mut self) -> Option<Vec<u8>> {
+        None
+    }
+}
+
+fn sender_config_from(
+    a: &ecf8::util::cli::Args,
+) -> anyhow::Result<ecf8::distribution::SenderConfig> {
+    use ecf8::distribution::{FecId, SenderConfig};
+    let cfg = SenderConfig {
+        fec: if a.flag("no-fec") {
+            FecId::NoCode
+        } else {
+            FecId::ReedSolomon8
+        },
+        parity_ratio: a.get_parse_or("parity", 0.25),
+        block_bytes: a.get_parse_or::<u32>("block-kb", 64) << 10,
+        symbol_bytes: a.get_parse_or("symbol-bytes", 1024),
+    };
+    anyhow::ensure!(
+        cfg.parity_ratio >= 0.0 && cfg.parity_ratio <= 2.0,
+        "--parity must be in [0, 2]"
+    );
+    Ok(cfg)
+}
+
+fn cmd_send(raw: Vec<String>) -> anyhow::Result<()> {
+    let cmd = Command::new(
+        "send",
+        "encode a v2 model directory into an FEC-protected packet trace",
+    )
+    .arg("model-dir", "v2 store directory (index.ecf8i + shards)")
+    .opt("trace", "output packet-trace file (u32 LE length-prefixed frames)")
+    .opt_default("parity", "parity symbols per block as a ratio of source symbols", "0.25")
+    .opt_default("block-kb", "source-block target size in KiB (record-aligned)", "64")
+    .opt_default("symbol-bytes", "FEC symbol size in bytes", "1024")
+    .flag("no-fec", "negotiate the no-code passthrough instead of RS-GF(256)");
+    let a = cmd.parse(raw).map_err(|e| handle_help(&cmd, e))?;
+    let [input] = a.positional() else {
+        anyhow::bail!("usage: ecf8 send <model-dir> --trace <file>");
+    };
+    let trace = a
+        .get("trace")
+        .ok_or_else(|| anyhow::anyhow!("--trace required"))?;
+    let cfg = sender_config_from(&a)?;
+    let sender = ecf8::distribution::Sender::from_dir(std::path::Path::new(input), &cfg)
+        .map_err(|e| anyhow::anyhow!("planning {input}: {e}"))?;
+    let mut t = TraceWriter::default();
+    let report = sender
+        .send_all(&mut t)
+        .map_err(|e| anyhow::anyhow!("encoding {input}: {e}"))?;
+    std::fs::write(trace, &t.buf)?;
+    println!(
+        "{} -> {}: {} packets ({} source + {} parity + {} control)",
+        input, trace, report.packets, report.source_packets, report.parity_packets,
+        report.control_packets
+    );
+    println!(
+        "payload:       {} in {} streams",
+        humanize::bytes(report.payload_bytes),
+        sender.manifest().streams.len()
+    );
+    println!(
+        "wire:          {} ({:.1}% FEC + framing overhead)",
+        humanize::bytes(report.wire_bytes),
+        (report.wire_bytes as f64 / report.payload_bytes.max(1) as f64 - 1.0) * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_recv(raw: Vec<String>) -> anyhow::Result<()> {
+    let cmd = Command::new(
+        "recv",
+        "reassemble a packet trace into a CRC-verified v2 store",
+    )
+    .opt("trace", "input packet-trace file from `ecf8 send`")
+    .opt("out", "directory to commit the reassembled store into");
+    let a = cmd.parse(raw).map_err(|e| handle_help(&cmd, e))?;
+    let trace = a
+        .get("trace")
+        .ok_or_else(|| anyhow::anyhow!("--trace required"))?;
+    let out = a.get("out").ok_or_else(|| anyhow::anyhow!("--out required"))?;
+    let data = std::fs::read(trace)?;
+    let mut rx = ecf8::distribution::Receiver::new(std::path::Path::new(out));
+    let mut pos = 0usize;
+    while pos < data.len() {
+        anyhow::ensure!(pos + 4 <= data.len(), "trace truncated mid length prefix");
+        let len = u32::from_le_bytes(data[pos..pos + 4].try_into().unwrap()) as usize;
+        pos += 4;
+        anyhow::ensure!(pos + len <= data.len(), "trace truncated mid frame");
+        // per-frame errors are structured and tallied in the report
+        let _ = rx.ingest(&data[pos..pos + len]);
+        pos += len;
+    }
+    let verdict = rx.finish();
+    let report = rx.report();
+    println!(
+        "{} -> {}: {} packets in, {} rejected, {} redundant",
+        trace, out, report.packets, report.bad_packets, report.redundant
+    );
+    println!(
+        "blocks:        {} decoded, {} FEC-repaired",
+        report.blocks_decoded, report.blocks_repaired
+    );
+    println!(
+        "committed:     {} files, {} (tmp+rename, record CRCs verified)",
+        report.streams_committed,
+        humanize::bytes(report.bytes_committed)
+    );
+    for e in &report.errors {
+        println!("  error: {e}");
+    }
+    match verdict {
+        Ok(_) => {
+            println!("result:        complete — store verified byte-for-byte");
+            Ok(())
+        }
+        Err(e) => anyhow::bail!("incomplete transfer: {e}"),
+    }
+}
+
+fn cmd_distribute_sim(raw: Vec<String>) -> anyhow::Result<()> {
+    use ecf8::distribution::{AvailabilityMap, FaultPlan, FaultyChannel, Receiver, Sender};
+    let cmd = Command::new(
+        "distribute-sim",
+        "in-process sender → seeded lossy channel → receiver, with retransmission",
+    )
+    .opt_default("model", "zoo model to synthesize and stream", "tiny-llm-7m")
+    .opt_default("loss", "packet drop probability", "0.2")
+    .opt_default("parity", "parity symbols per block as a ratio of source symbols", "0.25")
+    .opt_default("seed", "fault + synthesis rng seed", "7")
+    .opt_default("rounds", "max retransmission rounds after the first pass", "8")
+    .opt_default("block-kb", "source-block target size in KiB", "64")
+    .opt_default("symbol-bytes", "FEC symbol size in bytes", "1024")
+    .opt_default("shard-kb", "shard rollover size in KiB when packing", "1024")
+    .opt("work", "working directory (default: a fresh temp dir, removed after)")
+    .flag("gauntlet", "full fault gauntlet (bursts, reorder, dup, flip, truncate)")
+    .flag("no-fec", "negotiate the no-code passthrough instead of RS-GF(256)")
+    .flag(
+        "expect-identical",
+        "exit nonzero unless the transfer completes byte-identically",
+    );
+    let a = cmd.parse(raw).map_err(|e| handle_help(&cmd, e))?;
+    let name = a.get_or("model", "tiny-llm-7m");
+    let m = zoo_config::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {name} (see `ecf8 zoo`)"))?;
+    let loss: f64 = a.get_parse_or("loss", 0.2);
+    let seed: u64 = a.get_parse_or("seed", 7);
+    let rounds: usize = a.get_parse_or("rounds", 8);
+    let cfg = sender_config_from(&a)?;
+    let shard_bytes = a.get_parse_or::<u64>("shard-kb", 1024) << 10;
+
+    let (work, ephemeral) = match a.get("work") {
+        Some(w) => (std::path::PathBuf::from(w), false),
+        None => (
+            std::env::temp_dir().join(format!("ecf8-distribute-sim-{}", std::process::id())),
+            true,
+        ),
+    };
+    std::fs::remove_dir_all(&work).ok();
+    let src_root = work.join("src");
+    let dst = work.join("recv");
+    let model = CompressedModel::synthesize(&m, seed, None);
+    ModelStore::new(&src_root).save_v2(&model, shard_bytes)?;
+    let src = src_root.join(m.name);
+
+    let sender = Sender::from_dir(&src, &cfg).map_err(|e| anyhow::anyhow!("planning: {e}"))?;
+    let plan = if a.flag("gauntlet") {
+        FaultPlan::gauntlet(seed, loss)
+    } else {
+        FaultPlan::loss(seed, loss)
+    };
+    let mut ch = FaultyChannel::new(plan);
+    let map = std::sync::Arc::new(AvailabilityMap::for_layers(m.n_layers));
+    let mut rx = Receiver::new(&dst);
+    rx.set_availability(std::sync::Arc::clone(&map));
+
+    let mut send = sender
+        .send_all(&mut ch)
+        .map_err(|e| anyhow::anyhow!("first pass: {e}"))?;
+    rx.drain(&mut ch);
+    let mut used_rounds = 0usize;
+    for _ in 0..rounds {
+        if rx.is_complete() {
+            break;
+        }
+        let missing = rx.missing_blocks();
+        send.absorb(
+            sender
+                .send_blocks(&mut ch, &missing)
+                .map_err(|e| anyhow::anyhow!("retransmit: {e}"))?,
+        );
+        rx.drain(&mut ch);
+        used_rounds += 1;
+    }
+    let verdict = rx.finish();
+    let report = rx.report().clone();
+    let stats = ch.stats;
+
+    println!(
+        "channel:       {} rate {loss} seed {seed}: {} sent, {} delivered, {} dropped, \
+         {} dup, {} flipped, {} truncated, {} reordered",
+        if a.flag("gauntlet") { "gauntlet" } else { "loss" },
+        stats.sent, stats.delivered, stats.dropped, stats.duplicated, stats.corrupted,
+        stats.truncated, stats.reordered
+    );
+    println!(
+        "fec:           {} (parity ratio {:.2}), {} source + {} parity packets",
+        cfg.fec.label(),
+        cfg.parity_ratio,
+        send.source_packets,
+        send.parity_packets
+    );
+    println!(
+        "receiver:      {} packets, {} rejected, {} redundant; {} blocks decoded, \
+         {} FEC-repaired; {} retransmission rounds",
+        report.packets, report.bad_packets, report.redundant, report.blocks_decoded,
+        report.blocks_repaired, used_rounds
+    );
+    println!(
+        "goodput:       {} payload over {} wire ({:.1}%)",
+        humanize::bytes(send.payload_bytes),
+        humanize::bytes(send.wire_bytes),
+        send.payload_bytes as f64 / send.wire_bytes.max(1) as f64 * 100.0
+    );
+    let ready = map.snapshot().iter().filter(|&&r| r).count();
+    println!("availability:  {ready}/{} units servable", map.n_units());
+
+    let outcome = match verdict {
+        Ok(_) => {
+            // byte-identity against the source artifact
+            let n_shards = sender.manifest().streams.len() as u32 - 1;
+            let mut identical = std::fs::read(src.join(container::INDEX_FILE))?
+                == std::fs::read(dst.join(container::INDEX_FILE))?;
+            for s in 0..n_shards {
+                identical &= std::fs::read(src.join(container::shard_file_name(s)))?
+                    == std::fs::read(dst.join(container::shard_file_name(s)))?;
+            }
+            if identical {
+                println!("result:        complete — byte-identical to the source store");
+                Ok(())
+            } else {
+                Err(anyhow::anyhow!("receiver committed non-identical bytes"))
+            }
+        }
+        Err(e) => {
+            println!("result:        structured degradation — {e}");
+            println!(
+                "               (committed files verified; re-request would resume \
+                 from {} missing blocks)",
+                report.retransmit_blocks.max(1)
+            );
+            if a.flag("expect-identical") {
+                Err(anyhow::anyhow!("--expect-identical set but transfer incomplete: {e}"))
+            } else {
+                Ok(())
+            }
+        }
+    };
+    if ephemeral {
+        std::fs::remove_dir_all(&work).ok();
+    }
+    outcome
 }
 
 fn cmd_zoo(_raw: Vec<String>) -> anyhow::Result<()> {

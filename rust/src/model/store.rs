@@ -76,6 +76,10 @@ pub struct CompressedModel {
     /// per-transformer-layer shard extents, carried over from a mapped
     /// [`LazyModel`] load — the decode-ahead stage's `madvise` targets
     layer_extents: Vec<Option<ByteView>>,
+    /// serve-while-downloading barrier: when set, the executor's decode
+    /// gate blocks on this map before decoding each stage (see
+    /// `distribution::AvailabilityMap`; unit indexing = stage indexing)
+    stage_gate: Option<Arc<crate::distribution::AvailabilityMap>>,
 }
 
 fn index_of(tensors: &[(TensorSpec, CompressedTensor)]) -> HashMap<String, usize> {
@@ -108,6 +112,7 @@ impl CompressedModel {
             tensors,
             index,
             layer_extents: Vec::new(),
+            stage_gate: None,
         }
     }
 
@@ -118,6 +123,7 @@ impl CompressedModel {
             tensors,
             index,
             layer_extents: Vec::new(),
+            stage_gate: None,
         }
     }
 
@@ -160,6 +166,30 @@ impl CompressedModel {
     /// Number of layers with an advisable extent attached.
     pub fn advisable_layers(&self) -> usize {
         self.layer_extents.iter().flatten().count()
+    }
+
+    /// Attach a serve-while-downloading availability barrier: the
+    /// executor's decode gate will block on it per stage (unit 0 =
+    /// embedding stage, `1..=L` = transformer layers, `L + 1` = head).
+    /// Publishing is the receiver's job (`distribution::Receiver`).
+    pub fn set_stage_gate(&mut self, gate: Arc<crate::distribution::AvailabilityMap>) {
+        self.stage_gate = Some(gate);
+    }
+
+    pub fn has_stage_gate(&self) -> bool {
+        self.stage_gate.is_some()
+    }
+
+    /// Block until executor stage `stage` is servable. A no-op without a
+    /// gate (fully-local model) — returns whether it actually gated.
+    pub fn gate_stage(&self, stage: usize) -> bool {
+        match &self.stage_gate {
+            Some(map) => {
+                map.wait(stage);
+                true
+            }
+            None => false,
+        }
     }
 
     /// Append a tensor, keeping the name index coherent.
@@ -758,6 +788,54 @@ impl LazyModel {
         })
     }
 
+    /// Open a directory that a `distribution::Receiver` is still filling:
+    /// the index must be committed, but shard files may not exist yet.
+    /// Every shard becomes a deferred source that materializes (one
+    /// whole-shard read) on first record access — by construction after
+    /// the availability barrier for its stage opened, i.e. after the
+    /// receiver committed and verified it. Late-arriving shards are
+    /// therefore read-copied rather than mapped even on the real-mmap
+    /// tier: mapping a file that is later replaced by the receiver's
+    /// rename would keep serving the unlinked inode, which is correct
+    /// but wastes the page cache; a plain read of the committed file is
+    /// the simpler contract.
+    pub fn open_streaming(dir: &Path) -> Result<Self> {
+        let index_bytes = std::fs::read(dir.join(INDEX_FILE))
+            .with_context(|| format!("reading {} in {}", INDEX_FILE, dir.display()))?;
+        let index = TensorIndex::deserialize(&index_bytes)?;
+        let mut shards = Vec::with_capacity(index.n_shards as usize);
+        for s in 0..index.n_shards {
+            let path = dir.join(shard_file_name(s));
+            if path.exists() {
+                // already committed: validate its header like open_mode
+                let mut f = std::fs::File::open(&path)
+                    .with_context(|| format!("opening shard {}", path.display()))?;
+                let mut head = [0u8; container::SHARD_HEADER_BYTES];
+                f.read_exact(&mut head)
+                    .with_context(|| format!("shard header of {}", path.display()))?;
+                let claimed = container::parse_shard_header(&head)?;
+                if claimed as u32 != s {
+                    bail!("shard {} claims index {claimed}", path.display());
+                }
+            }
+            shards.push(ShardSource::Mapped(MappedShard::lazy(path)));
+        }
+        let by_name = index
+            .entries
+            .iter()
+            .enumerate()
+            .map(|(i, e)| (e.name.clone(), i))
+            .collect();
+        Ok(Self {
+            index,
+            by_name,
+            shards,
+            mode: AccessMode::Mapped,
+            reads: AtomicU64::new(0),
+            bytes_copied: AtomicU64::new(0),
+        })
+    }
+
     pub fn mode(&self) -> AccessMode {
         self.mode
     }
@@ -1079,6 +1157,227 @@ impl LazyModel {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Recovery scan (`ecf8 inspect --repair`)
+// ---------------------------------------------------------------------------
+
+/// Sidecar file [`repair_scan`] writes next to the index when it finds
+/// corrupt records: one line per quarantined record,
+/// `tensor<TAB>shard<TAB>offset<TAB>len<TAB>reason`.
+pub const QUARANTINE_FILE: &str = "quarantine.tsv";
+
+/// One record [`repair_scan`] could not verify.
+#[derive(Debug, Clone)]
+pub struct QuarantinedRecord {
+    pub tensor: String,
+    pub shard: u32,
+    pub offset: u64,
+    pub len: u64,
+    /// what failed: missing shard, bounds, header parse, length or CRC
+    pub reason: String,
+}
+
+/// What [`repair_scan`] found: every index entry re-verified against the
+/// bytes on disk, corrupt ones quarantined, and the per-layer servability
+/// that follows (a layer serves iff every one of its records verifies).
+#[derive(Debug, Default)]
+pub struct RepairReport {
+    /// index entries checked (all of them, even in damaged shards)
+    pub records: usize,
+    /// entries whose header, length, and payload CRC all verified
+    pub clean: usize,
+    pub quarantined: Vec<QuarantinedRecord>,
+    /// shard ids whose file is absent or unreadable
+    pub missing_shards: Vec<u32>,
+    /// `(layer, servable)` for every transformer layer in the index
+    pub layers: Vec<(u32, bool)>,
+    /// embedding/head/other non-layer records all verified
+    pub other_servable: bool,
+    /// where the quarantine sidecar was written, if anything was corrupt
+    pub quarantine_path: Option<PathBuf>,
+}
+
+impl RepairReport {
+    pub fn is_clean(&self) -> bool {
+        self.quarantined.is_empty() && self.missing_shards.is_empty()
+    }
+
+    pub fn servable_layer_count(&self) -> usize {
+        self.layers.iter().filter(|(_, ok)| *ok).count()
+    }
+}
+
+/// Re-verify a v2 model directory record by record — the recovery
+/// counterpart of `walk_shard`, driven by the index so damage is
+/// attributed to *tensors*, not byte ranges. Never fails on corruption:
+/// every bad record becomes a [`QuarantinedRecord`] (and a line in the
+/// [`QUARANTINE_FILE`] sidecar when `write_quarantine` is set), and the
+/// report says which layers are still servable from the intact records.
+/// Only a missing/unparseable index — nothing to attribute against — is
+/// an error.
+pub fn repair_scan(dir: &Path, write_quarantine: bool) -> Result<RepairReport> {
+    let index_bytes = std::fs::read(dir.join(INDEX_FILE))
+        .with_context(|| format!("reading {} in {}", INDEX_FILE, dir.display()))?;
+    let index = TensorIndex::deserialize(&index_bytes)?;
+    let mut report = RepairReport {
+        records: index.entries.len(),
+        ..RepairReport::default()
+    };
+
+    let mut shards: HashMap<u32, Option<Vec<u8>>> = HashMap::new();
+    for s in 0..index.n_shards {
+        let path = dir.join(shard_file_name(s));
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => match container::parse_shard_header(&b) {
+                Ok(claimed) if claimed as u32 == s => Some(b),
+                Ok(claimed) => {
+                    report.missing_shards.push(s);
+                    report
+                        .quarantined
+                        .push(shard_wide(&index, s, format!("shard claims index {claimed}")));
+                    None
+                }
+                Err(e) => {
+                    report.missing_shards.push(s);
+                    report
+                        .quarantined
+                        .push(shard_wide(&index, s, format!("bad shard header: {e}")));
+                    None
+                }
+            },
+            Err(e) => {
+                report.missing_shards.push(s);
+                report
+                    .quarantined
+                    .push(shard_wide(&index, s, format!("unreadable: {e}")));
+                None
+            }
+        };
+        shards.insert(s, bytes);
+    }
+
+    for e in &index.entries {
+        let Some(Some(bytes)) = shards.get(&e.shard) else {
+            // the shard-wide quarantine line above already covers it
+            continue;
+        };
+        match verify_record(bytes, e) {
+            Ok(()) => report.clean += 1,
+            Err(reason) => report.quarantined.push(QuarantinedRecord {
+                tensor: e.name.clone(),
+                shard: e.shard,
+                offset: e.offset,
+                len: e.len,
+                reason,
+            }),
+        }
+    }
+
+    // servability: a layer is as good as its worst record — a record is
+    // bad if it was quarantined by name OR lives in a dead shard
+    let bad: std::collections::HashSet<&str> = report
+        .quarantined
+        .iter()
+        .map(|q| q.tensor.as_str())
+        .collect();
+    let entry_ok =
+        |e: &IndexEntry| !bad.contains(e.name.as_str()) && !report.missing_shards.contains(&e.shard);
+    let mut layers: Vec<u32> = index
+        .entries
+        .iter()
+        .filter(|e| BlockType::code_is_layer_weight(e.block_type))
+        .map(|e| e.layer)
+        .collect();
+    layers.sort_unstable();
+    layers.dedup();
+    report.layers = layers
+        .into_iter()
+        .map(|l| {
+            let ok = index
+                .entries
+                .iter()
+                .filter(|e| e.layer == l && BlockType::code_is_layer_weight(e.block_type))
+                .all(&entry_ok);
+            (l, ok)
+        })
+        .collect();
+    report.other_servable = index
+        .entries
+        .iter()
+        .filter(|e| !BlockType::code_is_layer_weight(e.block_type))
+        .all(&entry_ok);
+
+    if write_quarantine && !report.quarantined.is_empty() {
+        let mut out = String::new();
+        for q in &report.quarantined {
+            out.push_str(&format!(
+                "{}\t{}\t{}\t{}\t{}\n",
+                q.tensor, q.shard, q.offset, q.len, q.reason
+            ));
+        }
+        let path = dir.join(QUARANTINE_FILE);
+        std::fs::write(&path, out)
+            .with_context(|| format!("writing {}", path.display()))?;
+        report.quarantine_path = Some(path);
+    }
+    Ok(report)
+}
+
+/// A whole-shard failure attributed to every entry at once via one
+/// sentinel quarantine line (the per-layer logic treats any layer with a
+/// record in that shard as unservable).
+fn shard_wide(index: &TensorIndex, shard: u32, reason: String) -> QuarantinedRecord {
+    let len = index
+        .entries
+        .iter()
+        .filter(|e| e.shard == shard)
+        .map(|e| e.len)
+        .sum();
+    QuarantinedRecord {
+        tensor: "<shard-wide>".to_string(),
+        shard,
+        offset: 0,
+        len,
+        reason,
+    }
+}
+
+fn verify_record(shard: &[u8], e: &IndexEntry) -> std::result::Result<(), String> {
+    let off = usize::try_from(e.offset).map_err(|_| "offset overflows usize".to_string())?;
+    let len = usize::try_from(e.len).map_err(|_| "length overflows usize".to_string())?;
+    let end = off.checked_add(len).ok_or("offset + length overflows")?;
+    if end > shard.len() {
+        return Err(format!(
+            "record [{off}, {end}) past shard end {}",
+            shard.len()
+        ));
+    }
+    let record = &shard[off..end];
+    let header = container::RecordHeader::parse(record).map_err(|e| format!("header: {e}"))?;
+    if header.record_len() != e.len {
+        return Err(format!(
+            "length mismatch: header says {}, index says {}",
+            header.record_len(),
+            e.len
+        ));
+    }
+    if header.payload_crc != e.payload_crc {
+        return Err(format!(
+            "header/index CRC disagree ({:#010x} vs {:#010x})",
+            header.payload_crc, e.payload_crc
+        ));
+    }
+    let payload = &record[container::RECORD_HEADER_BYTES..];
+    let computed = crate::util::crc32::crc32(payload);
+    if computed != e.payload_crc {
+        return Err(format!(
+            "payload CRC mismatch (stored {:#010x}, computed {computed:#010x})",
+            e.payload_crc
+        ));
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1356,5 +1655,91 @@ mod tests {
             let original = generate_tensor_fp8(spec, 4);
             assert_eq!(tensor.decode_to_vec(), original, "{}", spec.name);
         }
+    }
+
+    #[test]
+    fn repair_scan_quarantines_flipped_record_and_reports_servable_layers() {
+        use crate::util::prng::Xoshiro256;
+        let plane = |n: usize, seed: u64| -> Vec<u8> {
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            (0..n)
+                .map(|_| {
+                    let x = (crate::util::sampling::normal(&mut rng) * 0.05) as f32;
+                    crate::fp8::F8E4M3::from_f32(x).to_bits()
+                })
+                .collect()
+        };
+        let spec = |name: &str, layer: usize, bt: BlockType| TensorSpec {
+            name: name.to_string(),
+            rows: 20,
+            cols: 100,
+            block_type: bt,
+            layer,
+            alpha: 0.0,
+            gamma: 0.0,
+            row_sigma: 0.0,
+        };
+        let tensors = vec![
+            (spec("embed", 0, BlockType::Embedding), plane(2_000, 1)),
+            (spec("layers.0.w", 0, BlockType::AttnQkv), plane(2_000, 2)),
+            (spec("layers.1.w", 1, BlockType::AttnQkv), plane(2_000, 3)),
+        ]
+        .into_iter()
+        .map(|(s, d)| {
+            (
+                s,
+                codecs::compress_auto(&d, Fp8Format::E4M3, Ecf8Params::default()),
+            )
+        })
+        .collect();
+        let m = CompressedModel::from_tensors("repairable".to_string(), tensors);
+        let dir = std::env::temp_dir().join("ecf8_store_repair_scan");
+        std::fs::remove_dir_all(&dir).ok();
+        let store = ModelStore::new(&dir);
+        store.save_v2(&m, 64 << 20).unwrap();
+        let model_dir = dir.join("repairable");
+
+        // pristine store: everything clean, every layer servable
+        let r = repair_scan(&model_dir, true).unwrap();
+        assert!(r.is_clean());
+        assert_eq!(r.records, 3);
+        assert_eq!(r.clean, 3);
+        assert_eq!(r.layers, vec![(0, true), (1, true)]);
+        assert!(r.other_servable);
+        assert!(r.quarantine_path.is_none(), "clean scan writes no sidecar");
+
+        // flip one payload byte of layers.0.w on disk
+        let lazy = LazyModel::open(&model_dir).unwrap();
+        let e = lazy
+            .index()
+            .entries
+            .iter()
+            .find(|e| e.name == "layers.0.w")
+            .unwrap()
+            .clone();
+        let shard_path = model_dir.join(shard_file_name(e.shard));
+        let mut bytes = std::fs::read(&shard_path).unwrap();
+        bytes[e.offset as usize + container::RECORD_HEADER_BYTES + 7] ^= 0x40;
+        std::fs::write(&shard_path, &bytes).unwrap();
+
+        let r = repair_scan(&model_dir, true).unwrap();
+        assert!(!r.is_clean());
+        assert_eq!(r.clean, 2);
+        assert_eq!(r.quarantined.len(), 1);
+        assert_eq!(r.quarantined[0].tensor, "layers.0.w");
+        assert!(r.quarantined[0].reason.contains("CRC"), "{}", r.quarantined[0].reason);
+        assert_eq!(r.layers, vec![(0, false), (1, true)]);
+        assert_eq!(r.servable_layer_count(), 1);
+        assert!(r.other_servable, "embedding record is untouched");
+        let sidecar = std::fs::read_to_string(r.quarantine_path.unwrap()).unwrap();
+        assert!(sidecar.contains("layers.0.w"), "{sidecar}");
+
+        // a vanished shard quarantines shard-wide and kills every layer in it
+        std::fs::remove_file(&shard_path).unwrap();
+        let r = repair_scan(&model_dir, false).unwrap();
+        assert_eq!(r.missing_shards, vec![e.shard]);
+        assert!(r.layers.iter().all(|(_, ok)| !ok), "single-shard store");
+        assert!(!r.other_servable);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -282,6 +282,18 @@ impl LlmExecutor {
                 model.drop_layer(stage - 3);
             }
         };
+        // serve-while-downloading: when the model carries an availability
+        // barrier (a `distribution::Receiver` is still committing its
+        // shards), hold each stage's decode until that stage's bytes are
+        // on disk — stage indices match availability units exactly
+        let gate = move |stage: usize| {
+            model.gate_stage(stage);
+        };
+        let gate_opt: Option<&(dyn Fn(usize) + Sync)> = if model.has_stage_gate() {
+            Some(&gate)
+        } else {
+            None
+        };
         decode_stage::with_stages_decoded(
             &mut self.jit,
             pool.as_deref(),
@@ -289,6 +301,7 @@ impl LlmExecutor {
             &stages,
             observer,
             Some(&advise),
+            gate_opt,
             |stage, arena| -> Result<()> {
                 if stage == 0 {
                     x = embed_art.run_f32(&[

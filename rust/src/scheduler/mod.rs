@@ -47,8 +47,8 @@ pub mod policy;
 pub use iteration::{IterationBatch, IterationEngine, SeqSlot, SyntheticIterationEngine};
 pub use kv_cache::{KvCacheConfig, KvCacheManager, KvError, KvStats};
 pub use policy::{
-    run_static, ContinuousReport, ContinuousScheduler, ContinuousServer, GenRequest, GenResponse,
-    SchedConfig, StepReport,
+    run_static, ContinuousReport, ContinuousScheduler, ContinuousServer, FinishReason, GenRequest,
+    GenResponse, SchedConfig, StepReport,
 };
 
 use std::sync::{Arc, Mutex};

@@ -54,6 +54,12 @@ pub struct GenRequest {
     /// higher admits (and survives preemption) first
     pub priority: u8,
     pub arrived: Instant,
+    /// optional service deadline: a request still *waiting* at this
+    /// instant is shed with a structured [`FinishReason::Expired`]
+    /// response instead of being admitted (`>=` — exactly at the
+    /// deadline counts as expired). A queueing SLO only: sequences
+    /// already running are never killed by it.
+    pub deadline: Option<Instant>,
 }
 
 impl GenRequest {
@@ -72,6 +78,7 @@ impl GenRequest {
             max_new_tokens,
             priority: 0,
             arrived,
+            deadline: None,
         }
     }
 
@@ -79,20 +86,57 @@ impl GenRequest {
         self.priority = priority;
         self
     }
+
+    pub fn with_deadline(mut self, deadline: Instant) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+}
+
+/// How a generation ended — completion is the quiet case; expiry is
+/// structured so callers can tell "served" from "shed at the deadline"
+/// without sniffing for empty token vectors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FinishReason {
+    /// generated its full `max_new_tokens` budget
+    #[default]
+    Completed,
+    /// shed while waiting: the deadline passed before admission
+    Expired,
 }
 
 /// A finished generation.
 #[derive(Debug, Clone)]
 pub struct GenResponse {
     pub id: u64,
-    /// the generated tokens (prompt excluded)
+    /// the generated tokens (prompt excluded; empty when expired)
     pub tokens: Vec<i32>,
-    /// arrival → first generated token
+    /// arrival → first generated token (0 when expired — never ran)
     pub ttft_s: f64,
-    /// arrival → last generated token
+    /// arrival → last generated token (arrival → shed when expired)
     pub latency_s: f64,
     /// times this sequence was evicted and restored
     pub preemptions: u32,
+    pub finish: FinishReason,
+}
+
+impl GenResponse {
+    /// True for a normally completed generation.
+    pub fn is_complete(&self) -> bool {
+        self.finish == FinishReason::Completed
+    }
+
+    /// The structured shed-at-deadline response (no tokens generated).
+    pub fn expired(req: &GenRequest, now: Instant) -> Self {
+        Self {
+            id: req.id,
+            tokens: Vec::new(),
+            ttft_s: 0.0,
+            latency_s: now.saturating_duration_since(req.arrived).as_secs_f64(),
+            preemptions: 0,
+            finish: FinishReason::Expired,
+        }
+    }
 }
 
 /// Continuous-scheduler knobs.
@@ -238,6 +282,23 @@ impl ContinuousScheduler {
     /// One scheduling iteration (see the module docs for the phases).
     pub fn step<E: IterationEngine>(&mut self, engine: &mut E) -> Result<StepReport> {
         let mut report = StepReport::default();
+
+        // 0. shed expired waiters before anything admits: a request
+        // whose deadline passed while queued gets a structured
+        // `Expired` response and never touches the KV pool (no
+        // register, so the leak check stays trivially clean)
+        let now = self.clock.now();
+        let mut w = 0;
+        while w < self.waiting.len() {
+            match self.waiting[w].1.deadline {
+                Some(d) if now >= d => {
+                    let (_, req) = self.waiting.remove(w);
+                    self.metrics.expired += 1;
+                    report.responses.push(GenResponse::expired(&req, now));
+                }
+                _ => w += 1,
+            }
+        }
 
         // 1. resume, oldest preemption first (head-of-line)
         while let Some(front) = self.preempted.front() {
@@ -385,6 +446,7 @@ impl ContinuousScheduler {
                         .as_secs_f64(),
                     latency_s: now.saturating_duration_since(seq.req.arrived).as_secs_f64(),
                     preemptions: seq.preemptions,
+                    finish: FinishReason::Completed,
                 });
             } else {
                 idx += 1;
@@ -515,6 +577,7 @@ pub fn run_static<E: IterationEngine>(
                             .saturating_duration_since(group[i].arrived)
                             .as_secs_f64(),
                         preemptions: 0,
+                        finish: FinishReason::Completed,
                     });
                 }
             }
@@ -843,6 +906,55 @@ mod tests {
         assert!(!sched.has_work(), "drained");
         assert!(preempt_seen, "growth past the pool must preempt");
         assert_eq!(responses.len(), 3);
+        sched.kv.leak_check().unwrap();
+    }
+
+    #[test]
+    fn expired_waiters_shed_exactly_at_deadline() {
+        let vocab = 16;
+        let clock = SimClock::new();
+        let mut sched = ContinuousScheduler::new(
+            SchedConfig { max_running: 1 },
+            kv_cfg(64),
+            clock.clone(),
+        );
+        let t0 = clock.now();
+        // width 1: id 0 occupies the slot, so 1–3 queue. 1 carries a
+        // near deadline, 2 a distant one, 3 none.
+        sched.submit(GenRequest::at(0, vec![1, 2], 4, t0));
+        sched.submit(
+            GenRequest::at(1, vec![1, 2], 4, t0).with_deadline(t0 + Duration::from_millis(10)),
+        );
+        sched.submit(
+            GenRequest::at(2, vec![1, 2], 4, t0).with_deadline(t0 + Duration::from_secs(60)),
+        );
+        sched.submit(GenRequest::at(3, vec![1, 2], 4, t0));
+        let mut eng = SyntheticIterationEngine::instant(vocab);
+
+        // one tick before id 1's deadline: nothing sheds
+        clock.advance(Duration::from_millis(10) - Duration::from_nanos(1));
+        let r = sched.step(&mut eng).unwrap();
+        assert!(r.responses.is_empty());
+        assert_eq!(sched.metrics.expired, 0);
+
+        // exactly at the deadline: shed (>= — mirrors the batcher)
+        clock.advance(Duration::from_nanos(1));
+        let r = sched.step(&mut eng).unwrap();
+        assert_eq!(r.responses.len(), 1, "structured response for the shed request");
+        assert_eq!(r.responses[0].id, 1);
+        assert_eq!(r.responses[0].finish, FinishReason::Expired);
+        assert!(r.responses[0].tokens.is_empty());
+        assert!(!r.responses[0].is_complete());
+        assert_eq!(sched.metrics.expired, 1);
+
+        // everyone else — including far-deadline id 2 — completes
+        let done = by_id(sched.run_to_completion(&mut eng).unwrap());
+        assert_eq!(done.len(), 3);
+        for id in [0u64, 2, 3] {
+            assert_eq!(done[&id].finish, FinishReason::Completed);
+            assert_eq!(done[&id].tokens.len(), 4, "request {id}");
+        }
+        // an expired request never registered KV, so nothing can leak
         sched.kv.leak_check().unwrap();
     }
 

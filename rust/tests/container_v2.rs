@@ -264,6 +264,7 @@ fn lazy_layer_load_drives_decode_stage_bit_exact() {
         &stages,
         None,
         None,
+        None,
         |l, arena| -> Result<(), String> {
             assert_eq!(arena.len(), expect[l].len());
             for (i, want) in expect[l].iter().enumerate() {

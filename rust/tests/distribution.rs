@@ -1,0 +1,349 @@
+//! Fleet distribution end to end: a packed v2 store streamed through the
+//! seeded lossy transport must come out **byte-identical** whenever loss
+//! stays within the parity budget (retransmission rounds included), must
+//! serve **bit-identically while still downloading** behind the
+//! availability barrier, and must degrade into structured errors — never
+//! panics, never silently corrupt committed files — when loss exceeds
+//! the budget. This is the ISSUE-6 acceptance scenario.
+
+use ecf8::codec::container::{shard_file_name, walk_shard, INDEX_FILE};
+use ecf8::codec::{codecs, Ecf8Params, Fp8Format};
+use ecf8::distribution::{
+    AvailabilityMap, DistError, FaultPlan, FaultyChannel, FecId, Receiver, Sender, SenderConfig,
+};
+use ecf8::model::config::{BlockType, TensorSpec};
+use ecf8::model::store::{CompressedModel, LazyModel, ModelStore};
+use ecf8::util::prng::Xoshiro256;
+use std::sync::Arc;
+
+fn weight_bytes(n: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    (0..n)
+        .map(|_| {
+            let x = (ecf8::util::sampling::normal(&mut rng) * 0.05) as f32;
+            ecf8::fp8::F8E4M3::from_f32(x).to_bits()
+        })
+        .collect()
+}
+
+fn spec(name: &str, rows: usize, cols: usize, layer: usize, bt: BlockType) -> TensorSpec {
+    TensorSpec {
+        name: name.to_string(),
+        rows,
+        cols,
+        block_type: bt,
+        layer,
+        alpha: 0.0,
+        gamma: 0.0,
+        row_sigma: 0.0,
+    }
+}
+
+/// A small multi-layer model: embedding + `n_layers` × (attn, mlp) +
+/// head. Returns the model and every tensor's raw plane in spec order.
+fn build_model(name: &str, n_layers: usize) -> (CompressedModel, Vec<Vec<u8>>) {
+    let mut specs = vec![spec("embed", 20, 100, 0, BlockType::Embedding)];
+    for l in 0..n_layers {
+        specs.push(spec(&format!("layers.{l}.attn"), 30, 100, l, BlockType::AttnQkv));
+        specs.push(spec(&format!("layers.{l}.mlp"), 25, 100, l, BlockType::MlpUp));
+    }
+    specs.push(spec("head", 20, 100, 0, BlockType::Head));
+    let planes: Vec<Vec<u8>> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| weight_bytes(s.rows * s.cols, 100 + i as u64))
+        .collect();
+    let tensors = specs
+        .into_iter()
+        .zip(&planes)
+        .map(|(s, d)| {
+            (
+                s,
+                codecs::compress_auto(d, Fp8Format::E4M3, Ecf8Params::default()),
+            )
+        })
+        .collect();
+    (CompressedModel::from_tensors(name.to_string(), tensors), planes)
+}
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("ecf8-dist-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).ok();
+    dir
+}
+
+/// Pack `model` under `dir` with small shards so the transfer spans
+/// several; returns the packed model directory.
+fn pack(dir: &std::path::Path, model: &CompressedModel) -> std::path::PathBuf {
+    let store = ModelStore::new(dir);
+    store.save_v2(model, 8 << 10).unwrap();
+    dir.join(&model.name)
+}
+
+fn assert_dirs_byte_identical(src: &std::path::Path, dst: &std::path::Path, n_shards: u32) {
+    assert_eq!(
+        std::fs::read(src.join(INDEX_FILE)).unwrap(),
+        std::fs::read(dst.join(INDEX_FILE)).unwrap(),
+        "index bytes"
+    );
+    for s in 0..n_shards {
+        assert_eq!(
+            std::fs::read(src.join(shard_file_name(s))).unwrap(),
+            std::fs::read(dst.join(shard_file_name(s))).unwrap(),
+            "shard {s} bytes"
+        );
+    }
+}
+
+#[test]
+fn lossy_transfer_within_budget_is_byte_identical() {
+    // the CI smoke scenario: 20% random loss, 25% parity, fixed seed —
+    // retransmission rounds carry the tail, the store lands exact
+    let (model, _) = build_model("dist-budget", 4);
+    let root = tmp("budget");
+    let src = pack(&root.join("src"), &model);
+    let dst = root.join("dst");
+
+    let cfg = SenderConfig {
+        fec: FecId::ReedSolomon8,
+        parity_ratio: 0.25,
+        block_bytes: 4096,
+        symbol_bytes: 256,
+    };
+    let sender = Sender::from_dir(&src, &cfg).unwrap();
+    let n_shards = sender.manifest().streams.len() as u32 - 1;
+    let mut ch = FaultyChannel::new(FaultPlan::loss(20260206, 0.20));
+    let mut rx = Receiver::new(&dst);
+    let mut report = sender.send_all(&mut ch).unwrap();
+    rx.drain(&mut ch);
+    for _ in 0..10 {
+        if rx.is_complete() {
+            break;
+        }
+        let missing = rx.missing_blocks();
+        report.absorb(sender.send_blocks(&mut ch, &missing).unwrap());
+        rx.drain(&mut ch);
+    }
+    let recv = rx.finish().expect("transfer must complete within budget");
+    assert!(recv.blocks_repaired > 0, "20% loss must exercise the FEC");
+    assert_eq!(recv.bad_packets, 0, "pure loss plan corrupts nothing");
+    assert!(report.parity_packets > 0);
+    assert_dirs_byte_identical(&src, &dst, n_shards);
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn serve_while_downloading_is_bit_identical() {
+    // layer ℓ decodes bit-identically while later shards are still in
+    // flight: index first, then shards one at a time; a serving thread
+    // gated on the AvailabilityMap decodes each layer as it opens
+    let n_layers = 4;
+    let (model, planes) = build_model("dist-stream", n_layers);
+    let root = tmp("stream");
+    let src = pack(&root.join("src"), &model);
+    let dst = root.join("dst");
+
+    // expected raw planes per layer, in load_layer's (index) order
+    let src_lazy = LazyModel::open(&src).unwrap();
+    let expected: Vec<Vec<(String, Vec<u8>)>> = (0..n_layers)
+        .map(|l| {
+            src_lazy
+                .load_layer(l)
+                .unwrap()
+                .iter()
+                .map(|(s, t)| (s.name.clone(), t.decode_to_vec()))
+                .collect()
+        })
+        .collect();
+    // sanity: the expectation really is the generated planes
+    let mut seen = 0;
+    for layer in &expected {
+        for (name, data) in layer {
+            let i = model.tensors.iter().position(|(s, _)| &s.name == name).unwrap();
+            assert_eq!(data, &planes[i], "{name}");
+            seen += 1;
+        }
+    }
+    assert_eq!(seen, n_layers * 2);
+
+    let cfg = SenderConfig {
+        block_bytes: 2048,
+        symbol_bytes: 256,
+        ..SenderConfig::default()
+    };
+    let sender = Sender::from_dir(&src, &cfg).unwrap();
+    let map = Arc::new(AvailabilityMap::for_layers(n_layers));
+    let mut rx = Receiver::new(&dst);
+    rx.set_availability(Arc::clone(&map));
+
+    // deliver the index stream first so the streaming reader can open
+    let mut ch = FaultyChannel::new(FaultPlan::clean(1));
+    let index_blocks: Vec<(u16, u32)> = sender
+        .stream_plans()
+        .filter(|p| p.stream == 0xFFFF)
+        .flat_map(|p| p.blocks.iter().map(|b| (p.stream, b.block)))
+        .collect();
+    sender.send_blocks(&mut ch, &index_blocks).unwrap();
+    // manifest too (it rides send_all normally)
+    let missing = rx.missing_blocks();
+    assert_eq!(missing, vec![(0xFFFE, 0)], "manifest is the only known gap");
+    sender.send_blocks(&mut ch, &missing).unwrap();
+    rx.drain(&mut ch);
+    assert!(dst.join(INDEX_FILE).exists(), "index must commit first");
+
+    // serving starts now, mid-transfer
+    let streaming = LazyModel::open_streaming(&dst).unwrap();
+    let n_shards = streaming.index().n_shards;
+    assert!(n_shards > 1, "want a multi-shard transfer");
+    let server = {
+        let map = Arc::clone(&map);
+        std::thread::spawn(move || -> Vec<Vec<(String, Vec<u8>)>> {
+            (0..n_layers)
+                .map(|l| {
+                    // availability barrier: unit l+1 is transformer layer l
+                    map.wait(l + 1);
+                    streaming
+                        .load_layer(l)
+                        .unwrap()
+                        .iter()
+                        .map(|(s, t)| (s.name.clone(), t.decode_to_vec()))
+                        .collect()
+                })
+                .collect()
+        })
+    };
+
+    // shards trickle in one at a time; availability only ever grows
+    let mut ready_before = map.snapshot().iter().filter(|&&r| r).count();
+    for s in 0..n_shards {
+        let blocks: Vec<(u16, u32)> = sender
+            .stream_plans()
+            .filter(|p| p.stream == s as u16)
+            .flat_map(|p| p.blocks.iter().map(|b| (p.stream, b.block)))
+            .collect();
+        sender.send_blocks(&mut ch, &blocks).unwrap();
+        rx.drain(&mut ch);
+        let ready_now = map.snapshot().iter().filter(|&&r| r).count();
+        assert!(ready_now >= ready_before, "availability is monotonic");
+        ready_before = ready_now;
+        if s + 1 < n_shards {
+            assert!(!rx.is_complete(), "mid-transfer after shard {s}");
+        }
+    }
+    rx.finish().expect("all shards delivered");
+    assert!(map.all_ready());
+
+    let served = server.join().expect("serving thread");
+    assert_eq!(served, expected, "served-while-downloading ≠ fully local");
+    assert_dirs_byte_identical(&src, &dst, n_shards);
+
+    // once fully local, the gate degenerates to a no-op pass-through
+    let mut full = LazyModel::open(&dst).unwrap().load_all(None).unwrap();
+    full.set_stage_gate(Arc::clone(&map));
+    assert!(full.has_stage_gate());
+    assert!(full.gate_stage(1), "published unit gates through instantly");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn loss_beyond_budget_degrades_structured_with_partial_availability() {
+    let (model, _) = build_model("dist-over", 4);
+    let root = tmp("over");
+    let src = pack(&root.join("src"), &model);
+    let dst = root.join("dst");
+
+    let cfg = SenderConfig {
+        parity_ratio: 0.10,
+        block_bytes: 4096,
+        symbol_bytes: 256,
+        ..SenderConfig::default()
+    };
+    let sender = Sender::from_dir(&src, &cfg).unwrap();
+    let map = Arc::new(AvailabilityMap::for_layers(4));
+    let mut rx = Receiver::new(&dst);
+    rx.set_availability(Arc::clone(&map));
+    let mut ch = FaultyChannel::new(FaultPlan::loss(99, 0.5));
+    sender.send_all(&mut ch).unwrap();
+    rx.drain(&mut ch);
+
+    // single pass at 2× the parity budget: structured failure, not panic
+    match rx.finish() {
+        Err(DistError::Incomplete { missing }) => assert!(missing > 0),
+        other => panic!("expected structured Incomplete, got {other:?}"),
+    }
+    assert!(!map.all_ready(), "50% loss cannot publish everything");
+    // whatever did commit must verify clean — no silent corruption
+    let n_shards = sender.manifest().streams.len() as u32 - 1;
+    for s in 0..n_shards {
+        let path = dst.join(shard_file_name(s));
+        if path.exists() {
+            walk_shard(&std::fs::read(&path).unwrap()).expect("committed shard verifies");
+        }
+    }
+    // and no half-written tmp droppings
+    for entry in std::fs::read_dir(&dst).into_iter().flatten().flatten() {
+        let name = entry.file_name();
+        assert!(
+            !name.to_string_lossy().ends_with(".tmp"),
+            "tmp file left behind: {name:?}"
+        );
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn fault_plan_sweep_never_panics_or_corrupts() {
+    // the ISSUE acceptance sweep: assorted seeds × loss rates under the
+    // full gauntlet (bursts, reorder, dup, bit-flips, truncation); every
+    // outcome is either a complete byte-identical store or a structured
+    // error, and every committed shard verifies
+    let (model, _) = build_model("dist-sweep", 3);
+    let root = tmp("sweep");
+    let src = pack(&root.join("src"), &model);
+    let cfg = SenderConfig {
+        block_bytes: 4096,
+        symbol_bytes: 256,
+        ..SenderConfig::default()
+    };
+    let sender = Sender::from_dir(&src, &cfg).unwrap();
+    let n_shards = sender.manifest().streams.len() as u32 - 1;
+    for (i, (seed, rate, rounds)) in [
+        (11u64, 0.05f64, 4usize),
+        (12, 0.20, 6),
+        (13, 0.40, 8),
+        (14, 0.60, 2),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let dst = root.join(format!("dst-{i}"));
+        let mut ch = FaultyChannel::new(FaultPlan::gauntlet(seed, rate));
+        let mut rx = Receiver::new(&dst);
+        sender.send_all(&mut ch).unwrap();
+        rx.drain(&mut ch);
+        for _ in 0..rounds {
+            if rx.is_complete() {
+                break;
+            }
+            let missing = rx.missing_blocks();
+            sender.send_blocks(&mut ch, &missing).unwrap();
+            rx.drain(&mut ch);
+        }
+        match rx.finish() {
+            Ok(_) => assert_dirs_byte_identical(&src, &dst, n_shards),
+            Err(e) => assert!(
+                matches!(e, DistError::Incomplete { .. }),
+                "seed {seed}: unexpected terminal error {e}"
+            ),
+        }
+        for s in 0..n_shards {
+            let path = dst.join(shard_file_name(s));
+            if path.exists() {
+                walk_shard(&std::fs::read(&path).unwrap())
+                    .unwrap_or_else(|e| panic!("seed {seed} shard {s} corrupt: {e}"));
+            }
+        }
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
