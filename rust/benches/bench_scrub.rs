@@ -1,0 +1,201 @@
+//! Self-healing store: what protection and verification actually cost.
+//! Three grids over a packed tiny-llm store:
+//!
+//! * **protect** — sidecar build time and parity overhead at several
+//!   parity budgets (the `ecf8 pack --parity` cost).
+//! * **scrub throughput** — one full verification pass, unpaced (raw
+//!   CRC-walk bandwidth) and at paced budgets, reporting achieved MB/s
+//!   against the configured ceiling (the pacing-accuracy check).
+//! * **repair latency** — seeded payload bit flips, then the
+//!   time-to-repair through `repair_store`, split into detect (scan)
+//!   and splice (parity decode + tmp+rename commit), with the
+//!   byte-identity outcome.
+//!
+//! All I/O is tmpfs-or-local-disk; times measure CRC/RS/commit CPU, not
+//! a spindle. Emits `BENCH_scrub.json`.
+
+use ecf8::bench_support::{banner, write_bench_json, Json, Table};
+use ecf8::codec::container;
+use ecf8::distribution::SenderConfig;
+use ecf8::model::config::tiny_llm;
+use ecf8::model::store::{CompressedModel, ModelStore};
+use ecf8::scheduler::SystemClock;
+use ecf8::scrub::{protect_store, repair_store, scrub_pass, Pacer};
+use ecf8::util::prng::Xoshiro256;
+use ecf8::util::threadpool::ThreadPool;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+const SHARD_LIMIT: u64 = 256 << 10;
+const SEED: u64 = 21;
+
+/// Seeded payload-only bit flips (the `ecf8 chaos` model), committed
+/// tmp+rename. Returns how many distinct records were hit.
+fn flip_bits(dir: &Path, n_flips: u64, seed: u64) -> usize {
+    let index_bytes = std::fs::read(dir.join(container::INDEX_FILE)).unwrap();
+    let index = container::TensorIndex::deserialize(&index_bytes).unwrap();
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut shards = std::collections::BTreeMap::new();
+    let mut touched = std::collections::BTreeSet::new();
+    for _ in 0..n_flips {
+        let e = &index.entries[rng.next_below(index.entries.len() as u64) as usize];
+        let bytes: &mut Vec<u8> = shards.entry(e.shard).or_insert_with(|| {
+            std::fs::read(dir.join(container::shard_file_name(e.shard))).unwrap()
+        });
+        let header = container::RECORD_HEADER_BYTES as u64;
+        let off = (e.offset + header + rng.next_below(e.len - header)) as usize;
+        bytes[off] ^= 1 << (rng.next_below(8) as u32);
+        touched.insert((e.shard, e.offset));
+    }
+    for (s, bytes) in &shards {
+        let final_path = dir.join(container::shard_file_name(*s));
+        let tmp_path = dir.join(format!("{}.chaos.tmp", container::shard_file_name(*s)));
+        std::fs::write(&tmp_path, bytes).unwrap();
+        std::fs::remove_file(&final_path).ok();
+        std::fs::rename(&tmp_path, &final_path).unwrap();
+    }
+    touched.len()
+}
+
+fn store_bytes(dir: &Path) -> u64 {
+    let index_bytes = std::fs::read(dir.join(container::INDEX_FILE)).unwrap();
+    let index = container::TensorIndex::deserialize(&index_bytes).unwrap();
+    (0..index.n_shards)
+        .map(|s| std::fs::metadata(dir.join(container::shard_file_name(s))).unwrap().len())
+        .sum()
+}
+
+fn main() {
+    banner(
+        "bench_scrub",
+        "self-healing store: protect cost, scrub throughput, repair latency",
+    );
+    let cfg = tiny_llm();
+    let pool = ThreadPool::with_default_size();
+    let model = CompressedModel::synthesize(&cfg, SEED, Some(&pool));
+    let root = std::env::temp_dir().join("ecf8_bench_scrub");
+    std::fs::remove_dir_all(&root).ok();
+    ModelStore::new(&root).save_v2(&model, SHARD_LIMIT).unwrap();
+    let dir = root.join(cfg.name);
+    let source_bytes = store_bytes(&dir);
+    println!(
+        "workload: {} ({} store bytes, {} KiB shards)",
+        cfg.name,
+        source_bytes,
+        SHARD_LIMIT >> 10
+    );
+
+    // --- protect: sidecar build cost vs parity budget ----------------------
+    let mut table = Table::new(["parity", "sidecar bytes", "overhead", "build time", "MB/s"]);
+    let mut protect_sweep = Json::arr();
+    for pct in [10u32, 25, 50] {
+        let scfg = SenderConfig {
+            parity_ratio: pct as f64 / 100.0,
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let report = protect_store(&dir, &scfg).unwrap();
+        let elapsed = t0.elapsed().as_secs_f64();
+        let overhead = report.parity_bytes as f64 / report.source_bytes as f64;
+        let mbps = report.source_bytes as f64 / elapsed / 1e6;
+        table.row([
+            format!("{pct}%"),
+            format!("{}", report.parity_bytes),
+            format!("{:.1}%", overhead * 100.0),
+            format!("{:.2} ms", elapsed * 1e3),
+            format!("{mbps:.1}"),
+        ]);
+        protect_sweep.push(
+            Json::obj()
+                .field("parity_pct", pct as usize)
+                .field("shards", report.shards)
+                .field("blocks", report.blocks)
+                .field("source_bytes", report.source_bytes as usize)
+                .field("parity_bytes", report.parity_bytes as usize)
+                .field("overhead_frac", overhead)
+                .field("elapsed_s", elapsed)
+                .field("protect_mbps", mbps),
+        );
+    }
+    table.print();
+    // leave the store protected at the default budget for the next grids
+    protect_store(&dir, &SenderConfig::default()).unwrap();
+
+    // --- scrub throughput: unpaced and at paced budgets --------------------
+    let mut table = Table::new(["budget", "bytes", "elapsed", "achieved MB/s", "clean"]);
+    let mut scrub_sweep = Json::arr();
+    for budget_mb in [0u64, 64, 16] {
+        let mut pacer = Pacer::new(Arc::new(SystemClock), budget_mb << 20);
+        let t0 = Instant::now();
+        let report = scrub_pass(&dir, &mut pacer, None).unwrap();
+        let elapsed = t0.elapsed().as_secs_f64();
+        let mbps = report.bytes_scanned as f64 / elapsed / 1e6;
+        table.row([
+            if budget_mb == 0 {
+                "unpaced".to_string()
+            } else {
+                format!("{budget_mb} MB/s")
+            },
+            format!("{}", report.bytes_scanned),
+            format!("{:.2} ms", elapsed * 1e3),
+            format!("{mbps:.1}"),
+            format!("{}/{}", report.clean, report.records),
+        ]);
+        scrub_sweep.push(
+            Json::obj()
+                .field("budget_mbps", budget_mb as usize)
+                .field("records", report.records as usize)
+                .field("clean", report.clean as usize)
+                .field("bytes_scanned", report.bytes_scanned as usize)
+                .field("elapsed_s", elapsed)
+                .field("achieved_mbps", mbps),
+        );
+    }
+    table.print();
+
+    // --- repair latency: seeded flips, detect + splice ---------------------
+    let mut table = Table::new(["flips", "records hit", "repaired", "elapsed", "outcome"]);
+    let mut repair_sweep = Json::arr();
+    for n_flips in [1u64, 8, 32] {
+        let hit = flip_bits(&dir, n_flips, SEED + n_flips);
+        let t0 = Instant::now();
+        let outcome = repair_store(&dir).unwrap();
+        let elapsed = t0.elapsed().as_secs_f64();
+        let clean = outcome.fully_servable() && outcome.unrecoverable.is_empty();
+        table.row([
+            format!("{n_flips}"),
+            format!("{hit}"),
+            format!("{}", outcome.repaired.len()),
+            format!("{:.2} ms", elapsed * 1e3),
+            if clean { "byte-identical" } else { "DAMAGED" }.to_string(),
+        ]);
+        repair_sweep.push(
+            Json::obj()
+                .field("flips", n_flips as usize)
+                .field("records_hit", hit)
+                .field("records_repaired", outcome.repaired.len())
+                .field("records_unrecoverable", outcome.unrecoverable.len())
+                .field("elapsed_s", elapsed)
+                .field("fully_servable", clean),
+        );
+        assert!(clean, "bench store must repair to byte identity");
+    }
+    table.print();
+
+    let doc = Json::obj()
+        .field("bench", "scrub")
+        .field("model", cfg.name)
+        .field("store_bytes", source_bytes as usize)
+        .field("shard_limit_bytes", SHARD_LIMIT as usize)
+        .field("seed", SEED as usize)
+        .field(
+            "note",
+            "local-disk I/O: times measure CRC/RS/commit CPU, not a spindle",
+        )
+        .field("protect", protect_sweep)
+        .field("scrub_throughput", scrub_sweep)
+        .field("repair_latency", repair_sweep);
+    write_bench_json("BENCH_scrub.json", &doc);
+    std::fs::remove_dir_all(&root).ok();
+}

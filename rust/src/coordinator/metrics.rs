@@ -296,6 +296,80 @@ impl SchedulerMetrics {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Scrub metrics
+// ---------------------------------------------------------------------------
+
+/// Cumulative counters for the background store scrubber
+/// (`crate::scrub::Scrubber`): how much has been re-verified, how much
+/// damage parity repaired, and how much it could not. Folded into the
+/// supervisor's `HealthReport` so "is the store rotting faster than we
+/// can fix it" is one field read, not a log grep.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ScrubMetrics {
+    /// completed scrub passes
+    pub passes: u64,
+    /// records CRC-verified across all passes
+    pub records_scanned: u64,
+    /// shard bytes read for verification across all passes
+    pub bytes_scanned: u64,
+    /// records restored from parity sidecars
+    pub records_repaired: u64,
+    /// records quarantined because parity could not recover them
+    pub records_unrecoverable: u64,
+    /// wall-clock duration of the most recent pass
+    pub last_pass_secs: f64,
+}
+
+impl ScrubMetrics {
+    /// One-line human-readable report.
+    pub fn render(&self) -> String {
+        format!(
+            "scrub: {} passes, {} records / {} bytes verified, \
+             {} repaired, {} unrecoverable, last pass {:.3} s",
+            self.passes,
+            self.records_scanned,
+            self.bytes_scanned,
+            self.records_repaired,
+            self.records_unrecoverable,
+            self.last_pass_secs,
+        )
+    }
+}
+
+/// Clonable handle the scrubber thread updates and the health surface
+/// reads — same shape as [`SharedStageMetrics`].
+#[derive(Debug, Clone, Default)]
+pub struct SharedScrubMetrics(Arc<Mutex<ScrubMetrics>>);
+
+impl SharedScrubMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one completed pass into the cumulative counters.
+    pub fn record_pass(
+        &self,
+        records: u64,
+        bytes: u64,
+        repaired: u64,
+        unrecoverable: u64,
+        pass_secs: f64,
+    ) {
+        let mut m = self.0.lock().unwrap();
+        m.passes += 1;
+        m.records_scanned += records;
+        m.bytes_scanned += bytes;
+        m.records_repaired += repaired;
+        m.records_unrecoverable += unrecoverable;
+        m.last_pass_secs = pass_secs;
+    }
+
+    pub fn snapshot(&self) -> ScrubMetrics {
+        *self.0.lock().unwrap()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

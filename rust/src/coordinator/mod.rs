@@ -37,12 +37,17 @@ pub mod pipeline;
 pub mod request;
 pub mod scheduler;
 pub mod server;
+pub mod supervisor;
 
 pub use batcher::DynamicBatcher;
 pub use metrics::{
-    LatencyHistogram, PipelineMetrics, SchedulerMetrics, SharedStageMetrics, StageMetrics,
+    LatencyHistogram, PipelineMetrics, SchedulerMetrics, ScrubMetrics, SharedScrubMetrics,
+    SharedStageMetrics, StageMetrics,
 };
 pub use pipeline::{PipelineConfig, PipelinedServer, SyntheticEngine};
 pub use request::{Request, Response, ResponseStatus};
 pub use scheduler::{MemoryModel, ServingPlan};
 pub use server::{BatchEngine, ServeConfig, Server};
+pub use supervisor::{
+    HealthReport, Heartbeat, StageHealth, SupervisedReport, SupervisedServer, SupervisorConfig,
+};

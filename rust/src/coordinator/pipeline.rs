@@ -68,11 +68,13 @@ impl PipelineConfig {
     }
 }
 
-/// State shared with the admission thread.
-struct AdmissionShared {
-    batcher: Mutex<DynamicBatcher>,
-    wake: Condvar,
-    shutdown: AtomicBool,
+/// State shared with the admission thread (shared with
+/// `super::supervisor`, which runs the same admission loop under a
+/// watchdog-supervised execute stage).
+pub(crate) struct AdmissionShared {
+    pub(crate) batcher: Mutex<DynamicBatcher>,
+    pub(crate) wake: Condvar,
+    pub(crate) shutdown: AtomicBool,
 }
 
 impl AdmissionShared {
@@ -81,7 +83,7 @@ impl AdmissionShared {
     /// flag before waiting or is already waiting and gets the notify —
     /// the wakeup cannot be lost, which lets the loop sleep without any
     /// poll timeout.
-    fn signal_shutdown(&self) {
+    pub(crate) fn signal_shutdown(&self) {
         let _guard = self.batcher.lock().unwrap();
         self.shutdown.store(true, Ordering::SeqCst);
         self.wake.notify_all();
@@ -275,7 +277,7 @@ impl<E: BatchEngine + 'static> Drop for PipelinedServer<E> {
 }
 
 /// What a panicking execute stage left behind, as a response message.
-fn panic_msg(payload: Box<dyn std::any::Any + Send>) -> String {
+pub(crate) fn panic_msg(payload: Box<dyn std::any::Any + Send>) -> String {
     if let Some(s) = payload.downcast_ref::<&str>() {
         (*s).to_string()
     } else if let Some(s) = payload.downcast_ref::<String>() {
@@ -292,7 +294,7 @@ fn panic_msg(payload: Box<dyn std::any::Any + Send>) -> String {
 /// while queued are shed here — before batch formation, so an expired
 /// request never reaches the execute stage — as structured `Expired`
 /// responses.
-fn admission_loop(
+pub(crate) fn admission_loop(
     shared: &AdmissionShared,
     batch_tx: &Sender<Vec<Request>>,
     resp_tx: &mpsc::Sender<Response>,
@@ -377,6 +379,9 @@ pub struct SyntheticEngine {
     pub fail_on_forward: Option<u64>,
     /// panic injection: panic on the n-th forward (poisoned-batch tests)
     pub panic_on_forward: Option<u64>,
+    /// wedge injection: park forever on the n-th forward — a stalled
+    /// (not dead) stage thread for the supervisor's heartbeat watchdog
+    pub wedge_on_forward: Option<u64>,
     pub forwards: u64,
 }
 
@@ -393,6 +398,7 @@ impl SyntheticEngine {
             compute_cost,
             fail_on_forward: None,
             panic_on_forward: None,
+            wedge_on_forward: None,
             forwards: 0,
         }
     }
@@ -420,6 +426,13 @@ impl SyntheticEngine {
 
     fn step(&mut self) -> Result<()> {
         self.forwards += 1;
+        if self.wedge_on_forward == Some(self.forwards) {
+            // a wedged thread never returns; park() can wake spuriously,
+            // so loop — only the watchdog's restart makes progress
+            loop {
+                std::thread::park();
+            }
+        }
         if self.panic_on_forward == Some(self.forwards) {
             panic!("synthetic engine panic on forward {}", self.forwards);
         }

@@ -1,0 +1,757 @@
+//! The serving-stack supervisor: heartbeat watchdog + stage restart.
+//!
+//! PR 6's `catch_unwind` degraded mode handles a *panicking* engine —
+//! the batch fails, the thread lives. This module handles the failure
+//! class panics can't: a **wedged** stage thread (deadlocked FFI call,
+//! livelocked driver, a `park()` that never wakes). A wedged thread
+//! produces no panic payload and never returns, so the only recourse is
+//! an external observer:
+//!
+//! * every execute iteration pulses a [`Heartbeat`] and records its
+//!   in-flight batch in a shared slot;
+//! * a watchdog thread polls; when the heartbeat goes stale while a
+//!   batch is in flight, the stage is declared dead: its batch is
+//!   failed as [`ResponseStatus::Failed`] (structured, never silent),
+//!   the generation counter is bumped (so the wedged thread can never
+//!   publish late responses), and a replacement worker is spawned from
+//!   the spare-engine pool sharing the same MPMC batch queue;
+//! * with no spare left the stage stays down *gracefully*: the watchdog
+//!   keeps draining queued batches into structured failures, so
+//!   submitters always get an answer and shutdown never hangs.
+//!
+//! [`SupervisedServer`] is [`PipelinedServer`](super::PipelinedServer)'s
+//! admission loop (bit-identical batching policy) under this watchdog,
+//! and [`HealthReport`] is the one-call liveness surface (`health()`,
+//! `ecf8 serve --health-log`) folding in scrub status and quarantine
+//! counts from `crate::scrub`.
+
+use super::batcher::DynamicBatcher;
+use super::metrics::{Metrics, PipelineMetrics, ScrubMetrics, SharedScrubMetrics};
+use super::pipeline::{admission_loop, panic_msg, AdmissionShared, PipelineConfig};
+use super::request::{Request, Response};
+use super::server::{compiled_batch_for, execute_batch_on, BatchEngine};
+use crate::runtime::executor::SEQ_LEN;
+use crate::util::channel::{self, Receiver};
+use anyhow::{anyhow, bail, Result};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Watchdog tuning.
+#[derive(Debug, Clone, Copy)]
+pub struct SupervisorConfig {
+    /// a stage with a batch in flight and no heartbeat for this long is
+    /// declared wedged
+    pub stall_after: Duration,
+    /// watchdog poll period
+    pub poll: Duration,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        Self {
+            stall_after: Duration::from_secs(2),
+            poll: Duration::from_millis(50),
+        }
+    }
+}
+
+/// A monotonically pulsing liveness signal: cheap to pulse from the hot
+/// loop, cheap to age-check from the watchdog.
+#[derive(Clone)]
+pub struct Heartbeat {
+    inner: Arc<HeartbeatInner>,
+}
+
+struct HeartbeatInner {
+    last: Mutex<Instant>,
+    beats: AtomicU64,
+}
+
+impl Heartbeat {
+    pub fn new() -> Self {
+        Self {
+            inner: Arc::new(HeartbeatInner {
+                last: Mutex::new(Instant::now()),
+                beats: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    pub fn pulse(&self) {
+        *self.inner.last.lock().unwrap() = Instant::now();
+        self.inner.beats.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn beats(&self) -> u64 {
+        self.inner.beats.load(Ordering::Relaxed)
+    }
+
+    /// Time since the last pulse.
+    pub fn age(&self) -> Duration {
+        Instant::now().saturating_duration_since(*self.inner.last.lock().unwrap())
+    }
+}
+
+impl Default for Heartbeat {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One stage's liveness as the watchdog sees it.
+#[derive(Debug, Clone)]
+pub struct StageHealth {
+    pub name: String,
+    pub alive: bool,
+    pub beats: u64,
+    pub last_beat_age: Duration,
+    pub restarts: u64,
+}
+
+/// The one-call health surface: per-stage liveness, scrub status, and
+/// the store's quarantine count.
+#[derive(Debug, Clone, Default)]
+pub struct HealthReport {
+    pub stages: Vec<StageHealth>,
+    /// background scrubber counters, when one is attached
+    pub scrub: Option<ScrubMetrics>,
+    /// records currently quarantined on disk (`quarantine.tsv` lines)
+    pub quarantined: u64,
+    /// every stage alive and nothing unrecoverable
+    pub healthy: bool,
+}
+
+impl HealthReport {
+    /// One block of `key value` lines — what `serve --health-log` prints.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for s in &self.stages {
+            out.push_str(&format!(
+                "stage {:9} alive={} beats={} last_beat={:.3}s restarts={}\n",
+                s.name,
+                s.alive,
+                s.beats,
+                s.last_beat_age.as_secs_f64(),
+                s.restarts,
+            ));
+        }
+        if let Some(scrub) = &self.scrub {
+            out.push_str(&scrub.render());
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "quarantined {}  healthy {}\n",
+            self.quarantined, self.healthy
+        ));
+        out
+    }
+}
+
+/// One batch currently executing on the supervised stage.
+struct InFlight {
+    gen: u64,
+    batch: Vec<Request>,
+}
+
+/// State shared between execute workers (across generations) and the
+/// watchdog.
+struct ExecShared<E> {
+    batch_rx: Receiver<Vec<Request>>,
+    resp_tx: mpsc::Sender<Response>,
+    stages: PipelineMetrics,
+    exec_batch: usize,
+    beat: Heartbeat,
+    /// current authorized worker generation; a worker whose generation
+    /// is stale must neither execute nor respond
+    gen: AtomicU64,
+    inflight: Mutex<Option<InFlight>>,
+    spares: Mutex<Vec<E>>,
+    restarts: AtomicU64,
+    /// stage permanently down (wedged with no spare engine left)
+    down: AtomicBool,
+    metrics: Mutex<Metrics>,
+    first_err: Mutex<Option<anyhow::Error>>,
+    /// the live worker's handle; `None` once abandoned (wedged) or at
+    /// shutdown. A wedged thread is detached, never joined.
+    worker: Mutex<Option<JoinHandle<()>>>,
+}
+
+/// The supervised batch-serving coordinator: `PipelinedServer`'s
+/// admission policy + a watchdog-supervised, restartable execute stage.
+/// `engines[0]` serves; the rest are restart spares.
+pub struct SupervisedServer<E: BatchEngine + 'static> {
+    shared: Arc<AdmissionShared>,
+    admission: Option<JoinHandle<()>>,
+    exec: Arc<ExecShared<E>>,
+    watchdog: Option<JoinHandle<()>>,
+    watchdog_stop: Arc<AtomicBool>,
+    resp_rx: mpsc::Receiver<Response>,
+    exec_batch: usize,
+    cfg: SupervisorConfig,
+    scrub: Option<SharedScrubMetrics>,
+    store_dir: Option<PathBuf>,
+}
+
+impl<E: BatchEngine + 'static> SupervisedServer<E> {
+    /// Spawn admission, the first execute worker, and the watchdog.
+    /// Panics if `engines` is empty.
+    pub fn new(mut engines: Vec<E>, cfg: PipelineConfig, sup: SupervisorConfig) -> Self {
+        assert!(!engines.is_empty(), "need at least one engine");
+        let first = engines.remove(0);
+        let exec_batch = compiled_batch_for(cfg.serve.max_batch);
+        let shared = Arc::new(AdmissionShared {
+            batcher: Mutex::new(DynamicBatcher::new(exec_batch, cfg.serve.linger)),
+            wake: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let (batch_tx, batch_rx) = channel::bounded::<Vec<Request>>(cfg.batch_queue_cap);
+        let (resp_tx, resp_rx) = mpsc::channel::<Response>();
+        let stages = PipelineMetrics::default();
+
+        let mut metrics = Metrics::default();
+        metrics.start();
+        let exec = Arc::new(ExecShared {
+            batch_rx,
+            resp_tx: resp_tx.clone(),
+            stages: stages.clone(),
+            exec_batch,
+            beat: Heartbeat::new(),
+            gen: AtomicU64::new(0),
+            inflight: Mutex::new(None),
+            spares: Mutex::new(engines),
+            restarts: AtomicU64::new(0),
+            down: AtomicBool::new(false),
+            metrics: Mutex::new(metrics),
+            first_err: Mutex::new(None),
+            worker: Mutex::new(None),
+        });
+
+        let admission = std::thread::spawn({
+            let shared = Arc::clone(&shared);
+            let stage = stages.admission.clone();
+            move || admission_loop(&shared, &batch_tx, &resp_tx, &stage)
+        });
+        *exec.worker.lock().unwrap() = Some(spawn_worker(first, 0, Arc::clone(&exec)));
+
+        let watchdog_stop = Arc::new(AtomicBool::new(false));
+        let watchdog = std::thread::spawn({
+            let exec = Arc::clone(&exec);
+            let stop = Arc::clone(&watchdog_stop);
+            move || watchdog_loop(&exec, sup, &stop)
+        });
+
+        Self {
+            shared,
+            admission: Some(admission),
+            exec,
+            watchdog: Some(watchdog),
+            watchdog_stop,
+            resp_rx,
+            exec_batch,
+            cfg: sup,
+            scrub: None,
+            store_dir: None,
+        }
+    }
+
+    /// Fold a background scrubber's counters into [`Self::health`].
+    pub fn attach_scrub(&mut self, metrics: SharedScrubMetrics) {
+        self.scrub = Some(metrics);
+    }
+
+    /// Point [`Self::health`] at a store directory so the quarantine
+    /// count reflects `quarantine.tsv` on disk.
+    pub fn attach_store(&mut self, dir: PathBuf) {
+        self.store_dir = Some(dir);
+    }
+
+    pub fn exec_batch(&self) -> usize {
+        self.exec_batch
+    }
+
+    /// Enqueue a request (same contract as `PipelinedServer::submit`).
+    pub fn submit(&self, r: Request) {
+        self.shared.batcher.lock().unwrap().push(r);
+        self.shared.wake.notify_one();
+    }
+
+    pub fn pending(&self) -> usize {
+        self.shared.batcher.lock().unwrap().pending()
+    }
+
+    pub fn collect_ready(&self) -> Vec<Response> {
+        let mut out = Vec::new();
+        while let Ok(r) = self.resp_rx.try_recv() {
+            out.push(r);
+        }
+        out
+    }
+
+    pub fn stage_metrics(&self) -> &PipelineMetrics {
+        &self.exec.stages
+    }
+
+    /// Stage restarts performed by the watchdog so far.
+    pub fn restarts(&self) -> u64 {
+        self.exec.restarts.load(Ordering::SeqCst)
+    }
+
+    /// The health surface: per-stage liveness (admission via its join
+    /// handle, execute via heartbeat + down flag), scrub status, and the
+    /// on-disk quarantine count.
+    pub fn health(&self) -> HealthReport {
+        let admission_alive = self
+            .admission
+            .as_ref()
+            .map(|h| !h.is_finished())
+            .unwrap_or(false);
+        let down = self.exec.down.load(Ordering::SeqCst);
+        let stalled = {
+            let inflight = self.exec.inflight.lock().unwrap();
+            inflight.is_some() && self.exec.beat.age() >= self.cfg.stall_after
+        };
+        let exec_alive = !down && !stalled;
+        let scrub = self.scrub.as_ref().map(|m| m.snapshot());
+        let quarantined = self
+            .store_dir
+            .as_ref()
+            .and_then(|d| std::fs::read_to_string(d.join(crate::model::store::QUARANTINE_FILE)).ok())
+            .map(|s| s.lines().count() as u64)
+            .or(scrub.map(|s| s.records_unrecoverable))
+            .unwrap_or(0);
+        let healthy = admission_alive && exec_alive && quarantined == 0;
+        HealthReport {
+            stages: vec![
+                StageHealth {
+                    name: "admission".into(),
+                    alive: admission_alive,
+                    beats: 0,
+                    last_beat_age: Duration::ZERO,
+                    restarts: 0,
+                },
+                StageHealth {
+                    name: "execute".into(),
+                    alive: exec_alive,
+                    beats: self.exec.beat.beats(),
+                    last_beat_age: self.exec.beat.age(),
+                    restarts: self.exec.restarts.load(Ordering::SeqCst),
+                },
+            ],
+            scrub,
+            quarantined,
+            healthy,
+        }
+    }
+
+    /// Drain, stop every supervised thread, and report. Wedged workers
+    /// are left detached (they hold no lock the server needs); their
+    /// batches were already failed by the watchdog. Surfaces the execute
+    /// stage's first clean error, like `PipelinedServer::shutdown`.
+    pub fn shutdown(mut self) -> Result<SupervisedReport<E>> {
+        self.shared.signal_shutdown();
+        if let Some(h) = self.admission.take() {
+            h.join().map_err(|_| anyhow!("admission thread panicked"))?;
+        }
+        // admission exit dropped the only batch sender: a healthy worker
+        // drains the queue and exits. A wedged worker never will — wait
+        // until the live handle finishes or the watchdog abandons it.
+        let deadline = Instant::now() + self.cfg.stall_after * 4 + Duration::from_secs(5);
+        loop {
+            let finished = {
+                let guard = self.exec.worker.lock().unwrap();
+                guard.as_ref().map(|h| h.is_finished()).unwrap_or(true)
+            };
+            if finished {
+                break;
+            }
+            if Instant::now() >= deadline {
+                bail!("supervised execute stage failed to quiesce");
+            }
+            std::thread::sleep(self.cfg.poll);
+        }
+        if let Some(h) = self.exec.worker.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        self.watchdog_stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.watchdog.take() {
+            h.join().map_err(|_| anyhow!("watchdog thread panicked"))?;
+        }
+        // anything still queued (stage down, or error exit) gets a
+        // structured failure — submitters always hear back
+        while let Some(batch) = self.exec.batch_rx.try_recv() {
+            for r in &batch {
+                let _ = self.exec.resp_tx.send(Response::failed(
+                    r,
+                    "execute stage down at shutdown".to_string(),
+                    batch.len(),
+                ));
+            }
+        }
+        if let Some(e) = self.exec.first_err.lock().unwrap().take() {
+            return Err(e);
+        }
+        let mut responses = Vec::new();
+        while let Ok(r) = self.resp_rx.try_recv() {
+            responses.push(r);
+        }
+        let mut metrics = std::mem::take(&mut *self.exec.metrics.lock().unwrap());
+        metrics.finish();
+        let engines = std::mem::take(&mut *self.exec.spares.lock().unwrap());
+        Ok(SupervisedReport {
+            engines,
+            metrics,
+            responses,
+            stages: self.exec.stages.clone(),
+            restarts: self.exec.restarts.load(Ordering::SeqCst),
+        })
+    }
+}
+
+impl<E: BatchEngine + 'static> Drop for SupervisedServer<E> {
+    fn drop(&mut self) {
+        self.shared.signal_shutdown();
+        if let Some(h) = self.admission.take() {
+            let _ = h.join();
+        }
+        self.watchdog_stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.watchdog.take() {
+            let _ = h.join();
+        }
+        // a still-running worker exits on the closed channel; a wedged
+        // one is detached — dropping the handle, never joining it
+        let _ = self.exec.worker.lock().unwrap().take();
+    }
+}
+
+/// Everything the supervised server hands back at shutdown.
+pub struct SupervisedReport<E> {
+    /// surviving engines (unused spares plus cleanly exited workers);
+    /// wedged engines are lost with their threads
+    pub engines: Vec<E>,
+    pub metrics: Metrics,
+    pub responses: Vec<Response>,
+    pub stages: PipelineMetrics,
+    pub restarts: u64,
+}
+
+fn spawn_worker<E: BatchEngine + 'static>(
+    engine: E,
+    my_gen: u64,
+    shared: Arc<ExecShared<E>>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("ecf8-execute-g{my_gen}"))
+        .spawn(move || execute_worker(engine, my_gen, &shared))
+        .expect("spawn execute worker")
+}
+
+/// One execute-worker generation. Structure mirrors `PipelinedServer`'s
+/// execute thread (same `execute_batch_on`, same catch_unwind degraded
+/// mode) plus the supervision contract: record the in-flight batch,
+/// pulse the heartbeat, and only publish results while still the owning
+/// generation.
+fn execute_worker<E: BatchEngine>(mut engine: E, my_gen: u64, shared: &ExecShared<E>) {
+    loop {
+        if shared.gen.load(Ordering::SeqCst) != my_gen {
+            break;
+        }
+        let Ok(batch) = shared.batch_rx.recv() else {
+            break; // channel closed: admission drained and exited
+        };
+        if shared.gen.load(Ordering::SeqCst) != my_gen {
+            // superseded between recv and execute; the MPMC queue has no
+            // put-back, so the batch fails structurally rather than
+            // executing on a deposed worker
+            for r in &batch {
+                let _ = shared.resp_tx.send(Response::failed(
+                    r,
+                    "execute stage restarted during handoff".to_string(),
+                    batch.len(),
+                ));
+            }
+            break;
+        }
+        shared.stages.execute.observe_depth(shared.batch_rx.len());
+        *shared.inflight.lock().unwrap() = Some(InFlight {
+            gen: my_gen,
+            batch: batch.clone(),
+        });
+        shared.beat.pulse();
+        let t0 = Instant::now();
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            execute_batch_on(
+                &mut engine,
+                &batch,
+                shared.exec_batch,
+                true,
+                Some(&shared.stages.decode),
+            )
+        }));
+        // claim completion under the in-flight lock: if the watchdog
+        // already took the slot, this generation is dead and must not
+        // publish (its batch was failed; late results would double-respond)
+        let still_owner = {
+            let mut slot = shared.inflight.lock().unwrap();
+            match slot.as_ref() {
+                Some(f) if f.gen == my_gen => {
+                    *slot = None;
+                    true
+                }
+                _ => false,
+            }
+        };
+        shared.beat.pulse();
+        if !still_owner {
+            break;
+        }
+        match outcome {
+            Err(payload) => {
+                // a panicking engine poisons the batch, not the stage
+                let msg = panic_msg(payload);
+                for r in &batch {
+                    let _ = shared
+                        .resp_tx
+                        .send(Response::failed(r, msg.clone(), batch.len()));
+                }
+            }
+            Ok(Ok(responses)) => {
+                shared.stages.execute.record(t0.elapsed().as_secs_f64());
+                let latencies: Vec<f64> = responses.iter().map(|r| r.latency_s).collect();
+                shared.metrics.lock().unwrap().record_batch(
+                    batch.len(),
+                    (batch.len() * SEQ_LEN) as u64,
+                    &latencies,
+                );
+                for r in responses {
+                    let _ = shared.resp_tx.send(r);
+                }
+            }
+            Ok(Err(e)) => {
+                let mut first = shared.first_err.lock().unwrap();
+                if first.is_none() {
+                    *first = Some(e);
+                }
+                break;
+            }
+        }
+    }
+    // a cleanly exiting worker returns its engine to the spare pool
+    // (restart capital and the shutdown report's engine inventory)
+    shared.spares.lock().unwrap().push(engine);
+}
+
+/// The watchdog: poll the heartbeat; a stale beat with a batch in
+/// flight means the worker is wedged — fail its batch, bump the
+/// generation, and restart from a spare. With no spare, the stage goes
+/// down but stays *responsive*: queued batches drain into structured
+/// failures every poll.
+fn watchdog_loop<E: BatchEngine + 'static>(
+    shared: &Arc<ExecShared<E>>,
+    cfg: SupervisorConfig,
+    stop: &AtomicBool,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(cfg.poll);
+        if shared.down.load(Ordering::SeqCst) {
+            // degraded mode: no engine left, but submitters still get
+            // structured answers instead of an unbounded queue
+            while let Some(batch) = shared.batch_rx.try_recv() {
+                for r in &batch {
+                    let _ = shared.resp_tx.send(Response::failed(
+                        r,
+                        "execute stage down (no spare engine)".to_string(),
+                        batch.len(),
+                    ));
+                }
+            }
+            continue;
+        }
+        // declare-dead decision under the in-flight lock so it cannot
+        // race the worker's completion claim
+        let taken = {
+            let mut slot = shared.inflight.lock().unwrap();
+            if slot.is_some() && shared.beat.age() >= cfg.stall_after {
+                slot.take()
+            } else {
+                None
+            }
+        };
+        let Some(inflight) = taken else { continue };
+        let stalled_gen = inflight.gen;
+        for r in &inflight.batch {
+            let _ = shared.resp_tx.send(Response::failed(
+                r,
+                format!(
+                    "execute stage stalled (no heartbeat for {:.1}s); batch failed, stage restarted",
+                    cfg.stall_after.as_secs_f64()
+                ),
+                inflight.batch.len(),
+            ));
+        }
+        let new_gen = stalled_gen + 1;
+        shared.gen.store(new_gen, Ordering::SeqCst);
+        shared.beat.pulse(); // fresh epoch for the replacement
+        let spare = shared.spares.lock().unwrap().pop();
+        match spare {
+            Some(engine) => {
+                shared.restarts.fetch_add(1, Ordering::SeqCst);
+                let h = spawn_worker(engine, new_gen, Arc::clone(shared));
+                // abandon the wedged handle: detached, never joined
+                *shared.worker.lock().unwrap() = Some(h);
+            }
+            None => {
+                shared.down.store(true, Ordering::SeqCst);
+                *shared.worker.lock().unwrap() = None;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_support::seeded_requests as requests;
+    use crate::coordinator::pipeline::SyntheticEngine;
+    use crate::coordinator::request::ResponseStatus;
+    use crate::coordinator::server::ServeConfig;
+
+    fn fast_sup() -> SupervisorConfig {
+        SupervisorConfig {
+            stall_after: Duration::from_millis(150),
+            poll: Duration::from_millis(10),
+        }
+    }
+
+    fn one_by_one(max_batch: usize) -> PipelineConfig {
+        PipelineConfig::new(ServeConfig {
+            max_batch,
+            linger: Duration::ZERO,
+        })
+    }
+
+    #[test]
+    fn healthy_path_serves_everything() {
+        let vocab = 16;
+        let server = SupervisedServer::new(
+            vec![SyntheticEngine::instant(vocab)],
+            one_by_one(2),
+            fast_sup(),
+        );
+        for r in requests(10, vocab, 9) {
+            server.submit(r);
+        }
+        let health = server.health();
+        assert!(health.stages.iter().all(|s| s.alive));
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.responses.len(), 10);
+        assert!(report.responses.iter().all(|r| r.is_ok()));
+        assert_eq!(report.metrics.requests_served, 10);
+        assert_eq!(report.restarts, 0);
+        assert_eq!(report.engines.len(), 1, "engine returned via spare pool");
+    }
+
+    #[test]
+    fn wedged_stage_is_restarted_and_its_batch_failed() {
+        let vocab = 8;
+        let mut wedged = SyntheticEngine::instant(vocab);
+        wedged.wedge_on_forward = Some(2);
+        let spare = SyntheticEngine::instant(vocab);
+        let server = SupervisedServer::new(vec![wedged, spare], one_by_one(1), fast_sup());
+        for r in requests(5, vocab, 3) {
+            server.submit(r);
+        }
+        // wait for the watchdog to detect and restart
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while server.restarts() == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(server.restarts(), 1, "watchdog restarted the stage");
+        let report = server.shutdown().unwrap();
+        let mut got = report.responses;
+        got.sort_by_key(|r| r.id);
+        assert_eq!(got.len(), 5, "every request answered");
+        let failed: Vec<&Response> = got.iter().filter(|r| !r.is_ok()).collect();
+        assert_eq!(failed.len(), 1, "exactly the wedged batch failed");
+        match &failed[0].status {
+            ResponseStatus::Failed(msg) => assert!(msg.contains("stalled"), "{msg}"),
+            other => panic!("wrong status: {other:?}"),
+        }
+        // the server kept serving after the restart
+        assert_eq!(got.iter().filter(|r| r.is_ok()).count(), 4);
+        assert_eq!(report.restarts, 1);
+        // the spare engine executed the post-restart traffic and came
+        // back through the pool; the wedged engine is gone with its thread
+        assert_eq!(report.engines.len(), 1);
+        assert!(report.engines[0].forwards >= 3);
+    }
+
+    #[test]
+    fn panic_degrades_batch_without_restart() {
+        let vocab = 8;
+        let mut engine = SyntheticEngine::instant(vocab);
+        engine.panic_on_forward = Some(2);
+        let server = SupervisedServer::new(vec![engine], one_by_one(1), fast_sup());
+        for r in requests(5, vocab, 3) {
+            server.submit(r);
+        }
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.responses.len(), 5);
+        let failed: Vec<&Response> = report.responses.iter().filter(|r| !r.is_ok()).collect();
+        assert_eq!(failed.len(), 1);
+        assert!(matches!(&failed[0].status, ResponseStatus::Failed(m) if m.contains("panic")));
+        assert_eq!(report.restarts, 0, "a panic is handled in-thread, not by restart");
+    }
+
+    #[test]
+    fn no_spare_degrades_to_structured_failures() {
+        let vocab = 8;
+        let mut wedged = SyntheticEngine::instant(vocab);
+        wedged.wedge_on_forward = Some(1);
+        let server = SupervisedServer::new(vec![wedged], one_by_one(1), fast_sup());
+        for r in requests(3, vocab, 7) {
+            server.submit(r);
+        }
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while server.health().stages[1].alive && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let health = server.health();
+        assert!(!health.stages[1].alive, "execute reported down");
+        assert!(!health.healthy);
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.responses.len(), 3, "no request left unanswered");
+        assert!(report.responses.iter().all(|r| !r.is_ok()));
+        assert!(report
+            .responses
+            .iter()
+            .all(|r| matches!(&r.status, ResponseStatus::Failed(_))));
+        assert_eq!(report.restarts, 0);
+        assert!(report.engines.is_empty(), "the only engine wedged and was lost");
+    }
+
+    #[test]
+    fn health_report_renders_scrub_and_quarantine() {
+        let vocab = 8;
+        let mut server = SupervisedServer::new(
+            vec![SyntheticEngine::instant(vocab)],
+            one_by_one(1),
+            fast_sup(),
+        );
+        let scrub = SharedScrubMetrics::new();
+        scrub.record_pass(100, 4096, 2, 1, 0.5);
+        server.attach_scrub(scrub);
+        let health = server.health();
+        let scrub = health.scrub.expect("scrub attached");
+        assert_eq!(scrub.records_scanned, 100);
+        assert_eq!(health.quarantined, 1, "falls back to scrub counters");
+        assert!(!health.healthy, "unrecoverable records mean unhealthy");
+        let text = health.render();
+        assert!(text.contains("stage admission"));
+        assert!(text.contains("scrub: 1 passes"));
+        assert!(text.contains("quarantined 1"));
+        server.shutdown().unwrap();
+    }
+}

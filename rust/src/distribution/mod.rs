@@ -40,7 +40,10 @@ pub use availability::{AvailabilityMap, UNIT_EMBED};
 pub use fec::{fec_for, FecCodec, FecId, FecParams};
 pub use receiver::{RecvReport, Receiver};
 pub use sender::{Manifest, SendReport, Sender, SenderConfig, StreamPlan};
-pub use transport::{FaultPlan, FaultyChannel, LosslessChannel, Transport, TransportStats};
+pub use transport::{
+    FaultPlan, FaultyChannel, LosslessChannel, Transport, TransportStats, UdpTransport,
+    UDP_MAX_PAYLOAD,
+};
 
 /// Structured distribution-path errors. The receiver's contract is that
 /// every malformed packet, unrecoverable block, or corrupt record maps

@@ -308,7 +308,7 @@ impl SenderConfig {
     /// configured symbol width, widen (doubling) until the block fits in
     /// [`MAX_SOURCE_SYMBOLS`] source symbols, then fund parity from the
     /// ratio.
-    fn params_for(&self, len: usize) -> Result<FecParams, DistError> {
+    pub(crate) fn params_for(&self, len: usize) -> Result<FecParams, DistError> {
         if len == 0 {
             return Err(DistError::BadParams("empty block"));
         }
@@ -340,7 +340,7 @@ impl SenderConfig {
 /// with the first record, and each block closes at the first record
 /// boundary at or past the target size. `walk_shard` has already
 /// CRC-verified every record, so the sender never streams corrupt data.
-fn plan_shard_blocks(
+pub(crate) fn plan_shard_blocks(
     stream: u16,
     data: &[u8],
     cfg: &SenderConfig,

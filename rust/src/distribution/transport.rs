@@ -13,6 +13,8 @@
 
 use crate::util::prng::Xoshiro256;
 use std::collections::VecDeque;
+use std::net::{SocketAddr, ToSocketAddrs, UdpSocket};
+use std::time::Duration;
 
 /// Where packets go. In-process for the sim/bench/tests; the trait is
 /// the seam a real datagram socket would implement.
@@ -193,6 +195,87 @@ impl Transport for FaultyChannel {
     }
 }
 
+/// Largest payload one UDP datagram can carry (65535 minus the 8-byte
+/// UDP and 20-byte IPv4 headers).
+pub const UDP_MAX_PAYLOAD: usize = 65_507;
+
+/// A real datagram socket behind the same [`Transport`] seam the sim
+/// channels implement — `std::net::UdpSocket` only, no new crates. UDP
+/// already matches the trait's loss model (datagrams may be dropped,
+/// duplicated, or reordered in flight; the FEC layer above is what makes
+/// that survivable), so `send` is fire-and-forget and `recv` maps a
+/// receive timeout to `None` ("drained for now") instead of blocking
+/// forever.
+///
+/// [`FaultyChannel`] stays the CI tier: it is deterministic and needs no
+/// network. `UdpTransport` is the deployment tier the CLI's sender and
+/// receiver run on when two processes stream a model for real.
+pub struct UdpTransport {
+    socket: UdpSocket,
+    peer: SocketAddr,
+    /// reusable receive buffer sized for the largest possible datagram
+    buf: Vec<u8>,
+    pub stats: TransportStats,
+}
+
+impl UdpTransport {
+    /// Bind `local` (e.g. `"127.0.0.1:0"`) and aim `send` at `peer`.
+    /// `recv` waits at most `recv_timeout` before reporting the socket
+    /// drained.
+    pub fn bind<A: ToSocketAddrs, B: ToSocketAddrs>(
+        local: A,
+        peer: B,
+        recv_timeout: Duration,
+    ) -> std::io::Result<Self> {
+        let socket = UdpSocket::bind(local)?;
+        // a zero Duration means "block forever" to set_read_timeout —
+        // clamp up so the trait's non-blocking drain contract holds
+        socket.set_read_timeout(Some(recv_timeout.max(Duration::from_millis(1))))?;
+        let peer = peer
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidInput, "empty peer"))?;
+        Ok(Self {
+            socket,
+            peer,
+            buf: vec![0u8; UDP_MAX_PAYLOAD],
+            stats: TransportStats::default(),
+        })
+    }
+
+    /// The bound local address (port 0 resolves at bind time).
+    pub fn local_addr(&self) -> std::io::Result<SocketAddr> {
+        self.socket.local_addr()
+    }
+}
+
+impl Transport for UdpTransport {
+    fn send(&mut self, packet: &[u8]) {
+        self.stats.sent += 1;
+        // fire-and-forget: an oversized or unroutable datagram counts
+        // as dropped, exactly like the lossy sim channel
+        match self.socket.send_to(packet, self.peer) {
+            Ok(_) => self.stats.delivered += 1,
+            Err(_) => self.stats.dropped += 1,
+        }
+    }
+
+    fn recv(&mut self) -> Option<Vec<u8>> {
+        match self.socket.recv_from(&mut self.buf) {
+            Ok((n, _)) => Some(self.buf[..n].to_vec()),
+            // WouldBlock (unix) / TimedOut (windows) both mean "nothing
+            // arrived within the timeout"
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                None
+            }
+            Err(_) => None,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -259,6 +342,41 @@ mod tests {
         // drop fraction must exceed the trigger rate alone
         let frac = ch.stats.dropped as f64 / ch.stats.sent as f64;
         assert!(frac > 0.08, "burst amplification missing: {frac}");
+    }
+
+    #[test]
+    fn udp_loopback_roundtrips_packets() {
+        let timeout = Duration::from_millis(200);
+        // receiver first (its peer is never used), then a sender aimed
+        // at the receiver's ephemeral port
+        let mut a = UdpTransport::bind("127.0.0.1:0", "127.0.0.1:9", timeout).unwrap();
+        let mut b =
+            UdpTransport::bind("127.0.0.1:0", a.local_addr().unwrap(), timeout).unwrap();
+
+        let sent = pkts(20);
+        for p in &sent {
+            b.send(p);
+        }
+        assert_eq!(b.stats.sent, 20);
+        let mut got = Vec::new();
+        while let Some(p) = a.recv() {
+            got.push(p);
+        }
+        // loopback UDP is reliable in practice; tolerate kernel-side
+        // drops but require the common case to hold
+        assert!(!got.is_empty(), "nothing arrived over loopback");
+        for p in &got {
+            assert!(sent.contains(p), "payload corrupted in flight");
+        }
+    }
+
+    #[test]
+    fn udp_recv_times_out_to_none() {
+        let mut t =
+            UdpTransport::bind("127.0.0.1:0", "127.0.0.1:9", Duration::from_millis(20)).unwrap();
+        let start = std::time::Instant::now();
+        assert!(t.recv().is_none(), "idle socket must drain to None");
+        assert!(start.elapsed() < Duration::from_secs(5), "timeout honored");
     }
 
     #[test]

@@ -17,6 +17,7 @@ pub mod huffman;
 pub mod model;
 pub mod runtime;
 pub mod scheduler;
+pub mod scrub;
 pub mod tensormgr;
 pub mod util;
 

@@ -17,6 +17,9 @@
 //!   recv        reassemble a packet trace back into a verified store
 //!   distribute-sim  in-process sender → lossy channel → receiver sweep
 //!               with retransmission rounds and byte-identity check
+//!   protect     write RS-parity repair sidecars for an existing store
+//!   chaos       seeded bit-flip injection into store records (testing)
+//!   scrub       one paced verify-and-repair pass over a store
 //!   zoo         list the model zoo with sizes and paper targets
 
 use ecf8::codec::{codecs, container, decode, encode, CodecId, Ecf8Params, Fp8Format};
@@ -52,6 +55,9 @@ fn main() {
         "send" => cmd_send(args),
         "recv" => cmd_recv(args),
         "distribute-sim" => cmd_distribute_sim(args),
+        "protect" => cmd_protect(args),
+        "chaos" => cmd_chaos(args),
+        "scrub" => cmd_scrub(args),
         "zoo" => cmd_zoo(args),
         "--help" | "-h" | "help" => {
             usage();
@@ -94,6 +100,11 @@ fn usage() {
            recv        --trace <file> --out <dir>  reassemble + verify a trace\n\
            distribute-sim --loss R --parity R --seed S  in-process lossy\n\
                                              transfer sweep, byte-identity check\n\
+           protect     <model-dir> --parity P  write RS-parity repair sidecars\n\
+                                             (P percent overhead per shard)\n\
+           chaos       <model-dir> --flips N --seed S  seeded bit flips into\n\
+                                             store records (corruption testing)\n\
+           scrub       <model-dir>           one paced verify + repair pass\n\
            zoo                               list models and paper targets\n"
     );
 }
@@ -201,48 +212,65 @@ fn cmd_inspect(raw: Vec<String>) -> anyhow::Result<()> {
     }
 }
 
-/// `inspect --repair`: the `repair_scan` recovery pass over a v2 store.
+/// `inspect --repair`: recovery pass over a v2 store — repair what the
+/// parity sidecars can rebuild, quarantine the rest, and exit non-zero
+/// only when unservable layers remain *after* the repair.
 fn inspect_repair(dir: &std::path::Path) -> anyhow::Result<()> {
-    let report = ecf8::model::store::repair_scan(dir, true)?;
+    let outcome = ecf8::scrub::repair_store(dir)?;
     println!("recovery scan: {}", dir.display());
     println!(
-        "records:       {} checked, {} clean, {} quarantined",
-        report.records,
-        report.clean,
-        report.quarantined.len()
+        "records:       {} checked, {} clean before repair",
+        outcome.before.records, outcome.before.clean
     );
-    if !report.missing_shards.is_empty() {
-        println!("missing shards: {:?}", report.missing_shards);
+    if !outcome.before.missing_shards.is_empty() {
+        println!("missing shards: {:?}", outcome.before.missing_shards);
     }
-    for q in &report.quarantined {
+    for r in &outcome.repaired {
+        println!(
+            "  REPAIRED {} (shard {} offset {}): {}",
+            r.tensor, r.shard, r.offset, r.reason
+        );
+    }
+    for q in &outcome.unrecoverable {
         println!(
             "  CORRUPT {} (shard {} offset {} len {}): {}",
             q.tensor, q.shard, q.offset, q.len, q.reason
         );
     }
     println!(
+        "repaired:      {} records restored from parity sidecars",
+        outcome.repaired.len()
+    );
+    println!(
+        "quarantined:   {} records unrecoverable (beyond parity budget)",
+        outcome.unrecoverable.len()
+    );
+    let after = &outcome.after;
+    println!(
         "servable:      {}/{} transformer layers{}",
-        report.servable_layer_count(),
-        report.layers.len(),
-        if report.other_servable {
+        after.servable_layer_count(),
+        after.layers.len(),
+        if after.other_servable {
             ", embed/head intact"
         } else {
             ", embed/head DAMAGED"
         }
     );
-    for (l, ok) in &report.layers {
+    for (l, ok) in &after.layers {
         if !ok {
             println!("  layer {l}: UNSERVABLE");
         }
     }
-    match &report.quarantine_path {
+    match &after.quarantine_path {
         Some(p) => println!("quarantine:    {}", p.display()),
         None => println!("quarantine:    clean store, no sidecar written"),
     }
-    if !report.is_clean() {
+    let unservable =
+        after.servable_layer_count() < after.layers.len() || !after.other_servable;
+    if unservable {
         anyhow::bail!(
-            "{} records quarantined — store is damaged (partially servable)",
-            report.quarantined.len()
+            "{} records unrecoverable — store is damaged (partially servable)",
+            outcome.unrecoverable.len()
         );
     }
     Ok(())
@@ -377,6 +405,12 @@ fn cmd_pack(raw: Vec<String>) -> anyhow::Result<()> {
         "append N incompressible raw-FP8-codec tensors (demo-only artifact)",
         "0",
     )
+    .opt_default(
+        "parity",
+        "also write RS-parity repair sidecars at this percent overhead \
+         per shard (0 = none; v2 stores only)",
+        "0",
+    )
     .flag("v1", "write the legacy v1 per-tensor layout instead")
     .flag(
         "interleaved",
@@ -446,7 +480,31 @@ fn cmd_pack(raw: Vec<String>) -> anyhow::Result<()> {
             lazy.len(),
             lazy.index().layer_extents.len()
         );
+        let parity_pct: u32 = a.get_parse_or("parity", 0);
+        if parity_pct > 0 {
+            protect_dir(&store.root.join(m.name), parity_pct)?;
+        }
     }
+    Ok(())
+}
+
+/// Shared by `pack --parity` and `ecf8 protect`: write the sidecars and
+/// report the overhead actually paid.
+fn protect_dir(dir: &std::path::Path, parity_pct: u32) -> anyhow::Result<()> {
+    let cfg = ecf8::distribution::SenderConfig {
+        parity_ratio: parity_pct as f64 / 100.0,
+        ..Default::default()
+    };
+    let report = ecf8::scrub::protect_store(dir, &cfg)
+        .map_err(|e| anyhow::anyhow!("writing parity sidecars: {e}"))?;
+    println!(
+        "  parity: {} sidecars, {} blocks, {} parity for {} source ({:.1}% overhead)",
+        report.shards,
+        report.blocks,
+        humanize::bytes(report.parity_bytes),
+        humanize::bytes(report.source_bytes),
+        report.parity_bytes as f64 / report.source_bytes.max(1) as f64 * 100.0
+    );
     Ok(())
 }
 
@@ -580,6 +638,11 @@ fn cmd_serve(raw: Vec<String>) -> anyhow::Result<()> {
             "kv-blocks",
             "KV block pool size (--continuous; 0 = size for batch × worst case)",
             "0",
+        )
+        .flag(
+            "health-log",
+            "serve through the supervised coordinator (heartbeat watchdog \
+             over the execute stage) and print HealthReport lines",
         );
     let a = cmd.parse(raw).map_err(|e| handle_help(&cmd, e))?;
     let name = a.get_or("model", "tiny-llm-7m");
@@ -612,6 +675,9 @@ fn cmd_serve(raw: Vec<String>) -> anyhow::Result<()> {
             a.get_parse_or("kv-blocks", 0),
             seed,
         );
+    }
+    if a.flag("health-log") {
+        return serve_supervised(ex, &m, n_requests, batch, seed);
     }
     let mut server = Server::new(
         ex,
@@ -654,6 +720,59 @@ fn cmd_serve(raw: Vec<String>) -> anyhow::Result<()> {
             humanize::duration(s.p99)
         );
     }
+    Ok(())
+}
+
+/// `serve --health-log`: the batch-level loop through the supervised
+/// coordinator — heartbeat watchdog over the execute stage, wedged
+/// batches failed structurally, HealthReport printed as the run goes.
+fn serve_supervised(
+    ex: LlmExecutor,
+    m: &ecf8::model::config::ModelConfig,
+    n_requests: usize,
+    batch: usize,
+    seed: u64,
+) -> anyhow::Result<()> {
+    use ecf8::coordinator::{PipelineConfig, SupervisedServer, SupervisorConfig};
+    let server = SupervisedServer::new(
+        vec![ex],
+        PipelineConfig::new(ServeConfig {
+            max_batch: batch,
+            linger: std::time::Duration::from_millis(5),
+        }),
+        SupervisorConfig::default(),
+    );
+    println!(
+        "serving {n_requests} requests supervised at exec batch {} on PJRT CPU",
+        server.exec_batch()
+    );
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut done = Vec::new();
+    for id in 0..n_requests as u64 {
+        let tokens: Vec<i32> = (0..SEQ_LEN)
+            .map(|_| rng.next_below(m.vocab as u64) as i32)
+            .collect();
+        server.submit(Request::new(id, tokens));
+        done.extend(server.collect_ready());
+        if (id + 1) % (n_requests as u64 / 4).max(1) == 0 {
+            print!("{}", server.health().render());
+        }
+    }
+    let report = server.shutdown()?;
+    done.extend(report.responses);
+    let ok = done.iter().filter(|r| r.is_ok()).count();
+    println!(
+        "served {ok}/{} requests ({} failed, {} stage restarts) in {}",
+        done.len(),
+        done.len() - ok,
+        report.restarts,
+        humanize::duration(report.metrics.wall_seconds())
+    );
+    println!(
+        "throughput: {:.2} tokens/s, {:.2} req/s",
+        report.metrics.tokens_per_second(),
+        report.metrics.requests_per_second()
+    );
     Ok(())
 }
 
@@ -1137,6 +1256,123 @@ fn cmd_distribute_sim(raw: Vec<String>) -> anyhow::Result<()> {
         std::fs::remove_dir_all(&work).ok();
     }
     outcome
+}
+
+/// `ecf8 protect`: retrofit RS-parity repair sidecars onto an existing
+/// packed store (what `pack --parity` does at pack time).
+fn cmd_protect(raw: Vec<String>) -> anyhow::Result<()> {
+    let cmd = Command::new("protect", "write RS-parity repair sidecars for a store")
+        .arg("model-dir", "a packed container-v2 store directory")
+        .opt_default("parity", "parity overhead percent per shard block", "25");
+    let a = cmd.parse(raw).map_err(|e| handle_help(&cmd, e))?;
+    let [dir] = a.positional() else {
+        anyhow::bail!("usage: ecf8 protect <model-dir> [--parity P]");
+    };
+    let pct: u32 = a.get_parse_or("parity", 25);
+    anyhow::ensure!(pct > 0, "--parity must be > 0 (there is nothing to write at 0%)");
+    println!("protecting {} at {pct}% parity", dir);
+    protect_dir(std::path::Path::new(dir), pct)
+}
+
+/// `ecf8 chaos`: seeded, index-driven bit flips into store records — the
+/// corruption injector the self-healing tests and the CI chaos smoke
+/// drive. Deterministic for a given (store, --flips, --seed); shards are
+/// rewritten tmp+rename so live mappings of the pristine inode survive.
+fn cmd_chaos(raw: Vec<String>) -> anyhow::Result<()> {
+    let cmd = Command::new("chaos", "seeded bit-flip injection into store records")
+        .arg("model-dir", "a packed container-v2 store directory")
+        .opt_default("flips", "number of single-bit flips to inject", "4")
+        .opt_default("seed", "rng seed (same seed = same flips)", "1");
+    let a = cmd.parse(raw).map_err(|e| handle_help(&cmd, e))?;
+    let [dir] = a.positional() else {
+        anyhow::bail!("usage: ecf8 chaos <model-dir> --flips N --seed S");
+    };
+    let dir = std::path::Path::new(dir);
+    let index_bytes = std::fs::read(dir.join(container::INDEX_FILE))?;
+    let index = container::TensorIndex::deserialize(&index_bytes)?;
+    anyhow::ensure!(!index.entries.is_empty(), "store has no records");
+    let n_flips: u64 = a.get_parse_or("flips", 4);
+    let seed: u64 = a.get_parse_or("seed", 1);
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut shards: std::collections::BTreeMap<u32, Vec<u8>> = std::collections::BTreeMap::new();
+    for f in 0..n_flips {
+        let e = &index.entries[rng.next_below(index.entries.len() as u64) as usize];
+        let bytes = match shards.entry(e.shard) {
+            std::collections::btree_map::Entry::Occupied(o) => o.into_mut(),
+            std::collections::btree_map::Entry::Vacant(v) => {
+                v.insert(std::fs::read(dir.join(container::shard_file_name(e.shard)))?)
+            }
+        };
+        // flip payload bytes only: every payload bit is CRC-covered, so
+        // the scrubber's detection guarantee is total over this range
+        let header = container::RECORD_HEADER_BYTES as u64;
+        let off = (e.offset + header + rng.next_below(e.len - header)) as usize;
+        let bit = rng.next_below(8) as u32;
+        bytes[off] ^= 1 << bit;
+        println!(
+            "flip {f}: {} shard {} byte {} bit {bit}",
+            e.name, e.shard, off
+        );
+    }
+    // commit tmp+rename: never mutate an inode a server may have mapped
+    for (s, bytes) in &shards {
+        let final_path = dir.join(container::shard_file_name(*s));
+        let tmp = dir.join(format!("{}.chaos.tmp", container::shard_file_name(*s)));
+        std::fs::write(&tmp, bytes)?;
+        std::fs::remove_file(&final_path).ok();
+        std::fs::rename(&tmp, &final_path)?;
+    }
+    println!("chaos: {n_flips} bit flips across {} shards (seed {seed})", shards.len());
+    Ok(())
+}
+
+/// `ecf8 scrub`: one paced verify-every-record pass, repairing from the
+/// parity sidecars where possible. Non-zero exit iff anything stayed
+/// unrecoverable.
+fn cmd_scrub(raw: Vec<String>) -> anyhow::Result<()> {
+    let cmd = Command::new("scrub", "one paced verify + repair pass over a store")
+        .arg("model-dir", "a packed container-v2 store directory")
+        .opt_default(
+            "budget-mb",
+            "verification read budget in MiB/s (0 = unpaced)",
+            "0",
+        );
+    let a = cmd.parse(raw).map_err(|e| handle_help(&cmd, e))?;
+    let [dir] = a.positional() else {
+        anyhow::bail!("usage: ecf8 scrub <model-dir> [--budget-mb N]");
+    };
+    let budget_mb: u64 = a.get_parse_or("budget-mb", 0);
+    let mut pacer = ecf8::scrub::Pacer::new(
+        Arc::new(ecf8::scheduler::SystemClock),
+        budget_mb << 20,
+    );
+    let report = ecf8::scrub::scrub_pass(std::path::Path::new(dir), &mut pacer, None)?;
+    println!(
+        "scrub pass: {} records verified ({} clean), {} read in {}",
+        report.records,
+        report.clean,
+        humanize::bytes(report.bytes_scanned),
+        humanize::duration(report.duration.as_secs_f64())
+    );
+    for r in &report.repaired {
+        println!("  REPAIRED {} (shard {} offset {}): {}", r.tensor, r.shard, r.offset, r.reason);
+    }
+    for q in &report.unrecoverable {
+        println!(
+            "  UNRECOVERABLE {} (shard {} offset {} len {}): {}",
+            q.tensor, q.shard, q.offset, q.len, q.reason
+        );
+    }
+    println!("repaired:      {}", report.repaired.len());
+    println!("unrecoverable: {}", report.unrecoverable.len());
+    if !report.unrecoverable.is_empty() {
+        anyhow::bail!(
+            "{} records beyond the parity budget — run `ecf8 inspect --repair` \
+             for the servability breakdown",
+            report.unrecoverable.len()
+        );
+    }
+    Ok(())
 }
 
 fn cmd_zoo(_raw: Vec<String>) -> anyhow::Result<()> {

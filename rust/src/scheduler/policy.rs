@@ -37,6 +37,7 @@ use super::iteration::{argmax, IterationBatch, IterationEngine, SeqSlot};
 use super::kv_cache::{KvCacheConfig, KvCacheManager, KvError, KvStats};
 use super::Clock;
 use crate::coordinator::metrics::SchedulerMetrics;
+use crate::coordinator::supervisor::{Heartbeat, StageHealth};
 use crate::util::channel::{self, RecvTimeoutError};
 use crate::util::threadpool::ThreadPool;
 use anyhow::{anyhow, Result};
@@ -623,6 +624,7 @@ pub struct ContinuousServer<E: IterationEngine + 'static> {
     req_tx: Option<channel::Sender<GenRequest>>,
     resp_rx: mpsc::Receiver<GenResponse>,
     handle: Option<JoinHandle<SchedulerOutcome<E>>>,
+    beat: Heartbeat,
 }
 
 /// How long the scheduler thread sleeps on an idle queue before
@@ -633,11 +635,17 @@ impl<E: IterationEngine + 'static> ContinuousServer<E> {
     pub fn new(engine: E, sched: ContinuousScheduler) -> Self {
         let (req_tx, req_rx) = channel::bounded::<GenRequest>(4096);
         let (resp_tx, resp_rx) = mpsc::channel::<GenResponse>();
-        let handle = std::thread::spawn(move || {
+        let beat = Heartbeat::new();
+        let handle = std::thread::spawn({
+            let beat = beat.clone();
+            move || {
             let mut engine = engine;
             let mut sched = sched;
             let mut first_err: Option<anyhow::Error> = None;
             loop {
+                // one pulse per scheduler iteration: the watchdog-style
+                // liveness signal `health()` reports on
+                beat.pulse();
                 while let Some(r) = req_rx.try_recv() {
                     sched.submit(r);
                 }
@@ -675,11 +683,27 @@ impl<E: IterationEngine + 'static> ContinuousServer<E> {
             }
             let leak = sched.kv.leak_check();
             (engine, sched.metrics.clone(), sched.kv.stats().clone(), leak, first_err)
-        });
+        }});
         Self {
             req_tx: Some(req_tx),
             resp_rx,
             handle: Some(handle),
+            beat,
+        }
+    }
+
+    /// The scheduler stage's liveness: thread running (join-handle
+    /// check) plus its heartbeat age. The continuous coordinator owns
+    /// its engine outright, so there is no restart path — supervision
+    /// here is observe-and-report, feeding the same [`StageHealth`]
+    /// surface as [`crate::coordinator::SupervisedServer`].
+    pub fn health(&self) -> StageHealth {
+        StageHealth {
+            name: "scheduler".into(),
+            alive: self.handle.as_ref().map(|h| !h.is_finished()).unwrap_or(false),
+            beats: self.beat.beats(),
+            last_beat_age: self.beat.age(),
+            restarts: 0,
         }
     }
 
@@ -1002,6 +1026,9 @@ mod tests {
             server.submit(r.clone());
             got.extend(server.collect_ready());
         }
+        let health = server.health();
+        assert_eq!(health.name, "scheduler");
+        assert!(health.alive, "scheduler thread live while serving");
         let report = server.shutdown().unwrap();
         got.extend(report.responses);
         report.leak_check.expect("zero leaked blocks");

@@ -1,0 +1,33 @@
+//! Self-healing model store: parity sidecars + paced CRC scrubbing +
+//! index-driven local repair.
+//!
+//! A lossless-compression system is exactly the system that cannot
+//! tolerate silent corruption: one flipped bit in a Huffman payload
+//! changes model outputs undetectably unless every record's CRC is
+//! actually re-checked. This module closes the loop PR 6's quarantine
+//! scan opened — a packed store now *detects* (paced background CRC
+//! verification), *repairs* (record-aligned Reed–Solomon parity
+//! sidecars, the same GF(2⁸) codec and block planner the fleet sender
+//! streams with), and *keeps serving* (tmp+rename commits that never
+//! touch a mapped inode; `LazyModel`'s decode-time retry turns a
+//! corrupt record under live traffic into one slow load).
+//!
+//! Layer map:
+//! - [`parity`] — the `shard-NNNN.ecf8p` sidecar format, build/IO, and
+//!   block-level erasure repair.
+//! - [`scrubber`] — the [`Pacer`], the index-driven
+//!   [`repair_store`]/[`repair_shard`] path, and the background
+//!   [`Scrubber`] thread feeding
+//!   [`ScrubMetrics`](crate::coordinator::metrics::ScrubMetrics).
+
+pub mod parity;
+pub mod scrubber;
+
+pub use parity::{
+    load_sidecar, parity_file_name, protect_store, write_sidecar, ParityBlock, ParitySidecar,
+    ProtectReport, ScrubError, PARITY_MAGIC, PARITY_VERSION,
+};
+pub use scrubber::{
+    repair_shard, repair_store, scrub_pass, Pacer, RepairedRecord, ScrubConfig, ScrubPassReport,
+    Scrubber, ShardRepair, StopFlag, StoreRepairOutcome,
+};

@@ -1,0 +1,690 @@
+//! Parity sidecars: local Reed–Solomon repair data for a packed store.
+//!
+//! `shard-NNNN.ecf8p` sits next to its shard and holds, per
+//! record-aligned source block (the same [`plan_shard_blocks`]
+//! decomposition the fleet sender streams), the block's FEC geometry and
+//! its `parity` repair symbols. Any corrupt byte range that erases at
+//! most `parity` symbols of a block is reconstructible *locally* — no
+//! re-download — from the ≥ k surviving symbols.
+//!
+//! ## Sidecar layout (`ECSP`, version 1, little-endian)
+//!
+//! ```text
+//! offset  field           type
+//! 0       magic           [u8; 4]  = "ECSP"
+//! 4       version         u16      = 1
+//! 6       shard_index     u16
+//! 8       fec id          u8
+//! 9       pad             [u8; 3]  = 0
+//! 12      n_blocks        u32
+//! 16      shard_len       u64      pristine shard file length
+//! 24      shard_crc       u32      CRC-32 of the pristine shard file
+//! 28      reserved        u32      = 0
+//! 32      block table     n_blocks × 24:
+//!           block u32 | offset u64 | len u32 | k u16 | parity u16
+//!           | symbol_bytes u32
+//! ...     per block, in table order:
+//!           k × u32                  source-symbol CRC-32s
+//!           parity × symbol_bytes    parity symbols
+//! tail    crc32           u32      over every preceding byte
+//! ```
+//!
+//! `shard_crc` is the post-repair identity oracle: a fully repaired
+//! shard must hash back to the pristine CRC, so a "repaired" store is
+//! *provably* byte-identical to the store that was protected, not merely
+//! record-CRC-consistent.
+//!
+//! The per-symbol CRCs are what make record-level damage reports
+//! repairable at all: the index can only attribute corruption to a
+//! whole record ("this record's payload CRC fails"), and a typical
+//! record spans more symbols than a block's parity budget. Erasing
+//! every symbol a bad record touches would routinely be beyond budget
+//! for a single flipped bit. Instead [`ParitySidecar::repair`] uses the
+//! caller's bad ranges only to pick which blocks to examine, then
+//! localizes erasures inside each block by re-hashing its source
+//! symbols against the stored CRCs — one flipped byte erases one
+//! symbol, not its whole record.
+
+use crate::codec::container::{self, RecordHeader, SHARD_HEADER_BYTES};
+use crate::distribution::fec::MAX_TOTAL_SYMBOLS;
+use crate::distribution::sender::{plan_shard_blocks, BlockPlan, SenderConfig, StreamPlan};
+use crate::distribution::{fec_for, DistError, FecId, FecParams};
+use crate::util::crc32::crc32;
+use std::fmt;
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+
+pub const PARITY_MAGIC: [u8; 4] = *b"ECSP";
+pub const PARITY_VERSION: u16 = 1;
+/// fixed header bytes before the block table
+pub const PARITY_HEADER_BYTES: usize = 32;
+/// bytes per block-table row
+pub const PARITY_BLOCK_ROW_BYTES: usize = 24;
+
+/// `shard-0007.ecf8s` → `shard-0007.ecf8p`.
+pub fn parity_file_name(shard: u32) -> String {
+    format!("shard-{shard:04}.ecf8p")
+}
+
+/// Structured failures of the sidecar/repair layer. Everything here is a
+/// *detected* condition — corruption never surfaces as a panic or as
+/// silently wrong bytes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ScrubError {
+    BadMagic,
+    BadVersion(u16),
+    Truncated { need: usize, have: usize },
+    CrcMismatch { stored: u32, computed: u32 },
+    /// sidecar disagrees with the shard it claims to protect
+    Stale(String),
+    /// block geometry in the table fails [`FecParams`] validation
+    BadGeometry(String),
+    /// more symbols erased than parity can rebuild
+    Unrecoverable { block: u32, have: usize, need: usize },
+    Fec(DistError),
+    Io(String),
+}
+
+impl fmt::Display for ScrubError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ScrubError::BadMagic => write!(f, "bad parity sidecar magic"),
+            ScrubError::BadVersion(v) => write!(f, "unsupported sidecar version {v}"),
+            ScrubError::Truncated { need, have } => {
+                write!(f, "sidecar truncated: need {need} bytes, have {have}")
+            }
+            ScrubError::CrcMismatch { stored, computed } => write!(
+                f,
+                "sidecar CRC mismatch (stored {stored:#010x}, computed {computed:#010x})"
+            ),
+            ScrubError::Stale(why) => write!(f, "sidecar stale: {why}"),
+            ScrubError::BadGeometry(why) => write!(f, "bad block geometry: {why}"),
+            ScrubError::Unrecoverable { block, have, need } => write!(
+                f,
+                "block {block} unrecoverable: {have} symbols survive, {need} needed"
+            ),
+            ScrubError::Fec(e) => write!(f, "fec: {e}"),
+            ScrubError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ScrubError {}
+
+impl From<DistError> for ScrubError {
+    fn from(e: DistError) -> Self {
+        ScrubError::Fec(e)
+    }
+}
+
+/// One protected block: its plan (offset/len/geometry) plus the encoded
+/// parity symbols.
+#[derive(Debug, Clone)]
+pub struct ParityBlock {
+    pub plan: BlockPlan,
+    /// CRC-32 of each of the `plan.params.k` pristine source symbols
+    /// (post-padding) — the erasure localizer
+    pub source_crcs: Vec<u32>,
+    /// `plan.params.parity` symbols, each `symbol_bytes` long
+    pub parity: Vec<Vec<u8>>,
+}
+
+impl ParityBlock {
+    fn byte_range(&self) -> Range<u64> {
+        self.plan.offset..self.plan.offset + self.plan.len as u64
+    }
+}
+
+/// In-memory form of one `shard-NNNN.ecf8p` file.
+#[derive(Debug, Clone)]
+pub struct ParitySidecar {
+    pub shard: u16,
+    pub fec: FecId,
+    /// pristine shard file length
+    pub shard_len: u64,
+    /// CRC-32 of the pristine shard file — the repair identity oracle
+    pub shard_crc: u32,
+    pub blocks: Vec<ParityBlock>,
+}
+
+/// Split one block's bytes into `k` source symbols of `sym` bytes, the
+/// last zero-padded — byte-for-byte the sender's symbolization, so the
+/// sidecar's parity is interchangeable with wire parity.
+fn symbolize(raw: &[u8], params: &FecParams) -> Vec<Vec<u8>> {
+    let (k, sym) = (params.k as usize, params.symbol_bytes as usize);
+    (0..k)
+        .map(|i| {
+            let lo = i * sym;
+            let hi = ((i + 1) * sym).min(raw.len());
+            let mut s = raw[lo..hi.max(lo)].to_vec();
+            s.resize(sym, 0);
+            s
+        })
+        .collect()
+}
+
+impl ParitySidecar {
+    /// Encode parity for a pristine shard. The block decomposition is the
+    /// sender's record-aligned plan, so parity never straddles a record
+    /// arbitrarily: each block closes on a record boundary and the 8-byte
+    /// shard header rides with the first block (a flipped header bit is
+    /// repairable too). Refuses [`FecId::NoCode`] — a sidecar with no
+    /// parity protects nothing.
+    pub fn build(shard: u16, data: &[u8], cfg: &SenderConfig) -> Result<Self, ScrubError> {
+        if cfg.fec == FecId::NoCode {
+            return Err(ScrubError::BadGeometry("NoCode carries no parity".into()));
+        }
+        let codec = fec_for(cfg.fec.as_u8()).ok_or(DistError::UnknownFec(cfg.fec.as_u8()))?;
+        let plan: StreamPlan = plan_shard_blocks(shard, data, cfg)?;
+        let mut blocks = Vec::with_capacity(plan.blocks.len());
+        for b in plan.blocks {
+            let raw = &data[b.offset as usize..(b.offset + b.len as u64) as usize];
+            let source = symbolize(raw, &b.params);
+            let parity = codec.encode_parity(&b.params, &source)?;
+            let source_crcs = source.iter().map(|s| crc32(s)).collect();
+            blocks.push(ParityBlock {
+                plan: b,
+                source_crcs,
+                parity,
+            });
+        }
+        Ok(Self {
+            shard,
+            fec: cfg.fec,
+            shard_len: data.len() as u64,
+            shard_crc: crc32(data),
+            blocks,
+        })
+    }
+
+    /// Total parity payload bytes (the sidecar's storage overhead, table
+    /// and framing excluded).
+    pub fn parity_bytes(&self) -> u64 {
+        self.blocks
+            .iter()
+            .map(|b| b.parity.len() as u64 * b.plan.params.symbol_bytes as u64)
+            .sum()
+    }
+
+    pub fn serialize(&self) -> Vec<u8> {
+        let crc_table_bytes: usize = self.blocks.iter().map(|b| b.source_crcs.len() * 4).sum();
+        let mut out = Vec::with_capacity(
+            PARITY_HEADER_BYTES
+                + self.blocks.len() * PARITY_BLOCK_ROW_BYTES
+                + crc_table_bytes
+                + self.parity_bytes() as usize
+                + 4,
+        );
+        out.extend_from_slice(&PARITY_MAGIC);
+        out.extend_from_slice(&PARITY_VERSION.to_le_bytes());
+        out.extend_from_slice(&self.shard.to_le_bytes());
+        out.push(self.fec.as_u8());
+        out.extend_from_slice(&[0u8; 3]);
+        out.extend_from_slice(&(self.blocks.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.shard_len.to_le_bytes());
+        out.extend_from_slice(&self.shard_crc.to_le_bytes());
+        out.extend_from_slice(&0u32.to_le_bytes());
+        for b in &self.blocks {
+            out.extend_from_slice(&b.plan.block.to_le_bytes());
+            out.extend_from_slice(&b.plan.offset.to_le_bytes());
+            out.extend_from_slice(&b.plan.len.to_le_bytes());
+            out.extend_from_slice(&b.plan.params.k.to_le_bytes());
+            out.extend_from_slice(&b.plan.params.parity.to_le_bytes());
+            out.extend_from_slice(&b.plan.params.symbol_bytes.to_le_bytes());
+        }
+        for b in &self.blocks {
+            for c in &b.source_crcs {
+                out.extend_from_slice(&c.to_le_bytes());
+            }
+            for p in &b.parity {
+                out.extend_from_slice(p);
+            }
+        }
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    pub fn deserialize(data: &[u8]) -> Result<Self, ScrubError> {
+        let need = |n: usize| -> Result<(), ScrubError> {
+            if data.len() < n {
+                Err(ScrubError::Truncated {
+                    need: n,
+                    have: data.len(),
+                })
+            } else {
+                Ok(())
+            }
+        };
+        need(PARITY_HEADER_BYTES + 4)?;
+        let body = &data[..data.len() - 4];
+        let stored = u32::from_le_bytes(data[data.len() - 4..].try_into().expect("4 bytes"));
+        let computed = crc32(body);
+        if stored != computed {
+            return Err(ScrubError::CrcMismatch { stored, computed });
+        }
+        if body[..4] != PARITY_MAGIC {
+            return Err(ScrubError::BadMagic);
+        }
+        let version = u16::from_le_bytes(body[4..6].try_into().expect("2 bytes"));
+        if version != PARITY_VERSION {
+            return Err(ScrubError::BadVersion(version));
+        }
+        let shard = u16::from_le_bytes(body[6..8].try_into().expect("2 bytes"));
+        let fec = FecId::from_u8(body[8]).ok_or(ScrubError::Fec(DistError::UnknownFec(body[8])))?;
+        let n_blocks = u32::from_le_bytes(body[12..16].try_into().expect("4 bytes")) as usize;
+        let shard_len = u64::from_le_bytes(body[16..24].try_into().expect("8 bytes"));
+        let shard_crc = u32::from_le_bytes(body[24..28].try_into().expect("4 bytes"));
+        let table_end = PARITY_HEADER_BYTES + n_blocks * PARITY_BLOCK_ROW_BYTES;
+        need(table_end + 4)?;
+        let mut blocks = Vec::with_capacity(n_blocks);
+        for i in 0..n_blocks {
+            let row = &body[PARITY_HEADER_BYTES + i * PARITY_BLOCK_ROW_BYTES..];
+            let params = FecParams {
+                fec,
+                k: u16::from_le_bytes(row[16..18].try_into().expect("2 bytes")),
+                parity: u16::from_le_bytes(row[18..20].try_into().expect("2 bytes")),
+                symbol_bytes: u32::from_le_bytes(row[20..24].try_into().expect("4 bytes")),
+            };
+            params.validate().map_err(ScrubError::Fec)?;
+            blocks.push(ParityBlock {
+                plan: BlockPlan {
+                    block: u32::from_le_bytes(row[0..4].try_into().expect("4 bytes")),
+                    offset: u64::from_le_bytes(row[4..12].try_into().expect("8 bytes")),
+                    len: u32::from_le_bytes(row[12..16].try_into().expect("4 bytes")),
+                    params,
+                },
+                source_crcs: Vec::new(),
+                parity: Vec::new(),
+            });
+        }
+        let mut pos = table_end;
+        for b in &mut blocks {
+            let (k, p, sym) = (
+                b.plan.params.k as usize,
+                b.plan.params.parity as usize,
+                b.plan.params.symbol_bytes as usize,
+            );
+            need(pos + k * 4 + p * sym + 4)?;
+            b.source_crcs = (0..k)
+                .map(|j| {
+                    let c: [u8; 4] = body[pos + j * 4..pos + (j + 1) * 4]
+                        .try_into()
+                        .expect("4 bytes");
+                    u32::from_le_bytes(c)
+                })
+                .collect();
+            pos += k * 4;
+            b.parity = (0..p)
+                .map(|j| body[pos + j * sym..pos + (j + 1) * sym].to_vec())
+                .collect();
+            pos += p * sym;
+        }
+        if pos != body.len() {
+            return Err(ScrubError::Stale("trailing bytes after parity".into()));
+        }
+        Ok(Self {
+            shard,
+            fec,
+            shard_len,
+            shard_crc,
+            blocks,
+        })
+    }
+
+    /// Repair `shard` in place given `bad` byte ranges (any granularity —
+    /// they only select which blocks to examine; inside a block, erasures
+    /// are localized by re-hashing source symbols against the sidecar's
+    /// per-symbol CRCs, so a whole-record damage report costs only the
+    /// symbols that actually changed). Returns the indices of blocks that
+    /// were reconstructed. Blocks whose erasures exceed their parity
+    /// budget are reported in the error *after* every recoverable block
+    /// has still been repaired — partial repair beats none.
+    pub fn repair(
+        &self,
+        shard: &mut [u8],
+        bad: &[Range<u64>],
+    ) -> Result<Vec<u32>, (Vec<u32>, Vec<ScrubError>)> {
+        let mut repaired = Vec::new();
+        let mut failures = Vec::new();
+        for b in &self.blocks {
+            let range = b.byte_range();
+            let touched = bad.iter().any(|r| r.start < range.end && range.start < r.end);
+            if !touched {
+                continue;
+            }
+            match repair_block(b, shard) {
+                Ok(()) => repaired.push(b.plan.block),
+                Err(e) => failures.push(e),
+            }
+        }
+        if failures.is_empty() {
+            Ok(repaired)
+        } else {
+            Err((repaired, failures))
+        }
+    }
+}
+
+/// Reconstruct one block: symbolize the (corrupt) shard bytes, erase
+/// every symbol whose CRC deviates from the sidecar's recorded pristine
+/// CRC, append the sidecar's parity, run the registry codec's `recover`,
+/// and splice the first `len` bytes of the recovered source symbols back
+/// over the block.
+fn repair_block(block: &ParityBlock, shard: &mut [u8]) -> Result<(), ScrubError> {
+    let params = &block.plan.params;
+    let (k, sym) = (params.k as usize, params.symbol_bytes as usize);
+    let off = block.plan.offset as usize;
+    let len = block.plan.len as usize;
+    if off + len > shard.len() {
+        return Err(ScrubError::Stale(format!(
+            "block {} [{off}, {}) past shard end {}",
+            block.plan.block,
+            off + len,
+            shard.len()
+        )));
+    }
+    if block.parity.len() != params.parity as usize {
+        return Err(ScrubError::BadGeometry("parity symbol count".into()));
+    }
+    if block.source_crcs.len() != k {
+        return Err(ScrubError::BadGeometry("source CRC count".into()));
+    }
+    let codec = fec_for(params.fec.as_u8()).ok_or(DistError::UnknownFec(params.fec.as_u8()))?;
+    let source = symbolize(&shard[off..off + len], params);
+    let mut symbols: Vec<Option<Vec<u8>>> = Vec::with_capacity(params.n());
+    let mut erased = 0usize;
+    for (i, s) in source.into_iter().enumerate() {
+        if crc32(&s) != block.source_crcs[i] {
+            erased += 1;
+            symbols.push(None);
+        } else {
+            symbols.push(Some(s));
+        }
+    }
+    for p in &block.parity {
+        symbols.push(Some(p.clone()));
+    }
+    if erased > params.parity as usize {
+        return Err(ScrubError::Unrecoverable {
+            block: block.plan.block,
+            have: params.n() - erased,
+            need: k,
+        });
+    }
+    codec
+        .recover(params, &mut symbols)
+        .map_err(ScrubError::Fec)?;
+    for (i, s) in symbols[..k].iter().enumerate() {
+        let s = s.as_ref().expect("recover fills every source slot");
+        let lo = off + i * sym;
+        let hi = (off + (i + 1) * sym).min(off + len);
+        shard[lo..hi].copy_from_slice(&s[..hi - lo]);
+    }
+    Ok(())
+}
+
+/// Read `<dir>/shard-NNNN.ecf8p`; `Ok(None)` when the store was packed
+/// without `--parity`.
+pub fn load_sidecar(dir: &Path, shard: u32) -> Result<Option<ParitySidecar>, ScrubError> {
+    let path = dir.join(parity_file_name(shard));
+    let bytes = match std::fs::read(&path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(ScrubError::Io(format!("{}: {e}", path.display()))),
+    };
+    let sc = ParitySidecar::deserialize(&bytes)?;
+    if sc.shard as u32 != shard {
+        return Err(ScrubError::Stale(format!(
+            "sidecar claims shard {}, expected {shard}",
+            sc.shard
+        )));
+    }
+    Ok(Some(sc))
+}
+
+/// Commit a sidecar tmp+rename, the same crash-safe discipline as shard
+/// writes: readers only ever see a complete, CRC-trailed file.
+pub fn write_sidecar(dir: &Path, sidecar: &ParitySidecar) -> Result<PathBuf, ScrubError> {
+    let final_path = dir.join(parity_file_name(sidecar.shard as u32));
+    let tmp = dir.join(format!("{}.tmp", parity_file_name(sidecar.shard as u32)));
+    let io = |e: std::io::Error, what: &str| ScrubError::Io(format!("{what}: {e}"));
+    std::fs::write(&tmp, sidecar.serialize()).map_err(|e| io(e, "writing sidecar tmp"))?;
+    // unlink-then-rename: a reader holding the old mapping keeps its inode
+    let _ = std::fs::remove_file(&final_path);
+    std::fs::rename(&tmp, &final_path).map_err(|e| io(e, "committing sidecar"))?;
+    Ok(final_path)
+}
+
+/// What [`protect_store`] wrote.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ProtectReport {
+    pub shards: usize,
+    pub blocks: usize,
+    /// shard bytes covered
+    pub source_bytes: u64,
+    /// parity payload bytes written
+    pub parity_bytes: u64,
+}
+
+/// Write a parity sidecar for every shard of a packed v2 store. Idempotent:
+/// re-protecting replaces the sidecars (tmp+rename), so it is also how a
+/// store's parity budget is re-tuned in place.
+pub fn protect_store(dir: &Path, cfg: &SenderConfig) -> Result<ProtectReport, ScrubError> {
+    let index_bytes = std::fs::read(dir.join(container::INDEX_FILE))
+        .map_err(|e| ScrubError::Io(format!("reading index: {e}")))?;
+    let index =
+        container::TensorIndex::deserialize(&index_bytes).map_err(|e| ScrubError::Io(e.to_string()))?;
+    let mut report = ProtectReport::default();
+    for s in 0..index.n_shards {
+        let path = dir.join(container::shard_file_name(s));
+        let data =
+            std::fs::read(&path).map_err(|e| ScrubError::Io(format!("{}: {e}", path.display())))?;
+        let sidecar = ParitySidecar::build(s as u16, &data, cfg)?;
+        report.shards += 1;
+        report.blocks += sidecar.blocks.len();
+        report.source_bytes += data.len() as u64;
+        report.parity_bytes += sidecar.parity_bytes();
+        write_sidecar(dir, &sidecar)?;
+    }
+    Ok(report)
+}
+
+/// Index-driven bad-range discovery for one shard: the shard header plus
+/// every index entry re-verified against `bytes`. Unlike `walk_shard`
+/// (which stops at the first bad record) this attributes *every* corrupt
+/// range, because the index is independently CRC-protected and knows
+/// each record's exact offset and length.
+pub fn bad_ranges(
+    index: &container::TensorIndex,
+    shard: u32,
+    bytes: &[u8],
+) -> Vec<(Option<String>, Range<u64>)> {
+    let mut bad = Vec::new();
+    let header_ok = matches!(container::parse_shard_header(bytes), Ok(claimed) if claimed as u32 == shard);
+    if !header_ok {
+        bad.push((None, 0..SHARD_HEADER_BYTES as u64));
+    }
+    for e in index.entries.iter().filter(|e| e.shard == shard) {
+        if verify_entry(bytes, e).is_err() {
+            bad.push((Some(e.name.clone()), e.offset..e.offset + e.len));
+        }
+    }
+    bad
+}
+
+/// Re-verify one index entry against shard bytes: bounds, header parse,
+/// length, index-vs-header CRC agreement, and the payload CRC itself.
+pub fn verify_entry(shard: &[u8], e: &container::IndexEntry) -> Result<(), String> {
+    let off = usize::try_from(e.offset).map_err(|_| "offset overflows usize".to_string())?;
+    let len = usize::try_from(e.len).map_err(|_| "length overflows usize".to_string())?;
+    let end = off.checked_add(len).ok_or("offset + length overflows")?;
+    if end > shard.len() {
+        return Err(format!("record [{off}, {end}) past shard end {}", shard.len()));
+    }
+    let record = &shard[off..end];
+    let header = RecordHeader::parse(record).map_err(|e| format!("header: {e}"))?;
+    if header.record_len() != e.len {
+        return Err(format!(
+            "length mismatch: header says {}, index says {}",
+            header.record_len(),
+            e.len
+        ));
+    }
+    if header.payload_crc != e.payload_crc {
+        return Err(format!(
+            "header/index CRC disagree ({:#010x} vs {:#010x})",
+            header.payload_crc, e.payload_crc
+        ));
+    }
+    let payload = &record[container::RECORD_HEADER_BYTES..];
+    let computed = crc32(payload);
+    if computed != header.payload_crc {
+        return Err(format!(
+            "payload CRC mismatch (stored {:#010x}, computed {computed:#010x})",
+            header.payload_crc
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distribution::sender::tests::synth_shard;
+
+    fn cfg() -> SenderConfig {
+        SenderConfig {
+            block_bytes: 2048,
+            symbol_bytes: 256,
+            parity_ratio: 0.25,
+            ..SenderConfig::default()
+        }
+    }
+
+    #[test]
+    fn sidecar_roundtrips_bytes() {
+        let shard = synth_shard(3, 9, 700, 42);
+        let sc = ParitySidecar::build(3, &shard, &cfg()).unwrap();
+        let bytes = sc.serialize();
+        let back = ParitySidecar::deserialize(&bytes).unwrap();
+        assert_eq!(back.shard, 3);
+        assert_eq!(back.shard_len, shard.len() as u64);
+        assert_eq!(back.shard_crc, crc32(&shard));
+        assert_eq!(back.blocks.len(), sc.blocks.len());
+        for (a, b) in back.blocks.iter().zip(&sc.blocks) {
+            assert_eq!(a.plan, b.plan);
+            assert_eq!(a.source_crcs, b.source_crcs);
+            assert_eq!(a.parity, b.parity);
+        }
+        assert_eq!(back.serialize(), bytes);
+    }
+
+    #[test]
+    fn sidecar_detects_its_own_corruption() {
+        let shard = synth_shard(0, 4, 300, 7);
+        let mut bytes = ParitySidecar::build(0, &shard, &cfg()).unwrap().serialize();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        match ParitySidecar::deserialize(&bytes) {
+            Err(ScrubError::CrcMismatch { .. }) => {}
+            other => panic!("expected CrcMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn single_erasure_repairs_to_byte_identity() {
+        let pristine = synth_shard(1, 12, 900, 5);
+        let sc = ParitySidecar::build(1, &pristine, &cfg()).unwrap();
+        let mut corrupt = pristine.clone();
+        // flip a byte inside some record payload in the middle of the file
+        let at = corrupt.len() / 2;
+        corrupt[at] ^= 0x80;
+        let repaired = sc
+            .repair(&mut corrupt, &[at as u64..at as u64 + 1])
+            .unwrap();
+        assert_eq!(repaired.len(), 1);
+        assert_eq!(corrupt, pristine, "repair must restore exact bytes");
+        assert_eq!(crc32(&corrupt), sc.shard_crc);
+    }
+
+    #[test]
+    fn beyond_budget_is_structured_not_silent() {
+        let pristine = synth_shard(2, 10, 800, 9);
+        let sc = ParitySidecar::build(2, &pristine, &cfg()).unwrap();
+        let b = &sc.blocks[0];
+        let sym = b.plan.params.symbol_bytes as u64;
+        let budget = b.plan.params.parity as u64;
+        // erase parity+1 whole symbols of block 0
+        let mut corrupt = pristine.clone();
+        let mut bad = Vec::new();
+        for i in 0..=budget {
+            let lo = b.plan.offset + i * sym;
+            bad.push(lo..lo + sym);
+            corrupt[lo as usize] ^= 0xFF;
+        }
+        let err = sc.repair(&mut corrupt, &bad).unwrap_err();
+        let (repaired, failures) = err;
+        assert!(repaired.is_empty());
+        assert!(matches!(failures[0], ScrubError::Unrecoverable { .. }));
+    }
+
+    #[test]
+    fn header_bit_flip_is_repairable() {
+        let pristine = synth_shard(4, 6, 500, 11);
+        let sc = ParitySidecar::build(4, &pristine, &cfg()).unwrap();
+        let mut corrupt = pristine.clone();
+        corrupt[1] ^= 0x10; // inside the "ECS8" magic
+        sc.repair(&mut corrupt, &[0..SHARD_HEADER_BYTES as u64])
+            .unwrap();
+        assert_eq!(corrupt, pristine);
+    }
+
+    #[test]
+    fn whole_record_bad_range_narrows_to_corrupt_symbols() {
+        // The index can only say "this whole record is bad", and a
+        // record typically spans more symbols than a block's parity
+        // budget — range-widened erasure would be beyond budget for a
+        // single flipped bit. The per-symbol CRCs must narrow it.
+        let pristine = synth_shard(5, 3, 900, 13);
+        let sc = ParitySidecar::build(5, &pristine, &cfg()).unwrap();
+        let b = &sc.blocks[0];
+        let record_symbols = 932usize.div_ceil(b.plan.params.symbol_bytes as usize);
+        assert!(
+            record_symbols > b.plan.params.parity as usize,
+            "fixture must make naive widening exceed the budget"
+        );
+        let mut corrupt = pristine.clone();
+        // one flipped payload byte in the middle record...
+        let record = (8 + 932) as u64..(8 + 2 * 932) as u64;
+        corrupt[record.start as usize + 40] ^= 0x04;
+        // ...reported at whole-record granularity
+        let repaired = sc.repair(&mut corrupt, &[record]).unwrap();
+        assert_eq!(repaired.len(), 1);
+        assert_eq!(corrupt, pristine);
+        assert_eq!(crc32(&corrupt), sc.shard_crc);
+    }
+
+    #[test]
+    fn nocode_sidecar_is_refused() {
+        let shard = synth_shard(0, 2, 100, 1);
+        let cfg = SenderConfig {
+            fec: FecId::NoCode,
+            ..cfg()
+        };
+        assert!(matches!(
+            ParitySidecar::build(0, &shard, &cfg),
+            Err(ScrubError::BadGeometry(_))
+        ));
+    }
+
+    #[test]
+    fn geometry_stays_within_gf256() {
+        let shard = synth_shard(0, 40, 4000, 3);
+        let sc = ParitySidecar::build(0, &shard, &cfg()).unwrap();
+        for b in &sc.blocks {
+            assert!(b.plan.params.n() <= MAX_TOTAL_SYMBOLS);
+            assert!(b.plan.params.parity >= 1);
+        }
+    }
+}

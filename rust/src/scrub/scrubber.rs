@@ -1,0 +1,553 @@
+//! The paced CRC scrubber and the index-driven repair path.
+//!
+//! A [`Scrubber`] thread walks a packed store re-verifying every
+//! record's payload CRC against the bytes on disk at a configurable
+//! bytes/sec budget (so a month-long background pass never competes
+//! with serving for disk bandwidth), repairs what it finds from the
+//! parity sidecars, and quarantines only what parity cannot recover.
+//!
+//! Repair is **index-driven**, not walk-driven: `walk_shard` stops at
+//! the first corrupt record, but the index is independently
+//! CRC-protected and knows every record's exact offset and length, so
+//! corruption maps directly to erased FEC symbols. Repaired shards are
+//! written to a tmp file and renamed over the original — the same
+//! no-SIGBUS discipline as every other artifact commit: a mapped reader
+//! keeps serving the old inode and simply sees the repaired bytes on
+//! its next open (or its decode-time retry re-reads the committed file
+//! directly).
+
+use super::parity::{bad_ranges, load_sidecar, verify_entry};
+use crate::codec::container::{self, shard_file_name, TensorIndex, INDEX_FILE};
+use crate::coordinator::metrics::SharedScrubMetrics;
+use crate::model::store::{repair_scan, QuarantinedRecord, RepairReport};
+use crate::scheduler::Clock;
+use crate::util::crc32::crc32;
+use anyhow::{Context, Result};
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Pacing
+// ---------------------------------------------------------------------------
+
+/// Token-bucket-free pacing: after `note(bytes)` the caller owes a sleep
+/// long enough that cumulative scanned bytes never run ahead of
+/// `bytes_per_sec × elapsed`. Time comes from the injected [`Clock`], so
+/// the schedule is exact and deterministic under `SimClock` — the unit
+/// tests assert the sleep sequence to the microsecond.
+pub struct Pacer {
+    clock: Arc<dyn Clock>,
+    bytes_per_sec: u64,
+    start: Instant,
+    consumed: u64,
+}
+
+impl Pacer {
+    /// `bytes_per_sec == 0` disables pacing (every delay is zero).
+    pub fn new(clock: Arc<dyn Clock>, bytes_per_sec: u64) -> Self {
+        let start = clock.now();
+        Self {
+            clock,
+            bytes_per_sec,
+            start,
+            consumed: 0,
+        }
+    }
+
+    /// Account `bytes` of work; returns how long the caller must sleep
+    /// before doing more.
+    pub fn note(&mut self, bytes: u64) -> Duration {
+        self.consumed = self.consumed.saturating_add(bytes);
+        if self.bytes_per_sec == 0 {
+            return Duration::ZERO;
+        }
+        let earliest = self.start
+            + Duration::from_secs_f64(self.consumed as f64 / self.bytes_per_sec as f64);
+        let now = self.clock.now();
+        earliest.checked_duration_since(now).unwrap_or(Duration::ZERO)
+    }
+
+    pub fn consumed(&self) -> u64 {
+        self.consumed
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Index-driven repair
+// ---------------------------------------------------------------------------
+
+/// One record the repair path restored from parity.
+#[derive(Debug, Clone)]
+pub struct RepairedRecord {
+    pub tensor: String,
+    pub shard: u32,
+    pub offset: u64,
+    /// what the verifier saw before repair
+    pub reason: String,
+}
+
+/// Outcome of repairing one shard in place on disk.
+#[derive(Debug, Default)]
+pub struct ShardRepair {
+    pub repaired: Vec<RepairedRecord>,
+    pub unrecoverable: Vec<QuarantinedRecord>,
+    /// a repaired shard file was committed (tmp+rename)
+    pub committed: bool,
+    /// committed bytes hash to the sidecar's pristine CRC — the
+    /// byte-identity oracle, stronger than per-record consistency
+    pub identical: bool,
+}
+
+/// Everything [`repair_store`] did: the damage it walked in with, what
+/// it fixed, what it had to give up on, and the state it left behind.
+#[derive(Debug)]
+pub struct StoreRepairOutcome {
+    pub before: RepairReport,
+    pub repaired: Vec<RepairedRecord>,
+    pub unrecoverable: Vec<QuarantinedRecord>,
+    /// post-repair scan (also rewrites the quarantine sidecar)
+    pub after: RepairReport,
+}
+
+impl StoreRepairOutcome {
+    /// Every layer (and embed/head) serves after repair.
+    pub fn fully_servable(&self) -> bool {
+        self.after.is_clean()
+    }
+}
+
+fn quarantine_all(
+    shard: u32,
+    bad: &[(Option<String>, Range<u64>)],
+    reason: &str,
+) -> Vec<QuarantinedRecord> {
+    bad.iter()
+        .map(|(name, range)| QuarantinedRecord {
+            tensor: name
+                .clone()
+                .unwrap_or_else(|| "<shard-header>".to_string()),
+            shard,
+            offset: range.start,
+            len: range.end - range.start,
+            reason: reason.to_string(),
+        })
+        .collect()
+}
+
+/// Repair one shard on disk from its parity sidecar. Reads the shard
+/// (tolerating truncation — the missing tail becomes erased symbols),
+/// finds every bad byte range via the index, erases + recovers through
+/// the sidecar's RS blocks, re-verifies every record, and commits the
+/// repaired image tmp+rename. Never mutates the existing file in place.
+pub fn repair_shard(dir: &Path, index: &TensorIndex, shard: u32) -> Result<ShardRepair> {
+    let mut out = ShardRepair::default();
+    let path = dir.join(shard_file_name(shard));
+    let mut bytes = match std::fs::read(&path) {
+        Ok(b) => b,
+        Err(e) => {
+            // nothing to splice parity into: record-level parity cannot
+            // rebuild a whole missing file
+            out.unrecoverable.push(QuarantinedRecord {
+                tensor: "<shard-wide>".to_string(),
+                shard,
+                offset: 0,
+                len: 0,
+                reason: format!("unreadable ({e}); parity cannot rebuild a missing shard"),
+            });
+            return Ok(out);
+        }
+    };
+    let sidecar = match load_sidecar(dir, shard) {
+        Ok(Some(sc)) => sc,
+        Ok(None) => {
+            let bad = bad_ranges(index, shard, &bytes);
+            out.unrecoverable =
+                quarantine_all(shard, &bad, "no parity sidecar (pack with --parity)");
+            return Ok(out);
+        }
+        Err(e) => {
+            let bad = bad_ranges(index, shard, &bytes);
+            out.unrecoverable =
+                quarantine_all(shard, &bad, &format!("parity sidecar unusable: {e}"));
+            return Ok(out);
+        }
+    };
+
+    // torn writes: pad a truncated shard back to its pristine length
+    // (the tail is erased symbols), drop bytes past it
+    let pristine_len = sidecar.shard_len as usize;
+    let mut bad: Vec<(Option<String>, Range<u64>)> = Vec::new();
+    if bytes.len() < pristine_len {
+        bad.push((None, bytes.len() as u64..pristine_len as u64));
+        bytes.resize(pristine_len, 0);
+    } else if bytes.len() > pristine_len {
+        bytes.truncate(pristine_len);
+    }
+    bad.extend(bad_ranges(index, shard, &bytes));
+    if bad.is_empty() {
+        return Ok(out); // clean shard, nothing to do
+    }
+
+    // partial repair is in-place: recoverable blocks are restored even
+    // when sibling blocks are beyond budget; the re-verification pass
+    // below attributes per record which is which
+    let ranges: Vec<Range<u64>> = bad.iter().map(|(_, r)| r.clone()).collect();
+    let _ = sidecar.repair(&mut bytes, &ranges);
+
+    // attribution pass: which of the previously-bad records verify now?
+    let mut still_bad = false;
+    for (name, range) in &bad {
+        let verified = match name {
+            Some(tensor) => index
+                .entries
+                .iter()
+                .find(|e| e.shard == shard && &e.name == tensor)
+                .map(|e| verify_entry(&bytes, e).map_err(|r| r.to_string()))
+                .unwrap_or(Err("entry vanished from index".to_string())),
+            None => match container::parse_shard_header(&bytes) {
+                Ok(claimed) if claimed as u32 == shard => Ok(()),
+                Ok(claimed) => Err(format!("shard claims index {claimed}")),
+                Err(e) => Err(format!("bad shard header: {e}")),
+            },
+        };
+        match verified {
+            Ok(()) => out.repaired.push(RepairedRecord {
+                tensor: name.clone().unwrap_or_else(|| "<shard-header>".to_string()),
+                shard,
+                offset: range.start,
+                reason: "restored from parity sidecar".to_string(),
+            }),
+            Err(reason) => {
+                still_bad = true;
+                out.unrecoverable.push(QuarantinedRecord {
+                    tensor: name.clone().unwrap_or_else(|| "<shard-header>".to_string()),
+                    shard,
+                    offset: range.start,
+                    len: range.end - range.start,
+                    reason: format!("beyond parity budget: {reason}"),
+                });
+            }
+        }
+    }
+
+    out.identical = !still_bad && crc32(&bytes) == sidecar.shard_crc;
+    if !still_bad && !out.identical {
+        // every record verifies but the file hash deviates — refuse to
+        // commit a store we cannot prove identical (defense in depth;
+        // records cover the whole file, so this should be unreachable)
+        for r in out.repaired.drain(..) {
+            out.unrecoverable.push(QuarantinedRecord {
+                tensor: r.tensor,
+                shard,
+                offset: r.offset,
+                len: 0,
+                reason: "repaired records verify but shard hash deviates".to_string(),
+            });
+        }
+        return Ok(out);
+    }
+    if out.repaired.is_empty() {
+        return Ok(out); // nothing improved; keep the original inode
+    }
+
+    // commit: tmp + unlink + rename — a live mapping of the old file
+    // keeps its inode (no SIGBUS), new opens see the repaired bytes
+    let tmp = dir.join(format!("{}.tmp", shard_file_name(shard)));
+    std::fs::write(&tmp, &bytes).with_context(|| format!("writing {}", tmp.display()))?;
+    let _ = std::fs::remove_file(&path);
+    std::fs::rename(&tmp, &path).with_context(|| format!("committing {}", path.display()))?;
+    out.committed = true;
+    Ok(out)
+}
+
+/// Scan + repair + re-scan a whole store. The closing scan rewrites the
+/// quarantine sidecar so it reflects only what parity could not fix.
+pub fn repair_store(dir: &Path) -> Result<StoreRepairOutcome> {
+    let before = repair_scan(dir, false)?;
+    let mut repaired = Vec::new();
+    let mut unrecoverable = Vec::new();
+    if !before.is_clean() {
+        let index_bytes = std::fs::read(dir.join(INDEX_FILE))
+            .with_context(|| format!("reading {} in {}", INDEX_FILE, dir.display()))?;
+        let index = TensorIndex::deserialize(&index_bytes)?;
+        let mut shards: Vec<u32> = before
+            .quarantined
+            .iter()
+            .map(|q| q.shard)
+            .chain(before.missing_shards.iter().copied())
+            .collect();
+        shards.sort_unstable();
+        shards.dedup();
+        for s in shards {
+            let r = repair_shard(dir, &index, s)?;
+            repaired.extend(r.repaired);
+            unrecoverable.extend(r.unrecoverable);
+        }
+    }
+    let after = repair_scan(dir, true)?;
+    Ok(StoreRepairOutcome {
+        before,
+        repaired,
+        unrecoverable,
+        after,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// The background scrubber
+// ---------------------------------------------------------------------------
+
+/// Scrubber tuning.
+#[derive(Debug, Clone, Copy)]
+pub struct ScrubConfig {
+    /// verification read budget; 0 = unpaced
+    pub bytes_per_sec: u64,
+    /// idle time between passes
+    pub interval: Duration,
+    /// stop after this many passes (`None` = run until [`Scrubber::stop`])
+    pub max_passes: Option<u64>,
+}
+
+impl Default for ScrubConfig {
+    fn default() -> Self {
+        Self {
+            bytes_per_sec: 8 << 20, // 8 MiB/s: background, not a burst
+            interval: Duration::from_secs(60),
+            max_passes: None,
+        }
+    }
+}
+
+/// One completed scrub pass.
+#[derive(Debug, Default)]
+pub struct ScrubPassReport {
+    pub records: u64,
+    pub clean: u64,
+    pub bytes_scanned: u64,
+    pub repaired: Vec<RepairedRecord>,
+    pub unrecoverable: Vec<QuarantinedRecord>,
+    pub duration: Duration,
+}
+
+/// Verify every record of the store at `dir` against the bytes on disk,
+/// pacing reads through `pacer`, and route any damage through
+/// [`repair_store`]. Reads go through `std::fs` (never the page cache of
+/// a live mapping) so the scrubber observes what a fresh open would.
+pub fn scrub_pass(
+    dir: &Path,
+    pacer: &mut Pacer,
+    stop: Option<&StopFlag>,
+) -> Result<ScrubPassReport> {
+    let started = pacer.clock.now();
+    let mut report = ScrubPassReport::default();
+    let index_bytes = std::fs::read(dir.join(INDEX_FILE))
+        .with_context(|| format!("reading {} in {}", INDEX_FILE, dir.display()))?;
+    let index = TensorIndex::deserialize(&index_bytes)?;
+    let mut damage = false;
+    'shards: for s in 0..index.n_shards {
+        let path = dir.join(shard_file_name(s));
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(_) => {
+                damage = true;
+                continue;
+            }
+        };
+        report.bytes_scanned += bytes.len() as u64;
+        if !matches!(container::parse_shard_header(&bytes), Ok(c) if c as u32 == s) {
+            damage = true;
+        }
+        for e in index.entries.iter().filter(|e| e.shard == s) {
+            report.records += 1;
+            match verify_entry(&bytes, e) {
+                Ok(()) => report.clean += 1,
+                Err(_) => damage = true,
+            }
+            let delay = pacer.note(e.len);
+            if !sleep_interruptible(delay, stop) {
+                break 'shards;
+            }
+        }
+    }
+    if damage {
+        let outcome = repair_store(dir)?;
+        report.repaired = outcome.repaired;
+        report.unrecoverable = outcome.unrecoverable;
+    }
+    report.duration = pacer.clock.now().saturating_duration_since(started);
+    Ok(report)
+}
+
+/// Shared stop signal: a condvar-paired flag so interval sleeps and
+/// pacing sleeps both wake immediately on [`Scrubber::stop`].
+pub struct StopFlag {
+    flag: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl StopFlag {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self {
+            flag: Mutex::new(false),
+            cv: Condvar::new(),
+        })
+    }
+
+    pub fn raise(&self) {
+        *self.flag.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    pub fn raised(&self) -> bool {
+        *self.flag.lock().unwrap()
+    }
+
+    /// Sleep up to `d` or until raised; true = keep going.
+    fn sleep(&self, d: Duration) -> bool {
+        let guard = self.flag.lock().unwrap();
+        if *guard {
+            return false;
+        }
+        if d.is_zero() {
+            return true;
+        }
+        let (guard, _) = self.cv.wait_timeout(guard, d).unwrap();
+        !*guard
+    }
+}
+
+/// `true` = continue, `false` = stop requested mid-sleep.
+fn sleep_interruptible(d: Duration, stop: Option<&StopFlag>) -> bool {
+    match stop {
+        Some(s) => s.sleep(d),
+        None => {
+            if !d.is_zero() {
+                thread::sleep(d);
+            }
+            true
+        }
+    }
+}
+
+/// The background scrubber thread. Spawn it next to a serving stack;
+/// progress and repair counts flow out through the shared
+/// [`ScrubMetrics`](crate::coordinator::metrics::ScrubMetrics) so the
+/// supervisor's `HealthReport` can include scrub status without
+/// touching the thread.
+pub struct Scrubber {
+    stop: Arc<StopFlag>,
+    handle: Option<thread::JoinHandle<Result<()>>>,
+    metrics: SharedScrubMetrics,
+}
+
+impl Scrubber {
+    pub fn spawn(
+        dir: PathBuf,
+        cfg: ScrubConfig,
+        clock: Arc<dyn Clock>,
+        metrics: SharedScrubMetrics,
+    ) -> Self {
+        let stop = StopFlag::new();
+        let (stop2, metrics2) = (Arc::clone(&stop), metrics.clone());
+        let handle = thread::Builder::new()
+            .name("ecf8-scrubber".into())
+            .spawn(move || -> Result<()> {
+                let mut passes = 0u64;
+                loop {
+                    let mut pacer = Pacer::new(Arc::clone(&clock), cfg.bytes_per_sec);
+                    let report = scrub_pass(&dir, &mut pacer, Some(&stop2))?;
+                    metrics2.record_pass(
+                        report.records,
+                        report.bytes_scanned,
+                        report.repaired.len() as u64,
+                        report.unrecoverable.len() as u64,
+                        report.duration.as_secs_f64(),
+                    );
+                    passes += 1;
+                    if stop2.raised() || cfg.max_passes.is_some_and(|m| passes >= m) {
+                        return Ok(());
+                    }
+                    if !stop2.sleep(cfg.interval) {
+                        return Ok(());
+                    }
+                }
+            })
+            .expect("spawn scrubber thread");
+        Self {
+            stop,
+            handle: Some(handle),
+            metrics,
+        }
+    }
+
+    /// Live metrics snapshot (also reachable through the shared handle
+    /// given to `spawn`).
+    pub fn metrics(&self) -> crate::coordinator::metrics::ScrubMetrics {
+        self.metrics.snapshot()
+    }
+
+    /// Signal, join, and return the final metrics. Propagates an I/O
+    /// error from the scrub loop (corruption itself is never an error —
+    /// it becomes repair/quarantine counts).
+    pub fn stop(mut self) -> Result<crate::coordinator::metrics::ScrubMetrics> {
+        self.stop.raise();
+        if let Some(h) = self.handle.take() {
+            match h.join() {
+                Ok(r) => r?,
+                Err(_) => anyhow::bail!("scrubber thread panicked"),
+            }
+        }
+        Ok(self.metrics.snapshot())
+    }
+}
+
+impl Drop for Scrubber {
+    fn drop(&mut self) {
+        self.stop.raise();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::SimClock;
+
+    #[test]
+    fn pacer_schedule_is_deterministic_under_simclock() {
+        let clock = SimClock::new();
+        let mut p = Pacer::new(clock.clone(), 1000); // 1000 B/s
+        // 500 bytes at t=0 → owe 0.5 s
+        assert_eq!(p.note(500), Duration::from_millis(500));
+        // time passes 0.5 s → caught up exactly
+        clock.advance(Duration::from_millis(500));
+        assert_eq!(p.note(0), Duration::ZERO);
+        // 250 more bytes → owe 0.25 s
+        assert_eq!(p.note(250), Duration::from_millis(250));
+        // advancing past the debt clamps to zero
+        clock.advance(Duration::from_secs(10));
+        assert_eq!(p.note(1000), Duration::ZERO);
+        assert_eq!(p.consumed(), 1750);
+    }
+
+    #[test]
+    fn pacer_zero_budget_never_sleeps() {
+        let clock = SimClock::new();
+        let mut p = Pacer::new(clock, 0);
+        for _ in 0..100 {
+            assert_eq!(p.note(u64::MAX / 200), Duration::ZERO);
+        }
+    }
+
+    #[test]
+    fn stop_flag_interrupts_sleep() {
+        let stop = StopFlag::new();
+        stop.raise();
+        assert!(!stop.sleep(Duration::from_secs(3600)));
+    }
+}

@@ -1,0 +1,420 @@
+//! Self-healing store, end to end: seeded bit-flip sweeps must be 100%
+//! detected by the scrubber, parity repair must restore shards to byte
+//! identity (and repaired stores must serve bit-identically), decode-time
+//! repair-and-retry must turn a corrupt record into one slow load, repair
+//! under a live mapping must never SIGBUS, and damage beyond the parity
+//! budget must surface as structured quarantine — never a panic or a
+//! silent deviation.
+
+use ecf8::codec::container;
+use ecf8::codec::{codecs, Ecf8Params, Fp8Format};
+use ecf8::coordinator::SharedScrubMetrics;
+use ecf8::distribution::SenderConfig;
+use ecf8::model::config::{tiny_llm, BlockType, TensorSpec};
+use ecf8::model::store::{AccessMode, CompressedModel, LazyModel, ModelStore};
+use ecf8::scheduler::SystemClock;
+use ecf8::scrub::{
+    parity_file_name, protect_store, repair_store, scrub_pass, Pacer, ScrubConfig, Scrubber,
+};
+use ecf8::util::prng::Xoshiro256;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn weight_bytes(n: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    (0..n)
+        .map(|_| {
+            let x = (ecf8::util::sampling::normal(&mut rng) * 0.05) as f32;
+            ecf8::fp8::F8E4M3::from_f32(x).to_bits()
+        })
+        .collect()
+}
+
+fn spec(name: &str, rows: usize, cols: usize, layer: usize, bt: BlockType) -> TensorSpec {
+    TensorSpec {
+        name: name.to_string(),
+        rows,
+        cols,
+        block_type: bt,
+        layer,
+        alpha: 0.0,
+        gamma: 0.0,
+        row_sigma: 0.0,
+    }
+}
+
+/// Mixed-codec model with two transformer layers plus embed/head.
+fn mixed_model(name: &str) -> (CompressedModel, Vec<Vec<u8>>) {
+    let planes = vec![
+        weight_bytes(3_000, 1),
+        weight_bytes(2_000, 2),
+        ecf8::model::weights::generate_noise_fp8(1_500, 3),
+        weight_bytes(2_500, 4),
+        weight_bytes(2_800, 5),
+    ];
+    let specs = vec![
+        spec("embed", 30, 100, 0, BlockType::Embedding),
+        spec("layers.0.a", 20, 100, 0, BlockType::AttnQkv),
+        spec("layers.0.noise", 15, 100, 0, BlockType::MlpUp),
+        spec("layers.1.a", 25, 100, 1, BlockType::AttnQkv),
+        spec("head", 28, 100, 0, BlockType::Head),
+    ];
+    let tensors = specs
+        .into_iter()
+        .zip(&planes)
+        .map(|(s, d)| {
+            (
+                s,
+                codecs::compress_auto(d, Fp8Format::E4M3, Ecf8Params::default()),
+            )
+        })
+        .collect();
+    (
+        CompressedModel::from_tensors(name.to_string(), tensors),
+        planes,
+    )
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// Parity geometry for the small test shards: narrow symbols so a shard
+/// spans many of them and the budget is meaningfully finite.
+fn test_parity() -> SenderConfig {
+    SenderConfig {
+        parity_ratio: 0.25,
+        block_bytes: 8 << 10,
+        symbol_bytes: 256,
+        ..Default::default()
+    }
+}
+
+/// Pack + protect a mixed-codec store; returns (model_dir, pristine
+/// shard bytes by shard index, decoded planes).
+fn healing_fixture(name: &str, shard_limit: u64) -> (PathBuf, BTreeMap<u32, Vec<u8>>, Vec<Vec<u8>>) {
+    let (model, planes) = mixed_model(name);
+    let root = tmp(&format!("ecf8_heal_{name}"));
+    let store = ModelStore::new(&root);
+    store.save_v2(&model, shard_limit).unwrap();
+    let dir = root.join(name);
+    let report = protect_store(&dir, &test_parity()).unwrap();
+    assert!(report.shards > 0 && report.parity_bytes > 0);
+    let index = LazyModel::open(&dir).unwrap();
+    let mut pristine = BTreeMap::new();
+    for s in 0..index.index().n_shards {
+        assert!(dir.join(parity_file_name(s)).exists(), "sidecar for shard {s}");
+        pristine.insert(s, std::fs::read(dir.join(container::shard_file_name(s))).unwrap());
+    }
+    (dir, pristine, planes)
+}
+
+/// Seeded payload bit flips (the `ecf8 chaos` model: header bytes
+/// excluded so every flip is CRC-covered), committed tmp+rename.
+/// Returns the set of (shard, tensor) records touched.
+fn flip_bits(dir: &Path, n_flips: u64, seed: u64) -> Vec<(u32, String)> {
+    let index_bytes = std::fs::read(dir.join(container::INDEX_FILE)).unwrap();
+    let index = container::TensorIndex::deserialize(&index_bytes).unwrap();
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut shards: BTreeMap<u32, Vec<u8>> = BTreeMap::new();
+    let mut touched = Vec::new();
+    for _ in 0..n_flips {
+        let e = &index.entries[rng.next_below(index.entries.len() as u64) as usize];
+        let bytes = shards.entry(e.shard).or_insert_with(|| {
+            std::fs::read(dir.join(container::shard_file_name(e.shard))).unwrap()
+        });
+        let header = container::RECORD_HEADER_BYTES as u64;
+        let off = (e.offset + header + rng.next_below(e.len - header)) as usize;
+        bytes[off] ^= 1 << (rng.next_below(8) as u32);
+        if !touched.contains(&(e.shard, e.name.clone())) {
+            touched.push((e.shard, e.name.clone()));
+        }
+    }
+    for (s, bytes) in &shards {
+        let final_path = dir.join(container::shard_file_name(*s));
+        let tmp_path = dir.join(format!("{}.chaos.tmp", container::shard_file_name(*s)));
+        std::fs::write(&tmp_path, bytes).unwrap();
+        std::fs::remove_file(&final_path).ok();
+        std::fs::rename(&tmp_path, &final_path).unwrap();
+    }
+    touched
+}
+
+fn assert_pristine(dir: &Path, pristine: &BTreeMap<u32, Vec<u8>>) {
+    for (s, want) in pristine {
+        let got = std::fs::read(dir.join(container::shard_file_name(*s))).unwrap();
+        assert_eq!(&got, want, "shard {s} byte-identical after repair");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Seeded sweep: every touched record detected, every store repaired to
+// byte identity, decoded planes bit-identical to the originals.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bit_flip_sweep_detects_everything_and_repairs_to_identity() {
+    for seed in 0..8u64 {
+        let name = format!("sweep{seed}");
+        let (dir, pristine, planes) = healing_fixture(&name, 6 << 10);
+        let touched = flip_bits(&dir, 3, 1000 + seed);
+        assert!(!touched.is_empty());
+
+        let mut pacer = Pacer::new(Arc::new(SystemClock), 0);
+        let report = scrub_pass(&dir, &mut pacer, None).unwrap();
+        // 100% detection: every touched record shows up repaired
+        for (shard, tensor) in &touched {
+            assert!(
+                report
+                    .repaired
+                    .iter()
+                    .any(|r| r.shard == *shard && &r.tensor == tensor),
+                "seed {seed}: flip in {tensor} (shard {shard}) not detected/repaired; \
+                 repaired = {:?}",
+                report.repaired
+            );
+        }
+        assert!(report.unrecoverable.is_empty(), "seed {seed}: within budget");
+        assert_pristine(&dir, &pristine);
+
+        // repaired store decodes bit-identically
+        let lazy = LazyModel::open(&dir).unwrap();
+        let whole = lazy.load_all(None).unwrap();
+        for ((s, t), plane) in whole.tensors.iter().zip(&planes) {
+            assert_eq!(&t.decode_to_vec(), plane, "seed {seed}: {}", s.name);
+        }
+        assert_eq!(lazy.repair_count(), 0, "scrub already fixed the disk");
+        std::fs::remove_dir_all(dir.parent().unwrap()).ok();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Decode-time repair-and-retry: a corrupt record under a live open is
+// one slow load, not an error — load_tensor and load_layer both.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn decode_time_repair_turns_corruption_into_one_slow_load() {
+    let (dir, pristine, planes) = healing_fixture("retry", 64 << 20);
+    // corrupt layers.0.a's payload, then open the already-corrupt store
+    let index_bytes = std::fs::read(dir.join(container::INDEX_FILE)).unwrap();
+    let index = container::TensorIndex::deserialize(&index_bytes).unwrap();
+    let e = index.entries.iter().find(|e| e.name == "layers.0.a").unwrap();
+    let shard_path = dir.join(container::shard_file_name(e.shard));
+    let mut bytes = std::fs::read(&shard_path).unwrap();
+    bytes[(e.offset + container::RECORD_HEADER_BYTES as u64 + 7) as usize] ^= 0x20;
+    std::fs::write(&shard_path, &bytes).unwrap();
+
+    let lazy = LazyModel::open(&dir).unwrap();
+    let (_, tensor) = lazy.load_tensor("layers.0.a").expect("repair-and-retry");
+    assert_eq!(tensor.decode_to_vec(), planes[1], "bit-identical after repair");
+    assert_eq!(lazy.repair_count(), 1, "exactly one repair round trip");
+    assert_pristine(&dir, &pristine);
+
+    // the repaired file also serves the layer path and fresh opens
+    let layer0 = lazy.load_layer(0).unwrap();
+    assert_eq!(layer0.len(), 2);
+    let fresh = LazyModel::open(&dir).unwrap();
+    fresh.load_all(None).expect("clean after decode-time repair");
+    assert_eq!(fresh.repair_count(), 0);
+    std::fs::remove_dir_all(dir.parent().unwrap()).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Repair under a live mapping: the scrubber commits via tmp+rename, so a
+// server holding the old inode keeps decoding bit-exactly (no SIGBUS, no
+// panic) while fresh opens see the repaired file.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn repair_under_live_mmap_never_disturbs_the_mapped_reader() {
+    let (dir, pristine, planes) = healing_fixture("livemap", 64 << 20);
+    // a reader maps the pristine store and holds tensors across the repair
+    let live = LazyModel::open_mode(&dir, AccessMode::Mapped).unwrap();
+    let held = live.load_all(None).unwrap();
+
+    let touched = flip_bits(&dir, 4, 42);
+    assert!(!touched.is_empty());
+    let outcome = repair_store(&dir).unwrap();
+    assert!(outcome.fully_servable());
+    assert!(!outcome.repaired.is_empty());
+    assert_pristine(&dir, &pristine);
+
+    // the live mapping (old inode) still decodes every tensor bit-exactly
+    for ((s, t), plane) in held.tensors.iter().zip(&planes) {
+        assert_eq!(&t.decode_to_vec(), plane, "{} through the live map", s.name);
+    }
+    for l in 0..2 {
+        for (s, t) in live.load_layer(l).unwrap() {
+            let want = &planes[match s.name.as_str() {
+                "layers.0.a" => 1,
+                "layers.0.noise" => 2,
+                "layers.1.a" => 3,
+                other => panic!("unexpected tensor {other}"),
+            }];
+            assert_eq!(&t.decode_to_vec(), want, "{}", s.name);
+        }
+    }
+
+    // Sharper case: flip a payload byte *in place* on the very inode a
+    // fresh mapped reader holds. The reader sees the corruption through
+    // its mapping, decode-time repair commits via tmp+rename (never
+    // mutating the mapped inode), and the retry re-reads the committed
+    // file — one slow load, no SIGBUS, bit-identical bytes.
+    let fresh = LazyModel::open_mode(&dir, AccessMode::Mapped).unwrap();
+    let index = fresh.index().clone();
+    let e = index.entries.iter().find(|e| e.name == "head").unwrap();
+    {
+        use std::io::{Seek, SeekFrom, Write};
+        let mut f = std::fs::OpenOptions::new()
+            .write(true)
+            .open(dir.join(container::shard_file_name(e.shard)))
+            .unwrap();
+        f.seek(SeekFrom::Start(e.offset + container::RECORD_HEADER_BYTES as u64 + 3))
+            .unwrap();
+        f.write_all(&[0xAA]).unwrap();
+    }
+    let (_, head) = fresh.load_tensor("head").expect("repair-and-retry under live map");
+    assert_eq!(head.decode_to_vec(), planes[4], "head bit-identical after in-place flip");
+    assert_eq!(fresh.repair_count(), 1);
+    assert_pristine(&dir, &pristine);
+    std::fs::remove_dir_all(dir.parent().unwrap()).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Beyond the parity budget: structured quarantine, non-clean repair
+// outcome, and a structured load error — never a panic or silent bytes.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn beyond_budget_damage_is_structured_quarantine_not_silence() {
+    let (dir, _pristine, _planes) = healing_fixture("budget", 64 << 20);
+    // zero a span far wider than the parity budget (0.25 × symbols)
+    let shard_path = dir.join(container::shard_file_name(0));
+    let mut bytes = std::fs::read(&shard_path).unwrap();
+    let start = bytes.len() / 4;
+    let end = (start + (6 << 10)).min(bytes.len() - 1);
+    for b in &mut bytes[start..end] {
+        *b = 0;
+    }
+    std::fs::write(&shard_path, &bytes).unwrap();
+
+    let outcome = repair_store(&dir).unwrap();
+    assert!(!outcome.fully_servable(), "damage must be visible");
+    assert!(
+        !outcome.unrecoverable.is_empty(),
+        "beyond-budget records are quarantined, not dropped silently"
+    );
+    for q in &outcome.unrecoverable {
+        assert!(!q.reason.is_empty(), "every quarantine names its cause");
+    }
+
+    // loading a quarantined record is a structured error mentioning the
+    // budget — and load never returns wrong bytes
+    let lazy = LazyModel::open(&dir).unwrap();
+    let err = lazy.load_all(None).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("parity") || msg.contains("CRC"),
+        "structured cause, got: {msg}"
+    );
+    std::fs::remove_dir_all(dir.parent().unwrap()).ok();
+}
+
+// ---------------------------------------------------------------------------
+// The background scrubber thread: runs passes, repairs what it finds,
+// reports through SharedScrubMetrics, stops cleanly.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn scrubber_thread_repairs_and_reports_metrics() {
+    let (dir, pristine, _planes) = healing_fixture("thread", 6 << 10);
+    let touched = flip_bits(&dir, 2, 7);
+    assert!(!touched.is_empty());
+
+    let metrics = SharedScrubMetrics::new();
+    let scrubber = Scrubber::spawn(
+        dir.clone(),
+        ScrubConfig {
+            bytes_per_sec: 0,
+            interval: std::time::Duration::from_millis(1),
+            max_passes: Some(2),
+        },
+        Arc::new(SystemClock),
+        metrics.clone(),
+    );
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    while metrics.snapshot().passes < 2 && std::time::Instant::now() < deadline {
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let finalm = scrubber.stop().unwrap();
+    assert!(finalm.passes >= 2, "both passes ran: {finalm:?}");
+    assert!(finalm.records_scanned > 0);
+    assert!(finalm.records_repaired >= touched.len() as u64);
+    assert_eq!(finalm.records_unrecoverable, 0);
+    assert_pristine(&dir, &pristine);
+    std::fs::remove_dir_all(dir.parent().unwrap()).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Repaired stores serve bit-identically through the real executor (the
+// run_static identity oracle) — artifact-gated like the other serving
+// integration tests.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn repaired_store_serves_bit_identically_to_pristine() {
+    use ecf8::coordinator::server::{ServeConfig, Server};
+    use ecf8::coordinator::Request;
+    use ecf8::runtime::executor::{LlmExecutor, SEQ_LEN};
+    use ecf8::runtime::pjrt::PjrtRuntime;
+
+    let artifacts = PjrtRuntime::default_dir();
+    if !artifacts.join("MANIFEST.txt").exists() {
+        eprintln!("skipping: PJRT artifacts missing");
+        return;
+    }
+    let cfg = tiny_llm();
+    let model = CompressedModel::synthesize(&cfg, 33, None);
+    let root = tmp("ecf8_heal_serve");
+    let store = ModelStore::new(&root);
+    store.save_v2(&model, 1 << 20).unwrap();
+    let dir = root.join(cfg.name);
+    protect_store(&dir, &SenderConfig::default()).unwrap();
+
+    let serve_logits = |m: CompressedModel| -> Vec<Vec<u32>> {
+        let ex = LlmExecutor::new(cfg.clone(), m, artifacts.clone(), None).unwrap();
+        let mut server = Server::new(
+            ex,
+            ServeConfig {
+                max_batch: 2,
+                linger: std::time::Duration::ZERO,
+            },
+        );
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let mut out = Vec::new();
+        for id in 0..4u64 {
+            let tokens: Vec<i32> = (0..SEQ_LEN)
+                .map(|_| rng.next_below(cfg.vocab as u64) as i32)
+                .collect();
+            server.submit(Request::new(id, tokens));
+            out.extend(server.tick().unwrap());
+        }
+        out.extend(server.drain().unwrap());
+        out.sort_by_key(|r| r.id);
+        out.iter()
+            .map(|r| r.logits.iter().map(|x| x.to_bits()).collect())
+            .collect()
+    };
+
+    let want = serve_logits(LazyModel::open(&dir).unwrap().load_all(None).unwrap());
+    flip_bits(&dir, 3, 99);
+    let outcome = repair_store(&dir).unwrap();
+    assert!(outcome.fully_servable(), "within budget");
+    let got = serve_logits(LazyModel::open(&dir).unwrap().load_all(None).unwrap());
+    assert_eq!(got, want, "repaired store serves bit-identical logits");
+    std::fs::remove_dir_all(&root).ok();
+}
