@@ -51,6 +51,7 @@ fn kv_cfg(n_blocks: usize) -> KvCacheConfig {
         bytes_per_token: BYTES_PER_TOKEN,
         n_blocks,
         format: Fp8Format::E4M3,
+        prefix: None,
     }
 }
 

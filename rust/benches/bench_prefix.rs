@@ -1,0 +1,292 @@
+//! Radix prefix cache on the multi-tenant shared-prefix workload — the
+//! ROADMAP's "prefix cache & multi-tenant KV reuse" rung, measured.
+//!
+//! Three sections:
+//! 1. **Identity flood** — continuous scheduling with the prefix cache
+//!    ON and a pool tight enough to force preemption must produce
+//!    token-for-token identical responses to the prefix-less static
+//!    oracle. Linked blocks, CoW forks, compressed-tier round-trips and
+//!    preemption all happen under this assert; zero leaked blocks.
+//! 2. **Open-loop comparison** — the same arrival process through the
+//!    continuous scheduler twice, cache OFF vs cache ON, on an engine
+//!    that charges real time per prefilled token. The cache admits
+//!    hitting prompts at their matched offset, so skipped prefill is a
+//!    direct TTFT win.
+//! 3. **`BENCH_prefix.json`** — machine-readable rows plus the headline
+//!    `prefix_ttft_p99_ratio`, `saved_prefill_tokens`, hit rate, tier
+//!    census, and the invariant flags.
+
+use ecf8::bench_support::{banner, write_bench_json, Json, Table};
+use ecf8::codec::Fp8Format;
+use ecf8::coordinator::metrics::SchedulerMetrics;
+use ecf8::scheduler::{
+    run_static, shared_prefix_requests, ContinuousScheduler, ContinuousServer, KvCacheConfig,
+    KvCacheManager, PrefixCacheConfig, SchedConfig, SharedPrefixWorkload,
+    SyntheticIterationEngine, SystemClock,
+};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const VOCAB: usize = 96;
+/// 4 tenants × 48-token system prompts: each shared prefix is exactly
+/// 6 full blocks, so block-boundary matching captures all of it
+const TENANTS: usize = 4;
+const SYSTEM_TOKENS: usize = 48;
+const USER_TOKENS: usize = 12;
+const GEN_MIN: usize = 4;
+const GEN_MAX: usize = 12;
+const BLOCK_TOKENS: usize = 8;
+const BYTES_PER_TOKEN: usize = 128;
+const MAX_BATCH: usize = 4;
+const MAX_RUNNING: usize = 16;
+
+fn workload() -> SharedPrefixWorkload {
+    SharedPrefixWorkload {
+        tenants: TENANTS,
+        system_tokens: SYSTEM_TOKENS,
+        user_tokens: USER_TOKENS,
+        gen_min: GEN_MIN,
+        gen_max: GEN_MAX,
+        vocab: VOCAB as i32 - 1,
+    }
+}
+
+fn kv_cfg(n_blocks: usize, with_prefix: bool) -> KvCacheConfig {
+    KvCacheConfig {
+        block_tokens: BLOCK_TOKENS,
+        bytes_per_token: BYTES_PER_TOKEN,
+        n_blocks,
+        format: Fp8Format::E4M3,
+        prefix: with_prefix.then_some(PrefixCacheConfig::default()),
+    }
+}
+
+/// worst-case blocks one sequence can ever hold
+fn per_seq_blocks() -> usize {
+    (SYSTEM_TOKENS + USER_TOKENS + GEN_MAX).div_ceil(BLOCK_TOKENS)
+}
+
+/// Section 1: correctness — the cache must never change tokens, even
+/// while sharing, forking, compressing and preempting under pressure.
+fn identity_flood() -> (u64, u64, u64) {
+    println!("\n## identity: continuous + prefix cache (preempting) == static oracle");
+    let reqs = shared_prefix_requests(&workload(), 32, 11, Instant::now(), Duration::ZERO);
+
+    let mut eng_s = SyntheticIterationEngine::instant(VOCAB);
+    let mut kv_s = KvCacheManager::new(kv_cfg(MAX_BATCH * per_seq_blocks(), false));
+    let mut ms = SchedulerMetrics::default();
+    let want: HashMap<u64, Vec<i32>> =
+        run_static(&mut eng_s, &mut kv_s, &reqs, MAX_BATCH, &SystemClock, &mut ms, false)
+            .expect("static run")
+            .into_iter()
+            .map(|r| (r.id, r.tokens))
+            .collect();
+    kv_s.leak_check().expect("static: zero leaked blocks");
+
+    // ~3.5 sequences' worst case for 16 live slots → heavy pressure
+    let mut eng_c = SyntheticIterationEngine::instant(VOCAB);
+    let mut sched = ContinuousScheduler::new(
+        SchedConfig { max_running: MAX_RUNNING },
+        kv_cfg(32, true),
+        Arc::new(SystemClock),
+    );
+    for r in &reqs {
+        sched.submit(r.clone());
+    }
+    let got = sched.run_to_completion(&mut eng_c).expect("continuous run");
+    sched.kv().leak_check().expect("continuous: zero leaked blocks");
+    assert_eq!(got.len(), want.len());
+    for r in &got {
+        assert_eq!(r.tokens, want[&r.id], "request {} diverged", r.id);
+    }
+    let p = sched.kv().prefix_stats().expect("prefix cache on").clone();
+    let census = sched.kv().prefix_census().unwrap_or_default();
+    assert!(p.hits > 0, "shared prompts must hit the trie");
+    assert!(sched.metrics.preemptions > 0, "tight pool must preempt");
+    println!(
+        "32 requests bit-identical with the cache on; {} hits / {} lookups, \
+         {} cow forks, {} compressions, {} preemptions, tier census \
+         {}h/{}c/{}p, zero leaked blocks ✓",
+        p.hits,
+        p.lookups,
+        p.cow_forks,
+        p.compressions,
+        sched.metrics.preemptions,
+        census.hot_nodes,
+        census.compressed_nodes,
+        census.pinned_nodes
+    );
+    (p.hits, p.lookups, p.cow_forks)
+}
+
+struct DriveResult {
+    tokens_per_s: f64,
+    ttft_p50_s: f64,
+    ttft_p99_s: f64,
+    occupancy: f64,
+    iterations: u64,
+    prefill_tokens: u64,
+    prefix_hits: u64,
+    prefix_lookups: u64,
+    saved_prefill_tokens: u64,
+}
+
+/// Exact quantile over raw samples.
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[idx]
+}
+
+/// One open-loop drive through the continuous scheduler: same arrival
+/// schedule and cost model, cache on or off.
+fn drive(with_prefix: bool) -> DriveResult {
+    let n = 64usize;
+    let gap = Duration::from_micros(300);
+    let fixed = Duration::from_micros(300);
+    let per_slot = Duration::from_micros(100);
+    // every computed prefill position costs real time; this is the
+    // term the cache deletes for matched prefixes
+    let prefill = Duration::from_micros(50);
+
+    let start = Instant::now();
+    let reqs = shared_prefix_requests(&workload(), n, 22, start, gap);
+    let engine =
+        SyntheticIterationEngine::with_costs(VOCAB, fixed, per_slot).with_prefill_cost(prefill);
+    let server = ContinuousServer::new(
+        engine,
+        ContinuousScheduler::new(
+            SchedConfig { max_running: MAX_RUNNING },
+            kv_cfg(2 * MAX_RUNNING * per_seq_blocks() / 3, with_prefix),
+            Arc::new(SystemClock),
+        ),
+    );
+    for r in reqs {
+        let now = Instant::now();
+        if r.arrived > now {
+            std::thread::sleep(r.arrived - now);
+        }
+        server.submit(r);
+    }
+    let report = server.shutdown().expect("open-loop drive");
+    let wall = start.elapsed().as_secs_f64();
+    report.leak_check.expect("zero leaked blocks");
+    assert_eq!(report.metrics.finished, n as u64);
+
+    let mut ttfts: Vec<f64> = report.responses.iter().map(|r| r.ttft_s).collect();
+    ttfts.sort_by(f64::total_cmp);
+    DriveResult {
+        tokens_per_s: report.metrics.tokens_generated as f64 / wall.max(1e-9),
+        ttft_p50_s: quantile(&ttfts, 0.50),
+        ttft_p99_s: quantile(&ttfts, 0.99),
+        occupancy: report.metrics.occupancy(),
+        iterations: report.metrics.iterations,
+        prefill_tokens: report.engine.prefill_tokens,
+        prefix_hits: report.metrics.prefix_hits,
+        prefix_lookups: report.metrics.prefix_lookups,
+        saved_prefill_tokens: report.metrics.saved_prefill_tokens,
+    }
+}
+
+fn main() {
+    banner(
+        "bench_prefix",
+        "radix prefix cache: CoW KV reuse with a codec-compressed cold tier (ROADMAP rung)",
+    );
+    println!(
+        "workload: {TENANTS} tenants × {SYSTEM_TOKENS}-token system prompts \
+         (= {} shared blocks each) + {USER_TOKENS} private tokens, gens \
+         {GEN_MIN}..={GEN_MAX}, {BLOCK_TOKENS}-token blocks",
+        SYSTEM_TOKENS / BLOCK_TOKENS
+    );
+
+    let (hits, lookups, cow_forks) = identity_flood();
+
+    println!("\n## open-loop arrivals (gap 300 µs, prefill 50 µs/token): cache off vs on");
+    let off = drive(false);
+    let on = drive(true);
+
+    let mut t = Table::new([
+        "prefix cache",
+        "tokens/s",
+        "ttft p50",
+        "ttft p99",
+        "prefill toks",
+        "saved toks",
+        "occupancy",
+    ]);
+    for (name, r) in [("off", &off), ("on", &on)] {
+        t.row([
+            name.to_string(),
+            format!("{:.0}", r.tokens_per_s),
+            format!("{:.1} ms", r.ttft_p50_s * 1e3),
+            format!("{:.1} ms", r.ttft_p99_s * 1e3),
+            r.prefill_tokens.to_string(),
+            r.saved_prefill_tokens.to_string(),
+            format!("{:.1}%", r.occupancy * 100.0),
+        ]);
+    }
+    t.print();
+
+    let ttft_ratio = on.ttft_p99_s / off.ttft_p99_s.max(1e-9);
+    let hit_rate = on.prefix_hits as f64 / on.prefix_lookups.max(1) as f64;
+    println!(
+        "cache on vs off: ttft p99 {:.2}×, {:.0}% hit rate, {} prefill tokens saved",
+        ttft_ratio,
+        hit_rate * 100.0,
+        on.saved_prefill_tokens
+    );
+
+    let mut results = Json::arr();
+    for (mode, r) in [("off", &off), ("on", &on)] {
+        results.push(
+            Json::obj()
+                .field("prefix_cache", mode)
+                .field("tokens_per_s", r.tokens_per_s)
+                .field("ttft_p50_s", r.ttft_p50_s)
+                .field("ttft_p99_s", r.ttft_p99_s)
+                .field("occupancy", r.occupancy)
+                .field("iterations", r.iterations as i64)
+                .field("prefill_tokens", r.prefill_tokens as i64)
+                .field("prefix_hits", r.prefix_hits as i64)
+                .field("prefix_lookups", r.prefix_lookups as i64)
+                .field("saved_prefill_tokens", r.saved_prefill_tokens as i64),
+        );
+    }
+    let doc = Json::obj()
+        .field("bench", "prefix")
+        .field(
+            "workload",
+            format!(
+                "open-loop arrivals (gap 300us), {TENANTS} tenants x {SYSTEM_TOKENS}+{USER_TOKENS} \
+                 prompt tokens, gens {GEN_MIN}..{GEN_MAX}; synthetic engine 300us + 100us/slot + \
+                 50us/prefill-token; continuous width <= {MAX_RUNNING}"
+            ),
+        )
+        .field("prefix_ttft_p99_ratio", ttft_ratio)
+        .field("prefix_hit_rate", hit_rate)
+        .field("saved_prefill_tokens", on.saved_prefill_tokens as i64)
+        .field("identity_flood_hits", hits as i64)
+        .field("identity_flood_lookups", lookups as i64)
+        .field("identity_flood_cow_forks", cow_forks as i64)
+        .field("identity_with_cache_on", true)
+        .field("zero_leaked_blocks", true)
+        .field("results", results);
+    write_bench_json("BENCH_prefix.json", &doc);
+
+    assert!(
+        on.saved_prefill_tokens > 0,
+        "shared prompts must save prefill tokens"
+    );
+    assert!(
+        ttft_ratio < 1.0,
+        "prefix cache must cut p99 TTFT (got {ttft_ratio:.2}x)"
+    );
+    println!(
+        "\nbench_prefix done (ttft p99 ratio {ttft_ratio:.2}, {} tokens saved)",
+        on.saved_prefill_tokens
+    );
+}

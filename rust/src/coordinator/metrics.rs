@@ -243,6 +243,13 @@ pub struct SchedulerMetrics {
     pub preemptions: u64,
     /// sequences restored after preemption
     pub resumes: u64,
+    /// admissions matched against the prefix index (0 when disabled)
+    pub prefix_lookups: u64,
+    /// admissions that linked at least one already-resident prefix block
+    pub prefix_hits: u64,
+    /// prefill positions skipped because their KV blocks were linked
+    /// from the prefix cache instead of recomputed
+    pub saved_prefill_tokens: u64,
     /// widest iteration executed (live slots)
     pub peak_running: usize,
     /// Σ live slots over all iterations
@@ -269,11 +276,31 @@ impl SchedulerMetrics {
         self.slot_tokens as f64 / self.slot_capacity as f64
     }
 
+    /// Fraction of prefix lookups that linked at least one block.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            return 0.0;
+        }
+        self.prefix_hits as f64 / self.prefix_lookups as f64
+    }
+
     /// Multi-line human-readable report.
     pub fn render(&self) -> String {
+        let prefix_line = if self.prefix_lookups > 0 {
+            format!(
+                "prefix: {}/{} hits ({:.1}%), {} prefill tokens saved\n",
+                self.prefix_hits,
+                self.prefix_lookups,
+                self.prefix_hit_rate() * 100.0,
+                self.saved_prefill_tokens,
+            )
+        } else {
+            String::new()
+        };
         format!(
             "iterations {:6}  tokens {:6}  occupancy {:5.1}%  peak width {}\n\
              admitted {} finished {} preemptions {} resumes {}\n\
+             {prefix_line}\
              ttft: p50 {:8.3} ms, p99 {:8.3} ms, max {:8.3} ms ({} samples)\n\
              tpot: p50 {:8.3} ms, p99 {:8.3} ms, max {:8.3} ms ({} samples)\n",
             self.iterations,
@@ -455,6 +482,15 @@ mod tests {
         assert!(s.contains("occupancy"));
         assert!(s.contains("ttft"));
         assert!(s.contains("tpot"));
+        // prefix line appears only once the cache is live
+        assert!(!s.contains("prefix:"));
+        assert_eq!(m.prefix_hit_rate(), 0.0);
+        m.prefix_lookups = 4;
+        m.prefix_hits = 3;
+        m.saved_prefill_tokens = 96;
+        assert!((m.prefix_hit_rate() - 0.75).abs() < 1e-12);
+        let s = m.render();
+        assert!(s.contains("prefix: 3/4 hits (75.0%), 96 prefill tokens saved"));
     }
 
     #[test]

@@ -38,6 +38,18 @@ impl Request {
         self.deadline = Some(deadline);
         self
     }
+
+    /// Bridge into the continuous scheduler's request type. The token
+    /// window becomes the generation prompt verbatim — token ids, not
+    /// text — which is what makes it matchable against the radix
+    /// prefix index at admission. Arrival stamp and deadline carry
+    /// over, so queueing SLOs mean the same thing on both paths.
+    pub fn into_gen(self, max_new_tokens: usize) -> crate::scheduler::GenRequest {
+        let mut g =
+            crate::scheduler::GenRequest::at(self.id, self.tokens, max_new_tokens, self.arrived);
+        g.deadline = self.deadline;
+        g
+    }
 }
 
 /// How a request's service ended — success is the quiet case; the two
@@ -105,5 +117,17 @@ mod tests {
         let r = Request::new(7, vec![1, 2, 3]);
         assert_eq!(r.id, 7);
         assert!(r.arrived.elapsed().as_secs_f64() < 1.0);
+    }
+
+    #[test]
+    fn into_gen_preserves_tokens_arrival_and_deadline() {
+        let t0 = Instant::now();
+        let deadline = t0 + std::time::Duration::from_secs(5);
+        let g = Request::at(9, vec![4, 5, 6], t0).with_deadline(deadline).into_gen(8);
+        assert_eq!(g.id, 9);
+        assert_eq!(g.prompt, vec![4, 5, 6]);
+        assert_eq!(g.max_new_tokens, 8);
+        assert_eq!(g.arrived, t0);
+        assert_eq!(g.deadline, Some(deadline));
     }
 }

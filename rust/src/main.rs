@@ -841,7 +841,8 @@ fn serve_continuous(
 fn cmd_kv_sim(raw: Vec<String>) -> anyhow::Result<()> {
     use ecf8::coordinator::metrics::SchedulerMetrics;
     use ecf8::scheduler::{
-        run_static, ContinuousScheduler, GenRequest, KvCacheConfig, KvCacheManager, SchedConfig,
+        run_static, shared_prefix_requests, ContinuousScheduler, GenRequest, KvCacheConfig,
+        KvCacheManager, PrefixCacheConfig, SchedConfig, SharedPrefixWorkload,
         SyntheticIterationEngine, SystemClock,
     };
     let cmd = Command::new(
@@ -861,7 +862,19 @@ fn cmd_kv_sim(raw: Vec<String>) -> anyhow::Result<()> {
     )
     .opt_default("max-batch", "static baseline's batch size", "4")
     .opt_default("max-running", "continuous scheduler's live-slot cap", "12")
-    .opt_default("seed", "rng seed", "1");
+    .opt_default("seed", "rng seed", "1")
+    .flag(
+        "prefix",
+        "multi-tenant shared-prefix workload with the radix prefix cache on",
+    )
+    .opt_default("tenants", "[--prefix] distinct shared system prompts", "4")
+    .opt_default("system-tokens", "[--prefix] tokens per shared system prompt", "24")
+    .opt_default("user-tokens", "[--prefix] private suffix tokens per request", "8")
+    .opt_default(
+        "cold-budget",
+        "[--prefix] compressed cold-tier byte budget",
+        "262144",
+    );
     let a = cmd.parse(raw).map_err(|e| handle_help(&cmd, e))?;
     let n: u64 = a.get_parse_or("requests", 24);
     let vocab: usize = a.get_parse_or("vocab", 96);
@@ -873,30 +886,58 @@ fn cmd_kv_sim(raw: Vec<String>) -> anyhow::Result<()> {
     let max_batch: usize = a.get_parse_or("max-batch", 4);
     let max_running: usize = a.get_parse_or("max-running", 12);
     let seed: u64 = a.get_parse_or("seed", 1);
+    let prefix_on = a.flag("prefix");
+    let tenants: usize = a.get_parse_or("tenants", 4);
+    let system_tokens: usize = a.get_parse_or("system-tokens", 24);
+    let user_tokens: usize = a.get_parse_or("user-tokens", 8);
+    let cold_budget: usize = a.get_parse_or("cold-budget", 256 * 1024);
 
-    let mut rng = Xoshiro256::seed_from_u64(seed);
-    let requests: Vec<GenRequest> = (0..n)
-        .map(|id| {
-            GenRequest::new(
-                id,
-                (0..prompt).map(|_| rng.next_below(vocab as u64) as i32).collect(),
-                gen,
-            )
-        })
-        .collect();
-    let kv_cfg = |pool_blocks: usize| KvCacheConfig {
+    let requests: Vec<GenRequest> = if prefix_on {
+        let w = SharedPrefixWorkload {
+            tenants,
+            system_tokens,
+            user_tokens,
+            gen_min: (gen / 2).max(1),
+            gen_max: gen,
+            vocab: vocab as i32 - 1,
+        };
+        shared_prefix_requests(
+            &w,
+            n as usize,
+            seed,
+            std::time::Instant::now(),
+            std::time::Duration::ZERO,
+        )
+    } else {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        (0..n)
+            .map(|id| {
+                GenRequest::new(
+                    id,
+                    (0..prompt).map(|_| rng.next_below(vocab as u64) as i32).collect(),
+                    gen,
+                )
+            })
+            .collect()
+    };
+    let kv_cfg = |pool_blocks: usize, with_prefix: bool| KvCacheConfig {
         block_tokens,
         bytes_per_token,
         n_blocks: pool_blocks,
         format: Fp8Format::E4M3,
+        prefix: with_prefix.then_some(PrefixCacheConfig {
+            max_compressed_bytes: cold_budget,
+        }),
     };
-    let per_seq_blocks = (prompt + gen).div_ceil(block_tokens);
+    let prompt_len = requests.iter().map(|r| r.prompt.len()).max().unwrap_or(prompt);
+    let gen_len = requests.iter().map(|r| r.max_new_tokens).max().unwrap_or(gen);
+    let per_seq_blocks = (prompt_len + gen_len).div_ceil(block_tokens);
 
     // static baseline: conservative sizing — the whole batch's worst
     // case is preallocated, so the pool is max_batch × per-seq blocks
     let static_blocks = max_batch * per_seq_blocks;
     let mut eng_s = SyntheticIterationEngine::instant(vocab);
-    let mut kv_s = KvCacheManager::new(kv_cfg(static_blocks));
+    let mut kv_s = KvCacheManager::new(kv_cfg(static_blocks, false));
     let mut metrics_s = SchedulerMetrics::default();
     let static_resp = run_static(
         &mut eng_s, &mut kv_s, &requests, max_batch, &SystemClock, &mut metrics_s, false,
@@ -907,7 +948,7 @@ fn cmd_kv_sim(raw: Vec<String>) -> anyhow::Result<()> {
     let mut eng_c = SyntheticIterationEngine::instant(vocab);
     let mut sched = ContinuousScheduler::new(
         SchedConfig { max_running },
-        kv_cfg(blocks),
+        kv_cfg(blocks, prefix_on),
         std::sync::Arc::new(SystemClock),
     );
     for r in &requests {
@@ -971,6 +1012,33 @@ fn cmd_kv_sim(raw: Vec<String>) -> anyhow::Result<()> {
         "identity: continuous == static ({} requests, bit-identical tokens)",
         cont_resp.len()
     );
+    if prefix_on {
+        let p = sched
+            .kv()
+            .prefix_stats()
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("--prefix set but prefix cache is off"))?;
+        let census = sched.kv().prefix_census().unwrap_or_default();
+        let rate = if p.lookups > 0 {
+            p.hits as f64 / p.lookups as f64 * 100.0
+        } else {
+            0.0
+        };
+        println!("prefix hits: {} ({:.1}% of {} lookups)", p.hits, rate, p.lookups);
+        println!("saved prefill tokens: {}", p.matched_tokens);
+        println!(
+            "tier census: {} hot, {} compressed ({} bytes, peak {}), {} pinned",
+            census.hot_nodes,
+            census.compressed_nodes,
+            census.compressed_bytes,
+            p.peak_compressed_bytes,
+            census.pinned_nodes
+        );
+        println!(
+            "cow forks: {} (dedup {}, adopted {}, relinked {}, dropped {})",
+            p.cow_forks, p.dedup_blocks, p.adopted_blocks, p.relinks, p.drops
+        );
+    }
     println!("preemptions: {}", sched.metrics.preemptions);
     println!("restores: {}", sched.metrics.resumes);
     println!("leaked blocks: 0");

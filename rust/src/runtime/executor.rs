@@ -559,7 +559,7 @@ mod tests {
             slots: hists
                 .iter()
                 .enumerate()
-                .map(|(i, h)| SeqSlot { seq: i as u64, tokens: h, pos: h.len() })
+                .map(|(i, h)| SeqSlot { seq: i as u64, tokens: h, pos: h.len(), new_tokens: 1 })
                 .collect(),
             pad_slots: 0,
         };

@@ -27,6 +27,13 @@ pub struct SeqSlot<'a> {
     /// KV positions already written for this sequence (== tokens.len()
     /// once the prompt is prefilled)
     pub pos: usize,
+    /// positions whose KV this sequence *computed* since it was last
+    /// scored (prefill suffix at the admission iteration, 1 in steady
+    /// state). Prefix-cache hits enter at their matched offset, so
+    /// linked positions never count — this is what engines charge
+    /// prefill compute for, and what makes skipped prefill a measurable
+    /// TTFT win rather than bookkeeping.
+    pub new_tokens: usize,
 }
 
 /// A ragged iteration: per-sequence lengths, no padding for live work.
@@ -74,10 +81,17 @@ pub struct SyntheticIterationEngine {
     inner: crate::coordinator::pipeline::SyntheticEngine,
     pub fixed_cost: Duration,
     pub per_slot_cost: Duration,
+    /// cost per *prefill* position processed this iteration (each
+    /// slot's `new_tokens` beyond the decode token). Zero by default —
+    /// the identity/invariant tests don't pay it — but the prefix
+    /// bench turns it on so skipped prefill shows up as real TTFT.
+    pub prefill_cost: Duration,
     /// iterations executed (scheduling observability for tests)
     pub steps: u64,
     /// live slots summed over iterations
     pub slot_tokens: u64,
+    /// prefill positions charged across iterations (Σ new_tokens − 1)
+    pub prefill_tokens: u64,
 }
 
 impl SyntheticIterationEngine {
@@ -91,9 +105,17 @@ impl SyntheticIterationEngine {
             inner: crate::coordinator::pipeline::SyntheticEngine::instant(vocab),
             fixed_cost,
             per_slot_cost,
+            prefill_cost: Duration::ZERO,
             steps: 0,
             slot_tokens: 0,
+            prefill_tokens: 0,
         }
+    }
+
+    /// Charge `cost` per prefill position (builder-style).
+    pub fn with_prefill_cost(mut self, cost: Duration) -> Self {
+        self.prefill_cost = cost;
+        self
     }
 }
 
@@ -115,7 +137,17 @@ impl IterationEngine for SyntheticIterationEngine {
     fn step(&mut self, batch: &IterationBatch<'_>, kv: &KvCacheManager) -> Result<Vec<f32>> {
         self.steps += 1;
         self.slot_tokens += batch.slots.len() as u64;
-        let cost = self.fixed_cost + self.per_slot_cost * batch.width() as u32;
+        // the decode token itself is covered by per_slot_cost; every
+        // additional unscored position is prefill compute
+        let prefill: u64 = batch
+            .slots
+            .iter()
+            .map(|s| s.new_tokens.saturating_sub(1) as u64)
+            .sum();
+        self.prefill_tokens += prefill;
+        let cost = self.fixed_cost
+            + self.per_slot_cost * batch.width() as u32
+            + self.prefill_cost * prefill as u32;
         if !cost.is_zero() {
             std::thread::sleep(cost);
         }
@@ -166,6 +198,7 @@ mod tests {
             bytes_per_token: 32,
             n_blocks: 16,
             format: Fp8Format::E4M3,
+            prefix: None,
         });
         kv.register(seq).unwrap();
         kv.ensure_capacity(seq, tokens.len() + 1).unwrap();
@@ -185,6 +218,7 @@ mod tests {
                 seq: 9,
                 tokens: &toks,
                 pos: toks.len(),
+                new_tokens: toks.len(),
             }],
             pad_slots: 0,
         };
@@ -200,6 +234,7 @@ mod tests {
                 seq: 9,
                 tokens: &toks2,
                 pos: toks2.len(),
+                new_tokens: toks2.len(),
             }],
             pad_slots: 0,
         };
@@ -226,8 +261,8 @@ mod tests {
             .step(
                 &IterationBatch {
                     slots: vec![
-                        SeqSlot { seq: 1, tokens: &t1, pos: 3 },
-                        SeqSlot { seq: 2, tokens: &t2, pos: 2 },
+                        SeqSlot { seq: 1, tokens: &t1, pos: 3, new_tokens: 1 },
+                        SeqSlot { seq: 2, tokens: &t2, pos: 2, new_tokens: 1 },
                     ],
                     pad_slots: 2,
                 },
@@ -237,7 +272,7 @@ mod tests {
         let solo1 = eng
             .step(
                 &IterationBatch {
-                    slots: vec![SeqSlot { seq: 1, tokens: &t1, pos: 3 }],
+                    slots: vec![SeqSlot { seq: 1, tokens: &t1, pos: 3, new_tokens: 1 }],
                     pad_slots: 0,
                 },
                 &kv,
@@ -246,7 +281,7 @@ mod tests {
         let solo2 = eng
             .step(
                 &IterationBatch {
-                    slots: vec![SeqSlot { seq: 2, tokens: &t2, pos: 2 }],
+                    slots: vec![SeqSlot { seq: 2, tokens: &t2, pos: 2, new_tokens: 1 }],
                     pad_slots: 0,
                 },
                 &kv,

@@ -9,15 +9,24 @@
 //! *iteration-level* scheduling in the vLLM/Orca shape, specialised to
 //! this repo's compression story:
 //!
-//! * [`kv_cache`] — [`kv_cache::KvCacheManager`]: a paged block pool
-//!   (fixed-size token blocks, per-sequence block tables; decode-only
-//!   serving needs no copy-on-write). Preempted sequences do not spill
-//!   raw bytes: their KV blocks are **evicted through the
+//! * [`kv_cache`] — [`kv_cache::KvCacheManager`]: a paged,
+//!   *refcounted* block pool (fixed-size token blocks, per-sequence
+//!   copy-on-write block tables). Preempted sequences do not spill
+//!   raw bytes: their private KV blocks are **evicted through the
 //!   [`crate::codec::codecs`] registry** — `ecf8-huffman` or `raw-fp8`
 //!   chosen per block by the paper's §3.2 entropy probe — and restored
-//!   losslessly on resume. Heilper & Singer (2025) show K/V caches
-//!   concentrate exponents like weights do, so the same machinery
-//!   applies.
+//!   losslessly on resume; *shared* blocks stay pinned under the trie.
+//!   Heilper & Singer (2025) show K/V caches concentrate exponents
+//!   like weights do, so the same machinery applies.
+//! * [`prefix`] — the radix prefix index behind multi-tenant prompt
+//!   reuse: admission links already-resident prompt blocks
+//!   (refcount++, prefill skipped), cold shared prefixes tier down to
+//!   a bounded codec-compressed pool instead of being freed
+//!   (hot → compressed → dropped, LRU by last hit), and a hit on a
+//!   compressed prefix restores bit-identically.
+//! * [`workload`] — seeded multi-tenant request generators (N shared
+//!   system prompts + private user suffixes) shared by `kv-sim
+//!   --prefix`, `bench_prefix`, and the invariant tests.
 //! * [`policy`] — [`policy::ContinuousScheduler`]: iteration-level
 //!   admission (new sequences join running iterations the moment blocks
 //!   are free), preemption under block pressure (lowest priority first,
@@ -43,13 +52,17 @@
 pub mod iteration;
 pub mod kv_cache;
 pub mod policy;
+pub mod prefix;
+pub mod workload;
 
 pub use iteration::{IterationBatch, IterationEngine, SeqSlot, SyntheticIterationEngine};
-pub use kv_cache::{KvCacheConfig, KvCacheManager, KvError, KvStats};
+pub use kv_cache::{BlockPlan, KvCacheConfig, KvCacheManager, KvError, KvStats};
 pub use policy::{
     run_static, ContinuousReport, ContinuousScheduler, ContinuousServer, FinishReason, GenRequest,
     GenResponse, SchedConfig, StepReport,
 };
+pub use prefix::{PrefixCacheConfig, PrefixStats, TierCensus};
+pub use workload::{shared_prefix_requests, SharedPrefixWorkload};
 
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};

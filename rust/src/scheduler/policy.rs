@@ -173,6 +173,11 @@ struct ActiveSeq {
     tokens: Vec<i32>,
     /// stable admission tiebreak (newest = largest)
     admit_seq: u64,
+    /// KV positions whose compute has been charged to the engine:
+    /// prefix-matched positions at admission (their prefill was
+    /// skipped), then the scored length after every iteration. The
+    /// difference to `tokens.len()` is the slot's `new_tokens`.
+    scored_upto: usize,
     first_token_at: Option<Instant>,
     last_token_at: Instant,
     preemptions: u32,
@@ -301,14 +306,16 @@ impl ContinuousScheduler {
             }
         }
 
-        // 1. resume, oldest preemption first (head-of-line)
+        // 1. resume, oldest preemption first (head-of-line). The plan
+        // charges only what restore will actually allocate: shared
+        // blocks still hot under the trie relink for free.
         while let Some(front) = self.preempted.front() {
             if self.running.len() >= self.cfg.max_running {
                 break;
             }
             let id = front.req.id;
             let len = front.tokens.len();
-            if self.kv.free_blocks() < self.kv.config().blocks_for_tokens(len + 1) {
+            if !self.kv.resume_plan(id, len + 1)?.fits() {
                 break;
             }
             self.kv.restore(id, self.pool.as_deref())?;
@@ -319,26 +326,36 @@ impl ContinuousScheduler {
             report.resumed += 1;
         }
 
-        // 2. admit — but never past sequences still waiting to resume
+        // 2. admit — but never past sequences still waiting to resume.
+        // Demand is sized by the admission plan, which consults the
+        // prefix index first: a prompt whose prefix is already resident
+        // is charged only its private *suffix* blocks, so shared
+        // prefixes keep admitting under pressure that would starve the
+        // naive `prompt + 1` sizing.
         while self.preempted.is_empty() && self.running.len() < self.cfg.max_running {
             let Some(i) = self.pick_waiting() else { break };
-            let need = self
-                .kv
-                .config()
-                .blocks_for_tokens(self.waiting[i].1.prompt.len() + 1);
-            if self.kv.free_blocks() < need {
+            if !self.kv.admission_plan(&self.waiting[i].1.prompt).fits() {
                 break;
             }
             let (_, req) = self.waiting.remove(i);
-            self.kv.register(req.id)?;
+            let matched = self.kv.register_with_prefix(req.id, &req.prompt)?;
             self.kv.ensure_capacity(req.id, req.prompt.len() + 1)?;
-            for &t in &req.prompt {
+            for &t in &req.prompt[matched..] {
                 self.kv.write_token(req.id, t)?;
+            }
+            self.kv.insert_prefix(req.id, &req.prompt)?;
+            if self.kv.prefix_enabled() {
+                self.metrics.prefix_lookups += 1;
+                if matched > 0 {
+                    self.metrics.prefix_hits += 1;
+                    self.metrics.saved_prefill_tokens += matched as u64;
+                }
             }
             let now = self.clock.now();
             self.running.push(ActiveSeq {
                 tokens: req.prompt.clone(),
                 admit_seq: self.admit_counter,
+                scored_upto: matched,
                 first_token_at: None,
                 last_token_at: now,
                 preemptions: 0,
@@ -392,6 +409,10 @@ impl ContinuousScheduler {
                     seq: s.req.id,
                     tokens: &s.tokens,
                     pos: s.tokens.len(),
+                    // prefill the engine still owes: everything written
+                    // since this sequence was last scored (prefix-linked
+                    // positions start charged — their prefill was free)
+                    new_tokens: s.tokens.len() - s.scored_upto,
                 })
                 .collect(),
             pad_slots: 0,
@@ -416,6 +437,7 @@ impl ContinuousScheduler {
             let tok = next[row];
             row += 1;
             let seq = &mut self.running[idx];
+            seq.scored_upto = seq.tokens.len();
             seq.tokens.push(tok);
             self.kv.write_token(seq.req.id, tok)?;
             self.metrics.tokens_generated += 1;
@@ -528,6 +550,8 @@ pub fn run_static<E: IterationEngine>(
         let mut tokens: Vec<Vec<i32>> = group.iter().map(|r| r.prompt.clone()).collect();
         let mut first: Vec<Option<Instant>> = vec![None; group.len()];
         let mut last: Vec<Instant> = vec![clock.now(); group.len()];
+        // static batching never shares: every prompt prefills in full
+        let mut scored: Vec<usize> = vec![0; group.len()];
         loop {
             let live: Vec<usize> = (0..group.len())
                 .filter(|&i| tokens[i].len() - group[i].prompt.len() < group[i].max_new_tokens)
@@ -542,6 +566,7 @@ pub fn run_static<E: IterationEngine>(
                         seq: group[i].id,
                         tokens: &tokens[i],
                         pos: tokens[i].len(),
+                        new_tokens: tokens[i].len() - scored[i],
                     })
                     .collect(),
                 pad_slots: group.len() - live.len(),
@@ -551,6 +576,7 @@ pub fn run_static<E: IterationEngine>(
             let now = clock.now();
             for (row, &i) in live.iter().enumerate() {
                 let tok = argmax(&logits[row * vocab..(row + 1) * vocab]);
+                scored[i] = tokens[i].len();
                 tokens[i].push(tok);
                 kv.write_token(group[i].id, tok)?;
                 metrics.tokens_generated += 1;
@@ -774,7 +800,12 @@ mod tests {
             bytes_per_token: 32,
             n_blocks,
             format: Fp8Format::E4M3,
+            prefix: None,
         }
+    }
+
+    fn kv_cfg_prefix(n_blocks: usize) -> KvCacheConfig {
+        kv_cfg(n_blocks).with_prefix(crate::scheduler::prefix::PrefixCacheConfig::default())
     }
 
     fn reqs(n: u64, vocab: usize, prompt_len: usize, max_new: usize, seed: u64) -> Vec<GenRequest> {
@@ -834,6 +865,99 @@ mod tests {
             assert_eq!(g.tokens, w.tokens, "request {id} diverged");
             assert_eq!(g.tokens.len(), 8);
         }
+    }
+
+    #[test]
+    fn prefix_cache_keeps_identity_with_static_under_preemption() {
+        use crate::scheduler::workload::{shared_prefix_requests, SharedPrefixWorkload};
+        let vocab = 48;
+        let w = SharedPrefixWorkload {
+            tenants: 2,
+            system_tokens: 12,
+            user_tokens: 4,
+            // long enough that every sequence outgrows its admission
+            // capacity (prompt+1 → 5 blocks = 20 tokens) — growth under
+            // a full pool is what forces preemption
+            gen_min: 6,
+            gen_max: 10,
+            vocab: vocab as i32 - 1,
+        };
+        let requests = shared_prefix_requests(&w, 16, 5, Instant::now(), Duration::ZERO);
+
+        // static oracle: huge pool, no prefix cache
+        let mut eng_s = SyntheticIterationEngine::instant(vocab);
+        let mut kv_s = KvCacheManager::new(kv_cfg(256));
+        let mut ms = SchedulerMetrics::default();
+        let want = by_id(
+            run_static(&mut eng_s, &mut kv_s, &requests, 4, &SystemClock, &mut ms, false)
+                .unwrap(),
+        );
+        kv_s.leak_check().unwrap();
+
+        // continuous with the prefix cache, pool tight enough to preempt
+        let mut eng_c = SyntheticIterationEngine::instant(vocab);
+        let mut sched = ContinuousScheduler::new(
+            SchedConfig { max_running: 6 },
+            kv_cfg_prefix(14),
+            SimClock::new(),
+        );
+        for r in &requests {
+            sched.submit(r.clone());
+        }
+        let got = by_id(sched.run_to_completion(&mut eng_c).unwrap());
+        assert_eq!(got.len(), want.len());
+        for (id, wr) in &want {
+            assert_eq!(got[id].tokens, wr.tokens, "request {id} diverged");
+        }
+        assert!(sched.metrics.prefix_hits > 0, "shared prefixes must hit");
+        assert!(sched.metrics.saved_prefill_tokens > 0);
+        assert!(
+            sched.metrics.preemptions > 0,
+            "pool of 14 blocks must force preemption"
+        );
+        assert!(
+            sched.kv.stats().shared_blocks_retained > 0,
+            "preempted sharers leave shared blocks under the trie"
+        );
+        sched.kv.leak_check().unwrap();
+    }
+
+    #[test]
+    fn admission_demands_only_the_suffix_for_hitting_prompts() {
+        let vocab = 32;
+        let mut sched = ContinuousScheduler::new(
+            SchedConfig { max_running: 4 },
+            kv_cfg_prefix(8),
+            SimClock::new(),
+        );
+        let mut eng = SyntheticIterationEngine::instant(vocab);
+        let prompt: Vec<i32> = (1..=8).collect(); // 2 full blocks
+
+        // request A publishes the prefix, finishes, releases its blocks
+        sched.submit(GenRequest::new(0, prompt.clone(), 2));
+        while sched.has_work() {
+            sched.step(&mut eng).unwrap();
+        }
+        assert_eq!(sched.kv.trie_hot_blocks(), 2, "prefix survives A");
+
+        // a filler pins 4 blocks; free = 8 − 2 (trie) − 4 = 2
+        sched.submit(GenRequest::new(1, vec![90; 12], 16));
+        sched.step(&mut eng).unwrap();
+        assert_eq!(sched.running_ids(), vec![1]);
+        assert_eq!(sched.kv.free_blocks(), 2);
+
+        // B re-sends the shared prompt. Naive demand is 3 blocks (> 2
+        // free) — the suffix-aware plan charges 1 and must admit.
+        sched.submit(GenRequest::new(2, prompt.clone(), 2));
+        let r = sched.step(&mut eng).unwrap();
+        assert_eq!(r.admitted, 1, "hitting prompt admits on suffix demand");
+        assert!(sched.running_ids().contains(&2));
+        assert_eq!(sched.metrics.prefix_hits, 1);
+        assert_eq!(sched.metrics.saved_prefill_tokens, 8);
+        while sched.has_work() {
+            sched.step(&mut eng).unwrap();
+        }
+        sched.kv.leak_check().unwrap();
     }
 
     #[test]

@@ -1,0 +1,416 @@
+//! Radix prefix index over the paged KV cache — the structure behind
+//! multi-tenant prompt reuse.
+//!
+//! ## Shape
+//!
+//! A trie keyed on *token-block boundaries*: every node is exactly one
+//! KV block's worth of tokens (`block_tokens` of them), and a root→node
+//! path spells out a prompt prefix. Matching a prompt walks full blocks
+//! top-down (first inserted child wins — deterministic), then checks
+//! whether the sub-block remainder is a prefix of one child (the
+//! partial-tail link that makes copy-on-write forks real work, not a
+//! theoretical case).
+//!
+//! ## Tiers
+//!
+//! Each node's block lives in one of two states and can be dropped:
+//!
+//! * **Hot** — resident in a pool block; the trie holds one refcount on
+//!   it, sharers hold more. A hit links it for free.
+//! * **Compressed** — the block's bytes were evicted through the codec
+//!   registry (`select_codec_with(kv_evict_params())`, the §3.2 probe)
+//!   into the bounded cold tier; a hit restores bit-identically via
+//!   `decode_into_disjoint`. Reclaim compresses the LRU hot node whose
+//!   block nobody else references.
+//! * **Dropped** — when the cold tier exceeds its byte budget, the LRU
+//!   *unpinned compressed leaf* is forgotten entirely (a later request
+//!   re-prefills it). Pinned nodes — ones an evicted sequence still
+//!   references — may be compressed but never dropped, so preempted
+//!   sharers always restore.
+//!
+//! The index itself owns no pool blocks and does no allocation; the
+//! [`crate::scheduler::kv_cache::KvCacheManager`] drives every state
+//! transition and keeps refcounts/bytes honest (cross-checked by its
+//! extended `leak_check`).
+
+use crate::codec::codecs::CompressedTensor;
+
+/// Cold-tier budget for the prefix cache.
+#[derive(Debug, Clone, Copy)]
+pub struct PrefixCacheConfig {
+    /// stored-byte bound on the compressed tier; beyond it, LRU
+    /// unpinned compressed leaves are dropped
+    pub max_compressed_bytes: usize,
+}
+
+impl Default for PrefixCacheConfig {
+    fn default() -> Self {
+        Self {
+            max_compressed_bytes: 256 * 1024,
+        }
+    }
+}
+
+/// Prefix-cache counters the metrics/benches report.
+#[derive(Debug, Clone, Default)]
+pub struct PrefixStats {
+    /// prompts matched against the index at admission
+    pub lookups: u64,
+    /// lookups that matched at least one token
+    pub hits: u64,
+    /// prefill positions skipped because their blocks were linked
+    pub matched_tokens: u64,
+    /// trie nodes created from freshly prefilled blocks
+    pub inserted_nodes: u64,
+    /// private blocks freed because an identical trie block existed
+    pub dedup_blocks: u64,
+    /// compressed nodes re-homed onto a sharer's identical private block
+    pub adopted_blocks: u64,
+    /// private copies made when a write landed in a shared block
+    pub cow_forks: u64,
+    /// hot→compressed transitions (reclaim)
+    pub compressions: u64,
+    /// compressed→hot transitions (hit on a cold prefix)
+    pub restores: u64,
+    /// evicted sharers that re-linked a still-hot node on resume
+    pub relinks: u64,
+    /// compressed nodes dropped by the byte budget
+    pub drops: u64,
+    /// current / peak cold-tier occupancy
+    pub compressed_bytes: usize,
+    pub peak_compressed_bytes: usize,
+}
+
+impl PrefixStats {
+    pub(crate) fn add_compressed(&mut self, bytes: usize) {
+        self.compressed_bytes += bytes;
+        self.peak_compressed_bytes = self.peak_compressed_bytes.max(self.compressed_bytes);
+    }
+
+    pub(crate) fn sub_compressed(&mut self, bytes: usize) {
+        debug_assert!(self.compressed_bytes >= bytes);
+        self.compressed_bytes -= bytes;
+    }
+}
+
+/// Point-in-time tier occupancy (the "tier census" kv-sim prints).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TierCensus {
+    pub hot_nodes: usize,
+    pub compressed_nodes: usize,
+    pub compressed_bytes: usize,
+    /// nodes an evicted sequence still depends on (never droppable)
+    pub pinned_nodes: usize,
+}
+
+/// Where a prefix block's bytes live right now.
+#[derive(Debug)]
+pub(crate) enum NodeState {
+    /// resident pool block; the trie holds one refcount on it
+    Hot(u32),
+    /// codec-registry payload in the bounded cold tier
+    Compressed(CompressedTensor),
+}
+
+#[derive(Debug)]
+pub(crate) struct PrefixNode {
+    /// exactly `block_tokens` tokens — one full KV block
+    pub tokens: Box<[i32]>,
+    pub parent: Option<u32>,
+    /// insertion order; matching scans in order → deterministic
+    pub children: Vec<u32>,
+    pub state: NodeState,
+    /// evicted sequences holding a `Shared` slot on this node. A pinned
+    /// node may be compressed, never dropped.
+    pub pins: u32,
+    /// logical LRU stamp (bumped on every match/insert touching it)
+    pub last_hit: u64,
+}
+
+/// Result of matching a prompt against the index.
+#[derive(Debug, Default)]
+pub(crate) struct PrefixMatch {
+    /// fully matched block nodes, root-down
+    pub chain: Vec<u32>,
+    /// node whose block *starts with* the sub-block prompt remainder
+    /// (linking it skips the remainder's prefill; the first write into
+    /// it CoW-forks)
+    pub tail: Option<u32>,
+    /// prompt positions covered by `chain` + `tail`
+    pub matched_tokens: usize,
+}
+
+/// The radix index: a slab of nodes (tombstoned — ids stay stable) with
+/// explicit roots. Pure structure; the manager owns all block/byte
+/// state transitions.
+#[derive(Debug)]
+pub(crate) struct PrefixIndex {
+    pub cfg: PrefixCacheConfig,
+    nodes: Vec<Option<PrefixNode>>,
+    roots: Vec<u32>,
+    tick: u64,
+    pub stats: PrefixStats,
+}
+
+impl PrefixIndex {
+    pub fn new(cfg: PrefixCacheConfig) -> Self {
+        Self {
+            cfg,
+            nodes: Vec::new(),
+            roots: Vec::new(),
+            tick: 0,
+            stats: PrefixStats::default(),
+        }
+    }
+
+    pub fn node(&self, id: u32) -> &PrefixNode {
+        self.nodes[id as usize].as_ref().expect("live node")
+    }
+
+    pub fn node_mut(&mut self, id: u32) -> &mut PrefixNode {
+        self.nodes[id as usize].as_mut().expect("live node")
+    }
+
+    /// Bump `id`'s LRU stamp.
+    pub fn touch(&mut self, id: u32) {
+        self.tick += 1;
+        let t = self.tick;
+        self.node_mut(id).last_hit = t;
+    }
+
+    /// Live `(id, node)` pairs in id order (deterministic scans).
+    pub fn iter(&self) -> impl Iterator<Item = (u32, &PrefixNode)> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, n)| n.as_ref().map(|n| (i as u32, n)))
+    }
+
+    fn children_of(&self, parent: Option<u32>) -> &[u32] {
+        match parent {
+            Some(p) => &self.node(p).children,
+            None => &self.roots,
+        }
+    }
+
+    /// First child of `parent` whose tokens equal `block` exactly.
+    pub fn child_eq(&self, parent: Option<u32>, block: &[i32]) -> Option<u32> {
+        self.children_of(parent)
+            .iter()
+            .copied()
+            .find(|&c| &*self.node(c).tokens == block)
+    }
+
+    /// First child of `parent` whose tokens *start with* `rem`.
+    fn child_starting_with(&self, parent: Option<u32>, rem: &[i32]) -> Option<u32> {
+        self.children_of(parent)
+            .iter()
+            .copied()
+            .find(|&c| self.node(c).tokens.starts_with(rem))
+    }
+
+    /// Pure match of `prompt` (block granularity `bt`): longest chain of
+    /// full blocks, then an optional partial-tail child. Never covers
+    /// the whole of `prompt` *and* a full tail block — `matched_tokens`
+    /// ≤ `prompt.len()` always.
+    pub fn lookup(&self, prompt: &[i32], bt: usize) -> PrefixMatch {
+        let mut m = PrefixMatch::default();
+        let mut parent = None;
+        while (m.chain.len() + 1) * bt <= prompt.len() {
+            let i = m.chain.len();
+            let block = &prompt[i * bt..(i + 1) * bt];
+            match self.child_eq(parent, block) {
+                Some(c) => {
+                    m.chain.push(c);
+                    parent = Some(c);
+                }
+                None => break,
+            }
+        }
+        m.matched_tokens = m.chain.len() * bt;
+        // a divergence inside a full block ends the match (positions
+        // after it differ); only a *shorter-than-a-block* remainder can
+        // ride a child's block
+        let rem = &prompt[m.chain.len() * bt..];
+        if !rem.is_empty() && rem.len() < bt {
+            if let Some(c) = self.child_starting_with(parent, rem) {
+                m.tail = Some(c);
+                m.matched_tokens += rem.len();
+            }
+        }
+        m
+    }
+
+    /// Insert a new Hot node for `tokens` under `parent`. The caller
+    /// has already checked no equal child exists and holds the trie's
+    /// refcount on `block`.
+    pub fn insert(&mut self, parent: Option<u32>, tokens: &[i32], block: u32) -> u32 {
+        let id = self.nodes.len() as u32;
+        self.nodes.push(Some(PrefixNode {
+            tokens: tokens.into(),
+            parent,
+            children: Vec::new(),
+            state: NodeState::Hot(block),
+            pins: 0,
+            last_hit: 0,
+        }));
+        match parent {
+            Some(p) => self.node_mut(p).children.push(id),
+            None => self.roots.push(id),
+        }
+        self.stats.inserted_nodes += 1;
+        self.touch(id);
+        id
+    }
+
+    /// Detach and forget `id` (must be a leaf). Returns its state.
+    pub fn remove(&mut self, id: u32) -> NodeState {
+        let node = self.nodes[id as usize].take().expect("live node");
+        assert!(node.children.is_empty(), "only leaves are removable");
+        match node.parent {
+            Some(p) => self.node_mut(p).children.retain(|&c| c != id),
+            None => self.roots.retain(|&c| c != id),
+        }
+        node.state
+    }
+
+    /// LRU hot node passing `keep` (used by reclaim: `keep` filters to
+    /// blocks nobody but the trie references). Ties break on node id.
+    pub fn lru_hot(&self, keep: impl Fn(u32, u32) -> bool) -> Option<u32> {
+        self.iter()
+            .filter_map(|(id, n)| match n.state {
+                NodeState::Hot(b) if keep(id, b) => Some((n.last_hit, id)),
+                _ => None,
+            })
+            .min()
+            .map(|(_, id)| id)
+    }
+
+    /// LRU droppable node: compressed, unpinned, leaf. Interior nodes
+    /// survive until their subtree drains (dropping one would strand
+    /// descendants whose match path runs through it).
+    pub fn lru_droppable(&self) -> Option<u32> {
+        self.iter()
+            .filter_map(|(id, n)| match n.state {
+                NodeState::Compressed(_) if n.pins == 0 && n.children.is_empty() => {
+                    Some((n.last_hit, id))
+                }
+                _ => None,
+            })
+            .min()
+            .map(|(_, id)| id)
+    }
+
+    pub fn census(&self) -> TierCensus {
+        let mut c = TierCensus {
+            compressed_bytes: self.stats.compressed_bytes,
+            ..TierCensus::default()
+        };
+        for (_, n) in self.iter() {
+            match n.state {
+                NodeState::Hot(_) => c.hot_nodes += 1,
+                NodeState::Compressed(_) => c.compressed_nodes += 1,
+            }
+            if n.pins > 0 {
+                c.pinned_nodes += 1;
+            }
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::codecs::{compress_auto, CompressedTensor};
+    use crate::codec::Fp8Format;
+    use crate::scheduler::kv_cache::kv_evict_params;
+
+    fn compressed(bytes: usize) -> CompressedTensor {
+        compress_auto(&vec![0x38u8; bytes], Fp8Format::E4M3, kv_evict_params())
+    }
+
+    #[test]
+    fn lookup_walks_full_blocks_then_partial_tail() {
+        let mut ix = PrefixIndex::new(PrefixCacheConfig::default());
+        let a = ix.insert(None, &[1, 2, 3, 4], 0);
+        let b = ix.insert(Some(a), &[5, 6, 7, 8], 1);
+        ix.insert(None, &[9, 9, 9, 9], 2);
+
+        let m = ix.lookup(&[1, 2, 3, 4, 5, 6, 7, 8, 20], 4);
+        assert_eq!(m.chain, vec![a, b]);
+        assert_eq!(m.tail, None);
+        assert_eq!(m.matched_tokens, 8);
+
+        // sub-block remainder rides a child block
+        let m = ix.lookup(&[1, 2, 3, 4, 5, 6], 4);
+        assert_eq!(m.chain, vec![a]);
+        assert_eq!(m.tail, Some(b));
+        assert_eq!(m.matched_tokens, 6);
+
+        // divergence inside a full block matches nothing past it
+        let m = ix.lookup(&[1, 2, 3, 4, 5, 6, 99, 8], 4);
+        assert_eq!(m.chain, vec![a]);
+        assert_eq!(m.tail, None, "mid-block divergence cannot share");
+        assert_eq!(m.matched_tokens, 4);
+
+        let m = ix.lookup(&[42, 2, 3, 4], 4);
+        assert!(m.chain.is_empty() && m.tail.is_none() && m.matched_tokens == 0);
+    }
+
+    #[test]
+    fn match_order_is_first_inserted_deterministic() {
+        let mut ix = PrefixIndex::new(PrefixCacheConfig::default());
+        let a = ix.insert(None, &[1, 2], 0);
+        ix.insert(None, &[1, 3], 1);
+        // partial remainder [1] prefixes both children — first wins
+        let m = ix.lookup(&[1], 2);
+        assert_eq!(m.tail, Some(a));
+    }
+
+    #[test]
+    fn lru_prefers_oldest_and_respects_filters() {
+        let mut ix = PrefixIndex::new(PrefixCacheConfig::default());
+        let a = ix.insert(None, &[1, 2], 10);
+        let b = ix.insert(Some(a), &[3, 4], 11);
+        let c = ix.insert(None, &[5, 6], 12);
+        ix.touch(a); // a is now newest
+        assert_eq!(ix.lru_hot(|_, _| true), Some(b));
+        assert_eq!(ix.lru_hot(|id, _| id != b), Some(c));
+
+        // droppable: compressed + unpinned + leaf only
+        assert_eq!(ix.lru_droppable(), None);
+        ix.node_mut(a).state = NodeState::Compressed(compressed(16));
+        assert_eq!(ix.lru_droppable(), None, "interior node is not droppable");
+        ix.node_mut(b).state = NodeState::Compressed(compressed(16));
+        ix.node_mut(b).pins = 1;
+        assert_eq!(ix.lru_droppable(), None, "pinned node is not droppable");
+        ix.node_mut(b).pins = 0;
+        assert_eq!(ix.lru_droppable(), Some(b));
+        matches!(ix.remove(b), NodeState::Compressed(_));
+        // with b gone, a is a compressed leaf again
+        assert_eq!(ix.lru_droppable(), Some(a));
+        let m = ix.lookup(&[1, 2, 3, 4], 2);
+        assert_eq!(m.chain, vec![a], "removed child no longer matches");
+    }
+
+    #[test]
+    fn census_counts_tiers_and_pins() {
+        let mut ix = PrefixIndex::new(PrefixCacheConfig::default());
+        let a = ix.insert(None, &[1, 2], 0);
+        ix.insert(Some(a), &[3, 4], 1);
+        ix.node_mut(a).state = NodeState::Compressed(compressed(8));
+        ix.node_mut(a).pins = 2;
+        ix.stats.add_compressed(8);
+        let c = ix.census();
+        assert_eq!(
+            c,
+            TierCensus {
+                hot_nodes: 1,
+                compressed_nodes: 1,
+                compressed_bytes: ix.stats.compressed_bytes,
+                pinned_nodes: 1
+            }
+        );
+    }
+}

@@ -1,0 +1,185 @@
+//! Seeded multi-tenant request generators for the prefix-cache
+//! surfaces: `N` tenants each own a fixed **system prompt** (the shared
+//! prefix), every request re-sends that prefix followed by a private
+//! user suffix. One generator feeds `ecf8 kv-sim --prefix`,
+//! `bench_prefix`, and the invariant tests, so all three replay the
+//! exact same token streams from a seed — and the Python verify sim
+//! (`.claude/skills/verify/sim_prefix.py`) mirrors this module
+//! function-for-function.
+//!
+//! Tokens are drawn per-tenant from a splitmix stream, so a tenant's
+//! system prompt is a pure function of `(seed, tenant)` — independent
+//! of how many requests are generated or in which order. The first
+//! system token is forced onto the weight-like payload lane
+//! (see [`super::kv_cache::kv_lane_noise`]) for *even* tenants and the
+//! noise lane for *odd* ones, so a multi-tenant run exercises both
+//! codecs in the compressed cold tier.
+
+use super::kv_cache::splitmix;
+use super::policy::GenRequest;
+use std::time::{Duration, Instant};
+
+/// Shape of the seeded shared-prefix workload.
+#[derive(Debug, Clone, Copy)]
+pub struct SharedPrefixWorkload {
+    /// number of distinct system prompts (tenants)
+    pub tenants: usize,
+    /// tokens in each tenant's shared system prompt
+    pub system_tokens: usize,
+    /// tokens in each request's private user suffix
+    pub user_tokens: usize,
+    /// per-request generation budget range (inclusive)
+    pub gen_min: usize,
+    pub gen_max: usize,
+    /// token id range: ids are drawn from `1..=vocab`
+    pub vocab: i32,
+}
+
+impl Default for SharedPrefixWorkload {
+    fn default() -> Self {
+        Self {
+            tenants: 4,
+            system_tokens: 48,
+            user_tokens: 12,
+            gen_min: 4,
+            gen_max: 12,
+            vocab: 32_000,
+        }
+    }
+}
+
+/// A tiny deterministic stream over [`splitmix`]: counter-mode, so two
+/// streams with different seeds never correlate.
+struct Stream {
+    seed: u64,
+    i: u64,
+}
+
+impl Stream {
+    fn new(seed: u64) -> Self {
+        Self { seed, i: 0 }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        self.i += 1;
+        splitmix(self.seed ^ self.i.wrapping_mul(0xA076_1D64_78BD_642F))
+    }
+
+    /// uniform in `[1, vocab]`
+    fn token(&mut self, vocab: i32) -> i32 {
+        (self.next_u64() % vocab as u64) as i32 + 1
+    }
+
+    /// uniform in `[lo, hi]`
+    fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.next_u64() % (hi - lo + 1) as u64) as usize
+    }
+}
+
+impl SharedPrefixWorkload {
+    /// Tenant `t`'s system prompt — a pure function of `(seed, t)`.
+    pub fn system_prompt(&self, seed: u64, tenant: usize) -> Vec<i32> {
+        assert!(self.system_tokens > 0, "empty system prompt");
+        let mut s = Stream::new(splitmix(seed) ^ (tenant as u64).wrapping_mul(0x9E37_79B9));
+        let mut prompt: Vec<i32> = (0..self.system_tokens)
+            .map(|_| s.token(self.vocab))
+            .collect();
+        // pin the payload lane per tenant parity: even → weight-like
+        // (compressible), odd → noise (incompressible), so the cold
+        // tier's codec census sees both
+        let lane_noise = tenant % 2 == 1;
+        let t0 = prompt[0];
+        prompt[0] = if lane_noise {
+            t0 - t0.rem_euclid(4) + 3
+        } else {
+            let adjusted = t0 - t0.rem_euclid(4) + 1;
+            debug_assert!(adjusted > 0);
+            adjusted
+        };
+        prompt
+    }
+}
+
+/// Generate `n` requests: request `i` belongs to tenant `i % tenants`,
+/// arrives at `start + i * gap`, and carries that tenant's system
+/// prompt followed by a private, per-request user suffix. Generation
+/// budgets are drawn from `[gen_min, gen_max]` per request.
+pub fn shared_prefix_requests(
+    w: &SharedPrefixWorkload,
+    n: usize,
+    seed: u64,
+    start: Instant,
+    gap: Duration,
+) -> Vec<GenRequest> {
+    assert!(w.tenants > 0, "need at least one tenant");
+    assert!(w.gen_min > 0 && w.gen_min <= w.gen_max, "bad gen range");
+    let systems: Vec<Vec<i32>> = (0..w.tenants)
+        .map(|t| w.system_prompt(seed, t))
+        .collect();
+    (0..n)
+        .map(|i| {
+            let tenant = i % w.tenants;
+            let mut s = Stream::new(
+                splitmix(seed ^ 0x7265_7175_6573_74) ^ (i as u64).wrapping_mul(0x5851_F42D),
+            );
+            let mut prompt = systems[tenant].clone();
+            prompt.extend((0..w.user_tokens).map(|_| s.token(w.vocab)));
+            let budget = s.range(w.gen_min, w.gen_max);
+            GenRequest::at(i as u64, prompt, budget, start + gap * i as u32)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::kv_cache::kv_lane_noise;
+
+    #[test]
+    fn workload_is_deterministic_and_tenant_stable() {
+        let w = SharedPrefixWorkload::default();
+        let t0 = Instant::now();
+        let a = shared_prefix_requests(&w, 12, 7, t0, Duration::from_millis(1));
+        let b = shared_prefix_requests(&w, 12, 7, t0, Duration::from_millis(1));
+        assert_eq!(a.len(), 12);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.id, &x.prompt, x.max_new_tokens), (y.id, &y.prompt, y.max_new_tokens));
+        }
+        // same tenant → same system prefix; different tenants differ
+        let sys = w.system_tokens;
+        assert_eq!(a[0].prompt[..sys], a[4].prompt[..sys]);
+        assert_ne!(a[0].prompt[..sys], a[1].prompt[..sys]);
+        // user suffixes are private even within a tenant
+        assert_ne!(a[0].prompt[sys..], a[4].prompt[sys..]);
+        // a different seed reshuffles everything
+        let c = shared_prefix_requests(&w, 12, 8, t0, Duration::from_millis(1));
+        assert_ne!(a[0].prompt, c[0].prompt);
+    }
+
+    #[test]
+    fn tenant_parity_pins_the_payload_lane() {
+        let w = SharedPrefixWorkload::default();
+        for t in 0..6 {
+            let p = w.system_prompt(7, t);
+            assert_eq!(p.len(), w.system_tokens);
+            assert!(p.iter().all(|&tok| tok >= 1 && tok <= w.vocab));
+            assert_eq!(kv_lane_noise(p[0]), t % 2 == 1, "tenant {t}");
+        }
+    }
+
+    #[test]
+    fn arrivals_and_budgets_follow_the_spec() {
+        let w = SharedPrefixWorkload {
+            gen_min: 3,
+            gen_max: 5,
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let reqs = shared_prefix_requests(&w, 9, 1, t0, Duration::from_millis(2));
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.arrived, t0 + Duration::from_millis(2 * i as u64));
+            assert!(r.max_new_tokens >= 3 && r.max_new_tokens <= 5);
+            assert_eq!(r.prompt.len(), w.system_tokens + w.user_tokens);
+        }
+    }
+}

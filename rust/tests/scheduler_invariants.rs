@@ -13,13 +13,14 @@ use ecf8::codec::codecs::{parse_record, registry};
 use ecf8::codec::{Ecf8Params, Fp8Format};
 use ecf8::coordinator::metrics::SchedulerMetrics;
 use ecf8::scheduler::{
-    run_static, ContinuousScheduler, ContinuousServer, GenRequest, KvCacheConfig, KvCacheManager,
-    SchedConfig, SimClock, SyntheticIterationEngine, SystemClock,
+    run_static, shared_prefix_requests, ContinuousScheduler, ContinuousServer, GenRequest,
+    KvCacheConfig, KvCacheManager, PrefixCacheConfig, SchedConfig, SharedPrefixWorkload, SimClock,
+    SyntheticIterationEngine, SystemClock,
 };
 use ecf8::util::prng::Xoshiro256;
 use std::collections::HashMap;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn kv_cfg(block_tokens: usize, n_blocks: usize) -> KvCacheConfig {
     KvCacheConfig {
@@ -27,7 +28,12 @@ fn kv_cfg(block_tokens: usize, n_blocks: usize) -> KvCacheConfig {
         bytes_per_token: 48,
         n_blocks,
         format: Fp8Format::E4M3,
+        prefix: None,
     }
+}
+
+fn kv_cfg_prefix(block_tokens: usize, n_blocks: usize) -> KvCacheConfig {
+    kv_cfg(block_tokens, n_blocks).with_prefix(PrefixCacheConfig::default())
 }
 
 fn requests(n: u64, vocab: usize, rng: &mut Xoshiro256) -> Vec<GenRequest> {
@@ -264,4 +270,236 @@ fn threaded_continuous_server_with_costs_streams_everything() {
     // continuous scheduling never pays dead slots
     assert_eq!(report.metrics.slot_tokens, report.metrics.slot_capacity);
     assert!((report.metrics.occupancy() - 1.0).abs() < 1e-12);
+}
+
+// ---- radix prefix cache: seeded churn invariants ----------------------
+
+#[test]
+fn prefix_churn_survives_seeded_sweeps_without_leaks() {
+    // shared-prefix workloads over several geometries with the cache
+    // on: every step must keep the extended books balanced (pool refs,
+    // trie nodes, cold-tier bytes), and the drained end state is
+    // "free + trie-held == pool" — the trie legitimately retains blocks
+    // after all sequences finish
+    let mut total_hits = 0u64;
+    let mut total_preemptions = 0u64;
+    for (seed, block_tokens, n_blocks, max_running, tenants, system_tokens, user_tokens) in [
+        (31u64, 4usize, 16usize, 4usize, 2usize, 8usize, 3usize),
+        (32, 4, 14, 6, 2, 12, 4),
+        (33, 8, 24, 8, 3, 16, 5),
+        (34, 2, 12, 3, 2, 6, 2),
+    ] {
+        let w = SharedPrefixWorkload {
+            tenants,
+            system_tokens,
+            user_tokens,
+            gen_min: 2,
+            gen_max: 8,
+            vocab: 63,
+        };
+        let reqs = shared_prefix_requests(&w, 20, seed, Instant::now(), Duration::ZERO);
+        let mut sched = ContinuousScheduler::new(
+            SchedConfig { max_running },
+            kv_cfg_prefix(block_tokens, n_blocks),
+            SimClock::new(),
+        );
+        for r in &reqs {
+            sched.submit(r.clone());
+        }
+        let mut eng = SyntheticIterationEngine::instant(64);
+        let mut responses = Vec::new();
+        let mut steps = 0usize;
+        while sched.has_work() {
+            let report = sched.step(&mut eng).unwrap();
+            assert!(!report.no_progress(), "seed {seed}: stalled with work queued");
+            responses.extend(report.responses);
+            sched.kv().leak_check().unwrap_or_else(|e| {
+                panic!("seed {seed} step {steps}: {e}");
+            });
+            steps += 1;
+            assert!(steps < 10_000, "seed {seed}: runaway schedule");
+        }
+        assert_eq!(responses.len(), reqs.len(), "seed {seed}");
+        for r in &responses {
+            let want = reqs.iter().find(|q| q.id == r.id).unwrap().max_new_tokens;
+            assert_eq!(r.tokens.len(), want, "seed {seed} request {}", r.id);
+        }
+        // trie nodes legitimately outlive the sequences that built them
+        assert_eq!(
+            sched.kv().free_blocks() + sched.kv().trie_hot_blocks(),
+            n_blocks,
+            "seed {seed}: pool accounted for"
+        );
+        let p = sched.kv().prefix_stats().unwrap();
+        assert_eq!(p.lookups, reqs.len() as u64, "seed {seed}");
+        total_hits += p.hits;
+        total_preemptions += sched.metrics.preemptions;
+    }
+    assert!(total_hits > 0, "shared prompts never hit the trie");
+    assert!(total_preemptions > 0, "tight pools never preempted");
+}
+
+#[test]
+fn preemption_retains_shared_blocks_for_live_sharers() {
+    // two sequences co-share a published prefix; evicting one must not
+    // compress or free the shared blocks out from under the survivor
+    let mut kv = KvCacheManager::new(kv_cfg_prefix(4, 16));
+    let prompt: Vec<i32> = (1..=8).collect();
+
+    assert_eq!(kv.register_with_prefix(0, &prompt).unwrap(), 0);
+    kv.ensure_capacity(0, prompt.len()).unwrap();
+    for &t in &prompt {
+        kv.write_token(0, t).unwrap();
+    }
+    kv.insert_prefix(0, &prompt).unwrap();
+
+    let mut prompt2 = prompt.clone();
+    prompt2.extend([21, 22]);
+    assert_eq!(kv.register_with_prefix(1, &prompt2).unwrap(), 8);
+    kv.ensure_capacity(1, prompt2.len()).unwrap();
+    for &t in &prompt2[8..] {
+        kv.write_token(1, t).unwrap();
+    }
+
+    let f0 = kv.fold_kv(0, 8).unwrap();
+    let f1 = kv.fold_kv(1, 10).unwrap();
+    let before: Vec<Vec<u8>> =
+        (0..10).map(|p| kv.token_bytes(1, p).unwrap().to_vec()).collect();
+
+    kv.evict(0).unwrap();
+    assert_eq!(
+        kv.stats().shared_blocks_retained,
+        2,
+        "shared blocks must be retained, not compressed"
+    );
+    // the survivor still reads the exact same bytes
+    assert_eq!(kv.fold_kv(1, 10).unwrap(), f1);
+    for (p, want) in before.iter().enumerate() {
+        assert_eq!(kv.token_bytes(1, p).unwrap(), &want[..], "position {p}");
+    }
+    kv.leak_check().unwrap();
+
+    kv.restore(0, None).unwrap();
+    assert_eq!(kv.fold_kv(0, 8).unwrap(), f0);
+    assert_eq!(kv.prefix_stats().unwrap().relinks, 2, "hot nodes relink for free");
+
+    kv.release(0).unwrap();
+    kv.release(1).unwrap();
+    kv.leak_check().unwrap();
+    assert_eq!(kv.trie_hot_blocks(), 2);
+    assert_eq!(kv.free_blocks() + kv.trie_hot_blocks(), 16);
+}
+
+#[test]
+fn cold_tier_restores_bit_identically_on_both_payload_lanes() {
+    // publish one prefix per payload lane (weight-like and noise), force
+    // both into the compressed cold tier via allocation pressure, then
+    // re-admit: restored bytes must match a prefix-less manager that
+    // prefilled the same tokens from scratch
+    let prompt_w: Vec<i32> = (1..=8).collect(); // first token 1 → weight lane
+    let prompt_n: Vec<i32> = std::iter::once(3).chain(9..=15).collect(); // 3 → noise lane
+
+    // reference folds from a plain manager (content-addressed payloads
+    // are a pure function of token history, so folds compare across
+    // managers)
+    let mut plain = KvCacheManager::new(kv_cfg(4, 6));
+    for (seq, prompt) in [(10u64, &prompt_w), (11, &prompt_n)] {
+        plain.register(seq).unwrap();
+        plain.ensure_capacity(seq, prompt.len()).unwrap();
+        for &t in prompt.iter() {
+            plain.write_token(seq, t).unwrap();
+        }
+    }
+    let fold_w = plain.fold_kv(10, 8).unwrap();
+    let fold_n = plain.fold_kv(11, 8).unwrap();
+
+    let mut kv = KvCacheManager::new(kv_cfg_prefix(4, 6));
+    for (seq, prompt) in [(0u64, &prompt_w), (1, &prompt_n)] {
+        assert_eq!(kv.register_with_prefix(seq, prompt).unwrap(), 0);
+        kv.ensure_capacity(seq, prompt.len()).unwrap();
+        for &t in prompt.iter() {
+            kv.write_token(seq, t).unwrap();
+        }
+        kv.insert_prefix(seq, prompt).unwrap();
+        kv.release(seq).unwrap();
+    }
+    assert_eq!(kv.trie_hot_blocks(), 4);
+
+    // a 24-token stranger needs the whole pool → idle trie blocks are
+    // reclaimed through the codec path into the cold tier
+    kv.register(2).unwrap();
+    kv.ensure_capacity(2, 24).unwrap();
+    for i in 0..24 {
+        kv.write_token(2, 100 + i).unwrap();
+    }
+    assert_eq!(kv.trie_hot_blocks(), 0);
+    assert_eq!(kv.prefix_stats().unwrap().compressions, 4);
+    kv.release(2).unwrap();
+
+    // both lanes come back bit-identical from the compressed tier
+    assert_eq!(kv.register_with_prefix(3, &prompt_w).unwrap(), 8);
+    assert_eq!(kv.fold_kv(3, 8).unwrap(), fold_w);
+    assert_eq!(kv.register_with_prefix(4, &prompt_n).unwrap(), 8);
+    assert_eq!(kv.fold_kv(4, 8).unwrap(), fold_n);
+    for p in 0..8 {
+        assert_eq!(kv.token_bytes(3, p).unwrap(), plain.token_bytes(10, p).unwrap());
+        assert_eq!(kv.token_bytes(4, p).unwrap(), plain.token_bytes(11, p).unwrap());
+    }
+    let p = kv.prefix_stats().unwrap();
+    assert_eq!(p.restores, 4, "two blocks per lane decode from cold");
+    assert_eq!(p.hits, 2);
+
+    kv.release(3).unwrap();
+    kv.release(4).unwrap();
+    kv.leak_check().unwrap();
+}
+
+#[test]
+fn prefix_continuous_equals_static_across_seeds() {
+    // the whole tentpole under one oracle: shared prompts, linking,
+    // CoW forks, cold-tier round-trips and preemption may change wall
+    // time and block traffic — never tokens
+    let w = SharedPrefixWorkload {
+        tenants: 2,
+        system_tokens: 12,
+        user_tokens: 4,
+        gen_min: 6,
+        gen_max: 10,
+        vocab: 47,
+    };
+    let mut total_preemptions = 0u64;
+    for seed in [5u64, 6, 7] {
+        let reqs = shared_prefix_requests(&w, 16, seed, Instant::now(), Duration::ZERO);
+
+        let mut eng_s = SyntheticIterationEngine::instant(48);
+        let mut kv_s = KvCacheManager::new(kv_cfg(4, 256));
+        let mut ms = SchedulerMetrics::default();
+        let want: HashMap<u64, Vec<i32>> =
+            run_static(&mut eng_s, &mut kv_s, &reqs, 4, &SystemClock, &mut ms, false)
+                .unwrap()
+                .into_iter()
+                .map(|r| (r.id, r.tokens))
+                .collect();
+        kv_s.leak_check().unwrap();
+
+        let mut eng_c = SyntheticIterationEngine::instant(48);
+        let mut sched = ContinuousScheduler::new(
+            SchedConfig { max_running: 6 },
+            kv_cfg_prefix(4, 14),
+            SimClock::new(),
+        );
+        for r in &reqs {
+            sched.submit(r.clone());
+        }
+        let got = sched.run_to_completion(&mut eng_c).unwrap();
+        sched.kv().leak_check().unwrap();
+        assert_eq!(got.len(), want.len(), "seed {seed}");
+        for r in &got {
+            assert_eq!(r.tokens, want[&r.id], "seed {seed} request {}", r.id);
+        }
+        let p = sched.kv().prefix_stats().unwrap();
+        assert!(p.hits > 0, "seed {seed}: shared prompts must hit");
+        total_preemptions += sched.metrics.preemptions;
+    }
+    assert!(total_preemptions > 0, "14-block pools must preempt somewhere");
 }
