@@ -1,0 +1,374 @@
+//! Overload governor on the flooding-tenant workload — the ROADMAP's
+//! "overload governor & tenant fairness" rung, measured.
+//!
+//! Three sections:
+//! 1. **Unprotected baseline** — the continuous scheduler with no
+//!    governor under a sustained over-capacity arrival process (one
+//!    tenant floods at t0). Everything eventually completes, exactly
+//!    matching the static oracle, but the waiting queue and TTFT tail
+//!    grow without bound.
+//! 2. **Governed run** — the same arrival process with the pressure
+//!    cascade, per-tenant quotas, DRR admission and brownout on: the
+//!    queue stays bounded every step, every non-completion is a
+//!    structured rejection/expiry/cancellation, no tenant exceeds its
+//!    KV quota, every well-behaved tenant completes work, and whatever
+//!    was admitted is prefix-identical to the oracle.
+//! 3. **`BENCH_overload.json`** — goodput (completed tokens per
+//!    simulated second) and TTFT p50/p99 for both runs, the structured
+//!    ending census, and the invariant flags.
+//!
+//! Both drives run on the simulated clock (1 ms per step), so every
+//! number here is deterministic for the pinned seed.
+
+use ecf8::bench_support::{banner, write_bench_json, Json, Table};
+use ecf8::codec::Fp8Format;
+use ecf8::coordinator::metrics::SchedulerMetrics;
+use ecf8::scheduler::{
+    overload_requests, run_static, Clock, ContinuousScheduler, FinishReason, GenRequest,
+    KvCacheConfig, KvCacheManager, PrefixCacheConfig, PressureConfig, PressureGovernor,
+    SchedConfig, SharedPrefixWorkload, SimClock, SyntheticIterationEngine,
+};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+const VOCAB: usize = 96;
+const TENANTS: usize = 4;
+const NOISY: usize = 1;
+const SYSTEM_TOKENS: usize = 32;
+const USER_TOKENS: usize = 8;
+const GEN_MIN: usize = 4;
+const GEN_MAX: usize = 16;
+const BLOCK_TOKENS: usize = 8;
+const BYTES_PER_TOKEN: usize = 64;
+const N_REQUESTS: usize = 96;
+const N_BLOCKS: usize = 40;
+const MAX_RUNNING: usize = 8;
+const MAX_BATCH: usize = 8;
+const SEED: u64 = 7;
+/// per-tenant KV quota (blocks): two worst-case sequences
+const QUOTA: usize = 16;
+const MAX_WAITING: usize = 16;
+
+fn workload() -> SharedPrefixWorkload {
+    SharedPrefixWorkload {
+        tenants: TENANTS,
+        system_tokens: SYSTEM_TOKENS,
+        user_tokens: USER_TOKENS,
+        gen_min: GEN_MIN,
+        gen_max: GEN_MAX,
+        vocab: VOCAB as i32 - 1,
+    }
+}
+
+fn kv_cfg(n_blocks: usize, with_prefix: bool) -> KvCacheConfig {
+    KvCacheConfig {
+        block_tokens: BLOCK_TOKENS,
+        bytes_per_token: BYTES_PER_TOKEN,
+        n_blocks,
+        format: Fp8Format::E4M3,
+        prefix: with_prefix.then_some(PrefixCacheConfig::default()),
+    }
+}
+
+struct DriveResult {
+    completed: usize,
+    shed: usize,
+    expired: usize,
+    cancelled: usize,
+    completed_tokens: u64,
+    sim_s: f64,
+    ttft_p50_s: f64,
+    ttft_p99_s: f64,
+    peak_waiting: usize,
+    steps: usize,
+}
+
+impl DriveResult {
+    fn goodput(&self) -> f64 {
+        self.completed_tokens as f64 / self.sim_s.max(1e-9)
+    }
+    fn structured(&self) -> usize {
+        self.shed + self.expired + self.cancelled
+    }
+}
+
+/// Exact quantile over raw samples.
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[idx]
+}
+
+/// One simulated drive of the overload mix: arrivals by sim time, one
+/// millisecond per step. `governed` flips the whole tentpole on; the
+/// ungoverned baseline gets the same prompts and budgets but no
+/// deadlines (the pure no-protection posture).
+fn drive(governed: bool, want: &HashMap<u64, Vec<i32>>) -> DriveResult {
+    let clock = SimClock::new();
+    let t0 = clock.now();
+    let gap = Duration::from_millis(1);
+    let mut reqs = overload_requests(&workload(), N_REQUESTS, SEED, t0, gap, NOISY);
+    if governed {
+        for r in &mut reqs {
+            if r.tenant == NOISY as u32 {
+                r.deadline = Some(t0 + Duration::from_millis(60));
+            }
+        }
+    }
+
+    let mut sched = ContinuousScheduler::new(
+        SchedConfig { max_running: MAX_RUNNING },
+        kv_cfg(N_BLOCKS, governed),
+        Arc::clone(&clock),
+    );
+    if governed {
+        let mut pcfg = PressureConfig::default();
+        pcfg.brownout.min_dwell = Duration::from_millis(10);
+        pcfg.aging_interval = Duration::from_millis(20);
+        pcfg.max_waiting = MAX_WAITING;
+        pcfg.tenant.max_kv_blocks = QUOTA;
+        pcfg.cancel_past_deadline = true;
+        sched = sched.with_governor(PressureGovernor::new(pcfg, t0));
+    }
+
+    let mut order: Vec<usize> = (0..reqs.len()).collect();
+    order.sort_by_key(|&i| (reqs[i].arrived, reqs[i].id));
+    let mut next = 0usize;
+    let mut eng = SyntheticIterationEngine::instant(VOCAB);
+    let mut responses = Vec::new();
+    let mut peak_waiting = 0usize;
+    let mut steps = 0usize;
+    while next < order.len() || sched.has_work() {
+        let now = clock.now();
+        while next < order.len() && reqs[order[next]].arrived <= now {
+            sched.submit(reqs[order[next]].clone());
+            next += 1;
+        }
+        let report = sched.step(&mut eng).expect("step");
+        responses.extend(report.responses);
+        sched.kv().leak_check().expect("books balance every step");
+        peak_waiting = peak_waiting.max(sched.waiting_len());
+        if governed {
+            assert!(
+                sched.waiting_len() <= MAX_WAITING,
+                "governed queue must stay bounded"
+            );
+        }
+        steps += 1;
+        assert!(steps < 100_000, "runaway schedule");
+        clock.advance(Duration::from_millis(1));
+    }
+    let sim_s = clock.now().saturating_duration_since(t0).as_secs_f64();
+
+    assert_eq!(responses.len(), reqs.len(), "every request ends exactly once");
+    let mut r = DriveResult {
+        completed: 0,
+        shed: 0,
+        expired: 0,
+        cancelled: 0,
+        completed_tokens: 0,
+        sim_s,
+        ttft_p50_s: 0.0,
+        ttft_p99_s: 0.0,
+        peak_waiting,
+        steps,
+    };
+    let mut ttfts = Vec::new();
+    for resp in &responses {
+        match resp.finish {
+            FinishReason::Completed => {
+                // admitted work is prefix-identical to the oracle (equal
+                // when ungoverned — nothing clamps budgets there)
+                assert_eq!(
+                    resp.tokens[..],
+                    want[&resp.id][..resp.tokens.len()],
+                    "request {} diverged",
+                    resp.id
+                );
+                if !governed {
+                    assert_eq!(resp.tokens.len(), want[&resp.id].len());
+                }
+                r.completed += 1;
+                r.completed_tokens += resp.tokens.len() as u64;
+                ttfts.push(resp.ttft_s);
+            }
+            FinishReason::Cancelled => {
+                assert!(governed, "only the governor cancels");
+                assert_eq!(resp.tokens[..], want[&resp.id][..resp.tokens.len()]);
+                r.cancelled += 1;
+            }
+            FinishReason::Rejected => {
+                assert!(governed, "only the governor sheds");
+                assert!(resp.tokens.is_empty());
+                r.shed += 1;
+            }
+            FinishReason::Expired => {
+                assert!(resp.tokens.is_empty());
+                r.expired += 1;
+            }
+        }
+    }
+    ttfts.sort_by(f64::total_cmp);
+    r.ttft_p50_s = quantile(&ttfts, 0.50);
+    r.ttft_p99_s = quantile(&ttfts, 0.99);
+
+    if governed {
+        let g = sched.governor().expect("governor attached");
+        for (t, c) in &g.metrics.tenants {
+            assert!(
+                c.peak_reserved_blocks <= QUOTA,
+                "tenant {t} peaked over quota"
+            );
+        }
+        let tenant_of: HashMap<u64, u32> = reqs.iter().map(|q| (q.id, q.tenant)).collect();
+        let mut completed_by: HashMap<u32, usize> = HashMap::new();
+        for resp in &responses {
+            if resp.finish == FinishReason::Completed {
+                *completed_by.entry(tenant_of[&resp.id]).or_default() += 1;
+            }
+        }
+        for t in 0..TENANTS as u32 {
+            if t != NOISY as u32 {
+                assert!(
+                    completed_by.get(&t).copied().unwrap_or(0) >= 1,
+                    "tenant {t} starved under the governor"
+                );
+            }
+        }
+    } else {
+        assert_eq!(r.completed, reqs.len(), "ungoverned: everything completes");
+    }
+    r
+}
+
+fn main() {
+    banner(
+        "bench_overload",
+        "overload governor: pressure cascade, tenant quotas & brownout vs the unprotected baseline (ROADMAP rung)",
+    );
+    println!(
+        "workload: {N_REQUESTS} requests over {TENANTS} tenants (tenant {NOISY} floods at t0), \
+         {SYSTEM_TOKENS}+{USER_TOKENS}-token prompts, gens {GEN_MIN}..={GEN_MAX}, \
+         pool {N_BLOCKS} blocks, quota {QUOTA}, queue bound {MAX_WAITING}, 1 ms steps"
+    );
+
+    // one oracle for both drives: tokens are a pure function of the
+    // prompt, so the same seed's requests decode identically everywhere
+    let clock = SimClock::new();
+    let reqs: Vec<GenRequest> = overload_requests(
+        &workload(),
+        N_REQUESTS,
+        SEED,
+        clock.now(),
+        Duration::from_millis(1),
+        NOISY,
+    );
+    let mut eng_s = SyntheticIterationEngine::instant(VOCAB);
+    let mut kv_s = KvCacheManager::new(kv_cfg(
+        MAX_BATCH * (SYSTEM_TOKENS + USER_TOKENS + GEN_MAX + 1).div_ceil(BLOCK_TOKENS),
+        false,
+    ));
+    let mut ms = SchedulerMetrics::default();
+    let want: HashMap<u64, Vec<i32>> =
+        run_static(&mut eng_s, &mut kv_s, &reqs, MAX_BATCH, clock.as_ref(), &mut ms, false)
+            .expect("static oracle")
+            .into_iter()
+            .map(|r| (r.id, r.tokens))
+            .collect();
+    kv_s.leak_check().expect("oracle: zero leaked blocks");
+
+    let off = drive(false, &want);
+    let on = drive(true, &want);
+
+    let mut t = Table::new([
+        "governor",
+        "goodput tok/s",
+        "completed",
+        "structured",
+        "ttft p50",
+        "ttft p99",
+        "peak queue",
+        "sim time",
+    ]);
+    for (name, r) in [("off", &off), ("on", &on)] {
+        t.row([
+            name.to_string(),
+            format!("{:.0}", r.goodput()),
+            r.completed.to_string(),
+            r.structured().to_string(),
+            format!("{:.1} ms", r.ttft_p50_s * 1e3),
+            format!("{:.1} ms", r.ttft_p99_s * 1e3),
+            r.peak_waiting.to_string(),
+            format!("{:.0} ms", r.sim_s * 1e3),
+        ]);
+    }
+    t.print();
+
+    let goodput_ratio = on.goodput() / off.goodput().max(1e-9);
+    let ttft_ratio = on.ttft_p99_s / off.ttft_p99_s.max(1e-9);
+    println!(
+        "governor on vs off: goodput {:.2}×, completed-TTFT p99 {:.2}×, \
+         queue {} vs {} peak, {} structured endings (shed {} / expired {} / cancelled {})",
+        goodput_ratio,
+        ttft_ratio,
+        on.peak_waiting,
+        off.peak_waiting,
+        on.structured(),
+        on.shed,
+        on.expired,
+        on.cancelled,
+    );
+
+    let mut results = Json::arr();
+    for (mode, r) in [("off", &off), ("on", &on)] {
+        results.push(
+            Json::obj()
+                .field("governor", mode)
+                .field("goodput_tokens_per_s", r.goodput())
+                .field("completed", r.completed as i64)
+                .field("shed", r.shed as i64)
+                .field("expired", r.expired as i64)
+                .field("cancelled", r.cancelled as i64)
+                .field("completed_tokens", r.completed_tokens as i64)
+                .field("ttft_p50_s", r.ttft_p50_s)
+                .field("ttft_p99_s", r.ttft_p99_s)
+                .field("peak_waiting", r.peak_waiting as i64)
+                .field("steps", r.steps as i64)
+                .field("sim_s", r.sim_s),
+        );
+    }
+    let doc = Json::obj()
+        .field("bench", "overload")
+        .field(
+            "workload",
+            format!(
+                "{N_REQUESTS} requests / {TENANTS} tenants (tenant {NOISY} floods at t0, 60ms \
+                 deadline when governed), {SYSTEM_TOKENS}+{USER_TOKENS} prompt tokens, gens \
+                 {GEN_MIN}..{GEN_MAX}; pool {N_BLOCKS} x {BLOCK_TOKENS}-token blocks, quota \
+                 {QUOTA}, queue bound {MAX_WAITING}; simulated 1ms steps, seed {SEED}"
+            ),
+        )
+        .field("goodput_ratio_on_vs_off", goodput_ratio)
+        .field("ttft_p99_ratio_on_vs_off", ttft_ratio)
+        .field("governed_peak_waiting", on.peak_waiting as i64)
+        .field("governed_queue_bound", MAX_WAITING as i64)
+        .field("all_endings_structured", true)
+        .field("identity_on_admitted_subset", true)
+        .field("quota_never_exceeded", true)
+        .field("starvation_free", true)
+        .field("zero_leaked_blocks", true)
+        .field("results", results);
+    write_bench_json("BENCH_overload.json", &doc);
+
+    assert!(on.structured() > 0, "sustained overload must shed something");
+    assert!(
+        on.peak_waiting <= MAX_WAITING,
+        "governed queue bound held at peak"
+    );
+    println!(
+        "\nbench_overload done (goodput ratio {goodput_ratio:.2}, ttft p99 ratio {ttft_ratio:.2})"
+    );
+}

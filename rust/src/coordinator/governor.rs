@@ -1,0 +1,287 @@
+//! The coordinator-side overload governor: admission control at the
+//! server's front door.
+//!
+//! The scheduler-side [`crate::scheduler::pressure::PressureGovernor`]
+//! watches the KV block pool; this one watches the *intake queue* of
+//! the batch-level coordinators ([`super::PipelinedServer`] /
+//! [`super::SupervisedServer`]), where the unit of pressure is queued
+//! requests rather than blocks. Both share the same primitives — the
+//! hysteretic [`ModeMachine`], per-tenant [`TokenBucket`]s,
+//! [`PressureMetrics`] — so `serve --health-log` renders one vocabulary
+//! for both paths.
+//!
+//! Decisions at intake are structured rejections
+//! ([`super::request::ResponseStatus::Rejected`]): a refused request
+//! never enters the queue, so backpressure reaches the client
+//! immediately instead of growing an unbounded batcher. The supervisor
+//! watchdog ticks [`ServerGovernor::observe`] between polls so the mode
+//! decays back to Normal while the server drains — admissions alone
+//! would leave a Shed-mode server stuck (nothing admits, so nothing
+//! would ever observe the recovery).
+
+use super::request::{RejectReason, Request};
+use crate::scheduler::pressure::{
+    BrownoutPolicy, ModeMachine, PressureLevel, PressureMetrics, ServeMode, TenantId, TokenBucket,
+    Watermarks,
+};
+use crate::scheduler::Clock;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// Intake-side governor knobs. Occupancy here is `pending /
+/// intake_cap` — the queue-depth analogue of the scheduler's
+/// block-pool occupancy.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerGovernorConfig {
+    /// bound on queued-but-unexecuted requests; at the bound, submit
+    /// returns a structured `QueueFull` rejection
+    pub intake_cap: usize,
+    pub watermarks: Watermarks,
+    pub brownout: BrownoutPolicy,
+    /// per-tenant token-bucket burst capacity (requests)
+    pub rate_capacity: f64,
+    /// per-tenant sustained admission rate (requests per second)
+    pub rate_per_s: f64,
+    /// Brownout admits only requests at or above this priority
+    pub brownout_min_priority: u8,
+}
+
+impl Default for ServerGovernorConfig {
+    fn default() -> Self {
+        Self {
+            intake_cap: 256,
+            watermarks: Watermarks::default(),
+            brownout: BrownoutPolicy::default(),
+            rate_capacity: 64.0,
+            rate_per_s: 256.0,
+            brownout_min_priority: 1,
+        }
+    }
+}
+
+/// What the governor looked like at one instant — embedded in
+/// [`super::supervisor::HealthReport`].
+#[derive(Debug, Clone)]
+pub struct PressureSnapshot {
+    pub level: PressureLevel,
+    pub mode: ServeMode,
+    pub metrics: PressureMetrics,
+}
+
+impl PressureSnapshot {
+    pub fn render(&self) -> String {
+        self.metrics.render(self.level, self.mode)
+    }
+}
+
+struct Inner {
+    cfg: ServerGovernorConfig,
+    machine: ModeMachine,
+    level: PressureLevel,
+    buckets: BTreeMap<TenantId, TokenBucket>,
+    metrics: PressureMetrics,
+}
+
+/// Thread-safe intake governor, shared between submitters and the
+/// supervisor watchdog.
+pub struct ServerGovernor {
+    clock: Arc<dyn Clock>,
+    inner: Mutex<Inner>,
+}
+
+impl ServerGovernor {
+    pub fn new(cfg: ServerGovernorConfig, clock: Arc<dyn Clock>) -> Arc<Self> {
+        assert!(cfg.intake_cap > 0, "zero intake cap");
+        let now = clock.now();
+        Arc::new(Self {
+            clock,
+            inner: Mutex::new(Inner {
+                machine: ModeMachine::new(cfg.brownout, now),
+                level: PressureLevel::Low,
+                buckets: BTreeMap::new(),
+                metrics: PressureMetrics::default(),
+                cfg,
+            }),
+        })
+    }
+
+    /// Feed one queue-depth observation (ticks the mode machine). The
+    /// watchdog calls this every poll; [`Self::admit`] also calls it on
+    /// every submission so bursts are seen at full resolution.
+    pub fn observe(&self, pending: usize) -> (PressureLevel, ServeMode) {
+        let now = self.clock.now();
+        let mut g = self.inner.lock().unwrap();
+        let cap = g.cfg.intake_cap;
+        let occ = pending.min(cap) as f64 / cap as f64;
+        g.metrics.occupancy = occ;
+        if occ > g.metrics.peak_occupancy {
+            g.metrics.peak_occupancy = occ;
+        }
+        g.level = g.cfg.watermarks.classify(pending.min(cap), cap);
+        let before = g.machine.mode();
+        let mode = g.machine.observe(occ, now);
+        if mode != before {
+            g.metrics.mode_changes += 1;
+        }
+        (g.level, mode)
+    }
+
+    /// Admission decision for one request against the current queue
+    /// depth. `Err` is a structured rejection — the caller must NOT
+    /// enqueue the request. Gate order: queue bound, Shed mode,
+    /// Brownout priority gate, per-tenant rate.
+    pub fn admit(&self, r: &Request, pending: usize) -> Result<(), RejectReason> {
+        let (_, mode) = self.observe(pending);
+        let now = self.clock.now();
+        let mut g = self.inner.lock().unwrap();
+        g.metrics.tenant(r.tenant).submitted += 1;
+        let verdict = if pending >= g.cfg.intake_cap {
+            Err(RejectReason::QueueFull)
+        } else if mode == ServeMode::Shed {
+            Err(RejectReason::Shedding)
+        } else if mode == ServeMode::Brownout && r.priority < g.cfg.brownout_min_priority {
+            g.metrics.brownout_deferred += 1;
+            Err(RejectReason::Shedding)
+        } else {
+            let (capacity, rate) = (g.cfg.rate_capacity, g.cfg.rate_per_s);
+            let bucket = g
+                .buckets
+                .entry(r.tenant)
+                .or_insert_with(|| TokenBucket::new(capacity, rate, now));
+            if bucket.try_take(now) {
+                Ok(())
+            } else {
+                Err(RejectReason::RateLimited)
+            }
+        };
+        match verdict {
+            Ok(()) => {
+                let arrived = r.arrived;
+                let c = g.metrics.tenant(r.tenant);
+                c.admitted += 1;
+                c.wait.record(now.saturating_duration_since(arrived).as_secs_f64());
+            }
+            Err(reason) => {
+                g.metrics.shed_waiting += 1;
+                let c = g.metrics.tenant(r.tenant);
+                c.shed += 1;
+                if reason == RejectReason::RateLimited {
+                    c.rate_deferred += 1;
+                    g.metrics.rate_deferred += 1;
+                }
+            }
+        }
+        verdict
+    }
+
+    pub fn mode(&self) -> ServeMode {
+        self.inner.lock().unwrap().machine.mode()
+    }
+
+    pub fn snapshot(&self) -> PressureSnapshot {
+        let g = self.inner.lock().unwrap();
+        PressureSnapshot {
+            level: g.level,
+            mode: g.machine.mode(),
+            metrics: g.metrics.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::SimClock;
+    use std::time::Duration;
+
+    fn cfg() -> ServerGovernorConfig {
+        ServerGovernorConfig {
+            intake_cap: 10,
+            watermarks: Watermarks { high: 0.5, critical: 0.8 },
+            brownout: BrownoutPolicy {
+                enter_brownout: 0.6,
+                exit_brownout: 0.3,
+                enter_shed: 0.9,
+                exit_shed: 0.5,
+                min_dwell: Duration::from_millis(10),
+            },
+            rate_capacity: 4.0,
+            rate_per_s: 10.0,
+            brownout_min_priority: 5,
+        }
+    }
+
+    fn req(id: u64, tenant: u32, priority: u8, clock: &SimClock) -> Request {
+        Request::at(id, vec![1, 2, 3], clock.now())
+            .with_tenant(tenant)
+            .with_priority(priority)
+    }
+
+    #[test]
+    fn queue_full_rejects_structurally() {
+        let clock = SimClock::new();
+        let g = ServerGovernor::new(cfg(), clock.clone());
+        let r = req(0, 0, 0, &clock);
+        assert_eq!(g.admit(&r, 10), Err(RejectReason::QueueFull));
+        assert_eq!(g.admit(&r, 11), Err(RejectReason::QueueFull));
+        assert_eq!(g.admit(&r, 3), Ok(()));
+        let snap = g.snapshot();
+        assert_eq!(snap.metrics.shed_waiting, 2);
+        assert_eq!(snap.metrics.tenants[&0].shed, 2);
+        assert_eq!(snap.metrics.tenants[&0].admitted, 1);
+    }
+
+    #[test]
+    fn sustained_pressure_ramps_to_shed_and_recovers() {
+        let clock = SimClock::new();
+        let g = ServerGovernor::new(cfg(), clock.clone());
+        // saturated queue: Normal → Brownout → Shed, one rung per
+        // dwell-spaced observation
+        clock.advance(Duration::from_millis(10));
+        assert_eq!(g.observe(10).1, ServeMode::Brownout);
+        clock.advance(Duration::from_millis(10));
+        assert_eq!(g.observe(10).1, ServeMode::Shed);
+        let r = req(0, 0, 9, &clock);
+        assert_eq!(g.admit(&r, 5), Err(RejectReason::Shedding), "shed rejects everyone");
+        // drained queue: Shed → Brownout → Normal
+        clock.advance(Duration::from_millis(10));
+        assert_eq!(g.observe(0).1, ServeMode::Brownout);
+        clock.advance(Duration::from_millis(10));
+        assert_eq!(g.observe(0).1, ServeMode::Normal);
+        assert_eq!(g.admit(&r, 0), Ok(()));
+        assert_eq!(g.snapshot().metrics.mode_changes, 4);
+    }
+
+    #[test]
+    fn brownout_gates_on_priority() {
+        let clock = SimClock::new();
+        let g = ServerGovernor::new(cfg(), clock.clone());
+        clock.advance(Duration::from_millis(10));
+        assert_eq!(g.observe(7).1, ServeMode::Brownout);
+        let low = req(0, 0, 4, &clock);
+        let high = req(1, 0, 5, &clock);
+        // occupancy stays in the hysteresis band so the mode holds
+        assert_eq!(g.admit(&low, 4), Err(RejectReason::Shedding));
+        assert_eq!(g.admit(&high, 4), Ok(()), "at the gate (>=) admits");
+        assert_eq!(g.snapshot().metrics.brownout_deferred, 1);
+    }
+
+    #[test]
+    fn per_tenant_rate_buckets_are_independent_and_refill() {
+        let clock = SimClock::new();
+        let g = ServerGovernor::new(cfg(), clock.clone());
+        // tenant 0 burns its burst of 4; tenant 1 is untouched
+        for i in 0..4 {
+            assert_eq!(g.admit(&req(i, 0, 0, &clock), 0), Ok(()));
+        }
+        assert_eq!(g.admit(&req(4, 0, 0, &clock), 0), Err(RejectReason::RateLimited));
+        assert_eq!(g.admit(&req(5, 1, 0, &clock), 0), Ok(()), "tenant 1 unaffected");
+        // 100ms at 10/s refills exactly one token
+        clock.advance(Duration::from_millis(100));
+        assert_eq!(g.admit(&req(6, 0, 0, &clock), 0), Ok(()));
+        assert_eq!(g.admit(&req(7, 0, 0, &clock), 0), Err(RejectReason::RateLimited));
+        let snap = g.snapshot();
+        assert_eq!(snap.metrics.rate_deferred, 2);
+        assert_eq!(snap.metrics.tenants[&0].rate_deferred, 2);
+    }
+}

@@ -239,6 +239,12 @@ pub struct SchedulerMetrics {
     pub finished: u64,
     /// requests shed while waiting because their deadline passed
     pub expired: u64,
+    /// requests rejected structurally by the overload governor while
+    /// waiting (queue bound or Shed mode)
+    pub rejected: u64,
+    /// running sequences cancelled past their deadline (the governor's
+    /// opt-in `cancel_past_deadline`)
+    pub cancelled: u64,
     /// sequences evicted under block pressure
     pub preemptions: u64,
     /// sequences restored after preemption
@@ -299,7 +305,8 @@ impl SchedulerMetrics {
         };
         format!(
             "iterations {:6}  tokens {:6}  occupancy {:5.1}%  peak width {}\n\
-             admitted {} finished {} preemptions {} resumes {}\n\
+             admitted {} finished {} preemptions {} resumes {} \
+             expired {} rejected {} cancelled {}\n\
              {prefix_line}\
              ttft: p50 {:8.3} ms, p99 {:8.3} ms, max {:8.3} ms ({} samples)\n\
              tpot: p50 {:8.3} ms, p99 {:8.3} ms, max {:8.3} ms ({} samples)\n",
@@ -311,6 +318,9 @@ impl SchedulerMetrics {
             self.finished,
             self.preemptions,
             self.resumes,
+            self.expired,
+            self.rejected,
+            self.cancelled,
             self.ttft.quantile_s(0.50) * 1e3,
             self.ttft.quantile_s(0.99) * 1e3,
             self.ttft.max_s() * 1e3,

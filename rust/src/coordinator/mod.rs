@@ -21,7 +21,11 @@
 //!   work items running `window` stages ahead of execution;
 //! * [`metrics`] — latency/throughput counters plus per-stage latency
 //!   histograms and queue-depth watermarks, and the TTFT/TPOT metrics
-//!   of the iteration-level scheduler.
+//!   of the iteration-level scheduler;
+//! * [`governor`] — intake-side overload control: queue-occupancy
+//!   watermarks drive the same hysteretic Normal → Brownout → Shed
+//!   machine as the scheduler's KV-pressure governor, with per-tenant
+//!   token-bucket rates and structured rejections at submit.
 //!
 //! Both coordinators here are *batch-level* (a formed batch executes to
 //! completion). The iteration-level continuous-batching coordinator —
@@ -32,6 +36,7 @@
 
 pub mod batcher;
 pub mod decode_stage;
+pub mod governor;
 pub mod metrics;
 pub mod pipeline;
 pub mod request;
@@ -44,8 +49,9 @@ pub use metrics::{
     LatencyHistogram, PipelineMetrics, SchedulerMetrics, ScrubMetrics, SharedScrubMetrics,
     SharedStageMetrics, StageMetrics,
 };
+pub use governor::{PressureSnapshot, ServerGovernor, ServerGovernorConfig};
 pub use pipeline::{PipelineConfig, PipelinedServer, SyntheticEngine};
-pub use request::{Request, Response, ResponseStatus};
+pub use request::{RejectReason, Request, Response, ResponseStatus};
 pub use scheduler::{MemoryModel, ServingPlan};
 pub use server::{BatchEngine, ServeConfig, Server};
 pub use supervisor::{

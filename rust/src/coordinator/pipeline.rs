@@ -40,12 +40,12 @@
 
 use super::batcher::DynamicBatcher;
 use super::metrics::{Metrics, PipelineMetrics, SharedStageMetrics};
-use super::request::{Request, Response};
+use super::request::{RejectReason, Request, Response};
 use super::server::{compiled_batch_for, execute_batch_on, BatchEngine, ServeConfig};
 use crate::runtime::executor::SEQ_LEN;
 use crate::util::channel::{self, Sender};
 use anyhow::{anyhow, Result};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -57,6 +57,11 @@ pub struct PipelineConfig {
     /// capacity of the admission → execute batch queue (the backpressure
     /// bound: at most this many formed-but-unexecuted batches)
     pub batch_queue_cap: usize,
+    /// bound on requests waiting in the batcher: a submit against a
+    /// full intake queue returns a structured
+    /// [`super::request::ResponseStatus::Rejected`] response instead of
+    /// growing the queue without limit
+    pub intake_cap: usize,
 }
 
 impl PipelineConfig {
@@ -64,6 +69,7 @@ impl PipelineConfig {
         Self {
             serve,
             batch_queue_cap: 2,
+            intake_cap: 1024,
         }
     }
 }
@@ -114,6 +120,8 @@ pub struct PipelinedServer<E: BatchEngine + 'static> {
     stages: PipelineMetrics,
     exec_batch: usize,
     batch_queue_cap: usize,
+    intake_cap: usize,
+    intake_peak: AtomicUsize,
 }
 
 impl<E: BatchEngine + 'static> PipelinedServer<E> {
@@ -193,6 +201,8 @@ impl<E: BatchEngine + 'static> PipelinedServer<E> {
             stages,
             exec_batch,
             batch_queue_cap: cfg.batch_queue_cap,
+            intake_cap: cfg.intake_cap,
+            intake_peak: AtomicUsize::new(0),
         }
     }
 
@@ -207,15 +217,37 @@ impl<E: BatchEngine + 'static> PipelinedServer<E> {
     }
 
     /// Enqueue a request. Never blocks on execution — admission is
-    /// continuous; only *formed batches* are bounded.
-    pub fn submit(&self, r: Request) {
-        self.shared.batcher.lock().unwrap().push(r);
+    /// continuous; formed batches are bounded by `batch_queue_cap` and
+    /// the intake queue itself by `intake_cap`. A submit against a full
+    /// intake queue does NOT enqueue: it hands back a structured
+    /// `QueueFull` rejection (`Some(response)`); `None` means accepted.
+    pub fn submit(&self, r: Request) -> Option<Response> {
+        let mut b = self.shared.batcher.lock().unwrap();
+        let depth = b.pending();
+        if depth >= self.intake_cap {
+            return Some(Response::rejected(&r, RejectReason::QueueFull));
+        }
+        b.push(r);
+        self.intake_peak.fetch_max(depth + 1, Ordering::Relaxed);
+        drop(b);
         self.shared.wake.notify_one();
+        None
     }
 
     /// Requests waiting in the batcher (formed batches not included).
     pub fn pending(&self) -> usize {
         self.shared.batcher.lock().unwrap().pending()
+    }
+
+    /// High-water mark of the intake queue depth — never exceeds the
+    /// configured `intake_cap` by construction.
+    pub fn intake_peak(&self) -> usize {
+        self.intake_peak.load(Ordering::Relaxed)
+    }
+
+    /// The configured intake bound.
+    pub fn intake_cap(&self) -> usize {
+        self.intake_cap
     }
 
     /// Responses completed so far (non-blocking).
@@ -657,6 +689,72 @@ mod tests {
         assert!(got[0].is_ok() && got[2].is_ok());
         // expired requests never reach the engine or the served count
         assert_eq!(report.metrics.requests_served, 2);
+    }
+
+    #[test]
+    fn full_intake_queue_rejects_structurally() {
+        use crate::coordinator::request::{RejectReason, ResponseStatus};
+        let vocab = 8;
+        let cfg = ServeConfig {
+            max_batch: 8,
+            linger: Duration::from_secs(30),
+        };
+        let mut pipe_cfg = PipelineConfig::new(cfg);
+        pipe_cfg.intake_cap = 4;
+        let server = PipelinedServer::new(SyntheticEngine::instant(vocab), pipe_cfg);
+        // 4 < max_batch and linger is long, so nothing drains: the
+        // intake queue deterministically sits at exactly the cap
+        let reqs = requests(6, vocab, 13);
+        let mut rejected = Vec::new();
+        for r in &reqs {
+            if let Some(resp) = server.submit(r.clone()) {
+                rejected.push(resp);
+            }
+        }
+        assert_eq!(server.pending(), 4, "queue pinned at the cap");
+        assert_eq!(server.intake_peak(), 4, "peak never exceeds the cap");
+        assert_eq!(rejected.len(), 2, "overflow refused, not queued");
+        for (resp, want) in rejected.iter().zip(&reqs[4..]) {
+            assert_eq!(resp.id, want.id);
+            assert_eq!(resp.status, ResponseStatus::Rejected(RejectReason::QueueFull));
+            assert!(resp.logits.is_empty());
+            assert_eq!(resp.batch_size, 0);
+        }
+        // the queued four still execute on the shutdown drain
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.metrics.requests_served, 4);
+        assert!(report.responses.iter().all(|r| r.is_ok()));
+    }
+
+    #[test]
+    fn intake_peak_watermark_stays_bounded_under_flood() {
+        use crate::coordinator::request::{RejectReason, ResponseStatus};
+        let vocab = 8;
+        let cfg = ServeConfig {
+            max_batch: 1,
+            linger: Duration::ZERO,
+        };
+        let mut pipe_cfg = PipelineConfig::new(cfg);
+        pipe_cfg.intake_cap = 4;
+        let server = PipelinedServer::new(
+            SyntheticEngine::with_costs(vocab, Duration::from_millis(1), Duration::from_millis(1)),
+            pipe_cfg,
+        );
+        let mut rejected = 0usize;
+        for r in requests(40, vocab, 21) {
+            match server.submit(r) {
+                Some(resp) => {
+                    assert_eq!(resp.status, ResponseStatus::Rejected(RejectReason::QueueFull));
+                    rejected += 1;
+                }
+                None => {}
+            }
+        }
+        assert!(server.intake_peak() <= 4, "watermark: {}", server.intake_peak());
+        let report = server.shutdown().unwrap();
+        // every request is accounted for exactly once: executed or refused
+        assert_eq!(report.metrics.requests_served as usize + rejected, 40);
+        assert!(report.responses.iter().all(|r| r.is_ok()));
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Request/response types for the serving loop.
 
+use crate::scheduler::pressure::TenantId;
 use std::time::Instant;
 
 /// A scoring/prefill request: a fixed-length token window (DESIGN.md
@@ -9,6 +10,12 @@ use std::time::Instant;
 pub struct Request {
     pub id: u64,
     pub tokens: Vec<i32>,
+    /// who this request bills to under the overload governor
+    /// (0 = the default tenant)
+    pub tenant: TenantId,
+    /// higher survives admission control longer (brownout gate,
+    /// shed order); carried through to the continuous scheduler
+    pub priority: u8,
     pub arrived: Instant,
     /// optional service deadline: a request still *queued* at this
     /// instant is shed with a structured [`ResponseStatus::Expired`]
@@ -29,6 +36,8 @@ impl Request {
         Self {
             id,
             tokens,
+            tenant: 0,
+            priority: 0,
             arrived,
             deadline: None,
         }
@@ -36,6 +45,16 @@ impl Request {
 
     pub fn with_deadline(mut self, deadline: Instant) -> Self {
         self.deadline = Some(deadline);
+        self
+    }
+
+    pub fn with_tenant(mut self, tenant: TenantId) -> Self {
+        self.tenant = tenant;
+        self
+    }
+
+    pub fn with_priority(mut self, priority: u8) -> Self {
+        self.priority = priority;
         self
     }
 
@@ -48,7 +67,35 @@ impl Request {
         let mut g =
             crate::scheduler::GenRequest::at(self.id, self.tokens, max_new_tokens, self.arrived);
         g.deadline = self.deadline;
+        g.tenant = self.tenant;
+        g.priority = self.priority;
         g
+    }
+}
+
+/// Why the governor refused a request at intake — structured, so
+/// clients can distinguish "retry later" (rate, queue) from "shrink
+/// your footprint" (quota) from "the server is shedding load".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// the bounded intake queue is full — backpressure, retry later
+    QueueFull,
+    /// the tenant's token-bucket admission rate is exhausted
+    RateLimited,
+    /// the tenant's KV-block quota cannot cover this request
+    QuotaExceeded,
+    /// the server is in Shed mode: sustained overload, admitting nothing
+    Shedding,
+}
+
+impl RejectReason {
+    pub fn name(self) -> &'static str {
+        match self {
+            RejectReason::QueueFull => "queue-full",
+            RejectReason::RateLimited => "rate-limited",
+            RejectReason::QuotaExceeded => "quota-exceeded",
+            RejectReason::Shedding => "shedding",
+        }
     }
 }
 
@@ -62,6 +109,9 @@ pub enum ResponseStatus {
     Ok,
     /// shed while queued: the deadline passed before execution started
     Expired,
+    /// refused at intake by the overload governor — never queued,
+    /// never executed; the reason says why
+    Rejected(RejectReason),
     /// the execute stage failed or panicked on this request's batch;
     /// the message names the cause
     Failed(String),
@@ -93,6 +143,18 @@ impl Response {
             latency_s: now.saturating_duration_since(r.arrived).as_secs_f64(),
             batch_size: 0,
             status: ResponseStatus::Expired,
+        }
+    }
+
+    /// The structured overload rejection (refused at intake — no
+    /// logits, batch 0, latency 0 since it never queued).
+    pub fn rejected(r: &Request, reason: RejectReason) -> Self {
+        Self {
+            id: r.id,
+            logits: Vec::new(),
+            latency_s: 0.0,
+            batch_size: 0,
+            status: ResponseStatus::Rejected(reason),
         }
     }
 

@@ -26,15 +26,16 @@
 //! counts from `crate::scrub`.
 
 use super::batcher::DynamicBatcher;
+use super::governor::{PressureSnapshot, ServerGovernor};
 use super::metrics::{Metrics, PipelineMetrics, ScrubMetrics, SharedScrubMetrics};
 use super::pipeline::{admission_loop, panic_msg, AdmissionShared, PipelineConfig};
-use super::request::{Request, Response};
+use super::request::{RejectReason, Request, Response};
 use super::server::{compiled_batch_for, execute_batch_on, BatchEngine};
 use crate::runtime::executor::SEQ_LEN;
 use crate::util::channel::{self, Receiver};
 use anyhow::{anyhow, bail, Result};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -120,6 +121,10 @@ pub struct HealthReport {
     pub scrub: Option<ScrubMetrics>,
     /// records currently quarantined on disk (`quarantine.tsv` lines)
     pub quarantined: u64,
+    /// overload-governor state, when one is attached. Brownout/Shed is
+    /// *load*, not ill-health: the server is doing exactly what it
+    /// should under pressure, so `healthy` is unaffected.
+    pub pressure: Option<PressureSnapshot>,
     /// every stage alive and nothing unrecoverable
     pub healthy: bool,
 }
@@ -141,6 +146,9 @@ impl HealthReport {
         if let Some(scrub) = &self.scrub {
             out.push_str(&scrub.render());
             out.push('\n');
+        }
+        if let Some(p) = &self.pressure {
+            out.push_str(&p.render());
         }
         out.push_str(&format!(
             "quarantined {}  healthy {}\n",
@@ -193,6 +201,12 @@ pub struct SupervisedServer<E: BatchEngine + 'static> {
     cfg: SupervisorConfig,
     scrub: Option<SharedScrubMetrics>,
     store_dir: Option<PathBuf>,
+    /// shared with the watchdog, which ticks `observe` every poll so the
+    /// serve mode decays while the queue drains (admissions alone would
+    /// leave a Shed-mode server stuck)
+    governor: Arc<Mutex<Option<Arc<ServerGovernor>>>>,
+    intake_cap: usize,
+    intake_peak: AtomicUsize,
 }
 
 impl<E: BatchEngine + 'static> SupervisedServer<E> {
@@ -236,11 +250,14 @@ impl<E: BatchEngine + 'static> SupervisedServer<E> {
         });
         *exec.worker.lock().unwrap() = Some(spawn_worker(first, 0, Arc::clone(&exec)));
 
+        let governor: Arc<Mutex<Option<Arc<ServerGovernor>>>> = Arc::new(Mutex::new(None));
         let watchdog_stop = Arc::new(AtomicBool::new(false));
         let watchdog = std::thread::spawn({
             let exec = Arc::clone(&exec);
             let stop = Arc::clone(&watchdog_stop);
-            move || watchdog_loop(&exec, sup, &stop)
+            let adm = Arc::clone(&shared);
+            let governor = Arc::clone(&governor);
+            move || watchdog_loop(&exec, &adm, &governor, sup, &stop)
         });
 
         Self {
@@ -254,6 +271,9 @@ impl<E: BatchEngine + 'static> SupervisedServer<E> {
             cfg: sup,
             scrub: None,
             store_dir: None,
+            governor,
+            intake_cap: cfg.intake_cap,
+            intake_peak: AtomicUsize::new(0),
         }
     }
 
@@ -268,14 +288,45 @@ impl<E: BatchEngine + 'static> SupervisedServer<E> {
         self.store_dir = Some(dir);
     }
 
+    /// Put intake under an overload governor: every submit is gated
+    /// through [`ServerGovernor::admit`] (queue bound, serve mode,
+    /// per-tenant rates), the watchdog feeds it queue-depth
+    /// observations every poll, and its snapshot joins
+    /// [`Self::health`]. The governor's own `intake_cap` supersedes the
+    /// pipeline config's bound while attached.
+    pub fn attach_governor(&mut self, g: Arc<ServerGovernor>) {
+        *self.governor.lock().unwrap() = Some(g);
+    }
+
     pub fn exec_batch(&self) -> usize {
         self.exec_batch
     }
 
-    /// Enqueue a request (same contract as `PipelinedServer::submit`).
-    pub fn submit(&self, r: Request) {
-        self.shared.batcher.lock().unwrap().push(r);
+    /// Enqueue a request (same contract as `PipelinedServer::submit`):
+    /// `None` means accepted; `Some(response)` is a structured
+    /// rejection — full intake queue, or the attached governor refusing
+    /// it (shed mode, brownout priority gate, per-tenant rate).
+    pub fn submit(&self, r: Request) -> Option<Response> {
+        let governor = self.governor.lock().unwrap().clone();
+        let mut b = self.shared.batcher.lock().unwrap();
+        let depth = b.pending();
+        if let Some(g) = governor {
+            if let Err(reason) = g.admit(&r, depth) {
+                return Some(Response::rejected(&r, reason));
+            }
+        } else if depth >= self.intake_cap {
+            return Some(Response::rejected(&r, RejectReason::QueueFull));
+        }
+        b.push(r);
+        self.intake_peak.fetch_max(depth + 1, Ordering::Relaxed);
+        drop(b);
         self.shared.wake.notify_one();
+        None
+    }
+
+    /// High-water mark of the intake queue depth.
+    pub fn intake_peak(&self) -> usize {
+        self.intake_peak.load(Ordering::Relaxed)
     }
 
     pub fn pending(&self) -> usize {
@@ -322,6 +373,12 @@ impl<E: BatchEngine + 'static> SupervisedServer<E> {
             .map(|s| s.lines().count() as u64)
             .or(scrub.map(|s| s.records_unrecoverable))
             .unwrap_or(0);
+        let pressure = self
+            .governor
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map(|g| g.snapshot());
         let healthy = admission_alive && exec_alive && quarantined == 0;
         HealthReport {
             stages: vec![
@@ -342,6 +399,7 @@ impl<E: BatchEngine + 'static> SupervisedServer<E> {
             ],
             scrub,
             quarantined,
+            pressure,
             healthy,
         }
     }
@@ -550,11 +608,20 @@ fn execute_worker<E: BatchEngine>(mut engine: E, my_gen: u64, shared: &ExecShare
 /// failures every poll.
 fn watchdog_loop<E: BatchEngine + 'static>(
     shared: &Arc<ExecShared<E>>,
+    adm: &Arc<AdmissionShared>,
+    governor: &Mutex<Option<Arc<ServerGovernor>>>,
     cfg: SupervisorConfig,
     stop: &AtomicBool,
 ) {
     while !stop.load(Ordering::SeqCst) {
         std::thread::sleep(cfg.poll);
+        // tick the governor with the live queue depth even when nothing
+        // is submitting — this is how Shed decays back toward Normal
+        // while the server drains
+        if let Some(g) = governor.lock().unwrap().clone() {
+            let depth = adm.batcher.lock().unwrap().pending();
+            g.observe(depth);
+        }
         if shared.down.load(Ordering::SeqCst) {
             // degraded mode: no engine left, but submitters still get
             // structured answers instead of an unbounded queue
@@ -753,5 +820,53 @@ mod tests {
         assert!(text.contains("scrub: 1 passes"));
         assert!(text.contains("quarantined 1"));
         server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn governed_intake_rejects_structurally_and_surfaces_in_health() {
+        use crate::coordinator::governor::{ServerGovernor, ServerGovernorConfig};
+        use crate::coordinator::request::RejectReason;
+        use crate::scheduler::SystemClock;
+
+        let vocab = 8;
+        let mut server = SupervisedServer::new(
+            vec![SyntheticEngine::instant(vocab)],
+            one_by_one(4),
+            fast_sup(),
+        );
+        // tiny per-tenant burst so the rate gate trips deterministically
+        // without depending on queue depth
+        let gcfg = ServerGovernorConfig {
+            rate_capacity: 3.0,
+            rate_per_s: 0.001,
+            ..Default::default()
+        };
+        server.attach_governor(ServerGovernor::new(gcfg, Arc::new(SystemClock)));
+        let mut rejected = Vec::new();
+        for r in requests(5, vocab, 9) {
+            if let Some(resp) = server.submit(r) {
+                rejected.push(resp);
+            }
+        }
+        assert_eq!(rejected.len(), 2, "burst of 3 admitted, rest rate-limited");
+        for resp in &rejected {
+            assert_eq!(
+                resp.status,
+                ResponseStatus::Rejected(RejectReason::RateLimited)
+            );
+            assert!(resp.logits.is_empty());
+        }
+        let health = server.health();
+        let snap = health.pressure.as_ref().expect("governor attached");
+        assert_eq!(snap.metrics.tenants[&0].admitted, 3);
+        assert_eq!(snap.metrics.tenants[&0].shed, 2);
+        let text = health.render();
+        assert!(text.contains("pressure: occupancy"), "{text}");
+        assert!(text.contains("tenant 0:"), "{text}");
+        // rejected requests never execute; admitted ones all do
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.responses.len(), 3);
+        assert!(report.responses.iter().all(|r| r.is_ok()));
+        assert_eq!(report.metrics.requests_served, 3);
     }
 }

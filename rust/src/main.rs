@@ -733,8 +733,11 @@ fn serve_supervised(
     batch: usize,
     seed: u64,
 ) -> anyhow::Result<()> {
-    use ecf8::coordinator::{PipelineConfig, SupervisedServer, SupervisorConfig};
-    let server = SupervisedServer::new(
+    use ecf8::coordinator::{
+        PipelineConfig, ServerGovernor, ServerGovernorConfig, SupervisedServer, SupervisorConfig,
+    };
+    use ecf8::scheduler::SystemClock;
+    let mut server = SupervisedServer::new(
         vec![ex],
         PipelineConfig::new(ServeConfig {
             max_batch: batch,
@@ -742,6 +745,12 @@ fn serve_supervised(
         }),
         SupervisorConfig::default(),
     );
+    // intake governor: queue-occupancy watermarks + per-tenant rates;
+    // its snapshot joins every health line below
+    server.attach_governor(ServerGovernor::new(
+        ServerGovernorConfig::default(),
+        Arc::new(SystemClock),
+    ));
     println!(
         "serving {n_requests} requests supervised at exec batch {} on PJRT CPU",
         server.exec_batch()
@@ -752,7 +761,9 @@ fn serve_supervised(
         let tokens: Vec<i32> = (0..SEQ_LEN)
             .map(|_| rng.next_below(m.vocab as u64) as i32)
             .collect();
-        server.submit(Request::new(id, tokens));
+        if let Some(rejection) = server.submit(Request::new(id, tokens)) {
+            done.push(rejection);
+        }
         done.extend(server.collect_ready());
         if (id + 1) % (n_requests as u64 / 4).max(1) == 0 {
             print!("{}", server.health().render());
@@ -874,7 +885,14 @@ fn cmd_kv_sim(raw: Vec<String>) -> anyhow::Result<()> {
         "cold-budget",
         "[--prefix] compressed cold-tier byte budget",
         "262144",
-    );
+    )
+    .flag(
+        "overload",
+        "seeded overload gauntlet: sustained load over capacity with one \
+         flooding noisy tenant, the KV pressure governor on (watermark \
+         cascade, per-tenant quotas, DRR fairness, brownout/shed modes)",
+    )
+    .opt_default("noisy", "[--overload] index of the flooding tenant", "1");
     let a = cmd.parse(raw).map_err(|e| handle_help(&cmd, e))?;
     let n: u64 = a.get_parse_or("requests", 24);
     let vocab: usize = a.get_parse_or("vocab", 96);
@@ -891,6 +909,25 @@ fn cmd_kv_sim(raw: Vec<String>) -> anyhow::Result<()> {
     let system_tokens: usize = a.get_parse_or("system-tokens", 24);
     let user_tokens: usize = a.get_parse_or("user-tokens", 8);
     let cold_budget: usize = a.get_parse_or("cold-budget", 256 * 1024);
+
+    if a.flag("overload") {
+        return kv_sim_overload(KvSimOverload {
+            n: n as usize,
+            vocab,
+            gen,
+            block_tokens,
+            bytes_per_token,
+            blocks,
+            max_batch,
+            max_running,
+            seed,
+            tenants,
+            system_tokens,
+            user_tokens,
+            cold_budget,
+            noisy: a.get_parse_or("noisy", 1),
+        });
+    }
 
     let requests: Vec<GenRequest> = if prefix_on {
         let w = SharedPrefixWorkload {
@@ -1041,6 +1078,234 @@ fn cmd_kv_sim(raw: Vec<String>) -> anyhow::Result<()> {
     }
     println!("preemptions: {}", sched.metrics.preemptions);
     println!("restores: {}", sched.metrics.resumes);
+    println!("leaked blocks: 0");
+    Ok(())
+}
+
+/// Everything `kv-sim --overload` needs, bundled.
+struct KvSimOverload {
+    n: usize,
+    vocab: usize,
+    gen: usize,
+    block_tokens: usize,
+    bytes_per_token: usize,
+    blocks: usize,
+    max_batch: usize,
+    max_running: usize,
+    seed: u64,
+    tenants: usize,
+    system_tokens: usize,
+    user_tokens: usize,
+    cold_budget: usize,
+    noisy: usize,
+}
+
+/// The seeded overload gauntlet behind `kv-sim --overload`: one noisy
+/// tenant floods at t0 (max budgets, priority 0, a tight deadline)
+/// while the others trickle in, and the governed continuous scheduler
+/// rides the pressure cascade. Every step re-checks the zero-leak and
+/// bounded-queue invariants; at the end, per-tenant quotas, fairness,
+/// and prefix-identity of the admitted subset against an ungoverned
+/// static oracle (prefix-wise, since brownout clamps budgets and
+/// deadline cancellation cuts sequences mid-flight). Deterministic in
+/// the seed — `.claude/skills/verify/sim_pressure.py` replays it line
+/// for line.
+fn kv_sim_overload(args: KvSimOverload) -> anyhow::Result<()> {
+    use ecf8::coordinator::metrics::SchedulerMetrics;
+    use ecf8::scheduler::{
+        overload_requests, run_static, ContinuousScheduler, FinishReason, GenRequest, GenResponse,
+        KvCacheConfig, KvCacheManager, PrefixCacheConfig, PressureConfig, PressureGovernor,
+        SchedConfig, SharedPrefixWorkload, SimClock, SyntheticIterationEngine,
+    };
+    use std::time::Duration;
+
+    let KvSimOverload {
+        n,
+        vocab,
+        gen,
+        block_tokens,
+        bytes_per_token,
+        blocks,
+        max_batch,
+        max_running,
+        seed,
+        tenants,
+        system_tokens,
+        user_tokens,
+        cold_budget,
+        noisy,
+    } = args;
+    anyhow::ensure!(tenants > 1, "--overload needs at least two tenants");
+    anyhow::ensure!(noisy < tenants, "--noisy out of range");
+
+    let w = SharedPrefixWorkload {
+        tenants,
+        system_tokens,
+        user_tokens,
+        gen_min: (gen / 2).max(1),
+        gen_max: gen,
+        vocab: vocab as i32 - 1,
+    };
+    let clock = SimClock::new();
+    let t0 = clock.now();
+    let gap = Duration::from_millis(2);
+    // the herd gets a tight service deadline: still-queued members
+    // expire, mid-flight members are cancelled by the governor's
+    // opt-in deadline scan — both endings structured
+    let noisy_deadline = t0 + gap * 10;
+    let requests: Vec<GenRequest> = overload_requests(&w, n, seed, t0, gap, noisy)
+        .into_iter()
+        .map(|mut r| {
+            if r.tenant as usize == noisy {
+                r.deadline = Some(noisy_deadline);
+            }
+            r
+        })
+        .collect();
+
+    let kv_cfg = |pool: usize, with_prefix: bool| KvCacheConfig {
+        block_tokens,
+        bytes_per_token,
+        n_blocks: pool,
+        format: Fp8Format::E4M3,
+        prefix: with_prefix.then_some(PrefixCacheConfig {
+            max_compressed_bytes: cold_budget,
+        }),
+    };
+    let per_seq = kv_cfg(1, false).blocks_for_tokens(system_tokens + user_tokens + gen + 1);
+
+    // ungoverned static oracle at t0 with the original budgets and a
+    // conservative pool: the token ground truth for the admitted subset
+    let mut eng_s = SyntheticIterationEngine::instant(vocab);
+    let mut kv_s = KvCacheManager::new(kv_cfg(max_batch * per_seq, false));
+    let mut metrics_s = SchedulerMetrics::default();
+    let oracle = run_static(
+        &mut eng_s,
+        &mut kv_s,
+        &requests,
+        max_batch,
+        clock.as_ref(),
+        &mut metrics_s,
+        false,
+    )?;
+    kv_s.leak_check().map_err(|e| anyhow::anyhow!("oracle leak: {e}"))?;
+    let want: std::collections::HashMap<u64, &[i32]> =
+        oracle.iter().map(|r| (r.id, r.tokens.as_slice())).collect();
+
+    // quota: the flood can reserve at most half the pool (but always
+    // enough for a couple of sequences, so small pools stay live)
+    let quota = (blocks / 2).max(2 * per_seq);
+    let mut pcfg = PressureConfig::default();
+    pcfg.max_waiting = (n / 2).max(8);
+    pcfg.cancel_past_deadline = true;
+    pcfg.tenant.max_kv_blocks = quota;
+    let max_waiting = pcfg.max_waiting;
+    let governor = PressureGovernor::new(pcfg, clock.now());
+    let mut sched = ContinuousScheduler::new(
+        SchedConfig { max_running },
+        kv_cfg(blocks, true),
+        clock.clone(),
+    )
+    .with_governor(governor);
+
+    // arrival-ordered drive: submit what has arrived, step, check
+    // invariants, advance 1ms — exactly what sim_pressure.py replays
+    let mut order: Vec<usize> = (0..requests.len()).collect();
+    order.sort_by_key(|&i| (requests[i].arrived, requests[i].id));
+    let mut eng_c = SyntheticIterationEngine::instant(vocab);
+    let mut responses: Vec<GenResponse> = Vec::new();
+    let mut next = 0usize;
+    let mut steps = 0u64;
+    while next < order.len() || sched.has_work() {
+        let now = clock.now();
+        while next < order.len() && requests[order[next]].arrived <= now {
+            sched.submit(requests[order[next]].clone());
+            next += 1;
+        }
+        let report = sched.step(&mut eng_c)?;
+        responses.extend(report.responses);
+        sched
+            .kv()
+            .leak_check()
+            .map_err(|e| anyhow::anyhow!("step {steps}: leaked KV blocks: {e}"))?;
+        anyhow::ensure!(
+            sched.waiting_len() <= max_waiting,
+            "step {steps}: waiting queue {} over the {max_waiting} bound",
+            sched.waiting_len()
+        );
+        steps += 1;
+        anyhow::ensure!(steps < 200_000, "overload gauntlet failed to converge");
+        clock.advance(Duration::from_millis(1));
+    }
+
+    // every request answered exactly once, every ending structured
+    anyhow::ensure!(responses.len() == n, "answered {} of {n}", responses.len());
+    let mut seen = std::collections::HashSet::new();
+    let (mut completed, mut shed, mut expired, mut cancelled, mut checked) = (0, 0, 0, 0, 0);
+    for r in &responses {
+        anyhow::ensure!(seen.insert(r.id), "request {} answered twice", r.id);
+        match r.finish {
+            FinishReason::Rejected => {
+                anyhow::ensure!(r.tokens.is_empty(), "rejected {} carries tokens", r.id);
+                shed += 1;
+            }
+            FinishReason::Expired => {
+                anyhow::ensure!(r.tokens.is_empty(), "expired {} carries tokens", r.id);
+                expired += 1;
+            }
+            reason => {
+                // Completed, or Cancelled with partial output: either
+                // way the generated prefix must match the oracle
+                let full = want[&r.id];
+                anyhow::ensure!(
+                    r.tokens.len() <= full.len() && r.tokens[..] == full[..r.tokens.len()],
+                    "request {} diverged from the static oracle",
+                    r.id
+                );
+                checked += 1;
+                if reason == FinishReason::Cancelled {
+                    cancelled += 1;
+                } else {
+                    completed += 1;
+                }
+            }
+        }
+    }
+
+    // quotas held at every step (peak reservation is the witness), and
+    // the flood never starved a well-behaved tenant
+    let g = sched.governor().expect("governor attached");
+    for (t, c) in &g.metrics.tenants {
+        anyhow::ensure!(
+            c.peak_reserved_blocks <= quota,
+            "tenant {t} peak reservation {} over quota {quota}",
+            c.peak_reserved_blocks
+        );
+        if *t as usize != noisy {
+            anyhow::ensure!(
+                c.completed >= 1,
+                "tenant {t} starved by the noisy neighbor (0 completions)"
+            );
+        }
+    }
+    anyhow::ensure!(
+        g.metrics.tenants[&(noisy as u32)].admitted >= 1,
+        "noisy tenant fully locked out (quota too tight)"
+    );
+
+    print!("{}", g.metrics.render(g.level(), g.mode()));
+    println!(
+        "gauntlet: {n} requests over {steps} steps — {completed} completed, \
+         {cancelled} cancelled, {expired} expired, {shed} shed (all structured)"
+    );
+    println!(
+        "fairness: every well-behaved tenant completed; noisy tenant {noisy} \
+         contained under quota {quota}"
+    );
+    println!(
+        "identity: admitted subset bit-identical to the static oracle \
+         ({checked} prefixes verified)"
+    );
     println!("leaked blocks: 0");
     Ok(())
 }

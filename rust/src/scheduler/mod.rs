@@ -35,6 +35,13 @@
 //!   threaded [`policy::ContinuousServer`] mirroring
 //!   [`crate::coordinator::PipelinedServer`]'s submit/collect/shutdown
 //!   surface.
+//! * [`pressure`] — the overload governor: low/high/critical
+//!   watermarks over the block pool drive a deterministic degradation
+//!   ladder (compress idle trie blocks → pause admission under the
+//!   reactive preemption path → shed structurally), per-tenant
+//!   token-bucket rates and KV-block quotas, weighted
+//!   deficit-round-robin admission with priority aging, and the
+//!   hysteretic Normal → Brownout → Shed [`pressure::ModeMachine`].
 //! * [`iteration`] — [`iteration::IterationEngine`]: the ragged
 //!   per-iteration execution seam (per-sequence lengths, no padding
 //!   waste), extending [`crate::coordinator::BatchEngine`]. Implemented
@@ -53,6 +60,7 @@ pub mod iteration;
 pub mod kv_cache;
 pub mod policy;
 pub mod prefix;
+pub mod pressure;
 pub mod workload;
 
 pub use iteration::{IterationBatch, IterationEngine, SeqSlot, SyntheticIterationEngine};
@@ -62,7 +70,11 @@ pub use policy::{
     GenResponse, SchedConfig, StepReport,
 };
 pub use prefix::{PrefixCacheConfig, PrefixStats, TierCensus};
-pub use workload::{shared_prefix_requests, SharedPrefixWorkload};
+pub use pressure::{
+    BrownoutPolicy, ModeMachine, PressureConfig, PressureGovernor, PressureLevel, PressureMetrics,
+    ServeMode, TenantCounters, TenantId, TenantPolicy, TokenBucket, Watermarks,
+};
+pub use workload::{overload_requests, shared_prefix_requests, SharedPrefixWorkload};
 
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};

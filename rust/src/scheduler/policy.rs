@@ -35,6 +35,7 @@
 
 use super::iteration::{argmax, IterationBatch, IterationEngine, SeqSlot};
 use super::kv_cache::{KvCacheConfig, KvCacheManager, KvError, KvStats};
+use super::pressure::{PressureGovernor, PressureLevel, PressureMetrics, ServeMode, TenantId};
 use super::Clock;
 use crate::coordinator::metrics::SchedulerMetrics;
 use crate::coordinator::supervisor::{Heartbeat, StageHealth};
@@ -54,12 +55,17 @@ pub struct GenRequest {
     pub max_new_tokens: usize,
     /// higher admits (and survives preemption) first
     pub priority: u8,
+    /// who this request bills to — quota/rate/fairness bucket under the
+    /// overload governor (0 = the default tenant, pre-multi-tenancy)
+    pub tenant: TenantId,
     pub arrived: Instant,
     /// optional service deadline: a request still *waiting* at this
     /// instant is shed with a structured [`FinishReason::Expired`]
     /// response instead of being admitted (`>=` — exactly at the
-    /// deadline counts as expired). A queueing SLO only: sequences
-    /// already running are never killed by it.
+    /// deadline counts as expired). A queueing SLO by default:
+    /// sequences already running are killed by it only under the
+    /// governor's opt-in `cancel_past_deadline`, which cuts them off
+    /// mid-generation with [`FinishReason::Cancelled`].
     pub deadline: Option<Instant>,
 }
 
@@ -78,6 +84,7 @@ impl GenRequest {
             prompt,
             max_new_tokens,
             priority: 0,
+            tenant: 0,
             arrived,
             deadline: None,
         }
@@ -85,6 +92,11 @@ impl GenRequest {
 
     pub fn with_priority(mut self, priority: u8) -> Self {
         self.priority = priority;
+        self
+    }
+
+    pub fn with_tenant(mut self, tenant: TenantId) -> Self {
+        self.tenant = tenant;
         self
     }
 
@@ -104,6 +116,13 @@ pub enum FinishReason {
     Completed,
     /// shed while waiting: the deadline passed before admission
     Expired,
+    /// shed while waiting by the overload governor: the queue bound or
+    /// Shed mode rejected it structurally (never admitted, no KV)
+    Rejected,
+    /// cancelled mid-generation: the deadline passed while running and
+    /// the governor's opt-in `cancel_past_deadline` freed its KV
+    /// through the normal release path (partial tokens returned)
+    Cancelled,
 }
 
 /// A finished generation.
@@ -136,6 +155,19 @@ impl GenResponse {
             latency_s: now.saturating_duration_since(req.arrived).as_secs_f64(),
             preemptions: 0,
             finish: FinishReason::Expired,
+        }
+    }
+
+    /// The structured governor rejection (shed while waiting — never
+    /// admitted, never touched the KV pool).
+    pub fn rejected(req: &GenRequest, now: Instant) -> Self {
+        Self {
+            id: req.id,
+            tokens: Vec::new(),
+            ttft_s: 0.0,
+            latency_s: now.saturating_duration_since(req.arrived).as_secs_f64(),
+            preemptions: 0,
+            finish: FinishReason::Rejected,
         }
     }
 }
@@ -173,6 +205,10 @@ struct ActiveSeq {
     tokens: Vec<i32>,
     /// stable admission tiebreak (newest = largest)
     admit_seq: u64,
+    /// worst-case blocks charged against the tenant quota at admission
+    /// (0 when no governor is attached); held across preemption,
+    /// released with the sequence
+    reserved_blocks: usize,
     /// KV positions whose compute has been charged to the engine:
     /// prefix-matched positions at admission (their prefill was
     /// skipped), then the scored length after every iteration. The
@@ -208,6 +244,9 @@ pub struct ContinuousScheduler {
     pub metrics: SchedulerMetrics,
     submit_counter: u64,
     admit_counter: u64,
+    /// the overload governor — `None` keeps every pre-governor code
+    /// path byte-identical
+    governor: Option<PressureGovernor>,
 }
 
 impl ContinuousScheduler {
@@ -224,6 +263,7 @@ impl ContinuousScheduler {
             metrics: SchedulerMetrics::default(),
             submit_counter: 0,
             admit_counter: 0,
+            governor: None,
         }
     }
 
@@ -233,13 +273,38 @@ impl ContinuousScheduler {
         self
     }
 
+    /// Attach the overload governor: watermark cascade, per-tenant
+    /// quotas, DRR admission, brownout modes. Without it the scheduler
+    /// behaves exactly as before.
+    pub fn with_governor(mut self, governor: PressureGovernor) -> Self {
+        self.governor = Some(governor);
+        self
+    }
+
+    pub fn governor(&self) -> Option<&PressureGovernor> {
+        self.governor.as_ref()
+    }
+
+    pub fn governor_mut(&mut self) -> Option<&mut PressureGovernor> {
+        self.governor.as_mut()
+    }
+
     pub fn submit(&mut self, req: GenRequest) {
+        if let Some(g) = self.governor.as_mut() {
+            g.metrics.tenant(req.tenant).submitted += 1;
+        }
         self.waiting.push((self.submit_counter, req));
         self.submit_counter += 1;
     }
 
     pub fn has_work(&self) -> bool {
         !self.waiting.is_empty() || !self.running.is_empty() || !self.preempted.is_empty()
+    }
+
+    /// Requests queued but not yet admitted — under a governor this is
+    /// bounded by `PressureConfig::max_waiting` after every step.
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
     }
 
     pub fn kv(&self) -> &KvCacheManager {
@@ -285,6 +350,259 @@ impl ContinuousScheduler {
         Ok(())
     }
 
+    /// Structured governor rejection of a queued request (never
+    /// admitted, never touched the KV pool).
+    fn shed_waiter(
+        g: &mut PressureGovernor,
+        metrics: &mut SchedulerMetrics,
+        report: &mut StepReport,
+        req: &GenRequest,
+        now: Instant,
+    ) {
+        g.metrics.shed_waiting += 1;
+        g.metrics.tenant(req.tenant).shed += 1;
+        metrics.rejected += 1;
+        report.responses.push(GenResponse::rejected(req, now));
+    }
+
+    /// Mid-generation cancellation bookkeeping: the sequence's KV was
+    /// already released; hand back its partial tokens structurally.
+    fn finish_cancel(
+        g: &mut PressureGovernor,
+        metrics: &mut SchedulerMetrics,
+        report: &mut StepReport,
+        seq: ActiveSeq,
+        now: Instant,
+    ) {
+        g.release_reservation(seq.req.tenant, seq.reserved_blocks, now);
+        g.metrics.cancelled += 1;
+        g.metrics.tenant(seq.req.tenant).cancelled += 1;
+        metrics.cancelled += 1;
+        report.responses.push(GenResponse {
+            id: seq.req.id,
+            tokens: seq.tokens[seq.req.prompt.len()..].to_vec(),
+            ttft_s: seq
+                .first_token_at
+                .map(|t| t.saturating_duration_since(seq.req.arrived).as_secs_f64())
+                .unwrap_or(0.0),
+            latency_s: now.saturating_duration_since(seq.req.arrived).as_secs_f64(),
+            preemptions: seq.preemptions,
+            finish: FinishReason::Cancelled,
+        });
+    }
+
+    /// Governor pre-pass (phase 0b): observe the pool, run the
+    /// proactive cascade rungs. Order: classify pressure → High-level
+    /// idle reclaim through the codec registry → opt-in past-deadline
+    /// cancellation → structural queue bounding (Shed mode rejects
+    /// everything queued; otherwise the waiting queue is capped at
+    /// `max_waiting`, shedding the lowest-effective-priority tail).
+    fn govern(&mut self, now: Instant, report: &mut StepReport) -> Result<()> {
+        let total = self.kv.config().n_blocks;
+        let used = self.kv.blocks_in_use();
+        let g = self.governor.as_mut().expect("governor attached");
+        let (level, mode) = g.observe(used, total, now);
+
+        // rung 1 — High watermark: compress idle prefix-trie blocks
+        // back to the free list (the same §3.2-probed codec path
+        // `take_free` uses reactively), then re-classify on the freed
+        // pool so admission sees the post-reclaim level
+        if level >= PressureLevel::High {
+            let target = g.reclaim_target(total);
+            let freed = self.kv.reclaim_idle(target);
+            g.note_reclaim(freed);
+            g.reclassify(self.kv.blocks_in_use(), total);
+        }
+
+        // opt-in mid-generation deadline cancellation (`>=`, like every
+        // deadline in this crate). KV is freed through the normal
+        // release path — which handles evicted sequences too, so
+        // preempted runners cancel without being restored first.
+        if g.config().cancel_past_deadline {
+            let mut i = 0;
+            while i < self.running.len() {
+                match self.running[i].req.deadline {
+                    Some(d) if now >= d => {
+                        let seq = self.running.remove(i);
+                        self.kv.release(seq.req.id)?;
+                        Self::finish_cancel(g, &mut self.metrics, report, seq, now);
+                    }
+                    _ => i += 1,
+                }
+            }
+            let mut i = 0;
+            while i < self.preempted.len() {
+                match self.preempted[i].req.deadline {
+                    Some(d) if now >= d => {
+                        let seq = self.preempted.remove(i).expect("index checked");
+                        self.kv.release(seq.req.id)?;
+                        Self::finish_cancel(g, &mut self.metrics, report, seq, now);
+                    }
+                    _ => i += 1,
+                }
+            }
+        }
+
+        // rung 3 — structural shedding keeps the queue bounded
+        if mode == ServeMode::Shed {
+            for (_, req) in std::mem::take(&mut self.waiting) {
+                Self::shed_waiter(g, &mut self.metrics, report, &req, now);
+            }
+        } else {
+            let max_waiting = g.config().max_waiting;
+            while self.waiting.len() > max_waiting {
+                let worst = self
+                    .waiting
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, (sub, r))| {
+                        (
+                            g.effective_priority(r.priority, r.arrived, now),
+                            std::cmp::Reverse(*sub),
+                        )
+                    })
+                    .map(|(i, _)| i)
+                    .expect("nonempty above the bound");
+                let (_, req) = self.waiting.remove(worst);
+                Self::shed_waiter(g, &mut self.metrics, report, &req, now);
+            }
+        }
+        Ok(())
+    }
+
+    /// Governor admission (the phase-2 replacement): weighted deficit
+    /// round-robin across tenants with queued work. Each tenant, in
+    /// ascending id order from a rotating start, is credited
+    /// `weight × quantum` blocks and admits its best requests
+    /// (effective-priority-major, submission-minor) while its credit,
+    /// quota, rate bucket, and the Brownout gate allow. Rate- or
+    /// quota-blocked tenants are *deferred* (their requests stay
+    /// queued), never rejected — structured rejections only come from
+    /// the queue bound and Shed mode in [`Self::govern`].
+    fn govern_admit(&mut self, now: Instant, report: &mut StepReport) -> Result<()> {
+        if !self.preempted.is_empty() {
+            return Ok(()); // resume precedence, exactly as ungoverned
+        }
+        {
+            let g = self.governor.as_mut().expect("governor attached");
+            // rung 2 — Critical pauses admission entirely: reclaim and
+            // the reactive preemption path drain the pool first
+            if g.level() >= PressureLevel::Critical || g.mode() == ServeMode::Shed {
+                return Ok(());
+            }
+        }
+
+        let mut tenants: Vec<TenantId> = self.waiting.iter().map(|(_, r)| r.tenant).collect();
+        tenants.sort_unstable();
+        tenants.dedup();
+        let g = self.governor.as_mut().expect("governor attached");
+        // classic DRR: tenants with nothing queued forfeit their credit
+        for t in g.tenant_ids() {
+            if !tenants.contains(&t) {
+                g.reset_deficit(t);
+            }
+        }
+        if tenants.is_empty() {
+            return Ok(());
+        }
+        let mode = g.mode();
+        let start = g.rr_start(tenants.len());
+        g.advance_rr();
+
+        'round: for k in 0..tenants.len() {
+            let t = tenants[(start + k) % tenants.len()];
+            g.charge_deficit(t, now);
+            loop {
+                if self.running.len() >= self.cfg.max_running {
+                    break 'round;
+                }
+                let Some(i) = self
+                    .waiting
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, (_, r))| r.tenant == t)
+                    .max_by_key(|(_, (sub, r))| {
+                        (
+                            g.effective_priority(r.priority, r.arrived, now),
+                            std::cmp::Reverse(*sub),
+                        )
+                    })
+                    .map(|(i, _)| i)
+                else {
+                    g.reset_deficit(t);
+                    break;
+                };
+                let (_, ref req) = self.waiting[i];
+                let eff = g.effective_priority(req.priority, req.arrived, now);
+                if mode == ServeMode::Brownout && eff < g.config().brownout_min_priority {
+                    // aging raises `eff` while it waits, so patient
+                    // low-priority requests pass this gate eventually
+                    g.metrics.brownout_deferred += 1;
+                    break;
+                }
+                let budget = if mode == ServeMode::Brownout {
+                    req.max_new_tokens.min(g.config().brownout_max_tokens)
+                } else {
+                    req.max_new_tokens
+                };
+                // quota charges the worst case: everything this
+                // sequence could ever hold, reserved up front
+                let need = self.kv.config().blocks_for_tokens(req.prompt.len() + budget + 1);
+                if !g.quota_allows(t, need, now) {
+                    g.metrics.quota_deferred += 1;
+                    g.metrics.tenant(t).quota_deferred += 1;
+                    break;
+                }
+                if !g.rate_peek(t, now) {
+                    g.metrics.rate_deferred += 1;
+                    g.metrics.tenant(t).rate_deferred += 1;
+                    break;
+                }
+                if g.deficit(t) < need {
+                    break; // credit spent — next round tops it up
+                }
+                if !self.kv.admission_plan(&req.prompt).fits() {
+                    break 'round; // the pool is the bottleneck, not fairness
+                }
+
+                // commit — mirrors the ungoverned admission body
+                let (_, mut req) = self.waiting.remove(i);
+                if budget < req.max_new_tokens {
+                    req.max_new_tokens = budget;
+                    g.metrics.clamped_budgets += 1;
+                }
+                let matched = self.kv.register_with_prefix(req.id, &req.prompt)?;
+                self.kv.ensure_capacity(req.id, req.prompt.len() + 1)?;
+                for &tok in &req.prompt[matched..] {
+                    self.kv.write_token(req.id, tok)?;
+                }
+                self.kv.insert_prefix(req.id, &req.prompt)?;
+                if self.kv.prefix_enabled() {
+                    self.metrics.prefix_lookups += 1;
+                    if matched > 0 {
+                        self.metrics.prefix_hits += 1;
+                        self.metrics.saved_prefill_tokens += matched as u64;
+                    }
+                }
+                g.commit_admission(t, need, req.arrived, now);
+                self.running.push(ActiveSeq {
+                    tokens: req.prompt.clone(),
+                    admit_seq: self.admit_counter,
+                    reserved_blocks: need,
+                    scored_upto: matched,
+                    first_token_at: None,
+                    last_token_at: now,
+                    preemptions: 0,
+                    req,
+                });
+                self.admit_counter += 1;
+                self.metrics.admitted += 1;
+                report.admitted += 1;
+            }
+        }
+        Ok(())
+    }
+
     /// One scheduling iteration (see the module docs for the phases).
     pub fn step<E: IterationEngine>(&mut self, engine: &mut E) -> Result<StepReport> {
         let mut report = StepReport::default();
@@ -304,6 +622,13 @@ impl ContinuousScheduler {
                 }
                 _ => w += 1,
             }
+        }
+
+        // 0b. governor pre-pass: observe the pool, run the proactive
+        // cascade rungs (reclaim / cancel / queue bound). `None` keeps
+        // the pre-governor behaviour byte-identical.
+        if self.governor.is_some() {
+            self.govern(now, &mut report)?;
         }
 
         // 1. resume, oldest preemption first (head-of-line). The plan
@@ -331,8 +656,16 @@ impl ContinuousScheduler {
         // prefix index first: a prompt whose prefix is already resident
         // is charged only its private *suffix* blocks, so shared
         // prefixes keep admitting under pressure that would starve the
-        // naive `prompt + 1` sizing.
-        while self.preempted.is_empty() && self.running.len() < self.cfg.max_running {
+        // naive `prompt + 1` sizing. With a governor attached the
+        // priority-major loop below is replaced by weighted deficit
+        // round-robin across tenants (quota / rate / brownout gated).
+        if self.governor.is_some() {
+            self.govern_admit(now, &mut report)?;
+        }
+        while self.governor.is_none()
+            && self.preempted.is_empty()
+            && self.running.len() < self.cfg.max_running
+        {
             let Some(i) = self.pick_waiting() else { break };
             if !self.kv.admission_plan(&self.waiting[i].1.prompt).fits() {
                 break;
@@ -355,6 +688,7 @@ impl ContinuousScheduler {
             self.running.push(ActiveSeq {
                 tokens: req.prompt.clone(),
                 admit_seq: self.admit_counter,
+                reserved_blocks: 0,
                 scored_upto: matched,
                 first_token_at: None,
                 last_token_at: now,
@@ -459,6 +793,10 @@ impl ContinuousScheduler {
                 let seq = self.running.remove(idx);
                 self.kv.release(seq.req.id)?;
                 self.metrics.finished += 1;
+                if let Some(g) = self.governor.as_mut() {
+                    g.release_reservation(seq.req.tenant, seq.reserved_blocks, now);
+                    g.metrics.tenant(seq.req.tenant).completed += 1;
+                }
                 report.responses.push(GenResponse {
                     id: seq.req.id,
                     tokens: seq.tokens[seq.req.prompt.len()..].to_vec(),
@@ -629,6 +967,8 @@ pub struct ContinuousReport<E> {
     pub responses: Vec<GenResponse>,
     pub metrics: SchedulerMetrics,
     pub kv_stats: KvStats,
+    /// overload-governor observability, when one was attached
+    pub pressure: Option<PressureMetrics>,
     /// the zero-leak invariant at shutdown (`Err` describes the leak)
     pub leak_check: Result<(), String>,
 }
@@ -637,6 +977,7 @@ type SchedulerOutcome<E> = (
     E,
     SchedulerMetrics,
     KvStats,
+    Option<PressureMetrics>,
     Result<(), String>,
     Option<anyhow::Error>,
 );
@@ -708,7 +1049,8 @@ impl<E: IterationEngine + 'static> ContinuousServer<E> {
                 }
             }
             let leak = sched.kv.leak_check();
-            (engine, sched.metrics.clone(), sched.kv.stats().clone(), leak, first_err)
+            let pressure = sched.governor.as_ref().map(|g| g.metrics.clone());
+            (engine, sched.metrics.clone(), sched.kv.stats().clone(), pressure, leak, first_err)
         }});
         Self {
             req_tx: Some(req_tx),
@@ -753,7 +1095,7 @@ impl<E: IterationEngine + 'static> ContinuousServer<E> {
     /// scheduler thread. Fails with the scheduler's first error.
     pub fn shutdown(mut self) -> Result<ContinuousReport<E>> {
         drop(self.req_tx.take());
-        let (engine, metrics, kv_stats, leak_check, first_err) = self
+        let (engine, metrics, kv_stats, pressure, leak_check, first_err) = self
             .handle
             .take()
             .expect("shutdown joins once")
@@ -771,6 +1113,7 @@ impl<E: IterationEngine + 'static> ContinuousServer<E> {
             responses,
             metrics,
             kv_stats,
+            pressure,
             leak_check,
         })
     }

@@ -1,0 +1,883 @@
+//! Overload governor: watermark-driven KV pressure cascade, per-tenant
+//! quotas with token-bucket rate limiting, weighted deficit-round-robin
+//! admission with priority aging, and the hysteretic Normal → Brownout
+//! → Shed serving-mode machine.
+//!
+//! ## Why this exists
+//!
+//! Without a governor, "out of KV blocks" is an *emergent* failure: the
+//! scheduler preempts whoever is cheapest, queues grow without bound,
+//! and one noisy tenant can starve everyone else. This module turns
+//! overload into a deterministic, observable degradation ladder:
+//!
+//! 1. **High watermark** — proactively compress idle prefix-trie
+//!    blocks through the codec registry
+//!    ([`super::kv_cache::KvCacheManager::reclaim_idle`], the same path
+//!    `take_free` uses reactively). Cheap because K/V caches
+//!    concentrate exponents exactly like weights (Heilper & Singer
+//!    2025), so the compressed tier is the paper's §3.2 probe applied
+//!    as a pressure-release valve.
+//! 2. **Critical watermark** — pause new admissions; preemption (the
+//!    reactive `OutOfBlocks` path) drains the pool while the bounded
+//!    waiting queue sheds its lowest-effective-priority tail with
+//!    structured [`super::policy::FinishReason::Rejected`] responses.
+//! 3. **Shed mode** — the hysteretic [`ModeMachine`] has decided the
+//!    overload is sustained: every queued request is rejected
+//!    structurally until occupancy falls back through the exit
+//!    threshold.
+//!
+//! Degradation stays *structurally lossless* in the DFloat11 sense: a
+//! request is served bit-identically or rejected with a typed reason —
+//! never truncated silently, never corrupted.
+//!
+//! Every decision here is a pure function of pool statistics plus
+//! instants handed in by the caller (who reads them from the injected
+//! [`super::Clock`]), so [`super::SimClock`] replays — and the
+//! `sim_pressure.py` verify port — are exact.
+
+use crate::coordinator::metrics::LatencyHistogram;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Tenant identity carried by requests. Tenant 0 is the default for
+/// callers that predate multi-tenancy.
+pub type TenantId = u32;
+
+/// Instantaneous pool pressure, classified by [`Watermarks`]. Ordered:
+/// `Low < High < Critical`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum PressureLevel {
+    /// below the high watermark — no governor action
+    Low,
+    /// at or above the high watermark — proactive idle-block reclaim
+    High,
+    /// at or above the critical watermark — admissions paused
+    Critical,
+}
+
+impl PressureLevel {
+    pub fn name(self) -> &'static str {
+        match self {
+            PressureLevel::Low => "low",
+            PressureLevel::High => "high",
+            PressureLevel::Critical => "critical",
+        }
+    }
+}
+
+/// Occupancy thresholds (fractions of the block pool) classifying
+/// [`PressureLevel`]. `>=` at each boundary, mirroring the scheduler's
+/// deadline semantics.
+#[derive(Debug, Clone, Copy)]
+pub struct Watermarks {
+    pub high: f64,
+    pub critical: f64,
+}
+
+impl Default for Watermarks {
+    fn default() -> Self {
+        Self { high: 0.70, critical: 0.90 }
+    }
+}
+
+impl Watermarks {
+    /// Classify `used / total` occupancy. `total == 0` is Low (an
+    /// empty pool cannot be pressured).
+    pub fn classify(&self, used: usize, total: usize) -> PressureLevel {
+        let occ = occupancy(used, total);
+        if occ >= self.critical {
+            PressureLevel::Critical
+        } else if occ >= self.high {
+            PressureLevel::High
+        } else {
+            PressureLevel::Low
+        }
+    }
+}
+
+/// Pool occupancy as a fraction in `[0, 1]`.
+pub fn occupancy(used: usize, total: usize) -> f64 {
+    if total == 0 {
+        0.0
+    } else {
+        used as f64 / total as f64
+    }
+}
+
+/// A deterministic token bucket: `refill_per_s` tokens per second up to
+/// `capacity`, driven entirely by caller-supplied instants (no hidden
+/// clock reads — `SimClock` replays are exact).
+#[derive(Debug, Clone)]
+pub struct TokenBucket {
+    capacity: f64,
+    refill_per_s: f64,
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    /// A full bucket, stamped at `now`.
+    pub fn new(capacity: f64, refill_per_s: f64, now: Instant) -> Self {
+        assert!(capacity > 0.0, "zero-capacity bucket");
+        assert!(refill_per_s >= 0.0, "negative refill");
+        Self { capacity, refill_per_s, tokens: capacity, last: now }
+    }
+
+    fn refill(&mut self, now: Instant) {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.tokens = (self.tokens + dt * self.refill_per_s).min(self.capacity);
+        self.last = now;
+    }
+
+    /// Whether one token is available at `now` (refills, consumes
+    /// nothing).
+    pub fn peek(&mut self, now: Instant) -> bool {
+        self.refill(now);
+        self.tokens >= 1.0
+    }
+
+    /// Consume one token if available at `now`.
+    pub fn try_take(&mut self, now: Instant) -> bool {
+        self.refill(now);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn available(&self) -> f64 {
+        self.tokens
+    }
+}
+
+/// The server's degradation mode — what the hysteretic [`ModeMachine`]
+/// decided, as opposed to the instantaneous [`PressureLevel`]. Ordered:
+/// `Normal < Brownout < Shed`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ServeMode {
+    /// full service
+    Normal,
+    /// admit only requests whose *effective* priority clears
+    /// [`PressureConfig::brownout_min_priority`]; clamp generation
+    /// budgets to [`PressureConfig::brownout_max_tokens`]
+    Brownout,
+    /// reject every queued request structurally until pressure falls
+    Shed,
+}
+
+impl ServeMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            ServeMode::Normal => "normal",
+            ServeMode::Brownout => "brownout",
+            ServeMode::Shed => "shed",
+        }
+    }
+
+    fn rung(self) -> u8 {
+        match self {
+            ServeMode::Normal => 0,
+            ServeMode::Brownout => 1,
+            ServeMode::Shed => 2,
+        }
+    }
+
+    fn from_rung(r: u8) -> Self {
+        match r {
+            0 => ServeMode::Normal,
+            1 => ServeMode::Brownout,
+            _ => ServeMode::Shed,
+        }
+    }
+}
+
+/// Hysteresis thresholds for the mode machine. Enter thresholds must
+/// sit strictly above their exits — the gap is what prevents flapping —
+/// and a transition additionally waits out `min_dwell` in the current
+/// mode.
+#[derive(Debug, Clone, Copy)]
+pub struct BrownoutPolicy {
+    pub enter_brownout: f64,
+    pub exit_brownout: f64,
+    pub enter_shed: f64,
+    pub exit_shed: f64,
+    pub min_dwell: Duration,
+}
+
+impl Default for BrownoutPolicy {
+    fn default() -> Self {
+        Self {
+            enter_brownout: 0.80,
+            exit_brownout: 0.60,
+            enter_shed: 0.95,
+            exit_shed: 0.75,
+            min_dwell: Duration::from_millis(100),
+        }
+    }
+}
+
+impl BrownoutPolicy {
+    fn validate(&self) {
+        assert!(self.exit_brownout < self.enter_brownout, "brownout hysteresis inverted");
+        assert!(self.exit_shed < self.enter_shed, "shed hysteresis inverted");
+        assert!(self.enter_brownout <= self.enter_shed, "shed must enter above brownout");
+    }
+}
+
+/// The hysteretic Normal → Brownout → Shed state machine. Moves at
+/// most **one rung per observation**, and only after `min_dwell` in the
+/// current mode — so a pressure spike ramps the ladder deterministically
+/// and oscillation around a single threshold cannot flap the mode.
+#[derive(Debug)]
+pub struct ModeMachine {
+    policy: BrownoutPolicy,
+    mode: ServeMode,
+    since: Instant,
+}
+
+impl ModeMachine {
+    pub fn new(policy: BrownoutPolicy, now: Instant) -> Self {
+        policy.validate();
+        Self { policy, mode: ServeMode::Normal, since: now }
+    }
+
+    pub fn mode(&self) -> ServeMode {
+        self.mode
+    }
+
+    /// How long the machine has sat in its current mode as of `now`.
+    pub fn dwell(&self, now: Instant) -> Duration {
+        now.saturating_duration_since(self.since)
+    }
+
+    /// Feed one occupancy observation; returns the (possibly updated)
+    /// mode. Pure in `(self, occ, now)`.
+    pub fn observe(&mut self, occ: f64, now: Instant) -> ServeMode {
+        let p = &self.policy;
+        let desired = match self.mode {
+            ServeMode::Normal => {
+                if occ >= p.enter_shed {
+                    ServeMode::Shed
+                } else if occ >= p.enter_brownout {
+                    ServeMode::Brownout
+                } else {
+                    ServeMode::Normal
+                }
+            }
+            ServeMode::Brownout => {
+                if occ >= p.enter_shed {
+                    ServeMode::Shed
+                } else if occ < p.exit_brownout {
+                    ServeMode::Normal
+                } else {
+                    ServeMode::Brownout
+                }
+            }
+            // recovery is one rung at a time: Shed can only step down
+            // to Brownout, never jump to Normal
+            ServeMode::Shed => {
+                if occ < p.exit_shed {
+                    ServeMode::Brownout
+                } else {
+                    ServeMode::Shed
+                }
+            }
+        };
+        if desired != self.mode && self.dwell(now) >= p.min_dwell {
+            let cur = self.mode.rung();
+            let next = if desired.rung() > cur { cur + 1 } else { cur - 1 };
+            self.mode = ServeMode::from_rung(next);
+            self.since = now;
+        }
+        self.mode
+    }
+}
+
+/// Per-tenant admission policy: token-bucket rate plus a hard KV-block
+/// quota and a DRR weight.
+#[derive(Debug, Clone, Copy)]
+pub struct TenantPolicy {
+    /// token-bucket burst capacity (requests)
+    pub rate_capacity: f64,
+    /// sustained admission rate (requests per second)
+    pub rate_per_s: f64,
+    /// hard cap on this tenant's *reserved* KV blocks (worst-case
+    /// reservations of its live sequences)
+    pub max_kv_blocks: usize,
+    /// deficit-round-robin weight (relative share of admission
+    /// bandwidth)
+    pub weight: u32,
+}
+
+impl Default for TenantPolicy {
+    fn default() -> Self {
+        Self {
+            rate_capacity: 16.0,
+            rate_per_s: 64.0,
+            max_kv_blocks: usize::MAX,
+            weight: 1,
+        }
+    }
+}
+
+/// Everything the governor needs to run. `Default` is a sane serving
+/// posture; the sim tests pin every field explicitly.
+#[derive(Debug, Clone)]
+pub struct PressureConfig {
+    pub watermarks: Watermarks,
+    pub brownout: BrownoutPolicy,
+    /// policy applied to tenants without an explicit override
+    pub tenant: TenantPolicy,
+    /// DRR quantum in KV blocks credited per tenant per admission round
+    pub quantum: usize,
+    /// queueing time that raises effective priority by one
+    pub aging_interval: Duration,
+    /// cap on the aging bonus (levels)
+    pub aging_cap: u32,
+    /// bound on the waiting queue — the lowest-effective-priority tail
+    /// beyond it is shed with structured rejections
+    pub max_waiting: usize,
+    /// Brownout admission gate on *effective* priority (aging lets
+    /// patient low-priority requests through eventually)
+    pub brownout_min_priority: u32,
+    /// Brownout clamp on `max_new_tokens` at admission
+    pub brownout_max_tokens: usize,
+    /// opt-in: cancel *running* sequences whose deadline passed
+    /// (`FinishReason::Cancelled`, KV freed through the normal release
+    /// path). Default off — PR 6's "never kill running" stands.
+    pub cancel_past_deadline: bool,
+}
+
+impl Default for PressureConfig {
+    fn default() -> Self {
+        Self {
+            watermarks: Watermarks::default(),
+            brownout: BrownoutPolicy::default(),
+            tenant: TenantPolicy::default(),
+            quantum: 4,
+            aging_interval: Duration::from_millis(50),
+            aging_cap: 8,
+            max_waiting: 64,
+            brownout_min_priority: 1,
+            brownout_max_tokens: 16,
+            cancel_past_deadline: false,
+        }
+    }
+}
+
+/// Live per-tenant accounting: rate bucket, reserved blocks, DRR
+/// deficit.
+#[derive(Debug)]
+pub struct TenantState {
+    pub policy: TenantPolicy,
+    pub bucket: TokenBucket,
+    /// worst-case blocks reserved by this tenant's live sequences
+    pub reserved_blocks: usize,
+    /// DRR credit (blocks) — charged per round, spent per admission
+    pub deficit: usize,
+}
+
+/// Per-tenant observability counters.
+#[derive(Debug, Clone, Default)]
+pub struct TenantCounters {
+    pub submitted: u64,
+    pub admitted: u64,
+    /// structured rejections while waiting (queue bound or Shed mode)
+    pub shed: u64,
+    pub completed: u64,
+    pub cancelled: u64,
+    /// admission turns skipped because the rate bucket was dry
+    pub rate_deferred: u64,
+    /// admission turns skipped because the KV quota was full
+    pub quota_deferred: u64,
+    pub peak_reserved_blocks: usize,
+    /// arrival → admission queueing delay
+    pub wait: LatencyHistogram,
+}
+
+/// The governor's observable state: occupancy, cascade counters,
+/// mode dwell times, per-tenant histograms. Cloned into
+/// [`crate::coordinator::supervisor::HealthReport`] and rendered by
+/// `serve --health-log` / `kv-sim --overload`.
+#[derive(Debug, Clone, Default)]
+pub struct PressureMetrics {
+    pub occupancy: f64,
+    pub peak_occupancy: f64,
+    /// proactive reclaim sweeps at the High watermark
+    pub reclaim_calls: u64,
+    /// blocks freed by those sweeps (idle trie blocks compressed)
+    pub reclaimed_blocks: u64,
+    /// waiting requests rejected structurally (queue bound + Shed)
+    pub shed_waiting: u64,
+    /// running sequences cancelled past their deadline (opt-in)
+    pub cancelled: u64,
+    pub rate_deferred: u64,
+    pub quota_deferred: u64,
+    /// admission turns blocked by the Brownout priority gate
+    pub brownout_deferred: u64,
+    /// generation budgets clamped at admission in Brownout
+    pub clamped_budgets: u64,
+    pub mode_changes: u64,
+    /// cumulative dwell per mode, indexed by `ServeMode::rung`
+    pub time_in_mode: [Duration; 3],
+    pub tenants: BTreeMap<TenantId, TenantCounters>,
+}
+
+impl PressureMetrics {
+    pub fn tenant(&mut self, t: TenantId) -> &mut TenantCounters {
+        self.tenants.entry(t).or_default()
+    }
+
+    /// One line per concern — the health-log / kv-sim rendering.
+    pub fn render(&self, level: PressureLevel, mode: ServeMode) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "pressure: occupancy {:.3} (peak {:.3}) level {} mode {}\n",
+            self.occupancy,
+            self.peak_occupancy,
+            level.name(),
+            mode.name()
+        ));
+        out.push_str(&format!(
+            "cascade: reclaimed {} blocks in {} sweeps, shed {} waiting, cancelled {}, \
+             deferred rate/quota/brownout {}/{}/{}, clamped {}\n",
+            self.reclaimed_blocks,
+            self.reclaim_calls,
+            self.shed_waiting,
+            self.cancelled,
+            self.rate_deferred,
+            self.quota_deferred,
+            self.brownout_deferred,
+            self.clamped_budgets,
+        ));
+        out.push_str(&format!(
+            "modes: {} changes; dwell normal {:.3}s brownout {:.3}s shed {:.3}s\n",
+            self.mode_changes,
+            self.time_in_mode[0].as_secs_f64(),
+            self.time_in_mode[1].as_secs_f64(),
+            self.time_in_mode[2].as_secs_f64(),
+        ));
+        for (t, c) in &self.tenants {
+            out.push_str(&format!(
+                "tenant {t}: submitted {} admitted {} shed {} completed {} cancelled {} \
+                 wait-mean {:.4}s peak-reserved {}\n",
+                c.submitted,
+                c.admitted,
+                c.shed,
+                c.completed,
+                c.cancelled,
+                c.wait.mean_s(),
+                c.peak_reserved_blocks,
+            ));
+        }
+        out
+    }
+}
+
+/// The scheduler-side overload governor. Owns the mode machine, the
+/// per-tenant buckets/quotas/deficits, and the pressure metrics; the
+/// [`super::policy::ContinuousScheduler`] drives it once per step.
+/// Every method is pure in its arguments — no internal clock reads.
+pub struct PressureGovernor {
+    cfg: PressureConfig,
+    machine: ModeMachine,
+    level: PressureLevel,
+    tenants: BTreeMap<TenantId, TenantState>,
+    /// starting offset into the sorted per-round tenant list; advanced
+    /// once per admission round so no tenant permanently goes first
+    rr_cursor: u64,
+    last_observe: Instant,
+    pub metrics: PressureMetrics,
+}
+
+impl PressureGovernor {
+    pub fn new(cfg: PressureConfig, now: Instant) -> Self {
+        cfg.brownout.validate();
+        assert!(cfg.watermarks.high <= cfg.watermarks.critical, "watermarks inverted");
+        assert!(cfg.quantum > 0, "zero DRR quantum");
+        assert!(cfg.aging_interval > Duration::ZERO, "zero aging interval");
+        Self {
+            machine: ModeMachine::new(cfg.brownout, now),
+            cfg,
+            level: PressureLevel::Low,
+            tenants: BTreeMap::new(),
+            rr_cursor: 0,
+            last_observe: now,
+            metrics: PressureMetrics::default(),
+        }
+    }
+
+    pub fn config(&self) -> &PressureConfig {
+        &self.cfg
+    }
+
+    pub fn level(&self) -> PressureLevel {
+        self.level
+    }
+
+    pub fn mode(&self) -> ServeMode {
+        self.machine.mode()
+    }
+
+    /// Override the policy for one tenant (noisy-neighbor containment).
+    pub fn set_tenant_policy(&mut self, t: TenantId, policy: TenantPolicy, now: Instant) {
+        let st = self.tenant_entry(t, now);
+        st.policy = policy;
+        st.bucket = TokenBucket::new(policy.rate_capacity, policy.rate_per_s, now);
+    }
+
+    fn tenant_entry(&mut self, t: TenantId, now: Instant) -> &mut TenantState {
+        let default = self.cfg.tenant;
+        self.tenants.entry(t).or_insert_with(|| TenantState {
+            policy: default,
+            bucket: TokenBucket::new(default.rate_capacity, default.rate_per_s, now),
+            reserved_blocks: 0,
+            deficit: 0,
+        })
+    }
+
+    /// Feed one pool observation: classifies the pressure level, ticks
+    /// the mode machine, accumulates time-in-mode. Call exactly once
+    /// per scheduler step, before any cascade action.
+    pub fn observe(&mut self, used: usize, total: usize, now: Instant) -> (PressureLevel, ServeMode) {
+        let dt = now.saturating_duration_since(self.last_observe);
+        self.metrics.time_in_mode[self.machine.mode().rung() as usize] += dt;
+        self.last_observe = now;
+
+        let occ = occupancy(used, total);
+        self.metrics.occupancy = occ;
+        if occ > self.metrics.peak_occupancy {
+            self.metrics.peak_occupancy = occ;
+        }
+        self.level = self.cfg.watermarks.classify(used, total);
+        let before = self.machine.mode();
+        let mode = self.machine.observe(occ, now);
+        if mode != before {
+            self.metrics.mode_changes += 1;
+        }
+        (self.level, mode)
+    }
+
+    /// Re-classify the level after a cascade action changed the pool
+    /// (reclaim frees blocks) without ticking the mode machine.
+    pub fn reclassify(&mut self, used: usize, total: usize) -> PressureLevel {
+        self.level = self.cfg.watermarks.classify(used, total);
+        self.metrics.occupancy = occupancy(used, total);
+        self.level
+    }
+
+    /// Free-block target that returns occupancy to the high watermark:
+    /// the governor reclaims until `free >= total - floor(high*total)`.
+    pub fn reclaim_target(&self, total: usize) -> usize {
+        total - (self.cfg.watermarks.high * total as f64).floor() as usize
+    }
+
+    pub fn note_reclaim(&mut self, freed: usize) {
+        self.metrics.reclaim_calls += 1;
+        self.metrics.reclaimed_blocks += freed as u64;
+    }
+
+    /// Effective priority = static priority + one level per
+    /// `aging_interval` queued, capped — the starvation-freedom lever.
+    /// Integer nanosecond arithmetic, so `SimClock` replays (and the
+    /// Python port) agree bit-for-bit.
+    pub fn effective_priority(&self, priority: u8, arrived: Instant, now: Instant) -> u32 {
+        let waited = now.saturating_duration_since(arrived).as_nanos();
+        let bonus = (waited / self.cfg.aging_interval.as_nanos()).min(self.cfg.aging_cap as u128);
+        priority as u32 + bonus as u32
+    }
+
+    /// Whether `need` more reserved blocks fit tenant `t`'s quota.
+    pub fn quota_allows(&mut self, t: TenantId, need: usize, now: Instant) -> bool {
+        let st = self.tenant_entry(t, now);
+        st.reserved_blocks.saturating_add(need) <= st.policy.max_kv_blocks
+    }
+
+    /// One token available in tenant `t`'s rate bucket at `now`?
+    pub fn rate_peek(&mut self, t: TenantId, now: Instant) -> bool {
+        self.tenant_entry(t, now).bucket.peek(now)
+    }
+
+    /// Commit an admission: consume a rate token, reserve `blocks`,
+    /// spend DRR deficit, record the queueing delay.
+    pub fn commit_admission(
+        &mut self,
+        t: TenantId,
+        blocks: usize,
+        arrived: Instant,
+        now: Instant,
+    ) {
+        let st = self.tenant_entry(t, now);
+        let took = st.bucket.try_take(now);
+        debug_assert!(took, "commit after rate_peek");
+        st.reserved_blocks += blocks;
+        st.deficit = st.deficit.saturating_sub(blocks);
+        let peak = st.reserved_blocks;
+        let c = self.metrics.tenant(t);
+        c.admitted += 1;
+        c.peak_reserved_blocks = c.peak_reserved_blocks.max(peak);
+        c.wait.record(now.saturating_duration_since(arrived).as_secs_f64());
+    }
+
+    /// Release a finished/cancelled sequence's reservation.
+    pub fn release_reservation(&mut self, t: TenantId, blocks: usize, now: Instant) {
+        let st = self.tenant_entry(t, now);
+        st.reserved_blocks = st.reserved_blocks.saturating_sub(blocks);
+    }
+
+    pub fn reserved_blocks(&self, t: TenantId) -> usize {
+        self.tenants.get(&t).map(|s| s.reserved_blocks).unwrap_or(0)
+    }
+
+    /// Charge one round's DRR credit (`weight × quantum` blocks).
+    pub fn charge_deficit(&mut self, t: TenantId, now: Instant) {
+        let quantum = self.cfg.quantum;
+        let st = self.tenant_entry(t, now);
+        st.deficit = st.deficit.saturating_add(st.policy.weight as usize * quantum);
+    }
+
+    /// Classic DRR: a tenant with nothing queued forfeits its credit.
+    pub fn reset_deficit(&mut self, t: TenantId) {
+        if let Some(st) = self.tenants.get_mut(&t) {
+            st.deficit = 0;
+        }
+    }
+
+    pub fn deficit(&self, t: TenantId) -> usize {
+        self.tenants.get(&t).map(|s| s.deficit).unwrap_or(0)
+    }
+
+    /// Tenants with live state, ascending id order.
+    pub fn tenant_ids(&self) -> Vec<TenantId> {
+        self.tenants.keys().copied().collect()
+    }
+
+    /// Where this round's tenant iteration starts (rotates per round).
+    pub fn rr_start(&self, n_tenants: usize) -> usize {
+        if n_tenants == 0 {
+            0
+        } else {
+            (self.rr_cursor % n_tenants as u64) as usize
+        }
+    }
+
+    pub fn advance_rr(&mut self) {
+        self.rr_cursor = self.rr_cursor.wrapping_add(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t0() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn watermarks_classify_with_inclusive_boundaries() {
+        let w = Watermarks { high: 0.5, critical: 0.75 };
+        // 100-block pool: 49 → Low, 50 → High (>=), 74 → High, 75 → Critical
+        assert_eq!(w.classify(49, 100), PressureLevel::Low);
+        assert_eq!(w.classify(50, 100), PressureLevel::High);
+        assert_eq!(w.classify(74, 100), PressureLevel::High);
+        assert_eq!(w.classify(75, 100), PressureLevel::Critical);
+        assert_eq!(w.classify(0, 0), PressureLevel::Low, "empty pool is unpressured");
+        assert!(PressureLevel::Low < PressureLevel::High);
+        assert!(PressureLevel::High < PressureLevel::Critical);
+    }
+
+    #[test]
+    fn token_bucket_refills_deterministically() {
+        let now = t0();
+        let mut b = TokenBucket::new(2.0, 10.0, now);
+        assert!(b.try_take(now));
+        assert!(b.try_take(now));
+        assert!(!b.try_take(now), "burst capacity exhausted");
+        // 100ms at 10/s = exactly one token
+        let later = now + Duration::from_millis(100);
+        assert!(b.peek(later));
+        assert!(b.try_take(later));
+        assert!(!b.try_take(later));
+        // refill caps at capacity
+        let much_later = later + Duration::from_secs(60);
+        b.refill(much_later);
+        assert_eq!(b.available(), 2.0);
+    }
+
+    #[test]
+    fn mode_machine_ramps_one_rung_per_observation() {
+        let now = t0();
+        let p = BrownoutPolicy {
+            enter_brownout: 0.8,
+            exit_brownout: 0.6,
+            enter_shed: 0.95,
+            exit_shed: 0.75,
+            min_dwell: Duration::from_millis(10),
+        };
+        let mut m = ModeMachine::new(p, now);
+        assert_eq!(m.mode(), ServeMode::Normal);
+        // saturated pool: wants Shed, but steps through Brownout first
+        let t1 = now + Duration::from_millis(10);
+        assert_eq!(m.observe(1.0, t1), ServeMode::Brownout);
+        // dwell not yet served at t1 → stays Brownout
+        assert_eq!(m.observe(1.0, t1), ServeMode::Brownout);
+        let t2 = t1 + Duration::from_millis(10);
+        assert_eq!(m.observe(1.0, t2), ServeMode::Shed);
+        // recovery also steps one rung: Shed → Brownout → Normal
+        let t3 = t2 + Duration::from_millis(10);
+        assert_eq!(m.observe(0.0, t3), ServeMode::Brownout);
+        let t4 = t3 + Duration::from_millis(10);
+        assert_eq!(m.observe(0.0, t4), ServeMode::Normal);
+    }
+
+    #[test]
+    fn mode_machine_hysteresis_never_flaps() {
+        let now = t0();
+        let p = BrownoutPolicy::default(); // enter 0.80 / exit 0.60
+        let mut m = ModeMachine::new(p, now);
+        let t1 = now + Duration::from_secs(1);
+        assert_eq!(m.observe(0.85, t1), ServeMode::Brownout);
+        // oscillating in the hysteresis band (0.60..0.80) changes nothing,
+        // no matter how much time passes
+        for i in 2..50 {
+            let t = now + Duration::from_secs(i);
+            let occ = if i % 2 == 0 { 0.79 } else { 0.61 };
+            assert_eq!(m.observe(occ, t), ServeMode::Brownout, "flapped at i={i}");
+        }
+        // only falling through the exit threshold recovers
+        let t = now + Duration::from_secs(60);
+        assert_eq!(m.observe(0.59, t), ServeMode::Normal);
+    }
+
+    #[test]
+    fn mode_machine_dwell_blocks_early_transitions() {
+        let now = t0();
+        let p = BrownoutPolicy {
+            min_dwell: Duration::from_millis(100),
+            ..BrownoutPolicy::default()
+        };
+        let mut m = ModeMachine::new(p, now);
+        // pressure spikes immediately, but dwell in Normal not served
+        assert_eq!(m.observe(0.99, now + Duration::from_millis(50)), ServeMode::Normal);
+        // exactly at the dwell boundary (>=): transition fires
+        assert_eq!(m.observe(0.99, now + Duration::from_millis(100)), ServeMode::Brownout);
+    }
+
+    #[test]
+    fn effective_priority_ages_and_caps() {
+        let now = t0();
+        let g = PressureGovernor::new(
+            PressureConfig {
+                aging_interval: Duration::from_millis(50),
+                aging_cap: 3,
+                ..PressureConfig::default()
+            },
+            now,
+        );
+        let arrived = now;
+        assert_eq!(g.effective_priority(2, arrived, now), 2);
+        // one tick under the interval: no bonus
+        assert_eq!(
+            g.effective_priority(2, arrived, now + Duration::from_millis(50) - Duration::from_nanos(1)),
+            2
+        );
+        assert_eq!(g.effective_priority(2, arrived, now + Duration::from_millis(50)), 3);
+        assert_eq!(g.effective_priority(2, arrived, now + Duration::from_millis(149)), 4);
+        // capped at +3 no matter how stale
+        assert_eq!(g.effective_priority(2, arrived, now + Duration::from_secs(60)), 5);
+        // a zero-priority request eventually outranks a fresh priority-2
+        assert!(g.effective_priority(0, arrived, now + Duration::from_millis(150)) > 2);
+    }
+
+    #[test]
+    fn quota_reserve_release_roundtrip() {
+        let now = t0();
+        let mut g = PressureGovernor::new(PressureConfig::default(), now);
+        g.set_tenant_policy(
+            7,
+            TenantPolicy { max_kv_blocks: 10, ..TenantPolicy::default() },
+            now,
+        );
+        assert!(g.quota_allows(7, 10, now));
+        assert!(!g.quota_allows(7, 11, now));
+        g.commit_admission(7, 6, now, now);
+        assert_eq!(g.reserved_blocks(7), 6);
+        assert!(g.quota_allows(7, 4, now));
+        assert!(!g.quota_allows(7, 5, now));
+        g.release_reservation(7, 6, now);
+        assert_eq!(g.reserved_blocks(7), 0);
+        assert_eq!(g.metrics.tenant(7).peak_reserved_blocks, 6);
+    }
+
+    #[test]
+    fn observe_accumulates_time_in_mode() {
+        let now = t0();
+        let mut g = PressureGovernor::new(
+            PressureConfig {
+                brownout: BrownoutPolicy {
+                    min_dwell: Duration::ZERO,
+                    ..BrownoutPolicy::default()
+                },
+                ..PressureConfig::default()
+            },
+            now,
+        );
+        let (level, mode) = g.observe(90, 100, now + Duration::from_millis(30));
+        assert_eq!(level, PressureLevel::Critical);
+        assert_eq!(mode, ServeMode::Brownout);
+        assert_eq!(g.metrics.mode_changes, 1);
+        // the 30ms before the flip were spent Normal
+        assert_eq!(g.metrics.time_in_mode[0], Duration::from_millis(30));
+        // 0.96 crosses enter_shed; the 20ms since the flip were Brownout
+        g.observe(96, 100, now + Duration::from_millis(50));
+        assert_eq!(g.metrics.time_in_mode[1], Duration::from_millis(20));
+        assert_eq!(g.mode(), ServeMode::Shed);
+        // reclassify adjusts the level without ticking the machine
+        assert_eq!(g.reclassify(10, 100), PressureLevel::Low);
+        assert_eq!(g.mode(), ServeMode::Shed, "reclassify leaves the mode machine alone");
+    }
+
+    #[test]
+    fn drr_deficit_charges_by_weight_and_resets() {
+        let now = t0();
+        let mut g = PressureGovernor::new(
+            PressureConfig { quantum: 4, ..PressureConfig::default() },
+            now,
+        );
+        g.set_tenant_policy(1, TenantPolicy { weight: 3, ..TenantPolicy::default() }, now);
+        g.charge_deficit(0, now);
+        g.charge_deficit(1, now);
+        assert_eq!(g.deficit(0), 4);
+        assert_eq!(g.deficit(1), 12, "weight multiplies the quantum");
+        g.charge_deficit(1, now);
+        assert_eq!(g.deficit(1), 24);
+        g.reset_deficit(1);
+        assert_eq!(g.deficit(1), 0);
+        // round-robin start rotates
+        assert_eq!(g.rr_start(3), 0);
+        g.advance_rr();
+        assert_eq!(g.rr_start(3), 1);
+        g.advance_rr();
+        g.advance_rr();
+        assert_eq!(g.rr_start(3), 0);
+    }
+
+    #[test]
+    fn reclaim_target_restores_high_watermark_headroom() {
+        let now = t0();
+        let g = PressureGovernor::new(
+            PressureConfig {
+                watermarks: Watermarks { high: 0.70, critical: 0.90 },
+                ..PressureConfig::default()
+            },
+            now,
+        );
+        // 100 blocks at high=0.70 → keep at least 30 free
+        assert_eq!(g.reclaim_target(100), 30);
+        // 12 blocks: floor(0.7*12)=8 used → 4 free
+        assert_eq!(g.reclaim_target(12), 4);
+    }
+}

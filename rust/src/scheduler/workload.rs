@@ -126,6 +126,53 @@ pub fn shared_prefix_requests(
             prompt.extend((0..w.user_tokens).map(|_| s.token(w.vocab)));
             let budget = s.range(w.gen_min, w.gen_max);
             GenRequest::at(i as u64, prompt, budget, start + gap * i as u32)
+                .with_tenant(tenant as u32)
+        })
+        .collect()
+}
+
+/// The adversarial overload mix for the governor gauntlet. Same
+/// tenant-interleaved shape as [`shared_prefix_requests`], except
+/// tenant `noisy` floods: **all** of its requests arrive at `start` (a
+/// thundering herd) at priority 0, each demanding the maximum
+/// generation budget — while the well-behaved tenants trickle in at
+/// `start + i * gap` with priorities cycling 0..=2 and budgets drawn
+/// from the normal range. Deterministic in `(w, n, seed, noisy)`; the
+/// `sim_pressure.py` verify port mirrors it line for line.
+pub fn overload_requests(
+    w: &SharedPrefixWorkload,
+    n: usize,
+    seed: u64,
+    start: Instant,
+    gap: Duration,
+    noisy: usize,
+) -> Vec<GenRequest> {
+    assert!(w.tenants > 0, "need at least one tenant");
+    assert!(noisy < w.tenants, "noisy tenant out of range");
+    assert!(w.gen_min > 0 && w.gen_min <= w.gen_max, "bad gen range");
+    let systems: Vec<Vec<i32>> = (0..w.tenants)
+        .map(|t| w.system_prompt(seed, t))
+        .collect();
+    (0..n)
+        .map(|i| {
+            let tenant = i % w.tenants;
+            let mut s = Stream::new(
+                splitmix(seed ^ 0x6F76_6572_6C6F_6164) ^ (i as u64).wrapping_mul(0x5851_F42D),
+            );
+            let mut prompt = systems[tenant].clone();
+            prompt.extend((0..w.user_tokens).map(|_| s.token(w.vocab)));
+            let (budget, arrived, priority) = if tenant == noisy {
+                (w.gen_max, start, 0u8)
+            } else {
+                (
+                    s.range(w.gen_min, w.gen_max),
+                    start + gap * i as u32,
+                    ((i / w.tenants) % 3) as u8,
+                )
+            };
+            GenRequest::at(i as u64, prompt, budget, arrived)
+                .with_priority(priority)
+                .with_tenant(tenant as u32)
         })
         .collect()
 }
@@ -164,6 +211,34 @@ mod tests {
             assert_eq!(p.len(), w.system_tokens);
             assert!(p.iter().all(|&tok| tok >= 1 && tok <= w.vocab));
             assert_eq!(kv_lane_noise(p[0]), t % 2 == 1, "tenant {t}");
+        }
+    }
+
+    #[test]
+    fn overload_mix_floods_exactly_one_tenant() {
+        let w = SharedPrefixWorkload::default();
+        let t0 = Instant::now();
+        let gap = Duration::from_millis(2);
+        let reqs = overload_requests(&w, 16, 7, t0, gap, 1);
+        let again = overload_requests(&w, 16, 7, t0, gap, 1);
+        for (x, y) in reqs.iter().zip(&again) {
+            assert_eq!(
+                (x.id, &x.prompt, x.max_new_tokens, x.priority, x.tenant),
+                (y.id, &y.prompt, y.max_new_tokens, y.priority, y.tenant),
+            );
+        }
+        for r in &reqs {
+            assert_eq!(r.tenant as usize, r.id as usize % w.tenants);
+            if r.tenant == 1 {
+                // the herd: everything at t0, max budget, priority 0
+                assert_eq!(r.arrived, t0);
+                assert_eq!(r.max_new_tokens, w.gen_max);
+                assert_eq!(r.priority, 0);
+            } else {
+                assert_eq!(r.arrived, t0 + gap * r.id as u32);
+                assert!(r.priority <= 2);
+                assert!(r.max_new_tokens >= w.gen_min && r.max_new_tokens <= w.gen_max);
+            }
         }
     }
 

@@ -17,8 +17,11 @@ use ecf8::scheduler::{
     KvCacheConfig, KvCacheManager, PrefixCacheConfig, SchedConfig, SharedPrefixWorkload, SimClock,
     SyntheticIterationEngine, SystemClock,
 };
+use ecf8::scheduler::{
+    overload_requests, Clock, FinishReason, PressureConfig, PressureGovernor, ServeMode,
+};
 use ecf8::util::prng::Xoshiro256;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -502,4 +505,340 @@ fn prefix_continuous_equals_static_across_seeds() {
         total_preemptions += sched.metrics.preemptions;
     }
     assert!(total_preemptions > 0, "14-block pools must preempt somewhere");
+}
+
+// ---- overload governor: seeded churn invariants -----------------------
+
+fn mode_rung(m: ServeMode) -> i32 {
+    match m {
+        ServeMode::Normal => 0,
+        ServeMode::Brownout => 1,
+        ServeMode::Shed => 2,
+    }
+}
+
+#[test]
+fn governed_overload_churn_holds_invariants_every_step() {
+    // sustained over-capacity load with one flooding tenant: at *every*
+    // step the pool books balance, the waiting queue stays bounded, the
+    // mode machine moves one rung at a time, and no tenant's reserved
+    // blocks exceed its quota; at the end every well-behaved tenant has
+    // completed work, every non-completed request got a structured
+    // ending, and everything admitted is prefix-identical to the static
+    // oracle
+    let w = SharedPrefixWorkload {
+        tenants: 4,
+        system_tokens: 8,
+        user_tokens: 3,
+        gen_min: 3,
+        gen_max: 10,
+        vocab: 47,
+    };
+    let (block_tokens, n_blocks, quota, max_waiting) = (4usize, 22usize, 12usize, 12usize);
+    let noisy = 1usize;
+    let mut total_structured = 0u64;
+    let mut total_sweeps = 0u64;
+    for seed in [41u64, 42, 43] {
+        let clock = SimClock::new();
+        let t0 = clock.now();
+        let mut reqs = overload_requests(&w, 24, seed, t0, Duration::from_millis(2), noisy);
+        for r in &mut reqs {
+            if r.tenant == noisy as u32 {
+                r.deadline = Some(t0 + Duration::from_millis(25));
+            }
+        }
+
+        // oracle with the *original* budgets, evaluated at t0 — before
+        // the sim clock moves, so no deadline can fire inside it
+        let mut eng_s = SyntheticIterationEngine::instant(48);
+        let mut kv_s = KvCacheManager::new(kv_cfg(block_tokens, 256));
+        let mut ms = SchedulerMetrics::default();
+        let want: HashMap<u64, Vec<i32>> =
+            run_static(&mut eng_s, &mut kv_s, &reqs, 4, clock.as_ref(), &mut ms, false)
+                .unwrap()
+                .into_iter()
+                .map(|r| (r.id, r.tokens))
+                .collect();
+
+        let mut pcfg = PressureConfig::default();
+        pcfg.brownout.min_dwell = Duration::from_millis(5);
+        pcfg.aging_interval = Duration::from_millis(10);
+        pcfg.max_waiting = max_waiting;
+        pcfg.tenant.max_kv_blocks = quota;
+        pcfg.cancel_past_deadline = true;
+        let mut sched = ContinuousScheduler::new(
+            SchedConfig { max_running: 6 },
+            kv_cfg_prefix(block_tokens, n_blocks),
+            Arc::clone(&clock),
+        )
+        .with_governor(PressureGovernor::new(pcfg, t0));
+
+        let mut order: Vec<usize> = (0..reqs.len()).collect();
+        order.sort_by_key(|&i| (reqs[i].arrived, reqs[i].id));
+        let mut next = 0usize;
+        let mut eng = SyntheticIterationEngine::instant(48);
+        let mut responses = Vec::new();
+        let mut prev_rung = 0i32;
+        let mut steps = 0usize;
+        while next < order.len() || sched.has_work() {
+            let now = clock.now();
+            while next < order.len() && reqs[order[next]].arrived <= now {
+                sched.submit(reqs[order[next]].clone());
+                next += 1;
+            }
+            let report = sched.step(&mut eng).unwrap();
+            responses.extend(report.responses);
+            // the books must balance at every step, not just at the end
+            sched.kv().leak_check().unwrap_or_else(|e| {
+                panic!("seed {seed} step {steps}: {e}");
+            });
+            let g = sched.governor().unwrap();
+            assert!(
+                sched.waiting_len() <= max_waiting,
+                "seed {seed} step {steps}: queue {} over bound {max_waiting}",
+                sched.waiting_len()
+            );
+            let cur = mode_rung(g.mode());
+            assert!(
+                (cur - prev_rung).abs() <= 1,
+                "seed {seed} step {steps}: mode jumped {prev_rung} -> {cur}"
+            );
+            prev_rung = cur;
+            for t in g.tenant_ids() {
+                assert!(
+                    g.reserved_blocks(t) <= quota,
+                    "seed {seed} step {steps}: tenant {t} over quota"
+                );
+            }
+            steps += 1;
+            assert!(steps < 20_000, "seed {seed}: runaway schedule");
+            clock.advance(Duration::from_millis(1));
+        }
+
+        // every request ends exactly once, structurally
+        assert_eq!(responses.len(), reqs.len(), "seed {seed}");
+        let ids: HashSet<u64> = responses.iter().map(|r| r.id).collect();
+        assert_eq!(ids.len(), reqs.len(), "seed {seed}: duplicate endings");
+        let tenant_of: HashMap<u64, u32> = reqs.iter().map(|r| (r.id, r.tenant)).collect();
+        let mut completed_by = HashMap::<u32, usize>::new();
+        let mut structured = 0u64;
+        for r in &responses {
+            match r.finish {
+                FinishReason::Rejected | FinishReason::Expired => {
+                    assert!(r.tokens.is_empty(), "seed {seed} request {}", r.id);
+                    structured += 1;
+                }
+                FinishReason::Cancelled => {
+                    // partial, but still prefix-identical to the oracle
+                    assert_eq!(
+                        r.tokens[..],
+                        want[&r.id][..r.tokens.len()],
+                        "seed {seed} request {}",
+                        r.id
+                    );
+                    structured += 1;
+                }
+                FinishReason::Completed => {
+                    // brownout may clamp budgets: completion means a
+                    // *prefix* of the oracle's tokens, never different ones
+                    assert!(!r.tokens.is_empty(), "seed {seed} request {}", r.id);
+                    assert_eq!(
+                        r.tokens[..],
+                        want[&r.id][..r.tokens.len()],
+                        "seed {seed} request {}",
+                        r.id
+                    );
+                    *completed_by.entry(tenant_of[&r.id]).or_default() += 1;
+                }
+            }
+        }
+        // starvation-freedom: the flood never locks a well-behaved
+        // tenant out entirely
+        for t in 0..w.tenants as u32 {
+            if t != noisy as u32 {
+                assert!(
+                    completed_by.get(&t).copied().unwrap_or(0) >= 1,
+                    "seed {seed}: tenant {t} starved"
+                );
+            }
+        }
+        let g = sched.governor().unwrap();
+        let nc = &g.metrics.tenants[&(noisy as u32)];
+        assert!(nc.admitted >= 1, "seed {seed}: noisy tenant fully locked out");
+        for (t, c) in &g.metrics.tenants {
+            assert!(
+                c.peak_reserved_blocks <= quota,
+                "seed {seed}: tenant {t} peaked over quota"
+            );
+        }
+        assert_eq!(
+            sched.kv().free_blocks() + sched.kv().trie_hot_blocks(),
+            n_blocks,
+            "seed {seed}: pool accounted for"
+        );
+        total_structured += structured;
+        total_sweeps += g.metrics.reclaim_calls;
+    }
+    assert!(total_structured > 0, "overload never shed/expired/cancelled anything");
+    assert!(total_sweeps > 0, "High watermark never triggered a reclaim sweep");
+}
+
+#[test]
+fn governed_uncontended_run_is_identical_to_static() {
+    // with headroom everywhere (big pool, generous quotas, rate burst
+    // above the offered load) the governor must be a no-op: every
+    // request completes with exactly the oracle's tokens and the mode
+    // machine never leaves Normal
+    let vocab = 64;
+    let clock = SimClock::new();
+    let t0 = clock.now();
+    let mut rng = Xoshiro256::seed_from_u64(91);
+    let reqs: Vec<GenRequest> = (0..12u64)
+        .map(|id| {
+            let prompt_len = 1 + rng.next_below(9) as usize;
+            let max_new = 1 + rng.next_below(12) as usize;
+            GenRequest::at(
+                id,
+                (0..prompt_len)
+                    .map(|_| rng.next_below(vocab as u64) as i32)
+                    .collect(),
+                max_new,
+                t0,
+            )
+            .with_tenant((id % 3) as u32)
+            .with_priority(rng.next_below(3) as u8)
+        })
+        .collect();
+
+    let mut eng_s = SyntheticIterationEngine::instant(vocab);
+    let mut kv_s = KvCacheManager::new(kv_cfg(4, 256));
+    let mut ms = SchedulerMetrics::default();
+    let want: HashMap<u64, Vec<i32>> =
+        run_static(&mut eng_s, &mut kv_s, &reqs, 4, clock.as_ref(), &mut ms, false)
+            .unwrap()
+            .into_iter()
+            .map(|r| (r.id, r.tokens))
+            .collect();
+
+    // quantum must cover the worst-case reservation (prompt 9 + new 12
+    // + headroom 1 -> 6 blocks) so DRR admits on the first round —
+    // `run_to_completion` treats an admission-less cold start as a stall
+    let mut pcfg = PressureConfig::default();
+    pcfg.quantum = 8;
+    let mut sched = ContinuousScheduler::new(
+        SchedConfig { max_running: 8 },
+        kv_cfg(4, 256),
+        Arc::clone(&clock),
+    )
+    .with_governor(PressureGovernor::new(pcfg, t0));
+    for r in &reqs {
+        sched.submit(r.clone());
+    }
+    let mut eng = SyntheticIterationEngine::instant(vocab);
+    let got = sched.run_to_completion(&mut eng).unwrap();
+    sched.kv().leak_check().unwrap();
+    assert_eq!(got.len(), reqs.len());
+    for r in &got {
+        assert_eq!(r.finish, FinishReason::Completed, "request {}", r.id);
+        assert_eq!(r.tokens, want[&r.id], "request {}", r.id);
+    }
+    let g = sched.governor().unwrap();
+    assert_eq!(g.mode(), ServeMode::Normal);
+    assert_eq!(g.metrics.mode_changes, 0);
+    assert_eq!(g.metrics.shed_waiting, 0);
+    assert_eq!(g.metrics.cancelled, 0);
+    assert_eq!(g.metrics.clamped_budgets, 0);
+    assert_eq!(
+        g.metrics.tenants.values().map(|t| t.admitted).sum::<u64>(),
+        reqs.len() as u64
+    );
+}
+
+#[test]
+fn cancellation_fires_exactly_at_the_deadline() {
+    // the `>=` edge, to the nanosecond: one tick before the deadline
+    // the sequence keeps running; *at* the deadline it is cancelled
+    // with its partial tokens (a prefix of the uncancelled run) and
+    // its KV goes back through the normal release path
+    let vocab = 32;
+    let prompt = vec![1, 2, 3];
+
+    // uncancelled reference run for the prefix check
+    let mut reference = ContinuousScheduler::new(
+        SchedConfig { max_running: 2 },
+        kv_cfg(4, 32),
+        SimClock::new(),
+    );
+    reference.submit(GenRequest::new(0, prompt.clone(), 64));
+    let mut eng_r = SyntheticIterationEngine::instant(vocab);
+    let full = reference.run_to_completion(&mut eng_r).unwrap();
+    assert_eq!(full[0].tokens.len(), 64);
+
+    let clock = SimClock::new();
+    let t0 = clock.now();
+    let deadline = t0 + Duration::from_millis(10);
+    let mut pcfg = PressureConfig::default();
+    pcfg.cancel_past_deadline = true;
+    // the 64-token budget reserves blocks_for(3 + 64 + 1) = 17 blocks up
+    // front; the DRR quantum must cover it for step one to admit at all
+    pcfg.quantum = 32;
+    let mut sched = ContinuousScheduler::new(
+        SchedConfig { max_running: 2 },
+        kv_cfg(4, 32),
+        Arc::clone(&clock),
+    )
+    .with_governor(PressureGovernor::new(pcfg, t0));
+    sched.submit(GenRequest::at(0, prompt.clone(), 64, t0).with_deadline(deadline));
+
+    let mut eng = SyntheticIterationEngine::instant(vocab);
+    let r = sched.step(&mut eng).unwrap();
+    assert!(r.responses.is_empty() && r.ran == 1);
+    clock.advance(Duration::from_millis(10) - Duration::from_nanos(1));
+    let r = sched.step(&mut eng).unwrap();
+    assert!(
+        r.responses.is_empty() && r.ran == 1,
+        "one nanosecond before the deadline must not cancel"
+    );
+    clock.advance(Duration::from_nanos(1)); // now == deadline, exactly
+    let r = sched.step(&mut eng).unwrap();
+    assert_eq!(r.responses.len(), 1, "exactly at the deadline cancels");
+    assert_eq!(r.ran, 0, "cancellation happens before the iteration runs");
+    let resp = &r.responses[0];
+    assert_eq!(resp.finish, FinishReason::Cancelled);
+    assert_eq!(resp.tokens.len(), 2, "two decode steps ran before the deadline");
+    assert_eq!(resp.tokens[..], full[0].tokens[..2]);
+    assert!(!sched.has_work());
+    sched.kv().leak_check().unwrap();
+    assert_eq!(sched.kv().free_blocks(), 32, "cancelled KV fully returned");
+    let g = sched.governor().unwrap();
+    assert_eq!(g.metrics.cancelled, 1);
+    assert_eq!(g.metrics.tenants[&0].cancelled, 1);
+    assert_eq!(g.reserved_blocks(0), 0, "reservation released with the KV");
+
+    // default posture: the deadline is a queueing SLO only — without
+    // the opt-in the same sequence runs to completion past it
+    let clock2 = SimClock::new();
+    let t0 = clock2.now();
+    let mut keep = ContinuousScheduler::new(
+        SchedConfig { max_running: 2 },
+        kv_cfg(4, 32),
+        Arc::clone(&clock2),
+    )
+    .with_governor(PressureGovernor::new(PressureConfig::default(), t0));
+    keep.submit(
+        GenRequest::at(0, prompt, 8, t0).with_deadline(t0 + Duration::from_millis(1)),
+    );
+    let mut eng2 = SyntheticIterationEngine::instant(vocab);
+    let mut done = Vec::new();
+    let mut guard = 0;
+    while keep.has_work() {
+        done.extend(keep.step(&mut eng2).unwrap().responses);
+        clock2.advance(Duration::from_millis(1));
+        guard += 1;
+        assert!(guard < 100);
+    }
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].finish, FinishReason::Completed);
+    assert_eq!(done[0].tokens.len(), 8, "running sequences outlive their deadline by default");
+    keep.kv().leak_check().unwrap();
 }
