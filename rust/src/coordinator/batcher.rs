@@ -69,7 +69,14 @@ impl DynamicBatcher {
             return None;
         }
         let n = self.queue.len().min(self.max_batch);
-        Some(self.queue.drain(..n).collect())
+        let now = self.clock.now();
+        let mut chunk: Vec<Request> = self.queue.drain(..n).collect();
+        for r in &mut chunk {
+            // queue-exit stamp: downstream responses split latency
+            // into queue wait vs execute time from this
+            r.dequeued = Some(now);
+        }
+        Some(chunk)
     }
 
     /// When the oldest waiter's linger deadline expires (admission can

@@ -25,6 +25,7 @@ use crate::scheduler::pressure::{
     Watermarks,
 };
 use crate::scheduler::Clock;
+use crate::telemetry::recorder::{DumpReason, FlightEvent, FlightRecorder};
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
@@ -80,6 +81,10 @@ struct Inner {
     level: PressureLevel,
     buckets: BTreeMap<TenantId, TokenBucket>,
     metrics: PressureMetrics,
+    /// shared flight recorder: intake-side mode transitions land in
+    /// the ring; Shed entry arms the overload postmortem, flushed
+    /// right here (intake has no scheduler step to defer to)
+    recorder: Option<Arc<FlightRecorder>>,
 }
 
 /// Thread-safe intake governor, shared between submitters and the
@@ -101,8 +106,14 @@ impl ServerGovernor {
                 buckets: BTreeMap::new(),
                 metrics: PressureMetrics::default(),
                 cfg,
+                recorder: None,
             }),
         })
+    }
+
+    /// Attach the shared flight recorder.
+    pub fn set_recorder(&self, recorder: Arc<FlightRecorder>) {
+        self.inner.lock().unwrap().recorder = Some(recorder);
     }
 
     /// Feed one queue-depth observation (ticks the mode machine). The
@@ -122,6 +133,25 @@ impl ServerGovernor {
         let mode = g.machine.observe(occ, now);
         if mode != before {
             g.metrics.mode_changes += 1;
+            if let Some(rc) = g.recorder.clone() {
+                let level = g.level;
+                drop(g); // recorder takes its own lock; don't nest
+                rc.record(FlightEvent::ModeTransition {
+                    from: before,
+                    to: mode,
+                    level,
+                    occupancy: occ,
+                    used_blocks: pending.min(cap),
+                    total_blocks: cap,
+                });
+                if mode == ServeMode::Shed {
+                    rc.trigger(DumpReason::ShedEntry);
+                    // intake rejects synchronously from here on — there
+                    // is no later safe point, so flush immediately
+                    rc.flush();
+                }
+                return (level, mode);
+            }
         }
         (g.level, mode)
     }

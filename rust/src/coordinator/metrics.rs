@@ -258,6 +258,15 @@ pub struct SchedulerMetrics {
     pub saved_prefill_tokens: u64,
     /// widest iteration executed (live slots)
     pub peak_running: usize,
+    /// prefix tier census, refreshed each scheduler step when the
+    /// prefix cache is enabled: resident trie nodes …
+    pub tier_hot_nodes: usize,
+    /// … nodes tiered down into the codec-compressed cold pool …
+    pub tier_compressed_nodes: usize,
+    /// … that pool's stored bytes …
+    pub tier_compressed_bytes: usize,
+    /// … and nodes pinned by evicted sequences (never droppable)
+    pub tier_pinned_nodes: usize,
     /// Σ live slots over all iterations
     pub slot_tokens: u64,
     /// Σ (live + dead) slots over all iterations — dead slots are
@@ -282,6 +291,15 @@ impl SchedulerMetrics {
         self.slot_tokens as f64 / self.slot_capacity as f64
     }
 
+    /// Surface the prefix tier census ([`crate::scheduler::TierCensus`]
+    /// was computed on every reclaim decision but never left `kv-sim`).
+    pub fn record_census(&mut self, c: &crate::scheduler::TierCensus) {
+        self.tier_hot_nodes = c.hot_nodes;
+        self.tier_compressed_nodes = c.compressed_nodes;
+        self.tier_compressed_bytes = c.compressed_bytes;
+        self.tier_pinned_nodes = c.pinned_nodes;
+    }
+
     /// Fraction of prefix lookups that linked at least one block.
     pub fn prefix_hit_rate(&self) -> f64 {
         if self.prefix_lookups == 0 {
@@ -303,11 +321,25 @@ impl SchedulerMetrics {
         } else {
             String::new()
         };
+        let tier_line = if self.tier_hot_nodes + self.tier_compressed_nodes + self.tier_pinned_nodes
+            > 0
+        {
+            format!(
+                "tier: {} hot, {} compressed ({} bytes), {} pinned\n",
+                self.tier_hot_nodes,
+                self.tier_compressed_nodes,
+                self.tier_compressed_bytes,
+                self.tier_pinned_nodes,
+            )
+        } else {
+            String::new()
+        };
         format!(
             "iterations {:6}  tokens {:6}  occupancy {:5.1}%  peak width {}\n\
              admitted {} finished {} preemptions {} resumes {} \
              expired {} rejected {} cancelled {}\n\
              {prefix_line}\
+             {tier_line}\
              ttft: p50 {:8.3} ms, p99 {:8.3} ms, max {:8.3} ms ({} samples)\n\
              tpot: p50 {:8.3} ms, p99 {:8.3} ms, max {:8.3} ms ({} samples)\n",
             self.iterations,

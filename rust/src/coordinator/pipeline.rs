@@ -264,6 +264,16 @@ impl<E: BatchEngine + 'static> PipelinedServer<E> {
         &self.stages
     }
 
+    /// Snapshot the pipeline's stage metrics onto the unified registry
+    /// (the supervised path adds health/governor/recorder state on top
+    /// — see `SupervisedServer::registry`).
+    pub fn registry(&self) -> crate::telemetry::registry::MetricsRegistry {
+        let mut reg = crate::telemetry::registry::MetricsRegistry::new();
+        reg.register_pipeline(&self.stages);
+        reg.gauge("server_intake_pending", self.pending() as f64);
+        reg
+    }
+
     /// Flush pending work, stop the stage threads, and return the engine,
     /// metrics, and any responses not yet collected. Fails with the
     /// execute stage's first error, if it hit one.

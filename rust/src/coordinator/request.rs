@@ -22,6 +22,10 @@ pub struct Request {
     /// response instead of being executed (exactly at the deadline
     /// counts as expired, mirroring the linger policy's `>=`)
     pub deadline: Option<Instant>,
+    /// stamped by the batcher when this request leaves the intake
+    /// queue for execution — splits `Response::latency_s` into queue
+    /// wait vs execute time for the telemetry spine
+    pub dequeued: Option<Instant>,
 }
 
 impl Request {
@@ -40,6 +44,7 @@ impl Request {
             priority: 0,
             arrived,
             deadline: None,
+            dequeued: None,
         }
     }
 
@@ -124,6 +129,10 @@ pub struct Response {
     pub logits: Vec<f32>,
     /// queueing + execution latency
     pub latency_s: f64,
+    /// time spent in the intake queue before the batcher released the
+    /// request (`latency_s - queued_s` is execute time); equals
+    /// `latency_s` for expired requests, 0 for intake rejections
+    pub queued_s: f64,
     /// batch this request was served in
     pub batch_size: usize,
     pub status: ResponseStatus,
@@ -135,12 +144,23 @@ impl Response {
         self.status == ResponseStatus::Ok
     }
 
+    /// Queue wait from the request's stamps: arrival → dequeue, or
+    /// arrival → `fallback` when the batcher never released it.
+    pub(crate) fn queue_wait(r: &Request, fallback: Instant) -> f64 {
+        r.dequeued
+            .unwrap_or(fallback)
+            .saturating_duration_since(r.arrived)
+            .as_secs_f64()
+    }
+
     /// The structured shed-at-deadline response (no logits, batch 0).
     pub fn expired(r: &Request, now: Instant) -> Self {
+        let latency_s = now.saturating_duration_since(r.arrived).as_secs_f64();
         Self {
             id: r.id,
             logits: Vec::new(),
-            latency_s: now.saturating_duration_since(r.arrived).as_secs_f64(),
+            latency_s,
+            queued_s: latency_s, // it only ever queued
             batch_size: 0,
             status: ResponseStatus::Expired,
         }
@@ -153,6 +173,7 @@ impl Response {
             id: r.id,
             logits: Vec::new(),
             latency_s: 0.0,
+            queued_s: 0.0,
             batch_size: 0,
             status: ResponseStatus::Rejected(reason),
         }
@@ -164,6 +185,7 @@ impl Response {
             id: r.id,
             logits: Vec::new(),
             latency_s: r.arrived.elapsed().as_secs_f64(),
+            queued_s: Self::queue_wait(r, Instant::now()),
             batch_size,
             status: ResponseStatus::Failed(reason),
         }

@@ -120,6 +120,7 @@ pub(crate) fn execute_batch_on<E: BatchEngine>(
             id: r.id,
             logits: logits[i * vocab..(i + 1) * vocab].to_vec(),
             latency_s: now.duration_since(r.arrived).as_secs_f64(),
+            queued_s: super::request::Response::queue_wait(r, now),
             batch_size: real,
             status: super::request::ResponseStatus::Ok,
         })

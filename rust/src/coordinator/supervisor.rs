@@ -32,6 +32,8 @@ use super::pipeline::{admission_loop, panic_msg, AdmissionShared, PipelineConfig
 use super::request::{RejectReason, Request, Response};
 use super::server::{compiled_batch_for, execute_batch_on, BatchEngine};
 use crate::runtime::executor::SEQ_LEN;
+use crate::telemetry::recorder::{DumpReason, FlightEvent, FlightRecorder};
+use crate::telemetry::registry::MetricsRegistry;
 use crate::util::channel::{self, Receiver};
 use anyhow::{anyhow, bail, Result};
 use std::path::PathBuf;
@@ -205,6 +207,10 @@ pub struct SupervisedServer<E: BatchEngine + 'static> {
     /// serve mode decays while the queue drains (admissions alone would
     /// leave a Shed-mode server stuck)
     governor: Arc<Mutex<Option<Arc<ServerGovernor>>>>,
+    /// shared with the watchdog, which records restart events and arms
+    /// (then immediately flushes) a postmortem when it declares a stage
+    /// wedged
+    recorder: Arc<Mutex<Option<Arc<FlightRecorder>>>>,
     intake_cap: usize,
     intake_peak: AtomicUsize,
 }
@@ -251,13 +257,15 @@ impl<E: BatchEngine + 'static> SupervisedServer<E> {
         *exec.worker.lock().unwrap() = Some(spawn_worker(first, 0, Arc::clone(&exec)));
 
         let governor: Arc<Mutex<Option<Arc<ServerGovernor>>>> = Arc::new(Mutex::new(None));
+        let recorder: Arc<Mutex<Option<Arc<FlightRecorder>>>> = Arc::new(Mutex::new(None));
         let watchdog_stop = Arc::new(AtomicBool::new(false));
         let watchdog = std::thread::spawn({
             let exec = Arc::clone(&exec);
             let stop = Arc::clone(&watchdog_stop);
             let adm = Arc::clone(&shared);
             let governor = Arc::clone(&governor);
-            move || watchdog_loop(&exec, &adm, &governor, sup, &stop)
+            let recorder = Arc::clone(&recorder);
+            move || watchdog_loop(&exec, &adm, &governor, &recorder, sup, &stop)
         });
 
         Self {
@@ -272,6 +280,7 @@ impl<E: BatchEngine + 'static> SupervisedServer<E> {
             scrub: None,
             store_dir: None,
             governor,
+            recorder,
             intake_cap: cfg.intake_cap,
             intake_peak: AtomicUsize::new(0),
         }
@@ -296,6 +305,31 @@ impl<E: BatchEngine + 'static> SupervisedServer<E> {
     /// pipeline config's bound while attached.
     pub fn attach_governor(&mut self, g: Arc<ServerGovernor>) {
         *self.governor.lock().unwrap() = Some(g);
+    }
+
+    /// Share a flight recorder with the watchdog: every restart it
+    /// performs (or stage-down declaration) is recorded and dumped as
+    /// a postmortem — the watchdog is its own safe point, since the
+    /// failed-batch responses are already in the ring's past by then.
+    pub fn attach_recorder(&mut self, rc: Arc<FlightRecorder>) {
+        *self.recorder.lock().unwrap() = Some(rc);
+    }
+
+    /// One snapshot of everything this server knows onto the unified
+    /// registry — the single path behind `serve --health-log`,
+    /// `serve --metrics`, and `ecf8 stats` (the old health log
+    /// rendered `HealthReport` alone, so pipeline stage histograms
+    /// and recorder state never reached it).
+    pub fn registry(&self) -> MetricsRegistry {
+        let mut reg = MetricsRegistry::new();
+        reg.register_health(&self.health());
+        reg.register_pipeline(&self.exec.stages);
+        reg.gauge("server_intake_pending", self.pending() as f64);
+        reg.gauge("server_intake_peak", self.intake_peak() as f64);
+        if let Some(rc) = self.recorder.lock().unwrap().as_ref() {
+            reg.register_recorder(rc);
+        }
+        reg
     }
 
     pub fn exec_batch(&self) -> usize {
@@ -610,6 +644,7 @@ fn watchdog_loop<E: BatchEngine + 'static>(
     shared: &Arc<ExecShared<E>>,
     adm: &Arc<AdmissionShared>,
     governor: &Mutex<Option<Arc<ServerGovernor>>>,
+    recorder: &Mutex<Option<Arc<FlightRecorder>>>,
     cfg: SupervisorConfig,
     stop: &AtomicBool,
 ) {
@@ -673,6 +708,16 @@ fn watchdog_loop<E: BatchEngine + 'static>(
                 shared.down.store(true, Ordering::SeqCst);
                 *shared.worker.lock().unwrap() = None;
             }
+        }
+        if let Some(rc) = recorder.lock().unwrap().clone() {
+            rc.record(FlightEvent::WatchdogRestart {
+                stage: 1, // execute — stage index in HealthReport order
+                restarts: shared.restarts.load(Ordering::SeqCst),
+            });
+            // the restart is fully bookkept by this point — the
+            // watchdog is its own safe point, dump immediately
+            rc.trigger(DumpReason::WatchdogRestart);
+            rc.flush();
         }
     }
 }

@@ -18,6 +18,7 @@ pub mod model;
 pub mod runtime;
 pub mod scheduler;
 pub mod scrub;
+pub mod telemetry;
 pub mod tensormgr;
 pub mod util;
 

@@ -13,6 +13,11 @@
 //!               paged KV cache instead of the batch-level tick loop)
 //!   kv-sim      continuous-vs-static scheduling simulation on the
 //!               synthetic engine: identity, preemption, zero-leak
+//!   trace-sim   seeded telemetry simulation: span phase breakdown
+//!               (Σ phases == latency, zero orphans) plus a forced-Shed
+//!               overload run that prints the flight-recorder postmortem
+//!   stats       run a small seeded sim and dump the unified metrics
+//!               registry (Prometheus text or JSON)
 //!   send        encode a v2 store into an FEC-protected packet trace
 //!   recv        reassemble a packet trace back into a verified store
 //!   distribute-sim  in-process sender → lossy channel → receiver sweep
@@ -52,6 +57,8 @@ fn main() {
         "gen-model" => cmd_gen_model(args),
         "serve" => cmd_serve(args),
         "kv-sim" => cmd_kv_sim(args),
+        "trace-sim" => cmd_trace_sim(args),
+        "stats" => cmd_stats(args),
         "send" => cmd_send(args),
         "recv" => cmd_recv(args),
         "distribute-sim" => cmd_distribute_sim(args),
@@ -95,6 +102,11 @@ fn usage() {
                        (--continuous for iteration-level KV-paged scheduling)\n\
            kv-sim      --requests N --blocks B  continuous vs static\n\
                                              scheduling sim (synthetic engine)\n\
+           trace-sim   --requests N --seed S  seeded span-tracing sim:\n\
+                                             phase sums == latency, zero\n\
+                                             orphans, forced-Shed postmortem\n\
+           stats       --format prometheus|json  seeded sim -> unified\n\
+                                             metrics registry dump\n\
            send        <model-dir> --trace <file>  encode a v2 store into an\n\
                                              FEC-protected packet trace\n\
            recv        --trace <file> --out <dir>  reassemble + verify a trace\n\
@@ -115,6 +127,19 @@ fn handle_help(cmd: &Command, err: CliError) -> anyhow::Error {
         std::process::exit(0);
     }
     anyhow::anyhow!("{err}")
+}
+
+/// Render the unified metrics registry in the chosen exporter format
+/// (both end in a newline, so callers `print!`).
+fn render_registry(
+    reg: &ecf8::telemetry::MetricsRegistry,
+    format: &str,
+) -> anyhow::Result<String> {
+    match format {
+        "prometheus" | "prom" => Ok(ecf8::telemetry::prometheus(reg)),
+        "json" => Ok(format!("{}\n", ecf8::telemetry::json(reg))),
+        other => anyhow::bail!("unknown --format `{other}` (prometheus | json)"),
+    }
 }
 
 fn cmd_compress(raw: Vec<String>) -> anyhow::Result<()> {
@@ -642,7 +667,17 @@ fn cmd_serve(raw: Vec<String>) -> anyhow::Result<()> {
         .flag(
             "health-log",
             "serve through the supervised coordinator (heartbeat watchdog \
-             over the execute stage) and print HealthReport lines",
+             over the execute stage) and print unified-registry JSON \
+             snapshot lines as the run goes",
+        )
+        .flag(
+            "metrics",
+            "print the unified metrics registry at the end of the run",
+        )
+        .opt_default(
+            "format",
+            "registry export format: prometheus | json",
+            "prometheus",
         );
     let a = cmd.parse(raw).map_err(|e| handle_help(&cmd, e))?;
     let name = a.get_or("model", "tiny-llm-7m");
@@ -652,6 +687,8 @@ fn cmd_serve(raw: Vec<String>) -> anyhow::Result<()> {
     let batch: usize = a.get_parse_or("batch", 8);
     let threads: usize = a.get_parse_or("threads", 0);
     let seed: u64 = a.get_parse_or("seed", 1);
+    let metrics_out = a.flag("metrics");
+    let format = a.get_or("format", "prometheus");
 
     let pool = (threads > 0).then(|| Arc::new(ThreadPool::new(threads)));
     println!("synthesizing {} ...", m.name);
@@ -674,10 +711,12 @@ fn cmd_serve(raw: Vec<String>) -> anyhow::Result<()> {
             a.get_parse_or("block-tokens", 16),
             a.get_parse_or("kv-blocks", 0),
             seed,
+            metrics_out,
+            format,
         );
     }
     if a.flag("health-log") {
-        return serve_supervised(ex, &m, n_requests, batch, seed);
+        return serve_supervised(ex, &m, n_requests, batch, seed, metrics_out, format);
     }
     let mut server = Server::new(
         ex,
@@ -720,23 +759,43 @@ fn cmd_serve(raw: Vec<String>) -> anyhow::Result<()> {
             humanize::duration(s.p99)
         );
     }
+    if metrics_out {
+        use ecf8::coordinator::LatencyHistogram;
+        let mut reg = ecf8::telemetry::MetricsRegistry::new();
+        reg.counter("serve_requests_served", met.requests_served);
+        reg.counter("serve_tokens_served", met.tokens_served);
+        reg.counter("serve_batches_executed", met.batches_executed);
+        reg.gauge("serve_tokens_per_s", met.tokens_per_second());
+        reg.gauge("serve_mean_batch", met.mean_batch_size());
+        let mut h = LatencyHistogram::default();
+        for &s in &met.latencies_s {
+            h.record(s);
+        }
+        reg.histogram("serve_latency_seconds", &h);
+        print!("{}", render_registry(&reg, format)?);
+    }
     Ok(())
 }
 
 /// `serve --health-log`: the batch-level loop through the supervised
 /// coordinator — heartbeat watchdog over the execute stage, wedged
-/// batches failed structurally, HealthReport printed as the run goes.
+/// batches failed structurally, unified-registry JSON snapshots
+/// printed as the run goes (one snapshot path: the same
+/// [`SupervisedServer::registry`] that `--metrics` dumps at the end).
 fn serve_supervised(
     ex: LlmExecutor,
     m: &ecf8::model::config::ModelConfig,
     n_requests: usize,
     batch: usize,
     seed: u64,
+    metrics_out: bool,
+    format: &str,
 ) -> anyhow::Result<()> {
     use ecf8::coordinator::{
         PipelineConfig, ServerGovernor, ServerGovernorConfig, SupervisedServer, SupervisorConfig,
     };
     use ecf8::scheduler::SystemClock;
+    use ecf8::telemetry::FlightRecorder;
     let mut server = SupervisedServer::new(
         vec![ex],
         PipelineConfig::new(ServeConfig {
@@ -746,11 +805,15 @@ fn serve_supervised(
         SupervisorConfig::default(),
     );
     // intake governor: queue-occupancy watermarks + per-tenant rates;
-    // its snapshot joins every health line below
+    // its snapshot joins every registry line below
     server.attach_governor(ServerGovernor::new(
         ServerGovernorConfig::default(),
         Arc::new(SystemClock),
     ));
+    // flight recorder: watchdog restarts and intake Shed entries arm a
+    // postmortem; anything flushed is printed after shutdown
+    let recorder = Arc::new(FlightRecorder::new(Arc::new(SystemClock), 256));
+    server.attach_recorder(recorder.clone());
     println!(
         "serving {n_requests} requests supervised at exec batch {} on PJRT CPU",
         server.exec_batch()
@@ -766,7 +829,7 @@ fn serve_supervised(
         }
         done.extend(server.collect_ready());
         if (id + 1) % (n_requests as u64 / 4).max(1) == 0 {
-            print!("{}", server.health().render());
+            print!("{}", render_registry(&server.registry(), "json")?);
         }
     }
     let report = server.shutdown()?;
@@ -784,6 +847,20 @@ fn serve_supervised(
         report.metrics.tokens_per_second(),
         report.metrics.requests_per_second()
     );
+    for pm in recorder.dumps() {
+        print!("{}", pm.render());
+    }
+    if metrics_out {
+        // post-drain snapshot assembled from the shutdown report (the
+        // live server is gone; its shared stage metrics survive in it)
+        let mut reg = ecf8::telemetry::MetricsRegistry::new();
+        reg.register_pipeline(&report.stages);
+        reg.counter("serve_requests_served", report.metrics.requests_served);
+        reg.counter("serve_tokens_served", report.metrics.tokens_served);
+        reg.counter("server_stage_restarts", report.restarts);
+        reg.register_recorder(&recorder);
+        print!("{}", render_registry(&reg, format)?);
+    }
     Ok(())
 }
 
@@ -800,8 +877,11 @@ fn serve_continuous(
     block_tokens: usize,
     kv_blocks: usize,
     seed: u64,
+    metrics_out: bool,
+    format: &str,
 ) -> anyhow::Result<()> {
     use ecf8::scheduler::{ContinuousScheduler, GenRequest, KvCacheConfig, SchedConfig, SystemClock};
+    use ecf8::telemetry::{FlightRecorder, Tracer};
     let mut kv_cfg = KvCacheConfig::for_model(m, block_tokens, 0);
     let per_seq = kv_cfg.blocks_for_tokens(SEQ_LEN + gen);
     kv_cfg.n_blocks = if kv_blocks > 0 { kv_blocks } else { batch.max(1) * per_seq };
@@ -812,13 +892,16 @@ fn serve_continuous(
         block_tokens,
         per_seq
     );
+    let clock: Arc<SystemClock> = Arc::new(SystemClock);
     let mut sched = ContinuousScheduler::new(
         SchedConfig {
             max_running: (2 * batch).max(1),
         },
         kv_cfg,
-        Arc::new(SystemClock),
-    );
+        clock.clone(),
+    )
+    .with_tracer(Tracer::new(clock.clone(), n_requests.max(1), 4096))
+    .with_recorder(Arc::new(FlightRecorder::new(clock, 256)));
     let mut rng = Xoshiro256::seed_from_u64(seed);
     for id in 0..n_requests as u64 {
         sched.submit(GenRequest::new(
@@ -845,7 +928,38 @@ fn serve_continuous(
     for (codec, n) in &sched.kv().stats().evicted_by_codec {
         println!("evicted via {}: {n} blocks", codec.label());
     }
+    if let Some(t) = sched.tracer() {
+        let agg = t.aggregate();
+        if agg.spans > 0 {
+            let parts: Vec<String> = ecf8::telemetry::Phase::ALL
+                .iter()
+                .map(|p| {
+                    format!(
+                        "{} {:.1}%",
+                        p.name(),
+                        agg.phase_ns[p.index()] as f64 / agg.total_ns.max(1) as f64 * 100.0
+                    )
+                })
+                .collect();
+            println!("phase breakdown ({} spans): {}", agg.spans, parts.join(", "));
+        }
+    }
     println!("leaked blocks: 0");
+    if metrics_out {
+        let mut reg = ecf8::telemetry::MetricsRegistry::new();
+        reg.register_scheduler(&sched.metrics);
+        reg.register_kv(sched.kv().stats());
+        if let (Some(p), Some(census)) = (sched.kv().prefix_stats(), sched.kv().prefix_census()) {
+            reg.register_prefix(p, &census);
+        }
+        if let Some(t) = sched.tracer() {
+            reg.register_tracer(t);
+        }
+        if let Some(rc) = sched.recorder() {
+            reg.register_recorder(rc);
+        }
+        print!("{}", render_registry(&reg, format)?);
+    }
     Ok(())
 }
 
@@ -1307,6 +1421,393 @@ fn kv_sim_overload(args: KvSimOverload) -> anyhow::Result<()> {
          ({checked} prefixes verified)"
     );
     println!("leaked blocks: 0");
+    Ok(())
+}
+
+/// Arrival-ordered sim drive shared by `trace-sim` and `stats`: submit
+/// what has arrived, step, leak-check, advance 1ms — the same cadence
+/// `kv-sim --overload` uses, so the verify ports replay one loop shape.
+fn drive_sim(
+    sched: &mut ecf8::scheduler::ContinuousScheduler,
+    eng: &mut ecf8::scheduler::SyntheticIterationEngine,
+    clock: &ecf8::scheduler::SimClock,
+    requests: &[ecf8::scheduler::GenRequest],
+) -> anyhow::Result<(Vec<ecf8::scheduler::GenResponse>, u64)> {
+    let mut order: Vec<usize> = (0..requests.len()).collect();
+    order.sort_by_key(|&i| (requests[i].arrived, requests[i].id));
+    let mut responses = Vec::new();
+    let mut next = 0usize;
+    let mut steps = 0u64;
+    while next < order.len() || sched.has_work() {
+        let now = clock.now();
+        while next < order.len() && requests[order[next]].arrived <= now {
+            sched.submit(requests[order[next]].clone());
+            next += 1;
+        }
+        let report = sched.step(eng)?;
+        responses.extend(report.responses);
+        sched
+            .kv()
+            .leak_check()
+            .map_err(|e| anyhow::anyhow!("step {steps}: leaked KV blocks: {e}"))?;
+        steps += 1;
+        anyhow::ensure!(steps < 200_000, "sim failed to converge");
+        clock.advance(std::time::Duration::from_millis(1));
+    }
+    Ok((responses, steps))
+}
+
+/// `ecf8 trace-sim`: the telemetry spine's seeded acceptance gauntlet.
+///
+/// Two deterministic SimClock runs on the synthetic engine:
+///
+/// 1. **drain** — preemption-heavy but ungoverned; asserts the span
+///    identities the tracer promises by construction: every request
+///    traced, `Σ phase_ns == total_ns ==` end-to-end latency per span,
+///    zero orphan spans, zero dropped spans, and prints the per-phase
+///    breakdown plus the per-span codec ledger;
+/// 2. **forced shed** — a governed overload with hysteresis thresholds
+///    low enough that sustained occupancy must ramp the mode machine
+///    Normal → Brownout → Shed; asserts the flight recorder flushed a
+///    postmortem containing the Shed mode transition (with the
+///    occupancy observation that tripped it) and the shed events that
+///    followed, and prints it.
+///
+/// Deterministic in the seed — `.claude/skills/verify/sim_telemetry.py`
+/// replays it line for line.
+fn cmd_trace_sim(raw: Vec<String>) -> anyhow::Result<()> {
+    use ecf8::scheduler::{
+        BrownoutPolicy, ContinuousScheduler, FinishReason, GenRequest, GenResponse, KvCacheConfig,
+        PressureConfig, PressureGovernor, SchedConfig, ServeMode, SimClock,
+        SyntheticIterationEngine,
+    };
+    use ecf8::telemetry::{
+        DumpReason, FlightEvent, FlightRecorder, Phase, Tracer, NUM_PHASES,
+    };
+    use std::time::Duration;
+
+    let cmd = Command::new(
+        "trace-sim",
+        "seeded span-tracing sim: phase sums == latency, zero orphans, forced-Shed postmortem",
+    )
+    .opt_default("requests", "generation requests per run", "32")
+    .opt_default("vocab", "synthetic vocabulary size", "96")
+    .opt_default("prompt", "prompt tokens per request", "12")
+    .opt_default("gen", "generated tokens per request", "24")
+    .opt_default("block-tokens", "tokens per KV block", "8")
+    .opt_default("bytes-per-token", "KV bytes per token", "128")
+    .opt_default(
+        "blocks",
+        "drain run's block pool (small pools force preemption)",
+        "20",
+    )
+    .opt_default("max-running", "live-slot cap", "8")
+    .opt_default("seed", "rng seed", "1")
+    .opt("dump-dir", "also write flushed postmortems to this directory");
+    let a = cmd.parse(raw).map_err(|e| handle_help(&cmd, e))?;
+    let n: usize = a.get_parse_or("requests", 32);
+    let vocab: usize = a.get_parse_or("vocab", 96);
+    let prompt: usize = a.get_parse_or("prompt", 12);
+    let gen: usize = a.get_parse_or("gen", 24);
+    let block_tokens: usize = a.get_parse_or("block-tokens", 8);
+    let bytes_per_token: usize = a.get_parse_or("bytes-per-token", 128);
+    let blocks: usize = a.get_parse_or("blocks", 20);
+    let max_running: usize = a.get_parse_or("max-running", 8);
+    let seed: u64 = a.get_parse_or("seed", 1);
+    anyhow::ensure!(n > 0, "--requests must be positive");
+
+    let kv_cfg = |pool: usize| KvCacheConfig {
+        block_tokens,
+        bytes_per_token,
+        n_blocks: pool,
+        format: Fp8Format::E4M3,
+        prefix: None,
+    };
+
+    // Every response carries a trace whose phases sum to its total and
+    // whose total equals the latency the scheduler reported — the same
+    // clock stamps both, so the identity is exact, not approximate.
+    fn check_spans(
+        label: &str,
+        responses: &[GenResponse],
+        tracer: &ecf8::telemetry::Tracer,
+    ) -> anyhow::Result<[u64; NUM_PHASES]> {
+        let mut phase_totals = [0u64; NUM_PHASES];
+        for r in responses {
+            let s = r
+                .trace
+                .ok_or_else(|| anyhow::anyhow!("{label}: request {} untraced", r.id))?;
+            anyhow::ensure!(
+                s.phase_sum_ns() == s.total_ns,
+                "{label}: request {}: phase sum {} ns != total {} ns",
+                r.id,
+                s.phase_sum_ns(),
+                s.total_ns
+            );
+            let latency_ns = (r.latency_s * 1e9).round() as u64;
+            anyhow::ensure!(
+                s.total_ns == latency_ns,
+                "{label}: request {}: trace total {} ns != end-to-end latency {} ns",
+                r.id,
+                s.total_ns,
+                latency_ns
+            );
+            for i in 0..NUM_PHASES {
+                phase_totals[i] += s.phase_ns[i];
+            }
+        }
+        anyhow::ensure!(
+            tracer.open_spans() == 0,
+            "{label}: {} orphan spans after drain",
+            tracer.open_spans()
+        );
+        anyhow::ensure!(
+            tracer.dropped() == 0,
+            "{label}: {} spans dropped (arena too small)",
+            tracer.dropped()
+        );
+        Ok(phase_totals)
+    }
+
+    // ---- run 1: traced drain under block pressure ----
+    let clock = SimClock::new();
+    let t0 = clock.now();
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let requests: Vec<GenRequest> = (0..n)
+        .map(|id| {
+            GenRequest::at(
+                id as u64,
+                (0..prompt).map(|_| rng.next_below(vocab as u64) as i32).collect(),
+                gen,
+                t0 + Duration::from_millis(2 * id as u64),
+            )
+        })
+        .collect();
+    let mut sched = ContinuousScheduler::new(
+        SchedConfig { max_running },
+        kv_cfg(blocks),
+        clock.clone(),
+    )
+    .with_tracer(Tracer::new(clock.clone(), n, 4096))
+    .with_recorder(Arc::new(FlightRecorder::new(clock.clone(), 256)));
+    let mut eng = SyntheticIterationEngine::instant(vocab);
+    let (responses, steps) = drive_sim(&mut sched, &mut eng, &clock, &requests)?;
+    anyhow::ensure!(responses.len() == n, "drain: answered {} of {n}", responses.len());
+    for r in &responses {
+        anyhow::ensure!(
+            r.finish == FinishReason::Completed,
+            "drain: request {} ended {:?}, expected Completed",
+            r.id,
+            r.finish
+        );
+    }
+    let tracer = sched.tracer().expect("tracer attached");
+    let phase_totals = check_spans("drain", &responses, tracer)?;
+    let agg = tracer.aggregate();
+    anyhow::ensure!(
+        agg.phase_ns == phase_totals && agg.total_ns == phase_totals.iter().sum::<u64>(),
+        "tracer aggregate disagrees with the per-response sums"
+    );
+    let mut t = ecf8::bench_support::Table::new(["phase", "total ns", "share"]);
+    for p in Phase::ALL {
+        t.row([
+            p.name().to_string(),
+            phase_totals[p.index()].to_string(),
+            format!(
+                "{:.1}%",
+                phase_totals[p.index()] as f64 / agg.total_ns.max(1) as f64 * 100.0
+            ),
+        ]);
+    }
+    t.print();
+    let c = agg.codec;
+    if c.evict_calls + c.restore_calls > 0 {
+        println!(
+            "codec per-span ledger: {} evicts ({} -> {} bytes), {} restores ({} -> {} bytes)",
+            c.evict_calls,
+            c.evict_raw_bytes,
+            c.evict_stored_bytes,
+            c.restore_calls,
+            c.restore_stored_bytes,
+            c.restore_raw_bytes
+        );
+    }
+    println!(
+        "drain: {n} spans over {steps} steps — Σ phases == latency on every span, \
+         {} preemptions, 0 orphans, 0 dropped",
+        sched.metrics.preemptions
+    );
+
+    // ---- run 2: forced Shed with the postmortem flushed ----
+    // pool sized for exactly two sequences, the whole herd arriving
+    // 4/ms: occupancy saturates, and with 1ms dwell the mode machine
+    // must ramp Normal -> Brownout -> Shed within a few observations
+    let per_seq = kv_cfg(1).blocks_for_tokens(prompt + gen + 1);
+    let clock2 = SimClock::new();
+    let t1 = clock2.now();
+    let mut rng = Xoshiro256::seed_from_u64(seed ^ 0x9e37_79b9_7f4a_7c15);
+    let herd: Vec<GenRequest> = (0..n)
+        .map(|id| {
+            GenRequest::at(
+                (n + id) as u64,
+                (0..prompt).map(|_| rng.next_below(vocab as u64) as i32).collect(),
+                gen,
+                t1 + Duration::from_millis(id as u64 / 4),
+            )
+        })
+        .collect();
+    let mut pcfg = PressureConfig::default();
+    pcfg.max_waiting = (n / 2).max(8);
+    pcfg.brownout = BrownoutPolicy {
+        enter_brownout: 0.45,
+        exit_brownout: 0.25,
+        enter_shed: 0.55,
+        exit_shed: 0.35,
+        min_dwell: Duration::from_millis(1),
+    };
+    let recorder = Arc::new(FlightRecorder::new(clock2.clone(), 256));
+    if let Some(dir) = a.get("dump-dir") {
+        std::fs::create_dir_all(dir)?;
+        recorder.set_dump_dir(std::path::PathBuf::from(dir));
+    }
+    let mut sched2 = ContinuousScheduler::new(
+        SchedConfig { max_running },
+        kv_cfg(2 * per_seq),
+        clock2.clone(),
+    )
+    .with_governor(PressureGovernor::new(pcfg, clock2.now()))
+    .with_tracer(Tracer::new(clock2.clone(), n, 4096))
+    .with_recorder(recorder.clone());
+    let mut eng2 = SyntheticIterationEngine::instant(vocab);
+    let (responses2, steps2) = drive_sim(&mut sched2, &mut eng2, &clock2, &herd)?;
+    anyhow::ensure!(responses2.len() == n, "shed: answered {} of {n}", responses2.len());
+    let tracer2 = sched2.tracer().expect("tracer attached");
+    check_spans("shed", &responses2, tracer2)?;
+    let shed_count = responses2
+        .iter()
+        .filter(|r| r.finish == FinishReason::Rejected)
+        .count();
+    anyhow::ensure!(shed_count > 0, "shed run shed nothing — overload not reached");
+    anyhow::ensure!(
+        recorder.dump_count() >= 1,
+        "no postmortem flushed on Shed entry"
+    );
+    let dumps = recorder.dumps();
+    let pm = &dumps[0];
+    anyhow::ensure!(
+        pm.reason == DumpReason::ShedEntry,
+        "postmortem reason {:?}, expected ShedEntry",
+        pm.reason
+    );
+    let has_transition = pm.events.iter().any(|rec| {
+        matches!(
+            rec.event,
+            FlightEvent::ModeTransition {
+                to: ServeMode::Shed,
+                ..
+            }
+        )
+    });
+    let has_shed = pm
+        .events
+        .iter()
+        .any(|rec| matches!(rec.event, FlightEvent::Shed { .. }));
+    anyhow::ensure!(
+        has_transition,
+        "postmortem lacks the Shed mode transition (with its occupancy observation)"
+    );
+    anyhow::ensure!(has_shed, "postmortem lacks the shed events");
+    print!("{}", pm.render());
+    println!(
+        "shed: {shed_count} of {n} requests shed over {steps2} steps, \
+         postmortem #{} flushed ({} events, reason {})",
+        pm.seq,
+        pm.events.len(),
+        pm.reason.name()
+    );
+    println!(
+        "trace-sim OK: Σ phases == latency on {} spans, 0 orphans, postmortem verified",
+        2 * n
+    );
+    Ok(())
+}
+
+/// `ecf8 stats`: run a small seeded governed + traced sim on the
+/// synthetic engine and dump the unified metrics registry — every
+/// adapter the telemetry spine has, in one name-ordered namespace.
+fn cmd_stats(raw: Vec<String>) -> anyhow::Result<()> {
+    use ecf8::scheduler::{
+        shared_prefix_requests, ContinuousScheduler, GenRequest, KvCacheConfig, PrefixCacheConfig,
+        PressureConfig, PressureGovernor, SchedConfig, SharedPrefixWorkload, SimClock,
+        SyntheticIterationEngine,
+    };
+    use ecf8::telemetry::{FlightRecorder, MetricsRegistry, Tracer};
+    use std::time::Duration;
+
+    let cmd = Command::new(
+        "stats",
+        "seeded sim -> unified metrics registry dump (prometheus | json)",
+    )
+    .opt_default("requests", "generation requests", "24")
+    .opt_default("seed", "rng seed", "1")
+    .opt_default(
+        "format",
+        "registry export format: prometheus | json",
+        "prometheus",
+    );
+    let a = cmd.parse(raw).map_err(|e| handle_help(&cmd, e))?;
+    let n: usize = a.get_parse_or("requests", 24);
+    let seed: u64 = a.get_parse_or("seed", 1);
+    let format = a.get_or("format", "prometheus");
+    anyhow::ensure!(n > 0, "--requests must be positive");
+
+    let clock = SimClock::new();
+    let t0 = clock.now();
+    let w = SharedPrefixWorkload {
+        tenants: 4,
+        system_tokens: 24,
+        user_tokens: 8,
+        gen_min: 8,
+        gen_max: 16,
+        vocab: 95,
+    };
+    let requests: Vec<GenRequest> =
+        shared_prefix_requests(&w, n, seed, t0, Duration::from_millis(2));
+    let recorder = Arc::new(FlightRecorder::new(clock.clone(), 256));
+    let mut sched = ContinuousScheduler::new(
+        SchedConfig { max_running: 8 },
+        KvCacheConfig {
+            block_tokens: 8,
+            bytes_per_token: 128,
+            n_blocks: 24,
+            format: Fp8Format::E4M3,
+            prefix: Some(PrefixCacheConfig {
+                max_compressed_bytes: 256 * 1024,
+            }),
+        },
+        clock.clone(),
+    )
+    .with_governor(PressureGovernor::new(PressureConfig::default(), clock.now()))
+    .with_tracer(Tracer::new(clock.clone(), n, 4096))
+    .with_recorder(recorder.clone());
+    let mut eng = SyntheticIterationEngine::instant(96);
+    let (responses, _steps) = drive_sim(&mut sched, &mut eng, &clock, &requests)?;
+    anyhow::ensure!(responses.len() == n, "answered {} of {n}", responses.len());
+
+    let mut reg = MetricsRegistry::new();
+    reg.register_scheduler(&sched.metrics);
+    reg.register_kv(sched.kv().stats());
+    if let (Some(p), Some(census)) = (sched.kv().prefix_stats(), sched.kv().prefix_census()) {
+        reg.register_prefix(p, &census);
+    }
+    if let Some(g) = sched.governor() {
+        reg.register_pressure(&g.metrics, g.level(), g.mode());
+    }
+    if let Some(t) = sched.tracer() {
+        reg.register_tracer(t);
+    }
+    reg.register_recorder(&recorder);
+    print!("{}", render_registry(&reg, format)?);
     Ok(())
 }
 

@@ -39,6 +39,8 @@ use super::pressure::{PressureGovernor, PressureLevel, PressureMetrics, ServeMod
 use super::Clock;
 use crate::coordinator::metrics::SchedulerMetrics;
 use crate::coordinator::supervisor::{Heartbeat, StageHealth};
+use crate::telemetry::recorder::{FlightEvent, FlightRecorder, ShedKind};
+use crate::telemetry::span::{Phase, TraceContext, TraceSummary, Tracer};
 use crate::util::channel::{self, RecvTimeoutError};
 use crate::util::threadpool::ThreadPool;
 use anyhow::{anyhow, Result};
@@ -67,6 +69,10 @@ pub struct GenRequest {
     /// governor's opt-in `cancel_past_deadline`, which cuts them off
     /// mid-generation with [`FinishReason::Cancelled`].
     pub deadline: Option<Instant>,
+    /// span handle, assigned at [`ContinuousScheduler::submit`] when a
+    /// tracer is attached; `None` otherwise (or when the trace arena
+    /// was full)
+    pub trace: Option<TraceContext>,
 }
 
 impl GenRequest {
@@ -87,6 +93,7 @@ impl GenRequest {
             tenant: 0,
             arrived,
             deadline: None,
+            trace: None,
         }
     }
 
@@ -138,6 +145,9 @@ pub struct GenResponse {
     /// times this sequence was evicted and restored
     pub preemptions: u32,
     pub finish: FinishReason,
+    /// per-phase latency breakdown, when the scheduler traced this
+    /// request (Σ `trace.phase_ns` == `trace.total_ns` by construction)
+    pub trace: Option<TraceSummary>,
 }
 
 impl GenResponse {
@@ -155,6 +165,7 @@ impl GenResponse {
             latency_s: now.saturating_duration_since(req.arrived).as_secs_f64(),
             preemptions: 0,
             finish: FinishReason::Expired,
+            trace: None,
         }
     }
 
@@ -168,6 +179,7 @@ impl GenResponse {
             latency_s: now.saturating_duration_since(req.arrived).as_secs_f64(),
             preemptions: 0,
             finish: FinishReason::Rejected,
+            trace: None,
         }
     }
 }
@@ -247,6 +259,10 @@ pub struct ContinuousScheduler {
     /// the overload governor — `None` keeps every pre-governor code
     /// path byte-identical
     governor: Option<PressureGovernor>,
+    /// the span tracer — `None` keeps the untraced hot path untouched
+    tracer: Option<Tracer>,
+    /// the shared flight recorder, also handed to the governor
+    recorder: Option<Arc<FlightRecorder>>,
 }
 
 impl ContinuousScheduler {
@@ -264,6 +280,8 @@ impl ContinuousScheduler {
             submit_counter: 0,
             admit_counter: 0,
             governor: None,
+            tracer: None,
+            recorder: None,
         }
     }
 
@@ -276,9 +294,43 @@ impl ContinuousScheduler {
     /// Attach the overload governor: watermark cascade, per-tenant
     /// quotas, DRR admission, brownout modes. Without it the scheduler
     /// behaves exactly as before.
-    pub fn with_governor(mut self, governor: PressureGovernor) -> Self {
+    pub fn with_governor(mut self, mut governor: PressureGovernor) -> Self {
+        if let Some(rc) = &self.recorder {
+            governor.set_recorder(rc.clone());
+        }
         self.governor = Some(governor);
         self
+    }
+
+    /// Attach the span tracer: every submitted request gets a span
+    /// moved through queued/prefill/decode/preempted/kv_evict/
+    /// kv_restore at the exact state-change sites, with codec bytes
+    /// and time attributed per request. Build the tracer on the same
+    /// clock as the scheduler.
+    pub fn with_tracer(mut self, tracer: Tracer) -> Self {
+        self.tracer = Some(tracer);
+        self
+    }
+
+    pub fn tracer(&self) -> Option<&Tracer> {
+        self.tracer.as_ref()
+    }
+
+    /// Attach the shared flight recorder. Preemptions, reclaim sweeps,
+    /// quota rejections, and sheds land in its ring; the governor (if
+    /// attached, in either order) records its mode transitions and
+    /// arms a postmortem on Shed entry, which [`Self::step`] flushes
+    /// at its end-of-step safe point.
+    pub fn with_recorder(mut self, recorder: Arc<FlightRecorder>) -> Self {
+        if let Some(g) = self.governor.as_mut() {
+            g.set_recorder(recorder.clone());
+        }
+        self.recorder = Some(recorder);
+        self
+    }
+
+    pub fn recorder(&self) -> Option<&Arc<FlightRecorder>> {
+        self.recorder.as_ref()
     }
 
     pub fn governor(&self) -> Option<&PressureGovernor> {
@@ -289,9 +341,14 @@ impl ContinuousScheduler {
         self.governor.as_mut()
     }
 
-    pub fn submit(&mut self, req: GenRequest) {
+    pub fn submit(&mut self, mut req: GenRequest) {
         if let Some(g) = self.governor.as_mut() {
             g.metrics.tenant(req.tenant).submitted += 1;
+        }
+        if let Some(t) = self.tracer.as_mut() {
+            // backdated to the arrival stamp so pre-submit queueing
+            // (open-loop arrival schedules) lands in the queued phase
+            req.trace = t.open_at(req.id, req.arrived);
         }
         self.waiting.push((self.submit_counter, req));
         self.submit_counter += 1;
@@ -341,9 +398,108 @@ impl ContinuousScheduler {
             .map(|(i, _)| i)
     }
 
+    // -- telemetry seams ------------------------------------------------
+    //
+    // Static (field-splitting) helpers: the governor paths hold a
+    // long-lived `&mut` on `self.governor`, so everything touching the
+    // tracer/recorder takes the disjoint fields explicitly.
+
+    /// Move a request's span into `phase` (no-op untraced).
+    fn trace_enter(tracer: &mut Option<Tracer>, ctx: Option<TraceContext>, phase: Phase) {
+        if let (Some(t), Some(ctx)) = (tracer.as_mut(), ctx) {
+            t.transition(ctx, phase);
+        }
+    }
+
+    /// Close a request's span, returning the breakdown for the
+    /// response (no-op untraced).
+    fn trace_close(tracer: &mut Option<Tracer>, ctx: Option<TraceContext>) -> Option<TraceSummary> {
+        match (tracer.as_mut(), ctx) {
+            (Some(t), Some(ctx)) => t.close(ctx),
+            _ => None,
+        }
+    }
+
+    /// Clock stamp before a KV codec call (0 untraced — unused then).
+    fn trace_now_ns(tracer: &Option<Tracer>) -> u64 {
+        tracer.as_ref().map(|t| t.now_ns()).unwrap_or(0)
+    }
+
+    /// (raw, stored) restore-direction ledger snapshot.
+    fn restore_ledger(kv: &KvCacheManager) -> (u64, u64) {
+        let s = kv.stats();
+        (s.restored_raw_bytes, s.restored_stored_bytes)
+    }
+
+    /// (raw, stored, blocks incl. shared-retained) evict-direction
+    /// ledger snapshot.
+    fn evict_ledger(kv: &KvCacheManager) -> (u64, u64, u64) {
+        let s = kv.stats();
+        (
+            s.evicted_raw_bytes,
+            s.evicted_stored_bytes,
+            s.blocks_evicted + s.shared_blocks_retained,
+        )
+    }
+
+    /// Attribute the codec work a restore-direction KV call just did
+    /// (ledger delta since `pre`) to the request's span.
+    fn attribute_restore(
+        tracer: &mut Option<Tracer>,
+        kv: &KvCacheManager,
+        ctx: Option<TraceContext>,
+        t0_ns: u64,
+        pre: (u64, u64),
+    ) {
+        let (Some(t), Some(ctx)) = (tracer.as_mut(), ctx) else {
+            return;
+        };
+        let (raw1, stored1) = Self::restore_ledger(kv);
+        if raw1 > pre.0 {
+            let ns = t.now_ns().saturating_sub(t0_ns);
+            t.codec_restore(ctx, ns, raw1 - pre.0, stored1 - pre.1);
+        }
+    }
+
+    /// Attribute the codec work an evict just did to the span.
+    fn attribute_evict(
+        tracer: &mut Option<Tracer>,
+        kv: &KvCacheManager,
+        ctx: Option<TraceContext>,
+        t0_ns: u64,
+        pre: (u64, u64, u64),
+    ) {
+        let (Some(t), Some(ctx)) = (tracer.as_mut(), ctx) else {
+            return;
+        };
+        let s = kv.stats();
+        if s.evicted_raw_bytes > pre.0 {
+            let ns = t.now_ns().saturating_sub(t0_ns);
+            t.codec_evict(
+                ctx,
+                ns,
+                s.evicted_raw_bytes - pre.0,
+                s.evicted_stored_bytes - pre.1,
+            );
+        }
+    }
+
     fn evict_running(&mut self, idx: usize) -> Result<()> {
         let mut victim = self.running.remove(idx);
+        let ctx = victim.req.trace;
+        Self::trace_enter(&mut self.tracer, ctx, Phase::KvEvict);
+        let t0 = Self::trace_now_ns(&self.tracer);
+        let pre = Self::evict_ledger(&self.kv);
         self.kv.evict(victim.req.id)?;
+        Self::attribute_evict(&mut self.tracer, &self.kv, ctx, t0, pre);
+        Self::trace_enter(&mut self.tracer, ctx, Phase::Preempted);
+        if let Some(rc) = &self.recorder {
+            let blocks = (Self::evict_ledger(&self.kv).2 - pre.2) as usize;
+            rc.record(FlightEvent::Preemption {
+                req: victim.req.id,
+                blocks,
+            });
+        }
         victim.preemptions += 1;
         self.metrics.preemptions += 1;
         self.preempted.push_back(victim);
@@ -356,13 +512,22 @@ impl ContinuousScheduler {
         g: &mut PressureGovernor,
         metrics: &mut SchedulerMetrics,
         report: &mut StepReport,
+        tracer: &mut Option<Tracer>,
+        recorder: &Option<Arc<FlightRecorder>>,
+        kind: ShedKind,
         req: &GenRequest,
         now: Instant,
     ) {
         g.metrics.shed_waiting += 1;
         g.metrics.tenant(req.tenant).shed += 1;
         metrics.rejected += 1;
-        report.responses.push(GenResponse::rejected(req, now));
+        if let Some(rc) = recorder {
+            rc.record(FlightEvent::Shed { req: req.id, kind });
+        }
+        let trace = Self::trace_close(tracer, req.trace);
+        let mut resp = GenResponse::rejected(req, now);
+        resp.trace = trace;
+        report.responses.push(resp);
     }
 
     /// Mid-generation cancellation bookkeeping: the sequence's KV was
@@ -371,6 +536,8 @@ impl ContinuousScheduler {
         g: &mut PressureGovernor,
         metrics: &mut SchedulerMetrics,
         report: &mut StepReport,
+        tracer: &mut Option<Tracer>,
+        recorder: &Option<Arc<FlightRecorder>>,
         seq: ActiveSeq,
         now: Instant,
     ) {
@@ -378,6 +545,12 @@ impl ContinuousScheduler {
         g.metrics.cancelled += 1;
         g.metrics.tenant(seq.req.tenant).cancelled += 1;
         metrics.cancelled += 1;
+        if let Some(rc) = recorder {
+            rc.record(FlightEvent::Shed {
+                req: seq.req.id,
+                kind: ShedKind::Cancelled,
+            });
+        }
         report.responses.push(GenResponse {
             id: seq.req.id,
             tokens: seq.tokens[seq.req.prompt.len()..].to_vec(),
@@ -388,6 +561,7 @@ impl ContinuousScheduler {
             latency_s: now.saturating_duration_since(seq.req.arrived).as_secs_f64(),
             preemptions: seq.preemptions,
             finish: FinishReason::Cancelled,
+            trace: Self::trace_close(tracer, seq.req.trace),
         });
     }
 
@@ -412,6 +586,9 @@ impl ContinuousScheduler {
             let freed = self.kv.reclaim_idle(target);
             g.note_reclaim(freed);
             g.reclassify(self.kv.blocks_in_use(), total);
+            if let Some(rc) = &self.recorder {
+                rc.record(FlightEvent::ReclaimSweep { target, freed });
+            }
         }
 
         // opt-in mid-generation deadline cancellation (`>=`, like every
@@ -425,7 +602,15 @@ impl ContinuousScheduler {
                     Some(d) if now >= d => {
                         let seq = self.running.remove(i);
                         self.kv.release(seq.req.id)?;
-                        Self::finish_cancel(g, &mut self.metrics, report, seq, now);
+                        Self::finish_cancel(
+                            g,
+                            &mut self.metrics,
+                            report,
+                            &mut self.tracer,
+                            &self.recorder,
+                            seq,
+                            now,
+                        );
                     }
                     _ => i += 1,
                 }
@@ -436,7 +621,15 @@ impl ContinuousScheduler {
                     Some(d) if now >= d => {
                         let seq = self.preempted.remove(i).expect("index checked");
                         self.kv.release(seq.req.id)?;
-                        Self::finish_cancel(g, &mut self.metrics, report, seq, now);
+                        Self::finish_cancel(
+                            g,
+                            &mut self.metrics,
+                            report,
+                            &mut self.tracer,
+                            &self.recorder,
+                            seq,
+                            now,
+                        );
                     }
                     _ => i += 1,
                 }
@@ -446,7 +639,16 @@ impl ContinuousScheduler {
         // rung 3 — structural shedding keeps the queue bounded
         if mode == ServeMode::Shed {
             for (_, req) in std::mem::take(&mut self.waiting) {
-                Self::shed_waiter(g, &mut self.metrics, report, &req, now);
+                Self::shed_waiter(
+                    g,
+                    &mut self.metrics,
+                    report,
+                    &mut self.tracer,
+                    &self.recorder,
+                    ShedKind::ShedMode,
+                    &req,
+                    now,
+                );
             }
         } else {
             let max_waiting = g.config().max_waiting;
@@ -464,7 +666,16 @@ impl ContinuousScheduler {
                     .map(|(i, _)| i)
                     .expect("nonempty above the bound");
                 let (_, req) = self.waiting.remove(worst);
-                Self::shed_waiter(g, &mut self.metrics, report, &req, now);
+                Self::shed_waiter(
+                    g,
+                    &mut self.metrics,
+                    report,
+                    &mut self.tracer,
+                    &self.recorder,
+                    ShedKind::QueueBound,
+                    &req,
+                    now,
+                );
             }
         }
         Ok(())
@@ -551,6 +762,9 @@ impl ContinuousScheduler {
                 if !g.quota_allows(t, need, now) {
                     g.metrics.quota_deferred += 1;
                     g.metrics.tenant(t).quota_deferred += 1;
+                    if let Some(rc) = &self.recorder {
+                        rc.record(FlightEvent::QuotaReject { tenant: t, req: req.id });
+                    }
                     break;
                 }
                 if !g.rate_peek(t, now) {
@@ -571,7 +785,11 @@ impl ContinuousScheduler {
                     req.max_new_tokens = budget;
                     g.metrics.clamped_budgets += 1;
                 }
+                let ctx = req.trace;
+                let t0 = Self::trace_now_ns(&self.tracer);
+                let pre = Self::restore_ledger(&self.kv);
                 let matched = self.kv.register_with_prefix(req.id, &req.prompt)?;
+                Self::attribute_restore(&mut self.tracer, &self.kv, ctx, t0, pre);
                 self.kv.ensure_capacity(req.id, req.prompt.len() + 1)?;
                 for &tok in &req.prompt[matched..] {
                     self.kv.write_token(req.id, tok)?;
@@ -598,6 +816,7 @@ impl ContinuousScheduler {
                 self.admit_counter += 1;
                 self.metrics.admitted += 1;
                 report.admitted += 1;
+                Self::trace_enter(&mut self.tracer, ctx, Phase::Prefill);
             }
         }
         Ok(())
@@ -618,7 +837,16 @@ impl ContinuousScheduler {
                 Some(d) if now >= d => {
                     let (_, req) = self.waiting.remove(w);
                     self.metrics.expired += 1;
-                    report.responses.push(GenResponse::expired(&req, now));
+                    if let Some(rc) = &self.recorder {
+                        rc.record(FlightEvent::Shed {
+                            req: req.id,
+                            kind: ShedKind::Expired,
+                        });
+                    }
+                    let trace = Self::trace_close(&mut self.tracer, req.trace);
+                    let mut resp = GenResponse::expired(&req, now);
+                    resp.trace = trace;
+                    report.responses.push(resp);
                 }
                 _ => w += 1,
             }
@@ -640,10 +868,21 @@ impl ContinuousScheduler {
             }
             let id = front.req.id;
             let len = front.tokens.len();
+            let ctx = front.req.trace;
+            let resumed_phase = if front.first_token_at.is_some() {
+                Phase::Decode
+            } else {
+                Phase::Prefill
+            };
             if !self.kv.resume_plan(id, len + 1)?.fits() {
                 break;
             }
+            Self::trace_enter(&mut self.tracer, ctx, Phase::KvRestore);
+            let t0 = Self::trace_now_ns(&self.tracer);
+            let pre = Self::restore_ledger(&self.kv);
             self.kv.restore(id, self.pool.as_deref())?;
+            Self::attribute_restore(&mut self.tracer, &self.kv, ctx, t0, pre);
+            Self::trace_enter(&mut self.tracer, ctx, resumed_phase);
             self.kv.ensure_capacity(id, len + 1)?;
             let seq = self.preempted.pop_front().expect("front checked");
             self.running.push(seq);
@@ -671,7 +910,11 @@ impl ContinuousScheduler {
                 break;
             }
             let (_, req) = self.waiting.remove(i);
+            let ctx = req.trace;
+            let t0 = Self::trace_now_ns(&self.tracer);
+            let pre = Self::restore_ledger(&self.kv);
             let matched = self.kv.register_with_prefix(req.id, &req.prompt)?;
+            Self::attribute_restore(&mut self.tracer, &self.kv, ctx, t0, pre);
             self.kv.ensure_capacity(req.id, req.prompt.len() + 1)?;
             for &t in &req.prompt[matched..] {
                 self.kv.write_token(req.id, t)?;
@@ -698,6 +941,7 @@ impl ContinuousScheduler {
             self.admit_counter += 1;
             self.metrics.admitted += 1;
             report.admitted += 1;
+            Self::trace_enter(&mut self.tracer, ctx, Phase::Prefill);
         }
 
         // 3. grow every survivor by one token of capacity, preempting
@@ -733,6 +977,7 @@ impl ContinuousScheduler {
 
         // 4. one ragged iteration over the survivors
         if self.running.is_empty() {
+            self.step_epilogue();
             return Ok(report);
         }
         let batch = IterationBatch {
@@ -781,6 +1026,10 @@ impl ContinuousScheduler {
                     self.metrics
                         .ttft
                         .record(now.saturating_duration_since(seq.req.arrived).as_secs_f64());
+                    // first token: prefill is paid for, the span decodes
+                    // from here on
+                    let ctx = seq.req.trace;
+                    Self::trace_enter(&mut self.tracer, ctx, Phase::Decode);
                 }
                 Some(_) => {
                     self.metrics
@@ -808,13 +1057,29 @@ impl ContinuousScheduler {
                     latency_s: now.saturating_duration_since(seq.req.arrived).as_secs_f64(),
                     preemptions: seq.preemptions,
                     finish: FinishReason::Completed,
+                    trace: Self::trace_close(&mut self.tracer, seq.req.trace),
                 });
             } else {
                 idx += 1;
             }
         }
         self.metrics.peak_running = self.metrics.peak_running.max(report.ran);
+        self.step_epilogue();
         Ok(report)
+    }
+
+    /// Per-step telemetry settlement, run on every `step` exit path:
+    /// refresh the prefix-tier census gauges (satellite of the tier
+    /// census that `kv-sim` alone used to see) and flush any armed
+    /// flight-recorder dump *after* this step's consequences (shed
+    /// responses, preemptions) landed in the ring.
+    fn step_epilogue(&mut self) {
+        if let Some(census) = self.kv.prefix_census() {
+            self.metrics.record_census(&census);
+        }
+        if let Some(rc) = &self.recorder {
+            rc.flush(); // no-op unless a dump is armed
+        }
     }
 
     /// Drive [`Self::step`] until nothing is queued, surfacing a stall
@@ -943,6 +1208,7 @@ pub fn run_static<E: IterationEngine>(
                             .as_secs_f64(),
                         preemptions: 0,
                         finish: FinishReason::Completed,
+                        trace: None,
                     });
                 }
             }

@@ -36,7 +36,9 @@
 //! `sim_pressure.py` verify port — are exact.
 
 use crate::coordinator::metrics::LatencyHistogram;
+use crate::telemetry::recorder::{DumpReason, FlightEvent, FlightRecorder};
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Tenant identity carried by requests. Tenant 0 is the default for
@@ -490,6 +492,9 @@ pub struct PressureGovernor {
     rr_cursor: u64,
     last_observe: Instant,
     pub metrics: PressureMetrics,
+    /// shared flight recorder: mode transitions land in its ring, and
+    /// entering Shed arms the overload postmortem
+    recorder: Option<Arc<FlightRecorder>>,
 }
 
 impl PressureGovernor {
@@ -506,7 +511,14 @@ impl PressureGovernor {
             rr_cursor: 0,
             last_observe: now,
             metrics: PressureMetrics::default(),
+            recorder: None,
         }
+    }
+
+    /// Attach the shared flight recorder (the scheduler hands its own
+    /// down via `with_recorder` / `with_governor`, in either order).
+    pub fn set_recorder(&mut self, recorder: Arc<FlightRecorder>) {
+        self.recorder = Some(recorder);
     }
 
     pub fn config(&self) -> &PressureConfig {
@@ -556,6 +568,23 @@ impl PressureGovernor {
         let mode = self.machine.observe(occ, now);
         if mode != before {
             self.metrics.mode_changes += 1;
+            if let Some(rc) = &self.recorder {
+                rc.record(FlightEvent::ModeTransition {
+                    from: before,
+                    to: mode,
+                    level: self.level,
+                    occupancy: occ,
+                    used_blocks: used,
+                    total_blocks: total,
+                });
+                if mode == ServeMode::Shed {
+                    // arm the overload postmortem: the scheduler's
+                    // end-of-step safe point flushes it *after* the
+                    // shed drain this transition causes has been
+                    // recorded, so the dump shows cause and effect
+                    rc.trigger(DumpReason::ShedEntry);
+                }
+            }
         }
         (self.level, mode)
     }

@@ -21,6 +21,7 @@ use crate::codec::container::{self, shard_file_name, TensorIndex, INDEX_FILE};
 use crate::coordinator::metrics::SharedScrubMetrics;
 use crate::model::store::{repair_scan, QuarantinedRecord, RepairReport};
 use crate::scheduler::Clock;
+use crate::telemetry::recorder::{DumpReason, FlightEvent, FlightRecorder};
 use crate::util::crc32::crc32;
 use anyhow::{Context, Result};
 use std::ops::Range;
@@ -450,6 +451,21 @@ impl Scrubber {
         clock: Arc<dyn Clock>,
         metrics: SharedScrubMetrics,
     ) -> Self {
+        Self::spawn_with_recorder(dir, cfg, clock, metrics, None)
+    }
+
+    /// Like [`Self::spawn`], with a shared flight recorder: every pass
+    /// that touched damage records a `Repair` event, and a pass that
+    /// left anything unrecoverable dumps a postmortem on the spot (the
+    /// scrubber loop is its own safe point — the pass is fully
+    /// bookkept when it triggers).
+    pub fn spawn_with_recorder(
+        dir: PathBuf,
+        cfg: ScrubConfig,
+        clock: Arc<dyn Clock>,
+        metrics: SharedScrubMetrics,
+        recorder: Option<Arc<FlightRecorder>>,
+    ) -> Self {
         let stop = StopFlag::new();
         let (stop2, metrics2) = (Arc::clone(&stop), metrics.clone());
         let handle = thread::Builder::new()
@@ -466,6 +482,20 @@ impl Scrubber {
                         report.unrecoverable.len() as u64,
                         report.duration.as_secs_f64(),
                     );
+                    if let Some(rc) = &recorder {
+                        let repaired = report.repaired.len() as u64;
+                        let unrecoverable = report.unrecoverable.len() as u64;
+                        if repaired > 0 || unrecoverable > 0 {
+                            rc.record(FlightEvent::Repair {
+                                repaired,
+                                unrecoverable,
+                            });
+                        }
+                        if unrecoverable > 0 {
+                            rc.trigger(DumpReason::UnrecoverableRepair);
+                            rc.flush();
+                        }
+                    }
                     passes += 1;
                     if stop2.raised() || cfg.max_passes.is_some_and(|m| passes >= m) {
                         return Ok(());

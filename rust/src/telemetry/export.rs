@@ -1,0 +1,159 @@
+//! Registry exporters: Prometheus text format and a JSON snapshot.
+//!
+//! Both are hand-rolled (the crate carries no serde) and byte-stable:
+//! the registry iterates name-ordered, floats render via Rust's
+//! shortest-round-trip `Display`, and non-finite values clamp to 0 —
+//! so the golden-output tests can compare whole documents.
+//!
+//! Prometheus mapping: counters and gauges become `ecf8_<name>` with a
+//! `# TYPE` line; a histogram becomes a `summary` (`{quantile="0.5"}`
+//! / `{quantile="0.99"}` series plus `_sum`/`_count`) and an `_max`
+//! gauge, matching how [`super::registry::HistogramSnapshot`]
+//! quantises [`crate::coordinator::LatencyHistogram`]'s log₂ buckets.
+
+use super::registry::{Metric, MetricsRegistry};
+
+/// Render an f64 deterministically; non-finite clamps to 0.
+fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+/// Prometheus text exposition of the registry, `ecf8_`-prefixed.
+pub fn prometheus(reg: &MetricsRegistry) -> String {
+    let mut out = String::new();
+    for (name, metric) in reg.iter() {
+        match metric {
+            Metric::Counter(v) => {
+                out.push_str(&format!("# TYPE ecf8_{name} counter\n"));
+                out.push_str(&format!("ecf8_{name} {v}\n"));
+            }
+            Metric::Gauge(v) => {
+                out.push_str(&format!("# TYPE ecf8_{name} gauge\n"));
+                out.push_str(&format!("ecf8_{name} {}\n", num(*v)));
+            }
+            Metric::Histogram(h) => {
+                out.push_str(&format!("# TYPE ecf8_{name} summary\n"));
+                out.push_str(&format!(
+                    "ecf8_{name}{{quantile=\"0.5\"}} {}\n",
+                    num(h.p50_s)
+                ));
+                out.push_str(&format!(
+                    "ecf8_{name}{{quantile=\"0.99\"}} {}\n",
+                    num(h.p99_s)
+                ));
+                out.push_str(&format!("ecf8_{name}_sum {}\n", num(h.sum_s)));
+                out.push_str(&format!("ecf8_{name}_count {}\n", h.count));
+                out.push_str(&format!("# TYPE ecf8_{name}_max gauge\n"));
+                out.push_str(&format!("ecf8_{name}_max {}\n", num(h.max_s)));
+            }
+        }
+    }
+    out
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// One-line JSON snapshot:
+/// `{"counters":{...},"gauges":{...},"histograms":{...}}` with each
+/// section name-ordered. Suitable as a `--health-log` line.
+pub fn json(reg: &MetricsRegistry) -> String {
+    let mut counters = Vec::new();
+    let mut gauges = Vec::new();
+    let mut histograms = Vec::new();
+    for (name, metric) in reg.iter() {
+        let key = json_escape(name);
+        match metric {
+            Metric::Counter(v) => counters.push(format!("\"{key}\":{v}")),
+            Metric::Gauge(v) => gauges.push(format!("\"{key}\":{}", num(*v))),
+            Metric::Histogram(h) => histograms.push(format!(
+                "\"{key}\":{{\"count\":{},\"sum_s\":{},\"p50_s\":{},\"p99_s\":{},\"max_s\":{}}}",
+                h.count,
+                num(h.sum_s),
+                num(h.p50_s),
+                num(h.p99_s),
+                num(h.max_s),
+            )),
+        }
+    }
+    format!(
+        "{{\"counters\":{{{}}},\"gauges\":{{{}}},\"histograms\":{{{}}}}}",
+        counters.join(","),
+        gauges.join(","),
+        histograms.join(","),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::LatencyHistogram;
+
+    fn golden_registry() -> MetricsRegistry {
+        let mut reg = MetricsRegistry::new();
+        reg.counter("scheduler_admitted", 12);
+        reg.gauge("pressure_occupancy", 0.75);
+        let mut h = LatencyHistogram::default();
+        h.record(0.001);
+        h.record(0.001);
+        reg.histogram("scheduler_ttft_seconds", &h);
+        reg
+    }
+
+    #[test]
+    fn prometheus_golden_output() {
+        let expected = "\
+# TYPE ecf8_pressure_occupancy gauge
+ecf8_pressure_occupancy 0.75
+# TYPE ecf8_scheduler_admitted counter
+ecf8_scheduler_admitted 12
+# TYPE ecf8_scheduler_ttft_seconds summary
+ecf8_scheduler_ttft_seconds{quantile=\"0.5\"} 0.001024
+ecf8_scheduler_ttft_seconds{quantile=\"0.99\"} 0.001024
+ecf8_scheduler_ttft_seconds_sum 0.002
+ecf8_scheduler_ttft_seconds_count 2
+# TYPE ecf8_scheduler_ttft_seconds_max gauge
+ecf8_scheduler_ttft_seconds_max 0.001
+";
+        assert_eq!(prometheus(&golden_registry()), expected);
+    }
+
+    #[test]
+    fn json_golden_output() {
+        let expected = "{\"counters\":{\"scheduler_admitted\":12},\
+\"gauges\":{\"pressure_occupancy\":0.75},\
+\"histograms\":{\"scheduler_ttft_seconds\":{\"count\":2,\"sum_s\":0.002,\
+\"p50_s\":0.001024,\"p99_s\":0.001024,\"max_s\":0.001}}}";
+        assert_eq!(json(&golden_registry()), expected);
+    }
+
+    #[test]
+    fn json_snapshot_is_single_line_and_stable() {
+        let a = json(&golden_registry());
+        let b = json(&golden_registry());
+        assert_eq!(a, b);
+        assert!(!a.contains('\n'));
+    }
+
+    #[test]
+    fn non_finite_values_clamp() {
+        let mut reg = MetricsRegistry::new();
+        reg.gauge("bad", f64::NAN);
+        assert!(prometheus(&reg).contains("ecf8_bad 0\n"));
+        assert!(json(&reg).contains("\"bad\":0"));
+    }
+}

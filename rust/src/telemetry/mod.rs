@@ -1,0 +1,47 @@
+//! The telemetry spine: span tracing, the unified metrics registry,
+//! and the flight recorder.
+//!
+//! The paper's headline claims are *measured* claims — memory savings
+//! and throughput with bit-exact outputs — so the serving stack has
+//! to be able to answer "where did this request's time go?" and "what
+//! was the governor doing just before it shed the queue?". Three
+//! cooperating pieces:
+//!
+//! * [`span`] — per-request phase tracing. The scheduler carries a
+//!   [`TraceContext`] on each `GenRequest` and moves its span through
+//!   queued → prefill → decode (→ kv_evict → preempted → kv_restore
+//!   …) with nanosecond stamps from the injected
+//!   [`crate::scheduler::Clock`]. Phase sums equal end-to-end latency
+//!   by construction, and codec bytes/time are attributed per span —
+//!   a live measurement of the paper's §3.2
+//!   compression-vs-throughput tradeoff. Fixed-size arena: zero heap
+//!   in the hot path.
+//! * [`registry`] — one typed counter/gauge/histogram namespace the
+//!   five pre-existing metrics structs snapshot onto via one-way
+//!   adapters, exported by [`export`] as Prometheus text or a JSON
+//!   line (`ecf8 stats`, `ecf8 serve --metrics`, `--health-log`).
+//! * [`recorder`] — a lock-light fixed-capacity ring of structured
+//!   [`FlightEvent`]s shared by governor, scheduler, supervisor, and
+//!   scrubber. On Shed entry, a watchdog restart, or an unrecoverable
+//!   repair it arms a dump; the owner's next safe point flushes a
+//!   bounded [`Postmortem`] — the overload postmortem that the old
+//!   write-only health-log line stream could not provide.
+//!
+//! Everything is deterministic under [`crate::scheduler::SimClock`],
+//! so `ecf8 trace-sim` and the verify port replay identical event
+//! sequences from a seed.
+
+pub mod export;
+pub mod recorder;
+pub mod registry;
+pub mod span;
+
+pub use export::{json, prometheus};
+pub use recorder::{
+    DumpReason, FlightEvent, FlightRecord, FlightRecorder, Postmortem, ShedKind,
+};
+pub use registry::{HistogramSnapshot, Metric, MetricsRegistry};
+pub use span::{
+    CodecTally, Phase, SpanEvent, SpanKind, TraceAggregate, TraceContext, TraceSummary, Tracer,
+    NUM_PHASES,
+};

@@ -1,0 +1,443 @@
+//! The flight recorder: "what was the system doing in the moments
+//! before it went wrong?"
+//!
+//! A fixed-capacity ring of structured [`FlightEvent`]s — mode
+//! transitions, preemptions, reclaim sweeps, quota rejections, sheds,
+//! repairs, watchdog restarts — recorded by the governor, scheduler,
+//! supervisor, and scrubber through one shared handle. Recording is
+//! lock-light (one short mutexed ring write; events are rare relative
+//! to tokens) and never allocates after construction except when a
+//! postmortem is actually dumped.
+//!
+//! Dumps are two-step on purpose. A fault site calls
+//! [`FlightRecorder::trigger`] (Shed entry, watchdog restart,
+//! `Unrecoverable` repair); the owning loop calls
+//! [`FlightRecorder::flush`] at its next safe point — *after* the
+//! consequences of the fault (the shed drain, the restart bookkeeping)
+//! have been recorded — so the postmortem contains both the history
+//! leading up to the trigger and the damage it caused. The first
+//! trigger wins until flushed; later triggers before the flush are
+//! coalesced into the same postmortem.
+//!
+//! Each [`Postmortem`] is bounded by the ring capacity, kept in memory
+//! for tests/CLI retrieval, and — when a dump directory is configured —
+//! written to `postmortem-<seq>.log` as rendered text.
+
+use crate::scheduler::{Clock, PressureLevel, ServeMode, TenantId};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Why a shed-class event happened.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedKind {
+    /// waiting queue exceeded the governor's bound
+    QueueBound,
+    /// structural shed: governor in Shed mode drained the queue
+    ShedMode,
+    /// deadline passed while waiting
+    Expired,
+    /// running/preempted sequence cancelled past its deadline
+    Cancelled,
+}
+
+impl ShedKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ShedKind::QueueBound => "queue_bound",
+            ShedKind::ShedMode => "shed_mode",
+            ShedKind::Expired => "expired",
+            ShedKind::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// One structured ring entry. Fixed-size payloads only — no strings,
+/// no heap — so recording is a plain copy.
+#[derive(Debug, Clone, Copy)]
+pub enum FlightEvent {
+    /// the governor's hysteretic mode machine moved, with the
+    /// occupancy observation that moved it
+    ModeTransition {
+        from: ServeMode,
+        to: ServeMode,
+        level: PressureLevel,
+        occupancy: f64,
+        used_blocks: usize,
+        total_blocks: usize,
+    },
+    /// a running sequence was evicted under block pressure
+    Preemption { req: u64, blocks: usize },
+    /// proactive idle-block reclaim sweep
+    ReclaimSweep { target: usize, freed: usize },
+    /// admission deferred by a tenant KV-block quota
+    QuotaReject { tenant: TenantId, req: u64 },
+    /// a request was shed / expired / cancelled
+    Shed { req: u64, kind: ShedKind },
+    /// one scrub pass's repair outcome
+    Repair { repaired: u64, unrecoverable: u64 },
+    /// the supervisor watchdog restarted a stage
+    WatchdogRestart { stage: usize, restarts: u64 },
+}
+
+impl FlightEvent {
+    /// One bounded text line (postmortem rendering).
+    pub fn render(&self) -> String {
+        match self {
+            FlightEvent::ModeTransition {
+                from,
+                to,
+                level,
+                occupancy,
+                used_blocks,
+                total_blocks,
+            } => format!(
+                "mode {from:?} -> {to:?} (level {level:?}, occupancy {:.3}, {used_blocks}/{total_blocks} blocks)",
+                occupancy
+            ),
+            FlightEvent::Preemption { req, blocks } => {
+                format!("preempt req {req} ({blocks} blocks evicted)")
+            }
+            FlightEvent::ReclaimSweep { target, freed } => {
+                format!("reclaim sweep target {target} freed {freed}")
+            }
+            FlightEvent::QuotaReject { tenant, req } => {
+                format!("quota reject tenant {tenant} req {req}")
+            }
+            FlightEvent::Shed { req, kind } => format!("shed req {req} ({})", kind.name()),
+            FlightEvent::Repair {
+                repaired,
+                unrecoverable,
+            } => format!("repair pass: {repaired} repaired, {unrecoverable} unrecoverable"),
+            FlightEvent::WatchdogRestart { stage, restarts } => {
+                format!("watchdog restart stage {stage} (restart #{restarts})")
+            }
+        }
+    }
+}
+
+/// A stamped ring entry.
+#[derive(Debug, Clone, Copy)]
+pub struct FlightRecord {
+    /// nanoseconds since the recorder's origin instant
+    pub at_ns: u64,
+    pub event: FlightEvent,
+}
+
+/// What tripped a postmortem dump.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DumpReason {
+    /// governor entered Shed mode
+    ShedEntry,
+    /// supervisor watchdog restarted a stage
+    WatchdogRestart,
+    /// a scrub pass quarantined unrecoverable records
+    UnrecoverableRepair,
+}
+
+impl DumpReason {
+    pub fn name(self) -> &'static str {
+        match self {
+            DumpReason::ShedEntry => "shed_entry",
+            DumpReason::WatchdogRestart => "watchdog_restart",
+            DumpReason::UnrecoverableRepair => "unrecoverable_repair",
+        }
+    }
+}
+
+/// One flushed dump: the ring contents (oldest first) at flush time.
+#[derive(Debug, Clone)]
+pub struct Postmortem {
+    /// dump ordinal (0-based) within this recorder's lifetime
+    pub seq: u64,
+    pub reason: DumpReason,
+    /// trigger stamp, nanoseconds since recorder origin
+    pub at_ns: u64,
+    /// events recorded before the ring's retention window
+    pub dropped: u64,
+    pub events: Vec<FlightRecord>,
+}
+
+impl Postmortem {
+    /// Bounded human-readable report (≤ ring capacity + header lines).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "postmortem #{} reason={} at {} ns ({} events retained, {} older dropped)\n",
+            self.seq,
+            self.reason.name(),
+            self.at_ns,
+            self.events.len(),
+            self.dropped,
+        );
+        for rec in &self.events {
+            out.push_str(&format!("  [{:>12} ns] {}\n", rec.at_ns, rec.event.render()));
+        }
+        out
+    }
+}
+
+struct Inner {
+    ring: Vec<FlightRecord>,
+    head: usize,
+    total: u64,
+    pending: Option<(DumpReason, u64)>,
+    dumps: Vec<Postmortem>,
+    dump_seq: u64,
+    dump_dir: Option<PathBuf>,
+}
+
+/// The shared recorder handle. Clone the `Arc` into every subsystem
+/// that should contribute events.
+pub struct FlightRecorder {
+    clock: Arc<dyn Clock>,
+    origin: Instant,
+    capacity: usize,
+    inner: Mutex<Inner>,
+}
+
+impl std::fmt::Debug for FlightRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let inner = self.inner.lock().unwrap();
+        f.debug_struct("FlightRecorder")
+            .field("capacity", &self.capacity)
+            .field("total", &inner.total)
+            .field("dumps", &inner.dumps.len())
+            .finish()
+    }
+}
+
+impl FlightRecorder {
+    pub fn new(clock: Arc<dyn Clock>, capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        let origin = clock.now();
+        FlightRecorder {
+            clock,
+            origin,
+            capacity,
+            inner: Mutex::new(Inner {
+                ring: Vec::with_capacity(capacity),
+                head: 0,
+                total: 0,
+                pending: None,
+                dumps: Vec::new(),
+                dump_seq: 0,
+                dump_dir: None,
+            }),
+        }
+    }
+
+    /// Write flushed postmortems to `<dir>/postmortem-<seq>.log` as
+    /// well as keeping them in memory. Best-effort: I/O failures are
+    /// reported to stderr, never propagated into serving.
+    pub fn set_dump_dir(&self, dir: PathBuf) {
+        self.inner.lock().unwrap().dump_dir = Some(dir);
+    }
+
+    /// Nanoseconds since the recorder's origin, per the injected clock.
+    pub fn now_ns(&self) -> u64 {
+        self.clock
+            .now()
+            .checked_duration_since(self.origin)
+            .unwrap_or_default()
+            .as_nanos() as u64
+    }
+
+    /// Append one event to the ring (overwriting the oldest when full).
+    pub fn record(&self, event: FlightEvent) {
+        let at_ns = self.now_ns();
+        let mut inner = self.inner.lock().unwrap();
+        let rec = FlightRecord { at_ns, event };
+        if inner.ring.len() < self.capacity {
+            inner.ring.push(rec);
+        } else {
+            let head = inner.head;
+            inner.ring[head] = rec;
+            inner.head = (head + 1) % self.capacity;
+        }
+        inner.total += 1;
+    }
+
+    /// Arm a dump. The first un-flushed trigger wins; the postmortem
+    /// is actually captured by the next [`flush`](Self::flush).
+    pub fn trigger(&self, reason: DumpReason) {
+        let at_ns = self.now_ns();
+        let mut inner = self.inner.lock().unwrap();
+        if inner.pending.is_none() {
+            inner.pending = Some((reason, at_ns));
+        }
+    }
+
+    /// Reason of the armed dump, if any.
+    pub fn pending(&self) -> Option<DumpReason> {
+        self.inner.lock().unwrap().pending.map(|(r, _)| r)
+    }
+
+    /// Capture the armed postmortem, if any: snapshot the ring
+    /// (oldest first), store it, write it to the dump directory when
+    /// configured, and disarm. Call from a safe point *after* the
+    /// fault's consequences have been recorded.
+    pub fn flush(&self) -> Option<Postmortem> {
+        let mut inner = self.inner.lock().unwrap();
+        let (reason, at_ns) = inner.pending.take()?;
+        let mut events = Vec::with_capacity(inner.ring.len());
+        events.extend_from_slice(&inner.ring[inner.head..]);
+        events.extend_from_slice(&inner.ring[..inner.head]);
+        let pm = Postmortem {
+            seq: inner.dump_seq,
+            reason,
+            at_ns,
+            dropped: inner.total - events.len() as u64,
+            events,
+        };
+        inner.dump_seq += 1;
+        if let Some(dir) = inner.dump_dir.clone() {
+            let path = dir.join(format!("postmortem-{}.log", pm.seq));
+            if let Err(e) = std::fs::write(&path, pm.render()) {
+                eprintln!("flight recorder: failed to write {}: {e}", path.display());
+            }
+        }
+        inner.dumps.push(pm.clone());
+        Some(pm)
+    }
+
+    /// Events recorded over the recorder's lifetime (including
+    /// overwritten ones).
+    pub fn total(&self) -> u64 {
+        self.inner.lock().unwrap().total
+    }
+
+    /// Events currently retained in the ring.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Ring contents, oldest first, without disturbing the ring.
+    pub fn snapshot(&self) -> Vec<FlightRecord> {
+        let inner = self.inner.lock().unwrap();
+        let mut out = Vec::with_capacity(inner.ring.len());
+        out.extend_from_slice(&inner.ring[inner.head..]);
+        out.extend_from_slice(&inner.ring[..inner.head]);
+        out
+    }
+
+    /// Postmortems flushed so far.
+    pub fn dumps(&self) -> Vec<Postmortem> {
+        self.inner.lock().unwrap().dumps.clone()
+    }
+
+    pub fn dump_count(&self) -> u64 {
+        self.inner.lock().unwrap().dump_seq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::SimClock;
+    use std::time::Duration;
+
+    fn rec(cap: usize) -> (Arc<SimClock>, FlightRecorder) {
+        let clock = SimClock::new();
+        let r = FlightRecorder::new(clock.clone(), cap);
+        (clock, r)
+    }
+
+    #[test]
+    fn ring_wraps_keeping_newest_in_order() {
+        let (clock, r) = rec(4);
+        for i in 0..10u64 {
+            r.record(FlightEvent::Shed {
+                req: i,
+                kind: ShedKind::Expired,
+            });
+            clock.advance(Duration::from_micros(1));
+        }
+        assert_eq!(r.total(), 10);
+        assert_eq!(r.len(), 4);
+        let snap = r.snapshot();
+        let reqs: Vec<u64> = snap
+            .iter()
+            .map(|rc| match rc.event {
+                FlightEvent::Shed { req, .. } => req,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(reqs, vec![6, 7, 8, 9], "oldest-first, newest retained");
+        for w in snap.windows(2) {
+            assert!(w[0].at_ns <= w[1].at_ns);
+        }
+    }
+
+    #[test]
+    fn flush_without_trigger_is_none() {
+        let (_clock, r) = rec(4);
+        r.record(FlightEvent::ReclaimSweep {
+            target: 8,
+            freed: 3,
+        });
+        assert!(r.flush().is_none());
+        assert_eq!(r.dump_count(), 0);
+    }
+
+    #[test]
+    fn trigger_then_flush_captures_post_trigger_events_too() {
+        let (clock, r) = rec(8);
+        r.record(FlightEvent::ModeTransition {
+            from: ServeMode::Brownout,
+            to: ServeMode::Shed,
+            level: PressureLevel::Critical,
+            occupancy: 0.97,
+            used_blocks: 62,
+            total_blocks: 64,
+        });
+        r.trigger(DumpReason::ShedEntry);
+        clock.advance(Duration::from_millis(1));
+        // the shed drain lands *after* the trigger but before the flush
+        r.record(FlightEvent::Shed {
+            req: 41,
+            kind: ShedKind::ShedMode,
+        });
+        let pm = r.flush().expect("armed dump must flush");
+        assert_eq!(pm.reason, DumpReason::ShedEntry);
+        assert_eq!(pm.events.len(), 2);
+        let text = pm.render();
+        assert!(text.contains("mode Brownout -> Shed"));
+        assert!(text.contains("occupancy 0.970"));
+        assert!(text.contains("shed req 41 (shed_mode)"));
+        assert!(r.flush().is_none(), "flush disarms");
+        assert_eq!(r.dump_count(), 1);
+        assert_eq!(r.dumps().len(), 1);
+    }
+
+    #[test]
+    fn first_trigger_wins_until_flushed() {
+        let (_clock, r) = rec(4);
+        r.trigger(DumpReason::WatchdogRestart);
+        r.trigger(DumpReason::ShedEntry);
+        assert_eq!(r.pending(), Some(DumpReason::WatchdogRestart));
+        let pm = r.flush().unwrap();
+        assert_eq!(pm.reason, DumpReason::WatchdogRestart);
+        r.trigger(DumpReason::ShedEntry);
+        assert_eq!(r.flush().unwrap().reason, DumpReason::ShedEntry);
+    }
+
+    #[test]
+    fn dump_counts_older_dropped_events() {
+        let (_clock, r) = rec(2);
+        for i in 0..5u64 {
+            r.record(FlightEvent::Preemption {
+                req: i,
+                blocks: 1,
+            });
+        }
+        r.trigger(DumpReason::UnrecoverableRepair);
+        let pm = r.flush().unwrap();
+        assert_eq!(pm.events.len(), 2);
+        assert_eq!(pm.dropped, 3);
+        assert!(pm.render().contains("3 older dropped"));
+    }
+}

@@ -1,0 +1,447 @@
+//! The unified metrics registry: one namespace, three metric kinds,
+//! deterministic iteration order.
+//!
+//! The repo grew five disjoint metrics structs ([`PipelineMetrics`],
+//! [`SchedulerMetrics`], [`PressureMetrics`], [`ScrubMetrics`],
+//! [`HealthReport`]) with five private `render()` formats. This
+//! module does not replace them — they stay the source of truth their
+//! subsystems mutate — it gives them one *export* surface: each
+//! struct re-registers onto a [`MetricsRegistry`] through a one-way
+//! `register_*` adapter (a pure snapshot copy, no behavioral change),
+//! and the two exporters in [`super::export`] render the registry as
+//! Prometheus text or a JSON snapshot.
+//!
+//! Entries are typed: a name is a counter, a gauge, or a histogram
+//! forever. Re-registering the same name with a different kind is a
+//! programming error and panics, so the export schema cannot drift
+//! silently between snapshots. Names are `BTreeMap`-ordered, so two
+//! snapshots of the same state render byte-identically — which is
+//! what the golden-output tests and the verify port key on.
+
+use crate::coordinator::{
+    HealthReport, LatencyHistogram, PipelineMetrics, SchedulerMetrics, ScrubMetrics,
+};
+use crate::scheduler::{
+    KvStats, PressureLevel, PressureMetrics, PrefixStats, ServeMode, TierCensus,
+};
+use crate::telemetry::recorder::FlightRecorder;
+use crate::telemetry::span::{Phase, Tracer};
+use std::collections::BTreeMap;
+
+/// Constant-size histogram snapshot: count, sum, and the quantiles
+/// the renderers report (taken from [`LatencyHistogram`]'s log₂
+/// buckets, so p50/p99 are upper bucket edges, exact to 2×).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub max_s: f64,
+}
+
+impl HistogramSnapshot {
+    pub fn of(h: &LatencyHistogram) -> Self {
+        HistogramSnapshot {
+            count: h.count(),
+            sum_s: h.mean_s() * h.count() as f64,
+            p50_s: h.quantile_s(0.50),
+            p99_s: h.quantile_s(0.99),
+            max_s: h.max_s(),
+        }
+    }
+}
+
+/// One registered metric.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Metric {
+    /// monotone event count
+    Counter(u64),
+    /// instantaneous level
+    Gauge(f64),
+    Histogram(HistogramSnapshot),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+/// The registry: a flat, ordered name → metric map rebuilt per
+/// snapshot (`register_*` then export), so exporters never race the
+/// subsystems that own the underlying counters.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    metrics: BTreeMap<String, Metric>,
+}
+
+/// Lowercase a metric-name fragment into `[a-z0-9_]+` (stage names,
+/// codec labels, tenant ids all pass through here).
+pub fn sanitize(fragment: &str) -> String {
+    fragment
+        .chars()
+        .map(|c| match c {
+            'a'..='z' | '0'..='9' | '_' => c,
+            'A'..='Z' => c.to_ascii_lowercase(),
+            _ => '_',
+        })
+        .collect()
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn set(&mut self, name: &str, metric: Metric) {
+        if let Some(prev) = self.metrics.get(name) {
+            assert!(
+                prev.kind() == metric.kind(),
+                "metric {name} re-registered as {} (was {})",
+                metric.kind(),
+                prev.kind(),
+            );
+        }
+        self.metrics.insert(name.to_string(), metric);
+    }
+
+    /// Register/overwrite a counter.
+    pub fn counter(&mut self, name: &str, value: u64) {
+        self.set(name, Metric::Counter(value));
+    }
+
+    /// Register/overwrite a gauge.
+    pub fn gauge(&mut self, name: &str, value: f64) {
+        self.set(name, Metric::Gauge(value));
+    }
+
+    /// Register/overwrite a histogram snapshot.
+    pub fn histogram(&mut self, name: &str, h: &LatencyHistogram) {
+        self.set(name, Metric::Histogram(HistogramSnapshot::of(h)));
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Metric> {
+        self.metrics.get(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.metrics.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.metrics.is_empty()
+    }
+
+    /// Name-ordered iteration (the exporters' only read path).
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Metric)> {
+        self.metrics.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    // -- one-way adapters -------------------------------------------------
+
+    /// Continuous-scheduler counters + TTFT/TPOT histograms, including
+    /// the prefix tier-census gauges.
+    pub fn register_scheduler(&mut self, m: &SchedulerMetrics) {
+        self.counter("scheduler_iterations", m.iterations);
+        self.counter("scheduler_tokens_generated", m.tokens_generated);
+        self.counter("scheduler_admitted", m.admitted);
+        self.counter("scheduler_finished", m.finished);
+        self.counter("scheduler_expired", m.expired);
+        self.counter("scheduler_rejected", m.rejected);
+        self.counter("scheduler_cancelled", m.cancelled);
+        self.counter("scheduler_preemptions", m.preemptions);
+        self.counter("scheduler_resumes", m.resumes);
+        self.counter("scheduler_prefix_lookups", m.prefix_lookups);
+        self.counter("scheduler_prefix_hits", m.prefix_hits);
+        self.counter("scheduler_saved_prefill_tokens", m.saved_prefill_tokens);
+        self.gauge("scheduler_occupancy", m.occupancy());
+        self.gauge("scheduler_peak_running", m.peak_running as f64);
+        self.gauge("scheduler_prefix_hit_rate", m.prefix_hit_rate());
+        self.gauge("scheduler_tier_hot_nodes", m.tier_hot_nodes as f64);
+        self.gauge(
+            "scheduler_tier_compressed_nodes",
+            m.tier_compressed_nodes as f64,
+        );
+        self.gauge(
+            "scheduler_tier_compressed_bytes",
+            m.tier_compressed_bytes as f64,
+        );
+        self.gauge("scheduler_tier_pinned_nodes", m.tier_pinned_nodes as f64);
+        self.histogram("scheduler_ttft_seconds", &m.ttft);
+        self.histogram("scheduler_tpot_seconds", &m.tpot);
+    }
+
+    /// Pipelined-coordinator per-stage histograms and queue depths.
+    pub fn register_pipeline(&mut self, m: &PipelineMetrics) {
+        for (name, stage) in [
+            ("admission", m.admission.snapshot()),
+            ("decode", m.decode.snapshot()),
+            ("execute", m.execute.snapshot()),
+        ] {
+            self.counter(&format!("pipeline_{name}_events"), stage.events);
+            self.gauge(
+                &format!("pipeline_{name}_queue_depth_peak"),
+                stage.queue_depth_peak as f64,
+            );
+            self.histogram(&format!("pipeline_{name}_seconds"), &stage.latency);
+        }
+    }
+
+    /// Overload-governor cascade counters, mode/level, dwell times,
+    /// and per-tenant counters.
+    pub fn register_pressure(&mut self, m: &PressureMetrics, level: PressureLevel, mode: ServeMode) {
+        self.gauge("pressure_occupancy", m.occupancy);
+        self.gauge("pressure_peak_occupancy", m.peak_occupancy);
+        let level_rung = match level {
+            PressureLevel::Low => 0.0,
+            PressureLevel::High => 1.0,
+            PressureLevel::Critical => 2.0,
+        };
+        let mode_rung = match mode {
+            ServeMode::Normal => 0.0,
+            ServeMode::Brownout => 1.0,
+            ServeMode::Shed => 2.0,
+        };
+        self.gauge("pressure_level", level_rung);
+        self.gauge("pressure_mode", mode_rung);
+        self.counter("pressure_reclaim_calls", m.reclaim_calls);
+        self.counter("pressure_reclaimed_blocks", m.reclaimed_blocks);
+        self.counter("pressure_shed_waiting", m.shed_waiting);
+        self.counter("pressure_cancelled", m.cancelled);
+        self.counter("pressure_rate_deferred", m.rate_deferred);
+        self.counter("pressure_quota_deferred", m.quota_deferred);
+        self.counter("pressure_brownout_deferred", m.brownout_deferred);
+        self.counter("pressure_clamped_budgets", m.clamped_budgets);
+        self.counter("pressure_mode_changes", m.mode_changes);
+        for (mode_name, dwell) in [
+            ("normal", m.time_in_mode[0]),
+            ("brownout", m.time_in_mode[1]),
+            ("shed", m.time_in_mode[2]),
+        ] {
+            self.gauge(
+                &format!("pressure_time_in_{mode_name}_seconds"),
+                dwell.as_secs_f64(),
+            );
+        }
+        for (tenant, c) in &m.tenants {
+            let p = format!("pressure_tenant_{tenant}");
+            self.counter(&format!("{p}_submitted"), c.submitted);
+            self.counter(&format!("{p}_admitted"), c.admitted);
+            self.counter(&format!("{p}_shed"), c.shed);
+            self.counter(&format!("{p}_completed"), c.completed);
+            self.counter(&format!("{p}_cancelled"), c.cancelled);
+            self.counter(&format!("{p}_rate_deferred"), c.rate_deferred);
+            self.counter(&format!("{p}_quota_deferred"), c.quota_deferred);
+            self.gauge(
+                &format!("{p}_peak_reserved_blocks"),
+                c.peak_reserved_blocks as f64,
+            );
+            self.histogram(&format!("{p}_wait_seconds"), &c.wait);
+        }
+    }
+
+    /// Background-scrubber cumulative counters.
+    pub fn register_scrub(&mut self, m: &ScrubMetrics) {
+        self.counter("scrub_passes", m.passes);
+        self.counter("scrub_records_scanned", m.records_scanned);
+        self.counter("scrub_bytes_scanned", m.bytes_scanned);
+        self.counter("scrub_records_repaired", m.records_repaired);
+        self.counter("scrub_records_unrecoverable", m.records_unrecoverable);
+        self.gauge("scrub_last_pass_seconds", m.last_pass_secs);
+    }
+
+    /// Supervisor health surface, including the nested scrub and
+    /// pressure snapshots when attached — the single snapshot path
+    /// behind `serve --health-log`.
+    pub fn register_health(&mut self, h: &HealthReport) {
+        for s in &h.stages {
+            let p = format!("health_stage_{}", sanitize(&s.name));
+            self.gauge(&format!("{p}_alive"), if s.alive { 1.0 } else { 0.0 });
+            self.counter(&format!("{p}_beats"), s.beats);
+            self.counter(&format!("{p}_restarts"), s.restarts);
+            self.gauge(
+                &format!("{p}_last_beat_age_seconds"),
+                s.last_beat_age.as_secs_f64(),
+            );
+        }
+        self.gauge("health_quarantined", h.quarantined as f64);
+        self.gauge("health_healthy", if h.healthy { 1.0 } else { 0.0 });
+        if let Some(scrub) = &h.scrub {
+            self.register_scrub(scrub);
+        }
+        if let Some(p) = &h.pressure {
+            self.register_pressure(&p.metrics, p.level, p.mode);
+        }
+    }
+
+    /// KV-cache pool compression ledger, including the per-codec
+    /// block census and the restore-direction counters.
+    pub fn register_kv(&mut self, s: &KvStats) {
+        self.counter("kv_evictions", s.evictions);
+        self.counter("kv_restores", s.restores);
+        self.counter("kv_blocks_evicted", s.blocks_evicted);
+        self.counter("kv_evicted_raw_bytes", s.evicted_raw_bytes);
+        self.counter("kv_evicted_stored_bytes", s.evicted_stored_bytes);
+        self.counter("kv_restored_blocks", s.restored_blocks);
+        self.counter("kv_restored_raw_bytes", s.restored_raw_bytes);
+        self.counter("kv_restored_stored_bytes", s.restored_stored_bytes);
+        self.counter("kv_shared_blocks_retained", s.shared_blocks_retained);
+        self.gauge("kv_peak_blocks_in_use", s.peak_blocks_in_use as f64);
+        for (codec, n) in &s.evicted_by_codec {
+            self.counter(
+                &format!("kv_blocks_evicted_{}", sanitize(codec.label())),
+                *n,
+            );
+        }
+    }
+
+    /// Prefix-cache counters plus the tier census (hot / compressed /
+    /// pinned trie population).
+    pub fn register_prefix(&mut self, p: &PrefixStats, census: &TierCensus) {
+        self.counter("prefix_lookups", p.lookups);
+        self.counter("prefix_hits", p.hits);
+        self.counter("prefix_matched_tokens", p.matched_tokens);
+        self.counter("prefix_inserted_nodes", p.inserted_nodes);
+        self.counter("prefix_dedup_blocks", p.dedup_blocks);
+        self.counter("prefix_adopted_blocks", p.adopted_blocks);
+        self.counter("prefix_cow_forks", p.cow_forks);
+        self.counter("prefix_compressions", p.compressions);
+        self.counter("prefix_restores", p.restores);
+        self.counter("prefix_relinks", p.relinks);
+        self.counter("prefix_drops", p.drops);
+        self.gauge("prefix_compressed_bytes", p.compressed_bytes as f64);
+        self.gauge(
+            "prefix_peak_compressed_bytes",
+            p.peak_compressed_bytes as f64,
+        );
+        self.gauge("prefix_census_hot_nodes", census.hot_nodes as f64);
+        self.gauge(
+            "prefix_census_compressed_nodes",
+            census.compressed_nodes as f64,
+        );
+        self.gauge(
+            "prefix_census_compressed_bytes",
+            census.compressed_bytes as f64,
+        );
+        self.gauge("prefix_census_pinned_nodes", census.pinned_nodes as f64);
+    }
+
+    /// Span-tracer aggregates: per-phase time, span counts, codec
+    /// attribution totals.
+    pub fn register_tracer(&mut self, t: &Tracer) {
+        let agg = t.aggregate();
+        self.counter("trace_spans_closed", agg.spans);
+        self.gauge("trace_spans_open", agg.open_spans as f64);
+        self.counter("trace_spans_dropped", agg.dropped);
+        self.counter("trace_events_total", t.events_total());
+        self.counter("trace_transitions", agg.transitions);
+        self.counter("trace_total_ns", agg.total_ns);
+        for phase in Phase::ALL {
+            self.counter(
+                &format!("trace_phase_{}_ns", phase.name()),
+                agg.phase_ns[phase.index()],
+            );
+        }
+        self.counter("trace_codec_evict_calls", agg.codec.evict_calls);
+        self.counter("trace_codec_evict_ns", agg.codec.evict_ns);
+        self.counter("trace_codec_evict_raw_bytes", agg.codec.evict_raw_bytes);
+        self.counter(
+            "trace_codec_evict_stored_bytes",
+            agg.codec.evict_stored_bytes,
+        );
+        self.counter("trace_codec_restore_calls", agg.codec.restore_calls);
+        self.counter("trace_codec_restore_ns", agg.codec.restore_ns);
+        self.counter("trace_codec_restore_raw_bytes", agg.codec.restore_raw_bytes);
+        self.counter(
+            "trace_codec_restore_stored_bytes",
+            agg.codec.restore_stored_bytes,
+        );
+    }
+
+    /// Flight-recorder occupancy.
+    pub fn register_recorder(&mut self, r: &FlightRecorder) {
+        self.counter("recorder_events_total", r.total());
+        self.gauge("recorder_ring_len", r.len() as f64);
+        self.counter("recorder_dumps", r.dump_count());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn typed_handles_and_deterministic_order() {
+        let mut reg = MetricsRegistry::new();
+        reg.gauge("b_gauge", 0.5);
+        reg.counter("a_counter", 3);
+        reg.counter("a_counter", 4); // same-kind overwrite is fine
+        let names: Vec<&str> = reg.iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["a_counter", "b_gauge"]);
+        assert_eq!(reg.get("a_counter"), Some(&Metric::Counter(4)));
+    }
+
+    #[test]
+    #[should_panic(expected = "re-registered")]
+    fn kind_change_panics() {
+        let mut reg = MetricsRegistry::new();
+        reg.counter("x", 1);
+        reg.gauge("x", 1.0);
+    }
+
+    #[test]
+    fn sanitize_folds_to_identifier() {
+        assert_eq!(sanitize("ecf8-huffman"), "ecf8_huffman");
+        assert_eq!(sanitize("Execute Stage 2"), "execute_stage_2");
+    }
+
+    #[test]
+    fn scheduler_adapter_is_pure_snapshot() {
+        let mut m = SchedulerMetrics::default();
+        m.iterations = 7;
+        m.tokens_generated = 41;
+        m.ttft.record(0.004);
+        m.tier_hot_nodes = 3;
+        let mut reg = MetricsRegistry::new();
+        reg.register_scheduler(&m);
+        assert_eq!(reg.get("scheduler_iterations"), Some(&Metric::Counter(7)));
+        assert_eq!(
+            reg.get("scheduler_tier_hot_nodes"),
+            Some(&Metric::Gauge(3.0))
+        );
+        match reg.get("scheduler_ttft_seconds") {
+            Some(Metric::Histogram(h)) => assert_eq!(h.count, 1),
+            other => panic!("wrong kind: {other:?}"),
+        }
+        // adapter did not touch the source
+        assert_eq!(m.iterations, 7);
+    }
+
+    #[test]
+    fn scrub_adapter_covers_all_fields() {
+        let m = ScrubMetrics {
+            passes: 2,
+            records_scanned: 100,
+            bytes_scanned: 4096,
+            records_repaired: 3,
+            records_unrecoverable: 1,
+            last_pass_secs: 0.25,
+        };
+        let mut reg = MetricsRegistry::new();
+        reg.register_scrub(&m);
+        assert_eq!(reg.get("scrub_passes"), Some(&Metric::Counter(2)));
+        assert_eq!(
+            reg.get("scrub_records_unrecoverable"),
+            Some(&Metric::Counter(1))
+        );
+        assert_eq!(
+            reg.get("scrub_last_pass_seconds"),
+            Some(&Metric::Gauge(0.25))
+        );
+    }
+}

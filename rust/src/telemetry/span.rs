@@ -1,0 +1,582 @@
+//! Per-request span tracing: where did this request's time go?
+//!
+//! A request's lifetime is modelled as a single span that is always in
+//! exactly one [`Phase`]. The scheduler opens the span at submit
+//! (phase [`Phase::Queued`]), moves it through phases at the exact
+//! code sites where the state actually changes (admission → `Prefill`,
+//! first generated token → `Decode`, preemption → `KvEvict` then
+//! `Preempted`, resume → `KvRestore` then back), and closes it when
+//! the response is built — whatever the finish reason. Every
+//! transition stamps the injected [`Clock`] and accumulates the
+//! elapsed nanoseconds into the phase being left, so
+//! `Σ phase_ns == close − open` holds *by construction*: there is no
+//! unattributed time and no double counting. Under
+//! [`crate::scheduler::SimClock`] the stamps are fully deterministic,
+//! which is what lets `ecf8 trace-sim` and the verify port assert the
+//! identity exactly.
+//!
+//! The hot path allocates nothing: the [`Tracer`] pre-allocates a
+//! fixed arena of span slots plus a fixed ring of [`SpanEvent`]s at
+//! construction. When the arena is full, `open` returns `None` and
+//! the request simply runs untraced (`dropped` counts these) — tracing
+//! degrades, serving does not.
+//!
+//! Codec work is attributed per span via [`CodecTally`]: bytes in/out
+//! and clock time of every KV evict/restore a request pays for — a
+//! live, per-request measurement of the paper's §3.2
+//! compression-vs-throughput tradeoff.
+
+use crate::scheduler::Clock;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Number of distinct [`Phase`]s (array sizes below).
+pub const NUM_PHASES: usize = 6;
+
+/// The mutually exclusive states a traced request moves through.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// submitted, waiting for admission
+    Queued,
+    /// admitted; prompt scoring (or prefix-linked skip) in progress
+    Prefill,
+    /// generating tokens
+    Decode,
+    /// evicted under block pressure, waiting to resume
+    Preempted,
+    /// KV blocks being compressed out by the codec registry
+    KvEvict,
+    /// KV blocks being decoded back in on resume
+    KvRestore,
+}
+
+impl Phase {
+    /// All phases, in `phase_ns` array order.
+    pub const ALL: [Phase; NUM_PHASES] = [
+        Phase::Queued,
+        Phase::Prefill,
+        Phase::Decode,
+        Phase::Preempted,
+        Phase::KvEvict,
+        Phase::KvRestore,
+    ];
+
+    /// Index into `phase_ns` arrays.
+    pub fn index(self) -> usize {
+        match self {
+            Phase::Queued => 0,
+            Phase::Prefill => 1,
+            Phase::Decode => 2,
+            Phase::Preempted => 3,
+            Phase::KvEvict => 4,
+            Phase::KvRestore => 5,
+        }
+    }
+
+    /// Stable lowercase name (exporter + postmortem vocabulary).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Queued => "queued",
+            Phase::Prefill => "prefill",
+            Phase::Decode => "decode",
+            Phase::Preempted => "preempted",
+            Phase::KvEvict => "kv_evict",
+            Phase::KvRestore => "kv_restore",
+        }
+    }
+}
+
+/// Opaque handle carried on `GenRequest`: which arena slot holds this
+/// request's span, plus a generation stamp so a stale handle (slot
+/// recycled for a later request) is detected and ignored instead of
+/// corrupting another span.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceContext {
+    slot: u32,
+    generation: u32,
+}
+
+/// What a [`SpanEvent`] records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// span opened (phase = initial phase, always `Queued`)
+    Open,
+    /// span entered `phase`
+    Enter,
+    /// span closed (phase = the phase it was in when closed)
+    Close,
+}
+
+/// One nanosecond-stamped lifecycle event, kept in the tracer's fixed
+/// ring for debugging and the verify port's replay.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanEvent {
+    /// request id
+    pub req: u64,
+    /// nanoseconds since the tracer's origin instant
+    pub at_ns: u64,
+    pub phase: Phase,
+    pub kind: SpanKind,
+}
+
+/// Codec work attributed to one span (or aggregated across spans):
+/// call counts, clock time, and bytes before/after compression for
+/// the KV evict and restore directions separately.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CodecTally {
+    pub evict_calls: u64,
+    pub evict_ns: u64,
+    /// raw (uncompressed) bytes fed to the codec on evict
+    pub evict_raw_bytes: u64,
+    /// stored (compressed) bytes produced on evict
+    pub evict_stored_bytes: u64,
+    pub restore_calls: u64,
+    pub restore_ns: u64,
+    /// raw bytes reproduced by decode on restore
+    pub restore_raw_bytes: u64,
+    /// stored bytes consumed by decode on restore
+    pub restore_stored_bytes: u64,
+}
+
+impl CodecTally {
+    pub fn add(&mut self, other: &CodecTally) {
+        self.evict_calls += other.evict_calls;
+        self.evict_ns += other.evict_ns;
+        self.evict_raw_bytes += other.evict_raw_bytes;
+        self.evict_stored_bytes += other.evict_stored_bytes;
+        self.restore_calls += other.restore_calls;
+        self.restore_ns += other.restore_ns;
+        self.restore_raw_bytes += other.restore_raw_bytes;
+        self.restore_stored_bytes += other.restore_stored_bytes;
+    }
+
+    /// stored/raw on the evict direction (1.0 = incompressible).
+    pub fn evict_ratio(&self) -> f64 {
+        if self.evict_raw_bytes == 0 {
+            return 0.0;
+        }
+        self.evict_stored_bytes as f64 / self.evict_raw_bytes as f64
+    }
+}
+
+/// The closed span's breakdown, attached to the response.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceSummary {
+    /// request id
+    pub req: u64,
+    /// nanoseconds spent in each phase, [`Phase::index`] order
+    pub phase_ns: [u64; NUM_PHASES],
+    /// close − open, nanoseconds (== `phase_sum_ns` by construction)
+    pub total_ns: u64,
+    /// phase transitions taken (excluding open/close)
+    pub transitions: u32,
+    pub codec: CodecTally,
+}
+
+impl TraceSummary {
+    /// Σ over `phase_ns` — must equal `total_ns`; `ecf8 trace-sim`
+    /// asserts it.
+    pub fn phase_sum_ns(&self) -> u64 {
+        self.phase_ns.iter().sum()
+    }
+}
+
+/// Whole-tracer aggregate over closed spans (registry gauges and the
+/// trace-sim report read this).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TraceAggregate {
+    /// spans closed
+    pub spans: u64,
+    /// spans opened and not yet closed
+    pub open_spans: u64,
+    /// opens refused because the arena was full
+    pub dropped: u64,
+    /// Σ phase_ns over closed spans, [`Phase::index`] order
+    pub phase_ns: [u64; NUM_PHASES],
+    /// Σ total_ns over closed spans
+    pub total_ns: u64,
+    pub transitions: u64,
+    pub codec: CodecTally,
+}
+
+/// One arena slot: the live state of an open span.
+#[derive(Debug, Clone, Copy)]
+struct Slot {
+    generation: u32,
+    req: u64,
+    open: bool,
+    phase: Phase,
+    opened_ns: u64,
+    phase_since_ns: u64,
+    phase_ns: [u64; NUM_PHASES],
+    transitions: u32,
+    codec: CodecTally,
+}
+
+impl Slot {
+    fn empty() -> Self {
+        Slot {
+            generation: 0,
+            req: 0,
+            open: false,
+            phase: Phase::Queued,
+            opened_ns: 0,
+            phase_since_ns: 0,
+            phase_ns: [0; NUM_PHASES],
+            transitions: 0,
+            codec: CodecTally::default(),
+        }
+    }
+}
+
+/// The span tracer. Owned mutably by the scheduler (no locks: every
+/// call site already holds `&mut` on the scheduler), clocked by the
+/// same injected [`Clock`] the scheduler uses, all storage
+/// pre-allocated at construction.
+pub struct Tracer {
+    clock: Arc<dyn Clock>,
+    origin: Instant,
+    slots: Vec<Slot>,
+    free: Vec<u32>,
+    events: Vec<SpanEvent>,
+    events_cap: usize,
+    events_head: usize,
+    events_total: u64,
+    opened: u64,
+    closed: u64,
+    dropped: u64,
+    agg: TraceAggregate,
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tracer")
+            .field("slots", &self.slots.len())
+            .field("opened", &self.opened)
+            .field("closed", &self.closed)
+            .field("dropped", &self.dropped)
+            .finish()
+    }
+}
+
+impl Tracer {
+    /// `max_spans` concurrent open spans, `event_capacity` ring slots.
+    /// Both floors at 1. Origin is `clock.now()` at construction, so
+    /// build the tracer before stamping any request arrivals.
+    pub fn new(clock: Arc<dyn Clock>, max_spans: usize, event_capacity: usize) -> Self {
+        let max_spans = max_spans.max(1);
+        let origin = clock.now();
+        Tracer {
+            clock,
+            origin,
+            slots: vec![Slot::empty(); max_spans],
+            free: (0..max_spans as u32).rev().collect(),
+            events: Vec::with_capacity(event_capacity.max(1)),
+            events_cap: event_capacity.max(1),
+            events_head: 0,
+            events_total: 0,
+            opened: 0,
+            closed: 0,
+            dropped: 0,
+            agg: TraceAggregate::default(),
+        }
+    }
+
+    fn ns_at(&self, at: Instant) -> u64 {
+        at.checked_duration_since(self.origin)
+            .unwrap_or_default()
+            .as_nanos() as u64
+    }
+
+    /// Nanoseconds since the tracer's origin, per the injected clock.
+    pub fn now_ns(&self) -> u64 {
+        self.ns_at(self.clock.now())
+    }
+
+    fn emit(&mut self, req: u64, at_ns: u64, phase: Phase, kind: SpanKind) {
+        let ev = SpanEvent {
+            req,
+            at_ns,
+            phase,
+            kind,
+        };
+        if self.events.len() < self.events_cap {
+            self.events.push(ev);
+        } else {
+            self.events[self.events_head] = ev;
+            self.events_head = (self.events_head + 1) % self.events_cap;
+        }
+        self.events_total += 1;
+    }
+
+    /// Open a span for `req` in phase `Queued`, backdated to `at`
+    /// (the request's arrival instant) so queueing delay before this
+    /// call is attributed, not lost. Returns `None` — and counts a
+    /// drop — when the arena is full.
+    pub fn open_at(&mut self, req: u64, at: Instant) -> Option<TraceContext> {
+        let at_ns = self.ns_at(at);
+        let idx = match self.free.pop() {
+            Some(i) => i,
+            None => {
+                self.dropped += 1;
+                self.agg.dropped += 1;
+                return None;
+            }
+        };
+        let slot = &mut self.slots[idx as usize];
+        slot.req = req;
+        slot.open = true;
+        slot.phase = Phase::Queued;
+        slot.opened_ns = at_ns;
+        slot.phase_since_ns = at_ns;
+        slot.phase_ns = [0; NUM_PHASES];
+        slot.transitions = 0;
+        slot.codec = CodecTally::default();
+        let generation = slot.generation;
+        self.opened += 1;
+        self.agg.open_spans = self.opened - self.closed;
+        self.emit(req, at_ns, Phase::Queued, SpanKind::Open);
+        Some(TraceContext {
+            slot: idx,
+            generation,
+        })
+    }
+
+    /// Open at `clock.now()`.
+    pub fn open(&mut self, req: u64) -> Option<TraceContext> {
+        self.open_at(req, self.clock.now())
+    }
+
+    fn live_slot(&mut self, ctx: TraceContext) -> Option<usize> {
+        let idx = ctx.slot as usize;
+        let slot = self.slots.get(idx)?;
+        if slot.open && slot.generation == ctx.generation {
+            Some(idx)
+        } else {
+            None
+        }
+    }
+
+    /// Move the span into `phase`, charging the time since the last
+    /// transition to the phase being left. Same-phase transitions are
+    /// no-ops; stale contexts are ignored.
+    pub fn transition(&mut self, ctx: TraceContext, phase: Phase) {
+        let now_ns = self.now_ns();
+        let Some(idx) = self.live_slot(ctx) else {
+            return;
+        };
+        let slot = &mut self.slots[idx];
+        if slot.phase == phase {
+            return;
+        }
+        slot.phase_ns[slot.phase.index()] += now_ns.saturating_sub(slot.phase_since_ns);
+        slot.phase = phase;
+        slot.phase_since_ns = now_ns;
+        slot.transitions += 1;
+        let req = slot.req;
+        self.emit(req, now_ns, phase, SpanKind::Enter);
+    }
+
+    /// Close the span, charging the final phase segment, and return
+    /// the per-phase breakdown. `None` on a stale context (a span
+    /// closes exactly once).
+    pub fn close(&mut self, ctx: TraceContext) -> Option<TraceSummary> {
+        let now_ns = self.now_ns();
+        let idx = self.live_slot(ctx)?;
+        let slot = &mut self.slots[idx];
+        slot.phase_ns[slot.phase.index()] += now_ns.saturating_sub(slot.phase_since_ns);
+        let summary = TraceSummary {
+            req: slot.req,
+            phase_ns: slot.phase_ns,
+            total_ns: now_ns.saturating_sub(slot.opened_ns),
+            transitions: slot.transitions,
+            codec: slot.codec,
+        };
+        let last_phase = slot.phase;
+        slot.open = false;
+        slot.generation = slot.generation.wrapping_add(1);
+        self.free.push(ctx.slot);
+        self.closed += 1;
+        self.agg.spans += 1;
+        self.agg.open_spans = self.opened - self.closed;
+        for i in 0..NUM_PHASES {
+            self.agg.phase_ns[i] += summary.phase_ns[i];
+        }
+        self.agg.total_ns += summary.total_ns;
+        self.agg.transitions += summary.transitions as u64;
+        self.agg.codec.add(&summary.codec);
+        self.emit(summary.req, now_ns, last_phase, SpanKind::Close);
+        Some(summary)
+    }
+
+    /// Attribute one KV evict's codec work to the span.
+    pub fn codec_evict(&mut self, ctx: TraceContext, ns: u64, raw_bytes: u64, stored_bytes: u64) {
+        if let Some(idx) = self.live_slot(ctx) {
+            let c = &mut self.slots[idx].codec;
+            c.evict_calls += 1;
+            c.evict_ns += ns;
+            c.evict_raw_bytes += raw_bytes;
+            c.evict_stored_bytes += stored_bytes;
+        }
+    }
+
+    /// Attribute one KV restore's codec work to the span.
+    pub fn codec_restore(&mut self, ctx: TraceContext, ns: u64, raw_bytes: u64, stored_bytes: u64) {
+        if let Some(idx) = self.live_slot(ctx) {
+            let c = &mut self.slots[idx].codec;
+            c.restore_calls += 1;
+            c.restore_ns += ns;
+            c.restore_raw_bytes += raw_bytes;
+            c.restore_stored_bytes += stored_bytes;
+        }
+    }
+
+    /// Spans opened and not yet closed — zero after a drained run, or
+    /// something leaked a span.
+    pub fn open_spans(&self) -> u64 {
+        self.opened - self.closed
+    }
+
+    pub fn opened(&self) -> u64 {
+        self.opened
+    }
+
+    pub fn closed(&self) -> u64 {
+        self.closed
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Total events emitted (including ones the ring has overwritten).
+    pub fn events_total(&self) -> u64 {
+        self.events_total
+    }
+
+    /// Ring contents, oldest first.
+    pub fn events(&self) -> Vec<SpanEvent> {
+        let mut out = Vec::with_capacity(self.events.len());
+        out.extend_from_slice(&self.events[self.events_head..]);
+        out.extend_from_slice(&self.events[..self.events_head]);
+        out
+    }
+
+    /// Aggregate over closed spans.
+    pub fn aggregate(&self) -> TraceAggregate {
+        self.agg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::SimClock;
+    use std::time::Duration;
+
+    #[test]
+    fn phase_sums_equal_total_by_construction() {
+        let clock = SimClock::new();
+        let c2 = clock.clone();
+        let mut t = Tracer::new(clock, 4, 64);
+        let ctx = t.open(7).unwrap();
+        c2.advance(Duration::from_millis(3));
+        t.transition(ctx, Phase::Prefill);
+        c2.advance(Duration::from_millis(5));
+        t.transition(ctx, Phase::Decode);
+        c2.advance(Duration::from_millis(11));
+        let s = t.close(ctx).unwrap();
+        assert_eq!(s.req, 7);
+        assert_eq!(s.phase_ns[Phase::Queued.index()], 3_000_000);
+        assert_eq!(s.phase_ns[Phase::Prefill.index()], 5_000_000);
+        assert_eq!(s.phase_ns[Phase::Decode.index()], 11_000_000);
+        assert_eq!(s.total_ns, 19_000_000);
+        assert_eq!(s.phase_sum_ns(), s.total_ns);
+        assert_eq!(s.transitions, 2);
+        assert_eq!(t.open_spans(), 0);
+    }
+
+    #[test]
+    fn backdated_open_charges_queueing_delay() {
+        let clock = SimClock::new();
+        let c2 = clock.clone();
+        let mut t = Tracer::new(clock, 2, 16);
+        let arrived = c2.now();
+        c2.advance(Duration::from_millis(4));
+        let ctx = t.open_at(9, arrived).unwrap();
+        c2.advance(Duration::from_millis(1));
+        let s = t.close(ctx).unwrap();
+        assert_eq!(s.phase_ns[Phase::Queued.index()], 5_000_000);
+        assert_eq!(s.total_ns, 5_000_000);
+    }
+
+    #[test]
+    fn stale_context_is_inert_and_spans_close_once() {
+        let clock = SimClock::new();
+        let mut t = Tracer::new(clock, 1, 8);
+        let ctx = t.open(1).unwrap();
+        assert!(t.close(ctx).is_some());
+        assert!(t.close(ctx).is_none(), "second close must be refused");
+        // slot is recycled for a new span; the old handle stays dead
+        let ctx2 = t.open(2).unwrap();
+        t.transition(ctx, Phase::Decode);
+        t.codec_evict(ctx, 1, 2, 3);
+        let s = t.close(ctx2).unwrap();
+        assert_eq!(s.req, 2);
+        assert_eq!(s.transitions, 0);
+        assert_eq!(s.codec, CodecTally::default());
+    }
+
+    #[test]
+    fn arena_exhaustion_drops_instead_of_allocating() {
+        let clock = SimClock::new();
+        let mut t = Tracer::new(clock, 2, 8);
+        let a = t.open(1).unwrap();
+        let _b = t.open(2).unwrap();
+        assert!(t.open(3).is_none());
+        assert_eq!(t.dropped(), 1);
+        t.close(a).unwrap();
+        assert!(t.open(4).is_some(), "freed slot is reusable");
+    }
+
+    #[test]
+    fn event_ring_wraps_keeping_newest() {
+        let clock = SimClock::new();
+        let c2 = clock.clone();
+        let mut t = Tracer::new(clock, 8, 4);
+        for i in 0..3u64 {
+            let ctx = t.open(i).unwrap();
+            c2.advance(Duration::from_micros(1));
+            t.close(ctx).unwrap();
+        }
+        assert_eq!(t.events_total(), 6);
+        let evs = t.events();
+        assert_eq!(evs.len(), 4);
+        // oldest-first ordering survives the wrap
+        for w in evs.windows(2) {
+            assert!(w[0].at_ns <= w[1].at_ns);
+        }
+        assert_eq!(evs.last().unwrap().req, 2);
+    }
+
+    #[test]
+    fn aggregate_accumulates_codec_tallies() {
+        let clock = SimClock::new();
+        let c2 = clock.clone();
+        let mut t = Tracer::new(clock, 4, 16);
+        let ctx = t.open(5).unwrap();
+        t.transition(ctx, Phase::KvEvict);
+        t.codec_evict(ctx, 1_000, 4096, 3000);
+        t.transition(ctx, Phase::KvRestore);
+        t.codec_restore(ctx, 2_000, 4096, 3000);
+        c2.advance(Duration::from_micros(9));
+        t.close(ctx).unwrap();
+        let agg = t.aggregate();
+        assert_eq!(agg.spans, 1);
+        assert_eq!(agg.codec.evict_calls, 1);
+        assert_eq!(agg.codec.restore_calls, 1);
+        assert_eq!(agg.codec.evict_raw_bytes, 4096);
+        assert!((agg.codec.evict_ratio() - 3000.0 / 4096.0).abs() < 1e-12);
+        assert_eq!(agg.total_ns, 9_000);
+    }
+}

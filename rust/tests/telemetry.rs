@@ -1,0 +1,607 @@
+//! Telemetry-spine invariants, end to end:
+//!
+//! * every span the scheduler opens closes exactly once, whatever the
+//!   ending — completion, preemption round-trips, governor shed,
+//!   deadline expiry, mid-generation cancellation — and its per-phase
+//!   nanoseconds sum exactly to its end-to-end latency (seeded sweeps
+//!   over several pool geometries under the sim clock);
+//! * tracing is an observer: attaching the tracer or shrinking its
+//!   arena never changes a single generated token;
+//! * the flight recorder's ring wraps keeping the newest events, and
+//!   the two-step trigger → flush discipline produces a bounded
+//!   postmortem that includes the *consequences* of the trigger (the
+//!   shed drain recorded after Shed entry, before the flush);
+//! * the unified registry agrees with the subsystem structs it
+//!   snapshots, and both exporters render byte-stably.
+
+use ecf8::codec::Fp8Format;
+use ecf8::coordinator::LatencyHistogram;
+use ecf8::scheduler::{
+    BrownoutPolicy, ContinuousScheduler, FinishReason, GenRequest, GenResponse, KvCacheConfig,
+    PressureConfig, PressureGovernor, SchedConfig, SimClock, SyntheticIterationEngine,
+};
+use ecf8::telemetry::{
+    json, prometheus, DumpReason, FlightEvent, FlightRecorder, Metric, MetricsRegistry, Phase,
+    ShedKind, Tracer,
+};
+use ecf8::util::prng::Xoshiro256;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn kv_cfg(block_tokens: usize, n_blocks: usize) -> KvCacheConfig {
+    KvCacheConfig {
+        block_tokens,
+        bytes_per_token: 48,
+        n_blocks,
+        format: Fp8Format::E4M3,
+        prefix: None,
+    }
+}
+
+/// Seeded ragged requests with explicit sim-clock arrival stamps
+/// spaced `gap` apart — the open-loop shape `ecf8 trace-sim` drives.
+fn staggered_requests(
+    n: usize,
+    vocab: usize,
+    seed: u64,
+    t0: Instant,
+    gap: Duration,
+) -> Vec<GenRequest> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    (0..n)
+        .map(|id| {
+            let prompt_len = 1 + rng.next_below(9) as usize;
+            let max_new = 1 + rng.next_below(12) as usize;
+            GenRequest::at(
+                id as u64,
+                (0..prompt_len)
+                    .map(|_| rng.next_below(vocab as u64) as i32)
+                    .collect(),
+                max_new,
+                t0 + gap * id as u32,
+            )
+        })
+        .collect()
+}
+
+/// Arrival-ordered open-loop drive, 1 ms sim steps. Checks the pool
+/// books and the span-accounting identity
+/// `opened + dropped == submitted` after every step.
+fn drive(
+    sched: &mut ContinuousScheduler,
+    eng: &mut SyntheticIterationEngine,
+    clock: &SimClock,
+    reqs: &[GenRequest],
+) -> Vec<GenResponse> {
+    let mut order: Vec<usize> = (0..reqs.len()).collect();
+    order.sort_by_key(|&i| (reqs[i].arrived, reqs[i].id));
+    let mut next = 0usize;
+    let mut responses = Vec::new();
+    let mut steps = 0usize;
+    while next < order.len() || sched.has_work() {
+        let now = clock.now();
+        while next < order.len() && reqs[order[next]].arrived <= now {
+            sched.submit(reqs[order[next]].clone());
+            next += 1;
+        }
+        let report = sched.step(eng).unwrap();
+        responses.extend(report.responses);
+        sched.kv().leak_check().unwrap_or_else(|e| {
+            panic!("step {steps}: {e}");
+        });
+        if let Some(t) = sched.tracer() {
+            assert_eq!(
+                t.opened() + t.dropped(),
+                next as u64,
+                "step {steps}: every submit opens a span or counts a drop"
+            );
+            assert!(
+                t.closed() <= responses.len() as u64,
+                "step {steps}: more closes than responses"
+            );
+        }
+        steps += 1;
+        assert!(steps < 20_000, "runaway schedule");
+        clock.advance(Duration::from_millis(1));
+    }
+    responses
+}
+
+/// The spine's core identity on a fully traced, fully drained run:
+/// zero orphans, zero drops, and Σ `phase_ns` == `total_ns` ==
+/// the response's own latency, exactly (the sim clock only moves
+/// between steps, so the stamps coincide to the nanosecond).
+fn assert_span_identities(responses: &[GenResponse], tracer: &Tracer) {
+    assert_eq!(tracer.open_spans(), 0, "orphan spans after drain");
+    assert_eq!(tracer.dropped(), 0, "span arena too small");
+    let mut total = 0u64;
+    let mut phase_ns = [0u64; ecf8::telemetry::NUM_PHASES];
+    for r in responses {
+        let s = r.trace.expect("every request traced");
+        assert_eq!(s.req, r.id);
+        assert_eq!(s.phase_sum_ns(), s.total_ns, "request {}", r.id);
+        assert_eq!(
+            s.total_ns,
+            (r.latency_s * 1e9).round() as u64,
+            "request {}: trace total must equal the reported latency",
+            r.id
+        );
+        total += s.total_ns;
+        for (i, ns) in s.phase_ns.iter().enumerate() {
+            phase_ns[i] += ns;
+        }
+    }
+    let agg = tracer.aggregate();
+    assert_eq!(agg.spans, responses.len() as u64);
+    assert_eq!(agg.total_ns, total, "aggregate total == Σ response traces");
+    assert_eq!(agg.phase_ns, phase_ns, "aggregate phases == Σ response traces");
+    // event ledger: one open + one close per span plus every transition
+    assert_eq!(
+        tracer.events_total(),
+        2 * agg.spans + agg.transitions,
+        "event count disagrees with the span ledger"
+    );
+}
+
+#[test]
+fn spans_close_exactly_once_under_seeded_preemption_churn() {
+    // several geometries, tight pools → preemption round-trips; the
+    // traced run must match a bare twin token-for-token, and every
+    // span must satisfy the phase/latency identities
+    let vocab = 64;
+    let mut total_preemptions = 0u64;
+    for (seed, block_tokens, n_blocks, max_running) in [
+        (1u64, 4usize, 12usize, 6usize),
+        (2, 2, 12, 4),
+        (3, 8, 30, 16),
+    ] {
+        let n = 20usize;
+        let run = |traced: bool| {
+            let clock = SimClock::new();
+            let t0 = clock.now();
+            let reqs = staggered_requests(n, vocab, seed, t0, Duration::from_millis(2));
+            let mut sched = ContinuousScheduler::new(
+                SchedConfig { max_running },
+                kv_cfg(block_tokens, n_blocks),
+                clock.clone(),
+            );
+            if traced {
+                sched = sched
+                    .with_tracer(Tracer::new(clock.clone(), n, 4096))
+                    .with_recorder(Arc::new(FlightRecorder::new(clock.clone(), 64)));
+            }
+            let mut eng = SyntheticIterationEngine::instant(vocab);
+            let responses = drive(&mut sched, &mut eng, &clock, &reqs);
+            (sched, responses)
+        };
+
+        let (bare_sched, bare) = run(false);
+        let (sched, responses) = run(true);
+        assert_eq!(responses.len(), n, "seed {seed}");
+        let tracer = sched.tracer().expect("tracer attached");
+        assert_span_identities(&responses, tracer);
+
+        // tracing is an observer: token-identical to the bare twin
+        let tokens = |rs: &[GenResponse]| {
+            let mut t: Vec<(u64, Vec<i32>)> =
+                rs.iter().map(|r| (r.id, r.tokens.clone())).collect();
+            t.sort_by_key(|(id, _)| *id);
+            t
+        };
+        assert_eq!(tokens(&bare), tokens(&responses), "seed {seed}");
+        assert_eq!(bare_sched.metrics.preemptions, sched.metrics.preemptions);
+
+        // the codec per-span ledger must agree with the pool's own
+        // books: without a prefix cache, every evict/restore is a
+        // traced preemption round-trip
+        let agg = tracer.aggregate();
+        let kv = sched.kv().stats();
+        assert_eq!(agg.codec.evict_calls, kv.evictions, "seed {seed}");
+        assert_eq!(agg.codec.restore_calls, kv.restores, "seed {seed}");
+        assert_eq!(agg.codec.evict_raw_bytes, kv.evicted_raw_bytes, "seed {seed}");
+        assert_eq!(
+            agg.codec.evict_stored_bytes, kv.evicted_stored_bytes,
+            "seed {seed}"
+        );
+        assert_eq!(
+            agg.codec.restore_raw_bytes, kv.restored_raw_bytes,
+            "seed {seed}"
+        );
+        if sched.metrics.preemptions > 0 {
+            assert!(
+                agg.phase_ns[Phase::Preempted.index()] > 0,
+                "seed {seed}: preempted time must be attributed"
+            );
+        }
+        total_preemptions += sched.metrics.preemptions;
+    }
+    assert!(total_preemptions > 0, "tight pools never preempted");
+}
+
+#[test]
+fn exhausted_arena_drops_tracing_not_requests() {
+    // a 4-slot arena under a 16-request burst: 12 opens are refused,
+    // those requests run untraced, and not a single token changes
+    let vocab = 48;
+    let n = 16usize;
+    let run = |arena: Option<usize>| {
+        let clock = SimClock::new();
+        let t0 = clock.now();
+        let reqs = staggered_requests(n, vocab, 21, t0, Duration::ZERO);
+        let mut sched = ContinuousScheduler::new(
+            SchedConfig { max_running: 8 },
+            kv_cfg(4, 96),
+            clock.clone(),
+        );
+        if let Some(slots) = arena {
+            sched = sched.with_tracer(Tracer::new(clock.clone(), slots, 256));
+        }
+        let mut eng = SyntheticIterationEngine::instant(vocab);
+        let responses = drive(&mut sched, &mut eng, &clock, &reqs);
+        (sched, responses)
+    };
+
+    let (_, bare) = run(None);
+    let (sched, responses) = run(Some(4));
+    assert_eq!(responses.len(), n);
+    let tracer = sched.tracer().unwrap();
+    // the whole burst is submitted before any span can close, so
+    // exactly the arena's 4 slots trace and the other 12 drop
+    assert_eq!(tracer.dropped(), (n - 4) as u64);
+    assert_eq!(responses.iter().filter(|r| r.trace.is_some()).count(), 4);
+    assert_eq!(tracer.open_spans(), 0, "traced spans still close");
+    for r in &responses {
+        assert_eq!(r.finish, FinishReason::Completed, "request {}", r.id);
+        if let Some(s) = r.trace {
+            assert_eq!(s.phase_sum_ns(), s.total_ns);
+        }
+    }
+    let tokens = |rs: &[GenResponse]| {
+        let mut t: Vec<(u64, Vec<i32>)> = rs.iter().map(|r| (r.id, r.tokens.clone())).collect();
+        t.sort_by_key(|(id, _)| *id);
+        t
+    };
+    assert_eq!(tokens(&bare), tokens(&responses), "degraded tracing must not perturb serving");
+}
+
+#[test]
+fn expiry_and_cancellation_close_spans_with_exact_phases() {
+    // expiry: request 1 waits behind a long generation (max_running 1)
+    // and its deadline passes while queued — the span closes from
+    // `Queued` with the whole latency attributed there
+    let vocab = 32;
+    let clock = SimClock::new();
+    let t0 = clock.now();
+    let mut sched = ContinuousScheduler::new(
+        SchedConfig { max_running: 1 },
+        kv_cfg(4, 32),
+        clock.clone(),
+    )
+    .with_tracer(Tracer::new(clock.clone(), 4, 64));
+    sched.submit(GenRequest::at(0, vec![1, 2, 3], 32, t0));
+    sched.submit(
+        GenRequest::at(1, vec![4, 5], 8, t0).with_deadline(t0 + Duration::from_millis(3)),
+    );
+    let mut eng = SyntheticIterationEngine::instant(vocab);
+    let mut responses = Vec::new();
+    let mut guard = 0;
+    while sched.has_work() {
+        responses.extend(sched.step(&mut eng).unwrap().responses);
+        clock.advance(Duration::from_millis(1));
+        guard += 1;
+        assert!(guard < 100);
+    }
+    let expired = responses.iter().find(|r| r.id == 1).unwrap();
+    assert_eq!(expired.finish, FinishReason::Expired);
+    let s = expired.trace.expect("expired request still traced");
+    assert_eq!(s.total_ns, 3_000_000, "expired at its 3 ms deadline exactly");
+    assert_eq!(
+        s.phase_ns[Phase::Queued.index()],
+        s.total_ns,
+        "an expired request only ever queued"
+    );
+    assert_eq!(s.transitions, 0);
+    let tracer = sched.tracer().unwrap();
+    assert_eq!(tracer.open_spans(), 0);
+
+    // cancellation: deadline passes mid-generation with the governor's
+    // opt-in — the span closes from `Decode` with partial tokens
+    let clock2 = SimClock::new();
+    let t1 = clock2.now();
+    let mut pcfg = PressureConfig::default();
+    pcfg.cancel_past_deadline = true;
+    pcfg.quantum = 32;
+    let mut sched2 = ContinuousScheduler::new(
+        SchedConfig { max_running: 2 },
+        kv_cfg(4, 32),
+        clock2.clone(),
+    )
+    .with_governor(PressureGovernor::new(pcfg, t1))
+    .with_tracer(Tracer::new(clock2.clone(), 4, 64));
+    sched2.submit(
+        GenRequest::at(0, vec![1, 2, 3], 64, t1).with_deadline(t1 + Duration::from_millis(5)),
+    );
+    let mut eng2 = SyntheticIterationEngine::instant(vocab);
+    let mut responses2 = Vec::new();
+    let mut guard = 0;
+    while sched2.has_work() {
+        responses2.extend(sched2.step(&mut eng2).unwrap().responses);
+        clock2.advance(Duration::from_millis(1));
+        guard += 1;
+        assert!(guard < 100);
+    }
+    assert_eq!(responses2.len(), 1);
+    let cancelled = &responses2[0];
+    assert_eq!(cancelled.finish, FinishReason::Cancelled);
+    assert!(!cancelled.tokens.is_empty(), "partial tokens returned");
+    let s = cancelled.trace.expect("cancelled request still traced");
+    assert_eq!(s.phase_sum_ns(), s.total_ns);
+    assert_eq!(s.total_ns, (cancelled.latency_s * 1e9).round() as u64);
+    assert!(
+        s.phase_ns[Phase::Decode.index()] > 0,
+        "a cancelled generation spent time decoding"
+    );
+    assert_eq!(sched2.tracer().unwrap().open_spans(), 0);
+}
+
+#[test]
+fn recorder_ring_wraps_and_dumps_stay_bounded() {
+    // scheduler-fed ring: without a governor or prefix cache the only
+    // recorded events are preemptions, so the ring's lifetime total
+    // must equal the scheduler's own preemption counter
+    let vocab = 64;
+    let clock = SimClock::new();
+    let t0 = clock.now();
+    let reqs = staggered_requests(20, vocab, 2, t0, Duration::from_millis(2));
+    let recorder = Arc::new(FlightRecorder::new(clock.clone(), 4));
+    let mut sched = ContinuousScheduler::new(
+        SchedConfig { max_running: 4 },
+        kv_cfg(2, 12),
+        clock.clone(),
+    )
+    .with_recorder(recorder.clone());
+    let mut eng = SyntheticIterationEngine::instant(vocab);
+    drive(&mut sched, &mut eng, &clock, &reqs);
+    assert!(sched.metrics.preemptions > 0, "12-block pool must preempt");
+    assert_eq!(recorder.total(), sched.metrics.preemptions);
+    assert_eq!(recorder.len(), (sched.metrics.preemptions as usize).min(4));
+    for w in recorder.snapshot().windows(2) {
+        assert!(w[0].at_ns <= w[1].at_ns, "ring must stay oldest-first");
+    }
+
+    // overflow the ring deliberately, then trigger + flush: the
+    // postmortem is bounded by the capacity and counts what it lost
+    for i in 0..6u64 {
+        recorder.record(FlightEvent::Shed {
+            req: 1000 + i,
+            kind: ShedKind::Expired,
+        });
+    }
+    let total = recorder.total();
+    assert!(total > 4);
+    assert_eq!(recorder.len(), 4);
+    recorder.trigger(DumpReason::UnrecoverableRepair);
+    let pm = recorder.flush().expect("armed dump must flush");
+    assert_eq!(pm.events.len(), 4, "dump bounded by ring capacity");
+    assert_eq!(pm.dropped, total - 4);
+    assert!(pm
+        .render()
+        .contains(&format!("{} older dropped", total - 4)));
+    assert!(recorder.flush().is_none(), "flush disarms");
+    assert_eq!(recorder.dump_count(), 1);
+}
+
+#[test]
+fn forced_shed_flushes_postmortem_with_consequences() {
+    // the trace-sim run-2 calibration at test scale: a pool sized for
+    // exactly two sequences, the whole herd arriving 4/ms, tight
+    // hysteresis with 1 ms dwell — the mode machine must ramp to Shed,
+    // arm the recorder, and the scheduler's epilogue flush must
+    // capture both the transition and the shed drain it caused
+    let vocab = 96;
+    let (prompt, gen) = (12usize, 24usize);
+    let n = 24usize;
+    let per_seq = kv_cfg(8, 1).blocks_for_tokens(prompt + gen + 1);
+    let clock = SimClock::new();
+    let t0 = clock.now();
+    let mut rng = Xoshiro256::seed_from_u64(5);
+    let herd: Vec<GenRequest> = (0..n)
+        .map(|id| {
+            GenRequest::at(
+                id as u64,
+                (0..prompt)
+                    .map(|_| rng.next_below(vocab as u64) as i32)
+                    .collect(),
+                gen,
+                t0 + Duration::from_millis(id as u64 / 4),
+            )
+        })
+        .collect();
+    let mut pcfg = PressureConfig::default();
+    pcfg.max_waiting = 12;
+    pcfg.brownout = BrownoutPolicy {
+        enter_brownout: 0.45,
+        exit_brownout: 0.25,
+        enter_shed: 0.55,
+        exit_shed: 0.35,
+        min_dwell: Duration::from_millis(1),
+    };
+    let recorder = Arc::new(FlightRecorder::new(clock.clone(), 64));
+    let mut sched = ContinuousScheduler::new(
+        SchedConfig { max_running: 8 },
+        kv_cfg(8, 2 * per_seq),
+        clock.clone(),
+    )
+    .with_governor(PressureGovernor::new(pcfg, t0))
+    .with_tracer(Tracer::new(clock.clone(), n, 2048))
+    .with_recorder(recorder.clone());
+    let mut eng = SyntheticIterationEngine::instant(vocab);
+    let responses = drive(&mut sched, &mut eng, &clock, &herd);
+    assert_eq!(responses.len(), n, "every request ends exactly once");
+    assert_span_identities(&responses, sched.tracer().unwrap());
+    let shed: Vec<&GenResponse> = responses
+        .iter()
+        .filter(|r| r.finish == FinishReason::Rejected)
+        .collect();
+    assert!(!shed.is_empty(), "overload never reached Shed");
+    for r in &shed {
+        assert!(r.tokens.is_empty(), "request {}", r.id);
+        let s = r.trace.unwrap();
+        assert_eq!(
+            s.phase_ns[Phase::Queued.index()],
+            s.total_ns,
+            "request {}: a shed request only ever queued",
+            r.id
+        );
+    }
+
+    // the dump flushed without any manual flush() call — the
+    // scheduler's step epilogue is the safe point
+    assert!(recorder.dump_count() >= 1, "no postmortem on Shed entry");
+    let dumps = recorder.dumps();
+    let pm = &dumps[0];
+    assert_eq!(pm.reason, DumpReason::ShedEntry);
+    let transition = pm
+        .events
+        .iter()
+        .find(|rec| {
+            matches!(
+                rec.event,
+                FlightEvent::ModeTransition {
+                    to: ecf8::scheduler::ServeMode::Shed,
+                    ..
+                }
+            )
+        })
+        .expect("postmortem must contain the Shed transition");
+    if let FlightEvent::ModeTransition {
+        occupancy,
+        used_blocks,
+        total_blocks,
+        ..
+    } = transition.event
+    {
+        assert!(occupancy > 0.0 && occupancy <= 1.0);
+        assert_eq!(total_blocks, 2 * per_seq);
+        assert!(used_blocks <= total_blocks);
+    }
+    // two-step discipline: the shed drain happens *after* the trigger
+    // (same step) and must already be in the flushed dump
+    assert!(
+        pm.events.iter().any(|rec| {
+            matches!(rec.event, FlightEvent::Shed { .. }) && rec.at_ns >= pm.at_ns
+        }),
+        "postmortem must include the consequences recorded after the trigger"
+    );
+    let text = pm.render();
+    assert!(text.contains("reason=shed_entry"));
+    assert!(text.contains("-> Shed"));
+}
+
+#[test]
+fn registry_agrees_with_sources_and_exporters_are_stable() {
+    // one traced + recorded churn run, snapshotted through every
+    // adapter the run exercises: the registry must agree with the
+    // subsystem structs, and both exporters must render byte-stably
+    let vocab = 64;
+    let clock = SimClock::new();
+    let t0 = clock.now();
+    let reqs = staggered_requests(20, vocab, 3, t0, Duration::from_millis(2));
+    let recorder = Arc::new(FlightRecorder::new(clock.clone(), 64));
+    let mut sched = ContinuousScheduler::new(
+        SchedConfig { max_running: 6 },
+        kv_cfg(4, 12),
+        clock.clone(),
+    )
+    .with_tracer(Tracer::new(clock.clone(), 20, 1024))
+    .with_recorder(recorder.clone());
+    let mut eng = SyntheticIterationEngine::instant(vocab);
+    let responses = drive(&mut sched, &mut eng, &clock, &reqs);
+    assert_eq!(responses.len(), 20);
+
+    let snapshot = |sched: &ContinuousScheduler, recorder: &FlightRecorder| {
+        let mut reg = MetricsRegistry::new();
+        reg.register_scheduler(&sched.metrics);
+        reg.register_kv(sched.kv().stats());
+        reg.register_tracer(sched.tracer().unwrap());
+        reg.register_recorder(recorder);
+        reg
+    };
+    let reg = snapshot(&sched, &recorder);
+    let agg = sched.tracer().unwrap().aggregate();
+    assert_eq!(
+        reg.get("trace_spans_closed"),
+        Some(&Metric::Counter(agg.spans))
+    );
+    assert_eq!(reg.get("trace_total_ns"), Some(&Metric::Counter(agg.total_ns)));
+    for p in Phase::ALL {
+        assert_eq!(
+            reg.get(&format!("trace_phase_{}_ns", p.name())),
+            Some(&Metric::Counter(agg.phase_ns[p.index()])),
+            "phase {}",
+            p.name()
+        );
+    }
+    assert_eq!(
+        reg.get("scheduler_preemptions"),
+        Some(&Metric::Counter(sched.metrics.preemptions))
+    );
+    assert_eq!(
+        reg.get("kv_evictions"),
+        Some(&Metric::Counter(sched.kv().stats().evictions))
+    );
+    assert_eq!(
+        reg.get("recorder_events_total"),
+        Some(&Metric::Counter(recorder.total()))
+    );
+
+    // rebuilt snapshots of unchanged state render byte-identically,
+    // in both formats
+    let reg2 = snapshot(&sched, &recorder);
+    let prom = prometheus(&reg);
+    assert_eq!(prom, prometheus(&reg2));
+    let js = json(&reg);
+    assert_eq!(js, json(&reg2));
+    assert!(!js.contains('\n'), "JSON snapshot is one line");
+    for line in prom.lines() {
+        assert!(
+            line.starts_with("# TYPE ecf8_") || line.starts_with("ecf8_"),
+            "stray exposition line: {line}"
+        );
+    }
+}
+
+#[test]
+fn exporter_goldens_cover_all_three_kinds() {
+    // byte-for-byte goldens over a hand-assembled registry with one
+    // metric of each kind, spanning both exporters — the schema the
+    // verify port and the CI smoke grep against
+    let mut reg = MetricsRegistry::new();
+    reg.counter("trace_spans_closed", 3);
+    reg.gauge("recorder_ring_len", 2.0);
+    let mut h = LatencyHistogram::default();
+    h.record(0.001);
+    h.record(0.001);
+    reg.histogram("queue_wait_seconds", &h);
+
+    let expected_prom = "\
+# TYPE ecf8_queue_wait_seconds summary
+ecf8_queue_wait_seconds{quantile=\"0.5\"} 0.001024
+ecf8_queue_wait_seconds{quantile=\"0.99\"} 0.001024
+ecf8_queue_wait_seconds_sum 0.002
+ecf8_queue_wait_seconds_count 2
+# TYPE ecf8_queue_wait_seconds_max gauge
+ecf8_queue_wait_seconds_max 0.001
+# TYPE ecf8_recorder_ring_len gauge
+ecf8_recorder_ring_len 2
+# TYPE ecf8_trace_spans_closed counter
+ecf8_trace_spans_closed 3
+";
+    assert_eq!(prometheus(&reg), expected_prom);
+
+    let expected_json = "{\"counters\":{\"trace_spans_closed\":3},\
+\"gauges\":{\"recorder_ring_len\":2},\
+\"histograms\":{\"queue_wait_seconds\":{\"count\":2,\"sum_s\":0.002,\
+\"p50_s\":0.001024,\"p99_s\":0.001024,\"max_s\":0.001}}}";
+    assert_eq!(json(&reg), expected_json);
+}
